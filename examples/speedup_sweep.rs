@@ -1,0 +1,53 @@
+//! Figure-4 speedup sweep as a standalone binary: measures the real
+//! per-round compute cost on this host, then sweeps workers × network
+//! models to show where 8-bit DQGAN overtakes fp32 CPOAdam.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example speedup_sweep
+//! ```
+
+use dqgan::comm::NetworkModel;
+use dqgan::exp::fig4::{measure_round, speedup_series};
+use dqgan::runtime::Runtime;
+use dqgan::telemetry::Table;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_default_dir()?;
+    println!("measuring per-round compute on this host...");
+    let dqgan = measure_round(&rt, true, 4)?;
+    let cpo = measure_round(&rt, false, 4)?;
+    println!(
+        "  DQGAN-8bit : {:.1} ms compute, {} B uplink/round",
+        dqgan.t_compute * 1e3,
+        dqgan.bytes_up
+    );
+    println!(
+        "  CPOAdam    : {:.1} ms compute, {} B uplink/round",
+        cpo.t_compute * 1e3,
+        cpo.bytes_up
+    );
+
+    let nets: [(&str, NetworkModel); 3] = [
+        ("1GbE", NetworkModel::one_gbe()),
+        ("10GbE", NetworkModel::ten_gbe()),
+        ("100GbE", NetworkModel::hundred_gbe()),
+    ];
+    let workers = [1usize, 2, 4, 8, 16, 32];
+    let mut table = Table::new(&["network", "M", "DQGAN-8bit", "CPOAdam-fp32", "ratio"]);
+    for (nname, net) in nets {
+        let s_dq = speedup_series(&dqgan, "cifar", "DQGAN-8bit", 50_000, 16, &net, &workers);
+        let s_cp = speedup_series(&cpo, "cifar", "CPOAdam-fp32", 50_000, 16, &net, &workers);
+        for (a, b) in s_dq.iter().zip(&s_cp) {
+            table.row(&[
+                nname.to_string(),
+                a.workers.to_string(),
+                format!("{:.2}", a.speedup),
+                format!("{:.2}", b.speedup),
+                format!("{:.2}×", a.speedup / b.speedup),
+            ]);
+        }
+    }
+    table.print();
+    println!("(ratio > 1 ⇒ quantization wins; the gap widens with M and slower networks — Fig. 4's shape)");
+    Ok(())
+}

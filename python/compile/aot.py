@@ -1,0 +1,80 @@
+"""AOT lowering: every function in ``model.EXPORTS`` → HLO **text** +
+``manifest.json``.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Python runs ONLY here (build time); the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_entry(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated subset of artifact names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"artifacts": {}, "format": "hlo-text", "jax": jax.__version__}
+    for name, entry in model.EXPORTS.items():
+        if only is not None and name not in only:
+            continue
+        fn, example = entry["fn"], entry["example"]
+        print(f"[aot] lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        outputs = [shape_entry(x) for x in jax.eval_shape(fn, *example)]
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [shape_entry(x) for x in example],
+            "outputs": outputs,
+            "meta": entry["meta"],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"[aot]   {fname}: {len(text)} chars, "
+              f"{len(example)} inputs, {len(outputs)} outputs", flush=True)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernel: VMEM-tiled matmul.
+
+Used by the Layer-2 GAN's dense layers so the Pallas kernel sits on the
+real training path of the exported HLO.
+
+TPU mapping (DESIGN.md §6): the grid tiles C into (bm × bn) VMEM blocks
+and streams bk-deep slabs of A and B through the MXU; the f32 accumulator
+lives in the output block across the k-loop (revisiting grid dimension).
+On this CPU testbed the kernel runs under ``interpret=True``, so the
+BlockSpec structure (not wallclock) is what we optimize; the VMEM/MXU
+estimates are recorded in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+    del n_k  # shape bookkeeping only
+
+
+def _pad_to(a, m, axis):
+    pad = (-a.shape[axis]) % m
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def _matmul_impl(x, y, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """``x @ y`` via the Pallas kernel (f32 accumulate), any 2-D shapes.
+
+    Inputs are zero-padded up to the tile grid and the result is sliced
+    back, so arbitrary (m, k) x (k, n) shapes are supported.
+    """
+    assert x.ndim == 2 and y.ndim == 2 and x.shape[1] == y.shape[0]
+    m, k = x.shape
+    _, n = y.shape
+    # Shrink tiles for small operands (keeps the grid non-degenerate).
+    bm_, bk_, bn_ = (min(bm, max(m, 8)), min(bk, max(k, 8)), min(bn, max(n, 8)))
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), bm_, 0), bk_, 1)
+    yp = _pad_to(_pad_to(y.astype(jnp.float32), bk_, 0), bn_, 1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-PJRT execution (see /opt/xla-example/README)
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable Pallas matmul (default tiles).
+
+    The VJP runs the same Pallas kernel on the cotangent:
+      dX = dC @ Yᵀ,  dY = Xᵀ @ dC
+    so the kernel is on both the forward and backward training paths.
+    """
+    return _matmul_impl(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_impl(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return _matmul_impl(g, y.T), _matmul_impl(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """Estimated VMEM residency per grid step (f32): x + y + o blocks."""
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m, k, n, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """Fraction of MXU-issued MACs that are useful (non-padding)."""
+    mp = -(-m // bm) * bm
+    kp = -(-k // bk) * bk
+    np_ = -(-n // bn) * bn
+    return (m * k * n) / (mp * kp * np_)

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: fused OMD half-step (Algorithm 2 line 4).
+
+    w_half = w - (eta * f_prev + e)
+
+One pass over HBM instead of three (scale, add, subtract) — the classic
+AXPY-fusion win. Grid = 1-D blocks of the flat parameter vector.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 2048
+
+
+def _omd_kernel(w_ref, f_ref, e_ref, eta_ref, o_ref):
+    eta = eta_ref[0]
+    o_ref[...] = w_ref[...] - (eta * f_ref[...] + e_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def omd_half_step(w, f_prev, e, eta, block=DEFAULT_BLOCK):
+    """Fused ``w - (eta*f_prev + e)`` over 1-D f32 vectors.
+
+    ``n`` must be a multiple of ``block`` (aot.py pads model sizes).
+    ``eta`` is a scalar (traced, so one artifact serves every step size).
+    """
+    assert w.ndim == 1 and w.shape == f_prev.shape == e.shape
+    n = w.shape[0]
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    n_blocks = n // block
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        _omd_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            # eta: same scalar block for every grid step
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block), jnp.float32),
+        interpret=True,
+    )(
+        w.reshape(n_blocks, block),
+        f_prev.reshape(n_blocks, block),
+        e.reshape(n_blocks, block),
+        eta_arr,
+    )
+    return out.reshape(n)
+
+
+def vmem_bytes(block=DEFAULT_BLOCK):
+    """VMEM residency per grid step: w, f, e in + out, f32."""
+    return 4 * 4 * block

@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: fused blockwise quantize + error feedback.
+
+Implements Algorithm 2 lines 6-8 in one pass over the gradient vector:
+
+    p     (input)  = eta * F + e_prev   (computed upstream)
+    q     (output) = Q(p)    -- blockwise ||.||_inf stochastic quantization
+    e     (output) = p - q   -- the new error memory
+
+TPU mapping (DESIGN.md §6 Hardware-Adaptation): the paper's GPU kernels do
+a per-threadblock max-reduce then a per-element stochastic round; here the
+1-D gradient is viewed as (n_blocks, block) rows, one row per grid step,
+sized so a row fits VMEM (block = 1024 f32 = 4 KiB/input; three resident
+buffers + uniforms ~ 16 KiB/step). The max-reduce happens in-register on
+the VPU; stochastic rounding consumes pre-generated uniforms (interpret
+mode has no on-core PRNG) fed as a second input stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 1024
+
+
+def _quantize_ef_kernel(p_ref, u_ref, q_ref, e_ref, *, levels):
+    p = p_ref[...]
+    u = u_ref[...]
+    s = jnp.float32(levels)
+    scale = jnp.max(jnp.abs(p))
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    grid = jnp.minimum(jnp.abs(p) / safe, 1.0) * s
+    lo = jnp.floor(grid)
+    frac = grid - lo
+    level = jnp.where(u < frac, lo + 1.0, lo)
+    q = jnp.sign(p) * safe * (level / s)
+    q = jnp.where(scale > 0.0, q, jnp.zeros_like(q))
+    q_ref[...] = q
+    e_ref[...] = p - q
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "block"))
+def quantize_ef(p, u, levels=127, block=DEFAULT_BLOCK):
+    """Fused quantize + error-feedback over a 1-D vector.
+
+    Args:
+      p: f32[n] with n a multiple of ``block`` (pad upstream; `aot.py`
+         exports per-model sizes already padded).
+      u: f32[n] uniforms in [0, 1) driving the stochastic rounding.
+      levels: quantization levels s (127 = the paper's 8-bit setting).
+      block: elements per scale block (one grid step each).
+
+    Returns:
+      (q, e): the quantized vector and the new error memory.
+    """
+    assert p.ndim == 1 and p.shape == u.shape
+    n = p.shape[0]
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    n_blocks = n // block
+    p2 = p.reshape(n_blocks, block)
+    u2 = u.reshape(n_blocks, block)
+    q2, e2 = pl.pallas_call(
+        functools.partial(_quantize_ef_kernel, levels=levels),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, block), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, block), jnp.float32),
+        ],
+        interpret=True,
+    )(p2, u2)
+    return q2.reshape(n), e2.reshape(n)
+
+
+def vmem_bytes(block=DEFAULT_BLOCK):
+    """VMEM residency per grid step: p, u in + q, e out, f32."""
+    return 4 * 4 * block

@@ -1,0 +1,52 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests/`` asserts the
+Pallas kernels (run under ``interpret=True``) match these references to
+float tolerance across a hypothesis-driven sweep of shapes and inputs.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain matmul with f32 accumulation."""
+    return jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32), precision="highest"
+    )
+
+
+def quantize_ef_ref(p, u, levels, block):
+    """Blockwise ||.||_inf stochastic quantization with error feedback.
+
+    The reference for ``kernels.quantize.quantize_ef``:
+
+    - split ``p`` (1-D, length a multiple of ``block``) into blocks;
+    - per-block scale = max |p_i| (0-safe);
+    - stochastic rounding of |p|/scale * levels using uniforms ``u``;
+    - q = sign(p) * scale * level / levels;  e = p - q.
+
+    Returns ``(q, e)``.
+    """
+    n = p.shape[0]
+    assert n % block == 0, f"{n} not a multiple of block {block}"
+    pb = p.reshape(-1, block)
+    ub = u.reshape(-1, block)
+    scale = jnp.max(jnp.abs(pb), axis=1, keepdims=True)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    s = jnp.float32(levels)
+    grid = jnp.minimum(jnp.abs(pb) / safe, 1.0) * s
+    lo = jnp.floor(grid)
+    frac = grid - lo
+    level = jnp.where(ub < frac, lo + 1.0, lo)
+    q = jnp.sign(pb) * safe * (level / s)
+    q = jnp.where(scale > 0.0, q, 0.0)
+    e = pb - q
+    return q.reshape(n), e.reshape(n)
+
+
+def omd_update_ref(w, f_prev, e, eta):
+    """Fused DQGAN half-step (Algorithm 2 line 4):
+
+        w_half = w - (eta * f_prev + e)
+    """
+    return w - (eta * f_prev + e)

@@ -1,0 +1,195 @@
+"""Layer-2 assembly: the exact jitted functions `aot.py` lowers to HLO.
+
+Every entry in ``EXPORTS`` is one artifact: a pure function plus its
+example input shapes and the metadata the Rust runtime needs to drive it
+(flat dim, θ/φ split, batch size, padding). Keep this the single source
+of truth — the Rust side reads it all from ``artifacts/manifest.json``.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.omd_update import omd_half_step
+from .kernels.quantize import quantize_ef
+from .models import dcgan, feature_net, mlp_gan
+
+# ------------------------------------------------------------------ specs
+
+MLP_SPEC = mlp_gan.MlpGanSpec()
+DCGAN_SPEC = dcgan.DcganSpec()
+
+MLP_BATCH = 32
+DCGAN_BATCH = 16
+MLP_SAMPLE_N = 256
+DCGAN_SAMPLE_N = 64
+FEATURE_BATCH = 64
+
+QUANT_LEVELS = 127  # the paper's 8-bit setting (2^(8-1) - 1)
+MLP_QBLOCK = 128
+DCGAN_QBLOCK = 1024
+
+
+def padded(n, block):
+    return ((n + block - 1) // block) * block
+
+
+MLP_PAD = padded(MLP_SPEC.dim, MLP_QBLOCK)
+DCGAN_PAD = padded(DCGAN_SPEC.dim, DCGAN_QBLOCK)
+
+
+# ------------------------------------------------------------- functions
+
+
+def mlp_gan_grad(w, z, x):
+    """(w[dim], z[B,nz], x[B,2]) → (F[dim], loss_g[], loss_d[])."""
+    return mlp_gan.gan_operator(MLP_SPEC, w, z, x)
+
+
+def mlp_gan_sample(w, z):
+    return (mlp_gan.sample_generator(MLP_SPEC, w, z),)
+
+
+def dcgan_grad(w, z, x):
+    return dcgan.gan_operator(DCGAN_SPEC, w, z, x)
+
+
+def dcgan_sample(w, z):
+    return (dcgan.sample_generator(DCGAN_SPEC, w, z),)
+
+
+def quantize_ef_mlp(p, u):
+    return quantize_ef(p, u, levels=QUANT_LEVELS, block=MLP_QBLOCK)
+
+
+def quantize_ef_dcgan(p, u):
+    return quantize_ef(p, u, levels=QUANT_LEVELS, block=DCGAN_QBLOCK)
+
+
+def omd_half_mlp(w, f_prev, e, eta):
+    return (omd_half_step(w, f_prev, e, eta, block=MLP_QBLOCK),)
+
+
+def omd_half_dcgan(w, f_prev, e, eta):
+    return (omd_half_step(w, f_prev, e, eta, block=DCGAN_QBLOCK),)
+
+
+def feature_net_score(w1, b1, w2, b2, wh, bh, imgs):
+    return feature_net.features(imgs, w1, b1, w2, b2, wh, bh)
+
+
+# ------------------------------------------------------------------ table
+
+F32 = jnp.float32
+
+
+def _s(*dims):
+    return jnp.zeros(dims, F32)
+
+
+EXPORTS = {
+    "mlp_gan_grad": {
+        "fn": mlp_gan_grad,
+        "example": (
+            _s(MLP_SPEC.dim),
+            _s(MLP_BATCH, MLP_SPEC.noise_dim),
+            _s(MLP_BATCH, 2),
+        ),
+        "meta": {
+            "model": "mlp_gan",
+            "dim": MLP_SPEC.dim,
+            "theta_dim": MLP_SPEC.theta_dim,
+            "batch": MLP_BATCH,
+            "noise_dim": MLP_SPEC.noise_dim,
+            "data_shape": [2],
+        },
+    },
+    "mlp_gan_sample": {
+        "fn": mlp_gan_sample,
+        "example": (_s(MLP_SPEC.dim), _s(MLP_SAMPLE_N, MLP_SPEC.noise_dim)),
+        "meta": {
+            "model": "mlp_gan",
+            "dim": MLP_SPEC.dim,
+            "sample_n": MLP_SAMPLE_N,
+            "noise_dim": MLP_SPEC.noise_dim,
+        },
+    },
+    "dcgan_grad": {
+        "fn": dcgan_grad,
+        "example": (
+            _s(DCGAN_SPEC.dim),
+            _s(DCGAN_BATCH, DCGAN_SPEC.noise_dim),
+            _s(DCGAN_BATCH, 3, 32, 32),
+        ),
+        "meta": {
+            "model": "dcgan",
+            "dim": DCGAN_SPEC.dim,
+            "theta_dim": DCGAN_SPEC.theta_dim,
+            "batch": DCGAN_BATCH,
+            "noise_dim": DCGAN_SPEC.noise_dim,
+            "data_shape": [3, 32, 32],
+        },
+    },
+    "dcgan_sample": {
+        "fn": dcgan_sample,
+        "example": (_s(DCGAN_SPEC.dim), _s(DCGAN_SAMPLE_N, DCGAN_SPEC.noise_dim)),
+        "meta": {
+            "model": "dcgan",
+            "dim": DCGAN_SPEC.dim,
+            "sample_n": DCGAN_SAMPLE_N,
+            "noise_dim": DCGAN_SPEC.noise_dim,
+        },
+    },
+    "quantize_ef_mlp": {
+        "fn": quantize_ef_mlp,
+        "example": (_s(MLP_PAD), _s(MLP_PAD)),
+        "meta": {
+            "model": "mlp_gan",
+            "padded_dim": MLP_PAD,
+            "dim": MLP_SPEC.dim,
+            "levels": QUANT_LEVELS,
+            "block": MLP_QBLOCK,
+        },
+    },
+    "quantize_ef_dcgan": {
+        "fn": quantize_ef_dcgan,
+        "example": (_s(DCGAN_PAD), _s(DCGAN_PAD)),
+        "meta": {
+            "model": "dcgan",
+            "padded_dim": DCGAN_PAD,
+            "dim": DCGAN_SPEC.dim,
+            "levels": QUANT_LEVELS,
+            "block": DCGAN_QBLOCK,
+        },
+    },
+    "omd_half_mlp": {
+        "fn": omd_half_mlp,
+        "example": (_s(MLP_PAD), _s(MLP_PAD), _s(MLP_PAD), _s()),
+        "meta": {
+            "model": "mlp_gan",
+            "padded_dim": MLP_PAD,
+            "dim": MLP_SPEC.dim,
+            "block": MLP_QBLOCK,
+        },
+    },
+    "omd_half_dcgan": {
+        "fn": omd_half_dcgan,
+        "example": (_s(DCGAN_PAD), _s(DCGAN_PAD), _s(DCGAN_PAD), _s()),
+        "meta": {
+            "model": "dcgan",
+            "padded_dim": DCGAN_PAD,
+            "dim": DCGAN_SPEC.dim,
+            "block": DCGAN_QBLOCK,
+        },
+    },
+    "feature_net": {
+        "fn": feature_net_score,
+        "example": tuple(
+            [_s(*shape) for _, shape in feature_net.weight_shapes()]
+            + [_s(FEATURE_BATCH, 3, 32, 32)]
+        ),
+        "meta": {
+            "batch": FEATURE_BATCH,
+            "feature_dim": feature_net.FEATURE_DIM,
+            "num_classes": feature_net.NUM_CLASSES,
+        },
+    },
+}

@@ -1,0 +1,183 @@
+"""Layer-2 JAX model: DCGAN-lite on 32×32×3 images (the Figures 2-3
+workload), WGAN losses (paper eq. 3/6/7), Radford et al. [35] architecture
+scaled to this testbed.
+
+    G: z[B,nz] → dense(nz→128·4·4) → 3×(convT 4×4 stride 2) → tanh → [B,3,32,32]
+    D: x[B,3,32,32] → 3×(conv 4×4 stride 2, leaky-relu) → dense(2048→1)
+
+The dense layers run through the Pallas matmul kernel; the convolutions
+lower to native XLA convolutions. The exported operator has the same
+(w, z, x) → (F, L_G, L_D) contract as the MLP GAN.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.matmul import matmul
+
+IMG_C, IMG_H, IMG_W = 3, 32, 32
+
+
+@dataclass(frozen=True)
+class DcganSpec:
+    noise_dim: int = 32
+    base: int = 32  # channel multiplier: G/D widths are base·{4,2,1}
+    critic_l2: float = 1e-2
+
+    def shapes(self):
+        nz, b = self.noise_dim, self.base
+        g4, g2, g1 = 4 * b, 2 * b, b
+        return [
+            # generator (θ)
+            ("gen.fc.w", (g4 * 4 * 4, nz)),
+            ("gen.fc.b", (g4 * 4 * 4,)),
+            ("gen.ct1.w", (g4, g2, 4, 4)),  # convT: (in, out, kh, kw)
+            ("gen.ct1.b", (g2,)),
+            ("gen.ct2.w", (g2, g1, 4, 4)),
+            ("gen.ct2.b", (g1,)),
+            ("gen.ct3.w", (g1, IMG_C, 4, 4)),
+            ("gen.ct3.b", (IMG_C,)),
+            # discriminator (φ)
+            ("disc.c1.w", (g1, IMG_C, 4, 4)),  # conv: (out, in, kh, kw)
+            ("disc.c1.b", (g1,)),
+            ("disc.c2.w", (g2, g1, 4, 4)),
+            ("disc.c2.b", (g2,)),
+            ("disc.c3.w", (g4, g2, 4, 4)),
+            ("disc.c3.b", (g4,)),
+            ("disc.fc.w", (1, g4 * 4 * 4)),
+            ("disc.fc.b", (1,)),
+        ]
+
+    @property
+    def dim(self):
+        n = 0
+        for _, shape in self.shapes():
+            k = 1
+            for s in shape:
+                k *= s
+            n += k
+        return n
+
+    @property
+    def theta_dim(self):
+        n = 0
+        for name, shape in self.shapes():
+            if not name.startswith("gen."):
+                continue
+            k = 1
+            for s in shape:
+                k *= s
+            n += k
+        return n
+
+    def unflatten(self, w):
+        out = {}
+        off = 0
+        for name, shape in self.shapes():
+            n = 1
+            for s in shape:
+                n *= s
+            out[name] = w[off : off + n].reshape(shape)
+            off += n
+        return out
+
+
+def _conv(x, w, b, stride):
+    """NCHW conv, 4×4 kernel, pad SAME-ish for stride 2 (pad 1)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _conv_t(x, w, b, stride):
+    """NCHW transposed conv, 4×4 kernel, stride 2, output 2× spatial."""
+    # 'SAME' with kernel 4 / stride 2 gives exact 2× spatial upsampling
+    # (JAX's conv_transpose padding is not the PyTorch convention).
+    y = jax.lax.conv_transpose(
+        x,
+        w,
+        strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "IOHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _leaky(x):
+    return jnp.where(x > 0, x, 0.2 * x)
+
+
+def generator(spec, p, z):
+    """G(z): z [B, nz] → images [B, 3, 32, 32] in (−1, 1)."""
+    b4 = 4 * spec.base
+    h = matmul(z, p["gen.fc.w"].T) + p["gen.fc.b"]
+    h = jnp.maximum(h, 0.0)  # relu
+    h = h.reshape(-1, b4, 4, 4)
+    h = jnp.maximum(_conv_t(h, p["gen.ct1.w"], p["gen.ct1.b"], 2), 0.0)  # 8×8
+    h = jnp.maximum(_conv_t(h, p["gen.ct2.w"], p["gen.ct2.b"], 2), 0.0)  # 16×16
+    x = _conv_t(h, p["gen.ct3.w"], p["gen.ct3.b"], 2)  # 32×32
+    return jnp.tanh(x)
+
+
+def critic(spec, p, x):
+    """D(x): images [B, 3, 32, 32] → scores [B]."""
+    h = _leaky(_conv(x, p["disc.c1.w"], p["disc.c1.b"], 2))  # 16×16
+    h = _leaky(_conv(h, p["disc.c2.w"], p["disc.c2.b"], 2))  # 8×8
+    h = _leaky(_conv(h, p["disc.c3.w"], p["disc.c3.b"], 2))  # 4×4
+    h = h.reshape(h.shape[0], -1)
+    y = matmul(h, p["disc.fc.w"].T) + p["disc.fc.b"]
+    return y[:, 0]
+
+
+def losses(spec, w, z, x_real):
+    p = spec.unflatten(w)
+    x_fake = generator(spec, p, z)
+    y_fake = critic(spec, p, x_fake)
+    y_real = critic(spec, p, x_real)
+    loss_g = -jnp.mean(y_fake)
+    phi = w[spec.theta_dim :]
+    loss_d = -jnp.mean(y_real) + jnp.mean(y_fake) + 0.5 * spec.critic_l2 * jnp.sum(
+        phi * phi
+    )
+    return loss_g, loss_d
+
+
+def gan_operator(spec, w, z, x_real):
+    """F(w; ξ) = [∂L_G/∂θ ; ∂L_D/∂φ] plus the losses."""
+    g_lg = jax.grad(lambda w_: losses(spec, w_, z, x_real)[0])(w)
+    g_ld = jax.grad(lambda w_: losses(spec, w_, z, x_real)[1])(w)
+    td = spec.theta_dim
+    f = jnp.concatenate([g_lg[:td], g_ld[td:]])
+    lg, ld = losses(spec, w, z, x_real)
+    return f, lg, ld
+
+
+def sample_generator(spec, w, z):
+    return generator(spec, spec.unflatten(w), z)
+
+
+def init_params(spec, key):
+    """DCGAN init (N(0, 0.02) for convs, He-ish for dense), flat."""
+    parts = []
+    for name, shape in spec.shapes():
+        key, sub = jax.random.split(key)
+        n = 1
+        for s in shape:
+            n *= s
+        if name.endswith(".b"):
+            parts.append(jnp.zeros(n, jnp.float32))
+        elif ".fc." in name:
+            fan_in = shape[1] if len(shape) == 2 else shape[0]
+            parts.append(
+                (jax.random.normal(sub, (n,), jnp.float32) / jnp.sqrt(fan_in))
+            )
+        else:
+            parts.append(0.02 * jax.random.normal(sub, (n,), jnp.float32))
+    return jnp.concatenate(parts)

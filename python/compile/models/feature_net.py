@@ -1,0 +1,54 @@
+"""Layer-2 JAX mirror of the fixed random-feature net used for proxy
+IS/FID (``rust/src/metrics/feature_net.rs``).
+
+The weights are *runtime inputs* of the exported artifact rather than
+baked constants: the Rust side passes its own (seed-fixed) weights, which
+guarantees both implementations score with the identical embedding without
+having to reproduce the Rust PRNG in Python.
+
+Architecture (must match the Rust side):
+    conv1: 3→12, 3×3, stride 2, pad 1, ReLU   (12×16×16)
+    conv2: 12→32, 3×3, stride 2, pad 1, ReLU  (32×8×8)
+    global average pool → features ∈ R³²
+    head: linear 32→10 → logits
+"""
+
+import jax
+import jax.numpy as jnp
+
+IMG_C, IMG_H, IMG_W = 3, 32, 32
+C1, C2, K = 12, 32, 3
+FEATURE_DIM = C2
+NUM_CLASSES = 10
+
+
+def weight_shapes():
+    """(name, shape) of the runtime weight inputs, in call order."""
+    return [
+        ("w1", (C1, IMG_C, K, K)),
+        ("b1", (C1,)),
+        ("w2", (C2, C1, K, K)),
+        ("b2", (C2,)),
+        ("wh", (NUM_CLASSES, FEATURE_DIM)),
+        ("bh", (NUM_CLASSES,)),
+    ]
+
+
+def _conv(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def features(imgs, w1, b1, w2, b2, wh, bh):
+    """imgs [N,3,32,32] → (features [N,32], logits [N,10])."""
+    h = jnp.maximum(_conv(imgs, w1, b1, 2), 0.0)
+    h = jnp.maximum(_conv(h, w2, b2, 2), 0.0)
+    feat = jnp.mean(h, axis=(2, 3))
+    logits = feat @ wh.T + bh
+    return feat, logits

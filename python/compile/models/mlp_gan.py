@@ -1,0 +1,108 @@
+"""Layer-2 JAX model: the MLP WGAN on 2-D mixtures.
+
+Mirrors ``rust/src/model/mlp_gan.rs`` exactly (same architecture, same
+losses, same parameter order), with the dense layers routed through the
+Pallas matmul kernel so Layer 1 sits on the real training path.
+
+The exported gradient function takes the *flat* parameter vector w = [θ;φ]
+plus a noise batch and a data batch, and returns (F(w;ξ), L_G, L_D), where
+
+    F(w) = [∂L_G/∂θ ; ∂L_D/∂φ],
+    L_G  = −mean(D(G(z))),
+    L_D  = −mean(D(x)) + mean(D(G(z))) + (λ/2)‖φ‖².
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.matmul import matmul
+
+DATA_DIM = 2
+
+
+@dataclass(frozen=True)
+class MlpGanSpec:
+    noise_dim: int = 4
+    gen_hidden: int = 32
+    disc_hidden: int = 32
+    critic_l2: float = 1e-2
+
+    # ---- flat layout (must match rust/src/model/mlp_gan.rs) ----
+    def shapes(self):
+        nz, hg, hd = self.noise_dim, self.gen_hidden, self.disc_hidden
+        return [
+            ("gen.w1", (hg, nz)),
+            ("gen.b1", (hg,)),
+            ("gen.w2", (DATA_DIM, hg)),
+            ("gen.b2", (DATA_DIM,)),
+            ("disc.w1", (hd, DATA_DIM)),
+            ("disc.b1", (hd,)),
+            ("disc.w2", (hd,)),
+            ("disc.b2", (1,)),
+        ]
+
+    @property
+    def dim(self):
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.shapes())
+
+    @property
+    def theta_dim(self):
+        """Length of the generator block (θ comes first)."""
+        nz, hg = self.noise_dim, self.gen_hidden
+        return hg * nz + hg + DATA_DIM * hg + DATA_DIM
+
+    def unflatten(self, w):
+        out = {}
+        off = 0
+        for name, shape in self.shapes():
+            n = 1
+            for s in shape:
+                n *= s
+            out[name] = w[off : off + n].reshape(shape)
+            off += n
+        return out
+
+
+def generator(spec, params, z):
+    """G(z) for a batch: z [B, nz] -> x [B, 2]. Uses the Pallas matmul."""
+    h = jnp.tanh(matmul(z, params["gen.w1"].T) + params["gen.b1"])
+    return matmul(h, params["gen.w2"].T) + params["gen.b2"]
+
+
+def critic(spec, params, x):
+    """D(x) for a batch: x [B, 2] -> y [B]. Uses the Pallas matmul."""
+    h = jnp.tanh(matmul(x, params["disc.w1"].T) + params["disc.b1"])
+    return h @ params["disc.w2"] + params["disc.b2"][0]
+
+
+def losses(spec, w, z, x_real):
+    """(L_G, L_D) on a fixed minibatch (z [B,nz], x_real [B,2])."""
+    p = spec.unflatten(w)
+    x_fake = generator(spec, p, z)
+    y_fake = critic(spec, p, x_fake)
+    y_real = critic(spec, p, x_real)
+    loss_g = -jnp.mean(y_fake)
+    phi = w[spec.theta_dim :]
+    loss_d = -jnp.mean(y_real) + jnp.mean(y_fake) + 0.5 * spec.critic_l2 * jnp.sum(
+        phi * phi
+    )
+    return loss_g, loss_d
+
+
+def gan_operator(spec, w, z, x_real):
+    """F(w; ξ) = [∂L_G/∂θ ; ∂L_D/∂φ] plus the losses."""
+    lg_fn = lambda w_: losses(spec, w_, z, x_real)[0]
+    ld_fn = lambda w_: losses(spec, w_, z, x_real)[1]
+    g_lg = jax.grad(lg_fn)(w)
+    g_ld = jax.grad(ld_fn)(w)
+    td = spec.theta_dim
+    f = jnp.concatenate([g_lg[:td], g_ld[td:]])
+    lg, ld = losses(spec, w, z, x_real)
+    return f, lg, ld
+
+
+def sample_generator(spec, w, z):
+    """Generator forward for metric sampling: z [N,nz] -> x [N,2]."""
+    return generator(spec, spec.unflatten(w), z)

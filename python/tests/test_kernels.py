@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles,
+including hypothesis sweeps over shapes and value distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mk
+from compile.kernels import omd_update as ok
+from compile.kernels import quantize as qk
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ------------------------------------------------------------- matmul ----
+
+
+class TestMatmul:
+    def test_exact_small(self):
+        x = jnp.array([[1.0, 2.0], [3.0, 4.0]], jnp.float32)
+        y = jnp.array([[5.0, 6.0], [7.0, 8.0]], jnp.float32)
+        np.testing.assert_allclose(
+            np.array(mk.matmul(x, y)), [[19.0, 22.0], [43.0, 50.0]]
+        )
+
+    @given(
+        m=st.integers(1, 64),
+        k=st.integers(1, 64),
+        n=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_arbitrary_shapes(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.array(rng.standard_normal((m, k), np.float32))
+        y = jnp.array(rng.standard_normal((k, n), np.float32))
+        out = mk.matmul(x, y)
+        want = ref.matmul_ref(x, y)
+        np.testing.assert_allclose(np.array(out), np.array(want), rtol=1e-4, atol=1e-4)
+
+    def test_tile_boundary_shapes(self):
+        # Shapes exactly at and just past the tile sizes.
+        for m, k, n in [(128, 128, 128), (129, 128, 127), (128, 129, 1)]:
+            rng = np.random.default_rng(m * 1000 + k * 10 + n)
+            x = jnp.array(rng.standard_normal((m, k), np.float32))
+            y = jnp.array(rng.standard_normal((k, n), np.float32))
+            np.testing.assert_allclose(
+                np.array(mk.matmul(x, y)),
+                np.array(ref.matmul_ref(x, y)),
+                rtol=1e-4,
+                atol=1e-4,
+            )
+
+    def test_gradient_flows_through_kernel(self):
+        # custom_vjp correctness: compare against jnp.matmul gradients.
+        rng = np.random.default_rng(7)
+        x = jnp.array(rng.standard_normal((5, 6), np.float32))
+        y = jnp.array(rng.standard_normal((6, 4), np.float32))
+        f_pallas = lambda a, b: jnp.sum(jnp.sin(mk.matmul(a, b)))
+        f_ref = lambda a, b: jnp.sum(jnp.sin(a @ b))
+        gx_p, gy_p = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+        gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+        np.testing.assert_allclose(np.array(gx_p), np.array(gx_r), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.array(gy_p), np.array(gy_r), rtol=1e-4, atol=1e-5)
+
+    def test_mxu_utilization_estimate(self):
+        assert mk.mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mk.mxu_utilization_estimate(129, 128, 128) < 0.6
+
+
+# --------------------------------------------------------- quantize_ef ----
+
+
+class TestQuantizeEf:
+    @given(
+        blocks=st.integers(1, 8),
+        block=st.sampled_from([128, 256, 1024]),
+        levels=st.sampled_from([3, 15, 127]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, blocks, block, levels, seed):
+        rng = np.random.default_rng(seed)
+        n = blocks * block
+        p = jnp.array(rng.standard_normal(n).astype(np.float32))
+        u = jnp.array(rng.random(n, np.float32))
+        q, e = qk.quantize_ef(p, u, levels=levels, block=block)
+        qr, er = ref.quantize_ef_ref(p, u, levels, block)
+        np.testing.assert_allclose(np.array(q), np.array(qr), rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.array(e), np.array(er), rtol=1e-4, atol=1e-6)
+
+    def test_error_feedback_identity(self):
+        # p = q + e exactly (the EF invariant Algorithm 2 line 8 needs).
+        rng = np.random.default_rng(3)
+        p = jnp.array(rng.standard_normal(2048).astype(np.float32))
+        u = jnp.array(rng.random(2048, np.float32))
+        q, e = qk.quantize_ef(p, u, levels=127, block=1024)
+        np.testing.assert_allclose(np.array(q) + np.array(e), np.array(p), atol=1e-6)
+
+    def test_zero_block_stays_zero(self):
+        p = jnp.zeros(1024, jnp.float32)
+        u = jnp.full(1024, 0.5, jnp.float32)
+        q, e = qk.quantize_ef(p, u, levels=127, block=1024)
+        assert np.array(q).max() == 0.0
+        assert np.array(e).max() == 0.0
+
+    def test_delta_approximate_contract(self):
+        # Definition 1 in expectation: E||Q(p)-p||^2 <= (1-δ)||p||^2.
+        rng = np.random.default_rng(11)
+        p = jnp.array(rng.standard_normal(4096).astype(np.float32))
+        trials, ratio = 30, 0.0
+        for t in range(trials):
+            u = jnp.array(np.random.default_rng(t).random(4096, np.float32))
+            q, _ = qk.quantize_ef(p, u, levels=127, block=1024)
+            err = float(jnp.sum((q - p) ** 2))
+            ratio += err / float(jnp.sum(p * p)) / trials
+        assert ratio < 1.0, f"not delta-approximate: mean ratio {ratio}"
+        assert ratio < 0.01  # 8-bit should be nearly lossless on Gaussians
+
+    def test_max_element_exact(self):
+        # ||.||_inf scaling represents each block's max exactly.
+        p = np.zeros(1024, np.float32)
+        p[17] = -3.5
+        q, _ = qk.quantize_ef(
+            jnp.array(p), jnp.full(1024, 0.5, jnp.float32), levels=127, block=1024
+        )
+        assert np.array(q)[17] == -3.5
+
+
+# ----------------------------------------------------------- omd_update ----
+
+
+class TestOmdHalfStep:
+    @given(
+        blocks=st.integers(1, 4),
+        eta=st.floats(0.0, 1.0, allow_nan=False),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, blocks, eta, seed):
+        rng = np.random.default_rng(seed)
+        n = blocks * 2048
+        w = jnp.array(rng.standard_normal(n).astype(np.float32))
+        f = jnp.array(rng.standard_normal(n).astype(np.float32))
+        e = jnp.array(rng.standard_normal(n).astype(np.float32))
+        out = ok.omd_half_step(w, f, e, eta)
+        want = ref.omd_update_ref(w, f, e, jnp.float32(eta))
+        np.testing.assert_allclose(np.array(out), np.array(want), rtol=1e-5, atol=1e-6)
+
+    def test_eta_zero_is_w_minus_e(self):
+        w = jnp.ones(2048, jnp.float32)
+        f = jnp.full(2048, 9.0, jnp.float32)
+        e = jnp.full(2048, 0.25, jnp.float32)
+        out = ok.omd_half_step(w, f, e, 0.0)
+        np.testing.assert_allclose(np.array(out), 0.75)

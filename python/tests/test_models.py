@@ -1,0 +1,105 @@
+"""L2 correctness: GAN models' shapes, losses and gradient structure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.models import dcgan, feature_net, mlp_gan
+
+
+class TestMlpGan:
+    spec = mlp_gan.MlpGanSpec()
+
+    def _wzx(self, b=8, seed=0):
+        rng = np.random.default_rng(seed)
+        w = jnp.array(0.1 * rng.standard_normal(self.spec.dim, np.float32))
+        z = jnp.array(rng.standard_normal((b, self.spec.noise_dim), np.float32))
+        x = jnp.array(rng.standard_normal((b, 2), np.float32))
+        return w, z, x
+
+    def test_layout_matches_rust(self):
+        # Must agree with rust/src/model/mlp_gan.rs (nz=4, hg=hd=32):
+        # θ = 32·4+32+2·32+2 = 226, φ = 32·2+32+32+1 = 129, total 355.
+        assert self.spec.theta_dim == 226
+        assert self.spec.dim == 355
+
+    def test_operator_shapes_and_finiteness(self):
+        w, z, x = self._wzx()
+        f, lg, ld = mlp_gan.gan_operator(self.spec, w, z, x)
+        assert f.shape == (self.spec.dim,)
+        assert bool(jnp.isfinite(f).all())
+        assert np.isfinite(float(lg)) and np.isfinite(float(ld))
+
+    def test_operator_blocks_are_partial_gradients(self):
+        # θ block of F == ∂L_G/∂θ; φ block == ∂L_D/∂φ (finite differences).
+        w, z, x = self._wzx(b=4, seed=3)
+        f, _, _ = mlp_gan.gan_operator(self.spec, w, z, x)
+        td = self.spec.theta_dim
+        eps = 1e-3
+        for i in [0, 57, td - 1, td, td + 11, self.spec.dim - 1]:
+            wp = w.at[i].add(eps)
+            wm = w.at[i].add(-eps)
+            lgp, ldp = mlp_gan.losses(self.spec, wp, z, x)
+            lgm, ldm = mlp_gan.losses(self.spec, wm, z, x)
+            fd = (lgp - lgm) / (2 * eps) if i < td else (ldp - ldm) / (2 * eps)
+            assert abs(float(fd) - float(f[i])) < 2e-2 * max(abs(float(fd)), 1.0), (
+                f"param {i}: fd={float(fd)} vs F={float(f[i])}"
+            )
+
+    def test_generator_sample_shape(self):
+        w, z, _ = self._wzx()
+        out = mlp_gan.sample_generator(self.spec, w, z)
+        assert out.shape == (z.shape[0], 2)
+
+
+class TestDcgan:
+    spec = dcgan.DcganSpec()
+
+    def test_generator_output_range_and_shape(self):
+        w = dcgan.init_params(self.spec, jax.random.PRNGKey(1))
+        z = jax.random.normal(jax.random.PRNGKey(2), (2, self.spec.noise_dim))
+        img = dcgan.sample_generator(self.spec, w, z)
+        assert img.shape == (2, 3, 32, 32)
+        assert float(jnp.abs(img).max()) <= 1.0
+
+    def test_operator_shapes(self):
+        w = dcgan.init_params(self.spec, jax.random.PRNGKey(3))
+        z = jax.random.normal(jax.random.PRNGKey(4), (2, self.spec.noise_dim))
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 3, 32, 32))
+        f, lg, ld = dcgan.gan_operator(self.spec, w, z, x)
+        assert f.shape == (self.spec.dim,)
+        assert bool(jnp.isfinite(f).all())
+
+    def test_theta_block_ignores_real_data(self):
+        # ∂L_G/∂θ does not depend on x_real — a structural property of
+        # eq. 6 the operator must preserve.
+        w = dcgan.init_params(self.spec, jax.random.PRNGKey(6))
+        z = jax.random.normal(jax.random.PRNGKey(7), (2, self.spec.noise_dim))
+        x1 = jax.random.normal(jax.random.PRNGKey(8), (2, 3, 32, 32))
+        x2 = jax.random.normal(jax.random.PRNGKey(9), (2, 3, 32, 32))
+        td = self.spec.theta_dim
+        f1, _, _ = dcgan.gan_operator(self.spec, w, z, x1)
+        f2, _, _ = dcgan.gan_operator(self.spec, w, z, x2)
+        np.testing.assert_allclose(np.array(f1[:td]), np.array(f2[:td]), atol=1e-6)
+        assert float(jnp.abs(f1[td:] - f2[td:]).max()) > 1e-6
+
+
+class TestFeatureNet:
+    def test_shapes(self):
+        key = jax.random.PRNGKey(0)
+        weights = []
+        for _, shape in feature_net.weight_shapes():
+            key, sub = jax.random.split(key)
+            weights.append(jax.random.normal(sub, shape, jnp.float32) * 0.1)
+        imgs = jax.random.normal(key, (5, 3, 32, 32), jnp.float32)
+        feat, logits = feature_net.features(imgs, *weights)
+        assert feat.shape == (5, feature_net.FEATURE_DIM)
+        assert logits.shape == (5, feature_net.NUM_CLASSES)
+
+    def test_relu_and_pool_semantics(self):
+        # All-zero weights → features = 0, logits = bias.
+        ws = [jnp.zeros(s, jnp.float32) for _, s in feature_net.weight_shapes()]
+        imgs = jnp.ones((2, 3, 32, 32), jnp.float32)
+        feat, logits = feature_net.features(imgs, *ws)
+        assert float(jnp.abs(feat).max()) == 0.0
+        assert float(jnp.abs(logits).max()) == 0.0

@@ -1,0 +1,38 @@
+//! PERF: server-side aggregation (q̄ = 1/M Σ p̂) and the hot vector ops of
+//! the worker loop — the L3 costs that must not dominate round time.
+
+use dqgan::benchutil::Bench;
+use dqgan::tensor::ops;
+use dqgan::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("aggregation");
+    let mut rng = Pcg32::new(5);
+    let d = 400_708usize; // DCGAN dim
+    for &m in &[4usize, 8, 32] {
+        let payloads: Vec<Vec<f32>> = (0..m).map(|_| rng.normal_vec(d)).collect();
+        let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let mut out = vec![0.0f32; d];
+        b.bench_with_throughput(&format!("mean_into/M={m}/d={d}"), (4 * d * m) as u64, || {
+            ops::mean_into(&refs, &mut out);
+            out[0]
+        });
+    }
+    // Worker-side fused ops.
+    let x = rng.normal_vec(d);
+    let e = rng.normal_vec(d);
+    let mut out = vec![0.0f32; d];
+    b.bench_with_throughput(&format!("scaled_add(p=etaF+e)/d={d}"), (4 * d) as u64, || {
+        ops::scaled_add(0.01, &x, &e, &mut out);
+        out[0]
+    });
+    let mut w = rng.normal_vec(d);
+    b.bench_with_throughput(&format!("axpy/d={d}"), (4 * d) as u64, || {
+        ops::axpy(-0.01, &x, &mut w);
+        w[0]
+    });
+    b.bench_with_throughput(&format!("all_finite/d={d}"), (4 * d) as u64, || {
+        ops::all_finite(&x)
+    });
+    b.finish();
+}

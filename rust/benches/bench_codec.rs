@@ -1,0 +1,53 @@
+//! PERF: bit-packing codec and wire-framing throughput (isolated from the
+//! quantization math).
+
+use dqgan::benchutil::Bench;
+use dqgan::comm::Message;
+use dqgan::compress::{BitReader, BitWriter};
+use dqgan::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("codec");
+    let mut rng = Pcg32::new(3);
+    // Raw bit packing at the paper's 8-bit setting (1 sign + 7 level bits).
+    for &n in &[100_000usize, 1_000_000] {
+        let levels: Vec<u32> = (0..n).map(|_| rng.below(128)).collect();
+        let signs: Vec<u32> = (0..n).map(|_| rng.below(2)).collect();
+        b.bench_with_throughput(&format!("bitpack-write/8bit/n={n}"), (4 * n) as u64, || {
+            let mut w = BitWriter::with_capacity_bits(n * 8);
+            for i in 0..n {
+                w.write(signs[i], 1);
+                w.write(levels[i], 7);
+            }
+            w.into_bytes()
+        });
+        let bytes = {
+            let mut w = BitWriter::with_capacity_bits(n * 8);
+            for i in 0..n {
+                w.write(signs[i], 1);
+                w.write(levels[i], 7);
+            }
+            w.into_bytes()
+        };
+        b.bench_with_throughput(&format!("bitpack-read/8bit/n={n}"), (4 * n) as u64, || {
+            let mut r = BitReader::new(&bytes);
+            let mut acc = 0u32;
+            for _ in 0..n {
+                acc ^= r.read(1).unwrap();
+                acc ^= r.read(7).unwrap();
+            }
+            acc
+        });
+    }
+    // Message framing (encode + CRC + decode).
+    for &n in &[100_000usize, 1_600_000] {
+        let payload = vec![0xA5u8; n];
+        let msg = Message::payload(3, 17, payload);
+        b.bench_with_throughput(&format!("frame-encode/n={n}"), n as u64, || msg.encode());
+        let frame = msg.encode();
+        b.bench_with_throughput(&format!("frame-decode/n={n}"), n as u64, || {
+            Message::decode(&frame).unwrap()
+        });
+    }
+    b.finish();
+}

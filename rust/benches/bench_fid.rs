@@ -1,0 +1,30 @@
+//! PERF: metric-path costs — feature extraction (native conv net), the
+//! Newton–Schulz matrix sqrt, and the full FID computation.
+
+use dqgan::benchutil::Bench;
+use dqgan::data::SynthImages;
+use dqgan::linalg::{covariance, sqrtm_newton_schulz};
+use dqgan::metrics::{fid_from_features, FeatureNet, FEATURE_DIM};
+use dqgan::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("fid");
+    let ds = SynthImages::cifar_like(1);
+    let net = FeatureNet::new();
+    let mut rng = Pcg32::new(4);
+    let (imgs, _) = ds.sample_batch(64, &mut rng);
+    b.bench("feature_net/64imgs", || net.features_batch(&imgs));
+
+    let n = 512usize;
+    let feats_a: Vec<f32> = (0..n * FEATURE_DIM).map(|_| rng.normal()).collect();
+    let feats_b: Vec<f32> = (0..n * FEATURE_DIM).map(|_| 0.5 + rng.normal()).collect();
+    b.bench("covariance/512x32", || covariance(&feats_a, n, FEATURE_DIM));
+    let cov = covariance(&feats_a, n, FEATURE_DIM);
+    b.bench("sqrtm-newton-schulz/32x32", || {
+        sqrtm_newton_schulz(&cov, FEATURE_DIM, 1e-6, 64)
+    });
+    b.bench("fid-total/512-vs-512", || {
+        fid_from_features(&feats_a, n, &feats_b, n, FEATURE_DIM)
+    });
+    b.finish();
+}

@@ -1,0 +1,57 @@
+//! PERF: compressor throughput (quantize + encode, the per-round worker
+//! cost that competes with gradient compute). Includes the XLA/Pallas
+//! quantizer when artifacts are present, so native-vs-kernel cost is
+//! directly comparable.
+
+use dqgan::benchutil::Bench;
+use dqgan::compress::compressor_from_spec;
+use dqgan::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("quantizers");
+    let mut rng = Pcg32::new(42);
+    for &d in &[10_000usize, 400_708, 1_000_000] {
+        let v = rng.normal_vec(d);
+        let bytes = (4 * d) as u64;
+        for spec in
+            ["linf8", "linf(bits=8,block=1024)", "qsgd8", "topk(f=0.1)", "sign", "terngrad", "identity"]
+        {
+            let c = compressor_from_spec(spec).unwrap();
+            let mut r = Pcg32::new(7);
+            let mut buf = Vec::with_capacity(c.encoded_size(d));
+            b.bench_with_throughput(&format!("{spec}/d={d}"), bytes, || {
+                buf.clear();
+                c.compress_encoded(&v, &mut r, &mut buf)
+            });
+        }
+    }
+    // Decode path (server side).
+    {
+        let d = 400_708usize;
+        let v = rng.normal_vec(d);
+        for spec in ["linf8", "qsgd8", "sign"] {
+            let c = compressor_from_spec(spec).unwrap();
+            let mut r = Pcg32::new(9);
+            let mut buf = Vec::new();
+            c.compress_encoded(&v, &mut r, &mut buf);
+            b.bench_with_throughput(&format!("decode/{spec}/d={d}"), (4 * d) as u64, || {
+                c.decode(&buf, d).unwrap()
+            });
+        }
+    }
+    // XLA/Pallas fused kernel, if artifacts are available.
+    if dqgan::runtime::artifacts_dir().join("manifest.json").exists() {
+        let rt = dqgan::runtime::Runtime::from_default_dir().unwrap();
+        let q = dqgan::runtime::XlaQuantizer::new(&rt, "quantize_ef_dcgan").unwrap();
+        let d = q.dim();
+        let v = rng.normal_vec(d);
+        let mut r = Pcg32::new(11);
+        let _ = q.quantize_ef(&v, &mut r).unwrap(); // warm the compile
+        b.bench_with_throughput(&format!("xla-pallas-quantize_ef/d={d}"), (4 * d) as u64, || {
+            q.quantize_ef(&v, &mut r).unwrap()
+        });
+    } else {
+        eprintln!("(skipping XLA quantizer case: run `make artifacts`)");
+    }
+    b.finish();
+}

@@ -1,0 +1,64 @@
+//! PERF: end-to-end round latency breakdown on the real stack — gradient
+//! (XLA), quantize+encode, server decode+aggregate — per model. The
+//! numbers behind EXPERIMENTS.md §Perf's "L3 must not be the bottleneck".
+
+use dqgan::benchutil::Bench;
+use dqgan::compress::compressor_from_spec;
+use dqgan::data::{GaussianMixture2D, SynthImages};
+use dqgan::grad::GradientSource;
+use dqgan::runtime::{artifacts_dir, Runtime, XlaGradSource};
+use dqgan::tensor::ops;
+use dqgan::util::rng::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::from_default_dir().unwrap();
+    let mut b = Bench::new("step_latency")
+        .with_budget(Duration::from_millis(1500), Duration::from_millis(400));
+
+    // MLP model (355 params): the round should be L3-dominated here.
+    {
+        let mut src = XlaGradSource::mlp(&rt, GaussianMixture2D::ring(8, 2.0, 0.1)).unwrap();
+        let mut rng = Pcg32::new(1);
+        let w = src.init_params(&mut rng);
+        let mut g = vec![0.0; src.dim()];
+        let batch = src.artifact_batch();
+        src.grad(&w, batch, &mut rng, &mut g).unwrap();
+        b.bench("mlp/grad-xla", || src.grad(&w, batch, &mut rng, &mut g).unwrap());
+    }
+
+    // DCGAN model (400,708 params).
+    {
+        let mut src = XlaGradSource::dcgan(&rt, SynthImages::cifar_like(1)).unwrap();
+        let mut rng = Pcg32::new(2);
+        let w = src.init_params(&mut rng);
+        let d = src.dim();
+        let mut g = vec![0.0; d];
+        let batch = src.artifact_batch();
+        src.grad(&w, batch, &mut rng, &mut g).unwrap();
+        b.bench("dcgan/grad-xla", || src.grad(&w, batch, &mut rng, &mut g).unwrap());
+
+        let c = compressor_from_spec("linf8").unwrap();
+        let mut buf = Vec::with_capacity(c.encoded_size(d));
+        b.bench_with_throughput("dcgan/quantize+encode", (4 * d) as u64, || {
+            buf.clear();
+            c.compress_encoded(&g, &mut rng, &mut buf)
+        });
+        let wire = buf.clone();
+        b.bench_with_throughput("dcgan/server-decode", (4 * d) as u64, || {
+            c.decode(&wire, d).unwrap()
+        });
+        let decoded: Vec<Vec<f32>> = (0..4).map(|_| c.decode(&wire, d).unwrap()).collect();
+        let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
+        let mut avg = vec![0.0f32; d];
+        b.bench_with_throughput("dcgan/server-average-M4", (4 * d * 4) as u64, || {
+            ops::mean_into(&refs, &mut avg);
+            avg[0]
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,16 @@
+//! Figure 2 regeneration (bench-target form): IS/FID vs epoch on the
+//! CIFAR-10-like dataset for all three methods, through the full stack.
+//! Heavy: pass `--fast` via DQGAN_FAST=1 to shrink.
+//!
+//! The canonical entry point is `dqgan figures --id fig2`; this target
+//! exists so `cargo bench` regenerates every figure.
+
+fn main() {
+    let fast = std::env::var("DQGAN_FAST").map(|v| v != "0").unwrap_or(true);
+    if !dqgan::runtime::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP fig2: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    dqgan::exp::images::run(dqgan::exp::images::ImageFigure::Fig2Cifar, fast)
+        .expect("fig2 run failed");
+}

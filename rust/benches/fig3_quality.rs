@@ -1,0 +1,13 @@
+//! Figure 3 regeneration (bench-target form): IS/FID vs epoch on the
+//! CelebA-like dataset. See fig2_quality.rs; canonical entry point is
+//! `dqgan figures --id fig3`.
+
+fn main() {
+    let fast = std::env::var("DQGAN_FAST").map(|v| v != "0").unwrap_or(true);
+    if !dqgan::runtime::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP fig3: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    dqgan::exp::images::run(dqgan::exp::images::ImageFigure::Fig3Faces, fast)
+        .expect("fig3 run failed");
+}

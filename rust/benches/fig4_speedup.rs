@@ -1,0 +1,12 @@
+//! Figure 4 regeneration (bench-target form): speedup vs workers for
+//! DQGAN-8bit vs CPOAdam-fp32, measured compute + byte-exact comm model.
+//! Canonical entry point: `dqgan figures --id fig4`.
+
+fn main() {
+    if !dqgan::runtime::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP fig4: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let fast = std::env::var("DQGAN_FAST").map(|v| v != "0").unwrap_or(true);
+    dqgan::exp::fig4::run(fast).expect("fig4 run failed");
+}

@@ -1,0 +1,163 @@
+//! The paper's baselines (§4):
+//!
+//! - **CPOAdam** — Centralized Parallel Optimistic Adam: workers push raw
+//!   f32 minibatch gradients, the server averages, every worker applies an
+//!   identical Optimistic Adam update to the averaged gradient (replicated
+//!   deterministic state ⇒ parameters stay in lockstep).
+//! - **CPOAdam-GQ** — same, but the transmitted gradient is quantized with
+//!   a δ-approximate compressor and **no error feedback** — the ablation
+//!   that isolates what DQGAN's double compensation buys.
+
+use super::{Produced, RoundStats, WorkerAlgo};
+use crate::compress::{Compressor, Identity};
+use crate::grad::GradientSource;
+use crate::optim::{LrSchedule, OptimisticAdam, Optimizer};
+use crate::util::rng::Pcg32;
+use crate::util::stats::norm2_sq;
+use std::sync::Arc;
+
+/// CPOAdam / CPOAdam-GQ worker (quantizer = `None` for plain CPOAdam).
+pub struct CpoAdamWorker {
+    w: Vec<f32>,
+    opt: OptimisticAdam,
+    quantizer: Option<Arc<dyn Compressor>>,
+    f: Vec<f32>,
+}
+
+impl CpoAdamWorker {
+    pub fn new(w0: Vec<f32>, lr: LrSchedule, quantizer: Option<Arc<dyn Compressor>>) -> Self {
+        let d = w0.len();
+        Self {
+            w: w0,
+            opt: OptimisticAdam::new(1.0).with_betas(0.5, 0.9).with_schedule(lr),
+            quantizer,
+            f: vec![0.0; d],
+        }
+    }
+}
+
+impl WorkerAlgo for CpoAdamWorker {
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.w
+    }
+
+    fn produce(
+        &mut self,
+        src: &mut dyn GradientSource,
+        batch: usize,
+        rng: &mut Pcg32,
+    ) -> anyhow::Result<Produced> {
+        let meta = src.grad(&self.w, batch, rng, &mut self.f)?;
+        let (wire, dense) = match &self.quantizer {
+            None => {
+                let mut wire = Vec::with_capacity(4 * self.f.len());
+                Identity.encode(&self.f, &mut wire);
+                (wire, self.f.clone())
+            }
+            Some(q) => {
+                let mut wire = Vec::with_capacity(q.encoded_size(self.f.len()));
+                let dense = q.compress_encoded(&self.f, rng, &mut wire);
+                (wire, dense)
+            }
+        };
+        let stats = RoundStats {
+            bytes_up: wire.len(),
+            grad_norm_sq: norm2_sq(&self.f),
+            err_norm_sq: 0.0, // no error feedback by construction
+            loss_g: meta.loss_g,
+            loss_d: meta.loss_d,
+        };
+        Ok(Produced { wire, dense, stats })
+    }
+
+    fn apply(&mut self, avg: &[f32]) {
+        // Replicated Optimistic Adam on the averaged (possibly quantized)
+        // gradient — deterministic, so replicas stay identical.
+        self.opt.step(&mut self.w, avg);
+    }
+
+    fn name(&self) -> String {
+        match &self.quantizer {
+            None => "cpoadam".to_string(),
+            Some(q) => format!("cpoadam-gq[{}]", q.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::LinfStochastic;
+    use crate::grad::QuadraticOperator;
+    use crate::tensor::ops;
+
+    fn run(
+        quantizer: Option<Arc<dyn Compressor>>,
+        rounds: usize,
+        eta: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let m = 4;
+        let mut seed_rng = Pcg32::new(21);
+        let mut op = QuadraticOperator::new(12, 0.2, &mut seed_rng);
+        let target = op.target.clone();
+        let w0 = op.init_params(&mut seed_rng);
+        let mut workers: Vec<CpoAdamWorker> = (0..m)
+            .map(|_| CpoAdamWorker::new(w0.clone(), LrSchedule::constant(eta), quantizer.clone()))
+            .collect();
+        let mut rngs: Vec<Pcg32> = (0..m).map(|i| Pcg32::new(500 + i as u64)).collect();
+        for _ in 0..rounds {
+            let mut payloads = Vec::new();
+            for (wk, rng) in workers.iter_mut().zip(&mut rngs) {
+                payloads.push(wk.produce(&mut op, 8, rng).unwrap().dense);
+            }
+            let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
+            let mut avg = vec![0.0; 12];
+            ops::mean_into(&refs, &mut avg);
+            for wk in workers.iter_mut() {
+                wk.apply(&avg);
+            }
+            // lockstep invariant
+            for wk in &workers[1..] {
+                assert_eq!(wk.params(), workers[0].params());
+            }
+        }
+        (workers[0].params().to_vec(), target)
+    }
+
+    #[test]
+    fn cpoadam_converges_on_quadratic() {
+        let (w, target) = run(None, 1200, 0.02);
+        for (a, b) in w.iter().zip(&target) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cpoadam_gq_converges_with_fine_quantizer() {
+        let (w, target) = run(Some(Arc::new(LinfStochastic::with_bits(8))), 1200, 0.02);
+        for (a, b) in w.iter().zip(&target) {
+            assert!((a - b).abs() < 0.15, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gq_wire_is_smaller() {
+        let mut seed_rng = Pcg32::new(31);
+        let mut op = QuadraticOperator::new(1000, 0.1, &mut seed_rng);
+        let w0 = op.init_params(&mut seed_rng);
+        let mut raw = CpoAdamWorker::new(w0.clone(), LrSchedule::constant(0.01), None);
+        let mut gq = CpoAdamWorker::new(
+            w0,
+            LrSchedule::constant(0.01),
+            Some(Arc::new(LinfStochastic::with_bits(8))),
+        );
+        let mut rng = Pcg32::new(1);
+        let b_raw = raw.produce(&mut op, 4, &mut rng).unwrap().stats.bytes_up;
+        let b_gq = gq.produce(&mut op, 4, &mut rng).unwrap().stats.bytes_up;
+        assert!(b_gq * 3 < b_raw, "raw={b_raw} gq={b_gq}");
+    }
+}

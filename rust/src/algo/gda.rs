@@ -1,0 +1,107 @@
+//! Distributed simultaneous gradient descent–ascent (GDA): the
+//! "basic gradient method" of paper eq. 11, data-parallel. Included as the
+//! divergence baseline for the SYN-B bilinear experiment — it cycles or
+//! drifts on min–max problems where DQGAN/OMD converge (§2.2).
+
+use super::{Produced, RoundStats, WorkerAlgo};
+use crate::compress::{Compressor, Identity};
+use crate::grad::GradientSource;
+use crate::optim::LrSchedule;
+use crate::tensor::ops;
+use crate::util::rng::Pcg32;
+use crate::util::stats::norm2_sq;
+
+/// GDA worker: push raw F(w; ξ), apply `w ← w − η·ḡ`.
+pub struct DistGdaWorker {
+    w: Vec<f32>,
+    lr: LrSchedule,
+    t: u64,
+    f: Vec<f32>,
+}
+
+impl DistGdaWorker {
+    pub fn new(w0: Vec<f32>, lr: LrSchedule) -> Self {
+        let d = w0.len();
+        Self { w: w0, lr, t: 0, f: vec![0.0; d] }
+    }
+}
+
+impl WorkerAlgo for DistGdaWorker {
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.w
+    }
+
+    fn produce(
+        &mut self,
+        src: &mut dyn GradientSource,
+        batch: usize,
+        rng: &mut Pcg32,
+    ) -> anyhow::Result<Produced> {
+        let meta = src.grad(&self.w, batch, rng, &mut self.f)?;
+        let mut wire = Vec::with_capacity(4 * self.f.len());
+        Identity.encode(&self.f, &mut wire);
+        let stats = RoundStats {
+            bytes_up: wire.len(),
+            grad_norm_sq: norm2_sq(&self.f),
+            err_norm_sq: 0.0,
+            loss_g: meta.loss_g,
+            loss_d: meta.loss_d,
+        };
+        Ok(Produced { wire, dense: self.f.clone(), stats })
+    }
+
+    fn apply(&mut self, avg: &[f32]) {
+        let eta = self.lr.at(self.t);
+        ops::axpy(-eta, avg, &mut self.w);
+        self.t += 1;
+    }
+
+    fn name(&self) -> String {
+        "gda".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::{GradMeta, GradientSource};
+
+    /// Bilinear min–max: F(x, y) = (y, −x).
+    struct Bilinear;
+    impl GradientSource for Bilinear {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn grad(
+            &mut self,
+            w: &[f32],
+            _batch: usize,
+            _rng: &mut Pcg32,
+            out: &mut [f32],
+        ) -> anyhow::Result<GradMeta> {
+            out[0] = w[1];
+            out[1] = -w[0];
+            Ok(GradMeta::default())
+        }
+        fn init_params(&self, _rng: &mut Pcg32) -> Vec<f32> {
+            vec![1.0, 1.0]
+        }
+    }
+
+    #[test]
+    fn gda_spirals_out_on_bilinear() {
+        let mut wk = DistGdaWorker::new(vec![1.0, 1.0], LrSchedule::constant(0.1));
+        let mut rng = Pcg32::new(1);
+        let mut src = Bilinear;
+        for _ in 0..500 {
+            let p = wk.produce(&mut src, 1, &mut rng).unwrap();
+            wk.apply(&p.dense);
+        }
+        let r = norm2_sq(wk.params()).sqrt();
+        assert!(r > 5.0, "GDA should diverge on the bilinear game, r={r}");
+    }
+}

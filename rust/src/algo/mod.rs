@@ -1,0 +1,207 @@
+//! Training algorithms (paper §3.1, §4): the worker-side round logic of
+//! DQGAN (Algorithm 2) and the paper's two baselines, behind one trait the
+//! parameter-server runtime drives.
+//!
+//! Per synchronous round, every worker:
+//! 1. [`WorkerAlgo::produce`] — local half-step (if any), minibatch
+//!    gradient, compression, error feedback; emits the wire payload;
+//! 2. the server averages the decoded payloads (`ps/server.rs`);
+//! 3. [`WorkerAlgo::apply`] — applies the averaged vector.
+//!
+//! | algorithm   | transmits            | error feedback | update        |
+//! |-------------|----------------------|----------------|---------------|
+//! | DQGAN       | Q(η·F + e), δ-approx | double (Alg 2) | `w −= q̄`      |
+//! | CPOAdam     | raw F (f32)          | —              | Optimistic Adam on ḡ |
+//! | CPOAdam-GQ  | Q(F), δ-approx       | **none**       | Optimistic Adam on q̄ |
+//! | DistGDA     | raw F (f32)          | —              | `w −= η·ḡ` (divergence baseline) |
+
+mod cpoadam;
+mod dqgan;
+mod dqgan_adam;
+mod gda;
+
+pub use cpoadam::CpoAdamWorker;
+pub use dqgan::DqganWorker;
+pub use dqgan_adam::DqganAdamWorker;
+pub use gda::DistGdaWorker;
+
+use crate::compress::{Compressor as _, CompressorSpec};
+use crate::grad::GradientSource;
+use crate::optim::LrSchedule;
+use crate::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Per-round telemetry a worker reports back to the leader.
+#[derive(Debug, Clone, Default)]
+pub struct RoundStats {
+    /// Uplink payload bytes actually placed on the wire.
+    pub bytes_up: usize,
+    /// ‖F(w_{t−½}; ξ)‖² — the convergence measure of Theorem 3.
+    pub grad_norm_sq: f32,
+    /// ‖e_t‖² — the Lemma 1 quantity (0 for algorithms without EF).
+    pub err_norm_sq: f32,
+    /// Losses at the evaluation point, when the model reports them.
+    pub loss_g: Option<f32>,
+    pub loss_d: Option<f32>,
+}
+
+/// The message a worker hands the transport each round.
+#[derive(Debug, Clone)]
+pub struct Produced {
+    /// Encoded payload (exact bytes a real network would carry).
+    pub wire: Vec<u8>,
+    /// Dense decoded payload — the in-process fast path (bit-identical to
+    /// `decode(wire)`; integration tests assert this).
+    pub dense: Vec<f32>,
+    pub stats: RoundStats,
+}
+
+/// Worker-side round logic.
+pub trait WorkerAlgo: Send {
+    /// Flat parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Current parameters w_t (identical across workers after `apply`).
+    fn params(&self) -> &[f32];
+
+    /// Phase 1: produce this round's payload.
+    fn produce(
+        &mut self,
+        src: &mut dyn GradientSource,
+        batch: usize,
+        rng: &mut Pcg32,
+    ) -> anyhow::Result<Produced>;
+
+    /// Phase 2: apply the server-averaged payload.
+    fn apply(&mut self, avg: &[f32]);
+
+    /// Algorithm name for logs/reports.
+    fn name(&self) -> String;
+}
+
+/// Which algorithm to run — the config-level selector.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AlgoKind {
+    /// Algorithm 2 (pure OMD form) with the given compressor.
+    Dqgan { compressor: CompressorSpec },
+    /// The paper's experimental DQGAN: Optimistic Adam + EF quantization.
+    DqganAdam { compressor: CompressorSpec },
+    /// Centralized Parallel Optimistic Adam (no quantization, no EF).
+    CpoAdam,
+    /// CPOAdam with quantized gradients but **no** error feedback.
+    CpoAdamGq { compressor: CompressorSpec },
+    /// Distributed simultaneous gradient descent (divergence baseline).
+    DistGda,
+}
+
+impl AlgoKind {
+    /// Parse from a CLI string: `dqgan:linf8`, `cpoadam`, `cpoadam-gq:linf8`,
+    /// `gda`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        match name {
+            "dqgan" => Ok(Self::Dqgan {
+                compressor: CompressorSpec::parse(arg.unwrap_or("linf8"))?,
+            }),
+            "dqgan-adam" | "dqganadam" => Ok(Self::DqganAdam {
+                compressor: CompressorSpec::parse(arg.unwrap_or("linf8"))?,
+            }),
+            "cpoadam" => Ok(Self::CpoAdam),
+            "cpoadam-gq" | "cpoadamgq" => Ok(Self::CpoAdamGq {
+                compressor: CompressorSpec::parse(arg.unwrap_or("linf8"))?,
+            }),
+            "gda" => Ok(Self::DistGda),
+            other => anyhow::bail!("unknown algorithm '{other}'"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Self::Dqgan { compressor } => format!("dqgan[{compressor:?}]"),
+            Self::DqganAdam { compressor } => format!("dqgan-adam[{compressor:?}]"),
+            Self::CpoAdam => "cpoadam".into(),
+            Self::CpoAdamGq { compressor } => format!("cpoadam-gq[{compressor:?}]"),
+            Self::DistGda => "gda".into(),
+        }
+    }
+
+    /// Build a worker instance with initial parameters `w0` and step-size
+    /// schedule `lr`.
+    pub fn build_worker(&self, w0: Vec<f32>, lr: LrSchedule) -> Box<dyn WorkerAlgo> {
+        match self {
+            Self::Dqgan { compressor } => {
+                Box::new(DqganWorker::new(w0, lr, Arc::from(compressor.build())))
+            }
+            Self::DqganAdam { compressor } => {
+                Box::new(DqganAdamWorker::new(w0, lr, Arc::from(compressor.build())))
+            }
+            Self::CpoAdam => Box::new(CpoAdamWorker::new(w0, lr, None)),
+            Self::CpoAdamGq { compressor } => {
+                Box::new(CpoAdamWorker::new(w0, lr, Some(Arc::from(compressor.build()))))
+            }
+            Self::DistGda => Box::new(DistGdaWorker::new(w0, lr)),
+        }
+    }
+
+    /// Server-side decoder for this algorithm's wire payloads.
+    pub fn decoder(&self) -> Arc<dyn Fn(&[u8], usize) -> anyhow::Result<Vec<f32>> + Send + Sync> {
+        match self {
+            Self::Dqgan { compressor }
+            | Self::DqganAdam { compressor }
+            | Self::CpoAdamGq { compressor } => {
+                let c: Arc<dyn crate::compress::Compressor> = Arc::from(compressor.build());
+                Arc::new(move |bytes, d| c.decode(bytes, d))
+            }
+            Self::CpoAdam | Self::DistGda => {
+                let c = crate::compress::Identity;
+                Arc::new(move |bytes, d| c.decode(bytes, d))
+            }
+        }
+    }
+
+    /// Uplink bytes per round for dimension `d` (used by the network cost
+    /// model without running the worker).
+    pub fn uplink_bytes(&self, d: usize) -> usize {
+        match self {
+            Self::Dqgan { compressor }
+            | Self::DqganAdam { compressor }
+            | Self::CpoAdamGq { compressor } => compressor.build().encoded_size(d),
+            Self::CpoAdam | Self::DistGda => 4 * d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_algo_strings() {
+        assert_eq!(AlgoKind::parse("cpoadam").unwrap(), AlgoKind::CpoAdam);
+        assert_eq!(AlgoKind::parse("gda").unwrap(), AlgoKind::DistGda);
+        match AlgoKind::parse("dqgan:linf8").unwrap() {
+            AlgoKind::Dqgan { compressor } => {
+                assert_eq!(compressor, CompressorSpec::Linf { levels: 127, block: None })
+            }
+            other => panic!("{other:?}"),
+        }
+        match AlgoKind::parse("cpoadam-gq:qsgd(s=7)").unwrap() {
+            AlgoKind::CpoAdamGq { compressor } => {
+                assert_eq!(compressor, CompressorSpec::Qsgd { levels: 7 })
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(AlgoKind::parse("wat").is_err());
+    }
+
+    #[test]
+    fn uplink_bytes_reflect_compression() {
+        let d = 100_000;
+        let dq = AlgoKind::parse("dqgan:linf8").unwrap();
+        let cp = AlgoKind::parse("cpoadam").unwrap();
+        assert!(dq.uplink_bytes(d) * 3 < cp.uplink_bytes(d));
+    }
+}

@@ -1,0 +1,240 @@
+//! Mini benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warmup, adaptive iteration counts targeting a fixed measurement
+//! time, outlier-trimmed statistics, and throughput reporting. Used by all
+//! `[[bench]] harness = false` targets:
+//!
+//! ```ignore
+//! let mut b = Bench::new("quantizers");
+//! b.bench_with_throughput("qsgd/1M", bytes, || quantize(&v));
+//! b.finish();
+//! ```
+//!
+//! Environment knobs: `DQGAN_BENCH_MS` (per-case measurement budget,
+//! default 300 ms), `DQGAN_BENCH_WARMUP_MS` (default 100 ms),
+//! `DQGAN_BENCH_FILTER` (substring filter on case names).
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-exported so benches can `benchutil::black_box` without `std::hint`.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Trimmed summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Bytes processed per iteration, if provided (for throughput).
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl Summary {
+    /// MB/s based on mean time, if bytes were provided.
+    pub fn throughput_mbs(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b as f64 / self.mean.as_secs_f64() / 1e6)
+    }
+}
+
+fn env_ms(key: &str, default_ms: u64) -> Duration {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(default_ms))
+}
+
+/// A group of benchmark cases with shared reporting.
+pub struct Bench {
+    group: String,
+    measure_budget: Duration,
+    warmup_budget: Duration,
+    filter: Option<String>,
+    results: Vec<Summary>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            measure_budget: env_ms("DQGAN_BENCH_MS", 300),
+            warmup_budget: env_ms("DQGAN_BENCH_WARMUP_MS", 100),
+            filter: std::env::var("DQGAN_BENCH_FILTER").ok(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the per-case budgets (for expensive end-to-end cases).
+    pub fn with_budget(mut self, measure: Duration, warmup: Duration) -> Self {
+        self.measure_budget = measure;
+        self.warmup_budget = warmup;
+        self
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !name.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Benchmark a closure.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Option<&Summary> {
+        self.bench_inner(name, None, &mut || {
+            bb(f());
+        })
+    }
+
+    /// Benchmark a closure that processes `bytes` per call (throughput).
+    pub fn bench_with_throughput<T>(
+        &mut self,
+        name: &str,
+        bytes: u64,
+        mut f: impl FnMut() -> T,
+    ) -> Option<&Summary> {
+        self.bench_inner(name, Some(bytes), &mut || {
+            bb(f());
+        })
+    }
+
+    fn bench_inner(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> Option<&Summary> {
+        if self.skip(name) {
+            return None;
+        }
+        // Warmup + calibration: how long does one call take?
+        let warm_start = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_budget || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+            if calib_iters >= 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / calib_iters as f64;
+        // Sample in batches so timer overhead is amortized; aim for ~50
+        // samples within the measurement budget.
+        let target_samples = 50usize;
+        let batch = ((self.measure_budget.as_secs_f64() / target_samples as f64 / per_call)
+            .ceil() as u64)
+            .max(1);
+        let mut samples: Vec<Duration> = Vec::with_capacity(target_samples);
+        let meas_start = Instant::now();
+        let mut total_iters = 0u64;
+        while meas_start.elapsed() < self.measure_budget && samples.len() < 10_000 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed() / batch as u32);
+            total_iters += batch;
+        }
+        samples.sort();
+        // Trim top/bottom 5%.
+        let trim = samples.len() / 20;
+        let trimmed = &samples[trim..samples.len() - trim.min(samples.len() - 1)];
+        let mean_nanos =
+            trimmed.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / trimmed.len() as f64;
+        let summary = Summary {
+            name: format!("{}/{}", self.group, name),
+            iters: total_iters,
+            mean: Duration::from_nanos(mean_nanos as u64),
+            median: trimmed[trimmed.len() / 2],
+            p95: trimmed[(trimmed.len() as f64 * 0.95) as usize % trimmed.len()],
+            min: *samples.first().unwrap(),
+            bytes_per_iter: bytes,
+        };
+        print_summary(&summary);
+        self.results.push(summary);
+        self.results.last()
+    }
+
+    /// Print the final table; call at the end of the bench binary.
+    pub fn finish(self) -> Vec<Summary> {
+        eprintln!("\n== {} ({} cases) ==", self.group, self.results.len());
+        self.results
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+fn print_summary(s: &Summary) {
+    let tp = match s.throughput_mbs() {
+        Some(mbs) if mbs >= 1000.0 => format!("  [{:.2} GB/s]", mbs / 1000.0),
+        Some(mbs) => format!("  [{mbs:.1} MB/s]"),
+        None => String::new(),
+    };
+    println!(
+        "{:<52} mean {:>10}  median {:>10}  p95 {:>10}  min {:>10}  ({} iters){tp}",
+        s.name,
+        fmt_dur(s.mean),
+        fmt_dur(s.median),
+        fmt_dur(s.p95),
+        fmt_dur(s.min),
+        s.iters,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        std::env::set_var("DQGAN_BENCH_MS", "20");
+        std::env::set_var("DQGAN_BENCH_WARMUP_MS", "5");
+        let mut b = Bench::new("test");
+        let mut acc = 0u64;
+        let s = b
+            .bench("noop-ish", || {
+                acc = acc.wrapping_add(1);
+                acc
+            })
+            .unwrap()
+            .clone();
+        assert!(s.iters > 0);
+        assert!(s.mean.as_nanos() > 0);
+        assert!(s.min <= s.median);
+        std::env::remove_var("DQGAN_BENCH_MS");
+        std::env::remove_var("DQGAN_BENCH_WARMUP_MS");
+    }
+
+    #[test]
+    fn throughput_is_computed() {
+        std::env::set_var("DQGAN_BENCH_MS", "10");
+        std::env::set_var("DQGAN_BENCH_WARMUP_MS", "2");
+        let data = vec![1.0f32; 1024];
+        let mut b = Bench::new("test");
+        let s = b
+            .bench_with_throughput("sum", (data.len() * 4) as u64, || {
+                data.iter().sum::<f32>()
+            })
+            .unwrap()
+            .clone();
+        assert!(s.throughput_mbs().unwrap() > 0.0);
+        std::env::remove_var("DQGAN_BENCH_MS");
+        std::env::remove_var("DQGAN_BENCH_WARMUP_MS");
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny argument parser: positionals + `--key value` / `--flag` pairs,
+//! with typed accessors and unused-flag warnings.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `--key value` (value required unless the next token is another
+    /// option or the end — then it's a boolean flag).
+    pub fn parse(argv: Vec<String>) -> anyhow::Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                anyhow::ensure!(!key.is_empty(), "bare '--' is not a valid option");
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let val = it.next().unwrap();
+                        args.options.insert(key.to_string(), val);
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark_used(&self, key: &str) {
+        self.used.borrow_mut().push(key.to_string());
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.mark_used(key);
+        self.options.get(key).cloned()
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark_used(key);
+        self.flags.iter().any(|f| f == key)
+            || self
+                .options
+                .get(key)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    /// Warn about options the command never read (typo protection).
+    pub fn warn_unused(&self) {
+        let used = self.used.borrow();
+        for key in self.options.keys().chain(self.flags.iter()) {
+            if !used.iter().any(|u| u == key) {
+                crate::log_warn!("unused option --{key}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("train --workers 4 --fast --lr 0.01");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get_parse("workers", 1usize).unwrap(), 4);
+        assert!((a.get_parse("lr", 0.0f32).unwrap() - 0.01).abs() < 1e-9);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("train");
+        assert_eq!(a.get_parse("rounds", 100u64).unwrap(), 100);
+        assert_eq!(a.get_or("algo", "cpoadam"), "cpoadam");
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse("train --workers banana");
+        assert!(a.get_parse("workers", 1usize).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        // "--shift -3" : "-3" doesn't start with "--" so it's a value.
+        let a = parse("cmd --shift -3");
+        assert_eq!(a.get_parse("shift", 0i32).unwrap(), -3);
+    }
+}

@@ -1,0 +1,179 @@
+//! CLI command implementations.
+
+use super::args::Args;
+use crate::algo::AlgoKind;
+use crate::compress::{
+    compressor_from_spec, empirical_delta, gaussian_sampler, heavy_tail_sampler,
+    sparse_sampler,
+};
+use crate::data::{GaussianMixture2D, SynthImages};
+use crate::model::{MlpGan, MlpGanConfig};
+use crate::optim::LrSchedule;
+use crate::ps::{run_cluster, ClusterConfig};
+use crate::runtime::{artifacts_dir, Runtime, XlaGradSource};
+use crate::telemetry::Table;
+use crate::util::rng::Pcg32;
+
+/// `dqgan train`: one PS training run, printing a progress table.
+pub fn train(args: &mut Args) -> anyhow::Result<()> {
+    let algo = AlgoKind::parse(&args.get_or("algo", "dqgan-adam:linf8"))?;
+    let model = args.get_or("model", "mlp");
+    let workers = args.get_parse("workers", 4usize)?;
+    let rounds = args.get_parse("rounds", 200u64)?;
+    let seed = args.get_parse("seed", 2020u64)?;
+    let eval_every = args.get_parse("eval-every", (rounds / 10).max(1))?;
+    let native = args.flag("native");
+
+    let (default_batch, default_lr) = match model.as_str() {
+        "mlp" => (32usize, 2e-3f32),
+        "dcgan" => (16, 2e-4),
+        other => anyhow::bail!("unknown model '{other}' (mlp|dcgan)"),
+    };
+    let batch = args.get_parse("batch", default_batch)?;
+    let lr = args.get_parse("lr", default_lr)?;
+
+    let cfg = ClusterConfig {
+        algo,
+        workers,
+        batch,
+        rounds,
+        lr: LrSchedule::constant(lr),
+        seed,
+        eval_every,
+        keep_stats: true,
+    };
+    crate::log_info!(
+        "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr}",
+        cfg.algo.label()
+    );
+
+    let report = if model == "mlp" && native {
+        run_cluster(&cfg, |_m| Ok(Box::new(MlpGan::new(MlpGanConfig::default()))))?
+    } else {
+        let rt = Runtime::from_default_dir()?;
+        match model.as_str() {
+            "mlp" => run_cluster(&cfg, move |_m| {
+                Ok(Box::new(XlaGradSource::mlp(
+                    &rt,
+                    GaussianMixture2D::ring(8, 2.0, 0.1),
+                )?))
+            })?,
+            _ => run_cluster(&cfg, move |_m| {
+                Ok(Box::new(XlaGradSource::dcgan(&rt, SynthImages::cifar_like(seed))?))
+            })?,
+        }
+    };
+
+    let mut table = Table::new(&["round", "loss_G", "loss_D", "‖F‖²", "‖e‖²", "bytes_up"]);
+    for (i, st) in report.worker0.stats.iter().enumerate() {
+        if (i as u64) % eval_every == 0 || i + 1 == report.worker0.stats.len() {
+            table.row(&[
+                i.to_string(),
+                format!("{:.4}", st.loss_g.unwrap_or(f32::NAN)),
+                format!("{:.4}", st.loss_d.unwrap_or(f32::NAN)),
+                format!("{:.3e}", st.grad_norm_sq),
+                format!("{:.3e}", st.err_norm_sq),
+                st.bytes_up.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "done: {} rounds in {:.1}s ({:.1} ms/round), uplink total {}",
+        report.records.len(),
+        report.wall_secs,
+        report.mean_round_secs * 1e3,
+        crate::util::bytes::human_bytes(report.total_bytes_up)
+    );
+    Ok(())
+}
+
+/// `dqgan figures --id <exp>`: regenerate a paper figure.
+pub fn figures(args: &mut Args) -> anyhow::Result<()> {
+    let id = args
+        .get("id")
+        .or_else(|| args.positional.get(1).cloned())
+        .ok_or_else(|| anyhow::anyhow!("need --id (fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all)"))?;
+    let fast = args.flag("fast");
+    crate::exp::run(&id, fast)
+}
+
+/// `dqgan validate-compressors`: empirical Definition-1 verification.
+pub fn validate_compressors(args: &mut Args) -> anyhow::Result<()> {
+    let dim = args.get_parse("dim", 4096usize)?;
+    let trials = args.get_parse("trials", 20usize)?;
+    let reps = args.get_parse("reps", 10usize)?;
+    // Expected Definition-1 FAILURES (reported, not fatal):
+    // - terngrad: never δ-approximate (see compress/ docs);
+    // - qsgd at 4 bits with large d: QSGD's ‖·‖₂ scale needs s ≳ √d, so
+    //   s=7 at d ≥ ~100 violates the contraction on dense inputs. This is
+    //   a genuine limit of the paper's Theorem 2 as stated; the ‖·‖∞
+    //   variant (Hou et al. — the one the paper's experiments use) holds
+    //   in every regime we test. Recorded in EXPERIMENTS.md §THM2.
+    let specs = [
+        "identity", "topk(f=0.05)", "topk(f=0.25)", "qsgd8", "qsgd4", "linf8", "linf4",
+        "linf(bits=8,block=128)", "sign", "terngrad",
+    ];
+    let expected_negative = ["terngrad", "qsgd4", "qsgd(s=7)"];
+    let samplers: [(&str, fn(&mut Pcg32, usize) -> Vec<f32>); 3] = [
+        ("gaussian", gaussian_sampler),
+        ("heavy-tail", heavy_tail_sampler),
+        ("sparse", sparse_sampler),
+    ];
+    let mut table = Table::new(&[
+        "compressor", "input", "δ̂ (mean)", "δ̂ (worst)", "guaranteed δ", "4d/bytes", "ok",
+    ]);
+    let mut failures = 0;
+    for spec in specs {
+        let c = compressor_from_spec(spec)?;
+        for (sname, sampler) in samplers {
+            let mut rng = Pcg32::new(0xC0FFEE ^ dim as u64);
+            let est = empirical_delta(c.as_ref(), dim, trials, reps, &mut rng, sampler);
+            let ok = est.is_delta_approximate();
+            if !ok && !expected_negative.contains(&spec) {
+                failures += 1;
+            }
+            table.row(&[
+                c.name(),
+                sname.to_string(),
+                format!("{:.4}", est.mean_delta),
+                format!("{:.4}", est.worst_delta),
+                c.delta(dim).map(|d| format!("{d:.4}")).unwrap_or_else(|| "—".into()),
+                format!("{:.1}×", crate::compress::compression_ratio(c.as_ref(), dim)),
+                if ok { "✓" } else { "✗" }.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    anyhow::ensure!(failures == 0, "{failures} compressor/input combos violated Definition 1");
+    println!(
+        "Theorems 1–2 hold empirically for every δ-approximate compressor ✓ \
+         (terngrad is documented as NOT δ-approximate — comparison codec only)"
+    );
+    Ok(())
+}
+
+/// `dqgan info`: platform and manifest summary.
+pub fn info(_args: &mut Args) -> anyhow::Result<()> {
+    println!("dqgan {} — DQGAN reproduction (three-layer Rust+JAX+Pallas)", env!("CARGO_PKG_VERSION"));
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::new(&dir)?;
+        let m = rt.manifest();
+        println!("artifacts dir: {} (jax {})", dir.display(), m.jax_version);
+        let mut table = Table::new(&["artifact", "file", "inputs", "outputs", "dim"]);
+        for (name, spec) in &m.artifacts {
+            table.row(&[
+                name.clone(),
+                spec.file.clone(),
+                spec.inputs.len().to_string(),
+                spec.outputs.len().to_string(),
+                spec.meta_usize("dim").map(|d| d.to_string()).unwrap_or_else(|_| "—".into()),
+            ]);
+        }
+        table.print();
+    } else {
+        println!("artifacts dir: {} — NOT BUILT (run `make artifacts`)", dir.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! dqgan train --algo dqgan-adam:linf8 --model dcgan --workers 4 ...
+//! dqgan figures --id fig2 [--fast]
+//! dqgan validate-compressors [--dim 4096]
+//! dqgan info
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> crate::Result<()> {
+    let mut args = Args::parse(argv)?;
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".to_string());
+    let result = match cmd.as_str() {
+        "train" => commands::train(&mut args),
+        "figures" | "exp" | "experiment" => commands::figures(&mut args),
+        "validate-compressors" => commands::validate_compressors(&mut args),
+        "info" => commands::info(&mut args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command '{other}'")
+        }
+    };
+    if result.is_ok() {
+        args.warn_unused();
+    }
+    result
+}
+
+fn print_help() {
+    println!(
+        "dqgan — Distributed Quantized GAN training (Chen et al. 2020 reproduction)
+
+USAGE:
+  dqgan train [--algo A] [--model mlp|dcgan] [--workers N] [--batch B]
+              [--rounds T] [--lr ETA] [--seed S] [--eval-every K]
+      Train a GAN on the parameter-server runtime.
+      Algorithms: dqgan[:comp] (Algorithm 2), dqgan-adam[:comp] (paper §4),
+                  cpoadam, cpoadam-gq[:comp], gda
+      Compressors: linf8 (paper), linfN, qsgdN, topk(f=0.1), sign,
+                  terngrad, identity
+
+  dqgan figures --id fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all [--fast]
+      Regenerate a paper figure / theory validation (CSV under results/).
+
+  dqgan validate-compressors [--dim D] [--trials N]
+      Empirically verify Definition 1 (δ-approximate) for every compressor
+      (Theorems 1–2).
+
+  dqgan info
+      Show artifact manifest, platform and configuration info.
+
+ENVIRONMENT:
+  DQGAN_LOG=error|warn|info|debug|trace   log level (default info)
+  DQGAN_ARTIFACTS=DIR                     artifacts dir (default artifacts/)
+  DQGAN_RESULTS=DIR                       results dir (default results/)"
+    );
+}

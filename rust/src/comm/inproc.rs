@@ -1,0 +1,158 @@
+//! In-process transport: mpsc channels between the leader thread and the
+//! worker threads. This is the default transport for experiments — zero
+//! copies beyond the payload Vec, byte counters still track the *wire*
+//! frame sizes so accounting matches the TCP path exactly.
+
+use super::message::{Message, MsgKind};
+use super::{ByteCounter, ServerEnd, WorkerEnd};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Worker side of the in-process transport.
+pub struct InprocWorkerEnd {
+    id: u32,
+    to_server: Sender<Message>,
+    from_server: Receiver<Message>,
+    counter: Arc<ByteCounter>,
+}
+
+impl WorkerEnd for InprocWorkerEnd {
+    fn send(&mut self, msg: Message) -> anyhow::Result<()> {
+        self.counter.add_up(msg.frame_len());
+        self.to_server.send(msg).map_err(|_| anyhow::anyhow!("server hung up"))
+    }
+
+    fn recv(&mut self) -> anyhow::Result<Message> {
+        let msg = self.from_server.recv().map_err(|_| anyhow::anyhow!("server hung up"))?;
+        Ok(msg)
+    }
+
+    fn id(&self) -> u32 {
+        self.id
+    }
+}
+
+/// Server side of the in-process transport.
+pub struct InprocServerEnd {
+    from_workers: Receiver<Message>,
+    to_workers: Vec<Sender<Message>>,
+    counter: Arc<ByteCounter>,
+}
+
+impl ServerEnd for InprocServerEnd {
+    fn recv_round(&mut self) -> anyhow::Result<Vec<Message>> {
+        let m = self.to_workers.len();
+        let mut msgs = Vec::with_capacity(m);
+        for _ in 0..m {
+            let msg =
+                self.from_workers.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
+            if msg.kind == MsgKind::WorkerError {
+                anyhow::bail!(
+                    "worker {} failed at round {}: {}",
+                    msg.worker,
+                    msg.round,
+                    String::from_utf8_lossy(&msg.payload)
+                );
+            }
+            msgs.push(msg);
+        }
+        msgs.sort_by_key(|m| m.worker);
+        // Round consistency check: a synchronous PS must never mix rounds.
+        if let Some(first) = msgs.first() {
+            for m in &msgs {
+                if m.round != first.round {
+                    anyhow::bail!("mixed rounds in barrier: {} vs {}", m.round, first.round);
+                }
+            }
+        }
+        Ok(msgs)
+    }
+
+    fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
+        for tx in &self.to_workers {
+            self.counter.add_down(msg.frame_len());
+            tx.send(msg.clone()).map_err(|_| anyhow::anyhow!("worker hung up"))?;
+        }
+        Ok(())
+    }
+
+    fn workers(&self) -> usize {
+        self.to_workers.len()
+    }
+}
+
+/// Build an in-process PS cluster with `m` workers. Returns the server
+/// end, the worker ends, and the shared byte counter.
+pub fn inproc_cluster(m: usize) -> (InprocServerEnd, Vec<InprocWorkerEnd>, Arc<ByteCounter>) {
+    assert!(m > 0);
+    let counter = ByteCounter::new();
+    let (up_tx, up_rx) = channel::<Message>();
+    let mut worker_ends = Vec::with_capacity(m);
+    let mut down_txs = Vec::with_capacity(m);
+    for id in 0..m {
+        let (down_tx, down_rx) = channel::<Message>();
+        down_txs.push(down_tx);
+        worker_ends.push(InprocWorkerEnd {
+            id: id as u32,
+            to_server: up_tx.clone(),
+            from_server: down_rx,
+            counter: Arc::clone(&counter),
+        });
+    }
+    let server = InprocServerEnd {
+        from_workers: up_rx,
+        to_workers: down_txs,
+        counter: Arc::clone(&counter),
+    };
+    (server, worker_ends, counter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_with_threads() {
+        let (mut server, workers, counter) = inproc_cluster(3);
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|mut w| {
+                std::thread::spawn(move || {
+                    let id = w.id();
+                    w.send(Message::payload(id, 0, vec![id as u8; 8])).unwrap();
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.kind, MsgKind::Broadcast);
+                    b.payload[0]
+                })
+            })
+            .collect();
+        let msgs = server.recv_round().unwrap();
+        assert_eq!(msgs.len(), 3);
+        assert_eq!(msgs[0].worker, 0);
+        assert_eq!(msgs[2].payload, vec![2u8; 8]);
+        server.broadcast(Message::broadcast(0, vec![42])).unwrap();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 42);
+        }
+        assert!(counter.up_total() > 0);
+        assert!(counter.down_total() > 0);
+    }
+
+    #[test]
+    fn worker_error_propagates() {
+        let (mut server, mut workers, _) = inproc_cluster(2);
+        workers[0].send(Message::payload(0, 0, vec![])).unwrap();
+        workers[1].send(Message::worker_error(1, 0, "injected")).unwrap();
+        let err = server.recv_round().unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err}");
+    }
+
+    #[test]
+    fn mixed_round_detection() {
+        let (mut server, mut workers, _) = inproc_cluster(2);
+        workers[0].send(Message::payload(0, 0, vec![])).unwrap();
+        workers[1].send(Message::payload(1, 1, vec![])).unwrap();
+        let err = server.recv_round().unwrap_err();
+        assert!(err.to_string().contains("mixed rounds"), "{err}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Wire message format shared by every transport.
+//!
+//! Frame layout (little-endian):
+//!
+//! ```text
+//! [kind:u8][worker:u32][round:u64][len:u32][payload:len bytes][crc32:u32]
+//! ```
+//!
+//! The CRC covers the header + payload and exists for the TCP path
+//! (corruption detection in tests uses it too).
+
+use crate::util::bytes::{put_u32, put_u64, Reader};
+
+/// Message discriminator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgKind {
+    /// Worker → server: this round's (possibly compressed) payload.
+    Payload = 1,
+    /// Server → workers: the averaged vector to apply.
+    Broadcast = 2,
+    /// Server → workers: end of training.
+    Shutdown = 3,
+    /// Worker → server: fatal worker error (failure injection path).
+    WorkerError = 4,
+}
+
+impl MsgKind {
+    fn from_u8(v: u8) -> anyhow::Result<Self> {
+        Ok(match v {
+            1 => Self::Payload,
+            2 => Self::Broadcast,
+            3 => Self::Shutdown,
+            4 => Self::WorkerError,
+            other => anyhow::bail!("bad message kind {other}"),
+        })
+    }
+}
+
+/// A transport message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub kind: MsgKind,
+    pub worker: u32,
+    pub round: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Message {
+    pub fn payload(worker: u32, round: u64, payload: Vec<u8>) -> Self {
+        Self { kind: MsgKind::Payload, worker, round, payload }
+    }
+
+    pub fn broadcast(round: u64, payload: Vec<u8>) -> Self {
+        Self { kind: MsgKind::Broadcast, worker: u32::MAX, round, payload }
+    }
+
+    pub fn shutdown(round: u64) -> Self {
+        Self { kind: MsgKind::Shutdown, worker: u32::MAX, round, payload: Vec::new() }
+    }
+
+    pub fn worker_error(worker: u32, round: u64, what: &str) -> Self {
+        Self { kind: MsgKind::WorkerError, worker, round, payload: what.as_bytes().to_vec() }
+    }
+
+    /// Total frame size on the wire.
+    pub fn frame_len(&self) -> usize {
+        1 + 4 + 8 + 4 + self.payload.len() + 4
+    }
+
+    /// Serialize to the framed wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.frame_len());
+        buf.push(self.kind as u8);
+        put_u32(&mut buf, self.worker);
+        put_u64(&mut buf, self.round);
+        put_u32(&mut buf, self.payload.len() as u32);
+        buf.extend_from_slice(&self.payload);
+        let crc = crc32(&buf);
+        put_u32(&mut buf, crc);
+        buf
+    }
+
+    /// Parse one frame (must be exactly one frame).
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Self> {
+        if bytes.len() < 1 + 4 + 8 + 4 + 4 {
+            anyhow::bail!("frame too short: {}", bytes.len());
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let mut tail = Reader::new(&bytes[bytes.len() - 4..]);
+        let want_crc = tail.u32()?;
+        let got_crc = crc32(body);
+        if want_crc != got_crc {
+            anyhow::bail!("crc mismatch: frame {want_crc:#x} computed {got_crc:#x}");
+        }
+        let mut r = Reader::new(body);
+        let kind = MsgKind::from_u8(r.u8()?)?;
+        let worker = r.u32()?;
+        let round = r.u64()?;
+        let len = r.u32()? as usize;
+        let payload = r.bytes(len)?.to_vec();
+        if r.remaining() != 0 {
+            anyhow::bail!("trailing bytes in frame");
+        }
+        Ok(Self { kind, worker, round, payload })
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let m = Message::payload(3, 17, vec![1, 2, 3, 4, 5]);
+        let bytes = m.encode();
+        assert_eq!(bytes.len(), m.frame_len());
+        let back = Message::decode(&bytes).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let m = Message::broadcast(2, vec![9; 64]);
+        let mut bytes = m.encode();
+        bytes[10] ^= 0xFF;
+        assert!(Message::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_short_frames() {
+        assert!(Message::decode(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn kinds_round_trip() {
+        for m in [
+            Message::payload(0, 0, vec![]),
+            Message::broadcast(1, vec![1]),
+            Message::shutdown(9),
+            Message::worker_error(2, 3, "boom"),
+        ] {
+            assert_eq!(Message::decode(&m.encode()).unwrap(), m);
+        }
+    }
+}

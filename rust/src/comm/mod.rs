@@ -1,0 +1,77 @@
+//! Communication layer for the parameter-server topology (paper Fig. 1):
+//! message framing, transports (in-process channels and TCP), byte
+//! accounting, and the simulated-network cost model that drives the
+//! Figure 4 speedup reproduction.
+//!
+//! The PS round is strictly synchronous, so the transport interface is a
+//! pair of blocking endpoints:
+//!
+//! - [`WorkerEnd`]: `send` one payload per round, `recv` one broadcast;
+//! - [`ServerEnd`]: `recv_round` gathers all M payloads, `broadcast`
+//!   pushes the averaged result.
+//!
+//! The paper's testbed is NCCL on a GPU cluster; DESIGN.md §5 documents
+//! why a byte-accurate transport + [`sim::NetworkModel`] preserves the
+//! quantities Figure 4 measures.
+
+pub mod inproc;
+pub mod message;
+pub mod sim;
+pub mod tcp;
+
+pub use inproc::inproc_cluster;
+pub use message::{Message, MsgKind};
+pub use sim::NetworkModel;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Worker-side endpoint of a PS transport.
+pub trait WorkerEnd: Send {
+    /// Push this worker's round payload to the server (blocking).
+    fn send(&mut self, msg: Message) -> anyhow::Result<()>;
+    /// Block until the server's broadcast for the current round arrives.
+    fn recv(&mut self) -> anyhow::Result<Message>;
+    /// Worker id (0-based).
+    fn id(&self) -> u32;
+}
+
+/// Server-side endpoint of a PS transport.
+pub trait ServerEnd: Send {
+    /// Gather exactly one message from every worker (blocking). Messages
+    /// are returned sorted by worker id.
+    fn recv_round(&mut self) -> anyhow::Result<Vec<Message>>;
+    /// Broadcast one message to every worker.
+    fn broadcast(&mut self, msg: Message) -> anyhow::Result<()>;
+    /// Number of workers.
+    fn workers(&self) -> usize;
+}
+
+/// Shared byte counters (uplink = workers→server, downlink = server→workers).
+#[derive(Debug, Default)]
+pub struct ByteCounter {
+    pub up: AtomicU64,
+    pub down: AtomicU64,
+}
+
+impl ByteCounter {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn add_up(&self, n: usize) {
+        self.up.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_down(&self, n: usize) {
+        self.down.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn up_total(&self) -> u64 {
+        self.up.load(Ordering::Relaxed)
+    }
+
+    pub fn down_total(&self) -> u64 {
+        self.down.load(Ordering::Relaxed)
+    }
+}

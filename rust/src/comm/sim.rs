@@ -1,0 +1,163 @@
+//! Simulated-network cost model — the substitution for the paper's
+//! NCCL/GPU-cluster testbed (DESIGN.md §5).
+//!
+//! Figure 4 plots *speedup vs number of workers*: time is dominated by
+//! `max(compute, communication)` per synchronous round. The model charges:
+//!
+//! - **uplink (incast)**: all M workers push their payload through the
+//!   server's NIC: `t_up = latency + M·bytes_up / server_bw`;
+//! - **downlink (broadcast)**: `t_down = latency + M·bytes_down / server_bw`
+//!   (a PS unicasts M copies; this is exactly why quantization matters);
+//! - **compute**: the per-round gradient time, divided across workers when
+//!   the dataset is sharded (epoch semantics) — workers run in parallel, so
+//!   per-round compute does not scale with M, but *rounds per epoch* fall
+//!   as 1/M (each round consumes M·B samples).
+//!
+//! All quantities are f64 seconds; the model is deterministic, so speedup
+//! curves are exactly reproducible. Measured per-round compute times from
+//! the real runtime feed the model (see `exp/fig4.rs`).
+
+/// Parameters of the simulated PS network.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// Server NIC bandwidth, bytes/second (shared by up- and downlink).
+    pub server_bandwidth: f64,
+    /// Per-worker NIC bandwidth, bytes/second.
+    pub worker_bandwidth: f64,
+    /// One-way message latency, seconds (per barrier phase, not per byte).
+    pub latency: f64,
+}
+
+impl NetworkModel {
+    /// 10 GbE datacenter defaults (1.25 GB/s), 50 µs latency.
+    pub fn ten_gbe() -> Self {
+        Self { server_bandwidth: 1.25e9, worker_bandwidth: 1.25e9, latency: 50e-6 }
+    }
+
+    /// 100 GbE / NVLink-ish fabric.
+    pub fn hundred_gbe() -> Self {
+        Self { server_bandwidth: 12.5e9, worker_bandwidth: 12.5e9, latency: 20e-6 }
+    }
+
+    /// 1 GbE commodity cluster — the regime where Fig. 4's gap is widest.
+    pub fn one_gbe() -> Self {
+        Self { server_bandwidth: 0.125e9, worker_bandwidth: 0.125e9, latency: 100e-6 }
+    }
+
+    /// Uplink time for one synchronous gather of `bytes_up` per worker
+    /// from `m` workers (server NIC is the bottleneck; each worker's own
+    /// NIC bounds its share).
+    pub fn t_up(&self, bytes_up: usize, m: usize) -> f64 {
+        let serialized = (m as f64 * bytes_up as f64) / self.server_bandwidth;
+        let per_worker = bytes_up as f64 / self.worker_bandwidth;
+        self.latency + serialized.max(per_worker)
+    }
+
+    /// Downlink time for broadcasting `bytes_down` to `m` workers.
+    pub fn t_down(&self, bytes_down: usize, m: usize) -> f64 {
+        let serialized = (m as f64 * bytes_down as f64) / self.server_bandwidth;
+        let per_worker = bytes_down as f64 / self.worker_bandwidth;
+        self.latency + serialized.max(per_worker)
+    }
+
+    /// Total communication time for one round.
+    pub fn t_round_comm(&self, bytes_up: usize, bytes_down: usize, m: usize) -> f64 {
+        self.t_up(bytes_up, m) + self.t_down(bytes_down, m)
+    }
+
+    /// Wall-clock for one epoch under data sharding.
+    ///
+    /// * `samples` — dataset size; each round consumes `m·batch` samples,
+    ///   so an epoch is `ceil(samples / (m·batch))` rounds.
+    /// * `t_compute` — measured per-round gradient+quantize compute time
+    ///   on one worker (rounds of all workers overlap).
+    pub fn epoch_time(
+        &self,
+        samples: usize,
+        batch: usize,
+        m: usize,
+        t_compute: f64,
+        bytes_up: usize,
+        bytes_down: usize,
+    ) -> f64 {
+        let rounds = samples.div_ceil(m * batch) as f64;
+        rounds * (t_compute + self.t_round_comm(bytes_up, bytes_down, m))
+    }
+
+    /// Speedup of running on `m` workers vs 1 worker for the same epoch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn speedup(
+        &self,
+        samples: usize,
+        batch: usize,
+        m: usize,
+        t_compute: f64,
+        bytes_up: usize,
+        bytes_down: usize,
+    ) -> f64 {
+        let t1 = self.epoch_time(samples, batch, 1, t_compute, bytes_up, bytes_down);
+        let tm = self.epoch_time(samples, batch, m, t_compute, bytes_up, bytes_down);
+        t1 / tm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uplink_scales_with_workers() {
+        let net = NetworkModel::ten_gbe();
+        let t4 = net.t_up(1_000_000, 4);
+        let t8 = net.t_up(1_000_000, 8);
+        assert!(t8 > t4 * 1.5, "t4={t4} t8={t8}");
+    }
+
+    #[test]
+    fn latency_floors_small_messages() {
+        let net = NetworkModel::ten_gbe();
+        let t = net.t_up(10, 2);
+        assert!(t >= net.latency);
+        assert!(t < net.latency * 1.1);
+    }
+
+    #[test]
+    fn epoch_rounds_fall_with_m() {
+        let net = NetworkModel::hundred_gbe();
+        // communication-free regime: epoch time should scale ~1/M.
+        let t1 = net.epoch_time(10_000, 10, 1, 1e-3, 0, 0);
+        let t10 = net.epoch_time(10_000, 10, 10, 1e-3, 0, 0);
+        assert!((t1 / t10 - 10.0).abs() < 0.5, "{}", t1 / t10);
+    }
+
+    #[test]
+    fn quantization_beats_fp32_at_scale() {
+        // The Fig-4 shape: once comm is a non-trivial fraction of the
+        // round, 8-bit payloads give a strictly better speedup than
+        // 32-bit. (In the fully comm-saturated PS regime speedups of both
+        // saturate — the paper's GPU testbed is compute-dominated, so we
+        // test that regime: 50 ms compute vs ~6 ms fp32 comm on 10 GbE.)
+        let net = NetworkModel::ten_gbe();
+        let d = 1_000_000; // 1M params
+        let t_compute = 50e-3;
+        let samples = 60_000;
+        let batch = 64;
+        let m = 32;
+        let s_fp32 = net.speedup(samples, batch, m, t_compute, 4 * d, 4 * d);
+        let s_8bit = net.speedup(samples, batch, m, t_compute, d, 4 * d);
+        assert!(
+            s_8bit > s_fp32 * 1.2,
+            "8-bit speedup {s_8bit} should beat fp32 {s_fp32}"
+        );
+    }
+
+    #[test]
+    fn speedup_grows_with_m() {
+        let net = NetworkModel::ten_gbe();
+        let d = 100_000;
+        let s2 = net.speedup(60_000, 64, 2, 5e-3, d, 4 * d);
+        let s8 = net.speedup(60_000, 64, 8, 5e-3, d, 4 * d);
+        let s32 = net.speedup(60_000, 64, 32, 5e-3, d, 4 * d);
+        assert!(s2 < s8 && s8 < s32, "s2={s2} s8={s8} s32={s32}");
+    }
+}

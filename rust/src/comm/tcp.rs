@@ -1,0 +1,227 @@
+//! TCP transport: the same [`WorkerEnd`]/[`ServerEnd`] contract over real
+//! sockets with length-prefixed frames. Used by the multi-process mode
+//! (`dqgan train --transport tcp`) and the integration tests; proves the
+//! wire format is genuinely serializable, not an in-memory shortcut.
+//!
+//! Framing: `[frame_len:u32][frame bytes]` where `frame` is
+//! [`Message::encode`]'s output (which carries its own CRC).
+//!
+//! Setup is two-phase so the ephemeral port is known before workers
+//! connect: [`TcpServerBuilder::listen`] → spawn workers → `accept(m)`.
+
+use super::message::{Message, MsgKind};
+use super::{ByteCounter, ServerEnd, WorkerEnd};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+
+fn write_frame(stream: &mut TcpStream, msg: &Message) -> anyhow::Result<usize> {
+    let frame = msg.encode();
+    let len = (frame.len() as u32).to_le_bytes();
+    stream.write_all(&len)?;
+    stream.write_all(&frame)?;
+    stream.flush()?;
+    Ok(4 + frame.len())
+}
+
+fn read_frame(stream: &mut TcpStream) -> anyhow::Result<Message> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    // 256 MiB frame cap: protects against corrupt length prefixes.
+    if len > 256 * 1024 * 1024 {
+        anyhow::bail!("frame length {len} exceeds cap");
+    }
+    let mut frame = vec![0u8; len];
+    stream.read_exact(&mut frame)?;
+    Message::decode(&frame)
+}
+
+/// Phase-1 handle: the listener is bound (port known) but workers have
+/// not been accepted yet.
+pub struct TcpServerBuilder {
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl TcpServerBuilder {
+    /// Bind (use port 0 for an ephemeral port).
+    pub fn listen(addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Self { listener, addr })
+    }
+
+    /// The bound address (hand this to workers).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Phase 2: accept exactly `m` worker registrations.
+    pub fn accept(self, m: usize) -> anyhow::Result<TcpServerEnd> {
+        let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
+        let mut accepted = 0;
+        while accepted < m {
+            let (mut s, _) = self.listener.accept()?;
+            s.set_nodelay(true)?;
+            let hello = read_frame(&mut s)?;
+            anyhow::ensure!(hello.round == u64::MAX, "bad registration frame");
+            let id = hello.worker as usize;
+            anyhow::ensure!(id < m, "worker id {id} out of range");
+            anyhow::ensure!(streams[id].is_none(), "duplicate worker id {id}");
+            streams[id] = Some(s);
+            accepted += 1;
+        }
+        Ok(TcpServerEnd {
+            streams: streams.into_iter().map(|s| s.unwrap()).collect(),
+            counter: ByteCounter::new(),
+        })
+    }
+}
+
+/// TCP worker endpoint (connects to the server).
+pub struct TcpWorkerEnd {
+    id: u32,
+    stream: TcpStream,
+    counter: Arc<ByteCounter>,
+}
+
+impl TcpWorkerEnd {
+    /// Connect to `addr` and register with the given worker id.
+    pub fn connect(addr: &str, id: u32) -> anyhow::Result<Self> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        // Registration: a Payload-kind hello with round u64::MAX.
+        write_frame(&mut stream, &Message::payload(id, u64::MAX, Vec::new()))?;
+        Ok(Self { id, stream, counter: ByteCounter::new() })
+    }
+}
+
+impl WorkerEnd for TcpWorkerEnd {
+    fn send(&mut self, msg: Message) -> anyhow::Result<()> {
+        let n = write_frame(&mut self.stream, &msg)?;
+        self.counter.add_up(n);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<Message> {
+        read_frame(&mut self.stream)
+    }
+
+    fn id(&self) -> u32 {
+        self.id
+    }
+}
+
+/// TCP server endpoint (all workers registered).
+pub struct TcpServerEnd {
+    streams: Vec<TcpStream>,
+    counter: Arc<ByteCounter>,
+}
+
+impl TcpServerEnd {
+    pub fn counter(&self) -> Arc<ByteCounter> {
+        Arc::clone(&self.counter)
+    }
+}
+
+impl ServerEnd for TcpServerEnd {
+    fn recv_round(&mut self) -> anyhow::Result<Vec<Message>> {
+        let mut msgs = Vec::with_capacity(self.streams.len());
+        for s in &mut self.streams {
+            let msg = read_frame(s)?;
+            if msg.kind == MsgKind::WorkerError {
+                anyhow::bail!(
+                    "worker {} failed at round {}: {}",
+                    msg.worker,
+                    msg.round,
+                    String::from_utf8_lossy(&msg.payload)
+                );
+            }
+            self.counter.add_up(msg.frame_len() + 4);
+            msgs.push(msg);
+        }
+        msgs.sort_by_key(|m| m.worker);
+        if let Some(first) = msgs.first() {
+            for m in &msgs {
+                anyhow::ensure!(m.round == first.round, "mixed rounds in barrier");
+            }
+        }
+        Ok(msgs)
+    }
+
+    fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
+        for s in &mut self.streams {
+            let n = write_frame(s, &msg)?;
+            self.counter.add_down(n);
+        }
+        Ok(())
+    }
+
+    fn workers(&self) -> usize {
+        self.streams.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_round_trip() {
+        let m = 3;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let workers: Vec<_> = (0..m as u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+                    w.send(Message::payload(id, 0, vec![id as u8; 16])).unwrap();
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.kind, MsgKind::Broadcast);
+                    assert_eq!(b.payload, vec![7, 7]);
+                    let s = w.recv().unwrap();
+                    assert_eq!(s.kind, MsgKind::Shutdown);
+                })
+            })
+            .collect();
+        let mut server = builder.accept(m).unwrap();
+        let msgs = server.recv_round().unwrap();
+        assert_eq!(msgs.len(), m);
+        assert_eq!(msgs[1].payload, vec![1u8; 16]);
+        server.broadcast(Message::broadcast(0, vec![7, 7])).unwrap();
+        server.broadcast(Message::shutdown(1)).unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert!(server.counter().up_total() > 0);
+    }
+
+    #[test]
+    fn rejects_duplicate_ids() {
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let w = std::thread::spawn(move || {
+            let _a = TcpWorkerEnd::connect(&addr.to_string(), 0).unwrap();
+            let _b = TcpWorkerEnd::connect(&addr.to_string(), 0);
+            // keep the connections open long enough for accept to see both
+            std::thread::sleep(std::time::Duration::from_millis(300));
+        });
+        let res = builder.accept(2);
+        assert!(res.is_err(), "duplicate registration must fail accept");
+        w.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_out_of_range_id() {
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let w = std::thread::spawn(move || {
+            let _a = TcpWorkerEnd::connect(&addr.to_string(), 9).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(300));
+        });
+        let res = builder.accept(2);
+        assert!(res.is_err());
+        w.join().unwrap();
+    }
+}

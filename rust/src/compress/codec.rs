@@ -1,0 +1,203 @@
+//! Bit-level packing for sub-byte quantization levels.
+//!
+//! QSGD/linf with `s` levels need ⌈log2(2s+1)⌉ bits per element (sign +
+//! level); 8-bit mode is the paper's experimental setting. The writer packs
+//! little-endian within each byte (LSB first), the reader mirrors it.
+
+/// Append-only bit writer (LSB-first within bytes).
+///
+/// Implementation: a 64-bit accumulator drains whole bytes into the
+/// buffer — one branchless shift/or per `write` plus amortized byte
+/// stores (§Perf: ~3× over the original per-byte loop).
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    /// Bits currently buffered in `acc` (0..8 after each write drain).
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        Self { buf: Vec::with_capacity(bits.div_ceil(8)), acc: 0, nbits: 0 }
+    }
+
+    /// Write the low `n` bits of `v` (n ≤ 32).
+    #[inline]
+    pub fn write(&mut self, v: u32, n: u8) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || v < (1u32 << n), "value {v} exceeds {n} bits");
+        self.acc |= (v as u64) << self.nbits;
+        self.nbits += n as u32;
+        while self.nbits >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Total bits written.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    fn flush(&mut self) {
+        if self.nbits > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Finish and return the byte buffer (final partial byte zero-padded).
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        self.flush();
+        self.buf
+    }
+
+    /// Append the packed bits onto an existing Vec<u8>.
+    pub fn append_to(mut self, out: &mut Vec<u8>) {
+        self.flush();
+        out.extend_from_slice(&self.buf);
+    }
+}
+
+/// Bit reader matching [`BitWriter`]'s layout (accumulator-based).
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next byte index to refill from.
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    /// Read `n` bits (n ≤ 32); errors on overrun.
+    #[inline]
+    pub fn read(&mut self, n: u8) -> anyhow::Result<u32> {
+        debug_assert!(n <= 32);
+        let n = n as u32;
+        while self.nbits < n {
+            if self.pos >= self.buf.len() {
+                anyhow::bail!(
+                    "bit reader overrun: need {n} bits, have {} (+{} unread bytes)",
+                    self.nbits,
+                    self.buf.len() - self.pos
+                );
+            }
+            self.acc |= (self.buf[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let mask = if n == 32 { u32::MAX as u64 } else { (1u64 << n) - 1 };
+        let out = (self.acc & mask) as u32;
+        self.acc >>= n;
+        self.nbits -= n;
+        Ok(out)
+    }
+
+    pub fn bits_remaining(&self) -> usize {
+        (self.buf.len() - self.pos) * 8 + self.nbits as usize
+    }
+}
+
+/// Bits needed to represent values 0..=max_value.
+pub fn bits_for(max_value: u32) -> u8 {
+    if max_value == 0 {
+        1
+    } else {
+        (32 - max_value.leading_zeros()) as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn single_bits_round_trip() {
+        let mut w = BitWriter::new();
+        let pattern = [1u32, 0, 1, 1, 0, 1, 0, 0, 1, 1];
+        for &b in &pattern {
+            w.write(b, 1);
+        }
+        assert_eq!(w.bit_len(), pattern.len());
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read(1).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn mixed_widths_round_trip() {
+        let mut w = BitWriter::new();
+        w.write(5, 3);
+        w.write(255, 8);
+        w.write(0b1011, 4);
+        w.write(1, 1);
+        w.write(123_456, 17);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3).unwrap(), 5);
+        assert_eq!(r.read(8).unwrap(), 255);
+        assert_eq!(r.read(4).unwrap(), 0b1011);
+        assert_eq!(r.read(1).unwrap(), 1);
+        assert_eq!(r.read(17).unwrap(), 123_456);
+    }
+
+    #[test]
+    fn random_round_trip() {
+        let mut rng = Pcg32::new(99);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200) as usize;
+            let widths: Vec<u8> = (0..n).map(|_| 1 + rng.below(24) as u8).collect();
+            let values: Vec<u32> = widths
+                .iter()
+                .map(|&w| {
+                    let max = if w == 32 { u32::MAX } else { (1u32 << w) - 1 };
+                    rng.below(max.max(1)).min(max)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for (v, &width) in values.iter().zip(&widths) {
+                w.write(*v, width);
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for (v, &width) in values.iter().zip(&widths) {
+                assert_eq!(r.read(width).unwrap(), *v);
+            }
+        }
+    }
+
+    #[test]
+    fn overrun_is_error() {
+        let mut w = BitWriter::new();
+        w.write(3, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read(2).is_ok());
+        // The partial byte has 6 padding bits; reading past them errors.
+        assert!(r.read(7).is_err());
+    }
+
+    #[test]
+    fn bits_for_values() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 2);
+        assert_eq!(bits_for(255), 8);
+        assert_eq!(bits_for(256), 9);
+    }
+}

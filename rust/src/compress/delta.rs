@@ -1,0 +1,154 @@
+//! Empirical verification of Definition 1 (δ-approximate compressor):
+//! estimate δ̂ = 1 − E[‖Q(v)−v‖²/‖v‖²] over sampled inputs, used by the
+//! `validate-compressors` CLI command and the Theorem 1/2 property tests.
+
+use super::Compressor;
+use crate::util::rng::Pcg32;
+use crate::util::stats::norm2_sq;
+
+/// Result of an empirical δ estimation.
+#[derive(Debug, Clone)]
+pub struct DeltaEstimate {
+    /// Mean of 1 − ‖Q(v)−v‖²/‖v‖² across trials — the empirical δ.
+    pub mean_delta: f64,
+    /// Worst (smallest) per-trial δ observed.
+    pub worst_delta: f64,
+    /// Number of trials where the contraction held per-sample
+    /// (biased compressors must satisfy it on *every* sample;
+    /// unbiased ones only in expectation).
+    pub per_sample_holds: usize,
+    pub trials: usize,
+}
+
+impl DeltaEstimate {
+    /// Whether the *expected* contraction holds with any δ ∈ (0,1]
+    /// (i.e. E ratio < 1).
+    pub fn is_delta_approximate(&self) -> bool {
+        self.mean_delta > 0.0
+    }
+}
+
+/// Estimate δ for `c` over `trials` vectors of dimension `d`, drawn from
+/// `sample` (e.g. Gaussian, heavy-tailed, sparse). Each trial averages
+/// `reps` independent quantizations so stochastic compressors are judged
+/// in expectation, per Definition 1's reading for unbiased Q.
+pub fn empirical_delta(
+    c: &dyn Compressor,
+    d: usize,
+    trials: usize,
+    reps: usize,
+    rng: &mut Pcg32,
+    mut sample: impl FnMut(&mut Pcg32, usize) -> Vec<f32>,
+) -> DeltaEstimate {
+    assert!(trials > 0 && reps > 0 && d > 0);
+    let mut sum_delta = 0.0f64;
+    let mut worst = f64::INFINITY;
+    let mut holds = 0usize;
+    for _ in 0..trials {
+        let v = sample(rng, d);
+        let denom = norm2_sq(&v) as f64;
+        if denom == 0.0 {
+            // Q(0) must be 0 for the contraction to hold trivially.
+            sum_delta += 1.0;
+            worst = worst.min(1.0);
+            holds += 1;
+            continue;
+        }
+        let mut mean_ratio = 0.0f64;
+        let mut every_sample_ok = true;
+        for _ in 0..reps {
+            let q = c.compress_vec(&v, rng);
+            let err: f64 =
+                v.iter().zip(&q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            let ratio = err / denom;
+            mean_ratio += ratio;
+            if ratio > 1.0 + 1e-6 {
+                every_sample_ok = false;
+            }
+        }
+        mean_ratio /= reps as f64;
+        let delta = 1.0 - mean_ratio;
+        sum_delta += delta;
+        worst = worst.min(delta);
+        if every_sample_ok {
+            holds += 1;
+        }
+    }
+    DeltaEstimate {
+        mean_delta: sum_delta / trials as f64,
+        worst_delta: worst,
+        per_sample_holds: holds,
+        trials,
+    }
+}
+
+/// Standard Gaussian sampler for [`empirical_delta`].
+pub fn gaussian_sampler(rng: &mut Pcg32, d: usize) -> Vec<f32> {
+    rng.normal_vec(d)
+}
+
+/// Heavy-tailed sampler (Gaussian cubed) — stresses ‖·‖∞-scaled schemes.
+pub fn heavy_tail_sampler(rng: &mut Pcg32, d: usize) -> Vec<f32> {
+    (0..d)
+        .map(|_| {
+            let g = rng.normal();
+            g * g * g
+        })
+        .collect()
+}
+
+/// Sparse sampler: ~10% nonzero — stresses ‖·‖₂-scaled schemes.
+pub fn sparse_sampler(rng: &mut Pcg32, d: usize) -> Vec<f32> {
+    (0..d)
+        .map(|_| if rng.uniform() < 0.1 { rng.normal() } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, LinfStochastic, Qsgd, SignScale, TopK};
+
+    #[test]
+    fn identity_has_delta_one() {
+        let mut rng = Pcg32::new(1);
+        let est = empirical_delta(&Identity, 64, 20, 1, &mut rng, gaussian_sampler);
+        assert!((est.mean_delta - 1.0).abs() < 1e-9);
+        assert_eq!(est.per_sample_holds, 20);
+    }
+
+    #[test]
+    fn topk_matches_theorem1() {
+        // δ̂ ≥ k/d always, and per-sample contraction holds (biased, exact).
+        let c = TopK::new(0.25);
+        let mut rng = Pcg32::new(2);
+        let d = 200;
+        let est = empirical_delta(&c, d, 50, 1, &mut rng, gaussian_sampler);
+        let guaranteed = c.delta(d).unwrap();
+        assert!(est.worst_delta >= guaranteed - 1e-6, "{} < {}", est.worst_delta, guaranteed);
+        assert_eq!(est.per_sample_holds, 50);
+    }
+
+    #[test]
+    fn qsgd_and_linf_are_delta_approximate_in_expectation() {
+        let mut rng = Pcg32::new(3);
+        for c in [&Qsgd::with_bits(8) as &dyn Compressor, &LinfStochastic::with_bits(8)] {
+            let est = empirical_delta(c, 512, 10, 20, &mut rng, gaussian_sampler);
+            assert!(est.is_delta_approximate(), "{}: {est:?}", c.name());
+            // At 8 bits both should be close to lossless on Gaussians.
+            assert!(est.mean_delta > 0.9, "{}: {est:?}", c.name());
+        }
+    }
+
+    #[test]
+    fn sign_worst_case_is_one_over_d() {
+        // One-hot vector achieves δ = 1/d exactly.
+        let d = 16;
+        let mut v = vec![0.0f32; d];
+        v[3] = 2.0;
+        let q = SignScale.compress_vec(&v, &mut Pcg32::new(4));
+        let err: f64 = v.iter().zip(&q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let ratio = err / (4.0);
+        assert!((ratio - (1.0 - 1.0 / d as f64)).abs() < 1e-5, "ratio={ratio}");
+    }
+}

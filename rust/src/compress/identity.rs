@@ -1,0 +1,64 @@
+//! The identity "compressor" (δ = 1): transmits raw f32. This is what the
+//! CPOAdam baseline ships over the wire; having it behind the same trait
+//! keeps the transport byte accounting uniform.
+
+use super::Compressor;
+use crate::util::bytes::{put_f32_slice, Reader};
+use crate::util::rng::Pcg32;
+
+/// No-op compressor: `Q(v) = v`, wire = 4·d bytes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".to_string()
+    }
+
+    fn compress(&self, v: &[f32], out: &mut [f32], _rng: &mut Pcg32) {
+        out.copy_from_slice(v);
+    }
+
+    fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>) {
+        put_f32_slice(buf, quantized);
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut r = Reader::new(bytes);
+        Ok(r.f32_vec(d)?)
+    }
+
+    fn delta(&self, _d: usize) -> Option<f64> {
+        Some(1.0)
+    }
+
+    fn encoded_size(&self, d: usize) -> usize {
+        4 * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_exact() {
+        let v = [1.5f32, -2.25, 0.0, 1e-7];
+        let mut out = [0.0; 4];
+        let mut rng = Pcg32::new(1);
+        Identity.compress(&v, &mut out, &mut rng);
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn encode_round_trips_bit_exact() {
+        let v = [f32::MIN_POSITIVE, -0.0, 3.14159, -1e30];
+        let mut buf = Vec::new();
+        Identity.encode(&v, &mut buf);
+        assert_eq!(buf.len(), Identity.encoded_size(v.len()));
+        let back = Identity.decode(&buf, v.len()).unwrap();
+        for (a, b) in v.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

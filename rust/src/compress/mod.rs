@@ -1,0 +1,121 @@
+//! Gradient compression: δ-approximate compressors (paper Definition 1),
+//! their wire codecs, and verification tooling for Theorems 1–2.
+//!
+//! **Definition 1** (δ-approximate compressor): `Q` with δ ∈ (0,1] such that
+//! `‖Q(v) − v‖² ≤ (1−δ)‖v‖²` for all `v` (in expectation for stochastic Q).
+//!
+//! Implemented compressors:
+//!
+//! | name        | type      | δ                         | paper ref |
+//! |-------------|-----------|---------------------------|-----------|
+//! | identity    | exact     | 1                          | —         |
+//! | top-k       | biased    | k/d (Theorem 1)            | [41]      |
+//! | qsgd        | unbiased  | Theorem 2 (‖·‖₂ scale)     | [1]       |
+//! | linf (Hou)  | unbiased  | Theorem 2 (‖·‖∞ scale)     | [12]      |
+//! | sign+scale  | biased    | ‖v‖₁²/(d‖v‖₂²)             | [3,14]    |
+//! | terngrad    | unbiased  | **not δ-approximate**¹     | [48]      |
+//!
+//! ¹ TernGrad is unbiased but its error E‖Q(v)−v‖² = Σ|v_i|(‖v‖∞−|v_i|)
+//! exceeds ‖v‖² on typical dense vectors, so Definition 1 fails (verified
+//! by `prop_terngrad_is_not_delta_approximate`). It ships as a comparison
+//! codec; DQGAN's convergence guarantee requires one of the others.
+//!
+//! Every compressor also implements a byte-exact [`encode`](Compressor::encode)
+//! so the transport layer can account *real* wire bytes — the quantity
+//! driving the paper's Figure 4 speedup.
+
+mod codec;
+mod delta;
+mod identity;
+mod linf;
+mod qsgd;
+mod registry;
+mod sign;
+mod terngrad;
+mod topk;
+
+pub use codec::{BitReader, BitWriter};
+pub use delta::{
+    empirical_delta, gaussian_sampler, heavy_tail_sampler, sparse_sampler, DeltaEstimate,
+};
+pub use identity::Identity;
+pub use linf::LinfStochastic;
+pub use qsgd::Qsgd;
+pub use registry::{compressor_from_spec, CompressorSpec};
+pub use sign::SignScale;
+pub use terngrad::TernGrad;
+pub use topk::TopK;
+
+use crate::util::rng::Pcg32;
+
+/// A δ-approximate gradient compressor with a byte-exact wire format.
+///
+/// Contract:
+/// - [`compress`](Self::compress) maps `v ∈ R^d` to its quantized form
+///   `Q(v) ∈ R^d` (dense f32, same length). Stochastic compressors draw
+///   from the supplied RNG — determinism given the RNG state is required
+///   (tests and the replay tooling rely on it).
+/// - [`encode`](Self::encode) produces the wire bytes for `Q(v)` such that
+///   [`decode`](Self::decode) reconstructs `Q(v)` exactly (bit-exact f32).
+/// - [`delta`](Self::delta) returns the *guaranteed* δ for dimension `d`
+///   (`None` if input-dependent; use [`empirical_delta`] then).
+pub trait Compressor: Send + Sync {
+    /// Short identifier, e.g. `"qsgd(s=255)"`.
+    fn name(&self) -> String;
+
+    /// Quantize `v` into `out` (same length). Stochastic methods use `rng`.
+    fn compress(&self, v: &[f32], out: &mut [f32], rng: &mut Pcg32);
+
+    /// Serialize the *quantized* vector (as produced by `compress`) into
+    /// wire bytes. Implementations must round-trip via `decode`.
+    fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>);
+
+    /// Inverse of `encode`. `d` is the vector dimension.
+    fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>>;
+
+    /// Guaranteed compression quality δ ∈ (0,1] for dimension `d`, when
+    /// known in closed form.
+    fn delta(&self, d: usize) -> Option<f64>;
+
+    /// Exact wire size in bytes for a vector of dimension `d`.
+    fn encoded_size(&self, d: usize) -> usize;
+
+    /// Convenience: compress into a fresh Vec.
+    fn compress_vec(&self, v: &[f32], rng: &mut Pcg32) -> Vec<f32> {
+        let mut out = vec![0.0; v.len()];
+        self.compress(v, &mut out, rng);
+        out
+    }
+
+    /// Fused quantize + encode — the hot-path entry point used by the
+    /// error-feedback state. The returned dense `Q(v)` and the wire bytes
+    /// are guaranteed mutually consistent: `decode(bytes, d)` reproduces
+    /// the dense vector **bit-exactly**, so worker-local error
+    /// `e = p − Q(p)` and the server's decoded `Q(p)` never diverge.
+    ///
+    /// The default composes `compress` + `encode`; scale-based compressors
+    /// override it to avoid re-deriving their scale from the dense output.
+    fn compress_encoded(&self, v: &[f32], rng: &mut Pcg32, buf: &mut Vec<u8>) -> Vec<f32> {
+        let q = self.compress_vec(v, rng);
+        self.encode(&q, buf);
+        q
+    }
+}
+
+/// Compression ratio vs raw f32 (4·d bytes).
+pub fn compression_ratio(c: &dyn Compressor, d: usize) -> f64 {
+    (4 * d) as f64 / c.encoded_size(d) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_of_identity_is_about_one() {
+        let c = Identity;
+        let r = compression_ratio(&c, 1024);
+        assert!(r <= 1.0 + 1e-6, "r={r}");
+        assert!(r > 0.9, "r={r}");
+    }
+}

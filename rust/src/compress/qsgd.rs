@@ -1,0 +1,302 @@
+//! QSGD (Alistarh et al. [1]): unbiased stochastic quantization onto a
+//! uniform grid of `s` levels scaled by ‖v‖₂ (paper eq. 19–20).
+//!
+//!   Q(v_i) = sign(v_i) · ‖v‖₂ · ξ_i(v, s),
+//!   ξ_i = l/s w.p. 1 − (|v_i|/‖v‖₂·s − l), else (l+1)/s.
+//!
+//! E[Q(v)] = v; the classical variance bound gives
+//! E‖Q(v)−v‖² ≤ min(d/s², √d/s)·‖v‖², so QSGD is a δ-approximate
+//! compressor with δ = 1 − min(d/s², √d/s) whenever that is positive
+//! (the paper's Theorem 2 asserts existence of such δ in general; for
+//! small s and large d use [`super::empirical_delta`]).
+//!
+//! Wire format: `[norm:f32]` then per element `1 sign bit + ⌈log2(s+1)⌉
+//! level bits`, bit-packed. For s = 255 that is 9 bits/element — a 3.6×
+//! reduction vs f32. The dense quantized values are *reconstructed from
+//! the integer levels*, so `compress`/`compress_encoded`/`decode` agree
+//! bit-exactly (required by the error-feedback state).
+
+use super::codec::{bits_for, BitReader, BitWriter};
+use super::Compressor;
+use crate::util::bytes::{put_f32, Reader};
+use crate::util::rng::Pcg32;
+use crate::util::stats::norm2;
+
+/// QSGD with `s` quantization levels.
+#[derive(Debug, Clone, Copy)]
+pub struct Qsgd {
+    pub levels: u32,
+}
+
+impl Qsgd {
+    pub fn new(levels: u32) -> Self {
+        assert!(levels >= 1, "need at least one level");
+        Self { levels }
+    }
+
+    /// The s for an m-bit budget (sign + m−1 level bits): s = 2^(m−1) − 1.
+    pub fn with_bits(bits: u8) -> Self {
+        assert!((2..=16).contains(&bits), "bits must be in 2..=16");
+        Self::new((1u32 << (bits - 1)) - 1)
+    }
+
+    fn level_bits(&self) -> u8 {
+        bits_for(self.levels)
+    }
+
+    /// Stochastically round each element to an integer level in 0..=s.
+    /// Returns (norm, signed level per element).
+    fn quantize_levels(&self, v: &[f32], rng: &mut Pcg32) -> (f32, Vec<i32>) {
+        let norm = norm2(v);
+        if norm == 0.0 {
+            return (0.0, vec![0; v.len()]);
+        }
+        let s = self.levels as f32;
+        let levels = v
+            .iter()
+            .map(|&x| {
+                let u = (x.abs() / norm).min(1.0) * s;
+                let l = u.floor();
+                let p = u - l;
+                let level = if rng.uniform() < p { l + 1.0 } else { l } as i32;
+                if x < 0.0 {
+                    -level
+                } else {
+                    level
+                }
+            })
+            .collect();
+        (norm, levels)
+    }
+
+    /// Dense reconstruction from (norm, levels) — shared by every path so
+    /// the f32 values are identical everywhere.
+    fn reconstruct(&self, norm: f32, levels: &[i32], out: &mut [f32]) {
+        let s = self.levels as f32;
+        for (o, &l) in out.iter_mut().zip(levels) {
+            *o = norm * (l as f32 / s);
+        }
+    }
+
+    fn encode_levels(&self, norm: f32, levels: &[i32], buf: &mut Vec<u8>) {
+        put_f32(buf, norm);
+        if norm == 0.0 {
+            return;
+        }
+        let lb = self.level_bits();
+        let mut w = BitWriter::with_capacity_bits(levels.len() * (1 + lb as usize));
+        for &l in levels {
+            w.write(u32::from(l < 0), 1);
+            w.write(l.unsigned_abs().min(self.levels), lb);
+        }
+        w.append_to(buf);
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd(s={})", self.levels)
+    }
+
+    fn compress(&self, v: &[f32], out: &mut [f32], rng: &mut Pcg32) {
+        assert_eq!(v.len(), out.len());
+        let (norm, levels) = self.quantize_levels(v, rng);
+        self.reconstruct(norm, &levels, out);
+    }
+
+    fn compress_encoded(&self, v: &[f32], rng: &mut Pcg32, buf: &mut Vec<u8>) -> Vec<f32> {
+        let (norm, levels) = self.quantize_levels(v, rng);
+        self.encode_levels(norm, &levels, buf);
+        let mut out = vec![0.0; v.len()];
+        self.reconstruct(norm, &levels, &mut out);
+        out
+    }
+
+    fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>) {
+        // Recover (norm, level) from dense grid values: every nonzero is
+        // ±norm·k/s with integer k, so norm = s · gcd-like smallest grid
+        // step. The smallest positive |q| is norm·k_min/s; dividing all
+        // magnitudes by it yields integers/k_min. We find the step as the
+        // positive minimum and refine by checking grid consistency against
+        // the implied level of the max element.
+        let s = self.levels as f32;
+        let mut max_abs = 0.0f32;
+        for &q in quantized {
+            max_abs = max_abs.max(q.abs());
+        }
+        if max_abs == 0.0 {
+            self.encode_levels(0.0, &vec![0; quantized.len()], buf);
+            return;
+        }
+        // The max element sits at some level L ∈ 1..=s: norm = max_abs·s/L.
+        // Accept the largest L whose implied grid fits all elements.
+        let mut best: Option<(f32, Vec<i32>)> = None;
+        'cand: for l_max in (1..=self.levels).rev() {
+            let norm = max_abs * s / l_max as f32;
+            let mut levels = Vec::with_capacity(quantized.len());
+            for &q in quantized {
+                let u = q.abs() / norm * s;
+                let j = u.round();
+                if (u - j).abs() > 1e-3 * (j.max(1.0)) || j > s {
+                    continue 'cand;
+                }
+                levels.push(if q < 0.0 { -(j as i32) } else { j as i32 });
+            }
+            best = Some((norm, levels));
+            break;
+        }
+        let (norm, levels) = best.unwrap_or_else(|| {
+            // Not on any grid (caller passed a non-compress output):
+            // round onto the max_abs grid as a fallback.
+            let norm = max_abs;
+            let levels = quantized
+                .iter()
+                .map(|&q| {
+                    let j = (q.abs() / norm * s).round().min(s) as i32;
+                    if q < 0.0 {
+                        -j
+                    } else {
+                        j
+                    }
+                })
+                .collect();
+            (norm, levels)
+        });
+        self.encode_levels(norm, &levels, buf);
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut r = Reader::new(bytes);
+        let norm = r.f32()?;
+        if norm == 0.0 {
+            return Ok(vec![0.0; d]);
+        }
+        let rest = r.bytes(bytes.len() - 4)?;
+        let mut br = BitReader::new(rest);
+        let lb = self.level_bits();
+        let mut levels = Vec::with_capacity(d);
+        for _ in 0..d {
+            let sign = br.read(1)?;
+            let level = br.read(lb)? as i32;
+            levels.push(if sign == 1 { -level } else { level });
+        }
+        let mut out = vec![0.0; d];
+        self.reconstruct(norm, &levels, &mut out);
+        Ok(out)
+    }
+
+    fn delta(&self, d: usize) -> Option<f64> {
+        let s = self.levels as f64;
+        let d = d as f64;
+        let var = (d / (s * s)).min(d.sqrt() / s);
+        if var < 1.0 {
+            Some(1.0 - var)
+        } else {
+            None // Theorem 2 asserts existence; measure empirically.
+        }
+    }
+
+    fn encoded_size(&self, d: usize) -> usize {
+        4 + (d * (1 + self.level_bits() as usize)).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_vector_stays_zero() {
+        let c = Qsgd::with_bits(8);
+        let q = c.compress_vec(&[0.0; 16], &mut Pcg32::new(1));
+        assert!(q.iter().all(|&x| x == 0.0));
+        let mut buf = Vec::new();
+        let q2 = c.compress_encoded(&[0.0; 16], &mut Pcg32::new(1), &mut buf);
+        assert_eq!(q2, vec![0.0; 16]);
+        assert_eq!(c.decode(&buf, 16).unwrap(), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn unbiasedness() {
+        // E[Q(v)] = v: average many independent quantizations.
+        let c = Qsgd::new(4); // coarse grid to stress the stochastic part
+        let v = [0.3f32, -0.7, 0.05, 0.9];
+        let mut rng = Pcg32::new(5);
+        let trials = 20_000;
+        let mut acc = [0.0f64; 4];
+        for _ in 0..trials {
+            let q = c.compress_vec(&v, &mut rng);
+            for i in 0..4 {
+                acc[i] += q[i] as f64;
+            }
+        }
+        for i in 0..4 {
+            let mean = acc[i] / trials as f64;
+            assert!(
+                (mean - v[i] as f64).abs() < 0.02,
+                "i={i} mean={mean} want={}",
+                v[i]
+            );
+        }
+    }
+
+    #[test]
+    fn outputs_lie_on_grid() {
+        let c = Qsgd::new(8);
+        let mut rng = Pcg32::new(9);
+        let v: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let q = c.compress_vec(&v, &mut rng);
+        let norm = norm2(&v);
+        for &x in &q {
+            let u = x.abs() / norm * 8.0;
+            assert!((u - u.round()).abs() < 1e-4, "off grid: {x}");
+        }
+    }
+
+    #[test]
+    fn fused_path_round_trips_bit_exact() {
+        let c = Qsgd::with_bits(8);
+        let mut rng = Pcg32::new(11);
+        for _ in 0..20 {
+            let d = 1 + rng.below(500) as usize;
+            let v: Vec<f32> = (0..d).map(|_| rng.normal() * 3.0).collect();
+            let mut buf = Vec::new();
+            let q = c.compress_encoded(&v, &mut rng, &mut buf);
+            assert_eq!(buf.len(), c.encoded_size(d));
+            let back = c.decode(&buf, d).unwrap();
+            for (a, b) in q.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bit mismatch {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_encode_round_trips_compress_output() {
+        let c = Qsgd::with_bits(6);
+        let mut rng = Pcg32::new(13);
+        let v: Vec<f32> = (0..100).map(|_| rng.normal()).collect();
+        let q = c.compress_vec(&v, &mut rng);
+        let mut buf = Vec::new();
+        c.encode(&q, &mut buf);
+        let back = c.decode(&buf, q.len()).unwrap();
+        for (a, b) in q.iter().zip(&back) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1e-3), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn eight_bit_is_about_3_6x_smaller_than_f32() {
+        let c = Qsgd::with_bits(8);
+        let raw = 4 * 100_000;
+        let enc = c.encoded_size(100_000);
+        let ratio = raw as f64 / enc as f64;
+        assert!(ratio > 3.4 && ratio < 4.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn delta_closed_form_when_s_large() {
+        let c = Qsgd::new(1000);
+        let delta = c.delta(100).unwrap();
+        assert!(delta > 0.98, "delta={delta}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Config-string → compressor factory, e.g. `"linf8"`, `"qsgd(s=63)"`,
+//! `"topk(f=0.1)"`, `"identity"`. Used by the CLI and the config system so
+//! every experiment can select its compressor from a flag.
+
+use super::{Compressor, Identity, LinfStochastic, Qsgd, SignScale, TernGrad, TopK};
+
+/// Parsed compressor specification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressorSpec {
+    Identity,
+    TopK { fraction: f64 },
+    Qsgd { levels: u32 },
+    Linf { levels: u32, block: Option<usize> },
+    Sign,
+    TernGrad,
+}
+
+impl CompressorSpec {
+    /// Parse `"name"` or `"name(arg=val,...)"`; also accepts the
+    /// shorthands `qsgd8` / `linf8` (m-bit budget).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        let (name, args) = match s.find('(') {
+            Some(i) => {
+                let name = &s[..i];
+                let rest = s[i + 1..]
+                    .strip_suffix(')')
+                    .ok_or_else(|| anyhow::anyhow!("missing ')' in compressor spec '{s}'"))?;
+                (name, Some(rest))
+            }
+            None => (s, None),
+        };
+        let kv = |args: Option<&str>| -> anyhow::Result<Vec<(String, String)>> {
+            let mut out = Vec::new();
+            if let Some(a) = args {
+                for part in a.split(',').filter(|p| !p.trim().is_empty()) {
+                    let (k, v) = part
+                        .split_once('=')
+                        .ok_or_else(|| anyhow::anyhow!("bad arg '{part}' in '{s}'"))?;
+                    out.push((k.trim().to_string(), v.trim().to_string()));
+                }
+            }
+            Ok(out)
+        };
+        // m-bit shorthands.
+        if let Some(bits) = name.strip_prefix("qsgd").and_then(|b| b.parse::<u8>().ok()) {
+            return Ok(Self::Qsgd { levels: (1u32 << (bits - 1)) - 1 });
+        }
+        if let Some(bits) = name.strip_prefix("linf").and_then(|b| b.parse::<u8>().ok()) {
+            return Ok(Self::Linf { levels: (1u32 << (bits - 1)) - 1, block: None });
+        }
+        match name {
+            "identity" | "none" | "fp32" => Ok(Self::Identity),
+            "sign" => Ok(Self::Sign),
+            "terngrad" | "tern" => Ok(Self::TernGrad),
+            "topk" => {
+                let mut fraction = 0.1f64;
+                for (k, v) in kv(args)? {
+                    match k.as_str() {
+                        "f" | "fraction" => fraction = v.parse()?,
+                        "k" => anyhow::bail!("topk takes a fraction 'f=', not absolute 'k='"),
+                        _ => anyhow::bail!("unknown topk arg '{k}'"),
+                    }
+                }
+                Ok(Self::TopK { fraction })
+            }
+            "qsgd" => {
+                let mut levels = 127u32;
+                for (k, v) in kv(args)? {
+                    match k.as_str() {
+                        "s" | "levels" => levels = v.parse()?,
+                        "bits" => levels = (1u32 << (v.parse::<u8>()? - 1)) - 1,
+                        _ => anyhow::bail!("unknown qsgd arg '{k}'"),
+                    }
+                }
+                Ok(Self::Qsgd { levels })
+            }
+            "linf" | "hou" => {
+                let mut levels = 127u32;
+                let mut block = None;
+                for (k, v) in kv(args)? {
+                    match k.as_str() {
+                        "s" | "levels" => levels = v.parse()?,
+                        "bits" => levels = (1u32 << (v.parse::<u8>()? - 1)) - 1,
+                        "block" => block = Some(v.parse()?),
+                        _ => anyhow::bail!("unknown linf arg '{k}'"),
+                    }
+                }
+                Ok(Self::Linf { levels, block })
+            }
+            other => anyhow::bail!(
+                "unknown compressor '{other}' (expected identity|topk|qsgd|linf|sign|terngrad)"
+            ),
+        }
+    }
+
+    /// Instantiate the compressor.
+    pub fn build(&self) -> Box<dyn Compressor> {
+        match *self {
+            Self::Identity => Box::new(Identity),
+            Self::TopK { fraction } => Box::new(TopK::new(fraction)),
+            Self::Qsgd { levels } => Box::new(Qsgd::new(levels)),
+            Self::Linf { levels, block } => {
+                let c = LinfStochastic::new(levels);
+                Box::new(match block {
+                    Some(b) => c.with_block(b),
+                    None => c,
+                })
+            }
+            Self::Sign => Box::new(SignScale),
+            Self::TernGrad => Box::new(TernGrad),
+        }
+    }
+}
+
+/// One-shot: parse + build.
+pub fn compressor_from_spec(s: &str) -> anyhow::Result<Box<dyn Compressor>> {
+    Ok(CompressorSpec::parse(s)?.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_shorthands() {
+        assert_eq!(CompressorSpec::parse("linf8").unwrap(), CompressorSpec::Linf {
+            levels: 127,
+            block: None
+        });
+        assert_eq!(CompressorSpec::parse("qsgd4").unwrap(), CompressorSpec::Qsgd { levels: 7 });
+        assert_eq!(CompressorSpec::parse("identity").unwrap(), CompressorSpec::Identity);
+        assert_eq!(CompressorSpec::parse("fp32").unwrap(), CompressorSpec::Identity);
+    }
+
+    #[test]
+    fn parses_args() {
+        assert_eq!(
+            CompressorSpec::parse("topk(f=0.05)").unwrap(),
+            CompressorSpec::TopK { fraction: 0.05 }
+        );
+        assert_eq!(
+            CompressorSpec::parse("linf(bits=8, block=128)").unwrap(),
+            CompressorSpec::Linf { levels: 127, block: Some(128) }
+        );
+        assert_eq!(
+            CompressorSpec::parse("qsgd(s=63)").unwrap(),
+            CompressorSpec::Qsgd { levels: 63 }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(CompressorSpec::parse("bogus").is_err());
+        assert!(CompressorSpec::parse("topk(k=5)").is_err());
+        assert!(CompressorSpec::parse("linf(bits=8").is_err());
+        assert!(CompressorSpec::parse("qsgd(wat=1)").is_err());
+    }
+
+    #[test]
+    fn builds_working_compressors() {
+        for s in ["identity", "topk(f=0.2)", "qsgd8", "linf8", "sign", "terngrad"] {
+            let c = compressor_from_spec(s).unwrap();
+            let v = [1.0f32, -2.0, 3.0, -4.0];
+            let mut rng = crate::util::rng::Pcg32::new(5);
+            let mut buf = Vec::new();
+            let q = c.compress_encoded(&v, &mut rng, &mut buf);
+            assert_eq!(q.len(), 4, "{s}");
+            assert_eq!(buf.len(), c.encoded_size(4), "{s}");
+            let back = c.decode(&buf, 4).unwrap();
+            assert_eq!(q, back, "{s}");
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! TernGrad (Wen et al. [48]): unbiased stochastic ternarization,
+//!
+//!   Q(v_i) = ‖v‖∞ · sign(v_i) · b_i,   b_i ~ Bernoulli(|v_i| / ‖v‖∞).
+//!
+//! E[Q(v)] = v. Wire: `[scale:f32]` + 2 bits/element (00 zero, 01 +, 10 −)
+//! — a 16× reduction vs f32.
+
+use super::codec::{BitReader, BitWriter};
+use super::Compressor;
+use crate::util::bytes::{put_f32, Reader};
+use crate::util::rng::Pcg32;
+
+/// Stochastic ternary quantizer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TernGrad;
+
+impl TernGrad {
+    /// Ternary symbols for each element: -1, 0, +1 (and the scale).
+    fn ternarize(&self, v: &[f32], rng: &mut Pcg32) -> (f32, Vec<i8>) {
+        let scale = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        if scale == 0.0 {
+            return (0.0, vec![0; v.len()]);
+        }
+        let syms = v
+            .iter()
+            .map(|&x| {
+                let p = x.abs() / scale;
+                if rng.uniform() < p {
+                    if x < 0.0 {
+                        -1
+                    } else {
+                        1
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect();
+        (scale, syms)
+    }
+
+    fn reconstruct(scale: f32, syms: &[i8], out: &mut [f32]) {
+        for (o, &s) in out.iter_mut().zip(syms) {
+            *o = scale * s as f32;
+        }
+    }
+
+    fn encode_syms(scale: f32, syms: &[i8], buf: &mut Vec<u8>) {
+        put_f32(buf, scale);
+        let mut w = BitWriter::with_capacity_bits(syms.len() * 2);
+        for &s in syms {
+            let code: u32 = match s {
+                0 => 0b00,
+                1 => 0b01,
+                _ => 0b10,
+            };
+            w.write(code, 2);
+        }
+        w.append_to(buf);
+    }
+}
+
+impl Compressor for TernGrad {
+    fn name(&self) -> String {
+        "terngrad".to_string()
+    }
+
+    fn compress(&self, v: &[f32], out: &mut [f32], rng: &mut Pcg32) {
+        assert_eq!(v.len(), out.len());
+        let (scale, syms) = self.ternarize(v, rng);
+        Self::reconstruct(scale, &syms, out);
+    }
+
+    fn compress_encoded(&self, v: &[f32], rng: &mut Pcg32, buf: &mut Vec<u8>) -> Vec<f32> {
+        let (scale, syms) = self.ternarize(v, rng);
+        Self::encode_syms(scale, &syms, buf);
+        let mut out = vec![0.0; v.len()];
+        Self::reconstruct(scale, &syms, &mut out);
+        out
+    }
+
+    fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>) {
+        let scale = quantized.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let syms: Vec<i8> = quantized
+            .iter()
+            .map(|&q| {
+                if q == 0.0 {
+                    0
+                } else if q < 0.0 {
+                    -1
+                } else {
+                    1
+                }
+            })
+            .collect();
+        Self::encode_syms(scale, &syms, buf);
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut r = Reader::new(bytes);
+        let scale = r.f32()?;
+        let rest = r.bytes(bytes.len() - 4)?;
+        let mut br = BitReader::new(rest);
+        let mut out = Vec::with_capacity(d);
+        for _ in 0..d {
+            let code = br.read(2)?;
+            out.push(match code {
+                0b00 => 0.0,
+                0b01 => scale,
+                0b10 => -scale,
+                other => anyhow::bail!("terngrad decode: bad symbol {other:#b}"),
+            });
+        }
+        Ok(out)
+    }
+
+    fn delta(&self, _d: usize) -> Option<f64> {
+        // Input-dependent (E‖Q−v‖² = Σ|v_i|(‖v‖∞−|v_i|) relative to ‖v‖²);
+        // no uniform closed form — use empirical_delta.
+        None
+    }
+
+    fn encoded_size(&self, d: usize) -> usize {
+        4 + (2 * d).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiasedness() {
+        let v = [0.5f32, -0.25, 1.0, 0.1];
+        let mut rng = Pcg32::new(41);
+        let trials = 40_000;
+        let mut acc = [0.0f64; 4];
+        for _ in 0..trials {
+            let q = TernGrad.compress_vec(&v, &mut rng);
+            for i in 0..4 {
+                acc[i] += q[i] as f64;
+            }
+        }
+        for i in 0..4 {
+            let mean = acc[i] / trials as f64;
+            assert!((mean - v[i] as f64).abs() < 0.02, "i={i} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn outputs_are_ternary() {
+        let mut rng = Pcg32::new(43);
+        let v: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+        let scale = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let q = TernGrad.compress_vec(&v, &mut rng);
+        for &x in &q {
+            assert!(x == 0.0 || x == scale || x == -scale, "not ternary: {x}");
+        }
+    }
+
+    #[test]
+    fn fused_round_trip_bit_exact() {
+        let mut rng = Pcg32::new(47);
+        for _ in 0..10 {
+            let d = 1 + rng.below(300) as usize;
+            let v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let mut buf = Vec::new();
+            let q = TernGrad.compress_encoded(&v, &mut rng, &mut buf);
+            assert_eq!(buf.len(), TernGrad.encoded_size(d));
+            let back = TernGrad.decode(&buf, d).unwrap();
+            for (a, b) in q.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn wire_is_16x_smaller() {
+        let d = 1_000_000;
+        let ratio = (4 * d) as f64 / TernGrad.encoded_size(d) as f64;
+        assert!(ratio > 15.0, "ratio={ratio}");
+    }
+}

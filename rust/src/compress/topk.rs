@@ -1,0 +1,168 @@
+//! Top-k sparsification (Stich et al. [41]): keep the k largest-magnitude
+//! entries, zero the rest. **Theorem 1**: this is a δ-approximate
+//! compressor with δ = k/d.
+//!
+//! Wire format: `[k:u32][indices:u32×k][values:f32×k]` — 8 bytes per kept
+//! element (index compression is possible but the paper doesn't assume it).
+
+use super::Compressor;
+use crate::util::bytes::{put_f32, put_u32, Reader};
+use crate::util::rng::Pcg32;
+
+/// Top-k by a fixed fraction of the dimension (so the same spec works for
+/// any model size), with an absolute floor of 1 element.
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    /// Fraction of entries kept, in (0, 1].
+    pub fraction: f64,
+}
+
+impl TopK {
+    pub fn new(fraction: f64) -> Self {
+        assert!(fraction > 0.0 && fraction <= 1.0, "fraction must be in (0,1]");
+        Self { fraction }
+    }
+
+    /// k for dimension d (≥ 1, ≤ d).
+    pub fn k(&self, d: usize) -> usize {
+        ((self.fraction * d as f64).round() as usize).clamp(1, d.max(1))
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("topk(f={})", self.fraction)
+    }
+
+    fn compress(&self, v: &[f32], out: &mut [f32], _rng: &mut Pcg32) {
+        assert_eq!(v.len(), out.len());
+        let d = v.len();
+        if d == 0 {
+            return;
+        }
+        let k = self.k(d);
+        // Partial select: indices of the k largest |v_i|.
+        let mut idx: Vec<u32> = (0..d as u32).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            v[b as usize]
+                .abs()
+                .partial_cmp(&v[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out.fill(0.0);
+        for &i in &idx[..k] {
+            out[i as usize] = v[i as usize];
+        }
+    }
+
+    fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>) {
+        // Collect the non-zeros (exactly the kept entries).
+        let nz: Vec<(u32, f32)> = quantized
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(i, &x)| (i as u32, x))
+            .collect();
+        put_u32(buf, nz.len() as u32);
+        for &(i, _) in &nz {
+            put_u32(buf, i);
+        }
+        for &(_, x) in &nz {
+            put_f32(buf, x);
+        }
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut r = Reader::new(bytes);
+        let k = r.u32()? as usize;
+        if k > d {
+            anyhow::bail!("topk decode: k={k} exceeds d={d}");
+        }
+        let mut idx = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = r.u32()? as usize;
+            if i >= d {
+                anyhow::bail!("topk decode: index {i} out of bounds d={d}");
+            }
+            idx.push(i);
+        }
+        let mut out = vec![0.0f32; d];
+        for i in idx {
+            out[i] = r.f32()?;
+        }
+        Ok(out)
+    }
+
+    fn delta(&self, d: usize) -> Option<f64> {
+        // Theorem 1: δ = k/d.
+        Some(self.k(d) as f64 / d.max(1) as f64)
+    }
+
+    fn encoded_size(&self, d: usize) -> usize {
+        4 + 8 * self.k(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::norm2_sq;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let v = [0.1f32, -5.0, 0.2, 3.0, -0.05];
+        let c = TopK::new(0.4); // k = 2 of 5
+        let mut out = [0.0; 5];
+        c.compress(&v, &mut out, &mut Pcg32::new(1));
+        assert_eq!(out, [0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn theorem1_delta_holds_deterministically() {
+        // ‖Q(v)−v‖² ≤ (1−k/d)‖v‖² — for top-k this holds per-vector.
+        let mut rng = Pcg32::new(7);
+        let c = TopK::new(0.25);
+        for _ in 0..100 {
+            let d = 1 + rng.below(300) as usize;
+            let v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let q = c.compress_vec(&v, &mut rng);
+            let err: f32 = v.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+            let bound = (1.0 - c.delta(d).unwrap() as f32) * norm2_sq(&v);
+            assert!(err <= bound + 1e-5, "err={err} bound={bound} d={d}");
+        }
+    }
+
+    #[test]
+    fn encode_round_trips() {
+        let v = [0.0f32, -5.0, 0.0, 3.0, 0.0];
+        let c = TopK::new(0.4);
+        let mut buf = Vec::new();
+        c.encode(&v, &mut buf);
+        let back = c.decode(&buf, 5).unwrap();
+        assert_eq!(back, v.to_vec());
+    }
+
+    #[test]
+    fn wire_is_smaller_than_raw_for_sparse_fraction() {
+        let c = TopK::new(0.1);
+        assert!(c.encoded_size(10_000) < 4 * 10_000);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt() {
+        let c = TopK::new(0.5);
+        // k larger than d
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 100);
+        assert!(c.decode(&buf, 4).is_err());
+    }
+
+    #[test]
+    fn full_fraction_is_lossless() {
+        let v = [1.0f32, -2.0, 3.0];
+        let c = TopK::new(1.0);
+        let q = c.compress_vec(&v, &mut Pcg32::new(3));
+        assert_eq!(q, v.to_vec());
+        assert_eq!(c.delta(3), Some(1.0));
+    }
+}

@@ -1,0 +1,2 @@
+//! Typed run configuration (reserved for the TOML config file support; the CLI currently drives ClusterConfig directly).
+

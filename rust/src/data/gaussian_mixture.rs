@@ -1,0 +1,120 @@
+//! Ring-of-K 2-D Gaussian mixture — the classic GAN mode-coverage toy.
+
+use crate::util::rng::Pcg32;
+
+/// K Gaussians evenly spaced on a circle.
+#[derive(Debug, Clone)]
+pub struct GaussianMixture2D {
+    pub modes: Vec<[f32; 2]>,
+    pub std: f32,
+}
+
+impl GaussianMixture2D {
+    /// K modes on a circle of the given radius.
+    pub fn ring(k: usize, radius: f32, std: f32) -> Self {
+        assert!(k > 0);
+        let modes = (0..k)
+            .map(|i| {
+                let ang = 2.0 * std::f32::consts::PI * i as f32 / k as f32;
+                [radius * ang.cos(), radius * ang.sin()]
+            })
+            .collect();
+        Self { modes, std }
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Pcg32) -> [f32; 2] {
+        let m = &self.modes[rng.below(self.modes.len() as u32) as usize];
+        [m[0] + self.std * rng.normal(), m[1] + self.std * rng.normal()]
+    }
+
+    /// Draw `n` samples as a flat [n×2] buffer.
+    pub fn sample_flat(&self, n: usize, rng: &mut Pcg32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            let s = self.sample(rng);
+            out.push(s[0]);
+            out.push(s[1]);
+        }
+        out
+    }
+
+    /// Fraction of modes that have at least one of `points` within
+    /// `3·std` — the mode-coverage metric of SYN-A.
+    pub fn mode_coverage(&self, points: &[[f32; 2]]) -> f32 {
+        let thr = 3.0 * self.std;
+        let covered = self
+            .modes
+            .iter()
+            .filter(|m| {
+                points.iter().any(|p| {
+                    let dx = p[0] - m[0];
+                    let dy = p[1] - m[1];
+                    (dx * dx + dy * dy).sqrt() < thr
+                })
+            })
+            .count();
+        covered as f32 / self.modes.len() as f32
+    }
+
+    /// Symmetrized proxy for distribution distance: mean distance from
+    /// each point to its nearest mode (quality) plus the coverage deficit.
+    pub fn quality_score(&self, points: &[[f32; 2]]) -> f32 {
+        if points.is_empty() {
+            return f32::INFINITY;
+        }
+        let mean_dist: f32 = points
+            .iter()
+            .map(|p| {
+                self.modes
+                    .iter()
+                    .map(|m| {
+                        let dx = p[0] - m[0];
+                        let dy = p[1] - m[1];
+                        (dx * dx + dy * dy).sqrt()
+                    })
+                    .fold(f32::INFINITY, f32::min)
+            })
+            .sum::<f32>()
+            / points.len() as f32;
+        mean_dist + (1.0 - self.mode_coverage(points))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_cluster_near_modes() {
+        let gm = GaussianMixture2D::ring(8, 2.0, 0.05);
+        let mut rng = Pcg32::new(5);
+        for _ in 0..200 {
+            let s = gm.sample(&mut rng);
+            let min_d = gm
+                .modes
+                .iter()
+                .map(|m| ((s[0] - m[0]).powi(2) + (s[1] - m[1]).powi(2)).sqrt())
+                .fold(f32::INFINITY, f32::min);
+            assert!(min_d < 0.5, "sample {s:?} too far from any mode");
+        }
+    }
+
+    #[test]
+    fn true_samples_cover_all_modes() {
+        let gm = GaussianMixture2D::ring(8, 2.0, 0.05);
+        let mut rng = Pcg32::new(7);
+        let pts: Vec<[f32; 2]> = (0..500).map(|_| gm.sample(&mut rng)).collect();
+        assert_eq!(gm.mode_coverage(&pts), 1.0);
+        assert!(gm.quality_score(&pts) < 0.2);
+    }
+
+    #[test]
+    fn collapsed_samples_score_poorly() {
+        let gm = GaussianMixture2D::ring(8, 2.0, 0.05);
+        // All samples at a single mode: coverage 1/8.
+        let pts = vec![[2.0, 0.0]; 100];
+        assert!((gm.mode_coverage(&pts) - 0.125).abs() < 1e-6);
+        assert!(gm.quality_score(&pts) > 0.8);
+    }
+}

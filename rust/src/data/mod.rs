@@ -1,0 +1,15 @@
+//! Synthetic datasets (DESIGN.md §5 substitutions).
+//!
+//! - [`GaussianMixture2D`] — the ring-of-K-Gaussians used by the SYN-A
+//!   mode-coverage experiment (the standard GAN toy distribution);
+//! - [`SynthImages`] — procedural 32×32×3 image distributions standing in
+//!   for CIFAR-10 (`SynthImages::cifar_like`) and CelebA
+//!   (`SynthImages::faces_like`): per-class template patterns + per-sample
+//!   jitter, exercising exactly the code paths the paper's Figures 2–3
+//!   exercise (multi-modal image distribution → conv GAN → IS/FID).
+
+mod gaussian_mixture;
+mod synth_images;
+
+pub use gaussian_mixture::GaussianMixture2D;
+pub use synth_images::{SynthImages, SynthKind, IMG_C, IMG_H, IMG_LEN, IMG_W};

@@ -1,0 +1,235 @@
+//! Procedural 32×32×3 image distributions — the CIFAR-10 / CelebA
+//! stand-ins (DESIGN.md §5).
+//!
+//! Each dataset is a 10-class mixture. A class is a deterministic template
+//! built from a few oriented sinusoid + radial components (`cifar_like`)
+//! or an ellipse-face composition with attribute variation (`faces_like`);
+//! a sample is its class template warped by per-sample phase/position
+//! jitter plus pixel noise. Pixels are in [−1, 1] (tanh range), the
+//! convention the DCGAN generator uses.
+//!
+//! The distributions are multi-modal, class-labelled (for the proxy
+//! Inception Score) and non-trivial for a GAN to fit, while being exactly
+//! reproducible from a seed.
+
+use crate::util::rng::Pcg32;
+
+pub const IMG_H: usize = 32;
+pub const IMG_W: usize = 32;
+pub const IMG_C: usize = 3;
+
+/// Pixels per image.
+pub const IMG_LEN: usize = IMG_H * IMG_W * IMG_C;
+
+/// Which procedural family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthKind {
+    /// Frequency/orientation textures — 10 "object" classes (CIFAR-ish).
+    CifarLike,
+    /// Ellipse "portraits" with attribute variation (CelebA-ish).
+    FacesLike,
+}
+
+/// A procedural labelled image distribution.
+#[derive(Debug, Clone)]
+pub struct SynthImages {
+    pub kind: SynthKind,
+    pub classes: usize,
+    /// Per-sample additive pixel noise std.
+    pub noise: f32,
+    /// Per-class template parameters (deterministic from the seed).
+    params: Vec<ClassParams>,
+}
+
+#[derive(Debug, Clone)]
+struct ClassParams {
+    // sinusoid components: (fx, fy, phase, amp) × 3
+    waves: [(f32, f32, f32, f32); 3],
+    // radial blob: (cx, cy, radius, amp)
+    blob: (f32, f32, f32, f32),
+    // base color per channel
+    color: [f32; 3],
+}
+
+impl SynthImages {
+    pub fn cifar_like(seed: u64) -> Self {
+        Self::new(SynthKind::CifarLike, 10, 0.08, seed)
+    }
+
+    pub fn faces_like(seed: u64) -> Self {
+        Self::new(SynthKind::FacesLike, 10, 0.05, seed)
+    }
+
+    fn new(kind: SynthKind, classes: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed ^ 0x5717_11AC);
+        let params = (0..classes)
+            .map(|_| ClassParams {
+                waves: [
+                    wave(&mut rng),
+                    wave(&mut rng),
+                    wave(&mut rng),
+                ],
+                blob: (
+                    rng.uniform_range(0.25, 0.75),
+                    rng.uniform_range(0.25, 0.75),
+                    rng.uniform_range(0.1, 0.3),
+                    rng.uniform_range(0.3, 0.9),
+                ),
+                color: [
+                    rng.uniform_range(-0.5, 0.5),
+                    rng.uniform_range(-0.5, 0.5),
+                    rng.uniform_range(-0.5, 0.5),
+                ],
+            })
+            .collect();
+        Self { kind, classes, noise, params }
+    }
+
+    /// Render one sample of class `label` into `out` (length IMG_LEN,
+    /// CHW layout, pixels in [−1,1]).
+    pub fn render(&self, label: usize, rng: &mut Pcg32, out: &mut [f32]) {
+        assert_eq!(out.len(), IMG_LEN);
+        let p = &self.params[label % self.classes];
+        // per-sample jitter
+        let dx = rng.uniform_range(-0.08, 0.08);
+        let dy = rng.uniform_range(-0.08, 0.08);
+        let dphase = rng.uniform_range(-0.6, 0.6);
+        let scale = rng.uniform_range(0.85, 1.15);
+        for y in 0..IMG_H {
+            for x in 0..IMG_W {
+                let u = x as f32 / IMG_W as f32 + dx;
+                let v = y as f32 / IMG_H as f32 + dy;
+                let mut base = 0.0f32;
+                for &(fx, fy, ph, amp) in &p.waves {
+                    base += amp * (2.0 * std::f32::consts::PI * (fx * u + fy * v) + ph + dphase)
+                        .sin();
+                }
+                // radial component
+                let (cx, cy, r, amp) = p.blob;
+                let dist = (((u - cx) * (u - cx) + (v - cy) * (v - cy)).sqrt() / r).min(4.0);
+                let blob = amp * (-dist * dist).exp();
+                let face = match self.kind {
+                    SynthKind::CifarLike => 0.0,
+                    SynthKind::FacesLike => face_component(u, v, label, scale),
+                };
+                let lum = (base * 0.4 + blob + face).clamp(-1.0, 1.0);
+                for c in 0..IMG_C {
+                    let px = (lum + p.color[c]).clamp(-1.0, 1.0)
+                        + self.noise * rng.normal();
+                    out[c * IMG_H * IMG_W + y * IMG_W + x] = px.clamp(-1.0, 1.0);
+                }
+            }
+        }
+    }
+
+    /// Sample a batch: returns (flat [n×IMG_LEN] pixels, labels).
+    pub fn sample_batch(&self, n: usize, rng: &mut Pcg32) -> (Vec<f32>, Vec<usize>) {
+        let mut pixels = vec![0.0f32; n * IMG_LEN];
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = rng.below(self.classes as u32) as usize;
+            self.render(label, rng, &mut pixels[i * IMG_LEN..(i + 1) * IMG_LEN]);
+            labels.push(label);
+        }
+        (pixels, labels)
+    }
+}
+
+fn wave(rng: &mut Pcg32) -> (f32, f32, f32, f32) {
+    (
+        rng.uniform_range(0.5, 6.0),
+        rng.uniform_range(0.5, 6.0),
+        rng.uniform_range(0.0, std::f32::consts::TAU),
+        rng.uniform_range(0.3, 1.0),
+    )
+}
+
+/// Ellipse-face component: head outline + eyes + mouth, parameterized by
+/// the class label ("identity") and a per-sample scale ("expression").
+fn face_component(u: f32, v: f32, label: usize, scale: f32) -> f32 {
+    let l = label as f32 / 10.0;
+    // head: ellipse centered slightly above middle
+    let (hu, hv) = ((u - 0.5) / (0.32 * scale), (v - 0.45) / (0.40 * scale));
+    let head = 1.0 - (hu * hu + hv * hv);
+    let mut val = if head > 0.0 { 0.8 * head.min(0.4) / 0.4 } else { -0.3 };
+    // eyes: two small blobs whose spacing encodes identity
+    let eye_dx = 0.10 + 0.06 * l;
+    for sgn in [-1.0f32, 1.0] {
+        let (eu, ev) = (u - (0.5 + sgn * eye_dx), v - 0.38);
+        if (eu * eu + ev * ev).sqrt() < 0.035 * scale {
+            val -= 1.2;
+        }
+    }
+    // mouth: horizontal bar, vertical position encodes identity
+    let mv = 0.60 + 0.05 * l;
+    if (v - mv).abs() < 0.02 * scale && (u - 0.5).abs() < 0.10 * scale {
+        val -= 0.9;
+    }
+    val
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::dist2_sq;
+
+    #[test]
+    fn pixels_are_bounded() {
+        for ds in [SynthImages::cifar_like(1), SynthImages::faces_like(1)] {
+            let mut rng = Pcg32::new(2);
+            let (px, labels) = ds.sample_batch(8, &mut rng);
+            assert_eq!(px.len(), 8 * IMG_LEN);
+            assert_eq!(labels.len(), 8);
+            assert!(px.iter().all(|&p| (-1.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Same-class pairs must be closer than cross-class pairs on average.
+        let ds = SynthImages::cifar_like(3);
+        let mut rng = Pcg32::new(4);
+        let mut a0 = vec![0.0; IMG_LEN];
+        let mut b0 = vec![0.0; IMG_LEN];
+        let mut a1 = vec![0.0; IMG_LEN];
+        let mut intra = 0.0f64;
+        let mut inter = 0.0f64;
+        let trials = 20;
+        for _ in 0..trials {
+            ds.render(0, &mut rng, &mut a0);
+            ds.render(0, &mut rng, &mut b0);
+            ds.render(1, &mut rng, &mut a1);
+            intra += dist2_sq(&a0, &b0) as f64;
+            inter += dist2_sq(&a0, &a1) as f64;
+        }
+        assert!(
+            inter > intra * 1.5,
+            "classes not separable: intra={intra} inter={inter}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds1 = SynthImages::faces_like(9);
+        let ds2 = SynthImages::faces_like(9);
+        let mut r1 = Pcg32::new(10);
+        let mut r2 = Pcg32::new(10);
+        let (p1, l1) = ds1.sample_batch(4, &mut r1);
+        let (p2, l2) = ds2.sample_batch(4, &mut r2);
+        assert_eq!(p1, p2);
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn cifar_and_faces_differ() {
+        let c = SynthImages::cifar_like(5);
+        let f = SynthImages::faces_like(5);
+        let mut r1 = Pcg32::new(6);
+        let mut r2 = Pcg32::new(6);
+        let mut a = vec![0.0; IMG_LEN];
+        let mut b = vec![0.0; IMG_LEN];
+        c.render(0, &mut r1, &mut a);
+        f.render(0, &mut r2, &mut b);
+        assert!(dist2_sq(&a, &b) > 1.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! SYN-B: the bilinear min–max game (paper §2.2 motivation). Plots the
+//! distance-to-solution trajectory for simultaneous GDA (cycles/diverges),
+//! one-call OMD, two-call extragradient, and distributed DQGAN — the
+//! experiment behind the claim that "gradient descent type algorithms …
+//! may fail to converge when dealing with min-max problems".
+
+use crate::algo::AlgoKind;
+use crate::grad::GradientSource;
+use crate::model::BilinearGame;
+use crate::optim::{Extragradient, LrSchedule, Omd, Optimizer, Sgd};
+use crate::ps::{run_cluster, ClusterConfig};
+use crate::telemetry::{results_dir, CsvWriter, Table};
+use crate::util::rng::Pcg32;
+
+/// One trajectory point.
+#[derive(Debug, Clone)]
+pub struct TrajPoint {
+    pub method: String,
+    pub iter: u64,
+    pub dist: f32,
+}
+
+fn game() -> BilinearGame {
+    let mut rng = Pcg32::new(7);
+    BilinearGame::random(4, 0.0, &mut rng)
+}
+
+/// Single-machine trajectories for GDA / OMD / extragradient.
+fn single_machine(eta: f32, iters: u64, every: u64) -> Vec<TrajPoint> {
+    let mut out = Vec::new();
+    // GDA
+    {
+        let mut g = game();
+        let mut rng = Pcg32::new(1);
+        let mut w = g.init_params(&mut rng);
+        let mut sgd = Sgd::new(eta);
+        let mut grad = vec![0.0; w.len()];
+        for t in 0..iters {
+            if t % every == 0 {
+                out.push(TrajPoint {
+                    method: "GDA".into(),
+                    iter: t,
+                    dist: g.dist_to_solution(&w),
+                });
+            }
+            let mut r = Pcg32::new(t);
+            crate::grad::GradientSource::grad(&mut g, &w, 1, &mut r, &mut grad).unwrap();
+            sgd.step(&mut w, &grad);
+            if !w.iter().all(|x| x.is_finite()) || g.dist_to_solution(&w) > 1e6 {
+                break; // diverged — expected for GDA
+            }
+        }
+    }
+    // OMD
+    {
+        let mut g = game();
+        let mut rng = Pcg32::new(1);
+        let mut w = g.init_params(&mut rng);
+        let mut omd = Omd::new(eta, w.len());
+        for t in 0..iters {
+            if t % every == 0 {
+                out.push(TrajPoint {
+                    method: "OMD".into(),
+                    iter: t,
+                    dist: g.dist_to_solution(&w),
+                });
+            }
+            let mut r = Pcg32::new(t);
+            omd.step_with(&mut w, |p, o| {
+                crate::grad::GradientSource::grad(&mut g, p, 1, &mut r, o).unwrap();
+            });
+        }
+    }
+    // Extragradient
+    {
+        let mut g = game();
+        let mut rng = Pcg32::new(1);
+        let mut w = g.init_params(&mut rng);
+        let mut eg = Extragradient::new(eta);
+        for t in 0..iters {
+            if t % every == 0 {
+                out.push(TrajPoint {
+                    method: "Extragradient".into(),
+                    iter: t,
+                    dist: g.dist_to_solution(&w),
+                });
+            }
+            let mut r = Pcg32::new(t);
+            eg.step_with(&mut w, |p, o| {
+                crate::grad::GradientSource::grad(&mut g, p, 1, &mut r, o).unwrap();
+            });
+        }
+    }
+    out
+}
+
+/// Distributed DQGAN (Algorithm 2) on the same game via the PS runtime.
+fn distributed_dqgan(eta: f32, rounds: u64, every: u64) -> anyhow::Result<Vec<TrajPoint>> {
+    let cfg = ClusterConfig {
+        algo: AlgoKind::parse("dqgan:linf8")?,
+        workers: 4,
+        batch: 4,
+        rounds,
+        lr: LrSchedule::constant(eta),
+        seed: 31,
+        eval_every: every,
+        keep_stats: false,
+    };
+    let report = run_cluster(&cfg, |_m| Ok(Box::new(game())))?;
+    let g = game();
+    Ok(report
+        .evals
+        .iter()
+        .map(|ev| TrajPoint {
+            method: "DQGAN(M=4,8bit)".into(),
+            iter: ev.round,
+            dist: g.dist_to_solution(&ev.params),
+        })
+        .collect())
+}
+
+pub fn run(fast: bool) -> anyhow::Result<()> {
+    let iters: u64 = if fast { 500 } else { 5000 };
+    let every = (iters / 25).max(1);
+    let eta = 0.1;
+    let mut all = single_machine(eta, iters, every);
+    all.extend(distributed_dqgan(eta, iters, every)?);
+
+    let csv_path = results_dir()?.join("bilinear.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["method", "iter", "dist"])?;
+    for p in &all {
+        csv.row(&[p.method.clone(), p.iter.to_string(), format!("{:.6}", p.dist)])?;
+    }
+
+    // Summarize: first and last distance per method.
+    let mut table = Table::new(&["method", "dist(0)", "dist(end)", "verdict"]);
+    for m in ["GDA", "OMD", "Extragradient", "DQGAN(M=4,8bit)"] {
+        let pts: Vec<&TrajPoint> = all.iter().filter(|p| p.method == m).collect();
+        if pts.is_empty() {
+            continue;
+        }
+        let d0 = pts.first().unwrap().dist;
+        let dend = pts.last().unwrap().dist;
+        let verdict = if m == "GDA" {
+            if dend > d0 { "diverges ✓ (paper claim)" } else { "bounded?" }
+        } else if dend < 0.1 * d0 {
+            "converges ✓"
+        } else {
+            "slow"
+        };
+        table.row(&[
+            m.to_string(),
+            format!("{d0:.3}"),
+            format!("{dend:.4}"),
+            verdict.to_string(),
+        ]);
+    }
+    table.print();
+    println!("wrote {}", csv.finish()?);
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Figure 4: speedup vs number of workers M ∈ {1,2,4,8,16,32} on the
+//! CIFAR-10-like (50k samples) and CelebA-like (200k samples) datasets,
+//! comparing DQGAN-8bit against CPOAdam-fp32.
+//!
+//! Method (DESIGN.md §5): the per-round *compute* time is **measured** on
+//! this host by running real rounds through the XLA runtime (gradient +
+//! quantize + encode), and the *communication* time comes from the
+//! byte-exact payload sizes fed into the [`NetworkModel`] PS cost model.
+//! Speedup(M) = epoch_time(1) / epoch_time(M). The paper's shape to
+//! reproduce: speedup grows with M and DQGAN-8bit's lead over
+//! CPOAdam-32bit widens with M (it ships ~4× fewer uplink bytes).
+
+use crate::algo::AlgoKind;
+use crate::comm::NetworkModel;
+use crate::data::SynthImages;
+use crate::grad::GradientSource;
+use crate::runtime::{Runtime, XlaGradSource};
+use crate::telemetry::{results_dir, CsvWriter, Table};
+use crate::util::rng::Pcg32;
+use crate::util::timer::Stopwatch;
+
+/// Measured per-round costs of one worker.
+#[derive(Debug, Clone)]
+pub struct MeasuredRound {
+    /// Gradient + quantize + encode wall seconds per round.
+    pub t_compute: f64,
+    /// Uplink payload bytes per worker per round.
+    pub bytes_up: usize,
+    /// Downlink (broadcast) bytes per worker per round.
+    pub bytes_down: usize,
+}
+
+/// Measure the real per-round compute cost for a method on this host,
+/// using exactly the production worker path: the XLA gradient artifact +
+/// the **native** linf8 quantizer (what `DqganAdamWorker` runs; the
+/// interpret-mode Pallas kernel is the correctness twin, benchmarked
+/// separately in `bench_quantizers`).
+pub fn measure_round(
+    rt: &Runtime,
+    quantized: bool,
+    reps: usize,
+) -> anyhow::Result<MeasuredRound> {
+    use crate::compress::compressor_from_spec;
+    let mut src = XlaGradSource::dcgan(rt, SynthImages::cifar_like(1))?;
+    let d = src.dim();
+    let batch = src.artifact_batch();
+    let mut rng = Pcg32::new(4242);
+    let w = src.init_params(&mut rng);
+    let mut g = vec![0.0; d];
+    let quantizer: Option<Box<dyn crate::compress::Compressor>> =
+        if quantized { Some(compressor_from_spec("linf8")?) } else { None };
+    // Warm up the artifact compile.
+    src.grad(&w, batch, &mut rng, &mut g)?;
+    let sw = Stopwatch::start();
+    let mut bytes_up = 0usize;
+    let mut wire = Vec::new();
+    for _ in 0..reps {
+        src.grad(&w, batch, &mut rng, &mut g)?;
+        if let Some(q) = &quantizer {
+            wire.clear();
+            let _dense = q.compress_encoded(&g, &mut rng, &mut wire);
+            bytes_up = wire.len();
+        } else {
+            bytes_up = 4 * d;
+        }
+    }
+    Ok(MeasuredRound {
+        t_compute: sw.elapsed_secs() / reps as f64,
+        bytes_up,
+        bytes_down: 4 * d, // server broadcasts full-precision q̄
+    })
+}
+
+/// One speedup series row.
+#[derive(Debug, Clone)]
+pub struct SpeedupPoint {
+    pub dataset: &'static str,
+    pub method: &'static str,
+    pub workers: usize,
+    pub epoch_secs: f64,
+    pub speedup: f64,
+}
+
+/// Compute the speedup table from measured rounds.
+pub fn speedup_series(
+    measured: &MeasuredRound,
+    dataset: &'static str,
+    method: &'static str,
+    samples: usize,
+    batch: usize,
+    net: &NetworkModel,
+    worker_counts: &[usize],
+) -> Vec<SpeedupPoint> {
+    let t1 = net.epoch_time(
+        samples,
+        batch,
+        1,
+        measured.t_compute,
+        measured.bytes_up,
+        measured.bytes_down,
+    );
+    worker_counts
+        .iter()
+        .map(|&m| {
+            let tm = net.epoch_time(
+                samples,
+                batch,
+                m,
+                measured.t_compute,
+                measured.bytes_up,
+                measured.bytes_down,
+            );
+            SpeedupPoint {
+                dataset,
+                method,
+                workers: m,
+                epoch_secs: tm,
+                speedup: t1 / tm,
+            }
+        })
+        .collect()
+}
+
+pub fn run(fast: bool) -> anyhow::Result<()> {
+    let rt = Runtime::from_default_dir()?;
+    let reps = if fast { 2 } else { 8 };
+    crate::log_info!("measuring per-round compute (reps={reps})...");
+    let m_dqgan = measure_round(&rt, true, reps)?;
+    let m_cpo = measure_round(&rt, false, reps)?;
+    crate::log_info!(
+        "measured: dqgan {:.1} ms/round {} B up | cpoadam {:.1} ms/round {} B up",
+        m_dqgan.t_compute * 1e3,
+        m_dqgan.bytes_up,
+        m_cpo.t_compute * 1e3,
+        m_cpo.bytes_up
+    );
+
+    let net = NetworkModel::ten_gbe();
+    let workers = [1usize, 2, 4, 8, 16, 32];
+    let batch = 16;
+    // CIFAR-10 has 50k train images; CelebA ≈ 200k.
+    let datasets: [(&str, usize); 2] = [("cifar-like", 50_000), ("celeba-like", 200_000)];
+
+    let mut rows = Vec::new();
+    for (ds, samples) in datasets {
+        rows.extend(speedup_series(&m_dqgan, ds, "DQGAN-8bit", samples, batch, &net, &workers));
+        rows.extend(speedup_series(&m_cpo, ds, "CPOAdam-fp32", samples, batch, &net, &workers));
+    }
+
+    let mut table = Table::new(&["dataset", "method", "M", "epoch_s", "speedup"]);
+    let csv_path = results_dir()?.join("fig4.csv");
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &["dataset", "method", "workers", "epoch_secs", "speedup"],
+    )?;
+    for r in &rows {
+        table.row(&[
+            r.dataset.to_string(),
+            r.method.to_string(),
+            r.workers.to_string(),
+            format!("{:.2}", r.epoch_secs),
+            format!("{:.2}", r.speedup),
+        ]);
+        csv.row(&[
+            r.dataset.to_string(),
+            r.method.to_string(),
+            r.workers.to_string(),
+            format!("{:.4}", r.epoch_secs),
+            format!("{:.4}", r.speedup),
+        ])?;
+    }
+    table.print();
+    println!("wrote {}", csv.finish()?);
+
+    // Shape check: at M=32 DQGAN should beat CPOAdam on both datasets.
+    for (ds, _) in datasets {
+        let get = |method: &str| {
+            rows.iter()
+                .find(|r| r.dataset == ds && r.method == method && r.workers == 32)
+                .map(|r| r.speedup)
+                .unwrap_or(0.0)
+        };
+        let dq = get("DQGAN-8bit");
+        let cp = get("CPOAdam-fp32");
+        println!(
+            "{ds}: speedup@32 DQGAN-8bit={dq:.2} vs CPOAdam-fp32={cp:.2} ({})",
+            if dq > cp { "8-bit wins ✓ (paper shape holds)" } else { "UNEXPECTED" }
+        );
+    }
+    // Also report the uplink-byte ratio (the mechanism behind the gap).
+    let d = AlgoKind::parse("cpoadam")?.uplink_bytes(400_708);
+    let q = AlgoKind::parse("dqgan-adam:linf8")?.uplink_bytes(400_708);
+    println!("uplink bytes/round/worker: fp32={d} vs 8-bit={q} ({:.2}× less)", d as f64 / q as f64);
+    Ok(())
+}

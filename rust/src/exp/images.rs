@@ -1,0 +1,255 @@
+//! Figures 2 & 3: proxy IS / proxy FID vs epoch for
+//! {CPOAdam, CPOAdam-GQ(8-bit), DQGAN(8-bit)} on the CIFAR-10-like and
+//! CelebA-like synthetic image datasets, trained through the full stack
+//! (Rust PS runtime → XLA DCGAN artifacts → Pallas matmul inside).
+//!
+//! Figure-shape expectations (paper §4): CPOAdam best; DQGAN within a
+//! small gap (≤0.6 IS / ≤30 FID on CIFAR-10, ≤0.5 / ≤40 on CelebA);
+//! CPOAdam-GQ worse — quantization without EF costs quality.
+
+use crate::algo::AlgoKind;
+use crate::data::{SynthImages, IMG_LEN};
+use crate::metrics::{fid_from_features, inception_score, FeatureNet, FEATURE_DIM};
+use crate::optim::LrSchedule;
+use crate::ps::{run_cluster, ClusterConfig};
+use crate::runtime::{Runtime, XlaGradSource, XlaSampler};
+use crate::telemetry::{results_dir, CsvWriter, Table};
+use crate::util::rng::Pcg32;
+
+/// Which image figure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImageFigure {
+    Fig2Cifar,
+    Fig3Faces,
+}
+
+impl ImageFigure {
+    pub fn id(self) -> &'static str {
+        match self {
+            Self::Fig2Cifar => "fig2",
+            Self::Fig3Faces => "fig3",
+        }
+    }
+
+    fn dataset(self, seed: u64) -> SynthImages {
+        match self {
+            Self::Fig2Cifar => SynthImages::cifar_like(seed),
+            Self::Fig3Faces => SynthImages::faces_like(seed),
+        }
+    }
+}
+
+/// One (method, epoch) measurement.
+#[derive(Debug, Clone)]
+pub struct EpochPoint {
+    pub method: String,
+    pub epoch: usize,
+    pub inception: f32,
+    pub fid: f32,
+    pub loss_g: f32,
+    pub loss_d: f32,
+    pub bytes_up: u64,
+}
+
+/// Experiment parameters (shrunk by `fast`).
+#[derive(Debug, Clone)]
+pub struct ImageExpConfig {
+    pub workers: usize,
+    pub epochs: usize,
+    pub rounds_per_epoch: u64,
+    pub eval_images: usize,
+    pub seed: u64,
+    pub dqgan_lr: f32,
+    pub adam_lr: f32,
+}
+
+impl ImageExpConfig {
+    pub fn new(fast: bool) -> Self {
+        if fast {
+            Self {
+                workers: 2,
+                epochs: 2,
+                rounds_per_epoch: 3,
+                eval_images: 64,
+                seed: 2020,
+                dqgan_lr: 2e-4,
+                adam_lr: 2e-4,
+            }
+        } else {
+            // Sized for a single-CPU testbed: each dcgan_grad call is
+            // ~0.3 s, so M=2 × 200 rounds ≈ 3 min per method. lr 2e-4 is
+            // the DCGAN convention; higher rates destabilize the WGAN
+            // critic (verified: 5e-4 diverges).
+            Self {
+                workers: 2,
+                epochs: 8,
+                rounds_per_epoch: 25,
+                eval_images: 128,
+                seed: 2020,
+                dqgan_lr: 2e-4,
+                adam_lr: 2e-4,
+            }
+        }
+    }
+}
+
+/// Score a parameter snapshot: proxy IS + FID against `reference`.
+pub fn score_snapshot(
+    sampler: &XlaSampler,
+    net: &FeatureNet,
+    w: &[f32],
+    reference_feats: &[f32],
+    n_ref: usize,
+    eval_images: usize,
+    rng: &mut Pcg32,
+) -> anyhow::Result<(f32, f32)> {
+    let mut imgs = Vec::with_capacity(eval_images * IMG_LEN);
+    while imgs.len() < eval_images * IMG_LEN {
+        imgs.extend(sampler.sample(w, rng)?);
+    }
+    imgs.truncate(eval_images * IMG_LEN);
+    let (feats, logits) = net.features_batch(&imgs);
+    let is = inception_score(&logits, eval_images);
+    let fid =
+        fid_from_features(&feats, eval_images, reference_feats, n_ref, FEATURE_DIM).fid;
+    Ok((is, fid))
+}
+
+/// Train one method and return its per-epoch curve.
+#[allow(clippy::too_many_arguments)]
+fn run_method(
+    rt: &Runtime,
+    figure: ImageFigure,
+    algo: AlgoKind,
+    label: &str,
+    cfg: &ImageExpConfig,
+    net: &FeatureNet,
+    reference_feats: &[f32],
+    n_ref: usize,
+) -> anyhow::Result<Vec<EpochPoint>> {
+    let lr = match algo {
+        AlgoKind::Dqgan { .. } => LrSchedule::constant(cfg.dqgan_lr),
+        _ => LrSchedule::constant(cfg.adam_lr),
+    };
+    let cluster = ClusterConfig {
+        algo,
+        workers: cfg.workers,
+        batch: 16, // must match the dcgan_grad artifact export
+        rounds: cfg.epochs as u64 * cfg.rounds_per_epoch,
+        lr,
+        seed: cfg.seed,
+        eval_every: cfg.rounds_per_epoch,
+        keep_stats: true,
+    };
+    let figure_seed = cfg.seed ^ 0x1111;
+    let report = run_cluster(&cluster, |m| {
+        let src =
+            XlaGradSource::dcgan(rt, figure.dataset(figure_seed))?;
+        let _ = m;
+        Ok(Box::new(src))
+    })?;
+    let sampler = XlaSampler::new(rt, "dcgan_sample")?;
+    let mut rng = Pcg32::new(cfg.seed ^ 0xE7A1);
+    let mut points = Vec::new();
+    for (i, ev) in report.evals.iter().enumerate() {
+        let (is, fid) = score_snapshot(
+            &sampler,
+            net,
+            &ev.params,
+            reference_feats,
+            n_ref,
+            cfg.eval_images,
+            &mut rng,
+        )?;
+        points.push(EpochPoint {
+            method: label.to_string(),
+            epoch: i,
+            inception: is,
+            fid,
+            loss_g: ev.loss_g.unwrap_or(f32::NAN),
+            loss_d: ev.loss_d.unwrap_or(f32::NAN),
+            bytes_up: report.total_bytes_up,
+        });
+        crate::log_info!(
+            "{label} epoch {i}: IS={is:.3} FID={fid:.1} lossG={:.3} lossD={:.3}",
+            ev.loss_g.unwrap_or(f32::NAN),
+            ev.loss_d.unwrap_or(f32::NAN)
+        );
+    }
+    Ok(points)
+}
+
+
+/// Run the full figure: 3 methods × epochs, print + CSV.
+pub fn run(figure: ImageFigure, fast: bool) -> anyhow::Result<()> {
+    let cfg = ImageExpConfig::new(fast);
+    let rt = Runtime::from_default_dir()?;
+    let net = FeatureNet::new();
+    // Reference features from the real distribution (shared across methods).
+    let ds = figure.dataset(cfg.seed ^ 0x1111);
+    let n_ref = cfg.eval_images.max(128);
+    let mut rng = Pcg32::new(cfg.seed ^ 0x4EF5);
+    let (ref_imgs, _) = ds.sample_batch(n_ref, &mut rng);
+    let (reference_feats, _) = net.features_batch(&ref_imgs);
+
+    let methods: Vec<(&str, AlgoKind)> = vec![
+        ("CPOAdam", AlgoKind::parse("cpoadam")?),
+        ("CPOAdam-GQ", AlgoKind::parse("cpoadam-gq:linf8")?),
+        ("DQGAN", AlgoKind::parse("dqgan-adam:linf8")?),
+    ];
+    let mut all = Vec::new();
+    for (label, algo) in methods {
+        crate::log_info!("=== {} / {label} ===", figure.id());
+        let pts =
+            run_method(&rt, figure, algo, label, &cfg, &net, &reference_feats, n_ref)?;
+        all.extend(pts);
+    }
+
+    // Print + CSV.
+    let mut table = Table::new(&["method", "epoch", "IS", "FID", "loss_G", "loss_D"]);
+    let csv_path = results_dir()?.join(format!("{}.csv", figure.id()));
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &["method", "epoch", "inception_score", "fid", "loss_g", "loss_d", "bytes_up"],
+    )?;
+    for p in &all {
+        table.row(&[
+            p.method.clone(),
+            p.epoch.to_string(),
+            format!("{:.3}", p.inception),
+            format!("{:.1}", p.fid),
+            format!("{:.3}", p.loss_g),
+            format!("{:.3}", p.loss_d),
+        ]);
+        csv.row(&[
+            p.method.clone(),
+            p.epoch.to_string(),
+            format!("{:.4}", p.inception),
+            format!("{:.3}", p.fid),
+            format!("{:.4}", p.loss_g),
+            format!("{:.4}", p.loss_d),
+            p.bytes_up.to_string(),
+        ])?;
+    }
+    table.print();
+    println!("wrote {}", csv.finish()?);
+
+    // Figure-shape summary (final epoch).
+    let last = |m: &str| {
+        all.iter().filter(|p| p.method == m).next_back().cloned()
+    };
+    if let (Some(cp), Some(dq), Some(gq)) =
+        (last("CPOAdam"), last("DQGAN"), last("CPOAdam-GQ"))
+    {
+        println!(
+            "final-epoch gap: DQGAN vs CPOAdam ΔIS={:+.3} ΔFID={:+.1} | \
+             CPOAdam-GQ vs CPOAdam ΔIS={:+.3} ΔFID={:+.1}",
+            dq.inception - cp.inception,
+            dq.fid - cp.fid,
+            gq.inception - cp.inception,
+            gq.fid - cp.fid,
+        );
+    }
+    Ok(())
+}
+

@@ -1,0 +1,44 @@
+//! Experiment harnesses — one per paper figure / theory claim
+//! (DESIGN.md §3 per-experiment index). Each harness prints an aligned
+//! table and writes a CSV under `results/` that regenerates the figure's
+//! series.
+//!
+//! | id        | paper artifact                         | module      |
+//! |-----------|----------------------------------------|-------------|
+//! | fig2      | Fig. 2 — IS/FID vs epoch, CIFAR-10-like | `images`    |
+//! | fig3      | Fig. 3 — IS/FID vs epoch, CelebA-like   | `images`    |
+//! | fig4      | Fig. 4 — speedup vs workers             | `fig4`      |
+//! | synthetic | SYN-A — 2-D mixture mode coverage       | `synthetic` |
+//! | bilinear  | SYN-B — GDA cycles, OMD converges       | `bilinear`  |
+//! | lemma1    | Lemma 1 — bounded EF residual           | `lemma1`    |
+//! | thm3      | Theorem 3 — linear speedup trend        | `thm3`      |
+
+pub mod bilinear;
+pub mod fig4;
+pub mod images;
+pub mod lemma1;
+pub mod synthetic;
+pub mod thm3;
+
+/// Run an experiment by id. `fast` shrinks every run for smoke tests.
+pub fn run(id: &str, fast: bool) -> anyhow::Result<()> {
+    match id {
+        "fig2" => images::run(images::ImageFigure::Fig2Cifar, fast),
+        "fig3" => images::run(images::ImageFigure::Fig3Faces, fast),
+        "fig4" => fig4::run(fast),
+        "synthetic" | "syn-a" => synthetic::run(fast),
+        "bilinear" | "syn-b" => bilinear::run(fast),
+        "lemma1" => lemma1::run(fast),
+        "thm3" => thm3::run(fast),
+        "all" => {
+            for id in ["bilinear", "synthetic", "lemma1", "thm3", "fig4", "fig2", "fig3"] {
+                println!("\n=== experiment {id} ===");
+                run(id, fast)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all)"
+        ),
+    }
+}

@@ -1,0 +1,132 @@
+//! The gradient operator `F(w; ξ)` abstraction.
+//!
+//! The paper's algorithms act on the joint operator
+//! `F(w) = [∇_θ L_G(θ,φ), ∇_φ L_D(θ,φ)]` over the stacked parameter vector
+//! `w = [θ, φ]`. Everything above this trait (OMD, DQGAN, the PS runtime)
+//! is model-agnostic; implementations are:
+//!
+//! - [`crate::model::MlpGan`] / [`crate::model::BilinearGame`] — native
+//!   Rust, analytic gradients (fast sweeps, tests, theory experiments);
+//! - [`crate::runtime::XlaGradSource`] — the production path: the JAX/
+//!   Pallas model AOT-compiled to an XLA executable.
+
+use crate::util::rng::Pcg32;
+
+/// Diagnostics attached to a gradient evaluation.
+#[derive(Debug, Clone, Default)]
+pub struct GradMeta {
+    /// Generator loss L_G at the evaluation point (if the model reports it).
+    pub loss_g: Option<f32>,
+    /// Discriminator loss L_D at the evaluation point.
+    pub loss_d: Option<f32>,
+}
+
+/// A stochastic gradient oracle for the joint GAN operator.
+pub trait GradientSource: Send {
+    /// Flat parameter dimension d (θ and φ stacked).
+    fn dim(&self) -> usize;
+
+    /// Evaluate the minibatch gradient `F(w; ξ)` with batch size `batch`,
+    /// sampling ξ from `rng`, writing into `out` (length `dim()`).
+    fn grad(
+        &mut self,
+        w: &[f32],
+        batch: usize,
+        rng: &mut Pcg32,
+        out: &mut [f32],
+    ) -> anyhow::Result<GradMeta>;
+
+    /// Initial parameter vector w₀ (same for every worker — Algorithm 2
+    /// line 1 pushes one w₀ to all).
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32>;
+
+    /// Human-readable name for logs.
+    fn name(&self) -> String {
+        "grad-source".to_string()
+    }
+}
+
+/// A deterministic quadratic test operator: F(w) = A·(w − w*) + noise.
+/// Strongly monotone, so every sane algorithm must converge to w* — used
+/// by the integration tests to validate algorithm plumbing.
+pub struct QuadraticOperator {
+    pub dim: usize,
+    pub target: Vec<f32>,
+    /// Diagonal of the (PSD) matrix A.
+    pub diag: Vec<f32>,
+    /// Per-sample noise std (simulates minibatch variance σ²).
+    pub noise: f32,
+}
+
+impl QuadraticOperator {
+    pub fn new(dim: usize, noise: f32, rng: &mut Pcg32) -> Self {
+        let target = rng.normal_vec(dim);
+        let diag = (0..dim).map(|_| 0.5 + rng.uniform()).collect();
+        Self { dim, target, diag, noise }
+    }
+}
+
+impl GradientSource for QuadraticOperator {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn grad(
+        &mut self,
+        w: &[f32],
+        batch: usize,
+        rng: &mut Pcg32,
+        out: &mut [f32],
+    ) -> anyhow::Result<GradMeta> {
+        assert_eq!(w.len(), self.dim);
+        // Minibatch of B i.i.d. noisy evaluations = exact gradient + noise/√B.
+        let eff_noise = self.noise / (batch.max(1) as f32).sqrt();
+        for i in 0..self.dim {
+            out[i] = self.diag[i] * (w[i] - self.target[i]) + eff_noise * rng.normal();
+        }
+        Ok(GradMeta::default())
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        rng.normal_vec(self.dim)
+    }
+
+    fn name(&self) -> String {
+        format!("quadratic(d={})", self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_gradient_vanishes_at_target() {
+        let mut rng = Pcg32::new(3);
+        let mut op = QuadraticOperator::new(8, 0.0, &mut rng);
+        let target = op.target.clone();
+        let mut g = vec![0.0; 8];
+        op.grad(&target, 4, &mut rng, &mut g).unwrap();
+        assert!(g.iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn batch_size_reduces_noise() {
+        let mut rng = Pcg32::new(5);
+        let mut op = QuadraticOperator::new(4, 1.0, &mut rng);
+        let w = vec![0.0; 4];
+        let mut var_of = |op: &mut QuadraticOperator, b: usize, rng: &mut Pcg32| {
+            let mut g = vec![0.0; 4];
+            let mut acc = 0.0f64;
+            let n = 2000;
+            for _ in 0..n {
+                op.grad(&w, b, rng, &mut g).unwrap();
+                acc += (g[0] as f64 - (op.diag[0] * (0.0 - op.target[0])) as f64).powi(2);
+            }
+            acc / n as f64
+        };
+        let v1 = var_of(&mut op, 1, &mut rng);
+        let v16 = var_of(&mut op, 16, &mut rng);
+        assert!(v16 < v1, "v1={v1} v16={v16}");
+    }
+}

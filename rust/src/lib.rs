@@ -1,0 +1,46 @@
+//! # DQGAN — Distributed Training of GANs with Quantized Gradients
+//!
+//! A from-scratch reproduction of *"A Distributed Training Algorithm of
+//! Generative Adversarial Networks with Quantized Gradients"* (Chen, Yang,
+//! Shen, Pang — 2020) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)**: the parameter-server coordinator — workers,
+//!   leader, δ-approximate gradient compression with double error feedback
+//!   (Algorithm 2), transports (in-process / TCP / simulated network),
+//!   baselines (CPOAdam, CPOAdam-GQ), metrics (proxy IS/FID), and every
+//!   figure harness from the paper's evaluation.
+//! - **Layer 2 (`python/compile/`)**: the GAN forward/backward written in
+//!   JAX, AOT-lowered to HLO text once at build time.
+//! - **Layer 1 (`python/compile/kernels/`)**: Pallas kernels (fused
+//!   quantize+error-feedback, tiled matmul, fused OMD update) lowered with
+//!   `interpret=True` into the same HLO modules.
+//!
+//! Python never runs on the training path: the Rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime/`) and owns the event loop.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod benchutil;
+pub mod linalg;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+pub mod compress;
+pub mod comm;
+pub mod optim;
+pub mod algo;
+pub mod grad;
+pub mod model;
+pub mod data;
+pub mod metrics;
+pub mod ps;
+pub mod runtime;
+pub mod config;
+pub mod telemetry;
+pub mod exp;
+pub mod cli;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,151 @@
+//! Matrix square root via the Newton–Schulz iteration (Denman–Beavers
+//! variant with scaling), used by FID:
+//!
+//!   FID = ‖μ₁−μ₂‖² + Tr(Σ₁ + Σ₂ − 2·(Σ₁Σ₂)^{1/2})
+//!
+//! Newton–Schulz converges quadratically for matrices with spectrum in
+//! (0, 2) after normalization by the Frobenius norm; it only needs
+//! matmuls, which keeps this dependency-free. The input is symmetrized and
+//! regularized (`eps·I`) first, matching the common FID implementations.
+
+use super::{eye, fro_norm, matmul_sq, trace};
+
+/// Diagnostics from a sqrtm computation.
+#[derive(Debug, Clone)]
+pub struct SqrtmReport {
+    pub iterations: usize,
+    pub residual: f32, // ‖Y·Y − A‖_F / ‖A‖_F
+    pub converged: bool,
+}
+
+/// Newton–Schulz matrix square root of a (nearly) SPD matrix `a` (n×n).
+/// Returns (Y ≈ A^{1/2}, report). `eps` is added to the diagonal for
+/// conditioning; `max_iter` bounds the iteration count.
+pub fn sqrtm_newton_schulz(
+    a: &[f32],
+    n: usize,
+    eps: f32,
+    max_iter: usize,
+) -> (Vec<f32>, SqrtmReport) {
+    assert_eq!(a.len(), n * n);
+    // Symmetrize + regularize.
+    let mut m = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            m[i * n + j] = 0.5 * (a[i * n + j] + a[j * n + i]);
+        }
+        m[i * n + i] += eps;
+    }
+    let norm = fro_norm(&m).max(1e-12);
+    let inv_norm = 1.0 / norm;
+    // Y0 = A/‖A‖, Z0 = I
+    let mut y: Vec<f32> = m.iter().map(|&v| v * inv_norm).collect();
+    let mut z = eye(n);
+    let id = eye(n);
+
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // T = (3I − Z·Y) / 2
+        let zy = matmul_sq(&z, &y, n);
+        let mut t = vec![0.0f32; n * n];
+        for i in 0..n * n {
+            t[i] = 0.5 * (3.0 * id[i] - zy[i]);
+        }
+        let y_next = matmul_sq(&y, &t, n);
+        let z_next = matmul_sq(&t, &z, n);
+        // Convergence check on the normalized iterate.
+        let mut delta = 0.0f64;
+        for i in 0..n * n {
+            delta += ((y_next[i] - y[i]) as f64).powi(2);
+        }
+        y = y_next;
+        z = z_next;
+        if delta.sqrt() < 1e-7 {
+            break;
+        }
+    }
+    // Un-normalize: A^{1/2} = sqrt(‖A‖)·Y
+    let scale = norm.sqrt();
+    for v in y.iter_mut() {
+        *v *= scale;
+    }
+    // Residual diagnostics.
+    let yy = matmul_sq(&y, &y, n);
+    let mut diff = vec![0.0f32; n * n];
+    for i in 0..n * n {
+        diff[i] = yy[i] - m[i];
+    }
+    let residual = fro_norm(&diff) / fro_norm(&m).max(1e-12);
+    let report = SqrtmReport { iterations, residual, converged: residual < 1e-2 };
+    (y, report)
+}
+
+/// Tr((A·B)^{1/2}) for SPD A, B — the cross term of FID.
+///
+/// A·B itself is non-symmetric (Newton–Schulz would diverge on its
+/// possibly-indefinite symmetrization), so we use the standard similarity
+/// trick: with S = B^{1/2}, Tr((A·B)^{1/2}) = Tr((S·A·S)^{1/2}) and
+/// S·A·S is SPD.
+pub fn trace_sqrt_product(a: &[f32], b: &[f32], n: usize) -> f32 {
+    let (s, _rep) = sqrtm_newton_schulz(b, n, 1e-6, 64);
+    let sa = matmul_sq(&s, a, n);
+    let sas = matmul_sq(&sa, &s, n);
+    let (root, _rep) = sqrtm_newton_schulz(&sas, n, 1e-6, 64);
+    trace(&root, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqrt_of_identity_is_identity() {
+        let i4 = eye(4);
+        let (s, rep) = sqrtm_newton_schulz(&i4, 4, 0.0, 32);
+        assert!(rep.converged, "residual={}", rep.residual);
+        for r in 0..4 {
+            for c in 0..4 {
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((s[r * 4 + c] - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_of_diagonal() {
+        let mut a = vec![0.0f32; 9];
+        a[0] = 4.0;
+        a[4] = 9.0;
+        a[8] = 16.0;
+        let (s, rep) = sqrtm_newton_schulz(&a, 3, 0.0, 64);
+        assert!(rep.converged, "residual={}", rep.residual);
+        assert!((s[0] - 2.0).abs() < 1e-2);
+        assert!((s[4] - 3.0).abs() < 1e-2);
+        assert!((s[8] - 4.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        // Random-ish SPD matrix: A = Bᵀ·B + I
+        let b = [0.5f32, -1.0, 2.0, 0.3, 1.0, -0.7, 0.2, 0.9, 1.5];
+        let bt = super::super::transpose(&b, 3, 3);
+        let mut a = matmul_sq(&bt, &b, 3);
+        for i in 0..3 {
+            a[i * 3 + i] += 1.0;
+        }
+        let (s, rep) = sqrtm_newton_schulz(&a, 3, 0.0, 64);
+        assert!(rep.converged, "residual={}", rep.residual);
+        let ss = matmul_sq(&s, &s, 3);
+        for i in 0..9 {
+            assert!((ss[i] - a[i]).abs() < 0.05, "i={i} got={} want={}", ss[i], a[i]);
+        }
+    }
+
+    #[test]
+    fn trace_sqrt_product_of_identities() {
+        let i3 = eye(3);
+        let t = trace_sqrt_product(&i3, &i3, 3);
+        assert!((t - 3.0).abs() < 1e-2);
+    }
+}

@@ -1,0 +1,162 @@
+//! Dense linear algebra needed by the metrics stack (FID requires a matrix
+//! square root) and the native models: matmul, covariance, trace, and a
+//! Newton–Schulz matrix square root.
+
+mod matsqrt;
+
+pub use matsqrt::{sqrtm_newton_schulz, trace_sqrt_product, SqrtmReport};
+
+/// Row-major `m×k · k×n → m×n` with f32 accumulation over a blocked loop.
+/// Good enough for metric-sized matrices (≤ a few hundred); the training
+/// hot path's matmuls live in XLA.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(b.len(), k * n, "B is {k}x{n}");
+    let mut c = vec![0.0f32; m * n];
+    // i-k-j loop order: streams through B rows, C rows stay hot.
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Transpose an `m×n` row-major matrix.
+pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    let mut t = vec![0.0f32; n * m];
+    for i in 0..m {
+        for j in 0..n {
+            t[j * m + i] = a[i * n + j];
+        }
+    }
+    t
+}
+
+/// Identity matrix n×n.
+pub fn eye(n: usize) -> Vec<f32> {
+    let mut a = vec![0.0f32; n * n];
+    for i in 0..n {
+        a[i * n + i] = 1.0;
+    }
+    a
+}
+
+/// Trace of a square matrix.
+pub fn trace(a: &[f32], n: usize) -> f32 {
+    assert_eq!(a.len(), n * n);
+    (0..n).map(|i| a[i * n + i] as f64).sum::<f64>() as f32
+}
+
+/// Frobenius norm.
+pub fn fro_norm(a: &[f32]) -> f32 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Column mean of an `n×d` sample matrix (rows = samples).
+pub fn col_mean(x: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * d);
+    assert!(n > 0);
+    let mut mu = vec![0.0f64; d];
+    for i in 0..n {
+        for j in 0..d {
+            mu[j] += x[i * d + j] as f64;
+        }
+    }
+    mu.iter().map(|&v| (v / n as f64) as f32).collect()
+}
+
+/// Sample covariance (divide by n) of an `n×d` matrix, returned `d×d`.
+pub fn covariance(x: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert!(n > 0);
+    let mu = col_mean(x, n, d);
+    let mut cov = vec![0.0f64; d * d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        for a in 0..d {
+            let da = (row[a] - mu[a]) as f64;
+            for b in a..d {
+                cov[a * d + b] += da * (row[b] - mu[b]) as f64;
+            }
+        }
+    }
+    let mut out = vec![0.0f32; d * d];
+    for a in 0..d {
+        for b in a..d {
+            let v = (cov[a * d + b] / n as f64) as f32;
+            out[a * d + b] = v;
+            out[b * d + a] = v;
+        }
+    }
+    out
+}
+
+/// `C = A·B` for square n×n (convenience wrapper).
+pub fn matmul_sq(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    matmul(a, b, n, n, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] * [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        // (1x3)·(3x2)
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&a, &b, 1, 3, 2), vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let t = transpose(&a, 2, 3);
+        assert_eq!(t, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(transpose(&t, 3, 2), a.to_vec());
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let i = eye(2);
+        assert_eq!(matmul_sq(&a, &i, 2), a.to_vec());
+        assert_eq!(matmul_sq(&i, &a, 2), a.to_vec());
+        assert_eq!(trace(&i, 2), 2.0);
+    }
+
+    #[test]
+    fn covariance_of_known_data() {
+        // Two vars, perfectly correlated: x2 = 2*x1.
+        let x = [1.0, 2.0, 2.0, 4.0, 3.0, 6.0]; // 3 samples x 2 dims
+        let cov = covariance(&x, 3, 2);
+        // var(x1) = 2/3, cov = 4/3, var(x2) = 8/3
+        assert!((cov[0] - 2.0 / 3.0).abs() < 1e-5);
+        assert!((cov[1] - 4.0 / 3.0).abs() < 1e-5);
+        assert!((cov[3] - 8.0 / 3.0).abs() < 1e-5);
+        assert_eq!(cov[1], cov[2]); // symmetric
+    }
+
+    #[test]
+    fn col_mean_works() {
+        let x = [0.0, 10.0, 2.0, 20.0];
+        assert_eq!(col_mean(&x, 2, 2), vec![1.0, 15.0]);
+    }
+}

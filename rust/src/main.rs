@@ -1,0 +1,7 @@
+//! DQGAN CLI entrypoint (subcommands implemented in `cli/`).
+fn main() {
+    if let Err(e) = dqgan::cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Fixed random-feature conv net — the Inception-v3 stand-in.
+//!
+//! Architecture (CHW, input 3×32×32, pixels in [−1,1]):
+//!
+//! ```text
+//! conv1: 3→12, 3×3, stride 2, pad 1 → ReLU   (12×16×16)
+//! conv2: 12→32, 3×3, stride 2, pad 1 → ReLU  (32×8×8)
+//! global average pool → features ∈ R³²
+//! head: linear 32→10 → logits (for the proxy Inception Score)
+//! ```
+//!
+//! All weights are drawn once from a **fixed seed** (He-scaled Gaussians),
+//! so every run, every method and both language implementations (this one
+//! and `python/compile/models/feature_net.py`) score with the *same*
+//! embedding.
+
+use crate::data::{IMG_C, IMG_H, IMG_LEN, IMG_W};
+use crate::util::rng::Pcg32;
+
+pub const FEATURE_DIM: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+
+const C1: usize = 12;
+const C2: usize = FEATURE_DIM;
+const K: usize = 3;
+
+/// The canonical seed used by both implementations. Keep in sync with
+/// `feature_net.py`.
+pub const FEATURE_NET_SEED: u64 = 0xFEA7_0001;
+
+/// Fixed random conv feature extractor.
+pub struct FeatureNet {
+    /// conv1 [C1][IMG_C][K][K]
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    /// conv2 [C2][C1][K][K]
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    /// head [NUM_CLASSES][FEATURE_DIM]
+    wh: Vec<f32>,
+    bh: Vec<f32>,
+}
+
+impl Default for FeatureNet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FeatureNet {
+    /// Build with the canonical seed.
+    pub fn new() -> Self {
+        Self::with_seed(FEATURE_NET_SEED)
+    }
+
+    /// Build with an explicit seed (tests).
+    pub fn with_seed(seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let he = |fan_in: usize, rng: &mut Pcg32| (2.0 / fan_in as f32).sqrt() * rng.normal();
+        let w1: Vec<f32> =
+            (0..C1 * IMG_C * K * K).map(|_| he(IMG_C * K * K, &mut rng)).collect();
+        let b1 = vec![0.0; C1];
+        let w2: Vec<f32> = (0..C2 * C1 * K * K).map(|_| he(C1 * K * K, &mut rng)).collect();
+        let b2 = vec![0.0; C2];
+        let wh: Vec<f32> =
+            (0..NUM_CLASSES * FEATURE_DIM).map(|_| he(FEATURE_DIM, &mut rng)).collect();
+        let bh = vec![0.0; NUM_CLASSES];
+        Self { w1, b1, w2, b2, wh, bh }
+    }
+
+    /// Raw weights (exported for the JAX mirror's golden test).
+    pub fn weights(&self) -> (&[f32], &[f32], &[f32], &[f32], &[f32], &[f32]) {
+        (&self.w1, &self.b1, &self.w2, &self.b2, &self.wh, &self.bh)
+    }
+
+    /// Features + logits for one image (flat CHW, length IMG_LEN).
+    pub fn features(&self, img: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(img.len(), IMG_LEN);
+        // conv1: stride 2, pad 1 → 16×16
+        let h1 = IMG_H / 2;
+        let w1s = IMG_W / 2;
+        let mut a1 = vec![0.0f32; C1 * h1 * w1s];
+        conv2d(img, IMG_C, IMG_H, IMG_W, &self.w1, &self.b1, C1, 2, &mut a1);
+        relu(&mut a1);
+        // conv2: stride 2, pad 1 → 8×8
+        let h2 = h1 / 2;
+        let w2s = w1s / 2;
+        let mut a2 = vec![0.0f32; C2 * h2 * w2s];
+        conv2d(&a1, C1, h1, w1s, &self.w2, &self.b2, C2, 2, &mut a2);
+        relu(&mut a2);
+        // global average pool
+        let mut feat = vec![0.0f32; FEATURE_DIM];
+        let hw = h2 * w2s;
+        for c in 0..C2 {
+            let s: f32 = a2[c * hw..(c + 1) * hw].iter().sum();
+            feat[c] = s / hw as f32;
+        }
+        // head
+        let mut logits = vec![0.0f32; NUM_CLASSES];
+        for k in 0..NUM_CLASSES {
+            let mut a = self.bh[k];
+            for c in 0..FEATURE_DIM {
+                a += self.wh[k * FEATURE_DIM + c] * feat[c];
+            }
+            logits[k] = a;
+        }
+        (feat, logits)
+    }
+
+    /// Features + logits for a batch (flat n×IMG_LEN). Returns
+    /// (features n×FEATURE_DIM, logits n×NUM_CLASSES).
+    pub fn features_batch(&self, imgs: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(imgs.len() % IMG_LEN, 0);
+        let n = imgs.len() / IMG_LEN;
+        let mut feats = Vec::with_capacity(n * FEATURE_DIM);
+        let mut logits = Vec::with_capacity(n * NUM_CLASSES);
+        for i in 0..n {
+            let (f, l) = self.features(&imgs[i * IMG_LEN..(i + 1) * IMG_LEN]);
+            feats.extend(f);
+            logits.extend(l);
+        }
+        (feats, logits)
+    }
+}
+
+/// Direct 3×3 conv, stride `s`, pad 1, CHW layout.
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    input: &[f32],
+    in_c: usize,
+    in_h: usize,
+    in_w: usize,
+    weight: &[f32],
+    bias: &[f32],
+    out_c: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    let out_h = in_h / stride;
+    let out_w = in_w / stride;
+    assert_eq!(out.len(), out_c * out_h * out_w);
+    for oc in 0..out_c {
+        for oy in 0..out_h {
+            for ox in 0..out_w {
+                let mut acc = bias[oc];
+                // input center = (oy*stride, ox*stride) with pad 1 means
+                // receptive field rows iy = oy*s − 1 + ky.
+                for ic in 0..in_c {
+                    for ky in 0..K {
+                        let iy = (oy * stride + ky) as isize - 1;
+                        if iy < 0 || iy >= in_h as isize {
+                            continue;
+                        }
+                        for kx in 0..K {
+                            let ix = (ox * stride + kx) as isize - 1;
+                            if ix < 0 || ix >= in_w as isize {
+                                continue;
+                            }
+                            let wv = weight
+                                [oc * in_c * K * K + ic * K * K + ky * K + kx];
+                            let iv = input[ic * in_h * in_w
+                                + iy as usize * in_w
+                                + ix as usize];
+                            acc += wv * iv;
+                        }
+                    }
+                }
+                out[oc * out_h * out_w + oy * out_w + ox] = acc;
+            }
+        }
+    }
+}
+
+fn relu(a: &mut [f32]) {
+    for v in a.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthImages;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let ds = SynthImages::cifar_like(1);
+        let mut rng = Pcg32::new(2);
+        let (img, _) = ds.sample_batch(1, &mut rng);
+        let n1 = FeatureNet::new();
+        let n2 = FeatureNet::new();
+        assert_eq!(n1.features(&img).0, n2.features(&img).0);
+    }
+
+    #[test]
+    fn different_images_different_features() {
+        let ds = SynthImages::cifar_like(1);
+        let mut rng = Pcg32::new(3);
+        let (imgs, _) = ds.sample_batch(2, &mut rng);
+        let net = FeatureNet::new();
+        let (f, _) = net.features_batch(&imgs);
+        let a = &f[..FEATURE_DIM];
+        let b = &f[FEATURE_DIM..];
+        assert!(crate::util::stats::dist2_sq(a, b) > 1e-6);
+    }
+
+    #[test]
+    fn features_separate_classes_better_than_chance() {
+        // Same-class feature distance < cross-class distance on average —
+        // the property that makes proxy-FID discriminative.
+        let ds = SynthImages::cifar_like(7);
+        let net = FeatureNet::new();
+        let mut rng = Pcg32::new(8);
+        let mut intra = 0.0f64;
+        let mut inter = 0.0f64;
+        let mut buf_a = vec![0.0; IMG_LEN];
+        let mut buf_b = vec![0.0; IMG_LEN];
+        for t in 0..24 {
+            let ca = t % 5;
+            ds.render(ca, &mut rng, &mut buf_a);
+            ds.render(ca, &mut rng, &mut buf_b);
+            let fa = net.features(&buf_a).0;
+            let fb = net.features(&buf_b).0;
+            intra += crate::util::stats::dist2_sq(&fa, &fb) as f64;
+            ds.render(ca + 5, &mut rng, &mut buf_b);
+            let fc = net.features(&buf_b).0;
+            inter += crate::util::stats::dist2_sq(&fa, &fc) as f64;
+        }
+        assert!(inter > intra, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn logits_have_class_signal() {
+        // Mean logit vectors of two classes should differ.
+        let ds = SynthImages::cifar_like(9);
+        let net = FeatureNet::new();
+        let mut rng = Pcg32::new(10);
+        let mut buf = vec![0.0; IMG_LEN];
+        let mean_logits = |cls: usize, rng: &mut Pcg32, buf: &mut Vec<f32>| {
+            let mut acc = vec![0.0f32; NUM_CLASSES];
+            for _ in 0..10 {
+                ds.render(cls, rng, buf);
+                let (_, l) = net.features(buf);
+                for (a, b) in acc.iter_mut().zip(&l) {
+                    *a += b / 10.0;
+                }
+            }
+            acc
+        };
+        let l0 = mean_logits(0, &mut rng, &mut buf);
+        let l1 = mean_logits(1, &mut rng, &mut buf);
+        assert!(crate::util::stats::dist2_sq(&l0, &l1) > 1e-4);
+    }
+}

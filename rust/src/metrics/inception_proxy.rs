@@ -1,0 +1,110 @@
+//! Proxy Inception Score (Salimans et al. [38]) over the fixed feature
+//! net's classifier head:
+//!
+//!   IS = exp( E_x[ KL( p(y|x) ‖ p(y) ) ] ),   p(y) = E_x[ p(y|x) ]
+//!
+//! Higher is better: it rewards confident per-sample predictions (quality)
+//! spread across many classes (diversity). Range is [1, NUM_CLASSES].
+
+use super::NUM_CLASSES;
+
+/// Softmax in place (numerically stable).
+fn softmax(logits: &mut [f32]) {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in logits.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in logits.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Inception score from a flat [n × NUM_CLASSES] logits buffer.
+pub fn inception_score(logits: &[f32], n: usize) -> f32 {
+    assert_eq!(logits.len(), n * NUM_CLASSES);
+    assert!(n > 0);
+    // per-sample p(y|x) and the marginal p(y)
+    let mut probs = logits.to_vec();
+    let mut marginal = vec![0.0f64; NUM_CLASSES];
+    for i in 0..n {
+        let row = &mut probs[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
+        softmax(row);
+        for (m, &p) in marginal.iter_mut().zip(row.iter()) {
+            *m += p as f64 / n as f64;
+        }
+    }
+    // E KL(p(y|x) || p(y))
+    let mut kl = 0.0f64;
+    for i in 0..n {
+        let row = &probs[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
+        for (k, &p) in row.iter().enumerate() {
+            if p > 1e-12 {
+                kl += p as f64 * ((p as f64 / marginal[k].max(1e-12)).ln()) / n as f64;
+            }
+        }
+    }
+    kl.exp() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_hot_logits(class: usize, sharp: f32) -> Vec<f32> {
+        let mut l = vec![0.0f32; NUM_CLASSES];
+        l[class] = sharp;
+        l
+    }
+
+    #[test]
+    fn uniform_predictions_give_score_one() {
+        // All samples predicted uniformly → KL = 0 → IS = 1.
+        let n = 16;
+        let logits = vec![0.0f32; n * NUM_CLASSES];
+        let is = inception_score(&logits, n);
+        assert!((is - 1.0).abs() < 1e-4, "is={is}");
+    }
+
+    #[test]
+    fn confident_diverse_predictions_max_score() {
+        // Each sample confidently in a distinct class, all classes covered:
+        // IS → NUM_CLASSES.
+        let n = NUM_CLASSES;
+        let mut logits = Vec::new();
+        for c in 0..n {
+            logits.extend(one_hot_logits(c, 50.0));
+        }
+        let is = inception_score(&logits, n);
+        assert!(is > NUM_CLASSES as f32 * 0.95, "is={is}");
+    }
+
+    #[test]
+    fn mode_collapse_scores_low() {
+        // All samples confidently the SAME class → p(y) = p(y|x) → IS = 1.
+        let n = 32;
+        let mut logits = Vec::new();
+        for _ in 0..n {
+            logits.extend(one_hot_logits(3, 50.0));
+        }
+        let is = inception_score(&logits, n);
+        assert!((is - 1.0).abs() < 1e-3, "is={is}");
+    }
+
+    #[test]
+    fn partial_coverage_is_intermediate() {
+        // Confident predictions over half the classes: IS ≈ NUM_CLASSES/2.
+        let n = NUM_CLASSES;
+        let mut logits = Vec::new();
+        for c in 0..n {
+            logits.extend(one_hot_logits(c % (NUM_CLASSES / 2), 50.0));
+        }
+        let is = inception_score(&logits, n);
+        assert!(
+            (is - (NUM_CLASSES / 2) as f32).abs() < 0.5,
+            "is={is}, want ≈ {}",
+            NUM_CLASSES / 2
+        );
+    }
+}

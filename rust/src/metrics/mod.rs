@@ -1,0 +1,47 @@
+//! Evaluation metrics (paper §4): proxy Inception Score and proxy FID over
+//! a fixed random-feature convolutional network.
+//!
+//! The paper scores CIFAR-10/CelebA GANs with the Inception-v3 network;
+//! offline we substitute a *fixed, seeded* random conv net (DESIGN.md §5):
+//! IS/FID are functionals of a fixed feature map, and comparisons between
+//! methods trained on the same data are preserved under any sufficiently
+//! nonlinear fixed embedding. The same network ships as a JAX artifact
+//! (`python/compile/models/feature_net.py`); an integration test checks
+//! the two implementations agree.
+
+mod feature_net;
+mod fid;
+mod inception_proxy;
+
+pub use feature_net::{FeatureNet, FEATURE_DIM, NUM_CLASSES};
+pub use fid::{fid_from_features, FidParts};
+pub use inception_proxy::inception_score;
+
+use crate::data::IMG_LEN;
+use crate::util::rng::Pcg32;
+
+/// Score a batch of images (flat n×IMG_LEN, CHW, [−1,1]) against a batch
+/// of reference images: returns (inception-proxy score, proxy FID).
+pub fn score_images(
+    net: &FeatureNet,
+    generated: &[f32],
+    reference: &[f32],
+) -> (f32, f32) {
+    let n_gen = generated.len() / IMG_LEN;
+    let n_ref = reference.len() / IMG_LEN;
+    assert!(n_gen > 1 && n_ref > 1, "need ≥2 images on each side");
+    let (feat_g, logits_g) = net.features_batch(generated);
+    let (feat_r, _) = net.features_batch(reference);
+    let is = inception_score(&logits_g, n_gen);
+    let fid = fid_from_features(&feat_g, n_gen, &feat_r, n_ref, FEATURE_DIM).fid;
+    (is, fid)
+}
+
+/// Convenience for tests: render a labelled reference batch.
+pub fn reference_batch(
+    ds: &crate::data::SynthImages,
+    n: usize,
+    rng: &mut Pcg32,
+) -> Vec<f32> {
+    ds.sample_batch(n, rng).0
+}

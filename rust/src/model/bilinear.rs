@@ -1,0 +1,191 @@
+//! The bilinear saddle-point game `min_θ max_φ  θᵀ A φ + bᵀθ − cᵀφ`
+//! (paper §2.2's motivating example [23]): the operator
+//!
+//!   F(θ, φ) = [A·φ + b,  −(Aᵀ·θ − c)]
+//!
+//! has a unique stationary point and *purely rotational* dynamics around
+//! it — simultaneous GDA provably spirals out, OMD/extragradient converge.
+//! This is SYN-B's workload.
+
+use crate::grad::{GradMeta, GradientSource};
+use crate::util::rng::Pcg32;
+
+/// Bilinear game over θ, φ ∈ R^n.
+pub struct BilinearGame {
+    pub n: usize,
+    /// Row-major n×n coupling matrix A.
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub c: Vec<f32>,
+    /// Gradient noise std (σ), divided by √batch.
+    pub noise: f32,
+}
+
+impl BilinearGame {
+    /// The 1-D classic `θ·φ` (A = I₁, b = c = 0).
+    pub fn scalar() -> Self {
+        Self { n: 1, a: vec![1.0], b: vec![0.0], c: vec![0.0], noise: 0.0 }
+    }
+
+    /// Random well-conditioned instance.
+    pub fn random(n: usize, noise: f32, rng: &mut Pcg32) -> Self {
+        // A = I + 0.5·G/√n keeps the spectrum away from zero.
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] =
+                    if i == j { 1.0 } else { 0.0 } + 0.5 * rng.normal() / (n as f32).sqrt();
+            }
+        }
+        Self { n, a, b: rng.normal_vec(n), c: rng.normal_vec(n), noise }
+    }
+
+    /// The stationary point (θ*, φ*): A·φ* = −b, Aᵀ·θ* = c.
+    /// Solved by Gaussian elimination (n is small in experiments).
+    pub fn stationary_point(&self) -> Vec<f32> {
+        let n = self.n;
+        let neg_b: Vec<f32> = self.b.iter().map(|x| -x).collect();
+        let phi = solve(&self.a, &neg_b, n);
+        let at = crate::linalg::transpose(&self.a, n, n);
+        let theta = solve(&at, &self.c, n);
+        let mut w = theta;
+        w.extend(phi);
+        w
+    }
+
+    /// Distance to the stationary point.
+    pub fn dist_to_solution(&self, w: &[f32]) -> f32 {
+        let star = self.stationary_point();
+        crate::util::stats::dist2_sq(w, &star).sqrt()
+    }
+}
+
+/// Dense LU-free solve via Gauss–Jordan with partial pivoting (small n).
+fn solve(a: &[f32], rhs: &[f32], n: usize) -> Vec<f32> {
+    let mut m = vec![0.0f64; n * (n + 1)];
+    for i in 0..n {
+        for j in 0..n {
+            m[i * (n + 1) + j] = a[i * n + j] as f64;
+        }
+        m[i * (n + 1) + n] = rhs[i] as f64;
+    }
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if m[r * (n + 1) + col].abs() > m[piv * (n + 1) + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for j in 0..=n {
+                m.swap(col * (n + 1) + j, piv * (n + 1) + j);
+            }
+        }
+        let d = m[col * (n + 1) + col];
+        assert!(d.abs() > 1e-12, "singular system");
+        for j in 0..=n {
+            m[col * (n + 1) + j] /= d;
+        }
+        for r in 0..n {
+            if r != col {
+                let f = m[r * (n + 1) + col];
+                for j in 0..=n {
+                    m[r * (n + 1) + j] -= f * m[col * (n + 1) + j];
+                }
+            }
+        }
+    }
+    (0..n).map(|i| m[i * (n + 1) + n] as f32).collect()
+}
+
+impl GradientSource for BilinearGame {
+    fn dim(&self) -> usize {
+        2 * self.n
+    }
+
+    fn grad(
+        &mut self,
+        w: &[f32],
+        batch: usize,
+        rng: &mut Pcg32,
+        out: &mut [f32],
+    ) -> anyhow::Result<GradMeta> {
+        let n = self.n;
+        let (theta, phi) = w.split_at(n);
+        let eff = self.noise / (batch.max(1) as f32).sqrt();
+        // ∇θ = A·φ + b
+        for i in 0..n {
+            let mut acc = self.b[i];
+            for j in 0..n {
+                acc += self.a[i * n + j] * phi[j];
+            }
+            out[i] = acc + eff * rng.normal();
+        }
+        // ∇φ of the *descent* formulation: −(Aᵀ·θ − c)
+        for j in 0..n {
+            let mut acc = -self.c[j];
+            for i in 0..n {
+                acc += self.a[i * n + j] * theta[i];
+            }
+            out[n + j] = -acc + eff * rng.normal();
+        }
+        Ok(GradMeta::default())
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        // Start on a circle of radius ~2 around the origin.
+        let mut w = rng.normal_vec(2 * self.n);
+        let norm = crate::util::stats::norm2(&w).max(1e-6);
+        for v in w.iter_mut() {
+            *v *= 2.0 / norm;
+        }
+        w
+    }
+
+    fn name(&self) -> String {
+        format!("bilinear(n={})", self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Omd;
+
+    #[test]
+    fn gradient_is_rotational_for_scalar_game() {
+        let mut g = BilinearGame::scalar();
+        let mut out = vec![0.0; 2];
+        let mut rng = Pcg32::new(1);
+        g.grad(&[1.0, 0.5], 1, &mut rng, &mut out).unwrap();
+        assert_eq!(out, vec![0.5, -1.0]); // F(θ,φ) = (φ, −θ)
+    }
+
+    #[test]
+    fn stationary_point_zeroes_gradient() {
+        let mut rng = Pcg32::new(2);
+        let mut g = BilinearGame::random(4, 0.0, &mut rng);
+        let star = g.stationary_point();
+        let mut out = vec![0.0; 8];
+        g.grad(&star, 1, &mut rng, &mut out).unwrap();
+        for &x in &out {
+            assert!(x.abs() < 1e-4, "F(w*)={out:?}");
+        }
+    }
+
+    #[test]
+    fn omd_converges_on_random_instance() {
+        let mut rng = Pcg32::new(3);
+        let mut g = BilinearGame::random(4, 0.0, &mut rng);
+        let mut w = g.init_params(&mut rng);
+        let mut omd = Omd::new(0.3, 8);
+        for _ in 0..6000 {
+            let mut grng = Pcg32::new(0);
+            omd.step_with(&mut w, |p, o| {
+                g.grad(p, 1, &mut grng, o).unwrap();
+            });
+        }
+        assert!(g.dist_to_solution(&w) < 1e-2, "dist={}", g.dist_to_solution(&w));
+    }
+}

@@ -1,0 +1,442 @@
+//! Native-Rust WGAN on 2-D Gaussian mixtures with exact analytic backprop
+//! (the SYN-A workload, and the fast path for theory sweeps).
+//!
+//! Architecture (one hidden layer each, tanh):
+//!
+//! ```text
+//! G: z ∈ R^nz → h = tanh(Wg1·z + bg1) → x = Wg2·h + bg2 ∈ R²
+//! D: x ∈ R²  → h = tanh(Wd1·x + bd1) → y = wd2·h + bd2 ∈ R
+//! ```
+//!
+//! WGAN losses (paper eq. 6–7):
+//!   L_G(θ,φ) = −E_z[D(G(z))]
+//!   L_D(θ,φ) = −E_x[D(x)] + E_z[D(G(z))] + (λ/2)‖φ‖²
+//! The λ-term is a soft critic regularizer standing in for WGAN's weight
+//! clipping (keeps the critic bounded; applied to all of φ).
+//!
+//! F(w) = [∇θ L_G; ∇φ L_D] over the stacked vector w = [θ; φ]. The
+//! analytic gradients are verified against finite differences in tests.
+
+use crate::data::GaussianMixture2D;
+use crate::grad::{GradMeta, GradientSource};
+use crate::tensor::ParamLayout;
+use crate::util::rng::Pcg32;
+
+const DATA_DIM: usize = 2;
+
+/// Sizes + hyperparameters.
+#[derive(Debug, Clone)]
+pub struct MlpGanConfig {
+    pub noise_dim: usize,
+    pub gen_hidden: usize,
+    pub disc_hidden: usize,
+    /// Critic L2 coefficient λ (Lipschitz surrogate).
+    pub critic_l2: f32,
+    /// Data distribution.
+    pub mixture_modes: usize,
+    pub mixture_radius: f32,
+    pub mixture_std: f32,
+}
+
+impl Default for MlpGanConfig {
+    fn default() -> Self {
+        Self {
+            noise_dim: 4,
+            gen_hidden: 32,
+            disc_hidden: 32,
+            critic_l2: 1e-2,
+            mixture_modes: 8,
+            mixture_radius: 2.0,
+            mixture_std: 0.1,
+        }
+    }
+}
+
+/// The model: parameter layout + data generator. Parameters themselves
+/// live in the flat vector owned by the training algorithm.
+pub struct MlpGan {
+    pub cfg: MlpGanConfig,
+    pub layout: ParamLayout,
+    pub data: GaussianMixture2D,
+    off: Offsets,
+}
+
+/// Flat offsets of each parameter block.
+#[derive(Debug, Clone, Copy)]
+struct Offsets {
+    wg1: usize,
+    bg1: usize,
+    wg2: usize,
+    bg2: usize,
+    wd1: usize,
+    bd1: usize,
+    wd2: usize,
+    bd2: usize,
+    /// Start of the φ (discriminator) block.
+    phi_start: usize,
+    total: usize,
+}
+
+impl MlpGan {
+    pub fn new(cfg: MlpGanConfig) -> Self {
+        let (nz, hg, hd) = (cfg.noise_dim, cfg.gen_hidden, cfg.disc_hidden);
+        let mut layout = ParamLayout::new();
+        layout.push("gen.w1", &[hg, nz]);
+        layout.push("gen.b1", &[hg]);
+        layout.push("gen.w2", &[DATA_DIM, hg]);
+        layout.push("gen.b2", &[DATA_DIM]);
+        layout.push("disc.w1", &[hd, DATA_DIM]);
+        layout.push("disc.b1", &[hd]);
+        layout.push("disc.w2", &[hd]);
+        layout.push("disc.b2", &[1]);
+        let o = |name: &str| layout.spec(layout.index_of(name).unwrap()).offset;
+        let off = Offsets {
+            wg1: o("gen.w1"),
+            bg1: o("gen.b1"),
+            wg2: o("gen.w2"),
+            bg2: o("gen.b2"),
+            wd1: o("disc.w1"),
+            bd1: o("disc.b1"),
+            wd2: o("disc.w2"),
+            bd2: o("disc.b2"),
+            phi_start: o("disc.w1"),
+            total: layout.total_len(),
+        };
+        let data =
+            GaussianMixture2D::ring(cfg.mixture_modes, cfg.mixture_radius, cfg.mixture_std);
+        Self { cfg, layout, data, off }
+    }
+
+    /// Generator forward: x = G(z), also returning the hidden activations.
+    fn gen_forward(&self, w: &[f32], z: &[f32]) -> ([f32; DATA_DIM], Vec<f32>) {
+        let (nz, hg) = (self.cfg.noise_dim, self.cfg.gen_hidden);
+        let o = self.off;
+        let mut h = vec![0.0f32; hg];
+        for i in 0..hg {
+            let mut a = w[o.bg1 + i];
+            for j in 0..nz {
+                a += w[o.wg1 + i * nz + j] * z[j];
+            }
+            h[i] = a.tanh();
+        }
+        let mut x = [0.0f32; DATA_DIM];
+        for k in 0..DATA_DIM {
+            let mut a = w[o.bg2 + k];
+            for i in 0..hg {
+                a += w[o.wg2 + k * hg + i] * h[i];
+            }
+            x[k] = a;
+        }
+        (x, h)
+    }
+
+    /// Public generator forward.
+    pub fn generate(&self, w: &[f32], z: &[f32]) -> [f32; DATA_DIM] {
+        self.gen_forward(w, z).0
+    }
+
+    /// Sample `n` generator outputs (metrics/plots).
+    pub fn sample_generator(&self, w: &[f32], n: usize, rng: &mut Pcg32) -> Vec<[f32; 2]> {
+        (0..n)
+            .map(|_| {
+                let z = rng.normal_vec(self.cfg.noise_dim);
+                self.generate(w, &z)
+            })
+            .collect()
+    }
+
+    /// Critic forward: (D(x), hidden activations).
+    fn critic_forward(&self, w: &[f32], x: &[f32; DATA_DIM]) -> (f32, Vec<f32>) {
+        let hd = self.cfg.disc_hidden;
+        let o = self.off;
+        let mut h = vec![0.0f32; hd];
+        let mut y = w[o.bd2];
+        for i in 0..hd {
+            let a = w[o.bd1 + i]
+                + w[o.wd1 + i * DATA_DIM] * x[0]
+                + w[o.wd1 + i * DATA_DIM + 1] * x[1];
+            h[i] = a.tanh();
+            y += w[o.wd2 + i] * h[i];
+        }
+        (y, h)
+    }
+
+    /// Public critic forward.
+    pub fn criticize(&self, w: &[f32], x: &[f32; DATA_DIM]) -> f32 {
+        self.critic_forward(w, x).0
+    }
+
+    /// ∇_x D(x) given the critic's hidden activations.
+    fn critic_input_grad(&self, w: &[f32], h: &[f32]) -> [f32; DATA_DIM] {
+        let hd = self.cfg.disc_hidden;
+        let o = self.off;
+        let mut gx = [0.0f32; DATA_DIM];
+        for i in 0..hd {
+            let gi = w[o.wd2 + i] * (1.0 - h[i] * h[i]);
+            gx[0] += gi * w[o.wd1 + i * DATA_DIM];
+            gx[1] += gi * w[o.wd1 + i * DATA_DIM + 1];
+        }
+        gx
+    }
+
+    /// Accumulate ∇φ of `coef·D(x)` into `out` (given forward h).
+    fn critic_param_grad(
+        &self,
+        w: &[f32],
+        x: &[f32; DATA_DIM],
+        h: &[f32],
+        coef: f32,
+        out: &mut [f32],
+    ) {
+        let hd = self.cfg.disc_hidden;
+        let o = self.off;
+        out[o.bd2] += coef;
+        for i in 0..hd {
+            out[o.wd2 + i] += coef * h[i];
+            let ga = coef * w[o.wd2 + i] * (1.0 - h[i] * h[i]);
+            out[o.bd1 + i] += ga;
+            out[o.wd1 + i * DATA_DIM] += ga * x[0];
+            out[o.wd1 + i * DATA_DIM + 1] += ga * x[1];
+        }
+    }
+
+    /// Accumulate ∇θ of `gx·G(z)` into `out` (given forward h): backprop
+    /// the 2-vector `gx = dL/dx` through the generator.
+    fn gen_param_grad(
+        &self,
+        w: &[f32],
+        z: &[f32],
+        h: &[f32],
+        gx: &[f32; DATA_DIM],
+        out: &mut [f32],
+    ) {
+        let (nz, hg) = (self.cfg.noise_dim, self.cfg.gen_hidden);
+        let o = self.off;
+        let mut gh = vec![0.0f32; hg];
+        for k in 0..DATA_DIM {
+            out[o.bg2 + k] += gx[k];
+            for i in 0..hg {
+                out[o.wg2 + k * hg + i] += gx[k] * h[i];
+                gh[i] += w[o.wg2 + k * hg + i] * gx[k];
+            }
+        }
+        for i in 0..hg {
+            let ga = gh[i] * (1.0 - h[i] * h[i]);
+            out[o.bg1 + i] += ga;
+            for j in 0..nz {
+                out[o.wg1 + i * nz + j] += ga * z[j];
+            }
+        }
+    }
+
+    /// Gradient for a fixed minibatch of noise vectors `zs` (B×nz) and
+    /// real samples `xs` (B×2) — the deterministic core shared by `grad`
+    /// and the finite-difference tests.
+    pub fn grad_with_samples(
+        &self,
+        w: &[f32],
+        zs: &[Vec<f32>],
+        xs: &[[f32; DATA_DIM]],
+        out: &mut [f32],
+    ) -> (f32, f32) {
+        assert_eq!(zs.len(), xs.len());
+        assert_eq!(w.len(), self.off.total);
+        assert_eq!(out.len(), self.off.total);
+        let b = zs.len();
+        let inv_b = 1.0 / b as f32;
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let mut loss_g = 0.0f32;
+        let mut loss_d = 0.0f32;
+        for (z, xr) in zs.iter().zip(xs) {
+            // fake
+            let (xg, hg) = self.gen_forward(w, z);
+            let (yf, hdf) = self.critic_forward(w, &xg);
+            // real
+            let (yr, hdr) = self.critic_forward(w, xr);
+            loss_g += -yf * inv_b;
+            loss_d += (-yr + yf) * inv_b;
+            // ∇θ L_G: dL_G/dxg = −(1/B)·∇_x D(xg)
+            let gxd = self.critic_input_grad(w, &hdf);
+            let gx = [-inv_b * gxd[0], -inv_b * gxd[1]];
+            self.gen_param_grad(w, z, &hg, &gx, out);
+            // ∇φ L_D: −(1/B)·D(real) + (1/B)·D(fake)
+            self.critic_param_grad(w, xr, &hdr, -inv_b, out);
+            self.critic_param_grad(w, &xg, &hdf, inv_b, out);
+        }
+        // critic L2: λ·φ
+        if self.cfg.critic_l2 > 0.0 {
+            for i in self.off.phi_start..self.off.total {
+                out[i] += self.cfg.critic_l2 * w[i];
+                loss_d += 0.5 * self.cfg.critic_l2 * w[i] * w[i];
+            }
+        }
+        (loss_g, loss_d)
+    }
+
+    /// Losses on a fixed minibatch (for the finite-difference tests).
+    pub fn loss_with_samples(
+        &self,
+        w: &[f32],
+        zs: &[Vec<f32>],
+        xs: &[[f32; DATA_DIM]],
+    ) -> (f32, f32) {
+        let b = zs.len() as f32;
+        let mut lg = 0.0f32;
+        let mut ld = 0.0f32;
+        for (z, xr) in zs.iter().zip(xs) {
+            let (xg, _) = self.gen_forward(w, z);
+            let yf = self.criticize(w, &xg);
+            let yr = self.criticize(w, xr);
+            lg += -yf / b;
+            ld += (-yr + yf) / b;
+        }
+        if self.cfg.critic_l2 > 0.0 {
+            for i in self.off.phi_start..self.off.total {
+                ld += 0.5 * self.cfg.critic_l2 * w[i] * w[i];
+            }
+        }
+        (lg, ld)
+    }
+}
+
+impl GradientSource for MlpGan {
+    fn dim(&self) -> usize {
+        self.off.total
+    }
+
+    fn grad(
+        &mut self,
+        w: &[f32],
+        batch: usize,
+        rng: &mut Pcg32,
+        out: &mut [f32],
+    ) -> anyhow::Result<GradMeta> {
+        let zs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(self.cfg.noise_dim)).collect();
+        let xs: Vec<[f32; 2]> = (0..batch).map(|_| self.data.sample(rng)).collect();
+        let (lg, ld) = self.grad_with_samples(w, &zs, &xs, out);
+        Ok(GradMeta { loss_g: Some(lg), loss_d: Some(ld) })
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.off.total];
+        for spec in self.layout.specs() {
+            let fan_in = if spec.shape.len() == 2 { spec.shape[1] } else { spec.shape[0] };
+            let std = if spec.name.ends_with(".b1") || spec.name.ends_with(".b2") {
+                0.0
+            } else {
+                1.0 / (fan_in as f32).sqrt()
+            };
+            for i in 0..spec.numel() {
+                w[spec.offset + i] = std * rng.normal();
+            }
+        }
+        w
+    }
+
+    fn name(&self) -> String {
+        format!("mlp-gan(d={})", self.off.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixed_batch(gan: &MlpGan, b: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<[f32; 2]>) {
+        let mut rng = Pcg32::new(seed);
+        let zs = (0..b).map(|_| rng.normal_vec(gan.cfg.noise_dim)).collect();
+        let xs = (0..b).map(|_| gan.data.sample(&mut rng)).collect();
+        (zs, xs)
+    }
+
+    #[test]
+    fn analytic_gradient_matches_finite_differences() {
+        let gan = MlpGan::new(MlpGanConfig {
+            noise_dim: 3,
+            gen_hidden: 5,
+            disc_hidden: 4,
+            critic_l2: 0.01,
+            ..Default::default()
+        });
+        let mut rng = Pcg32::new(11);
+        let w = gan.init_params(&mut rng);
+        let (zs, xs) = fixed_batch(&gan, 3, 42);
+        let mut g = vec![0.0; w.len()];
+        gan.grad_with_samples(&w, &zs, &xs, &mut g);
+        // F = [∇θ L_G; ∇φ L_D]: check each coordinate by central difference
+        // of the appropriate loss.
+        let phi_start = gan.off.phi_start;
+        let eps = 3e-3f32;
+        for i in (0..w.len()).step_by(7) {
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[i] += eps;
+            wm[i] -= eps;
+            let (lgp, ldp) = gan.loss_with_samples(&wp, &zs, &xs);
+            let (lgm, ldm) = gan.loss_with_samples(&wm, &zs, &xs);
+            let fd = if i < phi_start { (lgp - lgm) / (2.0 * eps) } else { (ldp - ldm) / (2.0 * eps) };
+            assert!(
+                (fd - g[i]).abs() < 2e-2 * fd.abs().max(1.0),
+                "param {i}: fd={fd} analytic={}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn generator_output_is_finite_and_2d() {
+        let gan = MlpGan::new(MlpGanConfig::default());
+        let mut rng = Pcg32::new(13);
+        let w = gan.init_params(&mut rng);
+        let pts = gan.sample_generator(&w, 32, &mut rng);
+        assert_eq!(pts.len(), 32);
+        assert!(pts.iter().all(|p| p[0].is_finite() && p[1].is_finite()));
+    }
+
+    #[test]
+    fn grad_source_contract() {
+        let mut gan = MlpGan::new(MlpGanConfig::default());
+        let mut rng = Pcg32::new(17);
+        let w = gan.init_params(&mut rng);
+        assert_eq!(w.len(), gan.dim());
+        let mut out = vec![0.0; gan.dim()];
+        let meta = gan.grad(&w, 8, &mut rng, &mut out).unwrap();
+        assert!(meta.loss_g.is_some() && meta.loss_d.is_some());
+        assert!(out.iter().any(|&x| x != 0.0));
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn single_machine_omd_training_improves_quality() {
+        use crate::optim::Omd;
+        let mut gan = MlpGan::new(MlpGanConfig {
+            gen_hidden: 24,
+            disc_hidden: 24,
+            mixture_modes: 4,
+            ..Default::default()
+        });
+        let mut rng = Pcg32::new(19);
+        let mut w = gan.init_params(&mut rng);
+        let q0 = {
+            let pts = gan.sample_generator(&w, 256, &mut rng);
+            gan.data.quality_score(&pts)
+        };
+        let mut omd = Omd::new(0.02, w.len());
+        let mut grng = Pcg32::new(23);
+        for _ in 0..4000 {
+            let mut half = vec![0.0; w.len()];
+            omd.half_point(&w, &mut half);
+            let mut g = vec![0.0; w.len()];
+            gan.grad(&half, 32, &mut grng, &mut g).unwrap();
+            omd.full_step(&mut w, &g);
+        }
+        let q1 = {
+            let pts = gan.sample_generator(&w, 256, &mut rng);
+            gan.data.quality_score(&pts)
+        };
+        assert!(
+            q1 < q0 * 0.8,
+            "training did not improve quality: before={q0} after={q1}"
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Native-Rust models implementing [`crate::grad::GradientSource`].
+//!
+//! The production gradient path is the JAX/Pallas model compiled to XLA
+//! (`runtime::XlaGradSource`); these native models exist because the
+//! theory experiments (SYN-A/B, LEM1, THM3) sweep thousands of
+//! configurations where analytic gradients are both faster and an
+//! independent check on the XLA path (integration tests compare the two).
+//!
+//! - [`BilinearGame`] — the canonical min–max toy `L(θ,φ) = θᵀAφ`;
+//! - [`MlpGan`] — a WGAN on 2-D Gaussian mixtures with one-hidden-layer
+//!   generator and discriminator, exact backprop.
+
+mod bilinear;
+mod mlp_gan;
+
+pub use bilinear::BilinearGame;
+pub use mlp_gan::{MlpGan, MlpGanConfig};

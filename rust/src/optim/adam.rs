@@ -1,0 +1,124 @@
+//! Adam (Kingma & Ba [15]) on the operator F — minimization-style baseline.
+
+use super::{LrSchedule, Optimizer};
+
+/// Standard Adam with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: LrSchedule,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Self {
+            lr: LrSchedule::constant(lr),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    pub fn with_betas(mut self, b1: f32, b2: f32) -> Self {
+        assert!((0.0..1.0).contains(&b1) && (0.0..1.0).contains(&b2));
+        self.beta1 = b1;
+        self.beta2 = b2;
+        self
+    }
+
+    pub fn with_schedule(mut self, lr: LrSchedule) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.m.len() != n {
+            self.m = vec![0.0; n];
+            self.v = vec![0.0; n];
+        }
+    }
+
+    /// The preconditioned direction m̂/(√v̂+ε) *without* applying it —
+    /// shared with [`super::OptimisticAdam`].
+    pub(crate) fn direction(&mut self, grad: &[f32], out: &mut [f32]) {
+        self.ensure(grad.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..grad.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mh = self.m[i] / b1t;
+            let vh = self.v[i] / b2t;
+            out[i] = mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, w: &mut [f32], grad: &[f32]) {
+        assert_eq!(w.len(), grad.len());
+        let eta = self.lr.at(self.t);
+        let mut dir = vec![0.0; w.len()];
+        self.direction(grad, &mut dir);
+        for i in 0..w.len() {
+            w[i] -= eta * dir[i];
+        }
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn reset(&mut self) {
+        self.m.clear();
+        self.v.clear();
+        self.t = 0;
+    }
+
+    fn name(&self) -> String {
+        "adam".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descends_a_quadratic() {
+        let mut opt = Adam::new(0.1);
+        let mut w = vec![5.0f32];
+        for _ in 0..500 {
+            let g = vec![w[0]];
+            opt.step(&mut w, &g);
+        }
+        assert!(w[0].abs() < 1e-2, "w={}", w[0]);
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // Bias correction makes the very first step ≈ lr·sign(g).
+        let mut opt = Adam::new(0.1);
+        let mut w = vec![0.0f32];
+        opt.step(&mut w, &[3.0]);
+        assert!((w[0] + 0.1).abs() < 1e-3, "w={}", w[0]);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut opt = Adam::new(0.1);
+        let mut w = vec![1.0f32];
+        opt.step(&mut w, &[1.0]);
+        opt.reset();
+        assert_eq!(opt.t(), 0);
+    }
+}

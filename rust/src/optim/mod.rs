@@ -1,0 +1,43 @@
+//! Optimizers for min–max training (paper §2.2).
+//!
+//! - [`Sgd`] / [`Adam`] — classical minimization updates (the "may cycle
+//!   on min–max problems" baselines, §2.2 / SYN-B experiment);
+//! - [`Omd`] — one-call Optimistic Mirror Descent (Algorithm 1 / eq. 18),
+//!   the update DQGAN distributes;
+//! - [`Extragradient`] — the two-call extragradient (eq. 12–13), kept for
+//!   the bilinear-game comparison;
+//! - [`OptimisticAdam`] — Daskalakis et al. [7]'s Adam variant used by the
+//!   paper's CPOAdam baselines;
+//! - [`LrSchedule`] — step-size schedules (constant / 1/√t decay).
+
+mod adam;
+mod extragradient;
+mod omd;
+mod optimistic_adam;
+mod schedule;
+mod sgd;
+
+pub use adam::Adam;
+pub use extragradient::Extragradient;
+pub use omd::Omd;
+pub use optimistic_adam::OptimisticAdam;
+pub use schedule::LrSchedule;
+pub use sgd::Sgd;
+
+/// A stateful first-order update rule on a flat parameter vector. The
+/// gradient passed in is the *operator value* F(w) (descent direction is
+/// `-F`), matching the paper's convention.
+pub trait Optimizer: Send {
+    /// Apply one update in place given the (stochastic) gradient at the
+    /// point the algorithm evaluated (see each optimizer's contract).
+    fn step(&mut self, w: &mut [f32], grad: &[f32]);
+
+    /// Step count so far.
+    fn t(&self) -> u64;
+
+    /// Reset all state.
+    fn reset(&mut self);
+
+    /// Name for logs.
+    fn name(&self) -> String;
+}

@@ -1,0 +1,159 @@
+//! One-call Optimistic Mirror Descent (paper Algorithm 1, eq. 16–18).
+//!
+//! Unconstrained form used throughout the paper:
+//!
+//!   w_{t+½} = w_t − η·F(w_{t−½})          (half step with *stored* grad)
+//!   w_{t+1} = w_t − η·F(w_{t+½})          (full step with fresh grad)
+//!
+//! One gradient evaluation per iteration (at w_{t+½}); the previous one is
+//! reused. The caller drives the two phases:
+//! [`Omd::half_point`] yields w_{t+½}, the caller evaluates F there, then
+//! [`Omd::full_step`] applies the update and stores the gradient.
+
+use super::LrSchedule;
+
+/// One-call OMD state: the stored gradient F(w_{t−½}).
+#[derive(Debug, Clone)]
+pub struct Omd {
+    pub lr: LrSchedule,
+    f_prev: Vec<f32>,
+    t: u64,
+}
+
+impl Omd {
+    pub fn new(lr: f32, dim: usize) -> Self {
+        // F(w_{−½}) = 0 by convention (first half step is a no-op),
+        // matching Algorithm 2's initialization w_{−½} = w₀, e₀ = 0.
+        Self { lr: LrSchedule::constant(lr), f_prev: vec![0.0; dim], t: 0 }
+    }
+
+    pub fn with_schedule(mut self, lr: LrSchedule) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// Current step size.
+    pub fn eta(&self) -> f32 {
+        self.lr.at(self.t)
+    }
+
+    /// The stored gradient F(w_{t−½}).
+    pub fn stored_grad(&self) -> &[f32] {
+        &self.f_prev
+    }
+
+    /// Compute the half point w_{t+½} = w_t − η·F(w_{t−½}) into `out`.
+    pub fn half_point(&self, w: &[f32], out: &mut [f32]) {
+        assert_eq!(w.len(), self.f_prev.len());
+        assert_eq!(w.len(), out.len());
+        let eta = self.eta();
+        for i in 0..w.len() {
+            out[i] = w[i] - eta * self.f_prev[i];
+        }
+    }
+
+    /// Apply the full step `w ← w − η·F(w_{t+½})` and store the gradient.
+    pub fn full_step(&mut self, w: &mut [f32], grad_at_half: &[f32]) {
+        assert_eq!(w.len(), grad_at_half.len());
+        let eta = self.eta();
+        for i in 0..w.len() {
+            w[i] -= eta * grad_at_half[i];
+        }
+        self.f_prev.copy_from_slice(grad_at_half);
+        self.t += 1;
+    }
+
+    /// Convenience one-shot driver: `f` evaluates F at a given point.
+    pub fn step_with(&mut self, w: &mut [f32], mut f: impl FnMut(&[f32], &mut [f32])) {
+        let mut half = vec![0.0; w.len()];
+        self.half_point(w, &mut half);
+        let mut g = vec![0.0; w.len()];
+        f(&half, &mut g);
+        self.full_step(w, &g);
+    }
+
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    pub fn reset(&mut self) {
+        self.f_prev.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The canonical bilinear game F(x,y) = (y, −x): GDA spirals out,
+    /// OMD converges (paper §2.2's motivation).
+    fn bilinear_f(w: &[f32], out: &mut [f32]) {
+        out[0] = w[1];
+        out[1] = -w[0];
+    }
+
+    #[test]
+    fn omd_converges_on_bilinear() {
+        let mut omd = Omd::new(0.1, 2);
+        let mut w = vec![1.0f32, 1.0];
+        for _ in 0..2000 {
+            omd.step_with(&mut w, bilinear_f);
+        }
+        let r = (w[0] * w[0] + w[1] * w[1]).sqrt();
+        assert!(r < 1e-3, "OMD did not converge: r={r}");
+    }
+
+    #[test]
+    fn gda_diverges_on_bilinear_for_contrast() {
+        use crate::optim::{Optimizer, Sgd};
+        let mut sgd = Sgd::new(0.1);
+        let mut w = vec![1.0f32, 1.0];
+        for _ in 0..2000 {
+            let mut g = vec![0.0; 2];
+            bilinear_f(&w, &mut g);
+            sgd.step(&mut w, &g);
+        }
+        let r = (w[0] * w[0] + w[1] * w[1]).sqrt();
+        assert!(r > 10.0, "GDA unexpectedly bounded: r={r}");
+    }
+
+    #[test]
+    fn first_half_step_is_identity() {
+        let omd = Omd::new(0.5, 3);
+        let w = vec![1.0, 2.0, 3.0];
+        let mut half = vec![0.0; 3];
+        omd.half_point(&w, &mut half);
+        assert_eq!(half, w);
+    }
+
+    #[test]
+    fn matches_one_line_form() {
+        // eq. 18: w_{t+½} = w_{t−½} − 2η·F(w_{t−½}) + η·F(w_{t−3/2})
+        // Verify our two-phase implementation satisfies it on a quadratic.
+        let f = |w: &[f32], out: &mut [f32]| out[0] = w[0];
+        let eta = 0.05f32;
+        let mut omd = Omd::new(eta, 1);
+        let mut w = vec![1.0f32];
+        let mut halves = Vec::new();
+        let mut grads = vec![0.0f32]; // F(w_{−3/2}) = 0 convention
+        let mut prev_half_grad = 0.0f32;
+        for _ in 0..5 {
+            let mut half = vec![0.0; 1];
+            omd.half_point(&w, &mut half);
+            halves.push(half[0]);
+            let mut g = vec![0.0; 1];
+            f(&half, &mut g);
+            grads.push(g[0]);
+            omd.full_step(&mut w, &g);
+            prev_half_grad = g[0];
+        }
+        let _ = prev_half_grad;
+        // Check eq. 18 for t = 2..: halves[t] = halves[t-1] − 2η·F(halves[t-1]) + η·F(halves[t-2])
+        for t in 2..halves.len() {
+            let lhs = halves[t];
+            let rhs = halves[t - 1] - 2.0 * eta * grads[t] + eta * grads[t - 1];
+            assert!((lhs - rhs).abs() < 1e-6, "t={t} lhs={lhs} rhs={rhs}");
+        }
+    }
+}

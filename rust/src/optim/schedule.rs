@@ -1,0 +1,95 @@
+//! Step-size schedules. Theorem 3's rate is proved for a constant
+//! η ≤ min{1/√(BM), 1/(6√2 L)}; the 1/√t decay is the standard fallback
+//! when L is unknown.
+
+/// Learning-rate schedule η_t.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    /// η_t = η₀
+    Constant { eta0: f32 },
+    /// η_t = η₀ / √(1 + t/t0)
+    InvSqrt { eta0: f32, t0: f64 },
+    /// Linear warmup to η₀ over `warmup` steps, then constant.
+    Warmup { eta0: f32, warmup: u64 },
+}
+
+impl LrSchedule {
+    pub fn constant(eta0: f32) -> Self {
+        assert!(eta0 > 0.0);
+        Self::Constant { eta0 }
+    }
+
+    pub fn inv_sqrt(eta0: f32, t0: f64) -> Self {
+        assert!(eta0 > 0.0 && t0 > 0.0);
+        Self::InvSqrt { eta0, t0 }
+    }
+
+    pub fn warmup(eta0: f32, warmup: u64) -> Self {
+        assert!(eta0 > 0.0);
+        Self::Warmup { eta0, warmup }
+    }
+
+    /// η at step t (0-based).
+    pub fn at(&self, t: u64) -> f32 {
+        match *self {
+            Self::Constant { eta0 } => eta0,
+            Self::InvSqrt { eta0, t0 } => (eta0 as f64 / (1.0 + t as f64 / t0).sqrt()) as f32,
+            Self::Warmup { eta0, warmup } => {
+                if warmup == 0 || t >= warmup {
+                    eta0
+                } else {
+                    eta0 * (t + 1) as f32 / warmup as f32
+                }
+            }
+        }
+    }
+
+    /// The paper's safe constant step for Theorem 3:
+    /// η = min{1/√(BM), 1/(6√2·L)}.
+    pub fn theorem3(batch: usize, workers: usize, lipschitz: f32) -> Self {
+        let a = 1.0 / ((batch * workers) as f32).sqrt();
+        let b = 1.0 / (6.0 * std::f32::consts::SQRT_2 * lipschitz);
+        Self::constant(a.min(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn inv_sqrt_decays() {
+        let s = LrSchedule::inv_sqrt(1.0, 1.0);
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+        assert!((s.at(3) - 0.5).abs() < 1e-6);
+        assert!(s.at(100) < s.at(10));
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::warmup(1.0, 10);
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.at(10), 1.0);
+        assert_eq!(s.at(99), 1.0);
+    }
+
+    #[test]
+    fn theorem3_takes_the_min() {
+        // Large L dominates.
+        let s = LrSchedule::theorem3(4, 4, 100.0);
+        let want = 1.0 / (6.0 * std::f32::consts::SQRT_2 * 100.0);
+        assert!((s.at(0) - want).abs() < 1e-9);
+        // Large BM dominates.
+        let s = LrSchedule::theorem3(256, 64, 0.01);
+        let want = 1.0 / (256.0f32 * 64.0).sqrt();
+        assert!((s.at(0) - want).abs() < 1e-9);
+    }
+}

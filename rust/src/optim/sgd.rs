@@ -1,0 +1,99 @@
+//! Plain (simultaneous) gradient descent on the operator F — the baseline
+//! the paper shows *fails* on min–max problems (§2.2, eq. 11).
+
+use super::{LrSchedule, Optimizer};
+
+/// `w ← w − η_t·F(w)` with optional momentum.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: LrSchedule,
+    pub momentum: f32,
+    velocity: Vec<f32>,
+    t: u64,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Self { lr: LrSchedule::constant(lr), momentum: 0.0, velocity: Vec::new(), t: 0 }
+    }
+
+    pub fn with_momentum(mut self, m: f32) -> Self {
+        assert!((0.0..1.0).contains(&m));
+        self.momentum = m;
+        self
+    }
+
+    pub fn with_schedule(mut self, lr: LrSchedule) -> Self {
+        self.lr = lr;
+        self
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, w: &mut [f32], grad: &[f32]) {
+        assert_eq!(w.len(), grad.len());
+        let eta = self.lr.at(self.t);
+        if self.momentum > 0.0 {
+            if self.velocity.len() != w.len() {
+                self.velocity = vec![0.0; w.len()];
+            }
+            for i in 0..w.len() {
+                self.velocity[i] = self.momentum * self.velocity[i] + grad[i];
+                w[i] -= eta * self.velocity[i];
+            }
+        } else {
+            for i in 0..w.len() {
+                w[i] -= eta * grad[i];
+            }
+        }
+        self.t += 1;
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn reset(&mut self) {
+        self.velocity.clear();
+        self.t = 0;
+    }
+
+    fn name(&self) -> String {
+        if self.momentum > 0.0 {
+            format!("sgd(m={})", self.momentum)
+        } else {
+            "sgd".to_string()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descends_a_quadratic() {
+        // min ½w² → F(w) = w; SGD converges.
+        let mut opt = Sgd::new(0.1);
+        let mut w = vec![10.0f32];
+        for _ in 0..200 {
+            let g = vec![w[0]];
+            opt.step(&mut w, &g);
+        }
+        assert!(w[0].abs() < 1e-4, "w={}", w[0]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(0.1).with_momentum(0.9);
+        let mut w = vec![0.0f32];
+        // Constant gradient 1: velocity grows toward 1/(1-0.9) = 10.
+        for _ in 0..200 {
+            opt.step(&mut w, &[1.0]);
+        }
+        // displacement per step approaches 0.1*10 = 1
+        let before = w[0];
+        opt.step(&mut w, &[1.0]);
+        assert!((before - w[0] - 1.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,305 @@
+//! Single-binary cluster driver: spawns the leader + M worker threads over
+//! the in-process transport and runs a full training job. This is the
+//! entry point used by the CLI, the experiment harnesses and the examples.
+
+use super::server::{serve_rounds, Decoder};
+use super::worker::{worker_loop, EvalHook, WorkerSummary};
+use super::RoundRecord;
+use crate::algo::AlgoKind;
+use crate::comm::inproc_cluster;
+use crate::grad::GradientSource;
+use crate::optim::LrSchedule;
+use crate::util::rng::Pcg32;
+use crate::util::timer::Stopwatch;
+
+/// Cluster configuration for one training run.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub algo: AlgoKind,
+    /// Number of workers M.
+    pub workers: usize,
+    /// Mini-batch size B per worker.
+    pub batch: usize,
+    /// Total synchronous rounds T.
+    pub rounds: u64,
+    pub lr: LrSchedule,
+    /// Base RNG seed (worker m uses seed+m+1; init uses seed).
+    pub seed: u64,
+    /// Invoke the eval hook on worker 0 every `eval_every` rounds (0 = never).
+    pub eval_every: u64,
+    /// Keep per-round worker stats on worker 0 (memory vs detail).
+    pub keep_stats: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            algo: AlgoKind::CpoAdam,
+            workers: 4,
+            batch: 32,
+            rounds: 100,
+            lr: LrSchedule::constant(1e-3),
+            seed: 0xD9_6A17,
+            eval_every: 0,
+            keep_stats: true,
+        }
+    }
+}
+
+/// A snapshot the eval hook produced at some round.
+#[derive(Debug, Clone)]
+pub struct EvalEvent {
+    pub round: u64,
+    pub params: Vec<f32>,
+    pub loss_g: Option<f32>,
+    pub loss_d: Option<f32>,
+}
+
+/// Full-run report.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub records: Vec<RoundRecord>,
+    pub worker0: WorkerSummary,
+    /// Snapshots captured by the eval schedule.
+    pub evals: Vec<EvalEvent>,
+    /// Total uplink payload bytes across the run (sum over rounds/workers).
+    pub total_bytes_up: u64,
+    pub wall_secs: f64,
+    /// Mean leader-side round wall time (the Fig-4 compute input).
+    pub mean_round_secs: f64,
+}
+
+/// Run one training job: M worker threads + leader on this thread.
+///
+/// `make_src` builds each worker's gradient source (called once per worker,
+/// on the worker's thread — sources need not be `Sync`).
+pub fn run_cluster(
+    cfg: &ClusterConfig,
+    make_src: impl Fn(usize) -> anyhow::Result<Box<dyn GradientSource>> + Send + Sync,
+) -> anyhow::Result<TrainReport> {
+    anyhow::ensure!(cfg.workers > 0, "need at least one worker");
+    let sw = Stopwatch::start();
+    let (mut server, worker_ends, _counter) = inproc_cluster(cfg.workers);
+
+    // Initial parameters: one w₀ pushed to all workers (Algorithm 2 line 1)
+    // — realized by constructing every worker from the same vector.
+    let mut init_rng = Pcg32::new(cfg.seed);
+    let probe_src = make_src(0)?;
+    let dim = probe_src.dim();
+    let w0 = probe_src.init_params(&mut init_rng);
+    drop(probe_src);
+
+    let decoder: Decoder = cfg.algo.decoder();
+    let (eval_tx, eval_rx) = std::sync::mpsc::channel::<EvalEvent>();
+
+    let report = std::thread::scope(|scope| -> anyhow::Result<TrainReport> {
+        let mut handles = Vec::new();
+        for (m, mut end) in worker_ends.into_iter().enumerate() {
+            let algo = cfg.algo.build_worker(w0.clone(), cfg.lr.clone());
+            let make_src = &make_src;
+            let eval_tx = eval_tx.clone();
+            let eval_every = cfg.eval_every;
+            let keep = cfg.keep_stats && m == 0;
+            let batch = cfg.batch;
+            let rounds = cfg.rounds;
+            let seed = cfg.seed;
+            handles.push(scope.spawn(move || -> anyhow::Result<WorkerSummary> {
+                let mut src = make_src(m)?;
+                let mut rng = Pcg32::new(seed.wrapping_add(m as u64).wrapping_add(1));
+                let mut algo = algo;
+                let eval: Option<EvalHook> = if m == 0 && eval_every > 0 {
+                    Some(Box::new(move |round, params, stats| {
+                        if (round + 1) % eval_every == 0 || round == 0 {
+                            let _ = eval_tx.send(EvalEvent {
+                                round,
+                                params: params.to_vec(),
+                                loss_g: stats.loss_g,
+                                loss_d: stats.loss_d,
+                            });
+                        }
+                    }))
+                } else {
+                    None
+                };
+                worker_loop(
+                    &mut end,
+                    algo.as_mut(),
+                    src.as_mut(),
+                    batch,
+                    rounds,
+                    &mut rng,
+                    keep,
+                    eval,
+                )
+            }));
+        }
+        drop(eval_tx);
+
+        let serve_result = serve_rounds(&mut server, decoder, dim, cfg.rounds, |_| {});
+        if serve_result.is_err() {
+            // Unblock workers waiting in phase 2 so the scope join below
+            // cannot hang; ignore send failures (workers may be gone).
+            use crate::comm::{Message, ServerEnd};
+            let _ = server.broadcast(Message::shutdown(u64::MAX));
+        }
+        drop(server); // close channels before joining
+
+        let mut worker0 = None;
+        let mut worker_err: Option<anyhow::Error> = None;
+        for (m, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Err(_) => worker_err.get_or_insert(anyhow::anyhow!("worker {m} panicked")),
+                Ok(Err(e)) => worker_err.get_or_insert(e),
+                Ok(Ok(summary)) => {
+                    if m == 0 {
+                        worker0 = Some(summary);
+                    }
+                    continue;
+                }
+            };
+        }
+        // Prefer the leader's error (it names the failing worker); fall
+        // back to a worker-local error.
+        let records = match serve_result {
+            Ok(r) => r,
+            Err(e) => return Err(e),
+        };
+        if let Some(e) = worker_err {
+            return Err(e);
+        }
+        let evals: Vec<EvalEvent> = eval_rx.try_iter().collect();
+        let total_bytes_up: u64 = records.iter().map(|r| r.bytes_up as u64).sum();
+        let mean_round_secs = if records.is_empty() {
+            0.0
+        } else {
+            records.iter().map(|r| r.wall_secs).sum::<f64>() / records.len() as f64
+        };
+        Ok(TrainReport {
+            records,
+            worker0: worker0.expect("worker 0 summary"),
+            evals,
+            total_bytes_up,
+            wall_secs: sw.elapsed_secs(),
+            mean_round_secs,
+        })
+    })?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::QuadraticOperator;
+
+    fn quad_cfg(algo: &str, rounds: u64, lr: f32) -> ClusterConfig {
+        ClusterConfig {
+            algo: AlgoKind::parse(algo).unwrap(),
+            workers: 3,
+            batch: 8,
+            rounds,
+            lr: LrSchedule::constant(lr),
+            seed: 1234,
+            eval_every: 10,
+            keep_stats: true,
+        }
+    }
+
+    fn target_for_seed(seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        QuadraticOperator::new(10, 0.1, &mut rng).target
+    }
+
+    #[test]
+    fn dqgan_cluster_converges_end_to_end() {
+        let cfg = quad_cfg("dqgan:linf8", 600, 0.1);
+        let report = run_cluster(&cfg, |_m| {
+            let mut rng = Pcg32::new(999);
+            Ok(Box::new(QuadraticOperator::new(10, 0.1, &mut rng)))
+        })
+        .unwrap();
+        let target = {
+            let mut rng = Pcg32::new(999);
+            QuadraticOperator::new(10, 0.1, &mut rng).target
+        };
+        for (a, b) in report.worker0.final_params.iter().zip(&target) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+        assert_eq!(report.records.len(), 600);
+        assert!(report.total_bytes_up > 0);
+        assert!(!report.evals.is_empty());
+        let _ = target_for_seed(999);
+    }
+
+    #[test]
+    fn cpoadam_cluster_converges() {
+        let cfg = quad_cfg("cpoadam", 500, 0.05);
+        let report = run_cluster(&cfg, |_m| {
+            let mut rng = Pcg32::new(555);
+            Ok(Box::new(QuadraticOperator::new(10, 0.1, &mut rng)))
+        })
+        .unwrap();
+        let target = {
+            let mut rng = Pcg32::new(555);
+            QuadraticOperator::new(10, 0.1, &mut rng).target
+        };
+        for (a, b) in report.worker0.final_params.iter().zip(&target) {
+            assert!((a - b).abs() < 0.15, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dqgan_ships_fewer_bytes_than_cpoadam() {
+        let run = |algo: &str| {
+            let cfg = quad_cfg(algo, 20, 0.05);
+            run_cluster(&cfg, |_m| {
+                let mut rng = Pcg32::new(777);
+                Ok(Box::new(QuadraticOperator::new(256, 0.1, &mut rng)))
+            })
+            .unwrap()
+            .total_bytes_up
+        };
+        let dq = run("dqgan:linf8");
+        let cp = run("cpoadam");
+        assert!(dq * 3 < cp, "dqgan={dq} cpoadam={cp}");
+    }
+
+    #[test]
+    fn failure_injection_fails_fast_not_hangs() {
+        struct FailingSource {
+            inner: QuadraticOperator,
+            countdown: u32,
+        }
+        impl GradientSource for FailingSource {
+            fn dim(&self) -> usize {
+                self.inner.dim
+            }
+            fn grad(
+                &mut self,
+                w: &[f32],
+                batch: usize,
+                rng: &mut Pcg32,
+                out: &mut [f32],
+            ) -> anyhow::Result<crate::grad::GradMeta> {
+                if self.countdown == 0 {
+                    anyhow::bail!("injected gradient failure");
+                }
+                self.countdown -= 1;
+                self.inner.grad(w, batch, rng, out)
+            }
+            fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+                self.inner.init_params(rng)
+            }
+        }
+        let cfg = quad_cfg("dqgan:linf8", 100, 0.05);
+        let res = run_cluster(&cfg, |m| {
+            let mut rng = Pcg32::new(31);
+            Ok(Box::new(FailingSource {
+                inner: QuadraticOperator::new(10, 0.1, &mut rng),
+                countdown: if m == 1 { 5 } else { u32::MAX },
+            }))
+        });
+        let err = res.unwrap_err();
+        assert!(err.to_string().contains("failed") || err.to_string().contains("injected"),
+            "unexpected error: {err}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Parameter-server runtime (paper Fig. 1): the leader (server) and the M
+//! worker loops, wired over any [`crate::comm`] transport, driving any
+//! [`crate::algo::WorkerAlgo`] against any [`crate::grad::GradientSource`].
+//!
+//! One synchronous round:
+//!
+//! ```text
+//! worker m: produce()  ──payload──▶  server: decode × M, average
+//! worker m: apply(q̄)   ◀─broadcast──          broadcast(q̄)
+//! ```
+//!
+//! The leader owns round progression, byte/time accounting, evaluation
+//! scheduling and shutdown; workers are stateless loops around their
+//! algorithm object.
+
+mod cluster;
+mod server;
+mod worker;
+
+pub use cluster::{run_cluster, ClusterConfig, EvalEvent, TrainReport};
+pub use server::serve_rounds;
+pub use worker::worker_loop;
+
+/// Per-round record the leader accumulates (averaged across workers).
+#[derive(Debug, Clone, Default)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// Mean over workers of ‖F(w_{t−½}; ξ)‖² — Theorem 3's quantity is the
+    /// norm² of the mean; we track both.
+    pub mean_grad_norm_sq: f32,
+    /// ‖(1/M)Σ_m F^(m)‖² (computed on the averaged payload, η-scaled for
+    /// DQGAN; see `exp/thm3.rs` for the exact Theorem-3 accounting).
+    pub avg_payload_norm_sq: f32,
+    /// Mean over workers of ‖e_t‖² (Lemma 1).
+    pub mean_err_norm_sq: f32,
+    /// Uplink payload bytes this round (sum over workers).
+    pub bytes_up: usize,
+    /// Wall-clock of the round as seen by the leader.
+    pub wall_secs: f64,
+    /// Mean losses (when the model reports them).
+    pub loss_g: Option<f32>,
+    pub loss_d: Option<f32>,
+}

@@ -1,0 +1,122 @@
+//! The leader: per round, gather M payloads, decode, average (Algorithm 2
+//! line 11: q̂ = 1/M Σ p̂^(m)), broadcast.
+
+use super::RoundRecord;
+use crate::comm::{Message, ServerEnd};
+use crate::tensor::ops;
+use crate::util::bytes::put_f32_slice;
+use crate::util::stats::norm2_sq;
+use crate::util::timer::Stopwatch;
+use std::sync::Arc;
+
+/// Server-side payload decoder (algorithm-specific; see
+/// [`crate::algo::AlgoKind::decoder`]).
+pub type Decoder = Arc<dyn Fn(&[u8], usize) -> anyhow::Result<Vec<f32>> + Send + Sync>;
+
+/// Run `rounds` synchronous rounds on `transport`. Returns per-round
+/// records. `dim` is the flat parameter dimension; `on_round` is invoked
+/// after each broadcast (leader-side progress/telemetry hook).
+pub fn serve_rounds(
+    transport: &mut dyn ServerEnd,
+    decoder: Decoder,
+    dim: usize,
+    rounds: u64,
+    mut on_round: impl FnMut(&RoundRecord),
+) -> anyhow::Result<Vec<RoundRecord>> {
+    let m = transport.workers();
+    anyhow::ensure!(m > 0, "no workers");
+    let mut records = Vec::with_capacity(rounds as usize);
+    let mut avg = vec![0.0f32; dim];
+    for round in 0..rounds {
+        let sw = Stopwatch::start();
+        let msgs = transport.recv_round()?;
+        anyhow::ensure!(msgs.len() == m, "expected {m} payloads, got {}", msgs.len());
+        // Decode every worker's payload and validate.
+        let mut decoded: Vec<Vec<f32>> = Vec::with_capacity(m);
+        let mut bytes_up = 0usize;
+        for msg in &msgs {
+            anyhow::ensure!(msg.round == round, "round skew: {} vs {round}", msg.round);
+            bytes_up += msg.payload.len();
+            let v = decoder(&msg.payload, dim)?;
+            anyhow::ensure!(v.len() == dim, "decoded length {} ≠ dim {dim}", v.len());
+            anyhow::ensure!(
+                ops::all_finite(&v),
+                "worker {} sent non-finite payload at round {round}",
+                msg.worker
+            );
+            decoded.push(v);
+        }
+        // Average (line 11).
+        {
+            let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
+            ops::mean_into(&refs, &mut avg);
+        }
+        // Broadcast q̄ as raw f32 (the downlink is full-precision; the
+        // paper quantizes the uplink only — see DESIGN.md FIG4 notes).
+        let mut payload = Vec::with_capacity(4 * dim);
+        put_f32_slice(&mut payload, &avg);
+        transport.broadcast(Message::broadcast(round, payload))?;
+        let rec = RoundRecord {
+            round,
+            avg_payload_norm_sq: norm2_sq(&avg),
+            bytes_up,
+            wall_secs: sw.elapsed_secs(),
+            ..Default::default()
+        };
+        on_round(&rec);
+        records.push(rec);
+    }
+    transport.broadcast(Message::shutdown(rounds))?;
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::inproc_cluster;
+    use crate::comm::{MsgKind, WorkerEnd};
+    use crate::compress::{Compressor, Identity};
+
+    #[test]
+    fn averages_and_broadcasts() {
+        let (mut server, workers, _) = inproc_cluster(2);
+        let dim = 4;
+        let handles: Vec<_> = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut w)| {
+                std::thread::spawn(move || {
+                    let v = vec![i as f32; 4];
+                    let mut wire = Vec::new();
+                    Identity.encode(&v, &mut wire);
+                    w.send(Message::payload(i as u32, 0, wire)).unwrap();
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.kind, MsgKind::Broadcast);
+                    let avg = Identity.decode(&b.payload, 4).unwrap();
+                    assert_eq!(avg, vec![0.5; 4]); // mean of 0s and 1s
+                    let s = w.recv().unwrap();
+                    assert_eq!(s.kind, MsgKind::Shutdown);
+                })
+            })
+            .collect();
+        let decoder: Decoder = Arc::new(|b, d| Identity.decode(b, d));
+        let recs = serve_rounds(&mut server, decoder, dim, 1, |_| {}).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].bytes_up > 0);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_non_finite_payloads() {
+        let (mut server, mut workers, _) = inproc_cluster(1);
+        let v = vec![f32::NAN; 2];
+        let mut wire = Vec::new();
+        Identity.encode(&v, &mut wire);
+        workers[0].send(Message::payload(0, 0, wire)).unwrap();
+        let decoder: Decoder = Arc::new(|b, d| Identity.decode(b, d));
+        let err = serve_rounds(&mut server, decoder, 2, 1, |_| {}).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+}

@@ -1,0 +1,84 @@
+//! The worker loop: drive a [`WorkerAlgo`] against a [`GradientSource`]
+//! over a transport for a known number of rounds.
+//!
+//! The round count is distributed to every node up front (as in the
+//! paper's Algorithm 2, "for t = 1..T"), which keeps the protocol strictly
+//! two-phase and hang-free: per round exactly one Payload up and one
+//! Broadcast down, then one trailing Shutdown frame.
+
+use crate::algo::{RoundStats, WorkerAlgo};
+use crate::comm::{Message, MsgKind, WorkerEnd};
+use crate::grad::GradientSource;
+use crate::util::bytes::Reader;
+use crate::util::rng::Pcg32;
+
+/// Per-worker result summary.
+#[derive(Debug, Clone)]
+pub struct WorkerSummary {
+    pub rounds: u64,
+    /// Final parameter vector (identical across workers by construction).
+    pub final_params: Vec<f32>,
+    /// Round stats history (empty unless `keep_stats`).
+    pub stats: Vec<RoundStats>,
+}
+
+/// Hook invoked on a worker after each `apply` with (round, params, stats).
+pub type EvalHook = Box<dyn FnMut(u64, &[f32], &RoundStats) + Send>;
+
+/// Run exactly `rounds` rounds, then consume the trailing Shutdown.
+///
+/// On a local error the worker sends a `WorkerError` frame before
+/// returning, so the server's barrier fails fast instead of hanging
+/// (failure-injection tests exercise this).
+#[allow(clippy::too_many_arguments)]
+pub fn worker_loop(
+    transport: &mut dyn WorkerEnd,
+    algo: &mut dyn WorkerAlgo,
+    src: &mut dyn GradientSource,
+    batch: usize,
+    rounds: u64,
+    rng: &mut Pcg32,
+    keep_stats: bool,
+    mut eval: Option<EvalHook>,
+) -> anyhow::Result<WorkerSummary> {
+    let dim = algo.dim();
+    let id = transport.id();
+    let mut stats_hist = Vec::new();
+    for round in 0..rounds {
+        // Phase 1: produce and push.
+        let produced = match algo.produce(src, batch, rng) {
+            Ok(p) => p,
+            Err(e) => {
+                let _ = transport.send(Message::worker_error(id, round, &format!("{e:#}")));
+                return Err(e);
+            }
+        };
+        let stats = produced.stats.clone();
+        transport.send(Message::payload(id, round, produced.wire))?;
+        // Phase 2: await broadcast, apply.
+        let msg = transport.recv()?;
+        match msg.kind {
+            MsgKind::Broadcast => {
+                anyhow::ensure!(msg.round == round, "broadcast round skew");
+                let mut r = Reader::new(&msg.payload);
+                let avg = r.f32_vec(dim)?;
+                algo.apply(&avg);
+            }
+            MsgKind::Shutdown => break, // server aborted early
+            other => anyhow::bail!("unexpected message kind {other:?}"),
+        }
+        if let Some(cb) = eval.as_deref_mut() {
+            cb(round, algo.params(), &stats);
+        }
+        if keep_stats {
+            stats_hist.push(stats);
+        }
+    }
+    // Drain the trailing Shutdown so the transport closes cleanly.
+    match transport.recv() {
+        Ok(msg) if msg.kind == MsgKind::Shutdown => {}
+        Ok(other) => anyhow::bail!("expected shutdown, got {:?}", other.kind),
+        Err(_) => {} // server already gone — fine at teardown
+    }
+    Ok(WorkerSummary { rounds, final_params: algo.params().to_vec(), stats: stats_hist })
+}

@@ -1,0 +1,195 @@
+//! PJRT client wrapper + compiled-executable cache.
+//!
+//! Pattern from /opt/xla-example/src/bin/load_hlo.rs:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal we decompose.
+//!
+//! ## Threading
+//!
+//! The `xla` crate's handles are `!Send` (`Rc` refcounts + raw pointers),
+//! but the PS runtime runs gradient evaluation on M worker threads. We
+//! therefore confine *every* XLA object inside [`Core`] behind one
+//! `Mutex`, and the public API only moves plain `Vec<f32>` across the
+//! boundary.
+//!
+//! SAFETY argument for the `unsafe impl Send for Core`:
+//! - all `Rc` clone/drop and all raw-pointer use happen while holding the
+//!   mutex, so refcount updates are serialized;
+//! - the final drop of the `Core` is serialized by the owning `Arc`;
+//! - the PJRT CPU client itself is documented thread-safe, and no XLA
+//!   handle ever escapes the mutex (literals are converted to `Vec<f32>`
+//!   before returning).
+//!
+//! Execution is serialized by the mutex; on this single-core testbed the
+//! M workers' XLA calls would serialize on the CPU anyway (§Perf measures
+//! the mutex's overhead as part of the `execute` phase).
+
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::util::timer::PhaseProfiler;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+struct Core {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: see module docs — all access is serialized by the Mutex below
+// and no XLA handle crosses the API boundary.
+unsafe impl Send for Core {}
+
+/// PJRT CPU client + manifest + executable cache. Cheap to clone; safe to
+/// share across worker threads.
+#[derive(Clone)]
+pub struct Runtime {
+    core: Arc<Mutex<Core>>,
+    manifest: Arc<Manifest>,
+    profiler: Arc<PhaseProfiler>,
+}
+
+/// A lightweight handle to one compiled artifact: the artifact's spec plus
+/// the shared runtime. `run_f32` executes it.
+#[derive(Clone)]
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    rt: Runtime,
+}
+
+impl Runtime {
+    /// Create against an artifacts directory (compiles lazily).
+    pub fn new(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::log_info!(
+            "PJRT client up: platform={} devices={} manifest={} artifacts (jax {})",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len(),
+            manifest.jax_version
+        );
+        Ok(Self {
+            core: Arc::new(Mutex::new(Core { client, cache: HashMap::new() })),
+            manifest: Arc::new(manifest),
+            profiler: Arc::new(PhaseProfiler::new()),
+        })
+    }
+
+    /// Default location (`artifacts/` or `$DQGAN_ARTIFACTS`).
+    pub fn from_default_dir() -> anyhow::Result<Self> {
+        Self::new(&super::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile/execute phase profiler.
+    pub fn profiler(&self) -> &PhaseProfiler {
+        &self.profiler
+    }
+
+    /// Ensure an artifact is compiled; returns its handle.
+    pub fn load(&self, name: &str) -> anyhow::Result<Executable> {
+        let spec = self.manifest.get(name)?.clone();
+        {
+            let core = self.core.lock().unwrap();
+            if core.cache.contains_key(name) {
+                return Ok(Executable { spec, rt: self.clone() });
+            }
+        }
+        let path = self.manifest.path_of(&spec);
+        let path_str =
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?;
+        self.profiler.time("compile", || -> anyhow::Result<()> {
+            let mut core = self.core.lock().unwrap();
+            if core.cache.contains_key(name) {
+                return Ok(()); // raced with another thread
+            }
+            let proto = xla::HloModuleProto::from_text_file(path_str)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = core.client.compile(&comp)?;
+            core.cache.insert(name.to_string(), exe);
+            Ok(())
+        })?;
+        crate::log_info!("compiled artifact '{name}' from {}", path.display());
+        Ok(Executable { spec, rt: self.clone() })
+    }
+
+    /// Load + run in one call.
+    pub fn run(&self, name: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.load(name)?.run_f32(inputs)
+    }
+
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            inputs.len()
+        );
+        for (buf, io) in inputs.iter().zip(&spec.inputs) {
+            anyhow::ensure!(
+                buf.len() == io.numel(),
+                "{}: input length {} ≠ shape {:?}",
+                spec.name,
+                buf.len(),
+                io.shape
+            );
+        }
+        self.profiler.time("execute", || {
+            let core = self.core.lock().unwrap();
+            let exe = core
+                .cache
+                .get(&spec.name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{}' not compiled", spec.name))?;
+            // Build literals inside the lock (literals hold raw pointers).
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (buf, io) in inputs.iter().zip(&spec.inputs) {
+                let lit = xla::Literal::vec1(buf);
+                let lit = if io.shape.len() == 1 {
+                    lit
+                } else {
+                    // rank 0 (scalars like eta) and rank ≥ 2 both reshape.
+                    let dims: Vec<i64> = io.shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims)?
+                };
+                literals.push(lit);
+            }
+            let result = exe.execute::<xla::Literal>(&literals)?;
+            let tuple = result[0][0].to_literal_sync()?;
+            let parts = tuple.to_tuple()?;
+            anyhow::ensure!(
+                parts.len() == spec.outputs.len(),
+                "{}: expected {} outputs, got {}",
+                spec.name,
+                spec.outputs.len(),
+                parts.len()
+            );
+            let mut out = Vec::with_capacity(parts.len());
+            for (lit, io) in parts.into_iter().zip(&spec.outputs) {
+                let v = lit.to_vec::<f32>()?;
+                anyhow::ensure!(
+                    v.len() == io.numel(),
+                    "{}: output length {} ≠ shape {:?}",
+                    spec.name,
+                    v.len(),
+                    io.shape
+                );
+                out.push(v);
+            }
+            Ok(out)
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 buffers (one per manifest input, row-major).
+    /// Returns one Vec<f32> per manifest output.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.rt.execute(&self.spec, inputs)
+    }
+}

@@ -1,0 +1,288 @@
+//! The production gradient path: [`crate::grad::GradientSource`] backed by
+//! the `*_grad` XLA artifacts, plus the sampler and feature-net wrappers
+//! used by the metric loop.
+
+use super::client::Runtime;
+use super::client::Executable;
+use crate::data::{GaussianMixture2D, SynthImages, IMG_LEN};
+use crate::grad::{GradMeta, GradientSource};
+use crate::metrics::FeatureNet;
+use crate::util::rng::Pcg32;
+
+/// Which dataset feeds the real-data input of the grad artifact.
+pub enum DataSource {
+    Mixture(GaussianMixture2D),
+    Images(SynthImages),
+}
+
+impl DataSource {
+    /// Flat per-sample length.
+    fn sample_len(&self) -> usize {
+        match self {
+            DataSource::Mixture(_) => 2,
+            DataSource::Images(_) => IMG_LEN,
+        }
+    }
+
+    fn fill_batch(&self, n: usize, rng: &mut Pcg32, out: &mut Vec<f32>) {
+        out.clear();
+        match self {
+            DataSource::Mixture(gm) => {
+                for _ in 0..n {
+                    let s = gm.sample(rng);
+                    out.push(s[0]);
+                    out.push(s[1]);
+                }
+            }
+            DataSource::Images(ds) => {
+                out.resize(n * IMG_LEN, 0.0);
+                for i in 0..n {
+                    let label = rng.below(ds.classes as u32) as usize;
+                    ds.render(label, rng, &mut out[i * IMG_LEN..(i + 1) * IMG_LEN]);
+                }
+            }
+        }
+    }
+}
+
+/// GradientSource over a `<model>_grad` artifact.
+pub struct XlaGradSource {
+    exe: Executable,
+    data: DataSource,
+    dim: usize,
+    theta_dim: usize,
+    batch: usize,
+    noise_dim: usize,
+    init: InitKind,
+    // scratch
+    z_buf: Vec<f32>,
+    x_buf: Vec<f32>,
+}
+
+enum InitKind {
+    /// Mirror the native MLP-GAN init (layouts match).
+    Mlp,
+    /// DCGAN init (N(0,0.02) convs, He dense, zero bias).
+    Dcgan(DcganInit),
+}
+
+/// Parameter-block table for the DCGAN init (mirrors
+/// `python/compile/models/dcgan.py::DcganSpec.shapes()`).
+pub struct DcganInit {
+    /// (numel, kind) per block, in flat order.
+    blocks: Vec<(usize, BlockKind)>,
+}
+
+enum BlockKind {
+    Bias,
+    Dense { fan_in: usize },
+    Conv,
+}
+
+impl DcganInit {
+    /// Build from the artifact metadata (noise_dim + base are fixed by the
+    /// export; shapes are reproduced here).
+    pub fn new(noise_dim: usize, base: usize) -> Self {
+        let (g4, g2, g1) = (4 * base, 2 * base, base);
+        let c = 3usize; // IMG_C
+        let blocks = vec![
+            (g4 * 16 * noise_dim, BlockKind::Dense { fan_in: noise_dim }),
+            (g4 * 16, BlockKind::Bias),
+            (g4 * g2 * 16, BlockKind::Conv),
+            (g2, BlockKind::Bias),
+            (g2 * g1 * 16, BlockKind::Conv),
+            (g1, BlockKind::Bias),
+            (g1 * c * 16, BlockKind::Conv),
+            (c, BlockKind::Bias),
+            (g1 * c * 16, BlockKind::Conv),
+            (g1, BlockKind::Bias),
+            (g2 * g1 * 16, BlockKind::Conv),
+            (g2, BlockKind::Bias),
+            (g4 * g2 * 16, BlockKind::Conv),
+            (g4, BlockKind::Bias),
+            (g4 * 16, BlockKind::Dense { fan_in: g4 * 16 }),
+            (1, BlockKind::Bias),
+        ];
+        Self { blocks }
+    }
+
+    fn total(&self) -> usize {
+        self.blocks.iter().map(|(n, _)| n).sum()
+    }
+
+    fn init(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let mut w = Vec::with_capacity(self.total());
+        for (n, kind) in &self.blocks {
+            match kind {
+                BlockKind::Bias => w.extend(std::iter::repeat_n(0.0, *n)),
+                BlockKind::Dense { fan_in } => {
+                    let std = 1.0 / (*fan_in as f32).sqrt();
+                    for _ in 0..*n {
+                        w.push(std * rng.normal());
+                    }
+                }
+                BlockKind::Conv => {
+                    for _ in 0..*n {
+                        w.push(0.02 * rng.normal());
+                    }
+                }
+            }
+        }
+        w
+    }
+}
+
+impl XlaGradSource {
+    /// Build for the MLP GAN (2-D mixture data).
+    pub fn mlp(rt: &Runtime, mixture: GaussianMixture2D) -> anyhow::Result<Self> {
+        let exe = rt.load("mlp_gan_grad")?;
+        let spec = &exe.spec;
+        Ok(Self {
+            dim: spec.meta_usize("dim")?,
+            theta_dim: spec.meta_usize("theta_dim")?,
+            batch: spec.meta_usize("batch")?,
+            noise_dim: spec.meta_usize("noise_dim")?,
+            data: DataSource::Mixture(mixture),
+            init: InitKind::Mlp,
+            exe,
+            z_buf: Vec::new(),
+            x_buf: Vec::new(),
+        })
+    }
+
+    /// Build for the DCGAN (synthetic image data).
+    pub fn dcgan(rt: &Runtime, images: SynthImages) -> anyhow::Result<Self> {
+        let exe = rt.load("dcgan_grad")?;
+        let spec = &exe.spec;
+        let dim = spec.meta_usize("dim")?;
+        let noise_dim = spec.meta_usize("noise_dim")?;
+        // base is recoverable from dim? Export uses base=32; assert.
+        let init = DcganInit::new(noise_dim, 32);
+        anyhow::ensure!(
+            init.total() == dim,
+            "DCGAN init table total {} ≠ artifact dim {dim}",
+            init.total()
+        );
+        Ok(Self {
+            dim,
+            theta_dim: spec.meta_usize("theta_dim")?,
+            batch: spec.meta_usize("batch")?,
+            noise_dim,
+            data: DataSource::Images(images),
+            init: InitKind::Dcgan(init),
+            exe,
+            z_buf: Vec::new(),
+            x_buf: Vec::new(),
+        })
+    }
+
+    /// The artifact's fixed batch size (callers must request exactly it).
+    pub fn artifact_batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn theta_dim(&self) -> usize {
+        self.theta_dim
+    }
+}
+
+impl GradientSource for XlaGradSource {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn grad(
+        &mut self,
+        w: &[f32],
+        batch: usize,
+        rng: &mut Pcg32,
+        out: &mut [f32],
+    ) -> anyhow::Result<GradMeta> {
+        anyhow::ensure!(
+            batch == self.batch,
+            "XLA grad artifact was exported for batch {}, got {batch} \
+             (set --batch accordingly)",
+            self.batch
+        );
+        self.z_buf.clear();
+        self.z_buf.reserve(self.batch * self.noise_dim);
+        for _ in 0..self.batch * self.noise_dim {
+            self.z_buf.push(rng.normal());
+        }
+        self.data.fill_batch(self.batch, rng, &mut self.x_buf);
+        debug_assert_eq!(self.x_buf.len(), self.batch * self.data.sample_len());
+        let outputs = self.exe.run_f32(&[w, &self.z_buf, &self.x_buf])?;
+        out.copy_from_slice(&outputs[0]);
+        Ok(GradMeta { loss_g: Some(outputs[1][0]), loss_d: Some(outputs[2][0]) })
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let mut rng = rng.clone();
+        match &self.init {
+            InitKind::Mlp => {
+                let native = crate::model::MlpGan::new(crate::model::MlpGanConfig::default());
+                let w = native.init_params(&mut rng);
+                assert_eq!(w.len(), self.dim, "native/artifact layout mismatch");
+                w
+            }
+            InitKind::Dcgan(init) => init.init(&mut rng),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("xla[{}]", self.exe.spec.name)
+    }
+}
+
+/// Generator sampling through the `<model>_sample` artifact.
+pub struct XlaSampler {
+    exe: Executable,
+    pub sample_n: usize,
+    pub noise_dim: usize,
+}
+
+impl XlaSampler {
+    pub fn new(rt: &Runtime, artifact: &str) -> anyhow::Result<Self> {
+        let exe = rt.load(artifact)?;
+        Ok(Self {
+            sample_n: exe.spec.meta_usize("sample_n")?,
+            noise_dim: exe.spec.meta_usize("noise_dim")?,
+            exe,
+        })
+    }
+
+    /// Draw one artifact-batch of generator samples (flat output).
+    pub fn sample(&self, w: &[f32], rng: &mut Pcg32) -> anyhow::Result<Vec<f32>> {
+        let z: Vec<f32> = (0..self.sample_n * self.noise_dim).map(|_| rng.normal()).collect();
+        Ok(self.exe.run_f32(&[w, &z])?.remove(0))
+    }
+}
+
+/// Metric scoring through the `feature_net` artifact, fed with the Rust
+/// [`FeatureNet`]'s weights (identical embedding in both languages).
+pub struct XlaFeatureNet {
+    exe: Executable,
+    weights: FeatureNet,
+    pub batch: usize,
+}
+
+impl XlaFeatureNet {
+    pub fn new(rt: &Runtime) -> anyhow::Result<Self> {
+        let exe = rt.load("feature_net")?;
+        Ok(Self { batch: exe.spec.meta_usize("batch")?, weights: FeatureNet::new(), exe })
+    }
+
+    /// Features + logits for exactly `batch` images (flat CHW).
+    pub fn score(&self, imgs: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(
+            imgs.len() == self.batch * IMG_LEN,
+            "feature_net artifact takes exactly {} images",
+            self.batch
+        );
+        let (w1, b1, w2, b2, wh, bh) = self.weights.weights();
+        let mut out = self.exe.run_f32(&[w1, b1, w2, b2, wh, bh, imgs])?;
+        let logits = out.remove(1);
+        let feats = out.remove(0);
+        Ok((feats, logits))
+    }
+}

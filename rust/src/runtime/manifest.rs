@@ -1,0 +1,177 @@
+//! `artifacts/manifest.json` parsing — the contract between `aot.py` and
+//! the Rust runtime.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One input/output tensor description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("io spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow::anyhow!("io spec missing dtype"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One exported artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: Json,
+    pub sha256: String,
+}
+
+impl ArtifactSpec {
+    /// Integer metadata field.
+    pub fn meta_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("artifact {}: missing meta '{key}'", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub jax_version: String,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        let json = Json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        for (name, j) in arts {
+            let inputs = j
+                .get("inputs")
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing inputs"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            let outputs = j
+                .get("outputs")
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing outputs"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: j
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing file"))?
+                    .to_string(),
+                inputs,
+                outputs,
+                meta: j.get("meta").cloned().unwrap_or(Json::Null),
+                sha256: j
+                    .get("sha256")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+            jax_version: json
+                .get("jax")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path to an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("dqgan_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"jax":"0.8.2","artifacts":{"toy":{
+                "file":"toy.hlo.txt",
+                "inputs":[{"shape":[4,2],"dtype":"float32"}],
+                "outputs":[{"shape":[4],"dtype":"float32"}],
+                "meta":{"dim":8},
+                "sha256":"abc"}}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("toy").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 2]);
+        assert_eq!(a.inputs[0].numel(), 8);
+        assert_eq!(a.outputs[0].shape, vec![4]);
+        assert_eq!(a.meta_usize("dim").unwrap(), 8);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

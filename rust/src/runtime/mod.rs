@@ -1,0 +1,35 @@
+//! XLA/PJRT runtime: loads the AOT artifacts `python/compile/aot.py`
+//! produced (HLO **text** + `manifest.json`) and executes them on the
+//! PJRT CPU client from the training hot path. Python never runs here.
+//!
+//! - [`Manifest`] — parsed `artifacts/manifest.json` (shapes, dtypes,
+//!   per-artifact metadata like the θ/φ split);
+//! - [`Runtime`] — PJRT client + compiled-executable cache (one compile
+//!   per artifact per process);
+//! - [`XlaGradSource`] — [`crate::grad::GradientSource`] backed by the
+//!   `*_grad` artifacts (the production gradient path);
+//! - [`XlaSampler`] / [`XlaFeatureNet`] — generator sampling and metric
+//!   scoring through the exported graphs;
+//! - [`XlaQuantizer`] — the Pallas fused quantize+error-feedback kernel
+//!   behind the [`crate::compress::Compressor`] trait.
+
+mod client;
+mod grad_source;
+mod manifest;
+mod quantizer;
+
+pub use client::{Executable, Runtime};
+pub use grad_source::{DcganInit, XlaFeatureNet, XlaGradSource, XlaSampler};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use quantizer::XlaQuantizer;
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$DQGAN_ARTIFACTS` overrides the
+/// default; the manifest must exist there.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("DQGAN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from(DEFAULT_ARTIFACTS_DIR))
+}

@@ -1,0 +1,89 @@
+//! The Pallas fused quantize+error-feedback kernel as a
+//! [`crate::compress::Compressor`]: the L1 kernel on the real Rust hot
+//! path. Semantically identical to [`crate::compress::LinfStochastic`]
+//! with the same (levels, block); `benches/bench_quantizers.rs` compares
+//! the two and the integration tests assert distributional agreement.
+
+use super::client::Runtime;
+use super::client::Executable;
+use crate::compress::{Compressor, LinfStochastic};
+use crate::util::rng::Pcg32;
+
+/// Compressor backed by the `quantize_ef_<model>` artifact.
+pub struct XlaQuantizer {
+    exe: Executable,
+    /// Native twin (same levels/block) used for the wire codec.
+    codec: LinfStochastic,
+    padded: usize,
+    dim: usize,
+}
+
+impl XlaQuantizer {
+    pub fn new(rt: &Runtime, artifact: &str) -> anyhow::Result<Self> {
+        let exe = rt.load(artifact)?;
+        let spec = &exe.spec;
+        let levels = spec.meta_usize("levels")? as u32;
+        let block = spec.meta_usize("block")?;
+        Ok(Self {
+            codec: LinfStochastic::new(levels).with_block(block),
+            padded: spec.meta_usize("padded_dim")?,
+            dim: spec.meta_usize("dim")?,
+            exe,
+        })
+    }
+
+    /// Model dimension the artifact was exported for.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Run the kernel: returns (q, e) truncated to `v.len()`.
+    pub fn quantize_ef(
+        &self,
+        v: &[f32],
+        rng: &mut Pcg32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(
+            v.len() <= self.padded,
+            "vector length {} exceeds artifact padding {}",
+            v.len(),
+            self.padded
+        );
+        let mut p = vec![0.0f32; self.padded];
+        p[..v.len()].copy_from_slice(v);
+        let u: Vec<f32> = (0..self.padded).map(|_| rng.uniform()).collect();
+        let mut out = self.exe.run_f32(&[&p, &u])?;
+        let mut e = out.remove(1);
+        let mut q = out.remove(0);
+        q.truncate(v.len());
+        e.truncate(v.len());
+        Ok((q, e))
+    }
+}
+
+impl Compressor for XlaQuantizer {
+    fn name(&self) -> String {
+        format!("xla[{}]", self.exe.spec.name)
+    }
+
+    fn compress(&self, v: &[f32], out: &mut [f32], rng: &mut Pcg32) {
+        let (q, _e) = self.quantize_ef(v, rng).expect("xla quantize_ef failed");
+        out.copy_from_slice(&q);
+    }
+
+    fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>) {
+        self.codec.encode(quantized, buf);
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        self.codec.decode(bytes, d)
+    }
+
+    fn delta(&self, d: usize) -> Option<f64> {
+        self.codec.delta(d)
+    }
+
+    fn encoded_size(&self, d: usize) -> usize {
+        self.codec.encoded_size(d)
+    }
+}

@@ -1,0 +1,84 @@
+//! Minimal CSV writer (quoting for strings containing separators).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+    path: String,
+}
+
+impl CsvWriter {
+    /// Create/truncate `path` and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self { out, columns: header.len(), path: path.display().to_string() })
+    }
+
+    /// Write one row of already-formatted cells.
+    pub fn row(&mut self, cells: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cells.len() == self.columns,
+            "csv {}: row has {} cells, header has {}",
+            self.path,
+            cells.len(),
+            self.columns
+        );
+        let quoted: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.out, "{}", quoted.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: a row of f64s (formatted with 6 significant digits).
+    pub fn row_f64(&mut self, cells: &[f64]) -> anyhow::Result<()> {
+        let formatted: Vec<String> = cells.iter().map(|v| format!("{v:.6}")).collect();
+        self.row(&formatted)
+    }
+
+    /// Flush and report the path.
+    pub fn finish(mut self) -> anyhow::Result<String> {
+        self.out.flush()?;
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let path = std::env::temp_dir().join("dqgan_csv_test.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,y".into()]).unwrap();
+        w.row_f64(&[1.5, -2.25]).unwrap();
+        let p = w.finish().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n1.500000,-2.250000\n");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn wrong_arity_errors() {
+        let path = std::env::temp_dir().join("dqgan_csv_test2.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,19 @@
+//! Result recording: CSV series (one file per figure, regenerable) and
+//! aligned console tables.
+
+mod csv;
+mod table;
+
+pub use csv::CsvWriter;
+pub use table::Table;
+
+use std::path::PathBuf;
+
+/// Results directory (`results/` or `$DQGAN_RESULTS`), created on demand.
+pub fn results_dir() -> anyhow::Result<PathBuf> {
+    let dir = std::env::var("DQGAN_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}

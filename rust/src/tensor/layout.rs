@@ -1,0 +1,167 @@
+//! Named-parameter layouts: map between the flat `w ∈ R^d` vector the
+//! DQGAN algorithm manipulates and the per-parameter tensors the XLA
+//! artifacts consume/produce.
+
+use super::Tensor;
+
+/// One named parameter: shape + (derived) flat offset/length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Ordered collection of [`ParamSpec`]s with contiguous flat offsets.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ParamLayout {
+    specs: Vec<ParamSpec>,
+    total: usize,
+}
+
+impl ParamLayout {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a layout from (name, shape) pairs.
+    pub fn from_shapes(shapes: &[(&str, &[usize])]) -> Self {
+        let mut l = Self::new();
+        for (name, shape) in shapes {
+            l.push(name, shape);
+        }
+        l
+    }
+
+    /// Append a parameter; returns its index.
+    pub fn push(&mut self, name: &str, shape: &[usize]) -> usize {
+        let spec =
+            ParamSpec { name: name.to_string(), shape: shape.to_vec(), offset: self.total };
+        self.total += spec.numel();
+        self.specs.push(spec);
+        self.specs.len() - 1
+    }
+
+    /// Total flat dimension d.
+    pub fn total_len(&self) -> usize {
+        self.total
+    }
+
+    /// Number of parameters.
+    pub fn num_params(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    pub fn spec(&self, i: usize) -> &ParamSpec {
+        &self.specs[i]
+    }
+
+    /// Find by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name == name)
+    }
+
+    /// Flat-slice view of parameter `i` inside `flat`.
+    pub fn slice<'a>(&self, flat: &'a [f32], i: usize) -> &'a [f32] {
+        let s = &self.specs[i];
+        &flat[s.offset..s.offset + s.numel()]
+    }
+
+    /// Mutable flat-slice view of parameter `i`.
+    pub fn slice_mut<'a>(&self, flat: &'a mut [f32], i: usize) -> &'a mut [f32] {
+        let s = &self.specs[i];
+        &mut flat[s.offset..s.offset + s.numel()]
+    }
+
+    /// Split a flat vector into per-parameter tensors (copies).
+    pub fn unflatten(&self, flat: &[f32]) -> Vec<Tensor> {
+        assert_eq!(flat.len(), self.total, "flat len mismatch");
+        self.specs
+            .iter()
+            .map(|s| Tensor::new(s.shape.clone(), flat[s.offset..s.offset + s.numel()].to_vec()))
+            .collect()
+    }
+
+    /// Concatenate per-parameter tensors into one flat vector.
+    pub fn flatten(&self, tensors: &[Tensor]) -> Vec<f32> {
+        assert_eq!(tensors.len(), self.specs.len(), "tensor count mismatch");
+        let mut flat = vec![0.0; self.total];
+        for (t, s) in tensors.iter().zip(&self.specs) {
+            assert_eq!(t.shape(), &s.shape[..], "shape mismatch for {}", s.name);
+            flat[s.offset..s.offset + s.numel()].copy_from_slice(t.data());
+        }
+        flat
+    }
+
+    /// Concatenate raw slices (same order as the layout) into a flat vector.
+    pub fn flatten_slices(&self, slices: &[&[f32]]) -> Vec<f32> {
+        assert_eq!(slices.len(), self.specs.len());
+        let mut flat = vec![0.0; self.total];
+        for (sl, s) in slices.iter().zip(&self.specs) {
+            assert_eq!(sl.len(), s.numel(), "slice len mismatch for {}", s.name);
+            flat[s.offset..s.offset + s.numel()].copy_from_slice(sl);
+        }
+        flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> ParamLayout {
+        ParamLayout::from_shapes(&[("w1", &[2, 3]), ("b1", &[3]), ("w2", &[3, 1])])
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let l = layout();
+        assert_eq!(l.total_len(), 6 + 3 + 3);
+        assert_eq!(l.spec(0).offset, 0);
+        assert_eq!(l.spec(1).offset, 6);
+        assert_eq!(l.spec(2).offset, 9);
+        assert_eq!(l.index_of("b1"), Some(1));
+        assert_eq!(l.index_of("nope"), None);
+    }
+
+    #[test]
+    fn flatten_unflatten_round_trip() {
+        let l = layout();
+        let flat: Vec<f32> = (0..l.total_len()).map(|i| i as f32).collect();
+        let tensors = l.unflatten(&flat);
+        assert_eq!(tensors[1].data(), &[6.0, 7.0, 8.0]);
+        let back = l.flatten(&tensors);
+        assert_eq!(back, flat);
+    }
+
+    #[test]
+    fn slice_views() {
+        let l = layout();
+        let mut flat: Vec<f32> = vec![0.0; l.total_len()];
+        l.slice_mut(&mut flat, 1).copy_from_slice(&[9.0, 8.0, 7.0]);
+        assert_eq!(l.slice(&flat, 1), &[9.0, 8.0, 7.0]);
+        assert_eq!(l.slice(&flat, 0), &[0.0; 6]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn flatten_wrong_shape_panics() {
+        let l = layout();
+        let bad = vec![
+            Tensor::zeros(&[2, 3]),
+            Tensor::zeros(&[4]), // wrong
+            Tensor::zeros(&[3, 1]),
+        ];
+        l.flatten(&bad);
+    }
+}

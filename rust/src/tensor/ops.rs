@@ -1,0 +1,157 @@
+//! Elementwise vector ops on flat f32 slices — the hot-path primitives of
+//! the coordinator (OMD updates, error feedback, server aggregation). These
+//! are written as simple indexed loops the compiler auto-vectorizes; the
+//! §Perf pass benchmarks them in `benches/bench_aggregation.rs`.
+
+/// out[i] = a[i] + b[i]
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// a[i] += b[i]
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] += b[i];
+    }
+}
+
+/// a[i] -= b[i]
+pub fn sub_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] -= b[i];
+    }
+}
+
+/// out[i] = a[i] - b[i]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// a[i] *= s
+pub fn scale_assign(a: &mut [f32], s: f32) {
+    for v in a.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// out[i] = s * a[i]
+pub fn scale(a: &[f32], s: f32, out: &mut [f32]) {
+    assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = s * a[i];
+    }
+}
+
+/// y[i] += alpha * x[i]  (the BLAS axpy)
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// out[i] = alpha * x[i] + e[i] — the DQGAN "p = ηF + e" step, fused.
+pub fn scaled_add(alpha: f32, x: &[f32], e: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), e.len());
+    assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = alpha * x[i] + e[i];
+    }
+}
+
+/// Zero a slice.
+pub fn zero(a: &mut [f32]) {
+    for v in a.iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// Mean of `vs` (all same length) into `out` — the server aggregation
+/// `q̄ = 1/M Σ q̂^(m)`.
+pub fn mean_into(vs: &[&[f32]], out: &mut [f32]) {
+    assert!(!vs.is_empty());
+    let n = out.len();
+    for v in vs {
+        assert_eq!(v.len(), n);
+    }
+    zero(out);
+    for v in vs {
+        add_assign(out, v);
+    }
+    scale_assign(out, 1.0 / vs.len() as f32);
+}
+
+/// Elementwise clamp.
+pub fn clamp_assign(a: &mut [f32], lo: f32, hi: f32) {
+    for v in a.iter_mut() {
+        *v = v.clamp(lo, hi);
+    }
+}
+
+/// True iff every element is finite — failure-injection guard used by the
+/// server to reject NaN/Inf gradients.
+pub fn all_finite(a: &[f32]) -> bool {
+    a.iter().all(|v| v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_arithmetic() {
+        let a = [1.0, 2.0];
+        let b = [10.0, 20.0];
+        let mut out = [0.0; 2];
+        add(&a, &b, &mut out);
+        assert_eq!(out, [11.0, 22.0]);
+        sub(&b, &a, &mut out);
+        assert_eq!(out, [9.0, 18.0]);
+        scale(&a, 3.0, &mut out);
+        assert_eq!(out, [3.0, 6.0]);
+    }
+
+    #[test]
+    fn fused_scaled_add_matches_composition() {
+        let x = [1.0, -2.0, 3.0];
+        let e = [0.5, 0.5, -0.5];
+        let mut fused = [0.0; 3];
+        scaled_add(0.1, &x, &e, &mut fused);
+        let mut manual = e;
+        axpy(0.1, &x, &mut manual);
+        assert_eq!(fused, manual);
+    }
+
+    #[test]
+    fn mean_into_averages() {
+        let a = [1.0, 2.0];
+        let b = [3.0, 6.0];
+        let mut out = [0.0; 2];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn finite_guard() {
+        assert!(all_finite(&[1.0, -2.0]));
+        assert!(!all_finite(&[1.0, f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+    }
+
+    #[test]
+    fn clamp_works() {
+        let mut a = [-2.0, 0.5, 7.0];
+        clamp_assign(&mut a, -1.0, 1.0);
+        assert_eq!(a, [-1.0, 0.5, 1.0]);
+    }
+}

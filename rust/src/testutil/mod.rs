@@ -1,0 +1,202 @@
+//! Mini property-testing framework (no `proptest` offline).
+//!
+//! [`forall`] runs a property over `cases` seeded random inputs; on failure
+//! it performs shrinking-lite (retry the failing case with progressively
+//! "simpler" regenerated inputs using the same seed lineage) and panics
+//! with the seed so the case is replayable:
+//!
+//! ```ignore
+//! forall("qsgd is delta-approx", 200, |g| {
+//!     let v = g.vec_f32(1..=4096, -10.0..10.0);
+//!     prop_assert!(check(&v), "failed on {v:?}");
+//!     prop_pass!()
+//! });
+//! ```
+//!
+//! Set `DQGAN_PROP_SEED` (hex or decimal) to replay a reported failure.
+
+use crate::util::rng::Pcg32;
+
+/// Default base seed for property generation.
+const DEFAULT_SEED: u64 = 0x5EED_D06A;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    /// Size dial in (0,1]: shrink attempts re-run with smaller values.
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Pcg32::new(seed), size }
+    }
+
+    /// Direct RNG access.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    /// usize in [lo, hi], upper end scaled down by the shrink dial.
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        assert!(lo <= hi);
+        let span = (hi - lo) as f64 * self.size;
+        let hi_eff = lo + span.round() as usize;
+        if hi_eff <= lo {
+            lo
+        } else {
+            lo + self.rng.below((hi_eff - lo + 1) as u32) as usize
+        }
+    }
+
+    /// f32 in [lo, hi), magnitudes scaled by the shrink dial.
+    pub fn f32_in(&mut self, range: std::ops::Range<f32>) -> f32 {
+        let v = self.rng.uniform_range(range.start, range.end);
+        (v as f64 * self.size) as f32
+    }
+
+    /// Standard normal scaled by the shrink dial.
+    pub fn normal(&mut self) -> f32 {
+        (self.rng.normal() as f64 * self.size) as f32
+    }
+
+    /// Bool with probability p of true.
+    pub fn bool_p(&mut self, p: f32) -> bool {
+        self.rng.uniform() < p
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+
+    /// Vec of f32 with random length in `len` and values in `vals`.
+    pub fn vec_f32(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        vals: std::ops::Range<f32>,
+    ) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    /// Vec of standard normals with random length.
+    pub fn vec_normal(&mut self, len: std::ops::RangeInclusive<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.normal()).collect()
+    }
+}
+
+/// Outcome of a single property case.
+pub enum CaseResult {
+    Pass,
+    Fail(String),
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("DQGAN_PROP_SEED").ok().and_then(|s| {
+        let t = s.trim();
+        if let Some(hex) = t.strip_prefix("0x") {
+            u64::from_str_radix(hex, 16).ok()
+        } else {
+            t.parse().ok()
+        }
+    })
+}
+
+/// Run `prop` on `cases` random inputs. On failure, retries with 8 shrink
+/// sizes and panics reporting the smallest failing size and the seed.
+pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> CaseResult) {
+    let base_seed = env_seed().unwrap_or(DEFAULT_SEED);
+    for case in 0..cases {
+        let seed = base_seed ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed, 1.0);
+        if let CaseResult::Fail(msg) = prop(&mut g) {
+            // shrink-lite: same seed, smaller size dial.
+            let mut best = (1.0f64, msg);
+            for k in 1..=8 {
+                let size = 1.0 / (1u64 << k) as f64;
+                let mut g = Gen::new(seed, size);
+                if let CaseResult::Fail(m) = prop(&mut g) {
+                    best = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {:.4}):\n  {}\n  \
+                 replay with DQGAN_PROP_SEED={base_seed:#x}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert inside a property, returning a failure message on violation.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return $crate::testutil::CaseResult::Fail(format!(
+                "assertion failed: {} ({}:{})",
+                stringify!($cond),
+                file!(),
+                line!()
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return $crate::testutil::CaseResult::Fail(format!($($arg)*));
+        }
+    };
+}
+
+/// Finish a property successfully.
+#[macro_export]
+macro_rules! prop_pass {
+    () => {
+        return $crate::testutil::CaseResult::Pass
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        forall("abs is non-negative", 64, |g| {
+            let x = g.normal();
+            if x.abs() >= 0.0 {
+                CaseResult::Pass
+            } else {
+                CaseResult::Fail(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        forall("always fails", 4, |_g| CaseResult::Fail("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        forall("gen ranges", 128, |g| {
+            let n = g.usize_in(3..=10);
+            if !(3..=10).contains(&n) {
+                return CaseResult::Fail(format!("n={n}"));
+            }
+            let v = g.vec_f32(1..=16, -2.0..2.0);
+            if v.is_empty() || v.len() > 16 {
+                return CaseResult::Fail(format!("len={}", v.len()));
+            }
+            if v.iter().any(|x| !(-2.0..2.0).contains(x)) {
+                return CaseResult::Fail(format!("out of range: {v:?}"));
+            }
+            CaseResult::Pass
+        });
+    }
+}

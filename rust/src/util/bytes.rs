@@ -1,0 +1,155 @@
+//! Byte-level encode/decode helpers for the wire format and the codecs.
+//! Everything is little-endian (the only byte order this system touches).
+
+/// Append a u32 (LE).
+#[inline]
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a u64 (LE).
+#[inline]
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an f32 (LE).
+#[inline]
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an entire f32 slice (LE).
+pub fn put_f32_slice(buf: &mut Vec<u8>, vs: &[f32]) {
+    buf.reserve(vs.len() * 4);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Cursor for decoding (fails loudly on truncation instead of UB).
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+/// Error for truncated/malformed wire data.
+#[derive(Debug, thiserror::Error)]
+#[error("byte reader underflow at {pos}: needed {needed}, have {have}")]
+pub struct Underflow {
+    pub pos: usize,
+    pub needed: usize,
+    pub have: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], Underflow> {
+        if self.remaining() < n {
+            return Err(Underflow { pos: self.pos, needed: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, Underflow> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, Underflow> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, Underflow> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, Underflow> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, Underflow> {
+        let s = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in s.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], Underflow> {
+        self.take(n)
+    }
+}
+
+/// Human-readable byte size.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_scalars() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, 0x0123_4567_89AB_CDEF);
+        put_f32(&mut buf, -1.5);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), 0x0123_4567_89AB_CDEF);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn round_trip_f32_slice() {
+        let xs = [1.0f32, -2.5, 3.25, f32::MIN_POSITIVE];
+        let mut buf = Vec::new();
+        put_f32_slice(&mut buf, &xs);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.f32_vec(4).unwrap(), xs.to_vec());
+    }
+
+    #[test]
+    fn underflow_is_an_error() {
+        let buf = [0u8, 1];
+        let mut r = Reader::new(&buf);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn human_readable() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

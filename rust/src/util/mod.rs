@@ -1,0 +1,11 @@
+//! Infrastructure substrate the offline environment lacks: deterministic
+//! RNG, JSON, statistics, timing/profiling, logging, a thread pool, and
+//! byte-level wire helpers. See DESIGN.md §7 for why these are in-tree.
+
+pub mod bytes;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,202 @@
+//! A minimal fixed-size thread pool with scoped parallel-for, used by the
+//! server aggregation path and the experiment sweeps (no `rayon` offline).
+//!
+//! Design: N long-lived workers pull boxed jobs from a shared channel; a
+//! [`ThreadPool::scope`]-style `parallel_for` splits an index range into
+//! chunks and blocks until all chunks complete. Panics inside jobs are
+//! caught and re-raised on the caller thread.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` threads (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dqgan-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self { tx: Some(tx), workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget job submission.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.as_ref().expect("pool alive").send(Box::new(job)).expect("pool send");
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, blocking until all complete.
+    /// `f` must be `Sync` since chunks run concurrently.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunks = self.size.min(n);
+        let chunk_len = n.div_ceil(chunks);
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panicked = Arc::new(AtomicBool::new(false));
+        // SAFETY-free approach: we only pass the closure by Arc and join
+        // before returning, so borrows must be 'static — callers wrap state
+        // in Arc. For the common slice case use `parallel_for_chunks`.
+        let f = Arc::new(f);
+        std::thread::scope(|scope| {
+            for c in 0..chunks {
+                let lo = c * chunk_len;
+                let hi = ((c + 1) * chunk_len).min(n);
+                if lo >= hi {
+                    continue;
+                }
+                let f = Arc::clone(&f);
+                let panicked = Arc::clone(&panicked);
+                scope.spawn(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        for i in lo..hi {
+                            f(i);
+                        }
+                    }));
+                    if r.is_err() {
+                        panicked.store(true, Ordering::SeqCst);
+                    }
+                });
+            }
+            let _ = &done; // reserved for future non-scoped impl
+        });
+        if panicked.load(Ordering::SeqCst) {
+            panic!("parallel_for: a worker panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel so workers exit, then join.
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A latch that waits for `n` completions (used by the PS barrier tests).
+pub struct CountdownLatch {
+    remaining: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl CountdownLatch {
+    pub fn new(n: usize) -> Self {
+        Self { remaining: AtomicUsize::new(n), lock: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    /// Signal one completion.
+    pub fn count_down(&self) {
+        let prev = self.remaining.fetch_sub(1, Ordering::SeqCst);
+        assert!(prev > 0, "count_down below zero");
+        if prev == 1 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until the count reaches zero.
+    pub fn wait(&self) {
+        let mut g = self.lock.lock().unwrap();
+        while self.remaining.load(Ordering::SeqCst) > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn execute_runs_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        let latch = Arc::new(CountdownLatch::new(8));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            let l = Arc::clone(&latch);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                l.count_down();
+            });
+        }
+        latch.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(100, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "a worker panicked")]
+    fn parallel_for_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(4, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn latch_blocks_until_zero() {
+        let latch = Arc::new(CountdownLatch::new(3));
+        let l2 = Arc::clone(&latch);
+        let t = std::thread::spawn(move || {
+            for _ in 0..3 {
+                l2.count_down();
+            }
+        });
+        latch.wait();
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,158 @@
+//! Wall-clock timing utilities and a hierarchical phase profiler used by the
+//! coordinator to attribute round time to compute / quantize / encode /
+//! transport / aggregate phases (EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulated timing for one named phase.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseStat {
+    pub total: Duration,
+    pub count: u64,
+    pub max: Duration,
+}
+
+impl PhaseStat {
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+}
+
+/// Thread-safe phase profiler: `profiler.time("grad", || ...)` accumulates
+/// per-phase totals; `report()` renders a breakdown table.
+#[derive(Debug, Default)]
+pub struct PhaseProfiler {
+    phases: Mutex<BTreeMap<String, PhaseStat>>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an externally measured duration against a phase.
+    pub fn record(&self, phase: &str, d: Duration) {
+        let mut map = self.phases.lock().unwrap();
+        let e = map.entry(phase.to_string()).or_default();
+        e.total += d;
+        e.count += 1;
+        if d > e.max {
+            e.max = d;
+        }
+    }
+
+    /// Time a closure under a phase name.
+    pub fn time<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.record(phase, t.elapsed());
+        out
+    }
+
+    /// Snapshot of all phases.
+    pub fn snapshot(&self) -> BTreeMap<String, PhaseStat> {
+        self.phases.lock().unwrap().clone()
+    }
+
+    /// Total time across phases.
+    pub fn grand_total(&self) -> Duration {
+        self.phases.lock().unwrap().values().map(|p| p.total).sum()
+    }
+
+    /// Human-readable breakdown, sorted by total descending.
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let total: f64 = snap.values().map(|p| p.total.as_secs_f64()).sum();
+        let mut rows: Vec<_> = snap.into_iter().collect();
+        rows.sort_by(|a, b| b.1.total.cmp(&a.1.total));
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<20} {:>10} {:>8} {:>10} {:>10} {:>6}\n",
+            "phase", "total_ms", "count", "mean_us", "max_us", "pct"
+        ));
+        for (name, st) in rows {
+            out.push_str(&format!(
+                "{:<20} {:>10.2} {:>8} {:>10.1} {:>10.1} {:>5.1}%\n",
+                name,
+                st.total.as_secs_f64() * 1e3,
+                st.count,
+                st.mean().as_secs_f64() * 1e6,
+                st.max.as_secs_f64() * 1e6,
+                if total > 0.0 { 100.0 * st.total.as_secs_f64() / total } else { 0.0 },
+            ));
+        }
+        out
+    }
+
+    /// Clear all accumulated phases.
+    pub fn reset(&self) {
+        self.phases.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let p = PhaseProfiler::new();
+        p.time("a", || std::thread::sleep(Duration::from_millis(1)));
+        p.time("a", || std::thread::sleep(Duration::from_millis(1)));
+        p.record("b", Duration::from_millis(5));
+        let snap = p.snapshot();
+        assert_eq!(snap["a"].count, 2);
+        assert_eq!(snap["b"].count, 1);
+        assert!(snap["a"].total >= Duration::from_millis(2));
+        let report = p.report();
+        assert!(report.contains("a"));
+        assert!(report.contains("b"));
+    }
+
+    #[test]
+    fn profiler_reset() {
+        let p = PhaseProfiler::new();
+        p.record("x", Duration::from_millis(1));
+        p.reset();
+        assert!(p.snapshot().is_empty());
+    }
+}

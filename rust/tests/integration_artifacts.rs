@@ -1,0 +1,186 @@
+//! Integration: the Rust runtime drives the AOT artifacts end-to-end and
+//! the XLA path agrees with the native implementations.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use dqgan::data::{GaussianMixture2D, SynthImages, IMG_LEN};
+use dqgan::grad::GradientSource;
+use dqgan::metrics::{FeatureNet, FEATURE_DIM, NUM_CLASSES};
+use dqgan::model::{MlpGan, MlpGanConfig};
+use dqgan::runtime::{artifacts_dir, Runtime, XlaFeatureNet, XlaGradSource, XlaQuantizer, XlaSampler};
+use dqgan::util::rng::Pcg32;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::from_default_dir().expect("runtime"))
+}
+
+#[test]
+fn manifest_loads_and_lists_all_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in [
+        "mlp_gan_grad",
+        "mlp_gan_sample",
+        "dcgan_grad",
+        "dcgan_sample",
+        "quantize_ef_mlp",
+        "quantize_ef_dcgan",
+        "omd_half_mlp",
+        "omd_half_dcgan",
+        "feature_net",
+    ] {
+        assert!(rt.manifest().get(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn xla_mlp_grad_matches_native_analytic_gradient() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut src = XlaGradSource::mlp(&rt, GaussianMixture2D::ring(8, 2.0, 0.1)).unwrap();
+    let batch = src.artifact_batch();
+    let mut rng = Pcg32::new(42);
+    let w = src.init_params(&mut rng);
+
+    // Native gradient on the SAME minibatch: replicate the artifact's
+    // sampling order (z first: batch×nz normals row-major; then data).
+    let native = MlpGan::new(MlpGanConfig::default());
+    assert_eq!(native.layout.total_len(), src.dim());
+
+    // Run the XLA grad with a cloned RNG so we can reproduce ξ natively.
+    let mut rng_x = Pcg32::new(777);
+    let mut rng_n = rng_x.clone();
+    let mut g_xla = vec![0.0; src.dim()];
+    src.grad(&w, batch, &mut rng_x, &mut g_xla).unwrap();
+
+    let nz = 4; // MlpGanConfig::default().noise_dim
+    let zs: Vec<Vec<f32>> = (0..batch).map(|_| rng_n.normal_vec(nz)).collect();
+    let xs: Vec<[f32; 2]> = (0..batch).map(|_| native.data.sample(&mut rng_n)).collect();
+    let mut g_native = vec![0.0; src.dim()];
+    native.grad_with_samples(&w, &zs, &xs, &mut g_native);
+
+    let mut max_rel = 0.0f32;
+    for (a, b) in g_xla.iter().zip(&g_native) {
+        let rel = (a - b).abs() / b.abs().max(1e-3);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(
+        max_rel < 2e-2,
+        "XLA and native MLP-GAN gradients disagree: max rel err {max_rel}"
+    );
+}
+
+#[test]
+fn xla_dcgan_grad_runs_and_is_finite() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut src = XlaGradSource::dcgan(&rt, SynthImages::cifar_like(1)).unwrap();
+    let batch = src.artifact_batch();
+    let mut rng = Pcg32::new(7);
+    let w = src.init_params(&mut rng);
+    let mut g = vec![0.0; src.dim()];
+    let meta = src.grad(&w, batch, &mut rng, &mut g).unwrap();
+    assert!(g.iter().all(|x| x.is_finite()));
+    assert!(g.iter().any(|&x| x != 0.0));
+    assert!(meta.loss_g.unwrap().is_finite());
+    assert!(meta.loss_d.unwrap().is_finite());
+}
+
+#[test]
+fn xla_quantizer_satisfies_ef_identity_and_grid() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let q = XlaQuantizer::new(&rt, "quantize_ef_mlp").unwrap();
+    let mut rng = Pcg32::new(3);
+    let v = rng.normal_vec(q.dim());
+    let (qv, e) = q.quantize_ef(&v, &mut rng).unwrap();
+    // EF identity: p = q + e exactly.
+    for i in 0..v.len() {
+        assert!((qv[i] + e[i] - v[i]).abs() < 1e-6, "EF identity broken at {i}");
+    }
+    // δ-contract at 8 bits: the quantization error is tiny on Gaussians.
+    let err: f32 = e.iter().map(|x| x * x).sum();
+    let norm: f32 = v.iter().map(|x| x * x).sum();
+    assert!(err / norm < 0.01, "err ratio {}", err / norm);
+}
+
+#[test]
+fn xla_and_native_quantizers_agree_in_distribution() {
+    let Some(rt) = runtime_or_skip() else { return };
+    use dqgan::compress::{Compressor, LinfStochastic};
+    let xq = XlaQuantizer::new(&rt, "quantize_ef_mlp").unwrap();
+    let spec = rt.manifest().get("quantize_ef_mlp").unwrap();
+    let levels = spec.meta_usize("levels").unwrap() as u32;
+    let block = spec.meta_usize("block").unwrap();
+    let nq = LinfStochastic::new(levels).with_block(block);
+    let mut rng = Pcg32::new(11);
+    let v = rng.normal_vec(xq.dim());
+    // Different RNG draws ⇒ compare E[Q(v)] over repetitions.
+    let reps = 50;
+    let mut mean_x = vec![0.0f64; v.len()];
+    let mut mean_n = vec![0.0f64; v.len()];
+    for _ in 0..reps {
+        let (qx, _) = xq.quantize_ef(&v, &mut rng).unwrap();
+        let qn = nq.compress_vec(&v, &mut rng);
+        for i in 0..v.len() {
+            mean_x[i] += qx[i] as f64 / reps as f64;
+            mean_n[i] += qn[i] as f64 / reps as f64;
+        }
+    }
+    // Both are unbiased for v — their means must agree within noise.
+    let mut max_diff = 0.0f64;
+    for i in 0..v.len() {
+        max_diff = max_diff.max((mean_x[i] - mean_n[i]).abs());
+    }
+    assert!(max_diff < 0.05, "distributional disagreement: {max_diff}");
+}
+
+#[test]
+fn omd_half_artifact_matches_native_update() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("omd_half_mlp").unwrap();
+    let n = exe.spec.inputs[0].numel();
+    let mut rng = Pcg32::new(5);
+    let w = rng.normal_vec(n);
+    let f = rng.normal_vec(n);
+    let e = rng.normal_vec(n);
+    let eta = [0.05f32];
+    let out = exe.run_f32(&[&w, &f, &e, &eta]).unwrap().remove(0);
+    for i in 0..n {
+        let want = w[i] - (0.05 * f[i] + e[i]);
+        assert!((out[i] - want).abs() < 1e-5, "i={i}: {} vs {want}", out[i]);
+    }
+}
+
+#[test]
+fn xla_feature_net_matches_native_features() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let xnet = XlaFeatureNet::new(&rt).unwrap();
+    let native = FeatureNet::new();
+    let ds = SynthImages::cifar_like(4);
+    let mut rng = Pcg32::new(9);
+    let (imgs, _) = ds.sample_batch(xnet.batch, &mut rng);
+    assert_eq!(imgs.len(), xnet.batch * IMG_LEN);
+    let (fx, lx) = xnet.score(&imgs).unwrap();
+    let (fn_, ln_) = native.features_batch(&imgs);
+    assert_eq!(fx.len(), xnet.batch * FEATURE_DIM);
+    assert_eq!(lx.len(), xnet.batch * NUM_CLASSES);
+    for (a, b) in fx.iter().zip(&fn_) {
+        assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "feature mismatch {a} vs {b}");
+    }
+    for (a, b) in lx.iter().zip(&ln_) {
+        assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "logit mismatch {a} vs {b}");
+    }
+}
+
+#[test]
+fn xla_sampler_produces_images_in_range() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let sampler = XlaSampler::new(&rt, "dcgan_sample").unwrap();
+    let mut src = XlaGradSource::dcgan(&rt, SynthImages::cifar_like(2)).unwrap();
+    let mut rng = Pcg32::new(21);
+    let w = src.init_params(&mut rng);
+    let imgs = sampler.sample(&w, &mut rng).unwrap();
+    assert_eq!(imgs.len(), sampler.sample_n * IMG_LEN);
+    assert!(imgs.iter().all(|&p| (-1.0..=1.0).contains(&p)));
+}

@@ -1,0 +1,48 @@
+//! Integration: every experiment harness runs end-to-end in fast mode and
+//! produces its CSV — the "figures regenerate" guarantee.
+
+use std::path::Path;
+
+fn results(file: &str) -> bool {
+    Path::new("results").join(file).exists()
+}
+
+#[test]
+fn bilinear_harness_runs_and_writes_csv() {
+    dqgan::exp::run("bilinear", true).unwrap();
+    assert!(results("bilinear.csv"));
+}
+
+#[test]
+fn lemma1_harness_validates_the_bound() {
+    // run() itself asserts the Lemma-1 bound holds for every compressor.
+    dqgan::exp::run("lemma1", true).unwrap();
+    assert!(results("lemma1.csv"));
+}
+
+#[test]
+fn thm3_harness_runs_and_writes_csv() {
+    dqgan::exp::run("thm3", true).unwrap();
+    assert!(results("thm3.csv"));
+}
+
+#[test]
+fn synthetic_harness_runs_and_writes_csv() {
+    dqgan::exp::run("synthetic", true).unwrap();
+    assert!(results("synthetic.csv"));
+}
+
+#[test]
+fn fig4_harness_runs_when_artifacts_present() {
+    if !dqgan::runtime::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    dqgan::exp::run("fig4", true).unwrap();
+    assert!(results("fig4.csv"));
+}
+
+#[test]
+fn unknown_experiment_is_an_error() {
+    assert!(dqgan::exp::run("figNaN", true).is_err());
+}

@@ -1,0 +1,115 @@
+//! Integration: the metric stack discriminates real quality differences —
+//! the property Figures 2–3 rely on.
+
+use dqgan::data::{SynthImages, IMG_LEN};
+use dqgan::metrics::{
+    fid_from_features, inception_score, FeatureNet, FEATURE_DIM, NUM_CLASSES,
+};
+use dqgan::util::rng::Pcg32;
+
+fn batch(ds: &SynthImages, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    ds.sample_batch(n, &mut rng).0
+}
+
+#[test]
+fn fid_of_real_vs_real_is_small_and_real_vs_noise_is_large() {
+    let ds = SynthImages::cifar_like(1);
+    let net = FeatureNet::new();
+    let n = 128;
+    let (fa, _) = net.features_batch(&batch(&ds, n, 2));
+    let (fb, _) = net.features_batch(&batch(&ds, n, 3));
+    let fid_rr = fid_from_features(&fa, n, &fb, n, FEATURE_DIM).fid;
+
+    // "Generator collapse" stand-in: pure noise images.
+    let mut rng = Pcg32::new(4);
+    let noise: Vec<f32> = (0..n * IMG_LEN).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+    let (fn_, _) = net.features_batch(&noise);
+    let fid_rn = fid_from_features(&fa, n, &fn_, n, FEATURE_DIM).fid;
+    assert!(
+        fid_rn > 5.0 * fid_rr.max(1e-3),
+        "FID must separate real ({fid_rr:.3}) from noise ({fid_rn:.3})"
+    );
+}
+
+#[test]
+fn fid_decreases_as_distributions_match_better() {
+    // Mix k% noise into the "generated" batch: FID must rise with k.
+    let ds = SynthImages::cifar_like(5);
+    let net = FeatureNet::new();
+    let n = 96;
+    let real = batch(&ds, n, 6);
+    let (freal, _) = net.features_batch(&real);
+    let mut rng = Pcg32::new(7);
+    let mut prev_fid = -1.0f32;
+    for frac_noisy in [0usize, 3, 8] {
+        let mut gen = batch(&ds, n, 8);
+        for i in 0..(n * frac_noisy / 10) {
+            for p in gen[i * IMG_LEN..(i + 1) * IMG_LEN].iter_mut() {
+                *p = rng.uniform_range(-1.0, 1.0);
+            }
+        }
+        let (fgen, _) = net.features_batch(&gen);
+        let fid = fid_from_features(&freal, n, &fgen, n, FEATURE_DIM).fid;
+        assert!(
+            fid > prev_fid,
+            "FID must grow with corruption: {prev_fid} → {fid} at {frac_noisy}/10 noisy"
+        );
+        prev_fid = fid;
+    }
+}
+
+#[test]
+fn inception_proxy_rewards_class_diversity_of_real_data() {
+    let ds = SynthImages::cifar_like(9);
+    let net = FeatureNet::new();
+    let n = 160;
+    // Diverse real batch (all classes).
+    let (_, logits_div) = net.features_batch(&batch(&ds, n, 10));
+    let is_diverse = inception_score(&logits_div, n);
+    // Collapsed batch: a single class rendered n times.
+    let mut rng = Pcg32::new(11);
+    let mut collapsed = vec![0.0f32; n * IMG_LEN];
+    for i in 0..n {
+        ds.render(3, &mut rng, &mut collapsed[i * IMG_LEN..(i + 1) * IMG_LEN]);
+    }
+    let (_, logits_col) = net.features_batch(&collapsed);
+    let is_collapsed = inception_score(&logits_col, n);
+    assert!(
+        is_diverse > is_collapsed,
+        "IS must reward diversity: diverse={is_diverse:.3} collapsed={is_collapsed:.3}"
+    );
+    assert!(is_diverse <= NUM_CLASSES as f32 + 1e-3);
+    assert!(is_collapsed >= 1.0 - 1e-3);
+}
+
+#[test]
+fn both_synthetic_datasets_have_usable_class_structure() {
+    // The feature embedding separates classes on both datasets (needed for
+    // fig2 vs fig3 to be distinct experiments).
+    for ds in [SynthImages::cifar_like(12), SynthImages::faces_like(12)] {
+        let net = FeatureNet::new();
+        let mut rng = Pcg32::new(13);
+        let per_class = 12;
+        let mut feats: Vec<Vec<f32>> = Vec::new();
+        let mut buf = vec![0.0f32; IMG_LEN];
+        for cls in 0..3 {
+            let mut acc = vec![0.0f32; FEATURE_DIM];
+            for _ in 0..per_class {
+                ds.render(cls, &mut rng, &mut buf);
+                let (f, _) = net.features(&buf);
+                for (a, b) in acc.iter_mut().zip(&f) {
+                    *a += b / per_class as f32;
+                }
+            }
+            feats.push(acc);
+        }
+        // Class centroids must be pairwise separated.
+        for i in 0..3 {
+            for j in i + 1..3 {
+                let d = dqgan::util::stats::dist2_sq(&feats[i], &feats[j]);
+                assert!(d > 1e-4, "classes {i},{j} indistinguishable (d={d})");
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: the parameter-server runtime over both transports, with
+//! byte accounting, worker synchronization and failure handling.
+
+use dqgan::algo::AlgoKind;
+use dqgan::comm::{inproc_cluster, Message, MsgKind, WorkerEnd};
+use dqgan::comm::tcp::{TcpServerBuilder, TcpWorkerEnd};
+use dqgan::compress::{Compressor, Identity};
+use dqgan::grad::QuadraticOperator;
+use dqgan::optim::LrSchedule;
+use dqgan::ps::{run_cluster, serve_rounds, worker_loop, ClusterConfig};
+use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
+
+#[test]
+fn full_cluster_all_algorithms_converge_on_quadratic() {
+    for algo in ["dqgan:linf8", "dqgan-adam:linf8", "cpoadam", "cpoadam-gq:linf8"] {
+        let cfg = ClusterConfig {
+            algo: AlgoKind::parse(algo).unwrap(),
+            workers: 3,
+            batch: 8,
+            rounds: 700,
+            lr: LrSchedule::constant(if algo.starts_with("dqgan:") { 0.1 } else { 0.03 }),
+            seed: 11,
+            eval_every: 0,
+            keep_stats: false,
+        };
+        let report = run_cluster(&cfg, |_m| {
+            let mut rng = Pcg32::new(321);
+            Ok(Box::new(QuadraticOperator::new(12, 0.1, &mut rng)))
+        })
+        .unwrap_or_else(|e| panic!("{algo}: {e}"));
+        let target = {
+            let mut rng = Pcg32::new(321);
+            QuadraticOperator::new(12, 0.1, &mut rng).target
+        };
+        let dist =
+            dqgan::util::stats::dist2_sq(&report.worker0.final_params, &target).sqrt();
+        assert!(dist < 0.5, "{algo}: dist to optimum {dist}");
+    }
+}
+
+#[test]
+fn byte_accounting_matches_algorithm_prediction() {
+    let algo = AlgoKind::parse("dqgan:linf8").unwrap();
+    let dim = 256;
+    let rounds = 10u64;
+    let workers = 3usize;
+    let cfg = ClusterConfig {
+        algo: algo.clone(),
+        workers,
+        batch: 4,
+        rounds,
+        lr: LrSchedule::constant(0.05),
+        seed: 5,
+        eval_every: 0,
+        keep_stats: false,
+    };
+    let report = run_cluster(&cfg, |_m| {
+        let mut rng = Pcg32::new(9);
+        Ok(Box::new(QuadraticOperator::new(dim, 0.1, &mut rng)))
+    })
+    .unwrap();
+    let expected = algo.uplink_bytes(dim) as u64 * rounds * workers as u64;
+    assert_eq!(report.total_bytes_up, expected);
+}
+
+#[test]
+fn tcp_transport_runs_a_real_training_round_trip() {
+    // Full PS protocol over real sockets: 2 workers, 20 rounds of DQGAN.
+    let m = 2usize;
+    let rounds = 20u64;
+    let dim = 16usize;
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let algo = AlgoKind::parse("dqgan:linf8").unwrap();
+
+    let mut worker_handles = Vec::new();
+    let mut seed_rng = Pcg32::new(88);
+    let w0 = {
+        let op = QuadraticOperator::new(dim, 0.1, &mut seed_rng);
+        use dqgan::grad::GradientSource;
+        op.init_params(&mut seed_rng)
+    };
+    for id in 0..m as u32 {
+        let w0 = w0.clone();
+        let algo = algo.clone();
+        worker_handles.push(std::thread::spawn(move || {
+            let mut end = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+            let mut worker = algo.build_worker(w0, LrSchedule::constant(0.05));
+            let mut rng = Pcg32::new(100 + id as u64);
+            let mut src = {
+                let mut r = Pcg32::new(55);
+                QuadraticOperator::new(dim, 0.1, &mut r)
+            };
+            worker_loop(
+                &mut end,
+                worker.as_mut(),
+                &mut src,
+                4,
+                rounds,
+                &mut rng,
+                false,
+                None,
+            )
+            .unwrap()
+        }));
+    }
+    let mut server = builder.accept(m).unwrap();
+    let decoder = algo.decoder();
+    let records = serve_rounds(&mut server, decoder, dim, rounds, |_| {}).unwrap();
+    assert_eq!(records.len(), rounds as usize);
+    let summaries: Vec<_> =
+        worker_handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // All workers end with identical parameters (synchronous PS invariant).
+    assert_eq!(summaries[0].final_params, summaries[1].final_params);
+    assert!(server.counter().up_total() > 0);
+}
+
+#[test]
+fn decoded_wire_equals_dense_payload_through_the_server() {
+    // The server decodes exactly what the worker computed locally.
+    let (mut server, mut workers, _) = inproc_cluster(1);
+    let c = dqgan::compress::LinfStochastic::with_bits(8);
+    let mut rng = Pcg32::new(2);
+    let v = rng.normal_vec(64);
+    let mut wire = Vec::new();
+    let dense = c.compress_encoded(&v, &mut rng, &mut wire);
+    workers[0].send(Message::payload(0, 0, wire)).unwrap();
+
+    let decoder: Arc<dyn Fn(&[u8], usize) -> anyhow::Result<Vec<f32>> + Send + Sync> = {
+        let c = dqgan::compress::LinfStochastic::with_bits(8);
+        Arc::new(move |b, d| c.decode(b, d))
+    };
+    let t = std::thread::spawn(move || {
+        let msg = workers[0].recv().unwrap();
+        assert_eq!(msg.kind, MsgKind::Broadcast);
+        let mut r = dqgan::util::bytes::Reader::new(&msg.payload);
+        r.f32_vec(64).unwrap()
+    });
+    serve_rounds(&mut server, decoder, 64, 1, |_| {}).unwrap();
+    let avg = t.join().unwrap();
+    assert_eq!(avg, dense, "single-worker average must equal the decoded payload");
+}
+
+#[test]
+fn identity_decoder_round_trips_raw_f32() {
+    let mut rng = Pcg32::new(4);
+    let v = rng.normal_vec(100);
+    let mut wire = Vec::new();
+    Identity.encode(&v, &mut wire);
+    let back = Identity.decode(&wire, 100).unwrap();
+    assert_eq!(v, back);
+}

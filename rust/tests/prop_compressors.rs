@@ -1,0 +1,250 @@
+//! Property tests for the compression subsystem (Theorems 1–2 and the
+//! codec/wire invariants), via the in-tree `testutil` framework.
+
+use dqgan::compress::{
+    compressor_from_spec, Compressor, LinfStochastic, Qsgd, SignScale, TernGrad, TopK,
+};
+use dqgan::testutil::forall;
+use dqgan::util::stats::norm2_sq;
+use dqgan::{prop_assert, prop_pass};
+
+const SPECS: &[&str] = &[
+    "identity",
+    "topk(f=0.05)",
+    "topk(f=0.3)",
+    "qsgd8",
+    "qsgd(s=3)",
+    "linf8",
+    "linf(s=7)",
+    "linf(bits=8,block=64)",
+    "sign",
+    "terngrad",
+];
+
+/// Theorem 1 (exact, per-sample): top-k contraction with δ = k/d.
+#[test]
+fn prop_topk_contraction_is_deterministic() {
+    forall("topk per-sample contraction", 300, |g| {
+        let f = *g.choose(&[0.01f64, 0.1, 0.5, 0.9, 1.0]);
+        let c = TopK::new(f);
+        let v = g.vec_normal(1..=512);
+        if v.is_empty() {
+            prop_pass!();
+        }
+        let q = c.compress_vec(&v, g.rng());
+        let err: f32 = v.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+        let bound = (1.0 - c.delta(v.len()).unwrap() as f32) * norm2_sq(&v);
+        prop_assert!(err <= bound + 1e-4, "err={err} > bound={bound} (d={}, f={f})", v.len());
+        prop_pass!()
+    });
+}
+
+/// Theorem 2 (in expectation): the stochastic quantizers contract.
+/// (TernGrad is deliberately excluded: it is unbiased but NOT a
+/// δ-approximate compressor — E‖Q(v)−v‖² = Σ|v_i|(‖v‖∞−|v_i|) exceeds
+/// ‖v‖² on typical Gaussian vectors. This property test is what caught
+/// that; TernGrad is kept in the library as a comparison codec only.)
+#[test]
+fn prop_stochastic_quantizers_contract_in_expectation() {
+    forall("qsgd/linf expected contraction", 40, |g| {
+        let d = g.usize_in(16..=256);
+        let v = g.vec_normal(d..=d);
+        let denom = norm2_sq(&v) as f64;
+        if denom < 1e-12 {
+            prop_pass!();
+        }
+        for c in [
+            &Qsgd::with_bits(8) as &dyn Compressor,
+            &LinfStochastic::with_bits(8),
+        ] {
+            let reps = 24;
+            let mut mean_ratio = 0.0f64;
+            for _ in 0..reps {
+                let q = c.compress_vec(&v, g.rng());
+                let err: f64 =
+                    v.iter().zip(&q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+                mean_ratio += err / denom / reps as f64;
+            }
+            prop_assert!(
+                mean_ratio < 1.0,
+                "{} not δ-approximate: E ratio {mean_ratio} on d={d}",
+                c.name()
+            );
+        }
+        prop_pass!()
+    });
+}
+
+/// Negative result, documented: TernGrad violates Definition 1 on plain
+/// Gaussian vectors (E‖Q(v)−v‖² > ‖v‖²), so it is NOT usable as DQGAN's
+/// compressor with the paper's convergence guarantee.
+#[test]
+fn prop_terngrad_is_not_delta_approximate() {
+    let violations = std::cell::Cell::new(0usize);
+    let trials = 20;
+    forall("terngrad violates Definition 1 somewhere", 1, |g| {
+        for _ in 0..trials {
+            let d = g.usize_in(16..=128);
+            let v = g.vec_normal(d..=d);
+            let denom = norm2_sq(&v) as f64;
+            if denom < 1e-12 {
+                continue;
+            }
+            let reps = 24;
+            let mut mean_ratio = 0.0f64;
+            for _ in 0..reps {
+                let q = TernGrad.compress_vec(&v, g.rng());
+                let err: f64 =
+                    v.iter().zip(&q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+                mean_ratio += err / denom / reps as f64;
+            }
+            if mean_ratio > 1.0 {
+                violations.set(violations.get() + 1);
+            }
+        }
+        prop_pass!()
+    });
+    assert!(
+        violations.get() > 0,
+        "expected TernGrad to violate the contraction on Gaussian inputs"
+    );
+}
+
+/// Unbiasedness of the unbiased family: E[Q(v)] ≈ v.
+#[test]
+fn prop_unbiased_quantizers_are_unbiased() {
+    forall("unbiasedness", 20, |g| {
+        let d = g.usize_in(8..=64);
+        let v = g.vec_normal(d..=d);
+        for c in
+            [&Qsgd::new(4) as &dyn Compressor, &LinfStochastic::new(4), &TernGrad]
+        {
+            let reps = 600;
+            let mut mean = vec![0.0f64; d];
+            for _ in 0..reps {
+                let q = c.compress_vec(&v, g.rng());
+                for i in 0..d {
+                    mean[i] += q[i] as f64 / reps as f64;
+                }
+            }
+            let scale = v.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(0.1) as f64;
+            for i in 0..d {
+                prop_assert!(
+                    (mean[i] - v[i] as f64).abs() < 0.15 * scale,
+                    "{} biased at {i}: E={} v={} (d={d})",
+                    c.name(),
+                    mean[i],
+                    v[i]
+                );
+            }
+        }
+        prop_pass!()
+    });
+}
+
+/// Fused compress_encoded round-trips bit-exactly through decode for every
+/// compressor — the invariant the error-feedback state relies on.
+#[test]
+fn prop_wire_round_trip_bit_exact() {
+    forall("wire round trip", 120, |g| {
+        let spec = *g.choose(SPECS);
+        let c = compressor_from_spec(spec).unwrap();
+        let d = g.usize_in(1..=700);
+        let v = g.vec_normal(d..=d);
+        let mut buf = Vec::new();
+        let q = c.compress_encoded(&v, g.rng(), &mut buf);
+        prop_assert!(
+            buf.len() == c.encoded_size(d),
+            "{spec}: encoded {} B ≠ declared {} B (d={d})",
+            buf.len(),
+            c.encoded_size(d)
+        );
+        let back = c.decode(&buf, d).unwrap();
+        for i in 0..d {
+            prop_assert!(
+                q[i].to_bits() == back[i].to_bits(),
+                "{spec}: bit mismatch at {i}: {} vs {} (d={d})",
+                q[i],
+                back[i]
+            );
+        }
+        prop_pass!()
+    });
+}
+
+/// Q(0) = 0 for every compressor (required for Definition 1 at v = 0).
+#[test]
+fn prop_zero_maps_to_zero() {
+    forall("zero preservation", 60, |g| {
+        let spec = *g.choose(SPECS);
+        let c = compressor_from_spec(spec).unwrap();
+        let d = g.usize_in(1..=256);
+        let v = vec![0.0f32; d];
+        let q = c.compress_vec(&v, g.rng());
+        prop_assert!(q.iter().all(|&x| x == 0.0), "{spec}: Q(0) ≠ 0");
+        prop_pass!()
+    });
+}
+
+/// Sign-flip equivariance: Q(−v) has the same error profile as Q(v)
+/// (holds for all our schemes since they operate on |v| and sign).
+#[test]
+fn prop_sign_equivariance_of_deterministic_schemes() {
+    forall("sign equivariance (topk/sign)", 100, |g| {
+        let d = g.usize_in(2..=128);
+        let v = g.vec_normal(d..=d);
+        let neg: Vec<f32> = v.iter().map(|x| -x).collect();
+        for c in [&TopK::new(0.3) as &dyn Compressor, &SignScale] {
+            let q1 = c.compress_vec(&v, g.rng());
+            let q2 = c.compress_vec(&neg, g.rng());
+            for i in 0..d {
+                prop_assert!(
+                    (q1[i] + q2[i]).abs() < 1e-5,
+                    "{}: not sign-equivariant at {i}",
+                    c.name()
+                );
+            }
+        }
+        prop_pass!()
+    });
+}
+
+/// decode() must reject truncated buffers rather than panic or fabricate.
+#[test]
+fn prop_decode_rejects_truncation() {
+    forall("decode truncation", 80, |g| {
+        let spec = *g.choose(SPECS);
+        let c = compressor_from_spec(spec).unwrap();
+        let d = g.usize_in(4..=256);
+        let v = g.vec_normal(d..=d);
+        let mut buf = Vec::new();
+        let _ = c.compress_encoded(&v, g.rng(), &mut buf);
+        if buf.len() < 2 {
+            prop_pass!();
+        }
+        let cut = g.usize_in(0..=buf.len().saturating_sub(2));
+        // Identity with cut=0 on an empty prefix decodes 0 floats... all
+        // schemes must error because d elements can't come from `cut` bytes.
+        let res = c.decode(&buf[..cut], d);
+        prop_assert!(res.is_err(), "{spec}: decoded from {cut}/{} bytes", buf.len());
+        prop_pass!()
+    });
+}
+
+/// Compression ratios: every sub-f32 scheme beats raw f32 on the wire.
+#[test]
+fn prop_encoded_size_beats_fp32() {
+    forall("wire size", 60, |g| {
+        let d = g.usize_in(64..=4096);
+        for spec in ["qsgd8", "linf8", "sign", "terngrad", "topk(f=0.1)"] {
+            let c = compressor_from_spec(spec).unwrap();
+            prop_assert!(
+                c.encoded_size(d) < 4 * d,
+                "{spec}: {} B ≥ raw {} B (d={d})",
+                c.encoded_size(d),
+                4 * d
+            );
+        }
+        prop_pass!()
+    });
+}
