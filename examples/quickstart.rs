@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
         eval_every: 100,
         keep_stats: true,
+        agg: Default::default(),
     };
 
     // 2. Gradient source: the AOT-compiled JAX model (PJRT CPU).

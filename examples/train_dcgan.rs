@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         seed,
         eval_every,
         keep_stats: true,
+        agg: Default::default(),
     };
     println!(
         "e2e: DCGAN (400,708 params) on synth-CIFAR, {} workers × batch 16, {} rounds, DQGAN 8-bit",

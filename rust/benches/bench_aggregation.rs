@@ -1,14 +1,58 @@
 //! PERF: server-side aggregation (q̄ = 1/M Σ p̂) and the hot vector ops of
 //! the worker loop — the L3 costs that must not dominate round time.
+//!
+//! The headline case is the sequential-vs-sharded leader A/B over real
+//! 8-bit linf wire payloads at DCGAN dimension: the sharded
+//! [`dqgan::ps::Aggregator`] must beat the sequential baseline at M ≥ 8
+//! on a multi-core host (decode is worker-parallel, the reduce is
+//! shard-parallel, and both produce bitwise-identical averages — see
+//! `tests/integration_aggregate.rs`).
 
 use dqgan::benchutil::Bench;
+use dqgan::comm::Message;
+use dqgan::compress::compressor_from_spec;
+use dqgan::config::{AggMode, AggregatorConfig};
+use dqgan::ps::{Aggregator, Decoder};
 use dqgan::tensor::ops;
 use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
 
 fn main() {
     let mut b = Bench::new("aggregation");
     let mut rng = Pcg32::new(5);
     let d = 400_708usize; // DCGAN dim
+
+    // End-to-end leader path: decode M × linf8 payloads + average.
+    let codec = compressor_from_spec("linf8").unwrap();
+    let decoder: Decoder = {
+        let c = compressor_from_spec("linf8").unwrap();
+        Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+    };
+    for &m in &[4usize, 8, 32] {
+        let msgs: Vec<Message> = (0..m)
+            .map(|w| {
+                let v = rng.normal_vec(d);
+                let mut wire = Vec::new();
+                codec.compress_encoded(&v, &mut rng, &mut wire);
+                Message::payload(w as u32, 0, wire)
+            })
+            .collect();
+        for mode in [AggMode::Sequential, AggMode::Sharded] {
+            let mut agg =
+                Aggregator::new(AggregatorConfig { mode, ..Default::default() }, d, m);
+            let tag = match mode {
+                AggMode::Sequential => "sequential",
+                AggMode::Sharded => "sharded",
+            };
+            b.bench_with_throughput(
+                &format!("decode+average/{tag}/M={m}/d={d}"),
+                (4 * d * m) as u64,
+                || agg.aggregate(0, &msgs, &decoder).unwrap()[0],
+            );
+        }
+    }
+
+    // Reduce-only cost (pre-decoded dense payloads).
     for &m in &[4usize, 8, 32] {
         let payloads: Vec<Vec<f32>> = (0..m).map(|_| rng.normal_vec(d)).collect();
         let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
@@ -18,6 +62,7 @@ fn main() {
             out[0]
         });
     }
+
     // Worker-side fused ops.
     let x = rng.normal_vec(d);
     let e = rng.normal_vec(d);

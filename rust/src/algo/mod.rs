@@ -146,18 +146,21 @@ impl AlgoKind {
         }
     }
 
-    /// Server-side decoder for this algorithm's wire payloads.
-    pub fn decoder(&self) -> Arc<dyn Fn(&[u8], usize) -> anyhow::Result<Vec<f32>> + Send + Sync> {
+    /// Server-side decoder for this algorithm's wire payloads: decodes a
+    /// wire buffer *into* the caller's dense slice, so the leader's
+    /// aggregation path never materializes intermediate `Vec`s (see
+    /// [`crate::ps::Aggregator`]).
+    pub fn decoder(&self) -> crate::ps::Decoder {
         match self {
             Self::Dqgan { compressor }
             | Self::DqganAdam { compressor }
             | Self::CpoAdamGq { compressor } => {
                 let c: Arc<dyn crate::compress::Compressor> = Arc::from(compressor.build());
-                Arc::new(move |bytes, d| c.decode(bytes, d))
+                Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
             }
             Self::CpoAdam | Self::DistGda => {
                 let c = crate::compress::Identity;
-                Arc::new(move |bytes, d| c.decode(bytes, d))
+                Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
             }
         }
     }

@@ -2,6 +2,7 @@
 
 use super::args::Args;
 use crate::algo::AlgoKind;
+use crate::config::{AggMode, AggregatorConfig};
 use crate::compress::{
     compressor_from_spec, empirical_delta, gaussian_sampler, heavy_tail_sampler,
     sparse_sampler,
@@ -31,6 +32,11 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     };
     let batch = args.get_parse("batch", default_batch)?;
     let lr = args.get_parse("lr", default_lr)?;
+    let agg = AggregatorConfig {
+        mode: AggMode::parse(&args.get_or("agg", "sharded"))?,
+        threads: args.get_parse("agg-threads", 0usize)?,
+        shard_elems: args.get_parse("agg-shard", AggregatorConfig::default().shard_elems)?,
+    };
 
     let cfg = ClusterConfig {
         algo,
@@ -41,10 +47,12 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         seed,
         eval_every,
         keep_stats: true,
+        agg,
     };
     crate::log_info!(
-        "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr}",
-        cfg.algo.label()
+        "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr} agg={:?}",
+        cfg.algo.label(),
+        cfg.agg.mode
     );
 
     let report = if model == "mlp" && native {

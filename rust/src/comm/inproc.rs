@@ -4,7 +4,7 @@
 //! frame sizes so accounting matches the TCP path exactly.
 
 use super::message::{Message, MsgKind};
-use super::{ByteCounter, ServerEnd, WorkerEnd};
+use super::{validate_round_batch, ByteCounter, ServerEnd, WorkerEnd};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
@@ -47,24 +47,14 @@ impl ServerEnd for InprocServerEnd {
             let msg =
                 self.from_workers.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
             if msg.kind == MsgKind::WorkerError {
-                anyhow::bail!(
-                    "worker {} failed at round {}: {}",
-                    msg.worker,
-                    msg.round,
-                    String::from_utf8_lossy(&msg.payload)
-                );
+                // Fail before waiting on the rest of the barrier — the
+                // erroring worker's peers may be blocked behind it.
+                validate_round_batch(std::slice::from_ref(&msg))?;
             }
             msgs.push(msg);
         }
         msgs.sort_by_key(|m| m.worker);
-        // Round consistency check: a synchronous PS must never mix rounds.
-        if let Some(first) = msgs.first() {
-            for m in &msgs {
-                if m.round != first.round {
-                    anyhow::bail!("mixed rounds in barrier: {} vs {}", m.round, first.round);
-                }
-            }
-        }
+        validate_round_batch(&msgs)?;
         Ok(msgs)
     }
 

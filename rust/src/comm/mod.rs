@@ -26,6 +26,38 @@ pub use sim::NetworkModel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+/// Validate one gathered barrier batch (shared by every [`ServerEnd`]
+/// implementation): fail fast on `WorkerError` frames and on mixed
+/// rounds, naming the offending workers. Callers pass the batch sorted by
+/// worker id so the reported ids are deterministic.
+pub fn validate_round_batch(msgs: &[Message]) -> anyhow::Result<()> {
+    for m in msgs {
+        if m.kind == MsgKind::WorkerError {
+            anyhow::bail!(
+                "worker {} failed at round {}: {}",
+                m.worker,
+                m.round,
+                String::from_utf8_lossy(&m.payload)
+            );
+        }
+    }
+    // Round consistency check: a synchronous PS must never mix rounds.
+    if let Some(first) = msgs.first() {
+        for m in msgs {
+            if m.round != first.round {
+                anyhow::bail!(
+                    "mixed rounds in barrier: worker {} at round {} vs worker {} at round {}",
+                    m.worker,
+                    m.round,
+                    first.worker,
+                    first.round
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Worker-side endpoint of a PS transport.
 pub trait WorkerEnd: Send {
     /// Push this worker's round payload to the server (blocking).

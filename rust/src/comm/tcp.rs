@@ -10,7 +10,7 @@
 //! connect: [`TcpServerBuilder::listen`] → spawn workers → `accept(m)`.
 
 use super::message::{Message, MsgKind};
-use super::{ByteCounter, ServerEnd, WorkerEnd};
+use super::{validate_round_batch, ByteCounter, ServerEnd, WorkerEnd};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
@@ -131,22 +131,15 @@ impl ServerEnd for TcpServerEnd {
         for s in &mut self.streams {
             let msg = read_frame(s)?;
             if msg.kind == MsgKind::WorkerError {
-                anyhow::bail!(
-                    "worker {} failed at round {}: {}",
-                    msg.worker,
-                    msg.round,
-                    String::from_utf8_lossy(&msg.payload)
-                );
+                // Fail before reading the remaining sockets — the
+                // erroring worker's peers may not send this round.
+                validate_round_batch(std::slice::from_ref(&msg))?;
             }
             self.counter.add_up(msg.frame_len() + 4);
             msgs.push(msg);
         }
         msgs.sort_by_key(|m| m.worker);
-        if let Some(first) = msgs.first() {
-            for m in &msgs {
-                anyhow::ensure!(m.round == first.round, "mixed rounds in barrier");
-            }
-        }
+        validate_round_batch(&msgs)?;
         Ok(msgs)
     }
 

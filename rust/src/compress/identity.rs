@@ -24,8 +24,18 @@ impl Compressor for Identity {
     }
 
     fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0.0; d];
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
         let mut r = Reader::new(bytes);
-        Ok(r.f32_vec(d)?)
+        let raw = r.bytes(out.len() * 4)?;
+        for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
     }
 
     fn delta(&self, _d: usize) -> Option<f64> {

@@ -205,11 +205,18 @@ impl Compressor for LinfStochastic {
 
     fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
         let mut out = vec![0.0; d];
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let d = out.len();
         if d == 0 {
-            return Ok(out);
+            return Ok(());
         }
         let bl = self.block_len(d);
         let lb = self.level_bits();
+        let s = self.levels as f32;
         let mut pos = 0usize;
         for ob in out.chunks_mut(bl) {
             let mut r = Reader::new(&bytes[pos..]);
@@ -221,15 +228,17 @@ impl Compressor for LinfStochastic {
             }
             let mut br = BitReader::new(&bytes[pos..pos + packed_bytes]);
             pos += packed_bytes;
-            let mut levels = Vec::with_capacity(ob.len());
-            for _ in 0..ob.len() {
+            for o in ob.iter_mut() {
                 let sign = br.read(1)?;
                 let level = br.read(lb)? as i32;
-                levels.push(if sign == 1 { -level } else { level });
+                let l = if sign == 1 { -level } else { level };
+                // NOTE: must stay exactly `scale * (l / s)` — see
+                // `reconstruct_block`; the EF state requires bit-identical
+                // round trips.
+                *o = scale * (l as f32 / s);
             }
-            self.reconstruct_block(scale, &levels, ob);
         }
-        Ok(out)
+        Ok(())
     }
 
     fn delta(&self, d: usize) -> Option<f64> {

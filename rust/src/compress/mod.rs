@@ -73,6 +73,24 @@ pub trait Compressor: Send + Sync {
     /// Inverse of `encode`. `d` is the vector dimension.
     fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>>;
 
+    /// Decode into a caller-provided buffer (`out.len()` is the vector
+    /// dimension) — the server aggregation hot path, which reuses one
+    /// dense buffer per worker across rounds instead of allocating a
+    /// fresh `Vec` per decode. Must produce exactly `decode`'s output
+    /// bit-for-bit; the in-tree codecs override the default with direct
+    /// in-place decoders.
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let v = self.decode(bytes, out.len())?;
+        anyhow::ensure!(
+            v.len() == out.len(),
+            "decode returned {} elements, expected {}",
+            v.len(),
+            out.len()
+        );
+        out.copy_from_slice(&v);
+        Ok(())
+    }
+
     /// Guaranteed compression quality δ ∈ (0,1] for dimension `d`, when
     /// known in closed form.
     fn delta(&self, d: usize) -> Option<f64>;

@@ -166,23 +166,32 @@ impl Compressor for Qsgd {
     }
 
     fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0.0; d];
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
         let mut r = Reader::new(bytes);
         let norm = r.f32()?;
         if norm == 0.0 {
-            return Ok(vec![0.0; d]);
+            out.fill(0.0);
+            return Ok(());
         }
         let rest = r.bytes(bytes.len() - 4)?;
         let mut br = BitReader::new(rest);
         let lb = self.level_bits();
-        let mut levels = Vec::with_capacity(d);
-        for _ in 0..d {
+        let s = self.levels as f32;
+        for o in out.iter_mut() {
             let sign = br.read(1)?;
             let level = br.read(lb)? as i32;
-            levels.push(if sign == 1 { -level } else { level });
+            let level = if sign == 1 { -level } else { level };
+            // NOTE: must stay exactly `norm * (l / s)` — `reconstruct`
+            // uses the same expression and the EF state requires
+            // bit-identical round trips.
+            *o = norm * (level as f32 / s);
         }
-        let mut out = vec![0.0; d];
-        self.reconstruct(norm, &levels, &mut out);
-        Ok(out)
+        Ok(())
     }
 
     fn delta(&self, d: usize) -> Option<f64> {

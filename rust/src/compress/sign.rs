@@ -55,16 +55,21 @@ impl Compressor for SignScale {
     }
 
     fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0.0; d];
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
         let mut r = Reader::new(bytes);
         let scale = r.f32()?;
         let rest = r.bytes(bytes.len() - 4)?;
         let mut br = BitReader::new(rest);
-        let mut out = Vec::with_capacity(d);
-        for _ in 0..d {
+        for o in out.iter_mut() {
             let neg = br.read(1)? == 1;
-            out.push(if neg { -scale } else { scale });
+            *o = if neg { -scale } else { scale };
         }
-        Ok(out)
+        Ok(())
     }
 
     fn delta(&self, d: usize) -> Option<f64> {

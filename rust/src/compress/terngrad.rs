@@ -97,21 +97,26 @@ impl Compressor for TernGrad {
     }
 
     fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0.0; d];
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
         let mut r = Reader::new(bytes);
         let scale = r.f32()?;
         let rest = r.bytes(bytes.len() - 4)?;
         let mut br = BitReader::new(rest);
-        let mut out = Vec::with_capacity(d);
-        for _ in 0..d {
+        for o in out.iter_mut() {
             let code = br.read(2)?;
-            out.push(match code {
+            *o = match code {
                 0b00 => 0.0,
                 0b01 => scale,
                 0b10 => -scale,
                 other => anyhow::bail!("terngrad decode: bad symbol {other:#b}"),
-            });
+            };
         }
-        Ok(out)
+        Ok(())
     }
 
     fn delta(&self, _d: usize) -> Option<f64> {

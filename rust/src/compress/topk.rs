@@ -73,24 +73,31 @@ impl Compressor for TopK {
     }
 
     fn decode(&self, bytes: &[u8], d: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0.0; d];
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let d = out.len();
         let mut r = Reader::new(bytes);
         let k = r.u32()? as usize;
         if k > d {
             anyhow::bail!("topk decode: k={k} exceeds d={d}");
         }
-        let mut idx = Vec::with_capacity(k);
+        out.fill(0.0);
+        // Two cursors — `r` walks the index block, `vr` the value block —
+        // so the sparse scatter needs no intermediate index Vec.
+        let mut vr = Reader::new(bytes);
+        let _ = vr.bytes(4 + 4 * k)?;
         for _ in 0..k {
             let i = r.u32()? as usize;
             if i >= d {
                 anyhow::bail!("topk decode: index {i} out of bounds d={d}");
             }
-            idx.push(i);
+            out[i] = vr.f32()?;
         }
-        let mut out = vec![0.0f32; d];
-        for i in idx {
-            out[i] = r.f32()?;
-        }
-        Ok(out)
+        Ok(())
     }
 
     fn delta(&self, d: usize) -> Option<f64> {

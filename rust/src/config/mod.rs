@@ -1,2 +1,87 @@
-//! Typed run configuration (reserved for the TOML config file support; the CLI currently drives ClusterConfig directly).
+//! Typed run configuration shared by the CLI and the library entry points.
+//!
+//! Currently hosts the leader-side aggregation tunables (the
+//! [`crate::ps::Aggregator`] subsystem); the TOML config-file support the
+//! module was reserved for will layer on top of these types.
 
+/// Which leader aggregation path to run.
+///
+/// Both paths are **bitwise-identical** in their output (the sharded
+/// reduction preserves the sequential per-element addition order — see
+/// `ps/aggregate.rs`), so this flag is a pure performance A/B switch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggMode {
+    /// Seed behavior: decode and accumulate the M payloads one after
+    /// another on the leader thread.
+    Sequential,
+    /// Decode payloads thread-parallel across workers, then reduce
+    /// cache-sized shards of the parameter vector thread-parallel.
+    Sharded,
+}
+
+impl AggMode {
+    /// Parse a CLI string: `sharded`/`parallel` or `sequential`/`seq`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sharded" | "parallel" => Ok(Self::Sharded),
+            "sequential" | "seq" => Ok(Self::Sequential),
+            other => anyhow::bail!("unknown aggregation mode '{other}' (sharded|sequential)"),
+        }
+    }
+}
+
+/// Leader aggregation configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AggregatorConfig {
+    pub mode: AggMode,
+    /// Pool threads for the sharded path (0 = available parallelism).
+    pub threads: usize,
+    /// Target elements per reduction shard. The default (16Ki f32 =
+    /// 64 KiB) keeps a shard inside L2 while giving enough shards to
+    /// fill the pool on DCGAN-sized vectors.
+    pub shard_elems: usize,
+}
+
+impl Default for AggregatorConfig {
+    fn default() -> Self {
+        Self { mode: AggMode::Sharded, threads: 0, shard_elems: 16 * 1024 }
+    }
+}
+
+impl AggregatorConfig {
+    /// Seed-equivalent sequential configuration (the A/B baseline).
+    pub fn sequential() -> Self {
+        Self { mode: AggMode::Sequential, ..Self::default() }
+    }
+
+    /// Resolve `threads` to a concrete pool size.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_modes() {
+        assert_eq!(AggMode::parse("sharded").unwrap(), AggMode::Sharded);
+        assert_eq!(AggMode::parse("parallel").unwrap(), AggMode::Sharded);
+        assert_eq!(AggMode::parse("SEQ").unwrap(), AggMode::Sequential);
+        assert_eq!(AggMode::parse("sequential").unwrap(), AggMode::Sequential);
+        assert!(AggMode::parse("wat").is_err());
+    }
+
+    #[test]
+    fn default_is_sharded_with_auto_threads() {
+        let cfg = AggregatorConfig::default();
+        assert_eq!(cfg.mode, AggMode::Sharded);
+        assert!(cfg.resolved_threads() >= 1);
+        assert_eq!(AggregatorConfig::sequential().mode, AggMode::Sequential);
+    }
+}

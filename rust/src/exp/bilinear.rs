@@ -105,6 +105,7 @@ fn distributed_dqgan(eta: f32, rounds: u64, every: u64) -> anyhow::Result<Vec<Tr
         seed: 31,
         eval_every: every,
         keep_stats: false,
+        agg: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| Ok(Box::new(game())))?;
     let g = game();

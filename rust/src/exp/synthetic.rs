@@ -46,6 +46,7 @@ pub fn run_method(
         seed,
         eval_every: (rounds / 10).max(1),
         keep_stats: false,
+        agg: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| Ok(Box::new(gan())))?;
     let scorer = gan();

@@ -1,0 +1,367 @@
+//! Sharded, thread-parallel, allocation-free leader aggregation
+//! (Algorithm 2 line 11: q̄ = 1/M Σ_m p̂^(m)).
+//!
+//! The seed leader decoded and averaged the M worker payloads strictly
+//! sequentially, materializing a fresh `Vec<f32>` per worker per round —
+//! O(M·d) allocation traffic and a single core doing all the work. This
+//! subsystem replaces that loop with a two-stage pipeline over the
+//! existing [`crate::util::threadpool::ThreadPool`]:
+//!
+//! 1. **Decode stage** (parallel over workers): worker m's wire payload is
+//!    decoded *into* a preallocated per-worker dense buffer
+//!    ([`crate::compress::Compressor::decode_into`] — no intermediate
+//!    `Vec`), and validated (finiteness, round id) in the same pass.
+//! 2. **Reduce stage** (parallel over shards): the flat `dim` vector is
+//!    split into cache-sized shards; each shard task owns a disjoint
+//!    `&mut` range of the output and accumulates the M decoded buffers
+//!    **in worker-id order** before scaling by 1/M.
+//!
+//! ## Determinism contract
+//!
+//! The reduce stage adds workers in exactly the order the sequential path
+//! does (`((0 + v⁰ᵢ) + v¹ᵢ) + … ) · (1/M)` per element), so the sharded
+//! result is **bitwise identical** to [`AggMode::Sequential`] — float
+//! addition is non-associative, which is precisely why the design shards
+//! over *dimension* rather than accumulating per-thread partial sums over
+//! worker subsets (those would regroup the additions and break the A/B
+//! guarantee the regression tests enforce).
+//!
+//! ## Buffer reuse
+//!
+//! All round state — the M decode buffers and the averaged output — is
+//! allocated once in [`Aggregator::new`] and reused every round. The only
+//! per-round heap traffic left is bookkeeping-sized: the shard-reference
+//! `Vec` handed to the pool (≤ `num_shards` fat pointers) and the boxed
+//! per-chunk jobs inside `parallel_for_mut` — nothing proportional to
+//! `M·d`. Jobs run on the pool's persistent workers; no threads are
+//! spawned per round. Rounds whose total decode work is tiny (small `d` —
+//! the bilinear/synthetic sweeps) skip dispatch entirely and run the
+//! sequential body, which is output-identical by construction.
+
+use crate::comm::Message;
+use crate::config::{AggMode, AggregatorConfig};
+use crate::tensor::ops;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Server-side payload decoder: decode `bytes` into the dense `out`
+/// buffer (length = flat parameter dimension). Algorithm-specific; see
+/// [`crate::algo::AlgoKind::decoder`].
+pub type Decoder = Arc<dyn Fn(&[u8], &mut [f32]) -> anyhow::Result<()> + Send + Sync>;
+
+/// Per-worker round state: the reused decode buffer and the outcome of
+/// this round's decode+validate pass (checked after the parallel stage so
+/// the first failure *by worker id* is reported, deterministically).
+struct WorkerSlot {
+    buf: Vec<f32>,
+    err: Option<anyhow::Error>,
+}
+
+/// Reusable leader-side aggregation state for one training run.
+pub struct Aggregator {
+    cfg: AggregatorConfig,
+    dim: usize,
+    workers: usize,
+    shard_elems: usize,
+    /// Pool for the sharded path (absent in sequential mode).
+    pool: Option<ThreadPool>,
+    slots: Vec<WorkerSlot>,
+    avg: Vec<f32>,
+}
+
+impl Aggregator {
+    /// Below this much total decode work (`dim · workers` elements) the
+    /// sharded mode runs the sequential body — output-identical by
+    /// construction — and spawns no pool at all (the small-d theory
+    /// sweeps construct many short-lived clusters).
+    const SMALL_WORK_ELEMS: usize = 4096;
+
+    /// Allocate all round buffers for `workers` payloads of dimension
+    /// `dim` up front.
+    pub fn new(cfg: AggregatorConfig, dim: usize, workers: usize) -> Self {
+        assert!(workers > 0, "aggregator needs at least one worker");
+        let pool = match cfg.mode {
+            AggMode::Sequential => None,
+            AggMode::Sharded if dim * workers < Self::SMALL_WORK_ELEMS => None,
+            AggMode::Sharded => Some(ThreadPool::new(cfg.resolved_threads())),
+        };
+        let shard_elems = cfg.shard_elems.max(1);
+        Self {
+            dim,
+            workers,
+            shard_elems,
+            pool,
+            slots: (0..workers)
+                .map(|_| WorkerSlot { buf: vec![0.0; dim], err: None })
+                .collect(),
+            avg: vec![0.0; dim],
+            cfg,
+        }
+    }
+
+    /// Active mode (for logs/benches).
+    pub fn mode(&self) -> AggMode {
+        self.cfg.mode
+    }
+
+    /// Number of reduction shards the sharded path uses.
+    pub fn num_shards(&self) -> usize {
+        self.dim.div_ceil(self.shard_elems).max(1)
+    }
+
+    /// Decode, validate and average one round's payloads. `msgs` must be
+    /// sorted by worker id (the [`crate::comm::ServerEnd`] contract).
+    /// Returns the averaged vector, valid until the next call.
+    pub fn aggregate(
+        &mut self,
+        round: u64,
+        msgs: &[Message],
+        decoder: &Decoder,
+    ) -> anyhow::Result<&[f32]> {
+        anyhow::ensure!(
+            msgs.len() == self.workers,
+            "expected {} payloads, got {}",
+            self.workers,
+            msgs.len()
+        );
+        for msg in msgs {
+            anyhow::ensure!(
+                msg.round == round,
+                "worker {}: round skew: got round {}, leader at round {round}",
+                msg.worker,
+                msg.round
+            );
+        }
+        match self.cfg.mode {
+            AggMode::Sequential => self.run_sequential(round, msgs, decoder)?,
+            AggMode::Sharded => self.run_sharded(round, msgs, decoder)?,
+        }
+        Ok(&self.avg)
+    }
+
+    /// Seed-equivalent path: decode and validate worker by worker on the
+    /// caller thread, then average — kept behind the config flag as the
+    /// A/B baseline (buffers are still reused, arithmetic is unchanged).
+    fn run_sequential(
+        &mut self,
+        round: u64,
+        msgs: &[Message],
+        decoder: &Decoder,
+    ) -> anyhow::Result<()> {
+        for (slot, msg) in self.slots.iter_mut().zip(msgs) {
+            decode_and_validate(round, msg, decoder, slot);
+            if let Some(e) = slot.err.take() {
+                return Err(e);
+            }
+        }
+        // Identical operation order to the sharded reduce: zero, add in
+        // worker order, scale by 1/M (this is `ops::mean_into`).
+        let refs: Vec<&[f32]> = self.slots.iter().map(|s| s.buf.as_slice()).collect();
+        ops::mean_into(&refs, &mut self.avg);
+        Ok(())
+    }
+
+    /// The parallel pipeline: worker-parallel decode, shard-parallel
+    /// reduce in worker-id order.
+    fn run_sharded(
+        &mut self,
+        round: u64,
+        msgs: &[Message],
+        decoder: &Decoder,
+    ) -> anyhow::Result<()> {
+        // No pool ⇒ the workload was below SMALL_WORK_ELEMS at
+        // construction: run the sequential body (bitwise-identical).
+        if self.pool.is_none() {
+            return self.run_sequential(round, msgs, decoder);
+        }
+        let pool = self.pool.as_ref().expect("checked above");
+        // Stage 1: each worker's payload decodes into its own slot.
+        pool.parallel_for_mut(&mut self.slots, |m, slot| {
+            decode_and_validate(round, &msgs[m], decoder, slot);
+        });
+        for slot in &mut self.slots {
+            if let Some(e) = slot.err.take() {
+                return Err(e);
+            }
+        }
+        // Stage 2: disjoint output shards, each reduced in worker order.
+        let inv = 1.0 / msgs.len() as f32;
+        let shard_elems = self.shard_elems;
+        let slots = &self.slots;
+        let mut shards: Vec<&mut [f32]> = self.avg.chunks_mut(shard_elems).collect();
+        pool.parallel_for_mut(&mut shards, |s, shard| {
+            let off = s * shard_elems;
+            for x in shard.iter_mut() {
+                *x = 0.0;
+            }
+            for slot in slots {
+                let src = &slot.buf[off..off + shard.len()];
+                for (a, &b) in shard.iter_mut().zip(src) {
+                    *a += b;
+                }
+            }
+            for x in shard.iter_mut() {
+                *x *= inv;
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Decode one payload into `slot.buf` and validate it, recording any
+/// failure (with the worker id) in `slot.err`.
+fn decode_and_validate(round: u64, msg: &Message, decoder: &Decoder, slot: &mut WorkerSlot) {
+    slot.err = None;
+    if let Err(e) = decoder(&msg.payload, &mut slot.buf) {
+        slot.err = Some(e.context(format!(
+            "worker {}: payload decode failed at round {round}",
+            msg.worker
+        )));
+        return;
+    }
+    if !ops::all_finite(&slot.buf) {
+        slot.err = Some(anyhow::anyhow!(
+            "worker {} sent non-finite payload at round {round}",
+            msg.worker
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, Identity, LinfStochastic};
+    use crate::util::rng::Pcg32;
+
+    fn identity_decoder() -> Decoder {
+        Arc::new(|bytes: &[u8], out: &mut [f32]| Identity.decode_into(bytes, out))
+    }
+
+    fn payload_of(worker: u32, round: u64, v: &[f32]) -> Message {
+        let mut wire = Vec::new();
+        Identity.encode(v, &mut wire);
+        Message::payload(worker, round, wire)
+    }
+
+    fn sharded_cfg(threads: usize, shard_elems: usize) -> AggregatorConfig {
+        AggregatorConfig { mode: AggMode::Sharded, threads, shard_elems }
+    }
+
+    #[test]
+    fn sharded_averages_match_hand_computation() {
+        let d = 5;
+        let msgs = vec![
+            payload_of(0, 0, &[1.0, 2.0, 3.0, 4.0, 5.0]),
+            payload_of(1, 0, &[3.0, 2.0, 1.0, 0.0, -1.0]),
+        ];
+        let mut agg = Aggregator::new(sharded_cfg(2, 2), d, 2);
+        assert_eq!(agg.num_shards(), 3); // 2 + 2 + 1 elements
+        let avg = agg.aggregate(0, &msgs, &identity_decoder()).unwrap();
+        assert_eq!(avg, &[2.0, 2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn sequential_and_sharded_agree_bitwise_on_stochastic_payloads() {
+        let d = 1234;
+        let m = 7;
+        let c = LinfStochastic::with_bits(8);
+        let mut rng = Pcg32::new(42);
+        let msgs: Vec<Message> = (0..m)
+            .map(|w| {
+                let v = rng.normal_vec(d);
+                let mut wire = Vec::new();
+                c.compress_encoded(&v, &mut rng, &mut wire);
+                Message::payload(w as u32, 9, wire)
+            })
+            .collect();
+        let decoder: Decoder = Arc::new(move |b: &[u8], out: &mut [f32]| c.decode_into(b, out));
+        let mut seq = Aggregator::new(AggregatorConfig::sequential(), d, m);
+        let mut shd = Aggregator::new(sharded_cfg(3, 100), d, m);
+        let a = seq.aggregate(9, &msgs, &decoder).unwrap().to_vec();
+        let b = shd.aggregate(9, &msgs, &decoder).unwrap();
+        for i in 0..d {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "element {i} differs");
+        }
+    }
+
+    #[test]
+    fn round_skew_error_names_the_worker() {
+        let msgs = vec![payload_of(0, 3, &[1.0]), payload_of(1, 4, &[1.0])];
+        let mut agg = Aggregator::new(AggregatorConfig::default(), 1, 2);
+        let err = agg.aggregate(3, &msgs, &identity_decoder()).unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("worker 1"), "{text}");
+        assert!(text.contains("round skew"), "{text}");
+        assert!(text.contains("got round 4"), "{text}");
+        assert!(text.contains("leader at round 3"), "{text}");
+    }
+
+    #[test]
+    fn decode_failures_name_the_worker_deterministically() {
+        // Both payloads are truncated garbage; the error must cite the
+        // lowest worker id regardless of thread scheduling. dim is above
+        // SMALL_WORK_ELEMS so the sharded case really runs the pool.
+        let d = Aggregator::SMALL_WORK_ELEMS;
+        let msgs = vec![
+            Message::payload(0, 0, vec![1, 2]),
+            Message::payload(1, 0, vec![3]),
+        ];
+        for cfg in [AggregatorConfig::sequential(), sharded_cfg(4, 512)] {
+            let mut agg = Aggregator::new(cfg, d, 2);
+            let err = agg.aggregate(0, &msgs, &identity_decoder()).unwrap_err();
+            assert!(format!("{err:#}").contains("worker 0"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn non_finite_payloads_are_rejected_in_both_modes() {
+        // dim above SMALL_WORK_ELEMS so the sharded case runs the pool.
+        let d = Aggregator::SMALL_WORK_ELEMS;
+        let mut v = vec![1.0f32; d];
+        v[17] = f32::NAN;
+        let msgs = vec![payload_of(0, 0, &v)];
+        for cfg in [AggregatorConfig::sequential(), sharded_cfg(2, 512)] {
+            let mut agg = Aggregator::new(cfg, d, 1);
+            let err = agg.aggregate(0, &msgs, &identity_decoder()).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "{err}");
+            assert!(err.to_string().contains("worker 0"), "{err}");
+        }
+    }
+
+    #[test]
+    fn buffers_are_reused_across_rounds() {
+        let d = 64;
+        let mut agg = Aggregator::new(sharded_cfg(2, 16), d, 1);
+        let dec = identity_decoder();
+        let v: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let p0 = {
+            let avg = agg.aggregate(0, &[payload_of(0, 0, &v)], &dec).unwrap();
+            assert_eq!(avg, &v[..]);
+            avg.as_ptr()
+        };
+        let p1 = {
+            let avg = agg.aggregate(1, &[payload_of(0, 1, &v)], &dec).unwrap();
+            assert_eq!(avg, &v[..]);
+            avg.as_ptr()
+        };
+        assert_eq!(p0, p1, "output buffer must not be reallocated per round");
+    }
+
+    #[test]
+    fn shard_sizing_covers_every_regime() {
+        for (d, shard) in [(1usize, 1usize), (10, 3), (10, 100), (4096, 4096)] {
+            let msgs = vec![payload_of(0, 0, &vec![1.5; d])];
+            let mut agg = Aggregator::new(sharded_cfg(3, shard), d, 1);
+            let avg = agg.aggregate(0, &msgs, &identity_decoder()).unwrap();
+            assert!(avg.iter().all(|&x| x == 1.5), "d={d} shard={shard}");
+        }
+    }
+
+    #[test]
+    fn payload_count_mismatch_is_an_error() {
+        let msgs = vec![payload_of(0, 0, &[1.0])];
+        let mut agg = Aggregator::new(AggregatorConfig::default(), 1, 2);
+        let err = agg.aggregate(0, &msgs, &identity_decoder()).unwrap_err();
+        assert!(err.to_string().contains("expected 2 payloads"), "{err}");
+    }
+}

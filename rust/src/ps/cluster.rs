@@ -2,11 +2,13 @@
 //! the in-process transport and runs a full training job. This is the
 //! entry point used by the CLI, the experiment harnesses and the examples.
 
-use super::server::{serve_rounds, Decoder};
+use super::aggregate::Decoder;
+use super::server::serve_rounds_with;
 use super::worker::{worker_loop, EvalHook, WorkerSummary};
 use super::RoundRecord;
 use crate::algo::AlgoKind;
 use crate::comm::inproc_cluster;
+use crate::config::AggregatorConfig;
 use crate::grad::GradientSource;
 use crate::optim::LrSchedule;
 use crate::util::rng::Pcg32;
@@ -29,6 +31,9 @@ pub struct ClusterConfig {
     pub eval_every: u64,
     /// Keep per-round worker stats on worker 0 (memory vs detail).
     pub keep_stats: bool,
+    /// Leader aggregation path (sharded by default; the sequential
+    /// baseline is bitwise-identical and kept for A/B verification).
+    pub agg: AggregatorConfig,
 }
 
 impl Default for ClusterConfig {
@@ -42,6 +47,7 @@ impl Default for ClusterConfig {
             seed: 0xD9_6A17,
             eval_every: 0,
             keep_stats: true,
+            agg: AggregatorConfig::default(),
         }
     }
 }
@@ -135,7 +141,8 @@ pub fn run_cluster(
         }
         drop(eval_tx);
 
-        let serve_result = serve_rounds(&mut server, decoder, dim, cfg.rounds, |_| {});
+        let serve_result =
+            serve_rounds_with(&mut server, decoder, dim, cfg.rounds, cfg.agg.clone(), |_| {});
         if serve_result.is_err() {
             // Unblock workers waiting in phase 2 so the scope join below
             // cannot hang; ignore send failures (workers may be gone).
@@ -201,6 +208,7 @@ mod tests {
             seed: 1234,
             eval_every: 10,
             keep_stats: true,
+            agg: Default::default(),
         }
     }
 

@@ -13,12 +13,14 @@
 //! scheduling and shutdown; workers are stateless loops around their
 //! algorithm object.
 
+mod aggregate;
 mod cluster;
 mod server;
 mod worker;
 
+pub use aggregate::{Aggregator, Decoder};
 pub use cluster::{run_cluster, ClusterConfig, EvalEvent, TrainReport};
-pub use server::serve_rounds;
+pub use server::{serve_rounds, serve_rounds_with};
 pub use worker::worker_loop;
 
 /// Per-round record the leader accumulates (averaged across workers).

@@ -1,64 +1,68 @@
-//! The leader: per round, gather M payloads, decode, average (Algorithm 2
-//! line 11: q̂ = 1/M Σ p̂^(m)), broadcast.
+//! The leader: per round, gather M payloads, decode + average through the
+//! [`Aggregator`] subsystem (Algorithm 2 line 11: q̂ = 1/M Σ p̂^(m)),
+//! broadcast.
+//!
+//! The aggregation path is selected by [`AggregatorConfig`]: the default
+//! sharded pipeline decodes worker payloads thread-parallel and reduces
+//! cache-sized shards of the parameter vector in worker-id order, which is
+//! bitwise-identical to the sequential baseline kept behind
+//! [`crate::config::AggMode::Sequential`] (see `ps/aggregate.rs` for the
+//! determinism argument and `tests/integration_aggregate.rs` for the
+//! regression proof).
 
+use super::aggregate::{Aggregator, Decoder};
 use super::RoundRecord;
 use crate::comm::{Message, ServerEnd};
-use crate::tensor::ops;
+use crate::config::AggregatorConfig;
 use crate::util::bytes::put_f32_slice;
 use crate::util::stats::norm2_sq;
 use crate::util::timer::Stopwatch;
-use std::sync::Arc;
 
-/// Server-side payload decoder (algorithm-specific; see
-/// [`crate::algo::AlgoKind::decoder`]).
-pub type Decoder = Arc<dyn Fn(&[u8], usize) -> anyhow::Result<Vec<f32>> + Send + Sync>;
-
-/// Run `rounds` synchronous rounds on `transport`. Returns per-round
-/// records. `dim` is the flat parameter dimension; `on_round` is invoked
-/// after each broadcast (leader-side progress/telemetry hook).
+/// Run `rounds` synchronous rounds on `transport` with the default
+/// (sharded) aggregation path. Returns per-round records. `dim` is the
+/// flat parameter dimension; `on_round` is invoked after each broadcast
+/// (leader-side progress/telemetry hook).
 pub fn serve_rounds(
     transport: &mut dyn ServerEnd,
     decoder: Decoder,
     dim: usize,
     rounds: u64,
+    on_round: impl FnMut(&RoundRecord),
+) -> anyhow::Result<Vec<RoundRecord>> {
+    serve_rounds_with(transport, decoder, dim, rounds, AggregatorConfig::default(), on_round)
+}
+
+/// [`serve_rounds`] with an explicit aggregation configuration — the
+/// entry point the cluster driver and the A/B benchmarks use.
+pub fn serve_rounds_with(
+    transport: &mut dyn ServerEnd,
+    decoder: Decoder,
+    dim: usize,
+    rounds: u64,
+    agg_cfg: AggregatorConfig,
     mut on_round: impl FnMut(&RoundRecord),
 ) -> anyhow::Result<Vec<RoundRecord>> {
     let m = transport.workers();
     anyhow::ensure!(m > 0, "no workers");
+    let mut agg = Aggregator::new(agg_cfg, dim, m);
     let mut records = Vec::with_capacity(rounds as usize);
-    let mut avg = vec![0.0f32; dim];
     for round in 0..rounds {
         let sw = Stopwatch::start();
         let msgs = transport.recv_round()?;
-        anyhow::ensure!(msgs.len() == m, "expected {m} payloads, got {}", msgs.len());
-        // Decode every worker's payload and validate.
-        let mut decoded: Vec<Vec<f32>> = Vec::with_capacity(m);
-        let mut bytes_up = 0usize;
-        for msg in &msgs {
-            anyhow::ensure!(msg.round == round, "round skew: {} vs {round}", msg.round);
-            bytes_up += msg.payload.len();
-            let v = decoder(&msg.payload, dim)?;
-            anyhow::ensure!(v.len() == dim, "decoded length {} ≠ dim {dim}", v.len());
-            anyhow::ensure!(
-                ops::all_finite(&v),
-                "worker {} sent non-finite payload at round {round}",
-                msg.worker
-            );
-            decoded.push(v);
-        }
-        // Average (line 11).
-        {
-            let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
-            ops::mean_into(&refs, &mut avg);
-        }
+        let bytes_up: usize = msgs.iter().map(|msg| msg.payload.len()).sum();
+        // Decode × M, validate, average (line 11) — sharded or sequential.
+        let avg = agg.aggregate(round, &msgs, &decoder)?;
+        let avg_payload_norm_sq = norm2_sq(avg);
         // Broadcast q̄ as raw f32 (the downlink is full-precision; the
         // paper quantizes the uplink only — see DESIGN.md FIG4 notes).
+        // `Message` owns its payload bytes, so this exact-sized Vec is
+        // the one unavoidable per-round allocation on the leader.
         let mut payload = Vec::with_capacity(4 * dim);
-        put_f32_slice(&mut payload, &avg);
+        put_f32_slice(&mut payload, avg);
         transport.broadcast(Message::broadcast(round, payload))?;
         let rec = RoundRecord {
             round,
-            avg_payload_norm_sq: norm2_sq(&avg),
+            avg_payload_norm_sq,
             bytes_up,
             wall_secs: sw.elapsed_secs(),
             ..Default::default()
@@ -76,6 +80,12 @@ mod tests {
     use crate::comm::inproc_cluster;
     use crate::comm::{MsgKind, WorkerEnd};
     use crate::compress::{Compressor, Identity};
+    use crate::config::AggMode;
+    use std::sync::Arc;
+
+    fn identity_decoder() -> Decoder {
+        Arc::new(|bytes: &[u8], out: &mut [f32]| Identity.decode_into(bytes, out))
+    }
 
     #[test]
     fn averages_and_broadcasts() {
@@ -99,12 +109,41 @@ mod tests {
                 })
             })
             .collect();
-        let decoder: Decoder = Arc::new(|b, d| Identity.decode(b, d));
-        let recs = serve_rounds(&mut server, decoder, dim, 1, |_| {}).unwrap();
+        let recs = serve_rounds(&mut server, identity_decoder(), dim, 1, |_| {}).unwrap();
         assert_eq!(recs.len(), 1);
         assert!(recs[0].bytes_up > 0);
         for h in handles {
             h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sequential_flag_produces_the_same_broadcast() {
+        for mode in [AggMode::Sequential, AggMode::Sharded] {
+            let (mut server, mut workers, _) = inproc_cluster(2);
+            for (i, w) in workers.iter_mut().enumerate() {
+                let mut wire = Vec::new();
+                Identity.encode(&[1.0 + i as f32, -2.0, 0.5], &mut wire);
+                w.send(Message::payload(i as u32, 0, wire)).unwrap();
+            }
+            let cfg = AggregatorConfig { mode, ..Default::default() };
+            let t = std::thread::spawn(move || {
+                let mut avgs = Vec::new();
+                for w in &mut workers {
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.kind, MsgKind::Broadcast);
+                    avgs.push(Identity.decode(&b.payload, 3).unwrap());
+                    let s = w.recv().unwrap();
+                    assert_eq!(s.kind, MsgKind::Shutdown);
+                }
+                avgs
+            });
+            let recs =
+                serve_rounds_with(&mut server, identity_decoder(), 3, 1, cfg, |_| {}).unwrap();
+            assert_eq!(recs.len(), 1);
+            let avgs = t.join().unwrap();
+            assert_eq!(avgs[0], vec![1.5, -2.0, 0.5], "{mode:?}");
+            assert_eq!(avgs[0], avgs[1]);
         }
     }
 
@@ -115,8 +154,27 @@ mod tests {
         let mut wire = Vec::new();
         Identity.encode(&v, &mut wire);
         workers[0].send(Message::payload(0, 0, wire)).unwrap();
-        let decoder: Decoder = Arc::new(|b, d| Identity.decode(b, d));
-        let err = serve_rounds(&mut server, decoder, 2, 1, |_| {}).unwrap_err();
+        let err = serve_rounds(&mut server, identity_decoder(), 2, 1, |_| {}).unwrap_err();
         assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn round_skew_reports_worker_id() {
+        // Both workers send round 7 while the leader is at round 0: the
+        // transport-level mixed-round check passes (rounds agree with each
+        // other), so the aggregator's skew check must fire and name the
+        // worker.
+        let (mut server, mut workers, _) = inproc_cluster(2);
+        for (i, w) in workers.iter_mut().enumerate() {
+            let mut wire = Vec::new();
+            Identity.encode(&[0.0f32], &mut wire);
+            w.send(Message::payload(i as u32, 7, wire)).unwrap();
+        }
+        let err = serve_rounds(&mut server, identity_decoder(), 1, 1, |_| {}).unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("round skew"), "{text}");
+        assert!(text.contains("worker 0"), "{text}");
+        assert!(text.contains("got round 7"), "{text}");
+        assert!(text.contains("leader at round 0"), "{text}");
     }
 }

@@ -35,13 +35,27 @@ pub struct Reader<'a> {
 }
 
 /// Error for truncated/malformed wire data.
-#[derive(Debug, thiserror::Error)]
-#[error("byte reader underflow at {pos}: needed {needed}, have {have}")]
+///
+/// (Hand-rolled `Display`/`Error` impls: `anyhow` is the crate's only
+/// dependency, so no `thiserror` derive here.)
+#[derive(Debug)]
 pub struct Underflow {
     pub pos: usize,
     pub needed: usize,
     pub have: usize,
 }
+
+impl std::fmt::Display for Underflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "byte reader underflow at {}: needed {}, have {}",
+            self.pos, self.needed, self.have
+        )
+    }
+}
+
+impl std::error::Error for Underflow {}
 
 impl<'a> Reader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {

@@ -21,12 +21,22 @@ pub enum Json {
 }
 
 /// Parse error with byte offset context.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+///
+/// (Hand-rolled `Display`/`Error` impls: `anyhow` is the crate's only
+/// dependency, so no `thiserror` derive here.)
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     /// Parse a complete JSON document (trailing whitespace allowed).

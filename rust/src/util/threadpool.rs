@@ -1,10 +1,18 @@
 //! A minimal fixed-size thread pool with scoped parallel-for, used by the
 //! server aggregation path and the experiment sweeps (no `rayon` offline).
 //!
-//! Design: N long-lived workers pull boxed jobs from a shared channel; a
-//! [`ThreadPool::scope`]-style `parallel_for` splits an index range into
-//! chunks and blocks until all chunks complete. Panics inside jobs are
+//! Design: N long-lived workers pull boxed jobs from a shared channel.
+//! `parallel_for` / `parallel_for_mut` split the work into chunks, enqueue
+//! all but the first on the pool's persistent workers (no per-call thread
+//! spawning), run the first chunk on the caller thread, and block on a
+//! [`CountdownLatch`] until every chunk completes. Panics inside jobs are
 //! caught and re-raised on the caller thread.
+//!
+//! Scoped borrows across the `'static` job channel are handled by
+//! [`ThreadPool::run_scoped`], whose latch-before-return discipline is
+//! the safety argument for its one lifetime transmute. Do not call the
+//! scoped entry points from *inside* a pool job: with every worker busy
+//! waiting, the inner call's chunks could never be picked up.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -36,7 +44,13 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // A panicking job must not kill the worker:
+                            // pool width is an invariant (`run_scoped`'s
+                            // safety argument needs `execute` to keep
+                            // succeeding while the pool is alive).
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // channel closed: shut down
                         }
                     })
@@ -51,9 +65,59 @@ impl ThreadPool {
         self.size
     }
 
-    /// Fire-and-forget job submission.
+    /// Fire-and-forget job submission. A panic inside `job` is caught
+    /// and swallowed on the worker (wrap your own reporting if you need
+    /// it); the scoped entry points layer their panic propagation on top.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.tx.as_ref().expect("pool alive").send(Box::new(job)).expect("pool send");
+    }
+
+    /// Run a batch of borrowed jobs: all but the first are enqueued on
+    /// the pool's persistent workers, the first runs on the caller
+    /// thread, and the latch blocks until every job has completed.
+    /// Returns whether any job panicked.
+    ///
+    /// SAFETY argument for the lifetime transmute below: the job channel
+    /// requires `'static`, but every enqueued job counts the latch down
+    /// *after* running (the panic guard counts down too), and this
+    /// function does not return — not even by panic — before
+    /// `latch.wait()` observes all of them. The borrowed environment
+    /// therefore strictly outlives every use of the jobs. Two pool
+    /// invariants uphold "does not return by panic": workers never die
+    /// (the worker loop catches job panics, so pool width is constant
+    /// while the pool is alive), hence `execute`'s channel send cannot
+    /// fail mid-enqueue, and the only code between the first transmute
+    /// and `latch.wait()` is that non-panicking enqueue loop plus the
+    /// caller job, which is wrapped in `catch_unwind`.
+    fn run_scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) -> bool {
+        let total = jobs.len();
+        if total == 0 {
+            return false;
+        }
+        let mut it = jobs.into_iter();
+        let first = it.next().expect("total > 0");
+        let latch = Arc::new(CountdownLatch::new(total - 1));
+        let panicked = Arc::new(AtomicBool::new(false));
+        for job in it {
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let latch = Arc::clone(&latch);
+            let panicked = Arc::clone(&panicked);
+            self.execute(move || {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    panicked.store(true, Ordering::SeqCst);
+                }
+                latch.count_down();
+            });
+        }
+        // The caller contributes its own core instead of idling.
+        let caller_panicked = catch_unwind(AssertUnwindSafe(first)).is_err();
+        latch.wait();
+        caller_panicked || panicked.load(Ordering::SeqCst)
     }
 
     /// Run `f(i)` for every `i in 0..n`, blocking until all complete.
@@ -67,36 +131,66 @@ impl ThreadPool {
         }
         let chunks = self.size.min(n);
         let chunk_len = n.div_ceil(chunks);
-        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
-        let panicked = Arc::new(AtomicBool::new(false));
-        // SAFETY-free approach: we only pass the closure by Arc and join
-        // before returning, so borrows must be 'static — callers wrap state
-        // in Arc. For the common slice case use `parallel_for_chunks`.
-        let f = Arc::new(f);
-        std::thread::scope(|scope| {
-            for c in 0..chunks {
+        if chunks == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..chunks)
+            .map(|c| {
                 let lo = c * chunk_len;
                 let hi = ((c + 1) * chunk_len).min(n);
-                if lo >= hi {
-                    continue;
-                }
-                let f = Arc::clone(&f);
-                let panicked = Arc::clone(&panicked);
-                scope.spawn(move || {
-                    let r = catch_unwind(AssertUnwindSafe(|| {
-                        for i in lo..hi {
-                            f(i);
-                        }
-                    }));
-                    if r.is_err() {
-                        panicked.store(true, Ordering::SeqCst);
+                Box::new(move || {
+                    for i in lo..hi {
+                        f(i);
                     }
-                });
-            }
-            let _ = &done; // reserved for future non-scoped impl
-        });
-        if panicked.load(Ordering::SeqCst) {
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        if self.run_scoped(jobs) {
             panic!("parallel_for: a worker panicked");
+        }
+    }
+
+    /// Run `f(i, &mut items[i])` for every item, blocking until all
+    /// complete. Items are split into at most `size()` contiguous chunks,
+    /// one per pool width, so disjoint `&mut` access needs no locking —
+    /// this is the entry point the PS aggregation shards use (each shard
+    /// owns a disjoint `&mut [f32]` of the output vector).
+    pub fn parallel_for_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Send + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let chunks = self.size.min(n);
+        let chunk_len = n.div_ceil(chunks);
+        if chunks == 1 {
+            // Single-threaded fast path: no dispatch overhead.
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = items
+            .chunks_mut(chunk_len)
+            .enumerate()
+            .map(|(c, chunk)| {
+                Box::new(move || {
+                    for (j, item) in chunk.iter_mut().enumerate() {
+                        f(c * chunk_len + j, item);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        if self.run_scoped(jobs) {
+            panic!("parallel_for_mut: a worker panicked");
         }
     }
 }
@@ -174,6 +268,37 @@ mod tests {
         for h in &hits {
             assert_eq!(h.load(Ordering::SeqCst), 1);
         }
+    }
+
+    #[test]
+    fn parallel_for_mut_gives_each_index_exclusive_access() {
+        let pool = ThreadPool::new(4);
+        let mut items: Vec<u64> = vec![0; 97]; // deliberately un-even chunking
+        pool.parallel_for_mut(&mut items, |i, item| {
+            *item = i as u64 * 3 + 1;
+        });
+        for (i, &v) in items.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3 + 1);
+        }
+        // Empty input is a no-op.
+        let mut empty: Vec<u64> = Vec::new();
+        pool.parallel_for_mut(&mut empty, |_, _| unreachable!());
+        // Single item takes the inline fast path.
+        let mut one = vec![7u64];
+        pool.parallel_for_mut(&mut one, |i, item| *item += i as u64 + 1);
+        assert_eq!(one[0], 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel_for_mut: a worker panicked")]
+    fn parallel_for_mut_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        let mut items = vec![0u8; 8];
+        pool.parallel_for_mut(&mut items, |i, _| {
+            if i == 5 {
+                panic!("boom");
+            }
+        });
     }
 
     #[test]

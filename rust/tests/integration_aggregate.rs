@@ -1,0 +1,120 @@
+//! Regression: the sharded leader aggregation path is **bitwise
+//! identical** to the sequential baseline — the guarantee that makes
+//! `--agg sharded|sequential` a pure performance A/B switch. Exercised
+//! over real wire payloads for QSGD, sign and top-k at M ∈ {1, 4, 8},
+//! plus an independent check against the seed's `mean_into` arithmetic.
+
+use dqgan::comm::Message;
+use dqgan::compress::compressor_from_spec;
+use dqgan::config::{AggMode, AggregatorConfig};
+use dqgan::ps::{Aggregator, Decoder};
+use dqgan::tensor::ops;
+use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn decoder_for(spec: &str) -> Decoder {
+    let c = compressor_from_spec(spec).unwrap();
+    Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+}
+
+fn round_payloads(spec: &str, m: usize, d: usize, round: u64, rng: &mut Pcg32) -> Vec<Message> {
+    let c = compressor_from_spec(spec).unwrap();
+    (0..m)
+        .map(|w| {
+            let v = rng.normal_vec(d);
+            let mut wire = Vec::new();
+            c.compress_encoded(&v, rng, &mut wire);
+            Message::payload(w as u32, round, wire)
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_leader_is_bitwise_identical_to_sequential() {
+    let mut rng = Pcg32::new(0xA66_2026);
+    for spec in ["qsgd8", "sign", "topk(f=0.1)"] {
+        for &m in &[1usize, 4, 8] {
+            // Dimensions straddle the shard size (1024 below) so every
+            // regime is hit: sub-shard, exact multiple, unaligned tail.
+            for &d in &[1usize, 63, 1024, 4096, 100_003] {
+                let msgs = round_payloads(spec, m, d, 5, &mut rng);
+                let dec = decoder_for(spec);
+                let mut seq = Aggregator::new(AggregatorConfig::sequential(), d, m);
+                let mut shd = Aggregator::new(
+                    AggregatorConfig {
+                        mode: AggMode::Sharded,
+                        threads: 3,
+                        shard_elems: 1024,
+                    },
+                    d,
+                    m,
+                );
+                let a = seq.aggregate(5, &msgs, &dec).unwrap().to_vec();
+                let b = shd.aggregate(5, &msgs, &dec).unwrap();
+                assert_eq!(a.len(), b.len());
+                for i in 0..d {
+                    assert_eq!(
+                        a[i].to_bits(),
+                        b[i].to_bits(),
+                        "{spec} M={m} d={d}: element {i} differs ({} vs {})",
+                        a[i],
+                        b[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn both_paths_reproduce_the_seed_mean_into_arithmetic() {
+    // Independent oracle: decode every payload and run the seed's
+    // `mean_into` — both aggregator modes must match it bit-for-bit.
+    let mut rng = Pcg32::new(77);
+    let (m, d) = (8usize, 4096usize);
+    for spec in ["qsgd8", "sign", "topk(f=0.1)"] {
+        let c = compressor_from_spec(spec).unwrap();
+        let msgs = round_payloads(spec, m, d, 0, &mut rng);
+        let decoded: Vec<Vec<f32>> =
+            msgs.iter().map(|msg| c.decode(&msg.payload, d).unwrap()).collect();
+        let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
+        let mut oracle = vec![0.0f32; d];
+        ops::mean_into(&refs, &mut oracle);
+
+        let dec = decoder_for(spec);
+        for cfg in [
+            AggregatorConfig::sequential(),
+            AggregatorConfig { mode: AggMode::Sharded, threads: 4, shard_elems: 100 },
+        ] {
+            let mode = cfg.mode;
+            let mut agg = Aggregator::new(cfg, d, m);
+            let avg = agg.aggregate(0, &msgs, &dec).unwrap();
+            for i in 0..d {
+                assert_eq!(
+                    oracle[i].to_bits(),
+                    avg[i].to_bits(),
+                    "{spec} {mode:?}: element {i} differs from mean_into oracle"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_rounds_reuse_state_and_stay_deterministic() {
+    // Same payload set aggregated twice through one Aggregator (buffer
+    // reuse) must equal a fresh Aggregator's output exactly.
+    let mut rng = Pcg32::new(9);
+    let (m, d) = (4usize, 2048usize);
+    let dec = decoder_for("qsgd8");
+    let r0 = round_payloads("qsgd8", m, d, 0, &mut rng);
+    let r1 = round_payloads("qsgd8", m, d, 1, &mut rng);
+    let mut reused = Aggregator::new(AggregatorConfig::default(), d, m);
+    reused.aggregate(0, &r0, &dec).unwrap();
+    let second = reused.aggregate(1, &r1, &dec).unwrap().to_vec();
+    let mut fresh = Aggregator::new(AggregatorConfig::default(), d, m);
+    let fresh_second = fresh.aggregate(1, &r1, &dec).unwrap();
+    for i in 0..d {
+        assert_eq!(second[i].to_bits(), fresh_second[i].to_bits(), "element {i}");
+    }
+}

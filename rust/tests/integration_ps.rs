@@ -23,6 +23,7 @@ fn full_cluster_all_algorithms_converge_on_quadratic() {
             seed: 11,
             eval_every: 0,
             keep_stats: false,
+            agg: Default::default(),
         };
         let report = run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(321);
@@ -54,6 +55,7 @@ fn byte_accounting_matches_algorithm_prediction() {
         seed: 5,
         eval_every: 0,
         keep_stats: false,
+        agg: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| {
         let mut rng = Pcg32::new(9);
@@ -127,9 +129,9 @@ fn decoded_wire_equals_dense_payload_through_the_server() {
     let dense = c.compress_encoded(&v, &mut rng, &mut wire);
     workers[0].send(Message::payload(0, 0, wire)).unwrap();
 
-    let decoder: Arc<dyn Fn(&[u8], usize) -> anyhow::Result<Vec<f32>> + Send + Sync> = {
+    let decoder: dqgan::ps::Decoder = {
         let c = dqgan::compress::LinfStochastic::with_bits(8);
-        Arc::new(move |b, d| c.decode(b, d))
+        Arc::new(move |b: &[u8], out: &mut [f32]| c.decode_into(b, out))
     };
     let t = std::thread::spawn(move || {
         let msg = workers[0].recv().unwrap();

@@ -2,7 +2,8 @@
 //! codec/wire invariants), via the in-tree `testutil` framework.
 
 use dqgan::compress::{
-    compressor_from_spec, Compressor, LinfStochastic, Qsgd, SignScale, TernGrad, TopK,
+    compressor_from_spec, BitReader, BitWriter, Compressor, LinfStochastic, Qsgd, SignScale,
+    TernGrad, TopK,
 };
 use dqgan::testutil::forall;
 use dqgan::util::stats::norm2_sq;
@@ -229,6 +230,73 @@ fn prop_decode_rejects_truncation() {
         prop_assert!(res.is_err(), "{spec}: decoded from {cut}/{} bytes", buf.len());
         prop_pass!()
     });
+}
+
+/// The bit-packing substrate under every sub-byte codec: writer/reader
+/// round-trip across **every** width 1..=32 with deliberately unaligned
+/// tail lengths (n·width ∤ 8), plus exact bit/byte accounting.
+#[test]
+fn prop_bit_codec_round_trips_every_width() {
+    forall("bit codec width sweep", 300, |g| {
+        let width = g.usize_in(1..=32) as u8;
+        // Lengths like 1, 7, 257 make the final byte partial for almost
+        // every width — the unaligned-tail regime.
+        let n = g.usize_in(1..=257);
+        let mask: u32 = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+        let values: Vec<u32> = (0..n).map(|_| g.rng().next_u32() & mask).collect();
+        let mut w = BitWriter::with_capacity_bits(n * width as usize);
+        for &v in &values {
+            w.write(v, width);
+        }
+        let total_bits = n * width as usize;
+        prop_assert!(
+            w.bit_len() == total_bits,
+            "width={width} n={n}: bit_len {} ≠ {total_bits}",
+            w.bit_len()
+        );
+        let bytes = w.into_bytes();
+        prop_assert!(
+            bytes.len() == total_bits.div_ceil(8),
+            "width={width} n={n}: {} bytes ≠ ceil({total_bits}/8)",
+            bytes.len()
+        );
+        let mut r = BitReader::new(&bytes);
+        for (i, &v) in values.iter().enumerate() {
+            let got = r.read(width);
+            prop_assert!(got.is_ok(), "width={width} n={n}: overrun at {i}");
+            let got = got.unwrap();
+            prop_assert!(got == v, "width={width} n={n} i={i}: {got} ≠ {v}");
+        }
+        // Only zero-padding of the final partial byte may remain.
+        prop_assert!(
+            r.bits_remaining() < 8,
+            "width={width} n={n}: {} stray bits",
+            r.bits_remaining()
+        );
+        prop_pass!()
+    });
+}
+
+/// Deterministic companion: one stream interleaving every width 1..=32
+/// back to back (maximally misaligned boundaries).
+#[test]
+fn bit_codec_interleaves_all_widths_in_one_stream() {
+    let mut w = BitWriter::new();
+    let mut expect = Vec::new();
+    for width in 1..=32u8 {
+        let mask: u32 = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+        let v = 0xDEAD_BEEFu32 & mask;
+        w.write(v, width);
+        expect.push((v, width));
+    }
+    let total_bits: usize = (1..=32usize).sum();
+    assert_eq!(w.bit_len(), total_bits);
+    let bytes = w.into_bytes();
+    let mut r = BitReader::new(&bytes);
+    for (v, width) in expect {
+        assert_eq!(r.read(width).unwrap(), v, "width {width}");
+    }
+    assert!(r.bits_remaining() < 8);
 }
 
 /// Compression ratios: every sub-f32 scheme beats raw f32 on the wire.
