@@ -1,12 +1,15 @@
 //! PERF: server-side aggregation (q̄ = 1/M Σ p̂) and the hot vector ops of
 //! the worker loop — the L3 costs that must not dominate round time.
 //!
-//! The headline case is the sequential-vs-sharded leader A/B over real
-//! 8-bit linf wire payloads at DCGAN dimension: the sharded
+//! The headline case is the sequential-vs-sharded-vs-streaming leader A/B
+//! over real 8-bit linf wire payloads at DCGAN dimension: the sharded
 //! [`dqgan::ps::Aggregator`] must beat the sequential baseline at M ≥ 8
 //! on a multi-core host (decode is worker-parallel, the reduce is
-//! shard-parallel, and both produce bitwise-identical averages — see
-//! `tests/integration_aggregate.rs`).
+//! shard-parallel, and all modes produce bitwise-identical averages — see
+//! `tests/integration_aggregate.rs`). This file measures pure compute
+//! with all payloads already in hand; `bench_streaming.rs` measures the
+//! streaming engine's overlap win under *skewed arrivals*, which is where
+//! decode-on-arrival actually pays.
 
 use dqgan::benchutil::Bench;
 use dqgan::comm::Message;
@@ -37,12 +40,13 @@ fn main() {
                 Message::payload(w as u32, 0, wire)
             })
             .collect();
-        for mode in [AggMode::Sequential, AggMode::Sharded] {
+        for mode in [AggMode::Sequential, AggMode::Sharded, AggMode::Streaming] {
             let mut agg =
                 Aggregator::new(AggregatorConfig { mode, ..Default::default() }, d, m);
             let tag = match mode {
                 AggMode::Sequential => "sequential",
                 AggMode::Sharded => "sharded",
+                AggMode::Streaming => "streaming",
             };
             b.bench_with_throughput(
                 &format!("decode+average/{tag}/M={m}/d={d}"),

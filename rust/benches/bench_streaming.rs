@@ -1,0 +1,97 @@
+//! PERF: the streaming (decode-on-arrival) round engine under **skewed
+//! arrivals** — the scenario the leader actually faces: worker payloads
+//! do not land simultaneously, and a gather-then-aggregate barrier
+//! serializes all decode work behind the slowest worker.
+//!
+//! Each case runs one full leader round against an in-process cluster
+//! whose worker `i` delays its send by `i · stagger`, then measures
+//! leader wall-clock from round start to averaged output:
+//!
+//! - `sequential` / `sharded`: `recv_round` barrier, then decode+reduce —
+//!   round time ≈ last arrival + all decode work.
+//! - `streaming`: `recv_round_streaming` + `Aggregator::accept` — early
+//!   payloads decode while later ones are still "in flight", so round
+//!   time ≈ last arrival + one decode + reduce.
+//!
+//! All three produce bitwise-identical averages (see
+//! `tests/integration_aggregate.rs`); this harness times the leader's
+//! round wall-clock directly. (In real training runs the same overlap
+//! shows up as the `wait_secs`/`agg_secs` split `ps::serve_rounds_with`
+//! records per round.)
+
+use dqgan::benchutil::Bench;
+use dqgan::comm::{inproc_cluster, Message, ServerEnd, WorkerEnd};
+use dqgan::compress::compressor_from_spec;
+use dqgan::config::{AggMode, AggregatorConfig};
+use dqgan::ps::{Aggregator, Decoder};
+use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    // Sleep-heavy cases: keep the per-case budget tight by default, but
+    // let the standard DQGAN_BENCH_MS / DQGAN_BENCH_WARMUP_MS knobs win
+    // when set (Bench::new reads them).
+    let mut b = if std::env::var_os("DQGAN_BENCH_MS").is_some() {
+        Bench::new("streaming")
+    } else {
+        Bench::new("streaming").with_budget(Duration::from_millis(400), Duration::from_millis(60))
+    };
+    let d = 400_708usize; // DCGAN dim
+    let m = 8usize;
+    let stagger = Duration::from_millis(1);
+
+    let codec = compressor_from_spec("linf8").unwrap();
+    let mut rng = Pcg32::new(11);
+    let wires: Vec<Vec<u8>> = (0..m)
+        .map(|_| {
+            let v = rng.normal_vec(d);
+            let mut wire = Vec::new();
+            codec.compress_encoded(&v, &mut rng, &mut wire);
+            wire
+        })
+        .collect();
+    let decoder: Decoder = {
+        let c = compressor_from_spec("linf8").unwrap();
+        Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+    };
+
+    for mode in [AggMode::Sequential, AggMode::Sharded, AggMode::Streaming] {
+        let tag = match mode {
+            AggMode::Sequential => "sequential",
+            AggMode::Sharded => "sharded",
+            AggMode::Streaming => "streaming",
+        };
+        let mut agg = Aggregator::new(AggregatorConfig { mode, ..Default::default() }, d, m);
+        b.bench(&format!("skewed-arrival/round/{tag}/M={m}/d={d}"), || {
+            let (mut server, workers, _) = inproc_cluster(m);
+            let handles: Vec<_> = workers
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut w)| {
+                    let wire = wires[i].clone();
+                    std::thread::spawn(move || {
+                        // Worker i's payload lands i·stagger late.
+                        std::thread::sleep(stagger * i as u32);
+                        w.send(Message::payload(i as u32, 0, wire)).unwrap();
+                    })
+                })
+                .collect();
+            let out0 = if mode == AggMode::Streaming {
+                agg.begin_round(0);
+                server
+                    .recv_round_streaming(&mut |msg| agg.accept(&msg, &decoder))
+                    .unwrap();
+                agg.finish_round().unwrap()[0]
+            } else {
+                let msgs = server.recv_round().unwrap();
+                agg.aggregate(0, &msgs, &decoder).unwrap()[0]
+            };
+            for h in handles {
+                h.join().unwrap();
+            }
+            out0
+        });
+    }
+    b.finish();
+}

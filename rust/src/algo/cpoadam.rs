@@ -22,16 +22,27 @@ pub struct CpoAdamWorker {
     opt: OptimisticAdam,
     quantizer: Option<Arc<dyn Compressor>>,
     f: Vec<f32>,
+    /// Dense quantized payload scratch (empty for plain CPOAdam, whose
+    /// dense payload is `f` itself), reused every round.
+    q: Vec<f32>,
+    /// Wire bytes, reused every round.
+    wire_buf: Vec<u8>,
 }
 
 impl CpoAdamWorker {
     pub fn new(w0: Vec<f32>, lr: LrSchedule, quantizer: Option<Arc<dyn Compressor>>) -> Self {
         let d = w0.len();
+        let (q, wire_cap) = match &quantizer {
+            Some(c) => (vec![0.0; d], c.encoded_size(d)),
+            None => (Vec::new(), 4 * d),
+        };
         Self {
             w: w0,
             opt: OptimisticAdam::new(1.0).with_betas(0.5, 0.9).with_schedule(lr),
             quantizer,
             f: vec![0.0; d],
+            q,
+            wire_buf: Vec::with_capacity(wire_cap),
         }
     }
 }
@@ -50,28 +61,27 @@ impl WorkerAlgo for CpoAdamWorker {
         src: &mut dyn GradientSource,
         batch: usize,
         rng: &mut Pcg32,
-    ) -> anyhow::Result<Produced> {
+    ) -> anyhow::Result<Produced<'_>> {
         let meta = src.grad(&self.w, batch, rng, &mut self.f)?;
-        let (wire, dense) = match &self.quantizer {
+        self.wire_buf.clear();
+        let dense: &[f32] = match &self.quantizer {
             None => {
-                let mut wire = Vec::with_capacity(4 * self.f.len());
-                Identity.encode(&self.f, &mut wire);
-                (wire, self.f.clone())
+                Identity.encode(&self.f, &mut self.wire_buf);
+                &self.f
             }
-            Some(q) => {
-                let mut wire = Vec::with_capacity(q.encoded_size(self.f.len()));
-                let dense = q.compress_encoded(&self.f, rng, &mut wire);
-                (wire, dense)
+            Some(c) => {
+                c.compress_encoded_into(&self.f, rng, &mut self.wire_buf, &mut self.q);
+                &self.q
             }
         };
         let stats = RoundStats {
-            bytes_up: wire.len(),
+            bytes_up: self.wire_buf.len(),
             grad_norm_sq: norm2_sq(&self.f),
             err_norm_sq: 0.0, // no error feedback by construction
             loss_g: meta.loss_g,
             loss_d: meta.loss_d,
         };
-        Ok(Produced { wire, dense, stats })
+        Ok(Produced { wire: &self.wire_buf, dense, stats })
     }
 
     fn apply(&mut self, avg: &[f32]) {
@@ -112,7 +122,7 @@ mod tests {
         for _ in 0..rounds {
             let mut payloads = Vec::new();
             for (wk, rng) in workers.iter_mut().zip(&mut rngs) {
-                payloads.push(wk.produce(&mut op, 8, rng).unwrap().dense);
+                payloads.push(wk.produce(&mut op, 8, rng).unwrap().dense.to_vec());
             }
             let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
             let mut avg = vec![0.0; 12];

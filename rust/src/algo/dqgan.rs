@@ -41,11 +41,16 @@ pub struct DqganWorker {
     w_half: Vec<f32>,
     f: Vec<f32>,
     p: Vec<f32>,
+    /// p̂ = Q(p) — the dense quantized payload, reused every round.
+    q: Vec<f32>,
+    /// Wire bytes for p̂, reused every round (capacity = encoded size).
+    wire_buf: Vec<u8>,
 }
 
 impl DqganWorker {
     pub fn new(w0: Vec<f32>, lr: LrSchedule, compressor: Arc<dyn Compressor>) -> Self {
         let d = w0.len();
+        let wire_cap = compressor.encoded_size(d);
         Self {
             w: w0,
             f_prev: vec![0.0; d],
@@ -56,6 +61,8 @@ impl DqganWorker {
             w_half: vec![0.0; d],
             f: vec![0.0; d],
             p: vec![0.0; d],
+            q: vec![0.0; d],
+            wire_buf: Vec::with_capacity(wire_cap),
         }
     }
 
@@ -84,7 +91,7 @@ impl WorkerAlgo for DqganWorker {
         src: &mut dyn GradientSource,
         batch: usize,
         rng: &mut Pcg32,
-    ) -> anyhow::Result<Produced> {
+    ) -> anyhow::Result<Produced<'_>> {
         let eta = self.eta();
         // line 4: w_{t−½} = w − (η·F_prev + e)
         for i in 0..self.w.len() {
@@ -94,24 +101,25 @@ impl WorkerAlgo for DqganWorker {
         let meta = src.grad(&self.w_half, batch, rng, &mut self.f)?;
         // line 6: p = η·F + e
         ops::scaled_add(eta, &self.f, &self.e, &mut self.p);
-        // line 7: p̂ = Q(p), fused with the wire encoding (bit-exact pair).
-        let mut wire = Vec::with_capacity(self.compressor.encoded_size(self.p.len()));
-        let q = self.compressor.compress_encoded(&self.p, rng, &mut wire);
+        // line 7: p̂ = Q(p), fused with the wire encoding (bit-exact pair),
+        // both written into reused round buffers.
+        self.wire_buf.clear();
+        self.compressor.compress_encoded_into(&self.p, rng, &mut self.wire_buf, &mut self.q);
         // line 8: e_t = p − p̂
         for i in 0..self.e.len() {
-            self.e[i] = self.p[i] - q[i];
+            self.e[i] = self.p[i] - self.q[i];
         }
         // store F for the next half step (line 2 "retrieve").
         self.f_prev.copy_from_slice(&self.f);
         self.t += 1;
         let stats = RoundStats {
-            bytes_up: wire.len(),
+            bytes_up: self.wire_buf.len(),
             grad_norm_sq: norm2_sq(&self.f),
             err_norm_sq: norm2_sq(&self.e),
             loss_g: meta.loss_g,
             loss_d: meta.loss_d,
         };
-        Ok(Produced { wire, dense: q, stats })
+        Ok(Produced { wire: &self.wire_buf, dense: &self.q, stats })
     }
 
     fn apply(&mut self, avg: &[f32]) {
@@ -155,7 +163,7 @@ mod tests {
             for (wk, rng) in workers.iter_mut().zip(&mut rngs) {
                 let prod = wk.produce(&mut op, 8, rng).unwrap();
                 last_err = prod.stats.err_norm_sq;
-                payloads.push(prod.dense);
+                payloads.push(prod.dense.to_vec());
             }
             let mut avg = vec![0.0; 16];
             let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
@@ -197,10 +205,10 @@ mod tests {
         let mut ra = Pcg32::new(1);
         let mut rb = Pcg32::new(2);
         for _ in 0..50 {
-            let pa = a.produce(&mut op, 4, &mut ra).unwrap();
-            let pb = b.produce(&mut op, 4, &mut rb).unwrap();
+            let pa = a.produce(&mut op, 4, &mut ra).unwrap().dense.to_vec();
+            let pb = b.produce(&mut op, 4, &mut rb).unwrap().dense.to_vec();
             let mut avg = vec![0.0; 8];
-            ops::mean_into(&[&pa.dense, &pb.dense], &mut avg);
+            ops::mean_into(&[&pa, &pb], &mut avg);
             a.apply(&avg);
             b.apply(&avg);
             assert_eq!(a.params(), b.params());
@@ -217,10 +225,37 @@ mod tests {
         let mut rng = Pcg32::new(3);
         for _ in 0..5 {
             let prod = wk.produce(&mut op, 4, &mut rng).unwrap();
-            let decoded = compressor.decode(&prod.wire, 32).unwrap();
-            assert_eq!(decoded, prod.dense, "wire and dense payloads must be bit-identical");
-            wk.apply(&prod.dense);
+            let decoded = compressor.decode(prod.wire, 32).unwrap();
+            let dense = prod.dense.to_vec();
+            assert_eq!(decoded, dense, "wire and dense payloads must be bit-identical");
+            wk.apply(&dense);
         }
+    }
+
+    #[test]
+    fn produce_reuses_round_buffers() {
+        // The "no allocation per round" contract: the wire and dense
+        // payload views must point into the same reused buffers on every
+        // round (the seed allocated a fresh wire Vec per produce).
+        let mut seed_rng = Pcg32::new(5);
+        let mut op = QuadraticOperator::new(32, 0.1, &mut seed_rng);
+        let w0 = op.init_params(&mut seed_rng);
+        let mut wk = DqganWorker::new(
+            w0,
+            LrSchedule::constant(0.05),
+            Arc::new(LinfStochastic::with_bits(8)),
+        );
+        let mut rng = Pcg32::new(7);
+        let (w0p, d0p) = {
+            let prod = wk.produce(&mut op, 4, &mut rng).unwrap();
+            (prod.wire.as_ptr(), prod.dense.as_ptr())
+        };
+        let (w1p, d1p) = {
+            let prod = wk.produce(&mut op, 4, &mut rng).unwrap();
+            (prod.wire.as_ptr(), prod.dense.as_ptr())
+        };
+        assert_eq!(w0p, w1p, "wire buffer must not be reallocated per round");
+        assert_eq!(d0p, d1p, "dense buffer must not be reallocated per round");
     }
 
     #[test]
@@ -242,7 +277,8 @@ mod tests {
             let prod = wk.produce(&mut op, 8, &mut rng).unwrap();
             g_max = g_max.max(prod.stats.grad_norm_sq);
             max_err = max_err.max(prod.stats.err_norm_sq);
-            wk.apply(&prod.dense);
+            let dense = prod.dense.to_vec();
+            wk.apply(&dense);
         }
         let sigma_sq_over_b = 0.5f32 * 0.5 / 8.0;
         let bound =

@@ -28,11 +28,16 @@ pub struct DqganAdamWorker {
     compressor: Arc<dyn Compressor>,
     f: Vec<f32>,
     p: Vec<f32>,
+    /// p̂ = Q(p) — dense quantized payload, reused every round.
+    q: Vec<f32>,
+    /// Wire bytes for p̂, reused every round.
+    wire_buf: Vec<u8>,
 }
 
 impl DqganAdamWorker {
     pub fn new(w0: Vec<f32>, lr: LrSchedule, compressor: Arc<dyn Compressor>) -> Self {
         let d = w0.len();
+        let wire_cap = compressor.encoded_size(d);
         Self {
             w: w0,
             e: vec![0.0; d],
@@ -40,6 +45,8 @@ impl DqganAdamWorker {
             compressor,
             f: vec![0.0; d],
             p: vec![0.0; d],
+            q: vec![0.0; d],
+            wire_buf: Vec::with_capacity(wire_cap),
         }
     }
 }
@@ -58,25 +65,25 @@ impl WorkerAlgo for DqganAdamWorker {
         src: &mut dyn GradientSource,
         batch: usize,
         rng: &mut Pcg32,
-    ) -> anyhow::Result<Produced> {
+    ) -> anyhow::Result<Produced<'_>> {
         let meta = src.grad(&self.w, batch, rng, &mut self.f)?;
         // p = F + e (no η scaling: Adam owns the step size).
         for i in 0..self.p.len() {
             self.p[i] = self.f[i] + self.e[i];
         }
-        let mut wire = Vec::with_capacity(self.compressor.encoded_size(self.p.len()));
-        let q = self.compressor.compress_encoded(&self.p, rng, &mut wire);
+        self.wire_buf.clear();
+        self.compressor.compress_encoded_into(&self.p, rng, &mut self.wire_buf, &mut self.q);
         for i in 0..self.e.len() {
-            self.e[i] = self.p[i] - q[i];
+            self.e[i] = self.p[i] - self.q[i];
         }
         let stats = RoundStats {
-            bytes_up: wire.len(),
+            bytes_up: self.wire_buf.len(),
             grad_norm_sq: norm2_sq(&self.f),
             err_norm_sq: norm2_sq(&self.e),
             loss_g: meta.loss_g,
             loss_d: meta.loss_d,
         };
-        Ok(Produced { wire, dense: q, stats })
+        Ok(Produced { wire: &self.wire_buf, dense: &self.q, stats })
     }
 
     fn apply(&mut self, avg: &[f32]) {
@@ -124,7 +131,7 @@ mod tests {
             for _ in 0..800 {
                 let mut payloads = Vec::new();
                 for (wk, rng) in workers.iter_mut().zip(&mut rngs) {
-                    payloads.push(wk.produce(&mut op, 8, rng).unwrap().dense);
+                    payloads.push(wk.produce(&mut op, 8, rng).unwrap().dense.to_vec());
                 }
                 let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
                 let mut avg = vec![0.0; 64];

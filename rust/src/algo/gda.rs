@@ -17,12 +17,14 @@ pub struct DistGdaWorker {
     lr: LrSchedule,
     t: u64,
     f: Vec<f32>,
+    /// Wire bytes (raw f32 encoding of `f`), reused every round.
+    wire_buf: Vec<u8>,
 }
 
 impl DistGdaWorker {
     pub fn new(w0: Vec<f32>, lr: LrSchedule) -> Self {
         let d = w0.len();
-        Self { w: w0, lr, t: 0, f: vec![0.0; d] }
+        Self { w: w0, lr, t: 0, f: vec![0.0; d], wire_buf: Vec::with_capacity(4 * d) }
     }
 }
 
@@ -40,18 +42,18 @@ impl WorkerAlgo for DistGdaWorker {
         src: &mut dyn GradientSource,
         batch: usize,
         rng: &mut Pcg32,
-    ) -> anyhow::Result<Produced> {
+    ) -> anyhow::Result<Produced<'_>> {
         let meta = src.grad(&self.w, batch, rng, &mut self.f)?;
-        let mut wire = Vec::with_capacity(4 * self.f.len());
-        Identity.encode(&self.f, &mut wire);
+        self.wire_buf.clear();
+        Identity.encode(&self.f, &mut self.wire_buf);
         let stats = RoundStats {
-            bytes_up: wire.len(),
+            bytes_up: self.wire_buf.len(),
             grad_norm_sq: norm2_sq(&self.f),
             err_norm_sq: 0.0,
             loss_g: meta.loss_g,
             loss_d: meta.loss_d,
         };
-        Ok(Produced { wire, dense: self.f.clone(), stats })
+        Ok(Produced { wire: &self.wire_buf, dense: &self.f, stats })
     }
 
     fn apply(&mut self, avg: &[f32]) {
@@ -98,8 +100,8 @@ mod tests {
         let mut rng = Pcg32::new(1);
         let mut src = Bilinear;
         for _ in 0..500 {
-            let p = wk.produce(&mut src, 1, &mut rng).unwrap();
-            wk.apply(&p.dense);
+            let dense = wk.produce(&mut src, 1, &mut rng).unwrap().dense.to_vec();
+            wk.apply(&dense);
         }
         let r = norm2_sq(wk.params()).sqrt();
         assert!(r > 5.0, "GDA should diverge on the bilinear game, r={r}");

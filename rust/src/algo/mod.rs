@@ -46,13 +46,18 @@ pub struct RoundStats {
 }
 
 /// The message a worker hands the transport each round.
-#[derive(Debug, Clone)]
-pub struct Produced {
+///
+/// Borrows the worker's **reused** round buffers (valid until the next
+/// `produce` call), so the worker hot path allocates nothing per round;
+/// the one owned copy happens at the transport boundary, where
+/// [`crate::comm::Message`] takes ownership of the wire bytes.
+#[derive(Debug)]
+pub struct Produced<'a> {
     /// Encoded payload (exact bytes a real network would carry).
-    pub wire: Vec<u8>,
+    pub wire: &'a [u8],
     /// Dense decoded payload — the in-process fast path (bit-identical to
     /// `decode(wire)`; integration tests assert this).
-    pub dense: Vec<f32>,
+    pub dense: &'a [f32],
     pub stats: RoundStats,
 }
 
@@ -64,13 +69,15 @@ pub trait WorkerAlgo: Send {
     /// Current parameters w_t (identical across workers after `apply`).
     fn params(&self) -> &[f32];
 
-    /// Phase 1: produce this round's payload.
+    /// Phase 1: produce this round's payload. The returned views point
+    /// into the worker's reused scratch buffers and stay valid until the
+    /// next `produce` call.
     fn produce(
         &mut self,
         src: &mut dyn GradientSource,
         batch: usize,
         rng: &mut Pcg32,
-    ) -> anyhow::Result<Produced>;
+    ) -> anyhow::Result<Produced<'_>>;
 
     /// Phase 2: apply the server-averaged payload.
     fn apply(&mut self, avg: &[f32]);

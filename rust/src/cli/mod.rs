@@ -43,16 +43,19 @@ fn print_help() {
 USAGE:
   dqgan train [--algo A] [--model mlp|dcgan] [--workers N] [--batch B]
               [--rounds T] [--lr ETA] [--seed S] [--eval-every K]
-              [--agg sharded|sequential] [--agg-threads N] [--agg-shard E]
+              [--agg sharded|sequential|streaming] [--agg-threads N]
+              [--agg-shard E]
       Train a GAN on the parameter-server runtime.
       Algorithms: dqgan[:comp] (Algorithm 2), dqgan-adam[:comp] (paper §4),
                   cpoadam, cpoadam-gq[:comp], gda
       Compressors: linf8 (paper), linfN, qsgdN, topk(f=0.1), sign,
                   terngrad, identity
       Aggregation: the leader's decode+average path. sharded (default)
-      fans decode/reduce work across a thread pool; sequential is the
-      bitwise-identical single-thread baseline. --agg-threads 0 = auto;
-      --agg-shard = f32 elements per reduction shard.
+      fans decode/reduce work across a thread pool; streaming decodes
+      each payload as it arrives (overlapping decode with straggler
+      wait); sequential is the single-thread baseline. All three are
+      bitwise-identical. --agg-threads 0 = auto; --agg-shard = f32
+      elements per reduction shard.
 
   dqgan figures --id fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all [--fast]
       Regenerate a paper figure / theory validation (CSV under results/).

@@ -4,7 +4,7 @@
 //! frame sizes so accounting matches the TCP path exactly.
 
 use super::message::{Message, MsgKind};
-use super::{validate_round_batch, ByteCounter, ServerEnd, WorkerEnd};
+use super::{validate_round_batch, ArrivalSet, ByteCounter, ServerEnd, WorkerEnd};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
@@ -56,6 +56,24 @@ impl ServerEnd for InprocServerEnd {
         msgs.sort_by_key(|m| m.worker);
         validate_round_batch(&msgs)?;
         Ok(msgs)
+    }
+
+    fn recv_round_streaming(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        // The shared uplink channel already delivers frames in arrival
+        // order, so streaming is the natural read here: hand each frame
+        // to the aggregator the moment `recv` returns it.
+        let m = self.to_workers.len();
+        let mut arrivals = ArrivalSet::new(m);
+        for _ in 0..m {
+            let msg =
+                self.from_workers.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
+            arrivals.admit(&msg)?;
+            on_msg(msg)?;
+        }
+        Ok(())
     }
 
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
@@ -135,6 +153,40 @@ mod tests {
         workers[1].send(Message::worker_error(1, 0, "injected")).unwrap();
         let err = server.recv_round().unwrap_err();
         assert!(err.to_string().contains("injected"), "{err}");
+    }
+
+    #[test]
+    fn streaming_delivers_in_arrival_order() {
+        let (mut server, mut workers, _) = inproc_cluster(3);
+        // Send in reverse worker-id order: arrival order must be preserved.
+        for id in (0..3u32).rev() {
+            workers[id as usize].send(Message::payload(id, 0, vec![id as u8])).unwrap();
+        }
+        let mut order = Vec::new();
+        server
+            .recv_round_streaming(&mut |msg| {
+                order.push(msg.worker);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn streaming_fails_fast_on_worker_error() {
+        let (mut server, mut workers, _) = inproc_cluster(2);
+        workers[1].send(Message::worker_error(1, 0, "injected")).unwrap();
+        // Worker 0 never sends: the error frame must abort the barrier
+        // without waiting on it.
+        let mut count = 0usize;
+        let err = server
+            .recv_round_streaming(&mut |_| {
+                count += 1;
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err}");
+        assert_eq!(count, 0, "error frame must not reach the callback");
     }
 
     #[test]

@@ -73,10 +73,55 @@ pub trait ServerEnd: Send {
     /// Gather exactly one message from every worker (blocking). Messages
     /// are returned sorted by worker id.
     fn recv_round(&mut self) -> anyhow::Result<Vec<Message>>;
+    /// Event-driven round gather: invoke `on_msg` once per worker frame in
+    /// **arrival order**, as soon as each frame is available — the hook the
+    /// streaming aggregation engine uses to decode payloads while slower
+    /// workers are still in flight. Implementations fail fast on
+    /// `WorkerError` frames and on duplicate worker ids within the
+    /// barrier; exactly `workers()` callbacks fire on success. The default
+    /// degrades to [`recv_round`] (worker-id order), which is correct but
+    /// forfeits the overlap.
+    fn recv_round_streaming(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        for msg in self.recv_round()? {
+            on_msg(msg)?;
+        }
+        Ok(())
+    }
     /// Broadcast one message to every worker.
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()>;
     /// Number of workers.
     fn workers(&self) -> usize;
+}
+
+/// Per-barrier arrival bookkeeping shared by the streaming gathers:
+/// fail fast on `WorkerError` frames, reject out-of-range and duplicate
+/// worker ids (each worker contributes exactly one frame per barrier).
+pub(crate) struct ArrivalSet {
+    seen: Vec<bool>,
+}
+
+impl ArrivalSet {
+    pub(crate) fn new(workers: usize) -> Self {
+        Self { seen: vec![false; workers] }
+    }
+
+    pub(crate) fn admit(&mut self, msg: &Message) -> anyhow::Result<()> {
+        if msg.kind == MsgKind::WorkerError {
+            validate_round_batch(std::slice::from_ref(msg))?;
+        }
+        let id = msg.worker as usize;
+        anyhow::ensure!(
+            id < self.seen.len(),
+            "worker id {id} out of range (M = {})",
+            self.seen.len()
+        );
+        anyhow::ensure!(!self.seen[id], "duplicate frame from worker {id} within one barrier");
+        self.seen[id] = true;
+        Ok(())
+    }
 }
 
 /// Shared byte counters (uplink = workers→server, downlink = server→workers).
@@ -105,5 +150,28 @@ impl ByteCounter {
 
     pub fn down_total(&self) -> u64 {
         self.down.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_set_enforces_barrier_invariants() {
+        let mut set = ArrivalSet::new(2);
+        set.admit(&Message::payload(1, 0, vec![])).unwrap();
+        set.admit(&Message::payload(0, 0, vec![])).unwrap();
+        // Duplicate within one barrier.
+        let mut dup = ArrivalSet::new(2);
+        dup.admit(&Message::payload(0, 0, vec![])).unwrap();
+        assert!(dup.admit(&Message::payload(0, 0, vec![])).is_err());
+        // Out of range.
+        assert!(ArrivalSet::new(2).admit(&Message::payload(5, 0, vec![])).is_err());
+        // WorkerError fails fast with the worker's message.
+        let err = ArrivalSet::new(2)
+            .admit(&Message::worker_error(1, 3, "boom"))
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
     }
 }

@@ -10,9 +10,10 @@
 //! connect: [`TcpServerBuilder::listen`] → spawn workers → `accept(m)`.
 
 use super::message::{Message, MsgKind};
-use super::{validate_round_batch, ByteCounter, ServerEnd, WorkerEnd};
+use super::{validate_round_batch, ArrivalSet, ByteCounter, ServerEnd, WorkerEnd};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 
 fn write_frame(stream: &mut TcpStream, msg: &Message) -> anyhow::Result<usize> {
@@ -75,6 +76,7 @@ impl TcpServerBuilder {
         Ok(TcpServerEnd {
             streams: streams.into_iter().map(|s| s.unwrap()).collect(),
             counter: ByteCounter::new(),
+            readers: None,
         })
     }
 }
@@ -95,6 +97,11 @@ impl TcpWorkerEnd {
         write_frame(&mut stream, &Message::payload(id, u64::MAX, Vec::new()))?;
         Ok(Self { id, stream, counter: ByteCounter::new() })
     }
+
+    /// This worker's byte counters (uplink = sent, downlink = received).
+    pub fn counter(&self) -> Arc<ByteCounter> {
+        Arc::clone(&self.counter)
+    }
 }
 
 impl WorkerEnd for TcpWorkerEnd {
@@ -105,7 +112,11 @@ impl WorkerEnd for TcpWorkerEnd {
     }
 
     fn recv(&mut self) -> anyhow::Result<Message> {
-        read_frame(&mut self.stream)
+        let msg = read_frame(&mut self.stream)?;
+        // Downlink accounting: broadcast/shutdown frames plus the length
+        // prefix, mirroring `send`'s uplink accounting.
+        self.counter.add_down(msg.frame_len() + 4);
+        Ok(msg)
     }
 
     fn id(&self) -> u32 {
@@ -117,30 +128,118 @@ impl WorkerEnd for TcpWorkerEnd {
 pub struct TcpServerEnd {
     streams: Vec<TcpStream>,
     counter: Arc<ByteCounter>,
+    /// Arrival-ordered frame source: one reader thread per worker socket
+    /// pushing into a bounded channel. Spawned lazily on the first
+    /// streaming gather; once active, *all* receives go through it (the
+    /// reader threads own the read halves from then on).
+    readers: Option<Receiver<anyhow::Result<Message>>>,
 }
 
 impl TcpServerEnd {
     pub fn counter(&self) -> Arc<ByteCounter> {
         Arc::clone(&self.counter)
     }
+
+    /// Spawn one detached reader thread per worker socket (idempotent).
+    ///
+    /// Each reader loops `read_frame` on a dup'd handle of its socket and
+    /// pushes results into a bounded channel (capacity 2·M: one in-flight
+    /// frame per worker plus next-round read-ahead; a full channel blocks
+    /// the reader, which is exactly the backpressure we want). A read
+    /// error is forwarded once, then the thread exits; threads also exit
+    /// when the channel's receiver (this struct) is dropped and their next
+    /// send fails. Threads are detached rather than joined: a reader may
+    /// be parked in a blocking read on a still-open socket at teardown,
+    /// and it unblocks only when the peer closes.
+    fn start_readers(&mut self) -> anyhow::Result<()> {
+        if self.readers.is_some() {
+            return Ok(());
+        }
+        // Clone every read half up front so a dup failure spawns nothing.
+        let mut read_halves = Vec::with_capacity(self.streams.len());
+        for s in &self.streams {
+            read_halves.push(s.try_clone()?);
+        }
+        let (tx, rx) = sync_channel::<anyhow::Result<Message>>(2 * self.streams.len());
+        // Install the channel *before* spawning: if a spawn fails partway,
+        // the already-running readers own their sockets and every later
+        // receive goes through the channel — never a direct read racing an
+        // orphan reader on the same fd. (The caller propagates the error,
+        // the endpoint is dropped, and the orphans exit on their next
+        // send.)
+        self.readers = Some(rx);
+        for (i, mut read_half) in read_halves.into_iter().enumerate() {
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name(format!("dqgan-tcp-reader-{i}"))
+                .spawn(move || loop {
+                    let res = read_frame(&mut read_half);
+                    let failed = res.is_err();
+                    if tx.send(res).is_err() || failed {
+                        break;
+                    }
+                })
+                .map_err(|e| anyhow::anyhow!("spawn tcp reader {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Pop the next arrived frame off the reader channel.
+    fn next_arrival(&mut self) -> anyhow::Result<Message> {
+        let rx = self.readers.as_ref().expect("readers started");
+        let msg = rx.recv().map_err(|_| anyhow::anyhow!("all tcp reader threads exited"))??;
+        self.counter.add_up(msg.frame_len() + 4);
+        Ok(msg)
+    }
 }
 
 impl ServerEnd for TcpServerEnd {
     fn recv_round(&mut self) -> anyhow::Result<Vec<Message>> {
-        let mut msgs = Vec::with_capacity(self.streams.len());
-        for s in &mut self.streams {
-            let msg = read_frame(s)?;
-            if msg.kind == MsgKind::WorkerError {
-                // Fail before reading the remaining sockets — the
-                // erroring worker's peers may not send this round.
-                validate_round_batch(std::slice::from_ref(&msg))?;
+        let m = self.streams.len();
+        let mut msgs = Vec::with_capacity(m);
+        if self.readers.is_some() {
+            // Streaming readers own the read halves: gather through the
+            // arrival channel, then restore worker-id order.
+            let mut arrivals = ArrivalSet::new(m);
+            for _ in 0..m {
+                let msg = self.next_arrival()?;
+                arrivals.admit(&msg)?;
+                msgs.push(msg);
             }
-            self.counter.add_up(msg.frame_len() + 4);
-            msgs.push(msg);
+        } else {
+            for s in &mut self.streams {
+                let msg = read_frame(s)?;
+                if msg.kind == MsgKind::WorkerError {
+                    // Fail before reading the remaining sockets — the
+                    // erroring worker's peers may not send this round.
+                    validate_round_batch(std::slice::from_ref(&msg))?;
+                }
+                self.counter.add_up(msg.frame_len() + 4);
+                msgs.push(msg);
+            }
         }
         msgs.sort_by_key(|m| m.worker);
         validate_round_batch(&msgs)?;
         Ok(msgs)
+    }
+
+    fn recv_round_streaming(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        // Arrival-order gather: no fixed-id read order, so one straggler
+        // can no longer block payloads already sitting in other sockets,
+        // and a WorkerError frame aborts the barrier the moment it lands
+        // regardless of which worker sent it.
+        self.start_readers()?;
+        let m = self.streams.len();
+        let mut arrivals = ArrivalSet::new(m);
+        for _ in 0..m {
+            let msg = self.next_arrival()?;
+            arrivals.admit(&msg)?;
+            on_msg(msg)?;
+        }
+        Ok(())
     }
 
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
@@ -175,6 +274,7 @@ mod tests {
                     assert_eq!(b.payload, vec![7, 7]);
                     let s = w.recv().unwrap();
                     assert_eq!(s.kind, MsgKind::Shutdown);
+                    w.counter().down_total()
                 })
             })
             .collect();
@@ -184,24 +284,81 @@ mod tests {
         assert_eq!(msgs[1].payload, vec![1u8; 16]);
         server.broadcast(Message::broadcast(0, vec![7, 7])).unwrap();
         server.broadcast(Message::shutdown(1)).unwrap();
+        // Worker-side downlink telemetry: exactly the broadcast + shutdown
+        // frames (each with its 4-byte length prefix) — regression for the
+        // counter that used to stay at 0.
+        let expected_down = (Message::broadcast(0, vec![7, 7]).frame_len()
+            + Message::shutdown(1).frame_len()
+            + 8) as u64;
         for w in workers {
-            w.join().unwrap();
+            assert_eq!(w.join().unwrap(), expected_down);
         }
         assert!(server.counter().up_total() > 0);
     }
 
     #[test]
-    fn rejects_duplicate_ids() {
+    fn tcp_streaming_round_trip() {
+        // Round 0 gathers via the streaming (arrival-order) path, round 1
+        // via the classic barrier — proving both coexist once the reader
+        // threads own the sockets.
+        let m = 3;
         let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
         let addr = builder.addr();
+        let workers: Vec<_> = (0..m as u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+                    for round in 0..2u64 {
+                        w.send(Message::payload(id, round, vec![id as u8; 8])).unwrap();
+                        let b = w.recv().unwrap();
+                        assert_eq!(b.kind, MsgKind::Broadcast);
+                        assert_eq!(b.round, round);
+                    }
+                    let s = w.recv().unwrap();
+                    assert_eq!(s.kind, MsgKind::Shutdown);
+                })
+            })
+            .collect();
+        let mut server = builder.accept(m).unwrap();
+        let mut seen = Vec::new();
+        server
+            .recv_round_streaming(&mut |msg| {
+                assert_eq!(msg.round, 0);
+                seen.push(msg.worker);
+                Ok(())
+            })
+            .unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+        server.broadcast(Message::broadcast(0, vec![1])).unwrap();
+        let msgs = server.recv_round().unwrap();
+        assert_eq!(msgs.len(), m);
+        assert!(msgs.windows(2).all(|w| w[0].worker < w[1].worker), "sorted by id");
+        assert!(msgs.iter().all(|m| m.round == 1));
+        server.broadcast(Message::broadcast(1, vec![2])).unwrap();
+        server.broadcast(Message::shutdown(2)).unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_ids() {
+        // Deterministic: the worker thread holds both connections open
+        // until `accept` has returned, so the server always reads both
+        // registration frames (no sleep, no slow-runner flake).
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
         let w = std::thread::spawn(move || {
             let _a = TcpWorkerEnd::connect(&addr.to_string(), 0).unwrap();
             let _b = TcpWorkerEnd::connect(&addr.to_string(), 0);
-            // keep the connections open long enough for accept to see both
-            std::thread::sleep(std::time::Duration::from_millis(300));
+            // Keep the connections open until accept has failed.
+            let _ = done_rx.recv();
         });
         let res = builder.accept(2);
         assert!(res.is_err(), "duplicate registration must fail accept");
+        done_tx.send(()).unwrap();
         w.join().unwrap();
     }
 
@@ -209,12 +366,14 @@ mod tests {
     fn rejects_out_of_range_id() {
         let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
         let addr = builder.addr();
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
         let w = std::thread::spawn(move || {
             let _a = TcpWorkerEnd::connect(&addr.to_string(), 9).unwrap();
-            std::thread::sleep(std::time::Duration::from_millis(300));
+            let _ = done_rx.recv();
         });
         let res = builder.accept(2);
         assert!(res.is_err());
+        done_tx.send(()).unwrap();
         w.join().unwrap();
     }
 }

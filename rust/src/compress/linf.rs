@@ -118,14 +118,20 @@ impl Compressor for LinfStochastic {
         }
     }
 
-    fn compress_encoded(&self, v: &[f32], rng: &mut Pcg32, buf: &mut Vec<u8>) -> Vec<f32> {
-        let mut out = vec![0.0; v.len()];
+    fn compress_encoded_into(
+        &self,
+        v: &[f32],
+        rng: &mut Pcg32,
+        buf: &mut Vec<u8>,
+        q_out: &mut [f32],
+    ) {
+        assert_eq!(v.len(), q_out.len());
         if v.is_empty() {
-            return out;
+            return;
         }
         let bl = self.block_len(v.len());
         let lb = self.level_bits();
-        for (vb, ob) in v.chunks(bl).zip(out.chunks_mut(bl)) {
+        for (vb, ob) in v.chunks(bl).zip(q_out.chunks_mut(bl)) {
             let (scale, levels) = self.quantize_block(vb, rng);
             put_f32(buf, scale);
             let mut w = BitWriter::with_capacity_bits(vb.len() * (1 + lb as usize));
@@ -136,7 +142,6 @@ impl Compressor for LinfStochastic {
             w.append_to(buf);
             self.reconstruct_block(scale, &levels, ob);
         }
-        out
     }
 
     fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>) {

@@ -105,17 +105,33 @@ pub trait Compressor: Send + Sync {
         out
     }
 
-    /// Fused quantize + encode — the hot-path entry point used by the
-    /// error-feedback state. The returned dense `Q(v)` and the wire bytes
-    /// are guaranteed mutually consistent: `decode(bytes, d)` reproduces
-    /// the dense vector **bit-exactly**, so worker-local error
-    /// `e = p − Q(p)` and the server's decoded `Q(p)` never diverge.
+    /// Fused quantize + encode into **caller-provided** buffers — the
+    /// allocation-free worker hot path (`q_out.len() == v.len()`): `Q(v)`
+    /// is written into `q_out` and the wire bytes appended to `buf`. The
+    /// dense output and the wire bytes are guaranteed mutually
+    /// consistent: `decode(bytes, d)` reproduces `q_out` **bit-exactly**,
+    /// so worker-local error `e = p − Q(p)` and the server's decoded
+    /// `Q(p)` never diverge.
     ///
     /// The default composes `compress` + `encode`; scale-based compressors
     /// override it to avoid re-deriving their scale from the dense output.
+    fn compress_encoded_into(
+        &self,
+        v: &[f32],
+        rng: &mut Pcg32,
+        buf: &mut Vec<u8>,
+        q_out: &mut [f32],
+    ) {
+        self.compress(v, q_out, rng);
+        self.encode(q_out, buf);
+    }
+
+    /// [`compress_encoded_into`](Self::compress_encoded_into) returning a
+    /// fresh dense Vec — convenience for tests/tooling; the worker round
+    /// loop uses the `_into` form with reused buffers.
     fn compress_encoded(&self, v: &[f32], rng: &mut Pcg32, buf: &mut Vec<u8>) -> Vec<f32> {
-        let q = self.compress_vec(v, rng);
-        self.encode(&q, buf);
+        let mut q = vec![0.0; v.len()];
+        self.compress_encoded_into(v, rng, buf, &mut q);
         q
     }
 }

@@ -104,12 +104,17 @@ impl Compressor for Qsgd {
         self.reconstruct(norm, &levels, out);
     }
 
-    fn compress_encoded(&self, v: &[f32], rng: &mut Pcg32, buf: &mut Vec<u8>) -> Vec<f32> {
+    fn compress_encoded_into(
+        &self,
+        v: &[f32],
+        rng: &mut Pcg32,
+        buf: &mut Vec<u8>,
+        q_out: &mut [f32],
+    ) {
+        assert_eq!(v.len(), q_out.len());
         let (norm, levels) = self.quantize_levels(v, rng);
         self.encode_levels(norm, &levels, buf);
-        let mut out = vec![0.0; v.len()];
-        self.reconstruct(norm, &levels, &mut out);
-        out
+        self.reconstruct(norm, &levels, q_out);
     }
 
     fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>) {

@@ -71,12 +71,17 @@ impl Compressor for TernGrad {
         Self::reconstruct(scale, &syms, out);
     }
 
-    fn compress_encoded(&self, v: &[f32], rng: &mut Pcg32, buf: &mut Vec<u8>) -> Vec<f32> {
+    fn compress_encoded_into(
+        &self,
+        v: &[f32],
+        rng: &mut Pcg32,
+        buf: &mut Vec<u8>,
+        q_out: &mut [f32],
+    ) {
+        assert_eq!(v.len(), q_out.len());
         let (scale, syms) = self.ternarize(v, rng);
         Self::encode_syms(scale, &syms, buf);
-        let mut out = vec![0.0; v.len()];
-        Self::reconstruct(scale, &syms, &mut out);
-        out
+        Self::reconstruct(scale, &syms, q_out);
     }
 
     fn encode(&self, quantized: &[f32], buf: &mut Vec<u8>) {

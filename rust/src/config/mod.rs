@@ -6,9 +6,10 @@
 
 /// Which leader aggregation path to run.
 ///
-/// Both paths are **bitwise-identical** in their output (the sharded
-/// reduction preserves the sequential per-element addition order — see
-/// `ps/aggregate.rs`), so this flag is a pure performance A/B switch.
+/// All paths are **bitwise-identical** in their output (the sharded and
+/// streaming reductions preserve the sequential per-element addition
+/// order — see `ps/aggregate.rs`), so this flag is a pure performance
+/// A/B switch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AggMode {
     /// Seed behavior: decode and accumulate the M payloads one after
@@ -17,15 +18,23 @@ pub enum AggMode {
     /// Decode payloads thread-parallel across workers, then reduce
     /// cache-sized shards of the parameter vector thread-parallel.
     Sharded,
+    /// Event-driven round engine: payloads are decoded **on arrival**
+    /// (overlapping decode with the wait for stragglers), then the same
+    /// shard-parallel reduce runs once the barrier completes.
+    Streaming,
 }
 
 impl AggMode {
-    /// Parse a CLI string: `sharded`/`parallel` or `sequential`/`seq`.
+    /// Parse a CLI string: `sharded`/`parallel`, `sequential`/`seq` or
+    /// `streaming`/`stream`.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s.trim().to_ascii_lowercase().as_str() {
             "sharded" | "parallel" => Ok(Self::Sharded),
             "sequential" | "seq" => Ok(Self::Sequential),
-            other => anyhow::bail!("unknown aggregation mode '{other}' (sharded|sequential)"),
+            "streaming" | "stream" => Ok(Self::Streaming),
+            other => {
+                anyhow::bail!("unknown aggregation mode '{other}' (sharded|sequential|streaming)")
+            }
         }
     }
 }
@@ -54,6 +63,11 @@ impl AggregatorConfig {
         Self { mode: AggMode::Sequential, ..Self::default() }
     }
 
+    /// Streaming (decode-on-arrival) configuration.
+    pub fn streaming() -> Self {
+        Self { mode: AggMode::Streaming, ..Self::default() }
+    }
+
     /// Resolve `threads` to a concrete pool size.
     pub fn resolved_threads(&self) -> usize {
         if self.threads > 0 {
@@ -74,7 +88,16 @@ mod tests {
         assert_eq!(AggMode::parse("parallel").unwrap(), AggMode::Sharded);
         assert_eq!(AggMode::parse("SEQ").unwrap(), AggMode::Sequential);
         assert_eq!(AggMode::parse("sequential").unwrap(), AggMode::Sequential);
+        assert_eq!(AggMode::parse("streaming").unwrap(), AggMode::Streaming);
+        assert_eq!(AggMode::parse("stream").unwrap(), AggMode::Streaming);
         assert!(AggMode::parse("wat").is_err());
+    }
+
+    #[test]
+    fn streaming_preset() {
+        let cfg = AggregatorConfig::streaming();
+        assert_eq!(cfg.mode, AggMode::Streaming);
+        assert_eq!(cfg.shard_elems, AggregatorConfig::default().shard_elems);
     }
 
     #[test]

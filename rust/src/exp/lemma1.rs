@@ -56,7 +56,7 @@ fn run_one(spec: &CompressorSpec, eta: f32, rounds: usize, batch: usize) -> Lemm
             sum_err += prod.stats.err_norm_sq as f64;
             g_max_sq = g_max_sq.max(prod.stats.grad_norm_sq);
             count += 1;
-            payloads.push(prod.dense);
+            payloads.push(prod.dense.to_vec());
         }
         let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
         ops::mean_into(&refs, &mut avg);

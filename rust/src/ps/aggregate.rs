@@ -16,6 +16,14 @@
 //!    `&mut` range of the output and accumulates the M decoded buffers
 //!    **in worker-id order** before scaling by 1/M.
 //!
+//! A third mode, [`AggMode::Streaming`], drives the same buffers through
+//! an **event-driven round**: [`Aggregator::begin_round`] opens the
+//! barrier, [`Aggregator::accept`] decodes each payload the moment its
+//! frame arrives (any arrival order — decode overlaps the wait for
+//! stragglers), and [`Aggregator::finish_round`] runs the shard reduce
+//! once all M inputs are in. See `ps/server.rs` for the leader loop that
+//! feeds it from [`crate::comm::ServerEnd::recv_round_streaming`].
+//!
 //! ## Determinism contract
 //!
 //! The reduce stage adds workers in exactly the order the sequential path
@@ -24,7 +32,10 @@
 //! addition is non-associative, which is precisely why the design shards
 //! over *dimension* rather than accumulating per-thread partial sums over
 //! worker subsets (those would regroup the additions and break the A/B
-//! guarantee the regression tests enforce).
+//! guarantee the regression tests enforce). The streaming mode decodes in
+//! arrival order but each payload lands in its own per-worker slot, and
+//! the reduce only ever reads the slots in worker-id order — so arrival
+//! order cannot affect a single bit of the output.
 //!
 //! ## Buffer reuse
 //!
@@ -63,10 +74,15 @@ pub struct Aggregator {
     dim: usize,
     workers: usize,
     shard_elems: usize,
-    /// Pool for the sharded path (absent in sequential mode).
+    /// Pool for the sharded/streaming reduce (absent in sequential mode).
     pool: Option<ThreadPool>,
     slots: Vec<WorkerSlot>,
     avg: Vec<f32>,
+    /// Streaming-round state: the round currently accepting arrivals
+    /// (between [`Self::begin_round`] and [`Self::finish_round`]).
+    pending_round: Option<u64>,
+    arrived: Vec<bool>,
+    arrived_count: usize,
 }
 
 impl Aggregator {
@@ -80,10 +96,11 @@ impl Aggregator {
     /// `dim` up front.
     pub fn new(cfg: AggregatorConfig, dim: usize, workers: usize) -> Self {
         assert!(workers > 0, "aggregator needs at least one worker");
+        let small = dim * workers < Self::SMALL_WORK_ELEMS;
         let pool = match cfg.mode {
             AggMode::Sequential => None,
-            AggMode::Sharded if dim * workers < Self::SMALL_WORK_ELEMS => None,
-            AggMode::Sharded => Some(ThreadPool::new(cfg.resolved_threads())),
+            AggMode::Sharded | AggMode::Streaming if small => None,
+            AggMode::Sharded | AggMode::Streaming => Some(ThreadPool::new(cfg.resolved_threads())),
         };
         let shard_elems = cfg.shard_elems.max(1);
         Self {
@@ -95,6 +112,9 @@ impl Aggregator {
                 .map(|_| WorkerSlot { buf: vec![0.0; dim], err: None })
                 .collect(),
             avg: vec![0.0; dim],
+            pending_round: None,
+            arrived: vec![false; workers],
+            arrived_count: 0,
             cfg,
         }
     }
@@ -135,8 +155,108 @@ impl Aggregator {
         match self.cfg.mode {
             AggMode::Sequential => self.run_sequential(round, msgs, decoder)?,
             AggMode::Sharded => self.run_sharded(round, msgs, decoder)?,
+            AggMode::Streaming => {
+                // Batch entry point for the streaming engine: feed the
+                // payloads through the same begin/accept/finish path the
+                // event-driven leader uses (order-invariant by design).
+                self.begin_round(round);
+                for msg in msgs {
+                    self.accept(msg, decoder)?;
+                }
+                self.finish_round()?;
+            }
         }
         Ok(&self.avg)
+    }
+
+    /// Open a streaming round: arrivals are then fed through
+    /// [`Self::accept`] in **any order** and the average produced by
+    /// [`Self::finish_round`]. Resets any aborted previous round.
+    pub fn begin_round(&mut self, round: u64) {
+        self.pending_round = Some(round);
+        self.arrived.fill(false);
+        self.arrived_count = 0;
+    }
+
+    /// Decode one arrived payload into its worker slot immediately (the
+    /// decode-on-arrival half of the streaming pipeline). Fails fast on
+    /// round skew, out-of-range / duplicate worker ids, decode errors and
+    /// non-finite values — the arrival itself carries the failure, so the
+    /// barrier aborts without waiting for stragglers.
+    pub fn accept(&mut self, msg: &Message, decoder: &Decoder) -> anyhow::Result<()> {
+        let round = self
+            .pending_round
+            .ok_or_else(|| anyhow::anyhow!("accept called outside an open streaming round"))?;
+        anyhow::ensure!(
+            msg.round == round,
+            "worker {}: round skew: got round {}, leader at round {round}",
+            msg.worker,
+            msg.round
+        );
+        let w = msg.worker as usize;
+        anyhow::ensure!(w < self.workers, "worker id {w} out of range (M = {})", self.workers);
+        anyhow::ensure!(!self.arrived[w], "duplicate payload from worker {w} at round {round}");
+        let slot = &mut self.slots[w];
+        decode_and_validate(round, msg, decoder, slot);
+        if let Some(e) = slot.err.take() {
+            return Err(e);
+        }
+        self.arrived[w] = true;
+        self.arrived_count += 1;
+        Ok(())
+    }
+
+    /// Close the streaming round: every worker must have arrived; runs the
+    /// reduce (shard-parallel when the pool exists, `mean_into` otherwise
+    /// — bitwise-identical either way) and returns the average, valid
+    /// until the next round begins.
+    pub fn finish_round(&mut self) -> anyhow::Result<&[f32]> {
+        anyhow::ensure!(
+            self.pending_round.take().is_some(),
+            "finish_round called outside an open streaming round"
+        );
+        anyhow::ensure!(
+            self.arrived_count == self.workers,
+            "expected {} payloads, got {}",
+            self.workers,
+            self.arrived_count
+        );
+        self.reduce_avg();
+        Ok(&self.avg)
+    }
+
+    /// Average the M decoded slots into `avg` — zero, add in worker-id
+    /// order, scale by 1/M — on the pool (disjoint shards) when present,
+    /// else via `ops::mean_into`. Both orderings are element-wise
+    /// identical, so every mode shares this reduce.
+    fn reduce_avg(&mut self) {
+        match &self.pool {
+            None => {
+                let refs: Vec<&[f32]> = self.slots.iter().map(|s| s.buf.as_slice()).collect();
+                ops::mean_into(&refs, &mut self.avg);
+            }
+            Some(pool) => {
+                let inv = 1.0 / self.workers as f32;
+                let shard_elems = self.shard_elems;
+                let slots = &self.slots;
+                let mut shards: Vec<&mut [f32]> = self.avg.chunks_mut(shard_elems).collect();
+                pool.parallel_for_mut(&mut shards, |s, shard| {
+                    let off = s * shard_elems;
+                    for x in shard.iter_mut() {
+                        *x = 0.0;
+                    }
+                    for slot in slots {
+                        let src = &slot.buf[off..off + shard.len()];
+                        for (a, &b) in shard.iter_mut().zip(src) {
+                            *a += b;
+                        }
+                    }
+                    for x in shard.iter_mut() {
+                        *x *= inv;
+                    }
+                });
+            }
+        }
     }
 
     /// Seed-equivalent path: decode and validate worker by worker on the
@@ -154,10 +274,7 @@ impl Aggregator {
                 return Err(e);
             }
         }
-        // Identical operation order to the sharded reduce: zero, add in
-        // worker order, scale by 1/M (this is `ops::mean_into`).
-        let refs: Vec<&[f32]> = self.slots.iter().map(|s| s.buf.as_slice()).collect();
-        ops::mean_into(&refs, &mut self.avg);
+        self.reduce_avg();
         Ok(())
     }
 
@@ -185,25 +302,7 @@ impl Aggregator {
             }
         }
         // Stage 2: disjoint output shards, each reduced in worker order.
-        let inv = 1.0 / msgs.len() as f32;
-        let shard_elems = self.shard_elems;
-        let slots = &self.slots;
-        let mut shards: Vec<&mut [f32]> = self.avg.chunks_mut(shard_elems).collect();
-        pool.parallel_for_mut(&mut shards, |s, shard| {
-            let off = s * shard_elems;
-            for x in shard.iter_mut() {
-                *x = 0.0;
-            }
-            for slot in slots {
-                let src = &slot.buf[off..off + shard.len()];
-                for (a, &b) in shard.iter_mut().zip(src) {
-                    *a += b;
-                }
-            }
-            for x in shard.iter_mut() {
-                *x *= inv;
-            }
-        });
+        self.reduce_avg();
         Ok(())
     }
 }
@@ -282,6 +381,75 @@ mod tests {
         for i in 0..d {
             assert_eq!(a[i].to_bits(), b[i].to_bits(), "element {i} differs");
         }
+    }
+
+    #[test]
+    fn streaming_accepts_any_arrival_order_bitwise_identically() {
+        let d = 999;
+        let m = 5;
+        let c = LinfStochastic::with_bits(8);
+        let mut rng = Pcg32::new(0xFEED);
+        let msgs: Vec<Message> = (0..m)
+            .map(|w| {
+                let v = rng.normal_vec(d);
+                let mut wire = Vec::new();
+                c.compress_encoded(&v, &mut rng, &mut wire);
+                Message::payload(w as u32, 4, wire)
+            })
+            .collect();
+        let decoder: Decoder = Arc::new(move |b: &[u8], out: &mut [f32]| c.decode_into(b, out));
+        let mut seq = Aggregator::new(AggregatorConfig::sequential(), d, m);
+        let oracle = seq.aggregate(4, &msgs, &decoder).unwrap().to_vec();
+        // Worst-case arrival order: straggler-first reversal.
+        let mut agg = Aggregator::new(
+            AggregatorConfig { mode: AggMode::Streaming, threads: 3, shard_elems: 128 },
+            d,
+            m,
+        );
+        agg.begin_round(4);
+        for msg in msgs.iter().rev() {
+            agg.accept(msg, &decoder).unwrap();
+        }
+        let avg = agg.finish_round().unwrap();
+        for i in 0..d {
+            assert_eq!(oracle[i].to_bits(), avg[i].to_bits(), "element {i}");
+        }
+    }
+
+    #[test]
+    fn streaming_guards_the_barrier_invariants() {
+        let dec = identity_decoder();
+        let mut agg = Aggregator::new(AggregatorConfig::streaming(), 2, 2);
+        // accept/finish outside an open round.
+        assert!(agg.accept(&payload_of(0, 0, &[1.0, 2.0]), &dec).is_err());
+        assert!(agg.finish_round().is_err());
+        agg.begin_round(0);
+        agg.accept(&payload_of(1, 0, &[1.0, 2.0]), &dec).unwrap();
+        // Duplicate arrival, round skew, out-of-range id.
+        assert!(agg.accept(&payload_of(1, 0, &[1.0, 2.0]), &dec).is_err());
+        let skew = agg.accept(&payload_of(0, 3, &[1.0, 2.0]), &dec).unwrap_err();
+        assert!(skew.to_string().contains("round skew"), "{skew}");
+        assert!(agg.accept(&payload_of(9, 0, &[1.0, 2.0]), &dec).is_err());
+        // Missing a worker: finish fails and closes the round.
+        let err = agg.finish_round().unwrap_err();
+        assert!(err.to_string().contains("expected 2 payloads, got 1"), "{err}");
+        // A fresh round recovers cleanly after the abort.
+        agg.begin_round(7);
+        agg.accept(&payload_of(0, 7, &[2.0, 4.0]), &dec).unwrap();
+        agg.accept(&payload_of(1, 7, &[4.0, 2.0]), &dec).unwrap();
+        assert_eq!(agg.finish_round().unwrap(), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn streaming_batch_aggregate_matches_sequential() {
+        let d = 6;
+        let msgs = vec![
+            payload_of(0, 0, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            payload_of(1, 0, &[6.0, 5.0, 4.0, 3.0, 2.0, 1.0]),
+        ];
+        let mut agg = Aggregator::new(AggregatorConfig::streaming(), d, 2);
+        let avg = agg.aggregate(0, &msgs, &identity_decoder()).unwrap();
+        assert_eq!(avg, &[3.5; 6]);
     }
 
     #[test]

@@ -39,6 +39,13 @@ pub struct RoundRecord {
     pub bytes_up: usize,
     /// Wall-clock of the round as seen by the leader.
     pub wall_secs: f64,
+    /// Leader time spent blocked waiting on worker payloads (the network/
+    /// straggler component of `wall_secs`). Under the streaming engine,
+    /// decode work overlaps this wait, so `wait_secs + agg_secs` shrinks
+    /// relative to the barrier paths on skewed arrivals.
+    pub wait_secs: f64,
+    /// Leader time spent in decode + reduce (the compute component).
+    pub agg_secs: f64,
     /// Mean losses (when the model reports them).
     pub loss_g: Option<f32>,
     pub loss_d: Option<f32>,

@@ -8,12 +8,19 @@
 //! bitwise-identical to the sequential baseline kept behind
 //! [`crate::config::AggMode::Sequential`] (see `ps/aggregate.rs` for the
 //! determinism argument and `tests/integration_aggregate.rs` for the
-//! regression proof).
+//! regression proof). [`crate::config::AggMode::Streaming`] replaces the
+//! gather-then-aggregate barrier with an event-driven round: payloads are
+//! decoded as their frames arrive (off [`ServerEnd::recv_round_streaming`]),
+//! so decode work overlaps the wait for stragglers instead of serializing
+//! behind the slowest worker — same bits out, less wall-clock per round.
+//! Each [`RoundRecord`] splits the leader's round time into `wait_secs`
+//! (blocked on the network) and `agg_secs` (decode + reduce) so the A/B
+//! benchmarks can show the overlap directly.
 
 use super::aggregate::{Aggregator, Decoder};
 use super::RoundRecord;
 use crate::comm::{Message, ServerEnd};
-use crate::config::AggregatorConfig;
+use crate::config::{AggMode, AggregatorConfig};
 use crate::util::bytes::put_f32_slice;
 use crate::util::stats::norm2_sq;
 use crate::util::timer::Stopwatch;
@@ -44,14 +51,44 @@ pub fn serve_rounds_with(
 ) -> anyhow::Result<Vec<RoundRecord>> {
     let m = transport.workers();
     anyhow::ensure!(m > 0, "no workers");
+    let streaming = agg_cfg.mode == AggMode::Streaming;
     let mut agg = Aggregator::new(agg_cfg, dim, m);
     let mut records = Vec::with_capacity(rounds as usize);
     for round in 0..rounds {
         let sw = Stopwatch::start();
-        let msgs = transport.recv_round()?;
-        let bytes_up: usize = msgs.iter().map(|msg| msg.payload.len()).sum();
-        // Decode × M, validate, average (line 11) — sharded or sequential.
-        let avg = agg.aggregate(round, &msgs, &decoder)?;
+        let mut bytes_up = 0usize;
+        let mut agg_secs = 0.0f64;
+        let wait_secs;
+        let avg: &[f32] = if streaming {
+            // Event-driven round: each payload decodes the moment its
+            // frame lands, overlapping decode with the wait for the
+            // remaining workers; the reduce runs once the barrier is full.
+            agg.begin_round(round);
+            transport.recv_round_streaming(&mut |msg| {
+                bytes_up += msg.payload.len();
+                let t = Stopwatch::start();
+                let res = agg.accept(&msg, &decoder);
+                agg_secs += t.elapsed_secs();
+                res
+            })?;
+            // Time not spent decoding during the gather was spent blocked
+            // on arrivals.
+            wait_secs = (sw.elapsed_secs() - agg_secs).max(0.0);
+            let t = Stopwatch::start();
+            let avg = agg.finish_round()?;
+            agg_secs += t.elapsed_secs();
+            avg
+        } else {
+            let msgs = transport.recv_round()?;
+            wait_secs = sw.elapsed_secs();
+            bytes_up = msgs.iter().map(|msg| msg.payload.len()).sum();
+            // Decode × M, validate, average (line 11) — sharded or
+            // sequential.
+            let t = Stopwatch::start();
+            let avg = agg.aggregate(round, &msgs, &decoder)?;
+            agg_secs = t.elapsed_secs();
+            avg
+        };
         let avg_payload_norm_sq = norm2_sq(avg);
         // Broadcast q̄ as raw f32 (the downlink is full-precision; the
         // paper quantizes the uplink only — see DESIGN.md FIG4 notes).
@@ -65,6 +102,8 @@ pub fn serve_rounds_with(
             avg_payload_norm_sq,
             bytes_up,
             wall_secs: sw.elapsed_secs(),
+            wait_secs,
+            agg_secs,
             ..Default::default()
         };
         on_round(&rec);
@@ -119,7 +158,7 @@ mod tests {
 
     #[test]
     fn sequential_flag_produces_the_same_broadcast() {
-        for mode in [AggMode::Sequential, AggMode::Sharded] {
+        for mode in [AggMode::Sequential, AggMode::Sharded, AggMode::Streaming] {
             let (mut server, mut workers, _) = inproc_cluster(2);
             for (i, w) in workers.iter_mut().enumerate() {
                 let mut wire = Vec::new();
@@ -144,6 +183,31 @@ mod tests {
             let avgs = t.join().unwrap();
             assert_eq!(avgs[0], vec![1.5, -2.0, 0.5], "{mode:?}");
             assert_eq!(avgs[0], avgs[1]);
+        }
+    }
+
+    #[test]
+    fn round_records_split_wait_and_agg_time() {
+        for cfg in [AggregatorConfig::default(), AggregatorConfig::streaming()] {
+            let (mut server, mut workers, _) = inproc_cluster(2);
+            for (i, w) in workers.iter_mut().enumerate() {
+                let mut wire = Vec::new();
+                Identity.encode(&[1.0f32, 2.0], &mut wire);
+                w.send(Message::payload(i as u32, 0, wire)).unwrap();
+            }
+            let t = std::thread::spawn(move || {
+                for w in &mut workers {
+                    w.recv().unwrap();
+                    w.recv().unwrap();
+                }
+            });
+            let recs =
+                serve_rounds_with(&mut server, identity_decoder(), 2, 1, cfg, |_| {}).unwrap();
+            t.join().unwrap();
+            let r = &recs[0];
+            assert!(r.wait_secs >= 0.0 && r.agg_secs >= 0.0);
+            assert!(r.wall_secs >= r.wait_secs, "wall {} < wait {}", r.wall_secs, r.wait_secs);
+            assert!(r.bytes_up > 0);
         }
     }
 

@@ -45,16 +45,17 @@ pub fn worker_loop(
     let id = transport.id();
     let mut stats_hist = Vec::new();
     for round in 0..rounds {
-        // Phase 1: produce and push.
-        let produced = match algo.produce(src, batch, rng) {
-            Ok(p) => p,
+        // Phase 1: produce and push. `produce` returns views into the
+        // worker's reused buffers; the one owned copy happens here, at the
+        // transport boundary, because `Message` owns its payload bytes.
+        let (payload, stats) = match algo.produce(src, batch, rng) {
+            Ok(p) => (p.wire.to_vec(), p.stats),
             Err(e) => {
                 let _ = transport.send(Message::worker_error(id, round, &format!("{e:#}")));
                 return Err(e);
             }
         };
-        let stats = produced.stats.clone();
-        transport.send(Message::payload(id, round, produced.wire))?;
+        transport.send(Message::payload(id, round, payload))?;
         // Phase 2: await broadcast, apply.
         let msg = transport.recv()?;
         match msg.kind {

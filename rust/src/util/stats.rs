@@ -1,11 +1,13 @@
 //! Small statistics helpers shared by metrics, benches and experiments.
 
-/// Mean of a slice (0.0 for empty input).
+/// Mean of a slice (0.0 for empty input). The division happens in f64 —
+/// casting the sum to f32 first would throw away the extra accumulator
+/// precision exactly where it matters (large slices).
 pub fn mean(xs: &[f32]) -> f32 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+    (xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64) as f32
 }
 
 /// Population variance.
@@ -50,11 +52,15 @@ pub fn dist2_sq(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// p-quantile (linear interpolation) of an unsorted slice; p in [0,1].
+/// NaN-safe: `total_cmp` gives NaNs a defined order (by IEEE total
+/// ordering — negative NaNs before −∞, positive NaNs after +∞) instead
+/// of panicking mid-sort the way `partial_cmp().unwrap()` did. With NaN
+/// input the result is well-defined but may itself be NaN.
 pub fn quantile(xs: &[f32], p: f64) -> f32 {
     assert!(!xs.is_empty());
     assert!((0.0..=1.0).contains(&p));
     let mut v: Vec<f32> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f32::total_cmp);
     let idx = p * (v.len() - 1) as f64;
     let lo = idx.floor() as usize;
     let hi = idx.ceil() as usize;
@@ -159,6 +165,55 @@ mod tests {
         assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-6);
         assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-6);
         assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantile_does_not_panic_on_nan() {
+        // Regression: partial_cmp().unwrap() used to panic mid-sort.
+        let xs = [2.0, f32::NAN, 1.0, 3.0];
+        // f32::NAN is a positive NaN, which total_cmp sorts after +∞: the
+        // finite prefix stays ordered. (A sign-bit-set NaN would sort
+        // first instead — either way the sort is total and panic-free.)
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-6);
+        assert!(quantile(&xs, 1.0).is_nan());
+        // Negative NaN sorts before the finite values — still no panic.
+        let neg_nan = f32::from_bits(f32::NAN.to_bits() | 0x8000_0000);
+        let ys = [2.0, neg_nan, 1.0];
+        assert!(quantile(&ys, 0.0).is_nan());
+        assert!((quantile(&ys, 1.0) - 2.0).abs() < 1e-6);
+        let all_nan = [f32::NAN, f32::NAN];
+        assert!(quantile(&all_nan, 0.5).is_nan());
+    }
+
+    #[test]
+    fn mean_divides_in_f64_matches_kahan_reference() {
+        // Property check against a Kahan-compensated f64 oracle over
+        // adversarial inputs: large slices of values whose f32-rounded
+        // running sum drifts.
+        fn kahan_mean(xs: &[f32]) -> f64 {
+            let (mut sum, mut c) = (0.0f64, 0.0f64);
+            for &x in xs {
+                let y = x as f64 - c;
+                let t = sum + y;
+                c = (t - sum) - y;
+                sum = t;
+            }
+            sum / xs.len() as f64
+        }
+        let mut rng = crate::util::rng::Pcg32::new(0x5EED);
+        for &(n, offset) in &[(10usize, 0.0f32), (100_000, 1.0e4), (250_000, -3.0e3)] {
+            let xs: Vec<f32> = (0..n).map(|_| offset + rng.uniform() * 0.125).collect();
+            let want = kahan_mean(&xs);
+            let got = mean(&xs) as f64;
+            // Dividing in f64 keeps the result within rounding distance of
+            // the compensated oracle (the cast-to-f32-then-divide path
+            // stacked two extra f32 roundings on top).
+            let ulp = (want as f32).abs().max(f32::MIN_POSITIVE) as f64 * f32::EPSILON as f64;
+            assert!(
+                (got - want).abs() <= 2.0 * ulp,
+                "n={n} offset={offset}: mean {got} vs kahan {want}"
+            );
+        }
     }
 
     #[test]

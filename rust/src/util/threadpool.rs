@@ -234,6 +234,24 @@ impl CountdownLatch {
             g = self.cv.wait(g).unwrap();
         }
     }
+
+    /// Block until the count reaches zero or `timeout` elapses. Returns
+    /// `true` if the latch opened — the bounded-wait variant the
+    /// streaming-arrival tests use so a broken engine fails an assertion
+    /// instead of deadlocking CI.
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.lock.lock().unwrap();
+        while self.remaining.load(Ordering::SeqCst) > 0 {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -322,6 +340,23 @@ mod tests {
             }
         });
         latch.wait();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn latch_wait_timeout_reports_outcome() {
+        use std::time::Duration;
+        // Never opened: times out and reports false.
+        let stuck = CountdownLatch::new(1);
+        assert!(!stuck.wait_timeout(Duration::from_millis(10)));
+        // Already open: returns true immediately.
+        let open = CountdownLatch::new(0);
+        assert!(open.wait_timeout(Duration::from_millis(1)));
+        // Opened concurrently: returns true within the budget.
+        let latch = Arc::new(CountdownLatch::new(1));
+        let l2 = Arc::clone(&latch);
+        let t = std::thread::spawn(move || l2.count_down());
+        assert!(latch.wait_timeout(Duration::from_secs(10)));
         t.join().unwrap();
     }
 }

@@ -1,8 +1,10 @@
-//! Regression: the sharded leader aggregation path is **bitwise
-//! identical** to the sequential baseline — the guarantee that makes
-//! `--agg sharded|sequential` a pure performance A/B switch. Exercised
-//! over real wire payloads for QSGD, sign and top-k at M ∈ {1, 4, 8},
-//! plus an independent check against the seed's `mean_into` arithmetic.
+//! Regression: the sharded and streaming leader aggregation paths are
+//! **bitwise identical** to the sequential baseline — the guarantee that
+//! makes `--agg sharded|sequential|streaming` a pure performance switch.
+//! Exercised over real wire payloads for QSGD, sign and top-k at
+//! M ∈ {1, 4, 8} (the streaming engine additionally fed in scrambled
+//! arrival order), plus an independent check against the seed's
+//! `mean_into` arithmetic.
 
 use dqgan::comm::Message;
 use dqgan::compress::compressor_from_spec;
@@ -59,6 +61,47 @@ fn sharded_leader_is_bitwise_identical_to_sequential() {
                         "{spec} M={m} d={d}: element {i} differs ({} vs {})",
                         a[i],
                         b[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_leader_is_bitwise_identical_in_any_arrival_order() {
+    // Same matrix as above, but through the event-driven
+    // begin_round/accept/finish_round engine with a rotated + reversed
+    // arrival order per case — arrival order must not change a single bit.
+    let mut rng = Pcg32::new(0xA66_2027);
+    for spec in ["qsgd8", "sign", "topk(f=0.1)"] {
+        for &m in &[1usize, 4, 8] {
+            for &d in &[1usize, 63, 1024, 4096, 100_003] {
+                let msgs = round_payloads(spec, m, d, 5, &mut rng);
+                let dec = decoder_for(spec);
+                let mut seq = Aggregator::new(AggregatorConfig::sequential(), d, m);
+                let oracle = seq.aggregate(5, &msgs, &dec).unwrap().to_vec();
+                let mut stream = Aggregator::new(
+                    AggregatorConfig {
+                        mode: AggMode::Streaming,
+                        threads: 3,
+                        shard_elems: 1024,
+                    },
+                    d,
+                    m,
+                );
+                stream.begin_round(5);
+                // Scrambled arrival: rotate by one, then reverse.
+                for i in 0..m {
+                    let j = m - 1 - ((i + 1) % m);
+                    stream.accept(&msgs[j], &dec).unwrap();
+                }
+                let avg = stream.finish_round().unwrap();
+                for i in 0..d {
+                    assert_eq!(
+                        oracle[i].to_bits(),
+                        avg[i].to_bits(),
+                        "{spec} M={m} d={d}: element {i} differs in streaming mode"
                     );
                 }
             }

@@ -57,22 +57,25 @@ fn error_feedback_memory_is_exactly_p_minus_q() {
     let mut prev_err = vec![0.0f32; d];
     for _ in 0..20 {
         // p = η·F(w−½) + e_{t−1}; the worker's new error must equal p − q.
-        let prod = wk.produce(&mut gan, 8, &mut rng).unwrap();
+        let (dense, stats) = {
+            let prod = wk.produce(&mut gan, 8, &mut rng).unwrap();
+            (prod.dense.to_vec(), prod.stats)
+        };
         // Verify via norms: ‖e_t‖² from stats equals ‖p − q‖², where p can
         // be reconstructed as q + e_t.
         let e_now = wk.error().to_vec();
         let p_reconstructed: Vec<f32> =
-            prod.dense.iter().zip(&e_now).map(|(q, e)| q + e).collect();
+            dense.iter().zip(&e_now).map(|(q, e)| q + e).collect();
         // EF identity: reconstructed p is finite and the error is not the
         // previous error unless quantization was exact.
         assert!(p_reconstructed.iter().all(|x| x.is_finite()));
         assert_eq!(
             dqgan::util::stats::norm2_sq(&e_now),
-            prod.stats.err_norm_sq,
+            stats.err_norm_sq,
             "stats must report the live error norm"
         );
         prev_err = e_now;
-        wk.apply(&prod.dense);
+        wk.apply(&dense);
     }
     // Error memory is alive (coarse 4-bit quantizer ⇒ nonzero residual).
     assert!(dqgan::util::stats::norm2_sq(&prev_err) > 0.0);

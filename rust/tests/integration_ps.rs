@@ -2,13 +2,18 @@
 //! byte accounting, worker synchronization and failure handling.
 
 use dqgan::algo::AlgoKind;
-use dqgan::comm::{inproc_cluster, Message, MsgKind, WorkerEnd};
 use dqgan::comm::tcp::{TcpServerBuilder, TcpWorkerEnd};
+use dqgan::comm::{inproc_cluster, Message, MsgKind, ServerEnd, WorkerEnd};
 use dqgan::compress::{Compressor, Identity};
+use dqgan::config::{AggMode, AggregatorConfig};
 use dqgan::grad::QuadraticOperator;
 use dqgan::optim::LrSchedule;
-use dqgan::ps::{run_cluster, serve_rounds, worker_loop, ClusterConfig};
+use dqgan::ps::{
+    run_cluster, serve_rounds, serve_rounds_with, worker_loop, Aggregator, ClusterConfig,
+    Decoder,
+};
 use dqgan::util::rng::Pcg32;
+use dqgan::util::threadpool::CountdownLatch;
 use std::sync::Arc;
 
 #[test]
@@ -115,6 +120,172 @@ fn tcp_transport_runs_a_real_training_round_trip() {
         worker_handles.into_iter().map(|h| h.join().unwrap()).collect();
     // All workers end with identical parameters (synchronous PS invariant).
     assert_eq!(summaries[0].final_params, summaries[1].final_params);
+    assert!(server.counter().up_total() > 0);
+}
+
+#[test]
+fn streaming_decodes_early_arrivals_before_the_straggler_lands() {
+    // The headline overlap property, proven by construction rather than
+    // timing: worker 3 refuses to send until the leader has decoded the
+    // other three payloads. Only a decode-on-arrival engine can make that
+    // progress; a gather-everything-first barrier would leave the gate
+    // closed (the bounded wait then turns the deadlock into a
+    // deterministic assertion failure instead of a CI hang).
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let m = 4usize;
+    let d = 64usize;
+    let (mut server, workers, _) = inproc_cluster(m);
+    let gate = Arc::new(CountdownLatch::new(1));
+    let released = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for (i, mut w) in workers.into_iter().enumerate() {
+        let gate = Arc::clone(&gate);
+        let released = Arc::clone(&released);
+        handles.push(std::thread::spawn(move || {
+            if i == 3 {
+                if gate.wait_timeout(std::time::Duration::from_secs(30)) {
+                    released.store(true, Ordering::SeqCst);
+                }
+            }
+            let v = vec![i as f32; d];
+            let mut wire = Vec::new();
+            Identity.encode(&v, &mut wire);
+            w.send(Message::payload(i as u32, 0, wire)).unwrap();
+            let b = w.recv().unwrap();
+            assert_eq!(b.kind, MsgKind::Broadcast);
+        }));
+    }
+    let decoder: Decoder = Arc::new(|b: &[u8], out: &mut [f32]| Identity.decode_into(b, out));
+    let mut agg = Aggregator::new(AggregatorConfig::streaming(), d, m);
+    agg.begin_round(0);
+    let mut decoded_before_release = 0usize;
+    server
+        .recv_round_streaming(&mut |msg| {
+            let res = agg.accept(&msg, &decoder);
+            if !released.load(Ordering::SeqCst) {
+                decoded_before_release += 1;
+                if decoded_before_release == m - 1 {
+                    // Three payloads already decoded — release the
+                    // straggler (exactly once: its own payload arrives
+                    // only after it observed the open gate).
+                    gate.count_down();
+                }
+            }
+            res
+        })
+        .unwrap();
+    let avg = agg.finish_round().unwrap().to_vec();
+    assert_eq!(avg, vec![(0.0 + 1.0 + 2.0 + 3.0) / m as f32; d]);
+    server.broadcast(Message::broadcast(0, Vec::new())).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        released.load(Ordering::SeqCst),
+        "straggler must have been released by decode progress, not by timeout"
+    );
+    assert!(
+        decoded_before_release >= m - 1,
+        "only {decoded_before_release} payloads decoded before the straggler sent"
+    );
+}
+
+#[test]
+fn streaming_cluster_is_bitwise_identical_to_sequential() {
+    // End-to-end A/B across the full distributed stack: identical seeds ⇒
+    // identical payload streams, and the order-invariant streaming reduce
+    // must reproduce the sequential trajectory bit for bit.
+    let run = |mode: AggMode| {
+        let cfg = ClusterConfig {
+            algo: AlgoKind::parse("dqgan:linf8").unwrap(),
+            workers: 4,
+            batch: 8,
+            rounds: 50,
+            lr: LrSchedule::constant(0.05),
+            seed: 42,
+            eval_every: 0,
+            keep_stats: false,
+            agg: AggregatorConfig { mode, ..Default::default() },
+        };
+        run_cluster(&cfg, |_m| {
+            let mut rng = Pcg32::new(7);
+            Ok(Box::new(QuadraticOperator::new(64, 0.1, &mut rng)))
+        })
+        .unwrap()
+    };
+    let seq = run(AggMode::Sequential);
+    let stream = run(AggMode::Streaming);
+    assert_eq!(seq.worker0.final_params, stream.worker0.final_params);
+    assert_eq!(stream.records.len(), 50);
+    for r in &stream.records {
+        assert!(r.wait_secs >= 0.0 && r.agg_secs >= 0.0);
+        assert!(r.wall_secs >= r.wait_secs, "wall {} < wait {}", r.wall_secs, r.wait_secs);
+    }
+}
+
+#[test]
+fn tcp_streaming_mode_trains_over_real_sockets() {
+    // Same protocol as the classic TCP test, but the leader runs the
+    // event-driven round engine (per-socket reader threads + arrival
+    // channel) for all 20 rounds.
+    let m = 2usize;
+    let rounds = 20u64;
+    let dim = 16usize;
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let algo = AlgoKind::parse("dqgan:linf8").unwrap();
+
+    let mut worker_handles = Vec::new();
+    let mut seed_rng = Pcg32::new(88);
+    let w0 = {
+        let op = QuadraticOperator::new(dim, 0.1, &mut seed_rng);
+        use dqgan::grad::GradientSource;
+        op.init_params(&mut seed_rng)
+    };
+    for id in 0..m as u32 {
+        let w0 = w0.clone();
+        let algo = algo.clone();
+        worker_handles.push(std::thread::spawn(move || {
+            let mut end = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+            let mut worker = algo.build_worker(w0, LrSchedule::constant(0.05));
+            let mut rng = Pcg32::new(100 + id as u64);
+            let mut src = {
+                let mut r = Pcg32::new(55);
+                QuadraticOperator::new(dim, 0.1, &mut r)
+            };
+            let summary = worker_loop(
+                &mut end,
+                worker.as_mut(),
+                &mut src,
+                4,
+                rounds,
+                &mut rng,
+                false,
+                None,
+            )
+            .unwrap();
+            (summary, end.counter().down_total())
+        }));
+    }
+    let mut server = builder.accept(m).unwrap();
+    let decoder = algo.decoder();
+    let records = serve_rounds_with(
+        &mut server,
+        decoder,
+        dim,
+        rounds,
+        AggregatorConfig::streaming(),
+        |_| {},
+    )
+    .unwrap();
+    assert_eq!(records.len(), rounds as usize);
+    let results: Vec<_> = worker_handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Synchronous PS invariant holds through the streaming engine.
+    assert_eq!(results[0].0.final_params, results[1].0.final_params);
+    // Worker downlink telemetry counts the broadcast + shutdown frames.
+    for (_, down) in &results {
+        assert!(*down > 0, "worker downlink bytes must be counted");
+    }
     assert!(server.counter().up_total() > 0);
 }
 
