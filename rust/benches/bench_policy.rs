@@ -1,0 +1,137 @@
+//! PERF/A-B: round-completion policies under a **scripted straggler** —
+//! the scenario the policy engine exists for. Worker `M−1`'s payload is
+//! held behind a [`DelayPlan`] gate every round, so under the `full`
+//! barrier the leader cannot make progress until the gate opens, while
+//! `kofm:M−1` closes each round on the M−1 prompt workers and
+//! `deadline:MS` closes a grace window after the quorum.
+//!
+//! The straggler is **gate-based, not sleep-based**: the A/B asserts
+//! structural facts the acceptance criteria name —
+//! `workers_included`/`workers_skipped` per round, the gate provably
+//! still held when a partial round's record is produced, and
+//! `wait_secs` covering the grace window under `deadline` — and then
+//! reports the leader's measured round wall-clock for each policy.
+
+use dqgan::benchutil::Bench;
+use dqgan::comm::{inproc_cluster_with_plan, DelayPlan, Message, MsgKind, WorkerEnd};
+use dqgan::compress::compressor_from_spec;
+use dqgan::config::{AggMode, AggregatorConfig, PolicyConfig};
+use dqgan::ps::{serve_rounds_with, Decoder};
+use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+const M: usize = 4;
+const D: usize = 100_003;
+const ROUNDS: u64 = 2;
+const GRACE_MS: u64 = 5;
+
+fn main() {
+    let mut b = if std::env::var_os("DQGAN_BENCH_MS").is_some() {
+        Bench::new("policy")
+    } else {
+        Bench::new("policy").with_budget(Duration::from_millis(400), Duration::from_millis(60))
+    };
+
+    let codec = compressor_from_spec("linf8").unwrap();
+    let mut rng = Pcg32::new(13);
+    let wires: Vec<Vec<u8>> = (0..M)
+        .map(|_| {
+            let v = rng.normal_vec(D);
+            let mut wire = Vec::new();
+            codec.compress_encoded(&v, &mut rng, &mut wire);
+            wire
+        })
+        .collect();
+    let decoder: Decoder = {
+        let c = compressor_from_spec("linf8").unwrap();
+        Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+    };
+
+    let cases: [(&str, PolicyConfig, bool); 3] = [
+        // Baseline: full barrier, no straggler (everyone sends promptly).
+        ("full/no-straggler", PolicyConfig::Full, false),
+        // kofm closes on the prompt workers; the gate is never released
+        // mid-round, proving the round cannot have waited on it.
+        ("kofm/straggler-heldout", PolicyConfig::KofM { k: M - 1 }, true),
+        // deadline waits its grace window, then closes without the
+        // straggler.
+        (
+            "deadline/straggler-heldout",
+            PolicyConfig::Deadline { grace_ms: GRACE_MS, arm_at: M - 1 },
+            true,
+        ),
+    ];
+
+    for (tag, policy, hold) in cases {
+        let decoder = decoder.clone();
+        let wires = wires.clone();
+        b.bench(&format!("scripted-straggler/run/{tag}/M={M}/d={D}"), || {
+            let straggler = (M - 1) as u32;
+            let plan = DelayPlan::new();
+            if hold {
+                for r in 0..ROUNDS {
+                    plan.hold(straggler, r);
+                }
+            }
+            let (mut server, worker_ends, _) = inproc_cluster_with_plan(M, plan.clone());
+            let handles: Vec<_> = worker_ends
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut w)| {
+                    let wire = wires[i].clone();
+                    std::thread::spawn(move || {
+                        for round in 0..ROUNDS {
+                            // A gated send blocks here until released.
+                            if w.send(Message::payload(i as u32, round, wire.clone())).is_err()
+                            {
+                                return; // leader gone (held-out teardown)
+                            }
+                            match w.recv() {
+                                Ok(msg) if msg.kind == MsgKind::Shutdown => return,
+                                Ok(_) => {}
+                                Err(_) => return,
+                            }
+                        }
+                        let _ = w.recv(); // trailing shutdown
+                    })
+                })
+                .collect();
+            let cfg = AggregatorConfig { mode: AggMode::Streaming, policy, ..Default::default() };
+            let plan_probe = plan.clone();
+            let recs =
+                serve_rounds_with(&mut server, decoder.clone(), D, ROUNDS, cfg, |rec| {
+                    if hold {
+                        // Structural proof (acceptance criterion): the
+                        // round closed while the straggler's gate was
+                        // still held — it cannot have been waited on.
+                        assert!(plan_probe.is_held(straggler, rec.round));
+                        assert_eq!(rec.workers_included, M - 1);
+                        assert_eq!(rec.workers_skipped, 1);
+                        if let PolicyConfig::Deadline { grace_ms, .. } = policy {
+                            let grace = grace_ms as f64 / 1e3;
+                            assert!(
+                                rec.wait_secs >= grace * 0.5,
+                                "deadline round must block through the grace window: \
+                                 wait {} < {}",
+                                rec.wait_secs,
+                                grace
+                            );
+                        }
+                    } else {
+                        assert_eq!(rec.workers_included, M);
+                    }
+                })
+                .unwrap();
+            // Open every gate, then tear the cluster down so the blocked
+            // straggler unblocks and exits.
+            plan.release_all();
+            drop(server);
+            for h in handles {
+                h.join().unwrap();
+            }
+            recs.len()
+        });
+    }
+    b.finish();
+}

@@ -127,6 +127,16 @@ impl WorkerAlgo for DqganWorker {
         ops::sub_assign(&mut self.w, avg);
     }
 
+    fn absorb_skipped(&mut self) {
+        // The leader skipped our p̂ this round: e ← e + p̂ restores
+        // e = p − p̂ + p̂ = p = η·F + e_{t−1}, i.e. the full intended
+        // transmission re-enters the error memory and rides into the
+        // next round's line-4/line-6 compensation untouched.
+        for i in 0..self.e.len() {
+            self.e[i] += self.q[i];
+        }
+    }
+
     fn name(&self) -> String {
         format!("dqgan[{}]", self.compressor.name())
     }
@@ -256,6 +266,53 @@ mod tests {
         };
         assert_eq!(w0p, w1p, "wire buffer must not be reallocated per round");
         assert_eq!(d0p, d1p, "dense buffer must not be reallocated per round");
+    }
+
+    #[test]
+    fn absorb_skipped_restores_the_full_intended_transmission() {
+        // Identity compressor ⇒ e is exactly 0 after produce (p̂ = p), so
+        // absorbing a skip must set e to the sent payload bit-for-bit:
+        // the error-memory norm grows from 0 by exactly ‖p̂‖.
+        let mut seed_rng = Pcg32::new(17);
+        let mut op = QuadraticOperator::new(16, 0.1, &mut seed_rng);
+        let w0 = op.init_params(&mut seed_rng);
+        let mut wk = DqganWorker::new(w0, LrSchedule::constant(0.05), Arc::new(Identity));
+        let mut rng = Pcg32::new(23);
+        let prod = wk.produce(&mut op, 4, &mut rng).unwrap();
+        assert_eq!(prod.stats.err_norm_sq, 0.0);
+        let sent = prod.dense.to_vec();
+        assert!(sent.iter().any(|&x| x != 0.0), "payload must be non-trivial");
+        wk.absorb_skipped();
+        for (i, (&e, &q)) in wk.error().iter().zip(&sent).enumerate() {
+            assert_eq!(e.to_bits(), q.to_bits(), "element {i}");
+        }
+    }
+
+    #[test]
+    fn absorb_skipped_adds_the_quantized_payload_to_the_error_memory() {
+        // Lossy compressor: e = p − p̂ after produce; a skip must yield
+        // e' = e + p̂ elementwise (so e' = p — the δ-approximate contract
+        // with Q returning 0).
+        let mut seed_rng = Pcg32::new(19);
+        let mut op = QuadraticOperator::new(32, 0.2, &mut seed_rng);
+        let w0 = op.init_params(&mut seed_rng);
+        let mut wk = DqganWorker::new(
+            w0,
+            LrSchedule::constant(0.05),
+            Arc::new(LinfStochastic::with_bits(4)),
+        );
+        let mut rng = Pcg32::new(29);
+        let q = wk.produce(&mut op, 4, &mut rng).unwrap().dense.to_vec();
+        let e_before = wk.error().to_vec();
+        assert!(e_before.iter().any(|&x| x != 0.0), "coarse quantizer must leave residue");
+        wk.absorb_skipped();
+        for i in 0..q.len() {
+            assert_eq!(
+                wk.error()[i].to_bits(),
+                (e_before[i] + q[i]).to_bits(),
+                "element {i}"
+            );
+        }
     }
 
     #[test]

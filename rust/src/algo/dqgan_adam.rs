@@ -90,6 +90,15 @@ impl WorkerAlgo for DqganAdamWorker {
         self.opt.step(&mut self.w, avg);
     }
 
+    fn absorb_skipped(&mut self) {
+        // Skipped by a partial round: e ← e + p̂ = p = F + e_prev — the
+        // whole intended transmission re-enters the error memory (same
+        // re-absorption as the pure Algorithm-2 worker).
+        for i in 0..self.e.len() {
+            self.e[i] += self.q[i];
+        }
+    }
+
     fn name(&self) -> String {
         format!("dqgan-adam[{}]", self.compressor.name())
     }

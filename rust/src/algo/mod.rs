@@ -82,6 +82,21 @@ pub trait WorkerAlgo: Send {
     /// Phase 2: apply the server-averaged payload.
     fn apply(&mut self, avg: &[f32]);
 
+    /// The leader closed this round **without** our payload (K-of-M /
+    /// deadline round-completion policy): fold the entire transmitted
+    /// payload back into local state so the contribution is delayed, not
+    /// lost. Error-feedback algorithms re-absorb the sent p̂ into the
+    /// error memory (`e ← e + p̂ = p`, exactly as if the δ-approximate
+    /// compressor had returned 0 — a legal 0-approximate round the next
+    /// transmission compensates, so the compressor contract is intact).
+    /// Algorithms without error feedback have nothing to fold the
+    /// payload into and simply drop it (the default no-op) — the same
+    /// information loss CPOAdam-GQ already accepts per round.
+    ///
+    /// Only valid between a [`Self::produce`] and the next one (it
+    /// references the round's reused payload buffer).
+    fn absorb_skipped(&mut self) {}
+
     /// Algorithm name for logs/reports.
     fn name(&self) -> String;
 }

@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::algo::AlgoKind;
-use crate::config::{AggMode, AggregatorConfig};
+use crate::config::{AggMode, AggregatorConfig, PolicyConfig};
 use crate::compress::{
     compressor_from_spec, empirical_delta, gaussian_sampler, heavy_tail_sampler,
     sparse_sampler,
@@ -32,10 +32,25 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     };
     let batch = args.get_parse("batch", default_batch)?;
     let lr = args.get_parse("lr", default_lr)?;
+    let policy = PolicyConfig::parse(&args.get_or("policy", "full"))?;
+    // Partial policies need the per-arrival hook, which only the
+    // streaming engine has: default to it when --agg wasn't given, and
+    // reject an explicit non-streaming choice early with a clear message.
+    let mode = match args.get("agg") {
+        Some(s) => AggMode::parse(&s)?,
+        None if policy != PolicyConfig::Full => AggMode::Streaming,
+        None => AggMode::Sharded,
+    };
+    anyhow::ensure!(
+        policy == PolicyConfig::Full || mode == AggMode::Streaming,
+        "--policy {} requires --agg streaming (got --agg {mode:?})",
+        policy.label()
+    );
     let agg = AggregatorConfig {
-        mode: AggMode::parse(&args.get_or("agg", "sharded"))?,
+        mode,
         threads: args.get_parse("agg-threads", 0usize)?,
         shard_elems: args.get_parse("agg-shard", AggregatorConfig::default().shard_elems)?,
+        policy,
     };
 
     let cfg = ClusterConfig {
@@ -50,9 +65,11 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         agg,
     };
     crate::log_info!(
-        "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr} agg={:?}",
+        "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr} agg={:?} \
+         policy={}",
         cfg.algo.label(),
-        cfg.agg.mode
+        cfg.agg.mode,
+        cfg.agg.policy.label()
     );
 
     let report = if model == "mlp" && native {
@@ -86,13 +103,20 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         }
     }
     table.print();
+    let skipped: usize = report.records.iter().map(|r| r.workers_skipped).sum();
     println!(
-        "done: {} rounds in {:.1}s ({:.1} ms/round), uplink total {}",
+        "done: {} rounds in {:.1}s ({:.1} ms/round), uplink total {}, skipped payloads {}",
         report.records.len(),
         report.wall_secs,
         report.mean_round_secs * 1e3,
-        crate::util::bytes::human_bytes(report.total_bytes_up)
+        crate::util::bytes::human_bytes(report.total_bytes_up),
+        skipped
     );
+    if let Some(p) = args.get("round-csv") {
+        let path = std::path::PathBuf::from(p);
+        let written = crate::telemetry::write_round_records(&path, &report.records)?;
+        println!("wrote per-round telemetry to {written}");
+    }
     Ok(())
 }
 

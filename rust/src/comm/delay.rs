@@ -1,0 +1,143 @@
+//! Deterministic straggler injection for the in-process transport.
+//!
+//! A [`DelayPlan`] is a per-(worker, round) **gate/permit schedule**: the
+//! transport consults it just before a worker's payload frame enters the
+//! uplink channel, and a held gate blocks the send until the controlling
+//! test or benchmark releases it. Because the block happens *before* the
+//! frame becomes visible to the leader, a scripted scenario can assert
+//! structural facts ("this round closed while worker 3's gate was still
+//! held") instead of racing against `sleep` timings — which is how
+//! `benches/bench_policy.rs` and `tests/integration_policy.rs` prove
+//! that K-of-M / deadline rounds close without waiting on a held-out
+//! worker.
+//!
+//! Semantics:
+//! - [`DelayPlan::hold`] gates `(worker, round)`; a later
+//!   [`DelayPlan::release`] opens it (releasing an un-held gate is a
+//!   no-op, so pre-issuing permits is harmless).
+//! - Sends that were never held pass through untouched — a plan-free
+//!   cluster behaves exactly like one built by
+//!   [`super::inproc_cluster`].
+//! - A gate held longer than [`DelayPlan::MAX_WAIT`] panics on the
+//!   blocked worker thread: a forgotten `release` becomes a loud test
+//!   failure rather than a CI hang.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inner {
+    held: Mutex<HashSet<(u32, u64)>>,
+    cv: Condvar,
+}
+
+/// Shared gate/permit schedule (cheaply clonable handle).
+#[derive(Clone)]
+pub struct DelayPlan {
+    inner: Arc<Inner>,
+}
+
+impl Default for DelayPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DelayPlan {
+    /// Upper bound a gated send will block before panicking — converts a
+    /// missing `release` into a failure instead of a hang.
+    pub const MAX_WAIT: Duration = Duration::from_secs(30);
+
+    pub fn new() -> Self {
+        Self { inner: Arc::new(Inner { held: Mutex::new(HashSet::new()), cv: Condvar::new() }) }
+    }
+
+    /// Gate worker `worker`'s round-`round` payload send until released.
+    pub fn hold(&self, worker: u32, round: u64) {
+        self.inner.held.lock().unwrap().insert((worker, round));
+    }
+
+    /// Open the gate for `(worker, round)` (no-op if never held).
+    pub fn release(&self, worker: u32, round: u64) {
+        self.inner.held.lock().unwrap().remove(&(worker, round));
+        self.inner.cv.notify_all();
+    }
+
+    /// Open every gate (teardown safety for scripted scenarios).
+    pub fn release_all(&self) {
+        self.inner.held.lock().unwrap().clear();
+        self.inner.cv.notify_all();
+    }
+
+    /// Whether `(worker, round)` is currently gated — the structural
+    /// assertion scripted benchmarks use ("the round closed while this
+    /// gate was still held").
+    pub fn is_held(&self, worker: u32, round: u64) -> bool {
+        self.inner.held.lock().unwrap().contains(&(worker, round))
+    }
+
+    /// Block while `(worker, round)` is gated (called by the transport
+    /// on the sending worker's thread).
+    pub(crate) fn wait(&self, worker: u32, round: u64) {
+        let start = Instant::now();
+        let mut held = self.inner.held.lock().unwrap();
+        while held.contains(&(worker, round)) {
+            let elapsed = start.elapsed();
+            assert!(
+                elapsed < Self::MAX_WAIT,
+                "DelayPlan gate (worker {worker}, round {round}) held for more than \
+                 {:?} — missing release()?",
+                Self::MAX_WAIT
+            );
+            let (guard, _) =
+                self.inner.cv.wait_timeout(held, Self::MAX_WAIT - elapsed).unwrap();
+            held = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unheld_gates_pass_through_immediately() {
+        let plan = DelayPlan::new();
+        plan.wait(0, 0); // must not block
+        assert!(!plan.is_held(0, 0));
+    }
+
+    #[test]
+    fn release_is_a_permit_when_issued_first() {
+        let plan = DelayPlan::new();
+        plan.release(1, 2); // pre-issued permit: later hold-free wait passes
+        plan.wait(1, 2);
+    }
+
+    #[test]
+    fn held_gate_blocks_until_released() {
+        let plan = DelayPlan::new();
+        plan.hold(3, 7);
+        assert!(plan.is_held(3, 7));
+        let p2 = plan.clone();
+        let h = std::thread::spawn(move || {
+            p2.wait(3, 7); // blocks until the main thread releases
+            true
+        });
+        // The gate only governs (3, 7); other keys pass.
+        plan.wait(3, 8);
+        plan.release(3, 7);
+        assert!(h.join().unwrap());
+        assert!(!plan.is_held(3, 7));
+    }
+
+    #[test]
+    fn release_all_opens_every_gate() {
+        let plan = DelayPlan::new();
+        plan.hold(0, 0);
+        plan.hold(1, 5);
+        plan.release_all();
+        plan.wait(0, 0);
+        plan.wait(1, 5);
+    }
+}

@@ -3,10 +3,15 @@
 //! copies beyond the payload Vec, byte counters still track the *wire*
 //! frame sizes so accounting matches the TCP path exactly.
 
+use super::delay::DelayPlan;
 use super::message::{Message, MsgKind};
-use super::{validate_round_batch, ArrivalSet, ByteCounter, ServerEnd, WorkerEnd};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use super::{
+    validate_round_batch, ArrivalSet, ByteCounter, ServerEnd, StreamDirective, StreamOutcome,
+    WorkerEnd,
+};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Worker side of the in-process transport.
 pub struct InprocWorkerEnd {
@@ -14,10 +19,20 @@ pub struct InprocWorkerEnd {
     to_server: Sender<Message>,
     from_server: Receiver<Message>,
     counter: Arc<ByteCounter>,
+    /// Straggler-injection schedule (tests/benches only; `None` in
+    /// production clusters).
+    plan: Option<DelayPlan>,
 }
 
 impl WorkerEnd for InprocWorkerEnd {
     fn send(&mut self, msg: Message) -> anyhow::Result<()> {
+        // Deterministic straggler injection: a held gate blocks this
+        // payload *before* it becomes visible to the leader.
+        if msg.kind == MsgKind::Payload {
+            if let Some(plan) = &self.plan {
+                plan.wait(msg.worker, msg.round);
+            }
+        }
         self.counter.add_up(msg.frame_len());
         self.to_server.send(msg).map_err(|_| anyhow::anyhow!("server hung up"))
     }
@@ -76,6 +91,36 @@ impl ServerEnd for InprocServerEnd {
         Ok(())
     }
 
+    fn recv_round_streaming_timed(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<StreamDirective>,
+    ) -> anyhow::Result<StreamOutcome> {
+        // Policy-driven gather: frames pop in arrival order off the
+        // shared uplink channel; the callback owns all round bookkeeping
+        // (see the trait docs) and its directive arms/clears the
+        // bounded wait for the next frame.
+        let from_workers = &self.from_workers;
+        super::drive_timed_stream(
+            &mut |deadline| match deadline {
+                None => from_workers
+                    .recv()
+                    .map(Some)
+                    .map_err(|_| anyhow::anyhow!("workers hung up")),
+                Some(dl) => {
+                    let left = dl.saturating_duration_since(Instant::now());
+                    match from_workers.recv_timeout(left) {
+                        Ok(msg) => Ok(Some(msg)),
+                        Err(RecvTimeoutError::Timeout) => Ok(None),
+                        Err(RecvTimeoutError::Disconnected) => {
+                            anyhow::bail!("workers hung up")
+                        }
+                    }
+                }
+            },
+            on_msg,
+        )
+    }
+
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
         for tx in &self.to_workers {
             self.counter.add_down(msg.frame_len());
@@ -92,6 +137,23 @@ impl ServerEnd for InprocServerEnd {
 /// Build an in-process PS cluster with `m` workers. Returns the server
 /// end, the worker ends, and the shared byte counter.
 pub fn inproc_cluster(m: usize) -> (InprocServerEnd, Vec<InprocWorkerEnd>, Arc<ByteCounter>) {
+    build_cluster(m, None)
+}
+
+/// [`inproc_cluster`] with a [`DelayPlan`] attached to every worker end:
+/// payload sends consult the plan's gate/permit schedule, so tests and
+/// benches can script exact arrival orders and holdouts without sleeps.
+pub fn inproc_cluster_with_plan(
+    m: usize,
+    plan: DelayPlan,
+) -> (InprocServerEnd, Vec<InprocWorkerEnd>, Arc<ByteCounter>) {
+    build_cluster(m, Some(plan))
+}
+
+fn build_cluster(
+    m: usize,
+    plan: Option<DelayPlan>,
+) -> (InprocServerEnd, Vec<InprocWorkerEnd>, Arc<ByteCounter>) {
     assert!(m > 0);
     let counter = ByteCounter::new();
     let (up_tx, up_rx) = channel::<Message>();
@@ -105,6 +167,7 @@ pub fn inproc_cluster(m: usize) -> (InprocServerEnd, Vec<InprocWorkerEnd>, Arc<B
             to_server: up_tx.clone(),
             from_server: down_rx,
             counter: Arc::clone(&counter),
+            plan: plan.clone(),
         });
     }
     let server = InprocServerEnd {
@@ -187,6 +250,73 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("injected"), "{err}");
         assert_eq!(count, 0, "error frame must not reach the callback");
+    }
+
+    #[test]
+    fn timed_streaming_closes_on_directive_without_all_frames() {
+        let (mut server, mut workers, _) = inproc_cluster(3);
+        // Only two of three workers ever send: the Close directive must
+        // end the gather without waiting on the third.
+        workers[1].send(Message::payload(1, 0, vec![1])).unwrap();
+        workers[0].send(Message::payload(0, 0, vec![0])).unwrap();
+        let mut seen = Vec::new();
+        let outcome = server
+            .recv_round_streaming_timed(&mut |msg| {
+                seen.push(msg.worker);
+                Ok(if seen.len() == 2 {
+                    StreamDirective::Close
+                } else {
+                    StreamDirective::Wait
+                })
+            })
+            .unwrap();
+        assert_eq!(outcome, StreamOutcome::Closed);
+        assert_eq!(seen, vec![1, 0], "arrival order must be preserved");
+    }
+
+    #[test]
+    fn timed_streaming_reports_deadline_expiry() {
+        let (mut server, mut workers, _) = inproc_cluster(2);
+        workers[0].send(Message::payload(0, 0, vec![])).unwrap();
+        let mut seen = 0usize;
+        let outcome = server
+            .recv_round_streaming_timed(&mut |_msg| {
+                seen += 1;
+                // Arm a short grace window; worker 1 never sends.
+                Ok(StreamDirective::WaitUntil(
+                    Instant::now() + std::time::Duration::from_millis(20),
+                ))
+            })
+            .unwrap();
+        assert_eq!(outcome, StreamOutcome::DeadlineExpired);
+        assert_eq!(seen, 1);
+    }
+
+    #[test]
+    fn delay_plan_gates_payload_sends_deterministically() {
+        let plan = DelayPlan::new();
+        plan.hold(1, 0);
+        let (mut server, workers, _) = inproc_cluster_with_plan(2, plan.clone());
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|mut w| {
+                std::thread::spawn(move || {
+                    let id = w.id();
+                    w.send(Message::payload(id, 0, vec![id as u8])).unwrap();
+                })
+            })
+            .collect();
+        // Worker 0's frame arrives while worker 1's gate is still held —
+        // provable structurally, no sleeps involved.
+        let first = server.from_workers.recv().unwrap();
+        assert_eq!(first.worker, 0);
+        assert!(plan.is_held(1, 0));
+        plan.release(1, 0);
+        let second = server.from_workers.recv().unwrap();
+        assert_eq!(second.worker, 1);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

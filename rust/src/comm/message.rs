@@ -23,6 +23,13 @@ pub enum MsgKind {
     Shutdown = 3,
     /// Worker → server: fatal worker error (failure injection path).
     WorkerError = 4,
+    /// Server → workers: a partially-aggregated broadcast (K-of-M /
+    /// deadline round-completion policies). Payload layout:
+    /// `[n_bitmap:u32][bitmap:n_bitmap bytes][avg: dim × f32]` — bit m of
+    /// the bitmap set ⇔ worker m's payload was included in the average.
+    /// Skipped workers re-absorb their entire sent payload into local
+    /// error memory (see `WorkerAlgo::absorb_skipped`).
+    PartialBroadcast = 5,
 }
 
 impl MsgKind {
@@ -32,6 +39,7 @@ impl MsgKind {
             2 => Self::Broadcast,
             3 => Self::Shutdown,
             4 => Self::WorkerError,
+            5 => Self::PartialBroadcast,
             other => anyhow::bail!("bad message kind {other}"),
         })
     }
@@ -61,6 +69,26 @@ impl Message {
 
     pub fn worker_error(worker: u32, round: u64, what: &str) -> Self {
         Self { kind: MsgKind::WorkerError, worker, round, payload: what.as_bytes().to_vec() }
+    }
+
+    /// Build a [`MsgKind::PartialBroadcast`] frame: the inclusion bitmap
+    /// (bit m set ⇔ worker m's payload entered the average) followed by
+    /// the averaged f32 vector.
+    pub fn partial_broadcast(round: u64, included: &[bool], avg: &[f32]) -> Self {
+        let n_bitmap = included.len().div_ceil(8);
+        let mut payload = Vec::with_capacity(4 + n_bitmap + 4 * avg.len());
+        put_u32(&mut payload, n_bitmap as u32);
+        for chunk in included.chunks(8) {
+            let mut byte = 0u8;
+            for (bit, &inc) in chunk.iter().enumerate() {
+                if inc {
+                    byte |= 1 << bit;
+                }
+            }
+            payload.push(byte);
+        }
+        crate::util::bytes::put_f32_slice(&mut payload, avg);
+        Self { kind: MsgKind::PartialBroadcast, worker: u32::MAX, round, payload }
     }
 
     /// Total frame size on the wire.
@@ -104,6 +132,20 @@ impl Message {
         }
         Ok(Self { kind, worker, round, payload })
     }
+}
+
+/// Read the inclusion-bitmap header of a [`MsgKind::PartialBroadcast`]
+/// payload, leaving the reader positioned at the f32 average.
+pub fn read_inclusion_bitmap<'a>(r: &mut Reader<'a>) -> anyhow::Result<&'a [u8]> {
+    let n = r.u32()? as usize;
+    Ok(r.bytes(n)?)
+}
+
+/// Whether bit `worker` of an inclusion bitmap is set (out-of-range bits
+/// read as not-included).
+pub fn bitmap_included(bitmap: &[u8], worker: u32) -> bool {
+    let idx = worker as usize;
+    bitmap.get(idx / 8).map(|b| (b >> (idx % 8)) & 1 == 1).unwrap_or(false)
 }
 
 /// CRC-32 (IEEE 802.3, reflected), table-driven.
@@ -166,8 +208,30 @@ mod tests {
             Message::broadcast(1, vec![1]),
             Message::shutdown(9),
             Message::worker_error(2, 3, "boom"),
+            Message::partial_broadcast(4, &[true, false, true], &[1.0, -2.0]),
         ] {
             assert_eq!(Message::decode(&m.encode()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn partial_broadcast_bitmap_and_average_round_trip() {
+        // 10 workers forces a two-byte bitmap with a partial tail byte.
+        let included: Vec<bool> = (0..10).map(|w| w % 3 == 0).collect();
+        let avg = [0.5f32, -1.25, 3.0];
+        let m = Message::partial_broadcast(7, &included, &avg);
+        assert_eq!(m.kind, MsgKind::PartialBroadcast);
+        assert_eq!(m.round, 7);
+        let mut r = Reader::new(&m.payload);
+        let bitmap = read_inclusion_bitmap(&mut r).unwrap();
+        assert_eq!(bitmap.len(), 2);
+        for (w, &inc) in included.iter().enumerate() {
+            assert_eq!(bitmap_included(bitmap, w as u32), inc, "worker {w}");
+        }
+        // Out-of-range bits read as skipped.
+        assert!(!bitmap_included(bitmap, 16));
+        assert!(!bitmap_included(bitmap, 1_000_000));
+        assert_eq!(r.f32_vec(3).unwrap(), avg.to_vec());
+        assert_eq!(r.remaining(), 0);
     }
 }

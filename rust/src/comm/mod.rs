@@ -14,17 +14,20 @@
 //! why a byte-accurate transport + [`sim::NetworkModel`] preserves the
 //! quantities Figure 4 measures.
 
+pub mod delay;
 pub mod inproc;
 pub mod message;
 pub mod sim;
 pub mod tcp;
 
-pub use inproc::inproc_cluster;
-pub use message::{Message, MsgKind};
+pub use delay::DelayPlan;
+pub use inproc::{inproc_cluster, inproc_cluster_with_plan};
+pub use message::{bitmap_included, read_inclusion_bitmap, Message, MsgKind};
 pub use sim::NetworkModel;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Validate one gathered barrier batch (shared by every [`ServerEnd`]
 /// implementation): fail fast on `WorkerError` frames and on mixed
@@ -56,6 +59,29 @@ pub fn validate_round_batch(msgs: &[Message]) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// What a timed streaming gather should do next — returned by the
+/// per-arrival callback of [`ServerEnd::recv_round_streaming_timed`]
+/// (the round-completion policy's verdict after each frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamDirective {
+    /// Keep gathering; block indefinitely for the next frame.
+    Wait,
+    /// Keep gathering, but if no frame lands before the instant passes,
+    /// end the gather with [`StreamOutcome::DeadlineExpired`].
+    WaitUntil(Instant),
+    /// The round is complete: stop gathering now.
+    Close,
+}
+
+/// How a timed streaming gather ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamOutcome {
+    /// The callback returned [`StreamDirective::Close`].
+    Closed,
+    /// An armed deadline expired with no further frame.
+    DeadlineExpired,
 }
 
 /// Worker-side endpoint of a PS transport.
@@ -90,10 +116,49 @@ pub trait ServerEnd: Send {
         }
         Ok(())
     }
+    /// Timed, policy-driven variant of [`Self::recv_round_streaming`]:
+    /// frames are handed to `on_msg` in arrival order **unvalidated**
+    /// (the caller owns round bookkeeping — duplicate/skew checks,
+    /// `WorkerError` handling, and draining of late frames from earlier
+    /// partially-aggregated rounds), and the callback's
+    /// [`StreamDirective`] steers the gather: `Close` ends it,
+    /// `WaitUntil` bounds the wait for the *next* frame. Unlike the
+    /// barrier gathers this never requires all M frames — it is the
+    /// transport hook for K-of-M and deadline round policies.
+    fn recv_round_streaming_timed(
+        &mut self,
+        _on_msg: &mut dyn FnMut(Message) -> anyhow::Result<StreamDirective>,
+    ) -> anyhow::Result<StreamOutcome> {
+        anyhow::bail!("this transport does not support timed streaming gathers")
+    }
     /// Broadcast one message to every worker.
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()>;
     /// Number of workers.
     fn workers(&self) -> usize;
+}
+
+/// Shared driver for [`ServerEnd::recv_round_streaming_timed`]: pops
+/// frames from `next_frame` — which must honor the optional deadline and
+/// return `Ok(None)` when it expires with no frame — and dispatches the
+/// policy callback's directives. Both transports implement their timed
+/// gather with this, so the deadline/directive state machine exists
+/// exactly once.
+pub(crate) fn drive_timed_stream(
+    next_frame: &mut dyn FnMut(Option<Instant>) -> anyhow::Result<Option<Message>>,
+    on_msg: &mut dyn FnMut(Message) -> anyhow::Result<StreamDirective>,
+) -> anyhow::Result<StreamOutcome> {
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let msg = match next_frame(deadline)? {
+            Some(msg) => msg,
+            None => return Ok(StreamOutcome::DeadlineExpired),
+        };
+        match on_msg(msg)? {
+            StreamDirective::Wait => deadline = None,
+            StreamDirective::WaitUntil(dl) => deadline = Some(dl),
+            StreamDirective::Close => return Ok(StreamOutcome::Closed),
+        }
+    }
 }
 
 /// Per-barrier arrival bookkeeping shared by the streaming gathers:

@@ -53,6 +53,29 @@ impl NetworkModel {
         self.latency + serialized.max(per_worker)
     }
 
+    /// Uplink time until the **K fastest** of `m` pushes of `bytes_up`
+    /// each have landed — the communication term of a K-of-M partial
+    /// aggregation round (`--policy kofm:K`).
+    ///
+    /// Deterministic straggler model: worker readiness is staggered
+    /// uniformly over `[0, jitter]` seconds (the k-th fastest worker
+    /// starts `jitter·(k−1)/(m−1)` late), and the server NIC serializes
+    /// the k payloads it actually waits for. With `jitter = 0` and
+    /// `k = m` this reduces exactly to [`Self::t_up`]. Monotone
+    /// non-decreasing in `k`: waiting for more workers can only take
+    /// longer — which is precisely the wall-clock the policy trades
+    /// against gradient staleness.
+    pub fn t_up_kofm(&self, bytes_up: usize, m: usize, k: usize, jitter: f64) -> f64 {
+        assert!(m >= 1, "need at least one worker");
+        assert!((1..=m).contains(&k), "K must satisfy 1 <= K <= M (got K={k}, M={m})");
+        assert!(jitter >= 0.0, "jitter must be non-negative");
+        let spread =
+            if m > 1 { jitter * (k - 1) as f64 / (m - 1) as f64 } else { 0.0 };
+        let serialized = (k as f64 * bytes_up as f64) / self.server_bandwidth;
+        let per_worker = bytes_up as f64 / self.worker_bandwidth;
+        self.latency + spread + serialized.max(per_worker)
+    }
+
     /// Downlink time for broadcasting `bytes_down` to `m` workers.
     pub fn t_down(&self, bytes_down: usize, m: usize) -> f64 {
         let serialized = (m as f64 * bytes_down as f64) / self.server_bandwidth;
@@ -119,6 +142,42 @@ mod tests {
         let t = net.t_up(10, 2);
         assert!(t >= net.latency);
         assert!(t < net.latency * 1.1);
+    }
+
+    #[test]
+    fn kofm_uplink_is_monotone_in_k_and_matches_t_up_at_full_barrier() {
+        for net in [NetworkModel::one_gbe(), NetworkModel::ten_gbe()] {
+            let (bytes, m) = (1_000_000usize, 16usize);
+            for jitter in [0.0, 5e-3] {
+                let mut prev = 0.0;
+                for k in 1..=m {
+                    let t = net.t_up_kofm(bytes, m, k, jitter);
+                    assert!(
+                        t >= prev,
+                        "t_up_kofm must be monotone in K: k={k} jitter={jitter} {t} < {prev}"
+                    );
+                    prev = t;
+                }
+                // Waiting for fewer workers is never slower than the
+                // full barrier under the same jitter.
+                assert!(net.t_up_kofm(bytes, m, 1, jitter) <= net.t_up_kofm(bytes, m, m, jitter));
+            }
+            // jitter=0, K=M degenerates to the synchronous incast model.
+            let full = net.t_up_kofm(bytes, m, m, 0.0);
+            assert!((full - net.t_up(bytes, m)).abs() < 1e-12, "{full} vs {}", net.t_up(bytes, m));
+        }
+    }
+
+    #[test]
+    fn kofm_uplink_jitter_spreads_the_tail() {
+        // With nonzero jitter, skipping the slowest workers buys real
+        // time: K = M/2 must be strictly cheaper than the full barrier.
+        let net = NetworkModel::ten_gbe();
+        let (bytes, m) = (100_000usize, 8usize);
+        let jitter = 10e-3;
+        let half = net.t_up_kofm(bytes, m, m / 2, jitter);
+        let full = net.t_up_kofm(bytes, m, m, jitter);
+        assert!(half < full, "half={half} full={full}");
     }
 
     #[test]

@@ -10,11 +10,15 @@
 //! connect: [`TcpServerBuilder::listen`] → spawn workers → `accept(m)`.
 
 use super::message::{Message, MsgKind};
-use super::{validate_round_batch, ArrivalSet, ByteCounter, ServerEnd, WorkerEnd};
+use super::{
+    validate_round_batch, ArrivalSet, ByteCounter, ServerEnd, StreamDirective, StreamOutcome,
+    WorkerEnd,
+};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
+use std::time::Instant;
 
 fn write_frame(stream: &mut TcpStream, msg: &Message) -> anyhow::Result<usize> {
     let frame = msg.encode();
@@ -242,6 +246,40 @@ impl ServerEnd for TcpServerEnd {
         Ok(())
     }
 
+    fn recv_round_streaming_timed(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<StreamDirective>,
+    ) -> anyhow::Result<StreamOutcome> {
+        // Same arrival channel as the untimed gather (reader threads own
+        // the read halves), but the callback owns all round bookkeeping
+        // and its directive bounds the wait for the next frame.
+        self.start_readers()?;
+        let rx = self.readers.as_ref().expect("readers started");
+        let counter = &self.counter;
+        super::drive_timed_stream(
+            &mut |deadline| {
+                let msg = match deadline {
+                    None => rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("all tcp reader threads exited"))??,
+                    Some(dl) => {
+                        let left = dl.saturating_duration_since(Instant::now());
+                        match rx.recv_timeout(left) {
+                            Ok(res) => res?,
+                            Err(RecvTimeoutError::Timeout) => return Ok(None),
+                            Err(RecvTimeoutError::Disconnected) => {
+                                anyhow::bail!("all tcp reader threads exited")
+                            }
+                        }
+                    }
+                };
+                counter.add_up(msg.frame_len() + 4);
+                Ok(Some(msg))
+            },
+            on_msg,
+        )
+    }
+
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
         for s in &mut self.streams {
             let n = write_frame(s, &msg)?;
@@ -337,6 +375,55 @@ mod tests {
         assert!(msgs.iter().all(|m| m.round == 1));
         server.broadcast(Message::broadcast(1, vec![2])).unwrap();
         server.broadcast(Message::shutdown(2)).unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tcp_timed_streaming_closes_early_and_honors_deadlines() {
+        let m = 2;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let workers: Vec<_> = (0..m as u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+                    if id == 0 {
+                        // Worker 0 contributes the single frame of each
+                        // gather; worker 1 stays silent throughout.
+                        w.send(Message::payload(0, 0, vec![7])).unwrap();
+                        w.send(Message::payload(0, 1, vec![8])).unwrap();
+                    }
+                    // Hold the connection open until the server is done
+                    // (recv unblocks with an error when it drops).
+                    let _ = w.recv();
+                })
+            })
+            .collect();
+        let mut server = builder.accept(m).unwrap();
+        // Gather 1: close on the first frame — no waiting on worker 1.
+        let mut seen = Vec::new();
+        let outcome = server
+            .recv_round_streaming_timed(&mut |msg| {
+                seen.push((msg.worker, msg.round));
+                Ok(StreamDirective::Close)
+            })
+            .unwrap();
+        assert_eq!(outcome, StreamOutcome::Closed);
+        assert_eq!(seen, vec![(0, 0)]);
+        // Gather 2: arm a short grace after worker 0's frame; worker 1
+        // never sends, so the deadline must expire.
+        let outcome = server
+            .recv_round_streaming_timed(&mut |msg| {
+                assert_eq!((msg.worker, msg.round), (0, 1));
+                Ok(StreamDirective::WaitUntil(
+                    Instant::now() + std::time::Duration::from_millis(20),
+                ))
+            })
+            .unwrap();
+        assert_eq!(outcome, StreamOutcome::DeadlineExpired);
+        drop(server); // unblocks the workers' trailing recv
         for w in workers {
             w.join().unwrap();
         }

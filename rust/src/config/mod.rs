@@ -39,6 +39,73 @@ impl AggMode {
     }
 }
 
+/// Round-completion policy: after each accepted arrival the streaming
+/// leader asks "does this round close now, or keep waiting?". The
+/// runtime engine is built from this in `ps/policy.rs`; anything other
+/// than [`PolicyConfig::Full`] requires [`AggMode::Streaming`] (the
+/// barrier paths have no per-arrival hook to consult).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyConfig {
+    /// Synchronous barrier semantics: wait for all M payloads (default).
+    Full,
+    /// Close as soon as `k` of the M payloads have been accepted. The
+    /// remaining workers are skipped for the round; the broadcast's
+    /// inclusion bitmap tells them to fold their entire sent payload
+    /// back into local error memory, so nothing is lost — only delayed.
+    KofM { k: usize },
+    /// Arm a grace timer when the `arm_at`-th payload is accepted; the
+    /// round closes when all M have landed or the timer expires,
+    /// whichever comes first (skipping whoever is still in flight).
+    Deadline { grace_ms: u64, arm_at: usize },
+}
+
+impl PolicyConfig {
+    /// Parse a CLI string: `full`, `kofm:K` or `deadline:MS[,K]` (grace
+    /// of MS milliseconds armed at the K-th arrival; K defaults to 1).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let lowered = s.trim().to_ascii_lowercase();
+        let (name, arg) = match lowered.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (lowered.as_str(), None),
+        };
+        match (name, arg) {
+            ("full" | "all", None) => Ok(Self::Full),
+            ("kofm", Some(k)) => {
+                let k: usize =
+                    k.parse().map_err(|e| anyhow::anyhow!("bad K in 'kofm:{k}': {e}"))?;
+                anyhow::ensure!(k >= 1, "kofm needs K >= 1");
+                Ok(Self::KofM { k })
+            }
+            ("deadline", Some(a)) => {
+                let (ms, arm_at) = match a.split_once(',') {
+                    Some((ms, k)) => {
+                        let k: usize = k
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad K in 'deadline:{a}': {e}"))?;
+                        (ms, k)
+                    }
+                    None => (a, 1),
+                };
+                let grace_ms: u64 = ms
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad MS in 'deadline:{a}': {e}"))?;
+                anyhow::ensure!(arm_at >= 1, "deadline needs K >= 1");
+                Ok(Self::Deadline { grace_ms, arm_at })
+            }
+            _ => anyhow::bail!("unknown round policy '{s}' (full|kofm:K|deadline:MS[,K])"),
+        }
+    }
+
+    /// Display label for logs and error messages.
+    pub fn label(&self) -> String {
+        match self {
+            Self::Full => "full".into(),
+            Self::KofM { k } => format!("kofm:{k}"),
+            Self::Deadline { grace_ms, arm_at } => format!("deadline:{grace_ms},{arm_at}"),
+        }
+    }
+}
+
 /// Leader aggregation configuration.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct AggregatorConfig {
@@ -49,11 +116,19 @@ pub struct AggregatorConfig {
     /// 64 KiB) keeps a shard inside L2 while giving enough shards to
     /// fill the pool on DCGAN-sized vectors.
     pub shard_elems: usize,
+    /// Round-completion policy ([`PolicyConfig::Full`] = today's
+    /// barrier; anything else needs [`AggMode::Streaming`]).
+    pub policy: PolicyConfig,
 }
 
 impl Default for AggregatorConfig {
     fn default() -> Self {
-        Self { mode: AggMode::Sharded, threads: 0, shard_elems: 16 * 1024 }
+        Self {
+            mode: AggMode::Sharded,
+            threads: 0,
+            shard_elems: 16 * 1024,
+            policy: PolicyConfig::Full,
+        }
     }
 }
 
@@ -66,6 +141,11 @@ impl AggregatorConfig {
     /// Streaming (decode-on-arrival) configuration.
     pub fn streaming() -> Self {
         Self { mode: AggMode::Streaming, ..Self::default() }
+    }
+
+    /// Streaming configuration with a round-completion policy.
+    pub fn streaming_with_policy(policy: PolicyConfig) -> Self {
+        Self { mode: AggMode::Streaming, policy, ..Self::default() }
     }
 
     /// Resolve `threads` to a concrete pool size.
@@ -104,7 +184,46 @@ mod tests {
     fn default_is_sharded_with_auto_threads() {
         let cfg = AggregatorConfig::default();
         assert_eq!(cfg.mode, AggMode::Sharded);
+        assert_eq!(cfg.policy, PolicyConfig::Full);
         assert!(cfg.resolved_threads() >= 1);
         assert_eq!(AggregatorConfig::sequential().mode, AggMode::Sequential);
+    }
+
+    #[test]
+    fn parses_policies() {
+        assert_eq!(PolicyConfig::parse("full").unwrap(), PolicyConfig::Full);
+        assert_eq!(PolicyConfig::parse("ALL").unwrap(), PolicyConfig::Full);
+        assert_eq!(PolicyConfig::parse("kofm:3").unwrap(), PolicyConfig::KofM { k: 3 });
+        assert_eq!(
+            PolicyConfig::parse("deadline:50").unwrap(),
+            PolicyConfig::Deadline { grace_ms: 50, arm_at: 1 }
+        );
+        assert_eq!(
+            PolicyConfig::parse("deadline:50,2").unwrap(),
+            PolicyConfig::Deadline { grace_ms: 50, arm_at: 2 }
+        );
+        assert!(PolicyConfig::parse("kofm:0").is_err());
+        assert!(PolicyConfig::parse("kofm").is_err());
+        assert!(PolicyConfig::parse("deadline:abc").is_err());
+        assert!(PolicyConfig::parse("deadline:10,0").is_err());
+        assert!(PolicyConfig::parse("wat").is_err());
+    }
+
+    #[test]
+    fn policy_labels_round_trip_through_parse() {
+        for p in [
+            PolicyConfig::Full,
+            PolicyConfig::KofM { k: 4 },
+            PolicyConfig::Deadline { grace_ms: 25, arm_at: 2 },
+        ] {
+            assert_eq!(PolicyConfig::parse(&p.label()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn streaming_with_policy_preset() {
+        let cfg = AggregatorConfig::streaming_with_policy(PolicyConfig::KofM { k: 2 });
+        assert_eq!(cfg.mode, AggMode::Streaming);
+        assert_eq!(cfg.policy, PolicyConfig::KofM { k: 2 });
     }
 }

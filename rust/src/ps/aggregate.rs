@@ -221,31 +221,78 @@ impl Aggregator {
             self.workers,
             self.arrived_count
         );
-        self.reduce_avg();
+        self.reduce_mean(false);
         Ok(&self.avg)
     }
 
-    /// Average the M decoded slots into `avg` — zero, add in worker-id
-    /// order, scale by 1/M — on the pool (disjoint shards) when present,
-    /// else via `ops::mean_into`. Both orderings are element-wise
-    /// identical, so every mode shares this reduce.
-    fn reduce_avg(&mut self) {
+    /// Number of payloads accepted into the currently-open (or just
+    /// closed) streaming round.
+    pub fn arrived_count(&self) -> usize {
+        self.arrived_count
+    }
+
+    /// Per-worker arrival flags of the currently-open (or just closed)
+    /// streaming round — the inclusion set a partial broadcast carries.
+    /// Valid until the next [`Self::begin_round`].
+    pub fn included(&self) -> &[bool] {
+        &self.arrived
+    }
+
+    /// Close a streaming round over **the subset of workers that
+    /// arrived** (K-of-M / deadline partial aggregation): averages the
+    /// included slots only, added in worker-id order and scaled by
+    /// 1/#included. At least one payload must have arrived. With every
+    /// worker arrived the subset reduce performs exactly
+    /// [`Self::finish_round`]'s adds in the same order — bitwise
+    /// identical, so `kofm:M` degenerates to the full barrier exactly
+    /// (the integration property test covers the all-arrived draw too).
+    pub fn finish_partial(&mut self) -> anyhow::Result<&[f32]> {
+        anyhow::ensure!(
+            self.pending_round.take().is_some(),
+            "finish_partial called outside an open streaming round"
+        );
+        anyhow::ensure!(self.arrived_count > 0, "cannot close a round with zero payloads");
+        self.reduce_mean(true);
+        Ok(&self.avg)
+    }
+
+    /// The one reduce every mode shares: zero `avg`, add the selected
+    /// slots **in worker-id order**, scale by 1/#selected — on the pool
+    /// (disjoint shards) when present, else via `ops::mean_into`. With
+    /// `partial = false` every slot is selected (the full-barrier 1/M
+    /// mean); with `partial = true` only the slots whose payload arrived
+    /// this round are. The inclusion filter skips whole slots, never
+    /// reorders element additions, so the full-barrier output is
+    /// bitwise-independent of which body runs and a partial round's
+    /// output is exactly `mean_into` over the included payloads (both
+    /// properties are pinned by the regression tests).
+    fn reduce_mean(&mut self, partial: bool) {
+        let count = if partial { self.arrived_count } else { self.workers };
+        let inv = 1.0 / count as f32;
+        let slots = &self.slots;
+        let arrived = &self.arrived;
         match &self.pool {
             None => {
-                let refs: Vec<&[f32]> = self.slots.iter().map(|s| s.buf.as_slice()).collect();
+                let refs: Vec<&[f32]> = slots
+                    .iter()
+                    .zip(arrived)
+                    .filter(|(_, &inc)| !partial || inc)
+                    .map(|(s, _)| s.buf.as_slice())
+                    .collect();
                 ops::mean_into(&refs, &mut self.avg);
             }
             Some(pool) => {
-                let inv = 1.0 / self.workers as f32;
                 let shard_elems = self.shard_elems;
-                let slots = &self.slots;
                 let mut shards: Vec<&mut [f32]> = self.avg.chunks_mut(shard_elems).collect();
                 pool.parallel_for_mut(&mut shards, |s, shard| {
                     let off = s * shard_elems;
                     for x in shard.iter_mut() {
                         *x = 0.0;
                     }
-                    for slot in slots {
+                    for (slot, &inc) in slots.iter().zip(arrived) {
+                        if partial && !inc {
+                            continue;
+                        }
                         let src = &slot.buf[off..off + shard.len()];
                         for (a, &b) in shard.iter_mut().zip(src) {
                             *a += b;
@@ -274,7 +321,7 @@ impl Aggregator {
                 return Err(e);
             }
         }
-        self.reduce_avg();
+        self.reduce_mean(false);
         Ok(())
     }
 
@@ -302,7 +349,7 @@ impl Aggregator {
             }
         }
         // Stage 2: disjoint output shards, each reduced in worker order.
-        self.reduce_avg();
+        self.reduce_mean(false);
         Ok(())
     }
 }
@@ -343,7 +390,7 @@ mod tests {
     }
 
     fn sharded_cfg(threads: usize, shard_elems: usize) -> AggregatorConfig {
-        AggregatorConfig { mode: AggMode::Sharded, threads, shard_elems }
+        AggregatorConfig { mode: AggMode::Sharded, threads, shard_elems, ..Default::default() }
     }
 
     #[test]
@@ -402,7 +449,12 @@ mod tests {
         let oracle = seq.aggregate(4, &msgs, &decoder).unwrap().to_vec();
         // Worst-case arrival order: straggler-first reversal.
         let mut agg = Aggregator::new(
-            AggregatorConfig { mode: AggMode::Streaming, threads: 3, shard_elems: 128 },
+            AggregatorConfig {
+                mode: AggMode::Streaming,
+                threads: 3,
+                shard_elems: 128,
+                ..Default::default()
+            },
             d,
             m,
         );
@@ -438,6 +490,51 @@ mod tests {
         agg.accept(&payload_of(0, 7, &[2.0, 4.0]), &dec).unwrap();
         agg.accept(&payload_of(1, 7, &[4.0, 2.0]), &dec).unwrap();
         assert_eq!(agg.finish_round().unwrap(), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn finish_partial_averages_only_the_arrived_slots() {
+        let dec = identity_decoder();
+        // Small-d (no pool) regime.
+        let mut agg = Aggregator::new(AggregatorConfig::streaming(), 2, 3);
+        agg.begin_round(0);
+        agg.accept(&payload_of(2, 0, &[4.0, 8.0]), &dec).unwrap();
+        agg.accept(&payload_of(0, 0, &[2.0, 2.0]), &dec).unwrap();
+        assert_eq!(agg.arrived_count(), 2);
+        assert_eq!(agg.included(), &[true, false, true]);
+        let avg = agg.finish_partial().unwrap();
+        assert_eq!(avg, &[3.0, 5.0], "mean over workers {{0, 2}} only");
+        // Zero arrivals is an error; a fresh round recovers.
+        agg.begin_round(1);
+        assert!(agg.finish_partial().is_err());
+        // All-arrived partial close equals the full-barrier close.
+        agg.begin_round(2);
+        for w in 0..3u32 {
+            agg.accept(&payload_of(w, 2, &[w as f32, 1.0]), &dec).unwrap();
+        }
+        assert_eq!(agg.finish_partial().unwrap(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn finish_partial_runs_the_pool_path_above_the_small_work_cutoff() {
+        // dim · workers above SMALL_WORK_ELEMS ⇒ the shard-parallel
+        // subset reduce really runs on the pool.
+        let d = Aggregator::SMALL_WORK_ELEMS;
+        let dec = identity_decoder();
+        let mut agg = Aggregator::new(
+            AggregatorConfig {
+                mode: AggMode::Streaming,
+                threads: 3,
+                shard_elems: 512,
+                ..Default::default()
+            },
+            d,
+            2,
+        );
+        agg.begin_round(0);
+        agg.accept(&payload_of(1, 0, &vec![2.5; d]), &dec).unwrap();
+        let avg = agg.finish_partial().unwrap();
+        assert!(avg.iter().all(|&x| x == 2.5), "single included worker is its own mean");
     }
 
     #[test]

@@ -15,11 +15,13 @@
 
 mod aggregate;
 mod cluster;
+mod policy;
 mod server;
 mod worker;
 
 pub use aggregate::{Aggregator, Decoder};
 pub use cluster::{run_cluster, ClusterConfig, EvalEvent, TrainReport};
+pub use policy::{build_policy, RoundPolicy};
 pub use server::{serve_rounds, serve_rounds_with};
 pub use worker::worker_loop;
 
@@ -46,6 +48,14 @@ pub struct RoundRecord {
     pub wait_secs: f64,
     /// Leader time spent in decode + reduce (the compute component).
     pub agg_secs: f64,
+    /// Workers whose payloads entered this round's average (= M under
+    /// the full barrier; < M when a `--policy kofm`/`deadline` round
+    /// closed early).
+    pub workers_included: usize,
+    /// Workers the round-completion policy skipped this round (their
+    /// payloads fold back into local error memory via the broadcast's
+    /// inclusion bitmap).
+    pub workers_skipped: usize,
     /// Mean losses (when the model reports them).
     pub loss_g: Option<f32>,
     pub loss_d: Option<f32>,

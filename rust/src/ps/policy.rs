@@ -1,0 +1,194 @@
+//! Round-completion policy engine: after each accepted arrival the
+//! streaming leader asks its [`RoundPolicy`] whether the round closes
+//! now, keeps waiting, or keeps waiting with a deadline armed.
+//!
+//! Why skipping a worker is sound: the error-feedback machinery (paper
+//! Lemma 1; EF-SGD, arXiv:1806.08054) already absorbs arbitrary
+//! per-round compression residue into the worker-local error memory
+//! `e`. A skipped worker is told so by the broadcast's inclusion bitmap
+//! and folds its **entire** sent payload back (`e ← e + p̂ = p`,
+//! exactly as if the δ-approximate compressor had returned 0 — a legal
+//! output of a 0-approximate round that the next round's transmission
+//! compensates). The leader therefore never biases the update by
+//! closing early; it only trades one round of staleness for the
+//! straggler's wall-clock, which is where the linear-speedup claim
+//! (Theorem 3) is won or lost on real clusters.
+//!
+//! Three policies ship behind `--policy`:
+//!
+//! | policy          | closes when…                                        |
+//! |-----------------|-----------------------------------------------------|
+//! | `full`          | all M payloads accepted (today's barrier, default)  |
+//! | `kofm:K`        | K payloads accepted                                 |
+//! | `deadline:MS,K` | all M accepted, or MS ms after the K-th acceptance  |
+//!
+//! The engine runs inside `ps/server.rs`'s policy-driven round loop on
+//! top of [`crate::comm::ServerEnd::recv_round_streaming_timed`]; the
+//! decisions are expressed directly as [`StreamDirective`]s so the
+//! transport can bound its blocking waits.
+
+use crate::comm::StreamDirective;
+use crate::config::PolicyConfig;
+use std::time::{Duration, Instant};
+
+/// Leader-side round-completion policy, consulted once per accepted
+/// arrival. Implementations are stateful per round (deadlines arm once)
+/// and are reset by [`RoundPolicy::begin_round`].
+pub trait RoundPolicy: Send {
+    /// A new round opened; reset any per-round state.
+    fn begin_round(&mut self, round: u64);
+    /// The `arrived`-th payload (1-based) of `workers` total was just
+    /// accepted: close now, keep waiting, or keep waiting with a
+    /// deadline armed.
+    fn on_arrival(&mut self, arrived: usize, workers: usize) -> StreamDirective;
+}
+
+/// Barrier semantics: close only when every worker has arrived.
+struct FullPolicy;
+
+impl RoundPolicy for FullPolicy {
+    fn begin_round(&mut self, _round: u64) {}
+
+    fn on_arrival(&mut self, arrived: usize, workers: usize) -> StreamDirective {
+        if arrived >= workers {
+            StreamDirective::Close
+        } else {
+            StreamDirective::Wait
+        }
+    }
+}
+
+/// Close as soon as `k` payloads have been accepted.
+struct KofMPolicy {
+    k: usize,
+}
+
+impl RoundPolicy for KofMPolicy {
+    fn begin_round(&mut self, _round: u64) {}
+
+    fn on_arrival(&mut self, arrived: usize, _workers: usize) -> StreamDirective {
+        if arrived >= self.k {
+            StreamDirective::Close
+        } else {
+            StreamDirective::Wait
+        }
+    }
+}
+
+/// Grace-period policy: arm a timer at the `arm_at`-th acceptance; the
+/// round closes at M arrivals or when the timer expires (the transport
+/// reports the expiry as `StreamOutcome::DeadlineExpired`).
+struct DeadlinePolicy {
+    grace: Duration,
+    arm_at: usize,
+    armed: Option<Instant>,
+}
+
+impl RoundPolicy for DeadlinePolicy {
+    fn begin_round(&mut self, _round: u64) {
+        self.armed = None;
+    }
+
+    fn on_arrival(&mut self, arrived: usize, workers: usize) -> StreamDirective {
+        if arrived >= workers {
+            return StreamDirective::Close;
+        }
+        if arrived >= self.arm_at {
+            // Arm exactly once: later arrivals inside the grace window
+            // must not push the deadline out.
+            let dl = *self.armed.get_or_insert_with(|| Instant::now() + self.grace);
+            StreamDirective::WaitUntil(dl)
+        } else {
+            StreamDirective::Wait
+        }
+    }
+}
+
+/// Build the runtime policy for a cluster of `workers`, validating the
+/// configuration against M (a quorum larger than the cluster can never
+/// be reached and would hang every round).
+pub fn build_policy(cfg: PolicyConfig, workers: usize) -> anyhow::Result<Box<dyn RoundPolicy>> {
+    anyhow::ensure!(workers > 0, "no workers");
+    match cfg {
+        PolicyConfig::Full => Ok(Box::new(FullPolicy)),
+        PolicyConfig::KofM { k } => {
+            anyhow::ensure!(
+                (1..=workers).contains(&k),
+                "kofm:{k} needs 1 <= K <= M (M = {workers})"
+            );
+            Ok(Box::new(KofMPolicy { k }))
+        }
+        PolicyConfig::Deadline { grace_ms, arm_at } => {
+            anyhow::ensure!(
+                (1..=workers).contains(&arm_at),
+                "deadline arm count {arm_at} needs 1 <= K <= M (M = {workers})"
+            );
+            Ok(Box::new(DeadlinePolicy {
+                grace: Duration::from_millis(grace_ms),
+                arm_at,
+                armed: None,
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_policy_closes_only_at_m() {
+        let mut p = build_policy(PolicyConfig::Full, 3).unwrap();
+        p.begin_round(0);
+        assert_eq!(p.on_arrival(1, 3), StreamDirective::Wait);
+        assert_eq!(p.on_arrival(2, 3), StreamDirective::Wait);
+        assert_eq!(p.on_arrival(3, 3), StreamDirective::Close);
+    }
+
+    #[test]
+    fn kofm_closes_at_the_quorum() {
+        let mut p = build_policy(PolicyConfig::KofM { k: 2 }, 4).unwrap();
+        p.begin_round(0);
+        assert_eq!(p.on_arrival(1, 4), StreamDirective::Wait);
+        assert_eq!(p.on_arrival(2, 4), StreamDirective::Close);
+        // kofm:M degenerates to the full barrier.
+        let mut p = build_policy(PolicyConfig::KofM { k: 4 }, 4).unwrap();
+        p.begin_round(0);
+        assert_eq!(p.on_arrival(3, 4), StreamDirective::Wait);
+        assert_eq!(p.on_arrival(4, 4), StreamDirective::Close);
+    }
+
+    #[test]
+    fn deadline_arms_once_per_round_and_closes_at_m() {
+        let cfg = PolicyConfig::Deadline { grace_ms: 60_000, arm_at: 2 };
+        let mut p = build_policy(cfg, 4).unwrap();
+        p.begin_round(0);
+        assert_eq!(p.on_arrival(1, 4), StreamDirective::Wait);
+        let dl1 = match p.on_arrival(2, 4) {
+            StreamDirective::WaitUntil(dl) => dl,
+            other => panic!("expected WaitUntil, got {other:?}"),
+        };
+        // Subsequent arrivals must not extend the armed deadline.
+        match p.on_arrival(3, 4) {
+            StreamDirective::WaitUntil(dl2) => assert_eq!(dl1, dl2),
+            other => panic!("expected WaitUntil, got {other:?}"),
+        }
+        assert_eq!(p.on_arrival(4, 4), StreamDirective::Close);
+        // A new round re-arms from scratch.
+        p.begin_round(1);
+        assert_eq!(p.on_arrival(1, 4), StreamDirective::Wait);
+        match p.on_arrival(2, 4) {
+            StreamDirective::WaitUntil(dl) => assert!(dl >= dl1),
+            other => panic!("expected WaitUntil, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn build_rejects_unreachable_quorums() {
+        assert!(build_policy(PolicyConfig::KofM { k: 5 }, 4).is_err());
+        assert!(build_policy(PolicyConfig::KofM { k: 0 }, 4).is_err());
+        assert!(build_policy(PolicyConfig::Deadline { grace_ms: 1, arm_at: 9 }, 4).is_err());
+        assert!(build_policy(PolicyConfig::Full, 0).is_err());
+        assert!(build_policy(PolicyConfig::KofM { k: 4 }, 4).is_ok());
+    }
+}

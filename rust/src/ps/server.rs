@@ -18,12 +18,14 @@
 //! benchmarks can show the overlap directly.
 
 use super::aggregate::{Aggregator, Decoder};
+use super::policy::build_policy;
 use super::RoundRecord;
-use crate::comm::{Message, ServerEnd};
-use crate::config::{AggMode, AggregatorConfig};
+use crate::comm::{Message, MsgKind, ServerEnd, StreamDirective};
+use crate::config::{AggMode, AggregatorConfig, PolicyConfig};
 use crate::util::bytes::put_f32_slice;
 use crate::util::stats::norm2_sq;
 use crate::util::timer::Stopwatch;
+use std::collections::VecDeque;
 
 /// Run `rounds` synchronous rounds on `transport` with the default
 /// (sharded) aggregation path. Returns per-round records. `dim` is the
@@ -52,6 +54,21 @@ pub fn serve_rounds_with(
     let m = transport.workers();
     anyhow::ensure!(m > 0, "no workers");
     let streaming = agg_cfg.mode == AggMode::Streaming;
+    let policy_cfg = agg_cfg.policy;
+    anyhow::ensure!(
+        policy_cfg == PolicyConfig::Full || streaming,
+        "--policy {} requires the streaming engine (--agg streaming)",
+        policy_cfg.label()
+    );
+    // Policy engine (None = the unchanged full-barrier paths below).
+    let mut policy = match policy_cfg {
+        PolicyConfig::Full => None,
+        other => Some(build_policy(other, m)?),
+    };
+    // Per worker: rounds that closed without this worker's payload and
+    // whose late frame has not been drained yet (frames arrive in round
+    // order per worker, so a FIFO suffices).
+    let mut pending_late: Vec<VecDeque<u64>> = vec![VecDeque::new(); m];
     let mut agg = Aggregator::new(agg_cfg, dim, m);
     let mut records = Vec::with_capacity(rounds as usize);
     for round in 0..rounds {
@@ -59,7 +76,66 @@ pub fn serve_rounds_with(
         let mut bytes_up = 0usize;
         let mut agg_secs = 0.0f64;
         let wait_secs;
-        let avg: &[f32] = if streaming {
+        // Inclusion set of a policy-closed round (None ⇒ full barrier,
+        // every worker included).
+        let mut included: Option<Vec<bool>> = None;
+        let avg: &[f32] = if let Some(policy) = policy.as_deref_mut() {
+            // Policy-driven round: every arrival is consulted against
+            // the RoundPolicy; the round may close before all M payloads
+            // land (K-of-M quorum or deadline expiry), skipping the
+            // stragglers. Their frames arrive during later rounds and
+            // are drained here against the `pending_late` ledger.
+            agg.begin_round(round);
+            policy.begin_round(round);
+            let mut directive = StreamDirective::Wait;
+            transport.recv_round_streaming_timed(&mut |msg| {
+                if msg.kind == MsgKind::WorkerError {
+                    anyhow::bail!(
+                        "worker {} failed at round {}: {}",
+                        msg.worker,
+                        msg.round,
+                        String::from_utf8_lossy(&msg.payload)
+                    );
+                }
+                // Every payload frame received during this round costs
+                // real uplink bytes — count drained late frames too, so
+                // the per-round series sums to the actual wire traffic.
+                if msg.kind == MsgKind::Payload {
+                    bytes_up += msg.payload.len();
+                }
+                if msg.kind == MsgKind::Payload && msg.round < round {
+                    // Late frame from a round that closed without this
+                    // worker: drain it and keep the current directive
+                    // (no new arrival, so the policy state is unchanged).
+                    let w = msg.worker as usize;
+                    anyhow::ensure!(w < m, "worker id {w} out of range (M = {m})");
+                    match pending_late[w].front().copied() {
+                        Some(r) if r == msg.round => {
+                            pending_late[w].pop_front();
+                        }
+                        _ => anyhow::bail!(
+                            "worker {w}: unexpected stale frame for round {} \
+                             (leader at round {round}, not a skipped round)",
+                            msg.round
+                        ),
+                    }
+                    return Ok(directive);
+                }
+                let t = Stopwatch::start();
+                let res = agg.accept(&msg, &decoder);
+                agg_secs += t.elapsed_secs();
+                res?;
+                directive = policy.on_arrival(agg.arrived_count(), m);
+                Ok(directive)
+            })?;
+            wait_secs = (sw.elapsed_secs() - agg_secs).max(0.0);
+            let inc = agg.included().to_vec();
+            let t = Stopwatch::start();
+            let avg = agg.finish_partial()?;
+            agg_secs += t.elapsed_secs();
+            included = Some(inc);
+            avg
+        } else if streaming {
             // Event-driven round: each payload decodes the moment its
             // frame lands, overlapping decode with the wait for the
             // remaining workers; the reduce runs once the barrier is full.
@@ -93,10 +169,34 @@ pub fn serve_rounds_with(
         // Broadcast q̄ as raw f32 (the downlink is full-precision; the
         // paper quantizes the uplink only — see DESIGN.md FIG4 notes).
         // `Message` owns its payload bytes, so this exact-sized Vec is
-        // the one unavoidable per-round allocation on the leader.
-        let mut payload = Vec::with_capacity(4 * dim);
-        put_f32_slice(&mut payload, avg);
-        transport.broadcast(Message::broadcast(round, payload))?;
+        // the one unavoidable per-round allocation on the leader. Under
+        // a partial policy the frame additionally carries the inclusion
+        // bitmap so skipped workers re-absorb their sent payloads.
+        let workers_included;
+        let msg = match &included {
+            // A policy round that every worker made it into broadcasts
+            // the plain frame too: "all included ⇒ byte-identical to the
+            // full barrier" is structural, not an accident of which code
+            // path ran (deadline rounds with no straggler, kofm:M).
+            Some(inc) if !inc.iter().all(|&b| b) => {
+                workers_included = inc.iter().filter(|&&b| b).count();
+                Message::partial_broadcast(round, inc, avg)
+            }
+            _ => {
+                workers_included = m;
+                let mut payload = Vec::with_capacity(4 * dim);
+                put_f32_slice(&mut payload, avg);
+                Message::broadcast(round, payload)
+            }
+        };
+        transport.broadcast(msg)?;
+        if let Some(inc) = &included {
+            for (w, &arrived) in inc.iter().enumerate() {
+                if !arrived {
+                    pending_late[w].push_back(round);
+                }
+            }
+        }
         let rec = RoundRecord {
             round,
             avg_payload_norm_sq,
@@ -104,6 +204,8 @@ pub fn serve_rounds_with(
             wall_secs: sw.elapsed_secs(),
             wait_secs,
             agg_secs,
+            workers_included,
+            workers_skipped: m - workers_included,
             ..Default::default()
         };
         on_round(&rec);

@@ -5,9 +5,18 @@
 //! paper's Algorithm 2, "for t = 1..T"), which keeps the protocol strictly
 //! two-phase and hang-free: per round exactly one Payload up and one
 //! Broadcast down, then one trailing Shutdown frame.
+//!
+//! Under a partial round-completion policy (`--policy kofm:K` /
+//! `deadline:MS`) the downlink frame may be a
+//! [`MsgKind::PartialBroadcast`]: its inclusion bitmap tells this worker
+//! whether the leader's average contains its payload. A skipped worker
+//! still applies the broadcast (parameters stay in lockstep across the
+//! cluster) and additionally folds its entire sent payload back into
+//! local error memory ([`WorkerAlgo::absorb_skipped`]), so the skipped
+//! contribution is delayed — never lost or double-counted.
 
 use crate::algo::{RoundStats, WorkerAlgo};
-use crate::comm::{Message, MsgKind, WorkerEnd};
+use crate::comm::{bitmap_included, read_inclusion_bitmap, Message, MsgKind, WorkerEnd};
 use crate::grad::GradientSource;
 use crate::util::bytes::Reader;
 use crate::util::rng::Pcg32;
@@ -15,6 +24,11 @@ use crate::util::rng::Pcg32;
 /// Per-worker result summary.
 #[derive(Debug, Clone)]
 pub struct WorkerSummary {
+    /// Rounds whose broadcast this worker applied — fewer than requested
+    /// when the server shuts the run down early. Under a partial policy's
+    /// teardown this can include trailing rounds the leader closed
+    /// without this worker's payload (applied to stay in lockstep), so it
+    /// counts parameter updates, not gradient contributions.
     pub rounds: u64,
     /// Final parameter vector (identical across workers by construction).
     pub final_params: Vec<f32>,
@@ -25,7 +39,37 @@ pub struct WorkerSummary {
 /// Hook invoked on a worker after each `apply` with (round, params, stats).
 pub type EvalHook = Box<dyn FnMut(u64, &[f32], &RoundStats) + Send>;
 
-/// Run exactly `rounds` rounds, then consume the trailing Shutdown.
+/// Parse and apply one (possibly partial) broadcast frame: when the
+/// inclusion bitmap says the leader skipped this worker, re-absorb the
+/// round's sent payload into error memory after applying the average.
+/// `allow_absorb` is false for trailing broadcasts of rounds this worker
+/// never produced a payload for (teardown drain) — there is nothing of
+/// ours to fold back there, and re-absorbing the previous round's buffer
+/// again would double-count it.
+fn apply_broadcast(
+    algo: &mut dyn WorkerAlgo,
+    dim: usize,
+    id: u32,
+    msg: &Message,
+    allow_absorb: bool,
+) -> anyhow::Result<()> {
+    let mut r = Reader::new(&msg.payload);
+    let included = match msg.kind {
+        MsgKind::PartialBroadcast => {
+            let bitmap = read_inclusion_bitmap(&mut r)?;
+            bitmap_included(bitmap, id)
+        }
+        _ => true,
+    };
+    let avg = r.f32_vec(dim)?;
+    algo.apply(&avg);
+    if !included && allow_absorb {
+        algo.absorb_skipped();
+    }
+    Ok(())
+}
+
+/// Run at most `rounds` rounds, then consume the trailing Shutdown.
 ///
 /// On a local error the worker sends a `WorkerError` frame before
 /// returning, so the server's barrier fails fast instead of hanging
@@ -44,6 +88,9 @@ pub fn worker_loop(
     let dim = algo.dim();
     let id = transport.id();
     let mut stats_hist = Vec::new();
+    // Rounds actually completed — reported instead of the requested
+    // count when the server shuts down early.
+    let mut completed = 0u64;
     for round in 0..rounds {
         // Phase 1: produce and push. `produce` returns views into the
         // worker's reused buffers; the one owned copy happens here, at the
@@ -55,19 +102,54 @@ pub fn worker_loop(
                 return Err(e);
             }
         };
-        transport.send(Message::payload(id, round, payload))?;
+        if let Err(send_err) = transport.send(Message::payload(id, round, payload)) {
+            // Partial-policy teardown race: a leader running `--policy
+            // kofm`/`deadline` may have closed its remaining rounds
+            // without this worker's frames and already torn the
+            // transport down. The queued downlink frames are still
+            // readable and arrive in round order — apply every trailing
+            // broadcast (keeps parameters in lockstep with the
+            // survivors; only the current round's payload exists to
+            // re-absorb) and exit cleanly on Shutdown; anything else
+            // surfaces the send error.
+            let mut clean = false;
+            while let Ok(msg) = transport.recv() {
+                match msg.kind {
+                    MsgKind::Shutdown => {
+                        clean = true;
+                        break;
+                    }
+                    MsgKind::Broadcast | MsgKind::PartialBroadcast if msg.round >= round => {
+                        apply_broadcast(algo, dim, id, &msg, msg.round == round)?;
+                        completed = completed.max(msg.round + 1);
+                        if msg.round == round {
+                            if let Some(cb) = eval.as_deref_mut() {
+                                cb(round, algo.params(), &stats);
+                            }
+                            if keep_stats {
+                                stats_hist.push(stats.clone());
+                            }
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            if !clean {
+                return Err(send_err);
+            }
+            break;
+        }
         // Phase 2: await broadcast, apply.
         let msg = transport.recv()?;
         match msg.kind {
-            MsgKind::Broadcast => {
+            MsgKind::Broadcast | MsgKind::PartialBroadcast => {
                 anyhow::ensure!(msg.round == round, "broadcast round skew");
-                let mut r = Reader::new(&msg.payload);
-                let avg = r.f32_vec(dim)?;
-                algo.apply(&avg);
+                apply_broadcast(algo, dim, id, &msg, true)?;
             }
             MsgKind::Shutdown => break, // server aborted early
             other => anyhow::bail!("unexpected message kind {other:?}"),
         }
+        completed = round + 1;
         if let Some(cb) = eval.as_deref_mut() {
             cb(round, algo.params(), &stats);
         }
@@ -81,5 +163,9 @@ pub fn worker_loop(
         Ok(other) => anyhow::bail!("expected shutdown, got {:?}", other.kind),
         Err(_) => {} // server already gone — fine at teardown
     }
-    Ok(WorkerSummary { rounds, final_params: algo.params().to_vec(), stats: stats_hist })
+    Ok(WorkerSummary {
+        rounds: completed,
+        final_params: algo.params().to_vec(),
+        stats: stats_hist,
+    })
 }

@@ -2,9 +2,11 @@
 //! aligned console tables.
 
 mod csv;
+mod rounds;
 mod table;
 
 pub use csv::CsvWriter;
+pub use rounds::{write_round_records, ROUND_CSV_HEADER};
 pub use table::Table;
 
 use std::path::PathBuf;

@@ -1,0 +1,77 @@
+//! CSV sink for per-round leader telemetry ([`crate::ps::RoundRecord`]):
+//! one row per synchronous round, including the `wait_secs`/`agg_secs`
+//! wall-clock split and the round-completion policy's
+//! `workers_included`/`workers_skipped` counts — the series the
+//! straggler A/Bs plot.
+
+use super::CsvWriter;
+use crate::ps::RoundRecord;
+use std::path::Path;
+
+/// Column order of [`write_round_records`] output.
+pub const ROUND_CSV_HEADER: [&str; 8] = [
+    "round",
+    "wall_secs",
+    "wait_secs",
+    "agg_secs",
+    "bytes_up",
+    "workers_included",
+    "workers_skipped",
+    "avg_payload_norm_sq",
+];
+
+/// Write one row per [`RoundRecord`] to `path` (creating parent
+/// directories as needed) and return the written path.
+pub fn write_round_records(path: &Path, records: &[RoundRecord]) -> anyhow::Result<String> {
+    let mut csv = CsvWriter::create(path, &ROUND_CSV_HEADER)?;
+    for r in records {
+        csv.row(&[
+            r.round.to_string(),
+            format!("{:.6}", r.wall_secs),
+            format!("{:.6}", r.wait_secs),
+            format!("{:.6}", r.agg_secs),
+            r.bytes_up.to_string(),
+            r.workers_included.to_string(),
+            r.workers_skipped.to_string(),
+            format!("{:.6e}", r.avg_payload_norm_sq),
+        ])?;
+    }
+    csv.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_one_row_per_round_with_policy_columns() {
+        let path = std::env::temp_dir().join("dqgan_round_csv_test.csv");
+        let records = vec![
+            RoundRecord {
+                round: 0,
+                wall_secs: 0.25,
+                wait_secs: 0.2,
+                agg_secs: 0.05,
+                bytes_up: 1024,
+                workers_included: 3,
+                workers_skipped: 1,
+                ..Default::default()
+            },
+            RoundRecord { round: 1, workers_included: 4, ..Default::default() },
+        ];
+        let p = write_round_records(&path, &records).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), ROUND_CSV_HEADER.join(","));
+        let row0: Vec<&str> = lines.next().unwrap().split(',').collect();
+        assert_eq!(row0[0], "0");
+        assert_eq!(row0[4], "1024");
+        assert_eq!(row0[5], "3");
+        assert_eq!(row0[6], "1");
+        let row1: Vec<&str> = lines.next().unwrap().split(',').collect();
+        assert_eq!(row1[5], "4");
+        assert_eq!(row1[6], "0");
+        assert!(lines.next().is_none());
+        std::fs::remove_file(&p).ok();
+    }
+}

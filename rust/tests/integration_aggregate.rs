@@ -47,6 +47,7 @@ fn sharded_leader_is_bitwise_identical_to_sequential() {
                         mode: AggMode::Sharded,
                         threads: 3,
                         shard_elems: 1024,
+                        ..Default::default()
                     },
                     d,
                     m,
@@ -86,6 +87,7 @@ fn streaming_leader_is_bitwise_identical_in_any_arrival_order() {
                         mode: AggMode::Streaming,
                         threads: 3,
                         shard_elems: 1024,
+                        ..Default::default()
                     },
                     d,
                     m,
@@ -127,7 +129,12 @@ fn both_paths_reproduce_the_seed_mean_into_arithmetic() {
         let dec = decoder_for(spec);
         for cfg in [
             AggregatorConfig::sequential(),
-            AggregatorConfig { mode: AggMode::Sharded, threads: 4, shard_elems: 100 },
+            AggregatorConfig {
+                mode: AggMode::Sharded,
+                threads: 4,
+                shard_elems: 100,
+                ..Default::default()
+            },
         ] {
             let mode = cfg.mode;
             let mut agg = Aggregator::new(cfg, d, m);

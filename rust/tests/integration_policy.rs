@@ -1,0 +1,517 @@
+//! Integration: the round-completion policy subsystem — K-of-M partial
+//! aggregation, deadline grace windows, late-frame draining, inclusion
+//! bitmaps and error-feedback re-absorption — over scripted stragglers
+//! ([`DelayPlan`] gates, channel-synchronized TCP holds), never sleeps.
+
+use dqgan::algo::{AlgoKind, DqganWorker, WorkerAlgo};
+use dqgan::comm::tcp::{TcpServerBuilder, TcpWorkerEnd};
+use dqgan::comm::{
+    inproc_cluster, inproc_cluster_with_plan, read_inclusion_bitmap, DelayPlan, Message,
+    MsgKind, WorkerEnd,
+};
+use dqgan::compress::{compressor_from_spec, Compressor, Identity};
+use dqgan::config::{AggMode, AggregatorConfig, PolicyConfig};
+use dqgan::grad::{GradientSource, QuadraticOperator};
+use dqgan::optim::LrSchedule;
+use dqgan::ps::{
+    run_cluster, serve_rounds, serve_rounds_with, worker_loop, Aggregator, ClusterConfig,
+    Decoder,
+};
+use dqgan::tensor::ops;
+use dqgan::util::bytes::Reader;
+use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn identity_decoder() -> Decoder {
+    Arc::new(|bytes: &[u8], out: &mut [f32]| Identity.decode_into(bytes, out))
+}
+
+fn quad_src(m: usize, d: usize) -> QuadraticOperator {
+    let mut rng = Pcg32::new(500 + m as u64);
+    QuadraticOperator::new(d, 0.0, &mut rng)
+}
+
+#[test]
+fn full_policy_keeps_the_plain_broadcast_frame_and_includes_everyone() {
+    // `--policy full` must stay bitwise-identical to today's streaming
+    // output — including the frame kind on the wire (no bitmap header).
+    let d = 4;
+    let (mut server, mut workers, _) = inproc_cluster(2);
+    for (i, w) in workers.iter_mut().enumerate() {
+        let mut wire = Vec::new();
+        Identity.encode(&[i as f32; 4], &mut wire);
+        w.send(Message::payload(i as u32, 0, wire)).unwrap();
+    }
+    let t = std::thread::spawn(move || {
+        let mut avgs = Vec::new();
+        for w in &mut workers {
+            let b = w.recv().unwrap();
+            assert_eq!(b.kind, MsgKind::Broadcast, "full policy must not add a bitmap");
+            avgs.push(Identity.decode(&b.payload, d).unwrap());
+            assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+        }
+        avgs
+    });
+    let cfg = AggregatorConfig::streaming_with_policy(PolicyConfig::Full);
+    let recs = serve_rounds_with(&mut server, identity_decoder(), d, 1, cfg, |_| {}).unwrap();
+    assert_eq!(recs[0].workers_included, 2);
+    assert_eq!(recs[0].workers_skipped, 0);
+    let avgs = t.join().unwrap();
+    assert_eq!(avgs[0], vec![0.5; 4]);
+    assert_eq!(avgs[0], avgs[1]);
+}
+
+#[test]
+fn full_policy_cluster_is_bitwise_identical_to_sequential() {
+    let run = |agg: AggregatorConfig| {
+        let cfg = ClusterConfig {
+            algo: AlgoKind::parse("dqgan:linf8").unwrap(),
+            workers: 4,
+            batch: 8,
+            rounds: 40,
+            lr: LrSchedule::constant(0.05),
+            seed: 42,
+            eval_every: 0,
+            keep_stats: false,
+            agg,
+        };
+        run_cluster(&cfg, |_m| {
+            let mut rng = Pcg32::new(7);
+            Ok(Box::new(QuadraticOperator::new(64, 0.1, &mut rng)))
+        })
+        .unwrap()
+    };
+    let seq = run(AggregatorConfig::sequential());
+    let full = run(AggregatorConfig::streaming_with_policy(PolicyConfig::Full));
+    assert_eq!(seq.worker0.final_params, full.worker0.final_params);
+    for r in &full.records {
+        assert_eq!((r.workers_included, r.workers_skipped), (4, 0));
+    }
+}
+
+#[test]
+fn kofm_broadcast_equals_the_mean_of_exactly_the_included_slots() {
+    // Property: over qsgd/sign/topk wire payloads, random inclusion
+    // subsets and scrambled arrival orders, a partial round's output is
+    // bitwise the `mean_into` of the included slots in worker-id order.
+    let mut rng = Pcg32::new(0xBEEF_2026);
+    for spec in ["qsgd8", "sign", "topk(f=0.1)"] {
+        let c = compressor_from_spec(spec).unwrap();
+        for &m in &[4usize, 8] {
+            for &d in &[63usize, 1024, 4096] {
+                let msgs: Vec<Message> = (0..m)
+                    .map(|w| {
+                        let v = rng.normal_vec(d);
+                        let mut wire = Vec::new();
+                        c.compress_encoded(&v, &mut rng, &mut wire);
+                        Message::payload(w as u32, 5, wire)
+                    })
+                    .collect();
+                let dec: Decoder = {
+                    let c = compressor_from_spec(spec).unwrap();
+                    Arc::new(move |b: &[u8], out: &mut [f32]| c.decode_into(b, out))
+                };
+                // Random subset of size 1..=m, accepted in shuffled order.
+                let k = 1 + rng.below(m as u32) as usize;
+                let mut ids: Vec<usize> = (0..m).collect();
+                rng.shuffle(&mut ids);
+                let included = &ids[..k];
+                let mut agg = Aggregator::new(
+                    AggregatorConfig {
+                        mode: AggMode::Streaming,
+                        threads: 3,
+                        shard_elems: 256,
+                        ..Default::default()
+                    },
+                    d,
+                    m,
+                );
+                agg.begin_round(5);
+                for &w in included {
+                    agg.accept(&msgs[w], &dec).unwrap();
+                }
+                let avg = agg.finish_partial().unwrap();
+                let mut sorted = included.to_vec();
+                sorted.sort_unstable();
+                let decoded: Vec<Vec<f32>> =
+                    sorted.iter().map(|&w| c.decode(&msgs[w].payload, d).unwrap()).collect();
+                let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
+                let mut oracle = vec![0.0f32; d];
+                ops::mean_into(&refs, &mut oracle);
+                for i in 0..d {
+                    assert_eq!(
+                        oracle[i].to_bits(),
+                        avg[i].to_bits(),
+                        "{spec} M={m} d={d} K={k}: element {i} differs"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kofm_skipped_worker_reabsorbs_its_payload_and_stays_in_lockstep() {
+    // Gate-based (no sleeps): worker 1's round-0 frame is held, kofm:1
+    // closes the round on worker 0 alone, and worker 1 — told by the
+    // inclusion bitmap — folds its entire sent payload into its error
+    // memory (norm grows from 0 to ‖p̂‖ exactly, Identity compressor).
+    let d = 12usize;
+    let batch = 4usize;
+    let lr = LrSchedule::constant(0.1);
+    let plan = DelayPlan::new();
+    plan.hold(1, 0);
+    let (mut server, worker_ends, _) = inproc_cluster_with_plan(2, plan.clone());
+    let w0 = {
+        let mut rng = Pcg32::new(61);
+        quad_src(0, d).init_params(&mut rng)
+    };
+    // Twins recompute each worker's expected round-0 payload offline.
+    let expected: Vec<Vec<f32>> = (0..2)
+        .map(|m| {
+            let mut twin = DqganWorker::new(w0.clone(), lr.clone(), Arc::new(Identity));
+            let mut src = quad_src(m, d);
+            let mut rng = Pcg32::new(900 + m as u64);
+            twin.produce(&mut src, batch, &mut rng).unwrap().dense.to_vec()
+        })
+        .collect();
+    let mut workers: Vec<DqganWorker> = (0..2)
+        .map(|_| DqganWorker::new(w0.clone(), lr.clone(), Arc::new(Identity)))
+        .collect();
+    let (recs, summaries) = std::thread::scope(|s| {
+        let handles: Vec<_> = worker_ends
+            .into_iter()
+            .zip(workers.iter_mut())
+            .enumerate()
+            .map(|(m, (mut end, wk))| {
+                s.spawn(move || {
+                    let mut src = quad_src(m, d);
+                    let mut rng = Pcg32::new(900 + m as u64);
+                    worker_loop(&mut end, wk, &mut src, batch, 1, &mut rng, false, None)
+                        .unwrap()
+                })
+            })
+            .collect();
+        let plan = plan.clone();
+        let cfg = AggregatorConfig::streaming_with_policy(PolicyConfig::KofM { k: 1 });
+        let recs = serve_rounds_with(&mut server, identity_decoder(), d, 1, cfg, |rec| {
+            // Structural proof the round closed without the straggler:
+            // its gate is still held when the record is produced.
+            assert!(plan.is_held(1, rec.round));
+            assert_eq!(rec.workers_included, 1);
+            assert_eq!(rec.workers_skipped, 1);
+            plan.release(1, rec.round);
+        })
+        .unwrap();
+        let summaries: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (recs, summaries)
+    });
+    assert_eq!(recs.len(), 1);
+    // The broadcast was worker 0's payload alone; both workers applied
+    // it, so parameters stay in lockstep at w0 − q̂⁽⁰⁾ bit-for-bit.
+    assert_eq!(summaries[0].rounds, 1);
+    assert_eq!(summaries[1].rounds, 1);
+    assert_eq!(summaries[0].final_params, summaries[1].final_params);
+    for i in 0..d {
+        let want = w0[i] - expected[0][i];
+        assert_eq!(summaries[0].final_params[i].to_bits(), want.to_bits(), "element {i}");
+    }
+    // Skipped worker: e grew from 0 to exactly its sent payload.
+    for i in 0..d {
+        assert_eq!(
+            workers[1].error()[i].to_bits(),
+            expected[1][i].to_bits(),
+            "skipped worker error-memory element {i}"
+        );
+    }
+    assert!(
+        dqgan::util::stats::norm2_sq(workers[1].error()) > 0.0,
+        "skipped payload must be non-trivial"
+    );
+    // Included worker keeps an empty error memory under Identity.
+    assert!(workers[0].error().iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn worker_left_rounds_behind_at_teardown_drains_trailing_broadcasts_cleanly() {
+    // Regression (teardown race): worker 1's round-0 send stays gated
+    // while kofm:1 closes BOTH rounds on worker 0 and the leader shuts
+    // down. Released after the server is gone, worker 1's send fails and
+    // it must drain the queued trailing broadcasts — applying each in
+    // order (staying in lockstep), re-absorbing only round 0 (the one
+    // payload it actually produced) — and exit cleanly on Shutdown.
+    let d = 8usize;
+    let batch = 4usize;
+    let lr = LrSchedule::constant(0.1);
+    let plan = DelayPlan::new();
+    plan.hold(1, 0);
+    let (server, worker_ends, _) = inproc_cluster_with_plan(2, plan.clone());
+    let mut server = server;
+    let w0 = {
+        let mut rng = Pcg32::new(71);
+        quad_src(0, d).init_params(&mut rng)
+    };
+    let expected_q1 = {
+        let mut twin = DqganWorker::new(w0.clone(), lr.clone(), Arc::new(Identity));
+        let mut src = quad_src(1, d);
+        let mut rng = Pcg32::new(700 + 1);
+        twin.produce(&mut src, batch, &mut rng).unwrap().dense.to_vec()
+    };
+    let mut workers: Vec<DqganWorker> = (0..2)
+        .map(|_| DqganWorker::new(w0.clone(), lr.clone(), Arc::new(Identity)))
+        .collect();
+    let summaries = std::thread::scope(|s| {
+        let handles: Vec<_> = worker_ends
+            .into_iter()
+            .zip(workers.iter_mut())
+            .enumerate()
+            .map(|(m, (mut end, wk))| {
+                s.spawn(move || {
+                    let mut src = quad_src(m, d);
+                    let mut rng = Pcg32::new(700 + m as u64);
+                    worker_loop(&mut end, wk, &mut src, batch, 2, &mut rng, false, None)
+                        .unwrap()
+                })
+            })
+            .collect();
+        let cfg = AggregatorConfig::streaming_with_policy(PolicyConfig::KofM { k: 1 });
+        let recs = serve_rounds_with(&mut server, identity_decoder(), d, 2, cfg, |_| {}).unwrap();
+        // Both rounds closed on worker 0 alone; worker 1 never arrived.
+        assert_eq!((recs[0].workers_included, recs[0].workers_skipped), (1, 1));
+        assert_eq!((recs[1].workers_included, recs[1].workers_skipped), (1, 1));
+        // Tear the transport down BEFORE releasing the gate, so worker
+        // 1's send deterministically fails and exercises the drain path.
+        drop(server);
+        plan.release_all();
+        let summaries: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        summaries
+    });
+    // Worker 1 applied both trailing broadcasts: full round count, and
+    // parameters in lockstep with the survivor.
+    assert_eq!(summaries[0].rounds, 2);
+    assert_eq!(summaries[1].rounds, 2);
+    assert_eq!(summaries[0].final_params, summaries[1].final_params);
+    // Exactly one re-absorption (round 0's payload, once — not doubled
+    // by the round-1 broadcast it never produced a payload for).
+    for i in 0..d {
+        assert_eq!(
+            workers[1].error()[i].to_bits(),
+            expected_q1[i].to_bits(),
+            "skipped worker error-memory element {i}"
+        );
+    }
+}
+
+#[test]
+fn deadline_rounds_close_after_grace_and_drain_late_frames_inproc() {
+    let (m, d) = (3usize, 4usize);
+    let plan = DelayPlan::new();
+    // Worker 2's round-0 frame is the scripted straggler; the prompt
+    // workers' round-1 frames are additionally gated behind worker 2's
+    // catch-up, so the late round-0 frame provably sits in the channel
+    // before any round-1 frame — the drain ordering is happens-before,
+    // not a wall-clock race.
+    plan.hold(2, 0);
+    plan.hold(0, 1);
+    plan.hold(1, 1);
+    let (mut server, worker_ends, _) = inproc_cluster_with_plan(m, plan.clone());
+    let handles: Vec<_> = worker_ends
+        .into_iter()
+        .map(|mut w| {
+            let plan = plan.clone();
+            std::thread::spawn(move || {
+                let id = w.id();
+                let mut broadcasts = Vec::new();
+                for round in 0..2u64 {
+                    let mut wire = Vec::new();
+                    Identity.encode(&[(id + 1) as f32; 4], &mut wire);
+                    w.send(Message::payload(id, round, wire)).unwrap();
+                    if id == 2 && round == 1 {
+                        // Our late round-0 frame and this round-1 frame
+                        // are now queued: let the prompt workers send.
+                        plan.release(0, 1);
+                        plan.release(1, 1);
+                    }
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.round, round);
+                    broadcasts.push(b);
+                }
+                assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+                broadcasts
+            })
+        })
+        .collect();
+    let cfg = AggregatorConfig::streaming_with_policy(PolicyConfig::Deadline {
+        grace_ms: 1000,
+        arm_at: 2,
+    });
+    let plan2 = plan.clone();
+    let recs = serve_rounds_with(&mut server, identity_decoder(), d, 2, cfg, |rec| {
+        if rec.round == 0 {
+            // The grace window elapsed with worker 2's gate still held.
+            assert!(plan2.is_held(2, 0));
+            plan2.release(2, 0);
+        }
+    })
+    .unwrap();
+    // Round 0 closed by deadline expiry on workers {0, 1}; the leader
+    // provably blocked through the grace window.
+    assert_eq!((recs[0].workers_included, recs[0].workers_skipped), (2, 1));
+    assert!(recs[0].wait_secs >= 0.1, "grace window not waited: {}", recs[0].wait_secs);
+    // Round 1: worker 2's late round-0 frame drains, then all three land.
+    assert_eq!((recs[1].workers_included, recs[1].workers_skipped), (3, 0));
+    let per_worker: Vec<Vec<Message>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for bs in &per_worker {
+        // Round 0: mean of workers {0, 1} = (1 + 2)/2; round 1: all three.
+        assert_eq!(bs[0].kind, MsgKind::PartialBroadcast);
+        let mut r = Reader::new(&bs[0].payload);
+        let bitmap = read_inclusion_bitmap(&mut r).unwrap();
+        assert!(dqgan::comm::bitmap_included(bitmap, 0));
+        assert!(dqgan::comm::bitmap_included(bitmap, 1));
+        assert!(!dqgan::comm::bitmap_included(bitmap, 2));
+        assert_eq!(r.f32_vec(d).unwrap(), vec![1.5; 4]);
+        // Round 1 closed with everyone included, so the frame reverts to
+        // the plain Broadcast — "all included ⇒ full-barrier bytes" is
+        // structural.
+        assert_eq!(bs[1].kind, MsgKind::Broadcast);
+        assert_eq!(Identity.decode(&bs[1].payload, d).unwrap(), vec![2.0; 4]);
+    }
+}
+
+#[test]
+fn deadline_rounds_drain_late_frames_over_tcp() {
+    // Same scripted scenario as the inproc test, but over real sockets:
+    // worker 2's round-0 send is channel-gated, the deadline closes the
+    // round on {0, 1}, and the late frame drains at round 1's start.
+    let (m, d) = (3usize, 4usize);
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    // The prompt workers' round-1 sends wait for worker 2's catch-up, so
+    // its late round-0 + round-1 frames are on the wire before theirs.
+    // Unlike the inproc twin this is not a full happens-before proof —
+    // the per-socket reader threads race into the arrival channel — so
+    // the grace window below is kept generous (1 s) as the backstop.
+    let (g0_tx, g0_rx) = std::sync::mpsc::channel::<()>();
+    let (g1_tx, g1_rx) = std::sync::mpsc::channel::<()>();
+    let mut handles = Vec::new();
+    for (id, g_rx) in [(0u32, g0_rx), (1u32, g1_rx)] {
+        handles.push(std::thread::spawn(move || {
+            let mut w = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+            for round in 0..2u64 {
+                if round == 1 {
+                    g_rx.recv().unwrap(); // until worker 2 has caught up
+                }
+                let mut wire = Vec::new();
+                Identity.encode(&[(id + 1) as f32; 4], &mut wire);
+                w.send(Message::payload(id, round, wire)).unwrap();
+                let b = w.recv().unwrap();
+                assert_eq!(b.round, round);
+            }
+            assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+        }));
+    }
+    handles.push(std::thread::spawn(move || {
+        let mut w = TcpWorkerEnd::connect(&addr.to_string(), 2).unwrap();
+        for round in 0..2u64 {
+            if round == 0 {
+                gate_rx.recv().unwrap(); // held until round 0 has closed
+            }
+            let mut wire = Vec::new();
+            Identity.encode(&[3.0f32; 4], &mut wire);
+            w.send(Message::payload(2, round, wire)).unwrap();
+            if round == 1 {
+                // Late round-0 frame and round-1 frame are on the wire:
+                // release the prompt workers' round-1 sends.
+                g0_tx.send(()).unwrap();
+                g1_tx.send(()).unwrap();
+            }
+            let b = w.recv().unwrap();
+            assert_eq!(b.round, round);
+        }
+        assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+    }));
+    let mut server = builder.accept(m).unwrap();
+    let cfg = AggregatorConfig::streaming_with_policy(PolicyConfig::Deadline {
+        grace_ms: 1000,
+        arm_at: 2,
+    });
+    let recs = serve_rounds_with(&mut server, identity_decoder(), d, 2, cfg, |rec| {
+        if rec.round == 0 {
+            gate_tx.send(()).unwrap();
+        }
+    })
+    .unwrap();
+    assert_eq!((recs[0].workers_included, recs[0].workers_skipped), (2, 1));
+    assert!(recs[0].wait_secs >= 0.1, "grace window not waited: {}", recs[0].wait_secs);
+    assert_eq!((recs[1].workers_included, recs[1].workers_skipped), (3, 0));
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn worker_summary_reports_rounds_actually_completed_on_early_shutdown() {
+    // Regression: the summary used to echo the requested round count
+    // even when the server shut the run down early.
+    let d = 6usize;
+    let (server, worker_ends, _) = inproc_cluster(1);
+    let mut server = server;
+    let mut algo = {
+        let mut rng = Pcg32::new(3);
+        let w0 = quad_src(0, d).init_params(&mut rng);
+        DqganWorker::new(w0, LrSchedule::constant(0.05), Arc::new(Identity))
+    };
+    let summary = std::thread::scope(|s| {
+        let mut end = worker_ends.into_iter().next().unwrap();
+        let algo = &mut algo;
+        let h = s.spawn(move || {
+            let mut src = quad_src(0, d);
+            let mut rng = Pcg32::new(5);
+            // The worker asks for 10 rounds; the server serves 3.
+            worker_loop(&mut end, algo, &mut src, 4, 10, &mut rng, false, None).unwrap()
+        });
+        serve_rounds(&mut server, identity_decoder(), d, 3, |_| {}).unwrap();
+        drop(server); // unblocks the worker's trailing recv
+        h.join().unwrap()
+    });
+    assert_eq!(summary.rounds, 3, "must report completed rounds, not the requested count");
+}
+
+#[test]
+fn kofm_cluster_trains_end_to_end_with_rotating_skips() {
+    // Full distributed run under kofm:2 of M=3: every round closes the
+    // moment the 2nd payload is accepted, so exactly one worker is
+    // skipped per round (whoever arrives last) — and error feedback
+    // still carries the run to the optimum.
+    let cfg = ClusterConfig {
+        algo: AlgoKind::parse("dqgan:linf8").unwrap(),
+        workers: 3,
+        batch: 8,
+        rounds: 1200,
+        lr: LrSchedule::constant(0.1),
+        seed: 11,
+        eval_every: 0,
+        keep_stats: false,
+        agg: AggregatorConfig::streaming_with_policy(PolicyConfig::KofM { k: 2 }),
+    };
+    let report = run_cluster(&cfg, |_m| {
+        let mut rng = Pcg32::new(321);
+        Ok(Box::new(QuadraticOperator::new(12, 0.1, &mut rng)))
+    })
+    .unwrap();
+    for r in &report.records {
+        assert_eq!(
+            (r.workers_included, r.workers_skipped),
+            (2, 1),
+            "kofm:2 closes at exactly the quorum (round {})",
+            r.round
+        );
+    }
+    let target = {
+        let mut rng = Pcg32::new(321);
+        QuadraticOperator::new(12, 0.1, &mut rng).target
+    };
+    let dist = dqgan::util::stats::dist2_sq(&report.worker0.final_params, &target).sqrt();
+    assert!(dist < 0.5, "kofm run must still converge: dist {dist}");
+}
