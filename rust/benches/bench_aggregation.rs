@@ -47,6 +47,9 @@ fn main() {
                 AggMode::Sequential => "sequential",
                 AggMode::Sharded => "sharded",
                 AggMode::Streaming => "streaming",
+                // Not in this A/B's mode list (downlink-side change; see
+                // benches/bench_pipeline.rs).
+                AggMode::Pipelined => "pipelined",
             };
             b.bench_with_throughput(
                 &format!("decode+average/{tag}/M={m}/d={d}"),

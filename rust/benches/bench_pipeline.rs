@@ -1,0 +1,183 @@
+//! PERF/A-B: the pipelined round engine (`--agg pipelined`) under a
+//! **scripted slow receiver** — the scenario async broadcast exists for.
+//! Worker `M−1` never delivers an on-time payload (uplink gates held all
+//! run) *and* is slow to receive its broadcasts (downlink gates held per
+//! round), so under `--agg streaming` the leader's synchronous broadcast
+//! loop blocks on that worker's downlink every round, while `--agg
+//! pipelined` queues the frame onto the worker's writer thread and
+//! immediately gathers round t+1 from the prompt workers.
+//!
+//! The skew is **gate-based, not sleep-based** (the PR-3 [`DelayPlan`]
+//! pattern): in the pipelined arm every round r ≥ 1 asserts, on the
+//! round record itself, that round r−1's downlink gate is *provably
+//! still held* — the gather ran while the previous broadcast was in
+//! flight (and `overlap_secs` reports the overlap directly). In the
+//! streaming arm a monitor thread plays the slow NIC: it releases round
+//! r's downlink gate only once every prompt worker has pushed its round
+//! r+1 payload, so the leader demonstrably sat in `broadcast` for the
+//! window the pipelined arm spends gathering. The A/B then compares the
+//! leaders' summed `wait_secs` (which includes downlink blocking):
+//! pipelined must come out lower.
+
+use dqgan::benchutil::Bench;
+use dqgan::comm::{inproc_cluster_with_plan, DelayPlan, Message, MsgKind, WorkerEnd};
+use dqgan::compress::compressor_from_spec;
+use dqgan::config::{AggMode, AggregatorConfig, PolicyConfig};
+use dqgan::ps::{serve_rounds_with, Decoder};
+use dqgan::util::rng::Pcg32;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+const M: usize = 4;
+const D: usize = 200_003;
+const ROUNDS: u64 = 3;
+const STRAGGLER: u32 = (M - 1) as u32;
+
+fn main() {
+    let mut b = if std::env::var_os("DQGAN_BENCH_MS").is_some() {
+        Bench::new("pipeline")
+    } else {
+        Bench::new("pipeline").with_budget(Duration::from_millis(400), Duration::from_millis(60))
+    };
+
+    let codec = compressor_from_spec("linf8").unwrap();
+    let mut rng = Pcg32::new(29);
+    let wires: Vec<Vec<u8>> = (0..M)
+        .map(|_| {
+            let v = rng.normal_vec(D);
+            let mut wire = Vec::new();
+            codec.compress_encoded(&v, &mut rng, &mut wire);
+            wire
+        })
+        .collect();
+    let decoder: Decoder = {
+        let c = compressor_from_spec("linf8").unwrap();
+        Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+    };
+
+    let mut wait_sums: [(f64, u64); 2] = [(0.0, 0); 2]; // (Σ wait, iterations)
+    for (arm, mode) in [(0usize, AggMode::Streaming), (1usize, AggMode::Pipelined)] {
+        let tag = if arm == 0 { "streaming/sync-broadcast" } else { "pipelined/async-broadcast" };
+        let decoder = decoder.clone();
+        let wires = wires.clone();
+        let acc = &mut wait_sums[arm];
+        b.bench(&format!("slow-receiver/run/{tag}/M={M}/d={D}"), || {
+            let plan = DelayPlan::new();
+            for r in 0..ROUNDS {
+                // The straggler's payloads are never on time, and its
+                // broadcast deliveries are gated per round.
+                plan.hold(STRAGGLER, r);
+                plan.hold_down(STRAGGLER, r);
+            }
+            let (mut server, worker_ends, _) = inproc_cluster_with_plan(M, plan.clone());
+            // Prompt workers signal after each payload send (the
+            // streaming arm's monitor drives gate releases off these).
+            let (sig_tx, sig_rx) = channel::<()>();
+            let handles: Vec<_> = worker_ends
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut w)| {
+                    let wire = wires[i].clone();
+                    let sig = (arm == 0 && (i as u32) != STRAGGLER).then(|| sig_tx.clone());
+                    std::thread::spawn(move || {
+                        for round in 0..ROUNDS {
+                            if w.send(Message::payload(i as u32, round, wire.clone())).is_err()
+                            {
+                                return; // leader gone (straggler teardown)
+                            }
+                            if let Some(s) = &sig {
+                                let _ = s.send(());
+                            }
+                            match w.recv() {
+                                Ok(msg) if msg.kind == MsgKind::Shutdown => return,
+                                Ok(_) => {}
+                                Err(_) => return,
+                            }
+                        }
+                        let _ = w.recv(); // trailing shutdown
+                    })
+                })
+                .collect();
+            drop(sig_tx);
+            // Streaming arm: the monitor releases round r's downlink
+            // gate only after every prompt worker has pushed its round
+            // r+1 payload — the broadcast provably blocked through that
+            // whole production window.
+            let monitor = (arm == 0).then(|| {
+                let plan = plan.clone();
+                std::thread::spawn(move || {
+                    let prompt = M - 1;
+                    let mut count = 0usize;
+                    for r in 0..ROUNDS {
+                        let need = prompt * ((r as usize + 2).min(ROUNDS as usize));
+                        while count < need {
+                            if sig_rx.recv().is_err() {
+                                break;
+                            }
+                            count += 1;
+                        }
+                        plan.release_down(STRAGGLER, r);
+                    }
+                })
+            });
+            let cfg = AggregatorConfig {
+                mode,
+                pipeline_depth: 2,
+                policy: PolicyConfig::KofM { k: M - 1 },
+                ..Default::default()
+            };
+            let plan_probe = plan.clone();
+            let recs = serve_rounds_with(&mut server, decoder.clone(), D, ROUNDS, cfg, |rec| {
+                assert_eq!(rec.workers_included, M - 1);
+                assert_eq!(rec.workers_skipped, 1);
+                if arm == 1 {
+                    if rec.round >= 1 {
+                        // Exact gate-held proof of the overlap: this
+                        // round's record exists while the previous
+                        // round's broadcast delivery is still gated —
+                        // the gather ran concurrently with it.
+                        assert!(plan_probe.is_held_down(STRAGGLER, rec.round - 1));
+                        assert!(
+                            rec.overlap_secs > 0.0,
+                            "round {} gather must overlap the in-flight broadcast",
+                            rec.round
+                        );
+                    }
+                    if rec.round == ROUNDS - 1 {
+                        // Open every gate so the trailing Shutdown can
+                        // drain through the writer threads.
+                        plan_probe.release_all();
+                    }
+                }
+            })
+            .unwrap();
+            plan.release_all();
+            drop(server);
+            for h in handles {
+                h.join().unwrap();
+            }
+            if let Some(m) = monitor {
+                m.join().unwrap();
+            }
+            let wait_sum: f64 = recs.iter().map(|r| r.wait_secs).sum();
+            acc.0 += wait_sum;
+            acc.1 += 1;
+            wait_sum
+        });
+    }
+    let mean = |(s, n): (f64, u64)| if n == 0 { 0.0 } else { s / n as f64 };
+    let (stream, pipe) = (mean(wait_sums[0]), mean(wait_sums[1]));
+    println!(
+        "summed wait_secs per run (mean): streaming {:.3} ms, pipelined {:.3} ms ({:.2}x)",
+        stream * 1e3,
+        pipe * 1e3,
+        if pipe > 0.0 { stream / pipe } else { f64::INFINITY }
+    );
+    assert!(
+        pipe < stream,
+        "pipelined mode must lower summed wait_secs under a slow receiver: \
+         pipelined {pipe} >= streaming {stream}"
+    );
+    b.finish();
+}

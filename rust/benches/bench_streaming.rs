@@ -61,6 +61,9 @@ fn main() {
             AggMode::Sequential => "sequential",
             AggMode::Sharded => "sharded",
             AggMode::Streaming => "streaming",
+            // Pipelining changes the downlink, not this uplink-side A/B
+            // (benches/bench_pipeline.rs covers it).
+            AggMode::Pipelined => "pipelined",
         };
         let mut agg = Aggregator::new(AggregatorConfig { mode, ..Default::default() }, d, m);
         b.bench(&format!("skewed-arrival/round/{tag}/M={m}/d={d}"), || {

@@ -34,23 +34,36 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     let lr = args.get_parse("lr", default_lr)?;
     let policy = PolicyConfig::parse(&args.get_or("policy", "full"))?;
     // Partial policies need the per-arrival hook, which only the
-    // streaming engine has: default to it when --agg wasn't given, and
-    // reject an explicit non-streaming choice early with a clear message.
+    // streaming-engine modes have: default to streaming when --agg
+    // wasn't given, and reject an explicit barrier choice early with a
+    // clear message.
     let mode = match args.get("agg") {
         Some(s) => AggMode::parse(&s)?,
         None if policy != PolicyConfig::Full => AggMode::Streaming,
         None => AggMode::Sharded,
     };
     anyhow::ensure!(
-        policy == PolicyConfig::Full || mode == AggMode::Streaming,
-        "--policy {} requires --agg streaming (got --agg {mode:?})",
+        policy == PolicyConfig::Full || mode.is_streaming(),
+        "--policy {} requires --agg streaming or --agg pipelined (got --agg {mode:?})",
         policy.label()
+    );
+    let pipeline_depth = args.get_parse("pipeline-depth", 2usize)?;
+    anyhow::ensure!(
+        (1..=64).contains(&pipeline_depth),
+        "--pipeline-depth {pipeline_depth} needs 1 <= depth <= 64"
+    );
+    let liveness_rounds = args.get_parse("liveness", 0u64)?;
+    anyhow::ensure!(
+        liveness_rounds == 0 || policy != PolicyConfig::Full,
+        "--liveness only applies to partial round policies (--policy kofm:K|deadline:MS)"
     );
     let agg = AggregatorConfig {
         mode,
         threads: args.get_parse("agg-threads", 0usize)?,
         shard_elems: args.get_parse("agg-shard", AggregatorConfig::default().shard_elems)?,
         policy,
+        pipeline_depth,
+        liveness_rounds,
     };
 
     let cfg = ClusterConfig {

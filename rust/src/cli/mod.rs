@@ -43,8 +43,10 @@ fn print_help() {
 USAGE:
   dqgan train [--algo A] [--model mlp|dcgan] [--workers N] [--batch B]
               [--rounds T] [--lr ETA] [--seed S] [--eval-every K]
-              [--agg sharded|sequential|streaming] [--agg-threads N]
-              [--agg-shard E]
+              [--agg sharded|sequential|streaming|pipelined]
+              [--agg-threads N] [--agg-shard E] [--pipeline-depth D]
+              [--policy full|kofm:K|deadline:MS[,K]] [--liveness R]
+              [--round-csv PATH]
       Train a GAN on the parameter-server runtime.
       Algorithms: dqgan[:comp] (Algorithm 2), dqgan-adam[:comp] (paper §4),
                   cpoadam, cpoadam-gq[:comp], gda
@@ -53,9 +55,15 @@ USAGE:
       Aggregation: the leader's decode+average path. sharded (default)
       fans decode/reduce work across a thread pool; streaming decodes
       each payload as it arrives (overlapping decode with straggler
-      wait); sequential is the single-thread baseline. All three are
-      bitwise-identical. --agg-threads 0 = auto; --agg-shard = f32
-      elements per reduction shard.
+      wait); pipelined additionally queues broadcasts onto per-worker
+      writer threads so a slow receiver no longer stalls the next
+      round's gather (--pipeline-depth bounds the undelivered
+      broadcasts per worker, default 2); sequential is the
+      single-thread baseline. All four are bitwise-identical.
+      --agg-threads 0 = auto; --agg-shard = f32 elements per reduction
+      shard. --liveness R fails a kofm/deadline run when a skipped
+      worker's late payload is more than R rounds behind (dead, not
+      slow; 0 = never, default).
 
   dqgan figures --id fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all [--fast]
       Regenerate a paper figure / theory validation (CSV under results/).

@@ -21,13 +21,33 @@
 //! - A gate held longer than [`DelayPlan::MAX_WAIT`] panics on the
 //!   blocked worker thread: a forgotten `release` becomes a loud test
 //!   failure rather than a CI hang.
+//!
+//! The plan carries two independent gate sets: the **uplink** gates
+//! (worker payload sends — honored by both the in-process and TCP worker
+//! ends) and the **downlink** gates added for the pipelined round engine
+//! ([`DelayPlan::hold_down`] / [`DelayPlan::release_down`]), which model
+//! a *slow receiver*: the leader's delivery of a round-`r` broadcast to
+//! worker `w` blocks while `(w, r)` is down-held, exactly like a socket
+//! write to a stalled peer. Downlink gates are an **in-process-only**
+//! hook (the TCP server end carries no plan; kernel socket buffers would
+//! swallow the stall anyway) — it is how the overlap probes prove "round
+//! t+1 frames decoded while round t's broadcast is provably still in
+//! flight" without sleeps.
 
 use std::collections::HashSet;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+#[derive(Default)]
+struct Gates {
+    /// Uplink gates: worker payload sends.
+    up: HashSet<(u32, u64)>,
+    /// Downlink gates: leader broadcast deliveries (per worker, round).
+    down: HashSet<(u32, u64)>,
+}
+
 struct Inner {
-    held: Mutex<HashSet<(u32, u64)>>,
+    held: Mutex<Gates>,
     cv: Condvar,
 }
 
@@ -49,44 +69,83 @@ impl DelayPlan {
     pub const MAX_WAIT: Duration = Duration::from_secs(30);
 
     pub fn new() -> Self {
-        Self { inner: Arc::new(Inner { held: Mutex::new(HashSet::new()), cv: Condvar::new() }) }
+        Self { inner: Arc::new(Inner { held: Mutex::new(Gates::default()), cv: Condvar::new() }) }
     }
 
     /// Gate worker `worker`'s round-`round` payload send until released.
     pub fn hold(&self, worker: u32, round: u64) {
-        self.inner.held.lock().unwrap().insert((worker, round));
+        self.inner.held.lock().unwrap().up.insert((worker, round));
     }
 
-    /// Open the gate for `(worker, round)` (no-op if never held).
+    /// Open the uplink gate for `(worker, round)` (no-op if never held).
     pub fn release(&self, worker: u32, round: u64) {
-        self.inner.held.lock().unwrap().remove(&(worker, round));
+        self.inner.held.lock().unwrap().up.remove(&(worker, round));
         self.inner.cv.notify_all();
     }
 
-    /// Open every gate (teardown safety for scripted scenarios).
+    /// Gate the delivery of round-`round` broadcast frames to worker
+    /// `worker` until released — a scripted *slow receiver*.
+    pub fn hold_down(&self, worker: u32, round: u64) {
+        self.inner.held.lock().unwrap().down.insert((worker, round));
+    }
+
+    /// Open the downlink gate for `(worker, round)` (no-op if never held).
+    pub fn release_down(&self, worker: u32, round: u64) {
+        self.inner.held.lock().unwrap().down.remove(&(worker, round));
+        self.inner.cv.notify_all();
+    }
+
+    /// Open every gate, uplink and downlink (teardown safety for
+    /// scripted scenarios).
     pub fn release_all(&self) {
-        self.inner.held.lock().unwrap().clear();
+        let mut gates = self.inner.held.lock().unwrap();
+        gates.up.clear();
+        gates.down.clear();
+        drop(gates);
         self.inner.cv.notify_all();
     }
 
-    /// Whether `(worker, round)` is currently gated — the structural
-    /// assertion scripted benchmarks use ("the round closed while this
-    /// gate was still held").
+    /// Whether `(worker, round)` is currently uplink-gated — the
+    /// structural assertion scripted benchmarks use ("the round closed
+    /// while this gate was still held").
     pub fn is_held(&self, worker: u32, round: u64) -> bool {
-        self.inner.held.lock().unwrap().contains(&(worker, round))
+        self.inner.held.lock().unwrap().up.contains(&(worker, round))
     }
 
-    /// Block while `(worker, round)` is gated (called by the transport
-    /// on the sending worker's thread).
+    /// Whether the round-`round` broadcast delivery to `worker` is
+    /// currently downlink-gated ("round t+1 was gathered while round t's
+    /// broadcast was provably still in flight").
+    pub fn is_held_down(&self, worker: u32, round: u64) -> bool {
+        self.inner.held.lock().unwrap().down.contains(&(worker, round))
+    }
+
+    /// Block while `(worker, round)` is uplink-gated (called by the
+    /// transport on the sending worker's thread).
     pub(crate) fn wait(&self, worker: u32, round: u64) {
+        self.wait_gate(worker, round, false);
+    }
+
+    /// Block while `(worker, round)` is downlink-gated (called by the
+    /// transport on whichever thread delivers broadcasts — the leader
+    /// itself on the synchronous path, a writer thread on the async one).
+    pub(crate) fn wait_down(&self, worker: u32, round: u64) {
+        self.wait_gate(worker, round, true);
+    }
+
+    fn wait_gate(&self, worker: u32, round: u64, down: bool) {
         let start = Instant::now();
         let mut held = self.inner.held.lock().unwrap();
-        while held.contains(&(worker, round)) {
+        loop {
+            let set = if down { &held.down } else { &held.up };
+            if !set.contains(&(worker, round)) {
+                return;
+            }
             let elapsed = start.elapsed();
             assert!(
                 elapsed < Self::MAX_WAIT,
-                "DelayPlan gate (worker {worker}, round {round}) held for more than \
+                "DelayPlan {} gate (worker {worker}, round {round}) held for more than \
                  {:?} — missing release()?",
+                if down { "downlink" } else { "uplink" },
                 Self::MAX_WAIT
             );
             let (guard, _) =
@@ -136,8 +195,39 @@ mod tests {
         let plan = DelayPlan::new();
         plan.hold(0, 0);
         plan.hold(1, 5);
+        plan.hold_down(2, 3);
         plan.release_all();
         plan.wait(0, 0);
         plan.wait(1, 5);
+        plan.wait_down(2, 3);
+    }
+
+    #[test]
+    fn downlink_gates_are_independent_of_uplink_gates() {
+        let plan = DelayPlan::new();
+        plan.hold_down(1, 4);
+        assert!(plan.is_held_down(1, 4));
+        // The uplink gate with the same key is untouched, and vice versa.
+        assert!(!plan.is_held(1, 4));
+        plan.wait(1, 4); // must not block
+        plan.hold(1, 4);
+        plan.release_down(1, 4);
+        assert!(!plan.is_held_down(1, 4));
+        assert!(plan.is_held(1, 4));
+        plan.wait_down(1, 4); // must not block
+        plan.release(1, 4);
+    }
+
+    #[test]
+    fn held_downlink_gate_blocks_until_released() {
+        let plan = DelayPlan::new();
+        plan.hold_down(0, 2);
+        let p2 = plan.clone();
+        let h = std::thread::spawn(move || {
+            p2.wait_down(0, 2);
+            true
+        });
+        plan.release_down(0, 2);
+        assert!(h.join().unwrap());
     }
 }

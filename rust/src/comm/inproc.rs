@@ -6,8 +6,8 @@
 use super::delay::DelayPlan;
 use super::message::{Message, MsgKind};
 use super::{
-    validate_round_batch, ArrivalSet, ByteCounter, ServerEnd, StreamDirective, StreamOutcome,
-    WorkerEnd,
+    validate_round_batch, ArrivalSet, BroadcastHandle, ByteCounter, ServerEnd, StreamDirective,
+    StreamOutcome, WorkerEnd, WriterPool,
 };
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -52,6 +52,48 @@ pub struct InprocServerEnd {
     from_workers: Receiver<Message>,
     to_workers: Vec<Sender<Message>>,
     counter: Arc<ByteCounter>,
+    /// Straggler-injection schedule; the *downlink* gates model a slow
+    /// receiver, blocking broadcast deliveries per (worker, round).
+    plan: Option<DelayPlan>,
+    /// Per-worker queue bound for async broadcasts (`--pipeline-depth`);
+    /// effective once the writer threads spawn.
+    pipeline_depth: usize,
+    /// Per-worker downlink writer threads ([`WriterPool`]). Spawned
+    /// lazily on the first `broadcast_async`; once active, *all*
+    /// broadcasts route through them (the writers own the downlink order
+    /// from then on), and dropping this end joins them after their
+    /// queues drain — clean shutdown loses no frame.
+    writers: Option<WriterPool>,
+}
+
+impl InprocServerEnd {
+    /// Spawn the downlink [`WriterPool`] (idempotent): the delivery step
+    /// waits out any scripted downlink gate, sends the frame to the
+    /// worker's channel, and counts its wire bytes — per-worker frame
+    /// order and byte accounting are exactly the synchronous path's, but
+    /// one gated/slow worker no longer blocks the leader or its peers.
+    fn start_writers(&mut self) -> anyhow::Result<()> {
+        if self.writers.is_some() {
+            return Ok(());
+        }
+        let counter = Arc::clone(&self.counter);
+        let plan = self.plan.clone();
+        let pool = WriterPool::spawn(
+            "dqgan-inproc-writer",
+            self.to_workers.clone(),
+            self.pipeline_depth,
+            move |w, down: &mut Sender<Message>, msg: &Message| {
+                if let Some(plan) = &plan {
+                    plan.wait_down(w as u32, msg.round);
+                }
+                down.send(msg.clone()).map_err(|_| anyhow::anyhow!("worker hung up"))?;
+                counter.add_down(msg.frame_len());
+                Ok(())
+            },
+        )?;
+        self.writers = Some(pool);
+        Ok(())
+    }
 }
 
 impl ServerEnd for InprocServerEnd {
@@ -122,11 +164,35 @@ impl ServerEnd for InprocServerEnd {
     }
 
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
-        for tx in &self.to_workers {
+        if self.writers.is_some() {
+            // Writer threads own the downlink from the first async
+            // broadcast on: route through them (preserving per-worker
+            // frame order) and block until every delivery is out —
+            // exactly the synchronous contract.
+            return self.broadcast_async(msg)?.wait();
+        }
+        for (w, tx) in self.to_workers.iter().enumerate() {
+            // A held downlink gate models a slow receiver: the delivery
+            // (and on this synchronous path, the whole round loop)
+            // blocks before the frame becomes visible to the worker.
+            if let Some(plan) = &self.plan {
+                plan.wait_down(w as u32, msg.round);
+            }
             self.counter.add_down(msg.frame_len());
             tx.send(msg.clone()).map_err(|_| anyhow::anyhow!("worker hung up"))?;
         }
         Ok(())
+    }
+
+    fn broadcast_async(&mut self, msg: Message) -> anyhow::Result<BroadcastHandle> {
+        self.start_writers()?;
+        self.writers.as_ref().expect("writers started").enqueue(msg)
+    }
+
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        if self.writers.is_none() {
+            self.pipeline_depth = depth.max(1);
+        }
     }
 
     fn workers(&self) -> usize {
@@ -174,6 +240,9 @@ fn build_cluster(
         from_workers: up_rx,
         to_workers: down_txs,
         counter: Arc::clone(&counter),
+        plan,
+        pipeline_depth: 2,
+        writers: None,
     };
     (server, worker_ends, counter)
 }
@@ -317,6 +386,101 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn async_broadcast_preserves_order_and_byte_accounting() {
+        let (mut server, workers, counter) = inproc_cluster(2);
+        let frames: Vec<Message> =
+            (0..4u64).map(|r| Message::broadcast(r, vec![r as u8; 8])).collect();
+        let mut handles = Vec::new();
+        for f in &frames {
+            handles.push(server.broadcast_async(f.clone()).unwrap());
+        }
+        // A later synchronous broadcast routes through the same writer
+        // queues, so cross-path order is preserved too.
+        server.broadcast(Message::shutdown(4)).unwrap();
+        for h in &handles {
+            h.wait().unwrap();
+            assert!(h.is_done());
+            assert!(h.completed_at().is_some());
+        }
+        // Exact downlink accounting: every frame counted once per worker.
+        let expected: u64 = frames
+            .iter()
+            .map(|f| f.frame_len() as u64)
+            .chain(std::iter::once(Message::shutdown(4).frame_len() as u64))
+            .sum::<u64>()
+            * 2;
+        assert_eq!(counter.down_total(), expected);
+        for mut w in workers {
+            for f in &frames {
+                assert_eq!(&w.recv().unwrap(), f, "per-worker frame order");
+            }
+            assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+        }
+    }
+
+    #[test]
+    fn dropping_the_server_drains_queued_async_broadcasts() {
+        let (mut server, workers, _) = inproc_cluster(2);
+        server.broadcast_async(Message::broadcast(0, vec![5])).unwrap();
+        server.broadcast_async(Message::shutdown(1)).unwrap();
+        // No waiting: Drop must join the writers after they drain, so
+        // neither frame (in particular the Shutdown) is lost.
+        drop(server);
+        for mut w in workers {
+            assert_eq!(w.recv().unwrap().payload, vec![5]);
+            assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+        }
+    }
+
+    #[test]
+    fn downlink_gate_blocks_only_the_gated_workers_writer() {
+        // Worker 1's round-0 broadcast delivery is gated; worker 0 must
+        // receive it anyway (per-worker writers: no head-of-line
+        // blocking across workers), and the handle must stay incomplete
+        // until the gate opens.
+        let plan = DelayPlan::new();
+        plan.hold_down(1, 0);
+        let (mut server, mut workers, _) = inproc_cluster_with_plan(2, plan.clone());
+        let h = server.broadcast_async(Message::broadcast(0, vec![9])).unwrap();
+        let b0 = workers[0].recv().unwrap();
+        assert_eq!(b0.payload, vec![9]);
+        // Worker 0 has its frame while worker 1's delivery is provably
+        // still gate-held — the broadcast is in flight, not done.
+        assert!(plan.is_held_down(1, 0));
+        assert!(!h.is_done());
+        plan.release_down(1, 0);
+        h.wait().unwrap();
+        assert_eq!(workers[1].recv().unwrap().payload, vec![9]);
+    }
+
+    #[test]
+    fn sync_broadcast_waits_out_downlink_gates_on_the_leader_thread() {
+        // Without writer threads the downlink gate blocks the leader's
+        // own broadcast loop — the slow-receiver model the pipelined
+        // mode's A/B benchmark compares against.
+        let plan = DelayPlan::new();
+        plan.hold_down(1, 0);
+        let (mut server, mut workers, _) = inproc_cluster_with_plan(2, plan.clone());
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+        let t = std::thread::spawn(move || {
+            server.broadcast(Message::broadcast(0, vec![1])).unwrap();
+            done_tx.send(()).unwrap();
+            server
+        });
+        // Worker 0's delivery precedes the gate (id order), so it lands
+        // while the broadcast call is still blocked on worker 1's gate.
+        assert_eq!(workers[0].recv().unwrap().payload, vec![1]);
+        assert!(
+            done_rx.try_recv().is_err(),
+            "broadcast must still be blocked on the held downlink gate"
+        );
+        plan.release_down(1, 0);
+        done_rx.recv().unwrap();
+        assert_eq!(workers[1].recv().unwrap().payload, vec![1]);
+        drop(t.join().unwrap());
     }
 
     #[test]

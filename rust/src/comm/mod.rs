@@ -26,8 +26,240 @@ pub use message::{bitmap_included, read_inclusion_bitmap, Message, MsgKind};
 pub use sim::NetworkModel;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// Completion handle for one [`ServerEnd::broadcast_async`] call: tracks
+/// the per-worker deliveries of that frame. Cheap to clone (each writer
+/// thread holds one clone and marks its delivery off).
+///
+/// "Delivered" means the frame left the leader — written to the worker's
+/// socket (TCP) or pushed into its downlink channel (in-process) — not
+/// that the worker has read it; that is exactly what the synchronous
+/// [`ServerEnd::broadcast`] loop guaranteed per socket.
+#[derive(Clone)]
+pub struct BroadcastHandle {
+    inner: Arc<HandleInner>,
+}
+
+struct HandleInner {
+    state: Mutex<HandleState>,
+    cv: Condvar,
+}
+
+struct HandleState {
+    remaining: usize,
+    completed_at: Option<Instant>,
+    error: Option<String>,
+}
+
+impl BroadcastHandle {
+    /// A handle awaiting `workers` deliveries. With `workers == 0` it is
+    /// born complete (the default synchronous fallback uses this).
+    pub(crate) fn new(workers: usize) -> Self {
+        Self {
+            inner: Arc::new(HandleInner {
+                state: Mutex::new(HandleState {
+                    remaining: workers,
+                    completed_at: if workers == 0 { Some(Instant::now()) } else { None },
+                    error: None,
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// One worker's delivery finished successfully.
+    pub(crate) fn mark_delivered(&self) {
+        self.finish_one(None);
+    }
+
+    /// One worker's delivery failed; the first failure is kept and
+    /// surfaced by [`Self::wait`].
+    pub(crate) fn mark_failed(&self, what: &str) {
+        self.finish_one(Some(what));
+    }
+
+    fn finish_one(&self, err: Option<&str>) {
+        let mut st = self.inner.state.lock().unwrap();
+        if let Some(what) = err {
+            if st.error.is_none() {
+                st.error = Some(what.to_string());
+            }
+        }
+        st.remaining = st.remaining.saturating_sub(1);
+        if st.remaining == 0 && st.completed_at.is_none() {
+            st.completed_at = Some(Instant::now());
+        }
+        drop(st);
+        self.inner.cv.notify_all();
+    }
+
+    /// Whether every per-worker delivery has finished (successfully or
+    /// not). `false` means the broadcast is provably still in flight —
+    /// the structural fact the overlap probes assert.
+    pub fn is_done(&self) -> bool {
+        self.inner.state.lock().unwrap().remaining == 0
+    }
+
+    /// When the last delivery finished (`None` while still in flight) —
+    /// the input to `RoundRecord::overlap_secs`.
+    pub fn completed_at(&self) -> Option<Instant> {
+        self.inner.state.lock().unwrap().completed_at
+    }
+
+    /// Block until every delivery has finished; surfaces the first
+    /// per-worker failure. This is how a synchronous broadcast is
+    /// expressed once writer threads own the downlink.
+    pub fn wait(&self) -> anyhow::Result<()> {
+        let mut st = self.inner.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        match &st.error {
+            Some(e) => anyhow::bail!("broadcast delivery failed: {e}"),
+            None => Ok(()),
+        }
+    }
+}
+
+/// One queued downlink delivery: a completion guard around the broadcast
+/// handle. If it is dropped without an explicit outcome — a writer thread
+/// panicking (e.g. the `DelayPlan` anti-hang assertion) or tearing down
+/// with frames still queued — the drop marks the delivery failed, so
+/// [`BroadcastHandle::wait`] can never hang on an abandoned queue.
+pub(crate) struct PendingDelivery {
+    handle: BroadcastHandle,
+    done: bool,
+}
+
+impl PendingDelivery {
+    fn new(handle: BroadcastHandle) -> Self {
+        Self { handle, done: false }
+    }
+
+    fn delivered(mut self) {
+        self.done = true;
+        self.handle.mark_delivered();
+    }
+
+    fn failed(mut self, what: &str) {
+        self.done = true;
+        self.handle.mark_failed(what);
+    }
+}
+
+impl Drop for PendingDelivery {
+    fn drop(&mut self) {
+        if !self.done {
+            self.handle.mark_failed("delivery abandoned (writer thread exited)");
+        }
+    }
+}
+
+/// The per-worker downlink writer subsystem both transports share: one
+/// thread per worker draining a bounded FIFO of queued broadcast frames.
+/// The transport supplies only the delivery step (`deliver(w, sink, msg)`
+/// — socket write on TCP, gate-wait + channel send in-process), which
+/// also owns that transport's downlink byte accounting. Guarantees:
+///
+/// - per-worker frame order is total (one FIFO per worker);
+/// - frames are shared, not copied, across writers (`Arc<Message>`);
+/// - a delivery failure is sticky per worker (later frames for it fail
+///   fast), is surfaced by [`Self::enqueue`] on the next call, and every
+///   affected [`BroadcastHandle`] completes with the error — never hangs;
+/// - dropping the pool closes the queues and **joins** the writers, so
+///   everything already queued (e.g. a trailing `Shutdown`) is delivered
+///   before the sinks close.
+pub(crate) struct WriterPool {
+    txs: Vec<SyncSender<(Arc<Message>, PendingDelivery)>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    error: Arc<Mutex<Option<String>>>,
+}
+
+impl WriterPool {
+    /// Spawn one named writer thread per sink with queue bound `depth`.
+    pub(crate) fn spawn<S, D>(
+        thread_prefix: &str,
+        sinks: Vec<S>,
+        depth: usize,
+        deliver: D,
+    ) -> anyhow::Result<Self>
+    where
+        S: Send + 'static,
+        D: Fn(usize, &mut S, &Message) -> anyhow::Result<()> + Send + Sync + Clone + 'static,
+    {
+        let error = Arc::new(Mutex::new(None));
+        let mut txs = Vec::with_capacity(sinks.len());
+        let mut threads = Vec::with_capacity(sinks.len());
+        for (w, mut sink) in sinks.into_iter().enumerate() {
+            let (tx, rx) = sync_channel::<(Arc<Message>, PendingDelivery)>(depth.max(1));
+            let deliver = deliver.clone();
+            let error = Arc::clone(&error);
+            let handle = std::thread::Builder::new()
+                .name(format!("{thread_prefix}-{w}"))
+                .spawn(move || {
+                    let mut failed: Option<String> = None;
+                    while let Ok((msg, pd)) = rx.recv() {
+                        if let Some(what) = &failed {
+                            pd.failed(what);
+                            continue;
+                        }
+                        match deliver(w, &mut sink, &msg) {
+                            Ok(()) => pd.delivered(),
+                            Err(e) => {
+                                let what = format!("downlink to worker {w} failed: {e}");
+                                let mut g = error.lock().unwrap();
+                                if g.is_none() {
+                                    *g = Some(what.clone());
+                                }
+                                drop(g);
+                                pd.failed(&what);
+                                failed = Some(what);
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| anyhow::anyhow!("spawn {thread_prefix}-{w}: {e}"))?;
+            txs.push(tx);
+            threads.push(handle);
+        }
+        Ok(Self { txs, threads, error })
+    }
+
+    /// Queue `msg` for every worker. Blocks per worker only when that
+    /// worker already has `depth` undelivered frames (backpressure); a
+    /// prior delivery failure is surfaced here instead.
+    pub(crate) fn enqueue(&self, msg: Message) -> anyhow::Result<BroadcastHandle> {
+        if let Some(e) = self.error.lock().unwrap().clone() {
+            anyhow::bail!("async broadcast failed: {e}");
+        }
+        let handle = BroadcastHandle::new(self.txs.len());
+        let msg = Arc::new(msg);
+        for tx in &self.txs {
+            // A send only fails if the writer thread is gone; the
+            // returned PendingDelivery drops and marks the failure, so
+            // the handle still completes for any concurrent waiter.
+            tx.send((Arc::clone(&msg), PendingDelivery::new(handle.clone())))
+                .map_err(|_| anyhow::anyhow!("downlink writer thread exited"))?;
+        }
+        Ok(handle)
+    }
+}
+
+impl Drop for WriterPool {
+    fn drop(&mut self) {
+        // Close the queues, then join: writers drain what is already
+        // queued and exit. A writer parked on a scripted downlink gate
+        // panics after `DelayPlan::MAX_WAIT`; its pending deliveries are
+        // drop-marked failed either way, and the join result is ignored.
+        self.txs.clear();
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
 
 /// Validate one gathered barrier batch (shared by every [`ServerEnd`]
 /// implementation): fail fast on `WorkerError` frames and on mixed
@@ -131,8 +363,36 @@ pub trait ServerEnd: Send {
     ) -> anyhow::Result<StreamOutcome> {
         anyhow::bail!("this transport does not support timed streaming gathers")
     }
-    /// Broadcast one message to every worker.
+    /// Broadcast one message to every worker (blocking until each
+    /// delivery has left the leader).
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()>;
+    /// Queue one message for delivery to every worker **without blocking
+    /// on slow receivers**: per-worker writer threads (mirroring the
+    /// reader threads of the streaming gathers) own the downlink from the
+    /// first call on, so one stalled receiver no longer delays the next
+    /// round's gather. Guarantees per implementation:
+    ///
+    /// - per-worker frame order is preserved (one FIFO queue per worker,
+    ///   and later synchronous [`Self::broadcast`] calls route through
+    ///   the same queues);
+    /// - downlink byte accounting is identical to the synchronous path
+    ///   (each writer counts its frame when the write completes);
+    /// - a bounded queue per worker (see `set_pipeline_depth`) applies
+    ///   backpressure: when a worker already has `depth` undelivered
+    ///   frames queued, the next call blocks until its writer drains one.
+    ///
+    /// The returned [`BroadcastHandle`] reports delivery completion; the
+    /// default implementation degrades to the blocking [`Self::broadcast`]
+    /// and returns an already-completed handle.
+    fn broadcast_async(&mut self, msg: Message) -> anyhow::Result<BroadcastHandle> {
+        self.broadcast(msg)?;
+        Ok(BroadcastHandle::new(0))
+    }
+    /// Bound the per-worker queue of not-yet-delivered async broadcasts
+    /// (the `--pipeline-depth` knob). Takes effect only before the first
+    /// [`Self::broadcast_async`] call spawns the writer threads; the
+    /// default implementation ignores it.
+    fn set_pipeline_depth(&mut self, _depth: usize) {}
     /// Number of workers.
     fn workers(&self) -> usize;
 }
@@ -221,6 +481,85 @@ impl ByteCounter {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn broadcast_handle_completes_after_every_delivery() {
+        let h = BroadcastHandle::new(2);
+        assert!(!h.is_done());
+        assert!(h.completed_at().is_none());
+        h.mark_delivered();
+        assert!(!h.is_done(), "one of two deliveries is not completion");
+        let h2 = h.clone();
+        let t = std::thread::spawn(move || h2.wait());
+        h.mark_delivered();
+        t.join().unwrap().unwrap();
+        assert!(h.is_done());
+        assert!(h.completed_at().is_some());
+        // Zero-worker handles (the sync fallback) are born complete.
+        let done = BroadcastHandle::new(0);
+        assert!(done.is_done());
+        done.wait().unwrap();
+    }
+
+    #[test]
+    fn broadcast_handle_surfaces_the_first_failure() {
+        let h = BroadcastHandle::new(2);
+        h.mark_failed("worker 1 hung up");
+        h.mark_delivered();
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains("worker 1 hung up"), "{err}");
+        assert!(h.is_done());
+    }
+
+    #[test]
+    fn abandoned_pending_delivery_fails_the_handle_instead_of_hanging() {
+        // The anti-hang guard: a delivery dropped without an outcome (a
+        // panicking or exiting writer) must complete the handle with an
+        // error so wait() returns.
+        let h = BroadcastHandle::new(1);
+        let pd = PendingDelivery::new(h.clone());
+        drop(pd);
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains("abandoned"), "{err}");
+    }
+
+    #[test]
+    fn writer_pool_delivers_in_order_and_reports_sticky_failures() {
+        // Two sinks: sink 0 collects, sink 1 fails on its second frame.
+        // Order must be preserved on the healthy sink, the failure must
+        // be sticky (frame 3 on sink 1 fails without delivery), and
+        // every handle must complete.
+        let collected: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink0 = Arc::clone(&collected);
+        let pool = WriterPool::spawn(
+            "test-writer",
+            vec![0usize, 1usize],
+            2,
+            move |w, _sink, msg: &Message| {
+                if w == 0 {
+                    sink0.lock().unwrap().push(msg.round);
+                    Ok(())
+                } else if msg.round < 1 {
+                    Ok(())
+                } else {
+                    anyhow::bail!("boom")
+                }
+            },
+        )
+        .unwrap();
+        let h0 = pool.enqueue(Message::broadcast(0, vec![])).unwrap();
+        let h1 = pool.enqueue(Message::broadcast(1, vec![])).unwrap();
+        h0.wait().unwrap();
+        let err = h1.wait().unwrap_err();
+        assert!(err.to_string().contains("worker 1"), "{err}");
+        assert!(err.to_string().contains("boom"), "{err}");
+        // Sticky: once a handle has reported the failure, the error was
+        // recorded first, so the next enqueue surfaces it up front.
+        let e = pool.enqueue(Message::broadcast(2, vec![])).unwrap_err();
+        assert!(e.to_string().contains("boom"), "{e}");
+        drop(pool); // joins the writers
+        assert_eq!(*collected.lock().unwrap(), vec![0, 1]);
+    }
 
     #[test]
     fn arrival_set_enforces_barrier_invariants() {

@@ -9,10 +9,11 @@
 //! Setup is two-phase so the ephemeral port is known before workers
 //! connect: [`TcpServerBuilder::listen`] → spawn workers → `accept(m)`.
 
+use super::delay::DelayPlan;
 use super::message::{Message, MsgKind};
 use super::{
-    validate_round_batch, ArrivalSet, ByteCounter, ServerEnd, StreamDirective, StreamOutcome,
-    WorkerEnd,
+    validate_round_batch, ArrivalSet, BroadcastHandle, ByteCounter, ServerEnd, StreamDirective,
+    StreamOutcome, WorkerEnd, WriterPool,
 };
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -81,6 +82,8 @@ impl TcpServerBuilder {
             streams: streams.into_iter().map(|s| s.unwrap()).collect(),
             counter: ByteCounter::new(),
             readers: None,
+            pipeline_depth: 2,
+            writers: None,
         })
     }
 }
@@ -90,16 +93,32 @@ pub struct TcpWorkerEnd {
     id: u32,
     stream: TcpStream,
     counter: Arc<ByteCounter>,
+    /// Straggler-injection schedule (tests/benches only) — the same
+    /// *uplink* gate/permit contract the in-process worker end honors,
+    /// so the cross-transport equivalence suites can scramble TCP
+    /// arrival orders deterministically too. (Downlink gates are an
+    /// in-process-only hook; see `comm/delay.rs`.)
+    plan: Option<DelayPlan>,
 }
 
 impl TcpWorkerEnd {
     /// Connect to `addr` and register with the given worker id.
     pub fn connect(addr: &str, id: u32) -> anyhow::Result<Self> {
+        Self::connect_with_plan(addr, id, None)
+    }
+
+    /// [`Self::connect`] with a [`DelayPlan`] attached: payload sends
+    /// consult the plan's uplink gates before hitting the socket.
+    pub fn connect_with_plan(
+        addr: &str,
+        id: u32,
+        plan: Option<DelayPlan>,
+    ) -> anyhow::Result<Self> {
         let mut stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         // Registration: a Payload-kind hello with round u64::MAX.
         write_frame(&mut stream, &Message::payload(id, u64::MAX, Vec::new()))?;
-        Ok(Self { id, stream, counter: ByteCounter::new() })
+        Ok(Self { id, stream, counter: ByteCounter::new(), plan })
     }
 
     /// This worker's byte counters (uplink = sent, downlink = received).
@@ -110,6 +129,14 @@ impl TcpWorkerEnd {
 
 impl WorkerEnd for TcpWorkerEnd {
     fn send(&mut self, msg: Message) -> anyhow::Result<()> {
+        // Deterministic straggler injection, mirroring the in-process
+        // worker end: a held gate blocks the payload before it reaches
+        // the wire.
+        if msg.kind == MsgKind::Payload {
+            if let Some(plan) = &self.plan {
+                plan.wait(msg.worker, msg.round);
+            }
+        }
         let n = write_frame(&mut self.stream, &msg)?;
         self.counter.add_up(n);
         Ok(())
@@ -137,11 +164,49 @@ pub struct TcpServerEnd {
     /// streaming gather; once active, *all* receives go through it (the
     /// reader threads own the read halves from then on).
     readers: Option<Receiver<anyhow::Result<Message>>>,
+    /// Per-worker queue bound for async broadcasts (`--pipeline-depth`).
+    pipeline_depth: usize,
+    /// Per-worker downlink writer threads ([`WriterPool`]), mirroring
+    /// `readers`: spawned lazily on the first `broadcast_async`, and
+    /// from then on *all* broadcasts route through them (the writer
+    /// threads own the write halves, so per-worker frame order stays
+    /// total). Dropping this end joins them after their queues drain, so
+    /// a queued trailing `Shutdown` frame is flushed before the sockets
+    /// close.
+    writers: Option<WriterPool>,
 }
 
 impl TcpServerEnd {
     pub fn counter(&self) -> Arc<ByteCounter> {
         Arc::clone(&self.counter)
+    }
+
+    /// Spawn the downlink [`WriterPool`] over dup'd write halves
+    /// (idempotent), the mirror image of [`Self::start_readers`]: the
+    /// delivery step writes the frame and counts its wire bytes when the
+    /// write completes — identical totals to the synchronous loop.
+    fn start_writers(&mut self) -> anyhow::Result<()> {
+        if self.writers.is_some() {
+            return Ok(());
+        }
+        // Clone every write half up front so a dup failure spawns nothing.
+        let mut write_halves = Vec::with_capacity(self.streams.len());
+        for s in &self.streams {
+            write_halves.push(s.try_clone()?);
+        }
+        let counter = Arc::clone(&self.counter);
+        let pool = WriterPool::spawn(
+            "dqgan-tcp-writer",
+            write_halves,
+            self.pipeline_depth,
+            move |_w, half: &mut TcpStream, msg: &Message| {
+                let n = write_frame(half, msg)?;
+                counter.add_down(n);
+                Ok(())
+            },
+        )?;
+        self.writers = Some(pool);
+        Ok(())
     }
 
     /// Spawn one detached reader thread per worker socket (idempotent).
@@ -281,11 +346,28 @@ impl ServerEnd for TcpServerEnd {
     }
 
     fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
+        if self.writers.is_some() {
+            // Writer threads own the write halves: route through their
+            // FIFOs (preserving per-worker frame order) and block until
+            // every write is out — the synchronous contract.
+            return self.broadcast_async(msg)?.wait();
+        }
         for s in &mut self.streams {
             let n = write_frame(s, &msg)?;
             self.counter.add_down(n);
         }
         Ok(())
+    }
+
+    fn broadcast_async(&mut self, msg: Message) -> anyhow::Result<BroadcastHandle> {
+        self.start_writers()?;
+        self.writers.as_ref().expect("writers started").enqueue(msg)
+    }
+
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        if self.writers.is_none() {
+            self.pipeline_depth = depth.max(1);
+        }
     }
 
     fn workers(&self) -> usize {
@@ -424,6 +506,129 @@ mod tests {
             .unwrap();
         assert_eq!(outcome, StreamOutcome::DeadlineExpired);
         drop(server); // unblocks the workers' trailing recv
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn async_broadcast_preserves_per_worker_frame_order_and_byte_accounting() {
+        // Writer-thread regressions: frames queued with broadcast_async
+        // (plus a trailing synchronous broadcast routed through the same
+        // queues) arrive at every worker in exactly enqueue order, and
+        // the server's downlink counter equals the frame_len + prefix
+        // sums once every handle reports delivery.
+        let m = 2;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let frames: Vec<Message> =
+            (0..5u64).map(|r| Message::broadcast(r, vec![r as u8; 6])).collect();
+        let expected = frames.clone();
+        let workers: Vec<_> = (0..m as u32)
+            .map(|id| {
+                let expected = expected.clone();
+                std::thread::spawn(move || {
+                    let mut w = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+                    for f in &expected {
+                        assert_eq!(&w.recv().unwrap(), f, "worker {id} frame order");
+                    }
+                    assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+                    w.counter().down_total()
+                })
+            })
+            .collect();
+        let mut server = builder.accept(m).unwrap();
+        let mut handles = Vec::new();
+        for f in &frames {
+            handles.push(server.broadcast_async(f.clone()).unwrap());
+        }
+        server.broadcast(Message::shutdown(5)).unwrap();
+        for h in &handles {
+            h.wait().unwrap();
+        }
+        let per_worker: u64 = frames
+            .iter()
+            .map(|f| (f.frame_len() + 4) as u64)
+            .chain(std::iter::once((Message::shutdown(5).frame_len() + 4) as u64))
+            .sum();
+        assert_eq!(server.counter().down_total(), per_worker * m as u64);
+        for w in workers {
+            assert_eq!(w.join().unwrap(), per_worker, "worker-side downlink accounting");
+        }
+    }
+
+    #[test]
+    fn dropping_the_server_drains_queued_async_broadcasts() {
+        // Clean-shutdown regression: broadcasts queued via
+        // broadcast_async — including the final Shutdown — must reach
+        // the workers even when the server end is dropped immediately,
+        // without waiting on any handle (Drop joins the writers after
+        // their queues drain).
+        let m = 2;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let workers: Vec<_> = (0..m as u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.kind, MsgKind::Broadcast);
+                    assert_eq!(b.payload, vec![7; 3]);
+                    assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+                })
+            })
+            .collect();
+        let mut server = builder.accept(m).unwrap();
+        server.broadcast_async(Message::broadcast(0, vec![7; 3])).unwrap();
+        server.broadcast_async(Message::shutdown(1)).unwrap();
+        drop(server);
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn gated_tcp_worker_send_blocks_until_released() {
+        // The DelayPlan contract now holds on TCP worker ends too: a
+        // held uplink gate keeps the payload off the wire.
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let plan = DelayPlan::new();
+        plan.hold(1, 0);
+        let plans: Vec<_> = (0..2u32).map(|_| plan.clone()).collect();
+        let workers: Vec<_> = plans
+            .into_iter()
+            .enumerate()
+            .map(|(id, plan)| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorkerEnd::connect_with_plan(
+                        &addr.to_string(),
+                        id as u32,
+                        Some(plan),
+                    )
+                    .unwrap();
+                    w.send(Message::payload(id as u32, 0, vec![id as u8])).unwrap();
+                    let _ = w.recv();
+                })
+            })
+            .collect();
+        let mut server = builder.accept(2).unwrap();
+        let mut seen = Vec::new();
+        server
+            .recv_round_streaming(&mut |msg| {
+                if seen.is_empty() {
+                    // Worker 0's frame arrived while worker 1's uplink
+                    // gate is provably still held.
+                    assert_eq!(msg.worker, 0);
+                    assert!(plan.is_held(1, 0));
+                    plan.release(1, 0);
+                }
+                seen.push(msg.worker);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(seen, vec![0, 1]);
+        server.broadcast(Message::shutdown(0)).unwrap();
         for w in workers {
             w.join().unwrap();
         }

@@ -22,20 +22,36 @@ pub enum AggMode {
     /// (overlapping decode with the wait for stragglers), then the same
     /// shard-parallel reduce runs once the barrier completes.
     Streaming,
+    /// The streaming engine plus a fully pipelined round loop: the
+    /// broadcast is queued onto per-worker writer threads
+    /// (`ServerEnd::broadcast_async`) instead of written serially on the
+    /// leader thread, so one slow receiver no longer delays the next
+    /// round's gather, and frames for round t+1 decode on arrival (into
+    /// the aggregator's second slot bank) while round t's broadcast is
+    /// still in flight. Output is bitwise-identical to `Streaming` —
+    /// scheduling changes only, never the reduced values.
+    Pipelined,
 }
 
 impl AggMode {
-    /// Parse a CLI string: `sharded`/`parallel`, `sequential`/`seq` or
-    /// `streaming`/`stream`.
+    /// Parse a CLI string: `sharded`/`parallel`, `sequential`/`seq`,
+    /// `streaming`/`stream` or `pipelined`/`pipeline`.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s.trim().to_ascii_lowercase().as_str() {
             "sharded" | "parallel" => Ok(Self::Sharded),
             "sequential" | "seq" => Ok(Self::Sequential),
             "streaming" | "stream" => Ok(Self::Streaming),
-            other => {
-                anyhow::bail!("unknown aggregation mode '{other}' (sharded|sequential|streaming)")
-            }
+            "pipelined" | "pipeline" => Ok(Self::Pipelined),
+            other => anyhow::bail!(
+                "unknown aggregation mode '{other}' (sharded|sequential|streaming|pipelined)"
+            ),
         }
+    }
+
+    /// Whether this mode runs the event-driven (decode-on-arrival) round
+    /// engine — the prerequisite for partial round-completion policies.
+    pub fn is_streaming(self) -> bool {
+        matches!(self, Self::Streaming | Self::Pipelined)
     }
 }
 
@@ -117,8 +133,25 @@ pub struct AggregatorConfig {
     /// fill the pool on DCGAN-sized vectors.
     pub shard_elems: usize,
     /// Round-completion policy ([`PolicyConfig::Full`] = today's
-    /// barrier; anything else needs [`AggMode::Streaming`]).
+    /// barrier; anything else needs a streaming-engine mode —
+    /// [`AggMode::Streaming`] or [`AggMode::Pipelined`]).
     pub policy: PolicyConfig,
+    /// [`AggMode::Pipelined`] only: bound on the per-worker queue of
+    /// not-yet-delivered broadcasts (`--pipeline-depth`). Depth D lets up
+    /// to D broadcast frames stack up behind a slow receiver (plus the
+    /// one its writer is delivering) before the leader blocks; it also
+    /// sizes the aggregator's slot banks (capped at two — one gathering
+    /// round plus one round whose broadcast is still in flight).
+    pub pipeline_depth: usize,
+    /// Liveness bound for partial round-completion policies: if a
+    /// skipped worker's oldest undrained late round (`pending_late`
+    /// front) is more than this many rounds behind the leader, the
+    /// worker is presumed dead (not merely slow) and the run fails with
+    /// a worker error instead of stalling its ledger forever. 0 disables
+    /// the check (default). A late frame only drains when it pops out of
+    /// a later round's gather, so scheduling jitter can add a round of
+    /// apparent staleness — on fast-round workloads prefer R ≥ 2.
+    pub liveness_rounds: u64,
 }
 
 impl Default for AggregatorConfig {
@@ -128,6 +161,8 @@ impl Default for AggregatorConfig {
             threads: 0,
             shard_elems: 16 * 1024,
             policy: PolicyConfig::Full,
+            pipeline_depth: 2,
+            liveness_rounds: 0,
         }
     }
 }
@@ -146,6 +181,16 @@ impl AggregatorConfig {
     /// Streaming configuration with a round-completion policy.
     pub fn streaming_with_policy(policy: PolicyConfig) -> Self {
         Self { mode: AggMode::Streaming, policy, ..Self::default() }
+    }
+
+    /// Pipelined (async-broadcast, double-buffered) configuration.
+    pub fn pipelined() -> Self {
+        Self { mode: AggMode::Pipelined, ..Self::default() }
+    }
+
+    /// Pipelined configuration with an explicit depth.
+    pub fn pipelined_with_depth(depth: usize) -> Self {
+        Self { mode: AggMode::Pipelined, pipeline_depth: depth.max(1), ..Self::default() }
     }
 
     /// Resolve `threads` to a concrete pool size.
@@ -170,7 +215,24 @@ mod tests {
         assert_eq!(AggMode::parse("sequential").unwrap(), AggMode::Sequential);
         assert_eq!(AggMode::parse("streaming").unwrap(), AggMode::Streaming);
         assert_eq!(AggMode::parse("stream").unwrap(), AggMode::Streaming);
+        assert_eq!(AggMode::parse("pipelined").unwrap(), AggMode::Pipelined);
+        assert_eq!(AggMode::parse("PIPELINE").unwrap(), AggMode::Pipelined);
         assert!(AggMode::parse("wat").is_err());
+        assert!(AggMode::Streaming.is_streaming());
+        assert!(AggMode::Pipelined.is_streaming());
+        assert!(!AggMode::Sharded.is_streaming());
+        assert!(!AggMode::Sequential.is_streaming());
+    }
+
+    #[test]
+    fn pipelined_presets() {
+        let cfg = AggregatorConfig::pipelined();
+        assert_eq!(cfg.mode, AggMode::Pipelined);
+        assert_eq!(cfg.pipeline_depth, 2);
+        assert_eq!(cfg.liveness_rounds, 0, "liveness is opt-in");
+        let deep = AggregatorConfig::pipelined_with_depth(0);
+        assert_eq!(deep.pipeline_depth, 1, "depth is clamped to at least 1");
+        assert_eq!(AggregatorConfig::pipelined_with_depth(4).pipeline_depth, 4);
     }
 
     #[test]

@@ -24,6 +24,18 @@
 //! once all M inputs are in. See `ps/server.rs` for the leader loop that
 //! feeds it from [`crate::comm::ServerEnd::recv_round_streaming`].
 //!
+//! [`AggMode::Pipelined`] extends the streaming engine with **double
+//! round-state**: the per-worker decode buffers live in rotating *slot
+//! banks* (two of them at `--pipeline-depth` ≥ 2), each independently
+//! `begin_round`-able. [`Aggregator::accept`] routes every frame to the
+//! open bank whose round id matches, so frames for round t+1 can decode
+//! on arrival while round t's bank is still referenced — which is what
+//! lets the pipelined leader loop in `ps/server.rs` queue round t's
+//! broadcast onto the transport's writer threads and immediately open
+//! round t+1 instead of holding the whole cluster to one round in
+//! flight. Closing (`finish_round` / [`Aggregator::finish_partial`])
+//! always applies to the *oldest* open bank, preserving round order.
+//!
 //! ## Determinism contract
 //!
 //! The reduce stage adds workers in exactly the order the sequential path
@@ -53,6 +65,7 @@ use crate::comm::Message;
 use crate::config::{AggMode, AggregatorConfig};
 use crate::tensor::ops;
 use crate::util::threadpool::ThreadPool;
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// Server-side payload decoder: decode `bytes` into the dense `out`
@@ -68,6 +81,40 @@ struct WorkerSlot {
     err: Option<anyhow::Error>,
 }
 
+/// One round's worth of slot state: the M decode buffers plus the
+/// arrival bookkeeping of a single streaming round. The pipelined engine
+/// rotates between two of these so a new round's decodes never touch the
+/// bank a still-in-flight round occupies; every other mode owns exactly
+/// one.
+struct RoundBank {
+    /// Round id this bank is (or was last) assigned to.
+    round: u64,
+    /// Whether the bank is currently accepting arrivals.
+    open: bool,
+    slots: Vec<WorkerSlot>,
+    arrived: Vec<bool>,
+    arrived_count: usize,
+}
+
+impl RoundBank {
+    fn new(dim: usize, workers: usize) -> Self {
+        Self {
+            round: 0,
+            open: false,
+            slots: (0..workers).map(|_| WorkerSlot { buf: vec![0.0; dim], err: None }).collect(),
+            arrived: vec![false; workers],
+            arrived_count: 0,
+        }
+    }
+
+    fn reset(&mut self, round: u64) {
+        self.round = round;
+        self.open = true;
+        self.arrived.fill(false);
+        self.arrived_count = 0;
+    }
+}
+
 /// Reusable leader-side aggregation state for one training run.
 pub struct Aggregator {
     cfg: AggregatorConfig,
@@ -76,13 +123,17 @@ pub struct Aggregator {
     shard_elems: usize,
     /// Pool for the sharded/streaming reduce (absent in sequential mode).
     pool: Option<ThreadPool>,
-    slots: Vec<WorkerSlot>,
+    /// Slot banks: one for every mode but pipelined, up to two there
+    /// (`pipeline_depth` ≥ 2 — one bank gathering, one whose round is
+    /// still in flight on the downlink).
+    banks: Vec<RoundBank>,
+    /// Indices of the currently-open banks, oldest round first — closes
+    /// always pop the front.
+    open_order: VecDeque<usize>,
+    /// Bank most recently begun, accepted-into or closed: the one
+    /// [`Self::arrived_count`] / [`Self::included`] report on.
+    active: usize,
     avg: Vec<f32>,
-    /// Streaming-round state: the round currently accepting arrivals
-    /// (between [`Self::begin_round`] and [`Self::finish_round`]).
-    pending_round: Option<u64>,
-    arrived: Vec<bool>,
-    arrived_count: usize,
 }
 
 impl Aggregator {
@@ -93,30 +144,37 @@ impl Aggregator {
     const SMALL_WORK_ELEMS: usize = 4096;
 
     /// Allocate all round buffers for `workers` payloads of dimension
-    /// `dim` up front.
+    /// `dim` up front (two slot banks in pipelined mode with depth ≥ 2,
+    /// one otherwise).
     pub fn new(cfg: AggregatorConfig, dim: usize, workers: usize) -> Self {
         assert!(workers > 0, "aggregator needs at least one worker");
         let small = dim * workers < Self::SMALL_WORK_ELEMS;
         let pool = match cfg.mode {
             AggMode::Sequential => None,
-            AggMode::Sharded | AggMode::Streaming if small => None,
-            AggMode::Sharded | AggMode::Streaming => Some(ThreadPool::new(cfg.resolved_threads())),
+            _ if small => None,
+            _ => Some(ThreadPool::new(cfg.resolved_threads())),
         };
         let shard_elems = cfg.shard_elems.max(1);
+        let n_banks = match cfg.mode {
+            AggMode::Pipelined => cfg.pipeline_depth.clamp(1, 2),
+            _ => 1,
+        };
         Self {
             dim,
             workers,
             shard_elems,
             pool,
-            slots: (0..workers)
-                .map(|_| WorkerSlot { buf: vec![0.0; dim], err: None })
-                .collect(),
+            banks: (0..n_banks).map(|_| RoundBank::new(dim, workers)).collect(),
+            open_order: VecDeque::with_capacity(n_banks),
+            active: 0,
             avg: vec![0.0; dim],
-            pending_round: None,
-            arrived: vec![false; workers],
-            arrived_count: 0,
             cfg,
         }
+    }
+
+    /// Number of slot banks (2 ⇔ pipelined double-buffering is active).
+    pub fn num_banks(&self) -> usize {
+        self.banks.len()
     }
 
     /// Active mode (for logs/benches).
@@ -155,7 +213,7 @@ impl Aggregator {
         match self.cfg.mode {
             AggMode::Sequential => self.run_sequential(round, msgs, decoder)?,
             AggMode::Sharded => self.run_sharded(round, msgs, decoder)?,
-            AggMode::Streaming => {
+            AggMode::Streaming | AggMode::Pipelined => {
                 // Batch entry point for the streaming engine: feed the
                 // payloads through the same begin/accept/finish path the
                 // event-driven leader uses (order-invariant by design).
@@ -169,108 +227,147 @@ impl Aggregator {
         Ok(&self.avg)
     }
 
-    /// Open a streaming round: arrivals are then fed through
-    /// [`Self::accept`] in **any order** and the average produced by
-    /// [`Self::finish_round`]. Resets any aborted previous round.
+    /// Open a streaming round in a free slot bank: arrivals are then fed
+    /// through [`Self::accept`] in **any order** and the average produced
+    /// by [`Self::finish_round`]. With every bank already open (an
+    /// aborted round, or a pipelined caller past its depth) the *oldest*
+    /// open bank is recycled — which for the single-bank modes preserves
+    /// the original "begin resets any aborted previous round" semantics.
     pub fn begin_round(&mut self, round: u64) {
-        self.pending_round = Some(round);
-        self.arrived.fill(false);
-        self.arrived_count = 0;
+        let n = self.banks.len();
+        let idx = if self.open_order.len() < n {
+            // Rotate away from the most recently touched bank, so with
+            // two banks a new round never decodes over the one the round
+            // just closed occupied — genuine double-buffering.
+            (1..=n)
+                .map(|k| (self.active + k) % n)
+                .find(|&i| !self.banks[i].open)
+                .expect("fewer open banks than banks")
+        } else {
+            self.open_order.pop_front().expect("all banks open")
+        };
+        self.banks[idx].reset(round);
+        self.open_order.push_back(idx);
+        self.active = idx;
     }
 
     /// Decode one arrived payload into its worker slot immediately (the
-    /// decode-on-arrival half of the streaming pipeline). Fails fast on
-    /// round skew, out-of-range / duplicate worker ids, decode errors and
-    /// non-finite values — the arrival itself carries the failure, so the
-    /// barrier aborts without waiting for stragglers.
+    /// decode-on-arrival half of the streaming pipeline). The frame is
+    /// routed to the **open bank whose round id matches** — with two
+    /// banks open, round t and round t+1 frames interleave freely. Fails
+    /// fast on round skew (no open bank matches), out-of-range /
+    /// duplicate worker ids, decode errors and non-finite values — the
+    /// arrival itself carries the failure, so the barrier aborts without
+    /// waiting for stragglers.
     pub fn accept(&mut self, msg: &Message, decoder: &Decoder) -> anyhow::Result<()> {
-        let round = self
-            .pending_round
-            .ok_or_else(|| anyhow::anyhow!("accept called outside an open streaming round"))?;
-        anyhow::ensure!(
-            msg.round == round,
-            "worker {}: round skew: got round {}, leader at round {round}",
-            msg.worker,
-            msg.round
-        );
+        anyhow::ensure!(!self.open_order.is_empty(), "accept called outside an open round");
+        let Some(idx) =
+            self.open_order.iter().copied().find(|&i| self.banks[i].round == msg.round)
+        else {
+            let newest = *self.open_order.back().expect("checked non-empty");
+            anyhow::bail!(
+                "worker {}: round skew: got round {}, leader at round {}",
+                msg.worker,
+                msg.round,
+                self.banks[newest].round
+            );
+        };
+        let round = msg.round;
         let w = msg.worker as usize;
         anyhow::ensure!(w < self.workers, "worker id {w} out of range (M = {})", self.workers);
-        anyhow::ensure!(!self.arrived[w], "duplicate payload from worker {w} at round {round}");
-        let slot = &mut self.slots[w];
+        let bank = &mut self.banks[idx];
+        anyhow::ensure!(!bank.arrived[w], "duplicate payload from worker {w} at round {round}");
+        let slot = &mut bank.slots[w];
         decode_and_validate(round, msg, decoder, slot);
         if let Some(e) = slot.err.take() {
             return Err(e);
         }
-        self.arrived[w] = true;
-        self.arrived_count += 1;
+        bank.arrived[w] = true;
+        bank.arrived_count += 1;
+        self.active = idx;
         Ok(())
     }
 
-    /// Close the streaming round: every worker must have arrived; runs the
-    /// reduce (shard-parallel when the pool exists, `mean_into` otherwise
-    /// — bitwise-identical either way) and returns the average, valid
-    /// until the next round begins.
+    /// Close the **oldest** open streaming round: every worker must have
+    /// arrived; runs the reduce (shard-parallel when the pool exists,
+    /// `mean_into` otherwise — bitwise-identical either way) and returns
+    /// the average, valid until the next close.
     pub fn finish_round(&mut self) -> anyhow::Result<&[f32]> {
+        let idx = self
+            .open_order
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("finish_round called outside an open streaming round"))?;
+        self.banks[idx].open = false;
+        self.active = idx;
         anyhow::ensure!(
-            self.pending_round.take().is_some(),
-            "finish_round called outside an open streaming round"
-        );
-        anyhow::ensure!(
-            self.arrived_count == self.workers,
+            self.banks[idx].arrived_count == self.workers,
             "expected {} payloads, got {}",
             self.workers,
-            self.arrived_count
+            self.banks[idx].arrived_count
         );
-        self.reduce_mean(false);
+        self.reduce_mean(idx, false);
         Ok(&self.avg)
     }
 
-    /// Number of payloads accepted into the currently-open (or just
-    /// closed) streaming round.
+    /// Number of payloads accepted into the most recently touched (open
+    /// or just-closed) streaming round.
     pub fn arrived_count(&self) -> usize {
-        self.arrived_count
+        self.banks[self.active].arrived_count
     }
 
-    /// Per-worker arrival flags of the currently-open (or just closed)
-    /// streaming round — the inclusion set a partial broadcast carries.
-    /// Valid until the next [`Self::begin_round`].
+    /// Per-worker arrival flags of the most recently touched (open or
+    /// just-closed) streaming round — the inclusion set a partial
+    /// broadcast carries. Valid until that bank's next
+    /// [`Self::begin_round`].
     pub fn included(&self) -> &[bool] {
-        &self.arrived
+        &self.banks[self.active].arrived
     }
 
-    /// Close a streaming round over **the subset of workers that
-    /// arrived** (K-of-M / deadline partial aggregation): averages the
-    /// included slots only, added in worker-id order and scaled by
-    /// 1/#included. At least one payload must have arrived. With every
-    /// worker arrived the subset reduce performs exactly
+    /// Round id of the oldest open streaming round, if any.
+    pub fn oldest_open_round(&self) -> Option<u64> {
+        self.open_order.front().map(|&i| self.banks[i].round)
+    }
+
+    /// Close the **oldest** open streaming round over **the subset of
+    /// workers that arrived** (K-of-M / deadline partial aggregation):
+    /// averages the included slots only, added in worker-id order and
+    /// scaled by 1/#included. At least one payload must have arrived.
+    /// With every worker arrived the subset reduce performs exactly
     /// [`Self::finish_round`]'s adds in the same order — bitwise
     /// identical, so `kofm:M` degenerates to the full barrier exactly
     /// (the integration property test covers the all-arrived draw too).
     pub fn finish_partial(&mut self) -> anyhow::Result<&[f32]> {
+        let idx = self.open_order.pop_front().ok_or_else(|| {
+            anyhow::anyhow!("finish_partial called outside an open streaming round")
+        })?;
+        self.banks[idx].open = false;
+        self.active = idx;
         anyhow::ensure!(
-            self.pending_round.take().is_some(),
-            "finish_partial called outside an open streaming round"
+            self.banks[idx].arrived_count > 0,
+            "cannot close a round with zero payloads"
         );
-        anyhow::ensure!(self.arrived_count > 0, "cannot close a round with zero payloads");
-        self.reduce_mean(true);
+        self.reduce_mean(idx, true);
         Ok(&self.avg)
     }
 
     /// The one reduce every mode shares: zero `avg`, add the selected
-    /// slots **in worker-id order**, scale by 1/#selected — on the pool
-    /// (disjoint shards) when present, else via `ops::mean_into`. With
-    /// `partial = false` every slot is selected (the full-barrier 1/M
-    /// mean); with `partial = true` only the slots whose payload arrived
-    /// this round are. The inclusion filter skips whole slots, never
-    /// reorders element additions, so the full-barrier output is
-    /// bitwise-independent of which body runs and a partial round's
-    /// output is exactly `mean_into` over the included payloads (both
-    /// properties are pinned by the regression tests).
-    fn reduce_mean(&mut self, partial: bool) {
-        let count = if partial { self.arrived_count } else { self.workers };
+    /// slots of bank `idx` **in worker-id order**, scale by 1/#selected —
+    /// on the pool (disjoint shards) when present, else via
+    /// `ops::mean_into`. With `partial = false` every slot is selected
+    /// (the full-barrier 1/M mean); with `partial = true` only the slots
+    /// whose payload arrived this round are. The inclusion filter skips
+    /// whole slots, never reorders element additions, so the full-barrier
+    /// output is bitwise-independent of which body runs and a partial
+    /// round's output is exactly `mean_into` over the included payloads
+    /// (both properties are pinned by the regression tests). Which bank
+    /// the slots live in cannot affect a bit either: banks are identical
+    /// buffers, only the decode destination rotates.
+    fn reduce_mean(&mut self, idx: usize, partial: bool) {
+        let bank = &self.banks[idx];
+        let count = if partial { bank.arrived_count } else { self.workers };
         let inv = 1.0 / count as f32;
-        let slots = &self.slots;
-        let arrived = &self.arrived;
+        let slots = &bank.slots;
+        let arrived = &bank.arrived;
         match &self.pool {
             None => {
                 let refs: Vec<&[f32]> = slots
@@ -315,13 +412,13 @@ impl Aggregator {
         msgs: &[Message],
         decoder: &Decoder,
     ) -> anyhow::Result<()> {
-        for (slot, msg) in self.slots.iter_mut().zip(msgs) {
+        for (slot, msg) in self.banks[0].slots.iter_mut().zip(msgs) {
             decode_and_validate(round, msg, decoder, slot);
             if let Some(e) = slot.err.take() {
                 return Err(e);
             }
         }
-        self.reduce_mean(false);
+        self.reduce_mean(0, false);
         Ok(())
     }
 
@@ -340,16 +437,16 @@ impl Aggregator {
         }
         let pool = self.pool.as_ref().expect("checked above");
         // Stage 1: each worker's payload decodes into its own slot.
-        pool.parallel_for_mut(&mut self.slots, |m, slot| {
+        pool.parallel_for_mut(&mut self.banks[0].slots, |m, slot| {
             decode_and_validate(round, &msgs[m], decoder, slot);
         });
-        for slot in &mut self.slots {
+        for slot in &mut self.banks[0].slots {
             if let Some(e) = slot.err.take() {
                 return Err(e);
             }
         }
         // Stage 2: disjoint output shards, each reduced in worker order.
-        self.reduce_mean(false);
+        self.reduce_mean(0, false);
         Ok(())
     }
 }
@@ -535,6 +632,83 @@ mod tests {
         agg.accept(&payload_of(1, 0, &vec![2.5; d]), &dec).unwrap();
         let avg = agg.finish_partial().unwrap();
         assert!(avg.iter().all(|&x| x == 2.5), "single included worker is its own mean");
+    }
+
+    #[test]
+    fn pipelined_banks_accept_two_interleaved_rounds() {
+        // Double round-state: rounds 4 and 5 are both open; frames for
+        // the two rounds interleave in arrival order and each decodes
+        // into its own bank. Closes apply oldest-first.
+        let dec = identity_decoder();
+        let mut agg = Aggregator::new(AggregatorConfig::pipelined_with_depth(2), 2, 2);
+        assert_eq!(agg.num_banks(), 2);
+        agg.begin_round(4);
+        agg.accept(&payload_of(0, 4, &[1.0, 1.0]), &dec).unwrap();
+        agg.begin_round(5);
+        assert_eq!(agg.oldest_open_round(), Some(4));
+        // Interleaved: round-5 frame, then the round-4 straggler, then
+        // the rest of round 5 — routing is by round id, not recency.
+        agg.accept(&payload_of(1, 5, &[8.0, 2.0]), &dec).unwrap();
+        agg.accept(&payload_of(1, 4, &[3.0, 5.0]), &dec).unwrap();
+        agg.accept(&payload_of(0, 5, &[2.0, 4.0]), &dec).unwrap();
+        assert_eq!(agg.finish_round().unwrap(), &[2.0, 3.0], "round 4 closes first");
+        assert_eq!(agg.oldest_open_round(), Some(5));
+        assert_eq!(agg.finish_round().unwrap(), &[5.0, 3.0], "then round 5");
+        assert_eq!(agg.oldest_open_round(), None);
+        // A frame for neither open round is skew against the newest.
+        agg.begin_round(6);
+        let err = agg.accept(&payload_of(0, 9, &[0.0, 0.0]), &dec).unwrap_err();
+        assert!(err.to_string().contains("round skew"), "{err}");
+        assert!(err.to_string().contains("leader at round 6"), "{err}");
+    }
+
+    #[test]
+    fn pipelined_single_depth_keeps_one_bank() {
+        let mut agg = Aggregator::new(AggregatorConfig::pipelined_with_depth(1), 2, 1);
+        assert_eq!(agg.num_banks(), 1);
+        let dec = identity_decoder();
+        agg.begin_round(0);
+        agg.accept(&payload_of(0, 0, &[2.0, 6.0]), &dec).unwrap();
+        assert_eq!(agg.finish_round().unwrap(), &[2.0, 6.0]);
+    }
+
+    #[test]
+    fn pipelined_output_is_bitwise_identical_to_streaming_across_banks() {
+        // The bank a round decodes into must not affect a single bit:
+        // run the same payload stream through streaming (one bank) and
+        // pipelined (rotating banks) and compare outputs per round.
+        let d = 777;
+        let m = 4;
+        let c = LinfStochastic::with_bits(8);
+        let mut rng = Pcg32::new(0xABBA);
+        let rounds: Vec<Vec<Message>> = (0..4u64)
+            .map(|r| {
+                (0..m)
+                    .map(|w| {
+                        let v = rng.normal_vec(d);
+                        let mut wire = Vec::new();
+                        c.compress_encoded(&v, &mut rng, &mut wire);
+                        Message::payload(w as u32, r, wire)
+                    })
+                    .collect()
+            })
+            .collect();
+        let decoder: Decoder = Arc::new(move |b: &[u8], out: &mut [f32]| c.decode_into(b, out));
+        let mut stream = Aggregator::new(AggregatorConfig::streaming(), d, m);
+        let mut pipe = Aggregator::new(AggregatorConfig::pipelined_with_depth(2), d, m);
+        for (r, msgs) in rounds.iter().enumerate() {
+            let a = stream.aggregate(r as u64, msgs, &decoder).unwrap().to_vec();
+            // Reversed arrival order on the pipelined side for good
+            // measure — order-invariance composes with bank rotation.
+            pipe.begin_round(r as u64);
+            for msg in msgs.iter().rev() {
+                pipe.accept(msg, &decoder).unwrap();
+            }
+            let b = pipe.finish_round().unwrap();
+            for i in 0..d {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "round {r} element {i}");
+            }
+        }
     }
 
     #[test]

@@ -48,6 +48,13 @@ pub struct RoundRecord {
     pub wait_secs: f64,
     /// Leader time spent in decode + reduce (the compute component).
     pub agg_secs: f64,
+    /// Seconds of this round's gather that ran while the **previous**
+    /// round's broadcast was still in flight on the writer threads —
+    /// the gather/broadcast overlap the pipelined engine
+    /// (`--agg pipelined`) exists to create. 0 under every synchronous
+    /// broadcast mode (the previous broadcast completed before the round
+    /// started) and for round 0.
+    pub overlap_secs: f64,
     /// Workers whose payloads entered this round's average (= M under
     /// the full barrier; < M when a `--policy kofm`/`deadline` round
     /// closed early).

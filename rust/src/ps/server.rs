@@ -13,19 +13,34 @@
 //! decoded as their frames arrive (off [`ServerEnd::recv_round_streaming`]),
 //! so decode work overlaps the wait for stragglers instead of serializing
 //! behind the slowest worker — same bits out, less wall-clock per round.
+//! [`crate::config::AggMode::Pipelined`] goes one step further and makes
+//! the *downlink* asynchronous too: the broadcast is queued onto the
+//! transport's per-worker writer threads
+//! ([`ServerEnd::broadcast_async`]) instead of written serially on this
+//! thread, so one slow receiver no longer holds the whole cluster to one
+//! round in flight — the leader immediately opens round t+1 (in the
+//! aggregator's second slot bank) and decodes its frames on arrival
+//! while round t's broadcast is still being delivered. Scheduling
+//! changes only: the reduced values are bitwise-identical to streaming
+//! mode (enforced by `tests/integration_pipeline.rs` across codecs,
+//! cluster sizes, pipeline depths and transports).
+//!
 //! Each [`RoundRecord`] splits the leader's round time into `wait_secs`
-//! (blocked on the network) and `agg_secs` (decode + reduce) so the A/B
-//! benchmarks can show the overlap directly.
+//! (blocked on the network — arrivals plus downlink writes) and
+//! `agg_secs` (decode + reduce), and `overlap_secs` reports how much of
+//! a round's gather overlapped the previous round's still-in-flight
+//! broadcast, so the A/B benchmarks can show the overlap directly.
 
 use super::aggregate::{Aggregator, Decoder};
 use super::policy::build_policy;
 use super::RoundRecord;
-use crate::comm::{Message, MsgKind, ServerEnd, StreamDirective};
+use crate::comm::{BroadcastHandle, Message, MsgKind, ServerEnd, StreamDirective};
 use crate::config::{AggMode, AggregatorConfig, PolicyConfig};
 use crate::util::bytes::put_f32_slice;
 use crate::util::stats::norm2_sq;
 use crate::util::timer::Stopwatch;
 use std::collections::VecDeque;
+use std::time::Instant;
 
 /// Run `rounds` synchronous rounds on `transport` with the default
 /// (sharded) aggregation path. Returns per-round records. `dim` is the
@@ -53,13 +68,20 @@ pub fn serve_rounds_with(
 ) -> anyhow::Result<Vec<RoundRecord>> {
     let m = transport.workers();
     anyhow::ensure!(m > 0, "no workers");
-    let streaming = agg_cfg.mode == AggMode::Streaming;
+    let streaming = agg_cfg.mode.is_streaming();
+    let pipelined = agg_cfg.mode == AggMode::Pipelined;
     let policy_cfg = agg_cfg.policy;
     anyhow::ensure!(
         policy_cfg == PolicyConfig::Full || streaming,
-        "--policy {} requires the streaming engine (--agg streaming)",
+        "--policy {} requires the streaming engine (--agg streaming|pipelined)",
         policy_cfg.label()
     );
+    if pipelined {
+        // Bound the per-worker queue of undelivered broadcasts before
+        // the writer threads spawn.
+        transport.set_pipeline_depth(agg_cfg.pipeline_depth.max(1));
+    }
+    let liveness = agg_cfg.liveness_rounds;
     // Policy engine (None = the unchanged full-barrier paths below).
     let mut policy = match policy_cfg {
         PolicyConfig::Full => None,
@@ -71,11 +93,49 @@ pub fn serve_rounds_with(
     let mut pending_late: Vec<VecDeque<u64>> = vec![VecDeque::new(); m];
     let mut agg = Aggregator::new(agg_cfg, dim, m);
     let mut records = Vec::with_capacity(rounds as usize);
+    // Completion handle of the previous round's async broadcast
+    // (pipelined mode only) — the input to `overlap_secs`.
+    let mut prev_broadcast: Option<BroadcastHandle> = None;
     for round in 0..rounds {
+        // A previous broadcast that has *completed with a failure* means
+        // some worker's downlink died. Surface it now — the synchronous
+        // path failed at the broadcast call itself, and blocking in a
+        // gather that may never complete would turn the failure into a
+        // hang. (is_done first: wait() on a still-in-flight broadcast
+        // would serialize the pipeline we just built.)
+        if let Some(h) = &prev_broadcast {
+            if h.is_done() {
+                h.wait()?;
+            }
+        }
+        // Liveness bound: a skipped worker whose oldest late frame has
+        // not drained within `liveness` rounds is presumed dead, not
+        // slow — fail like a worker error instead of letting its
+        // `pending_late` ledger (and the error-memory staleness it
+        // stands for) stall indefinitely. Note a merely-slow worker's
+        // late frame drains only when it pops out of the next round's
+        // gather, so transient scheduling can add a round of apparent
+        // staleness — size R accordingly (R ≥ 2 is a sane floor on
+        // fast-round workloads).
+        if liveness > 0 {
+            for (w, ledger) in pending_late.iter().enumerate() {
+                if let Some(&r0) = ledger.front() {
+                    anyhow::ensure!(
+                        round.saturating_sub(r0) <= liveness,
+                        "worker {w} failed at round {round}: liveness timeout — its round {r0} \
+                         payload is still missing after {liveness} rounds (worker presumed \
+                         dead, not slow)"
+                    );
+                }
+            }
+        }
         let sw = Stopwatch::start();
+        let round_start = Instant::now();
         let mut bytes_up = 0usize;
         let mut agg_secs = 0.0f64;
-        let wait_secs;
+        let mut wait_secs;
+        // Leader-clock seconds at which this round's gather completed.
+        let gather_secs;
         // Inclusion set of a policy-closed round (None ⇒ full barrier,
         // every worker included).
         let mut included: Option<Vec<bool>> = None;
@@ -128,7 +188,8 @@ pub fn serve_rounds_with(
                 directive = policy.on_arrival(agg.arrived_count(), m);
                 Ok(directive)
             })?;
-            wait_secs = (sw.elapsed_secs() - agg_secs).max(0.0);
+            gather_secs = sw.elapsed_secs();
+            wait_secs = (gather_secs - agg_secs).max(0.0);
             let inc = agg.included().to_vec();
             let t = Stopwatch::start();
             let avg = agg.finish_partial()?;
@@ -149,14 +210,16 @@ pub fn serve_rounds_with(
             })?;
             // Time not spent decoding during the gather was spent blocked
             // on arrivals.
-            wait_secs = (sw.elapsed_secs() - agg_secs).max(0.0);
+            gather_secs = sw.elapsed_secs();
+            wait_secs = (gather_secs - agg_secs).max(0.0);
             let t = Stopwatch::start();
             let avg = agg.finish_round()?;
             agg_secs += t.elapsed_secs();
             avg
         } else {
             let msgs = transport.recv_round()?;
-            wait_secs = sw.elapsed_secs();
+            gather_secs = sw.elapsed_secs();
+            wait_secs = gather_secs;
             bytes_up = msgs.iter().map(|msg| msg.payload.len()).sum();
             // Decode × M, validate, average (line 11) — sharded or
             // sequential.
@@ -164,6 +227,21 @@ pub fn serve_rounds_with(
             let avg = agg.aggregate(round, &msgs, &decoder)?;
             agg_secs = t.elapsed_secs();
             avg
+        };
+        // Gather/broadcast overlap: how much of this round's gather ran
+        // while the previous round's broadcast was still on the writer
+        // threads. (Synchronous modes completed their broadcast before
+        // the round started, so this is 0 there by construction.)
+        let overlap_secs = match &prev_broadcast {
+            Some(h) => match h.completed_at() {
+                Some(done) => done
+                    .saturating_duration_since(round_start)
+                    .as_secs_f64()
+                    .min(gather_secs),
+                // Still in flight now: the entire gather overlapped it.
+                None => gather_secs,
+            },
+            None => 0.0,
         };
         let avg_payload_norm_sq = norm2_sq(avg);
         // Broadcast q̄ as raw f32 (the downlink is full-precision; the
@@ -189,7 +267,20 @@ pub fn serve_rounds_with(
                 Message::broadcast(round, payload)
             }
         };
-        transport.broadcast(msg)?;
+        let t = Stopwatch::start();
+        if pipelined {
+            // Queue the frame onto the per-worker writer threads and move
+            // straight on to the next round's gather: a slow receiver
+            // costs its own writer time, not the cluster's.
+            prev_broadcast = Some(transport.broadcast_async(msg)?);
+        } else {
+            transport.broadcast(msg)?;
+        }
+        // Time blocked pushing the downlink is network wait too: the
+        // full per-socket write loop on the synchronous path, only
+        // queue backpressure (a receiver `pipeline_depth` broadcasts
+        // behind) on the asynchronous one.
+        wait_secs += t.elapsed_secs();
         if let Some(inc) = &included {
             for (w, &arrived) in inc.iter().enumerate() {
                 if !arrived {
@@ -204,6 +295,7 @@ pub fn serve_rounds_with(
             wall_secs: sw.elapsed_secs(),
             wait_secs,
             agg_secs,
+            overlap_secs,
             workers_included,
             workers_skipped: m - workers_included,
             ..Default::default()
@@ -211,6 +303,10 @@ pub fn serve_rounds_with(
         on_round(&rec);
         records.push(rec);
     }
+    // The trailing Shutdown uses the blocking path: with writer threads
+    // active it routes through the same per-worker queues (order
+    // preserved) and waits until every queued frame — broadcasts and the
+    // Shutdown itself — has been delivered, so teardown loses nothing.
     transport.broadcast(Message::shutdown(rounds))?;
     Ok(records)
 }
@@ -260,7 +356,12 @@ mod tests {
 
     #[test]
     fn sequential_flag_produces_the_same_broadcast() {
-        for mode in [AggMode::Sequential, AggMode::Sharded, AggMode::Streaming] {
+        for mode in [
+            AggMode::Sequential,
+            AggMode::Sharded,
+            AggMode::Streaming,
+            AggMode::Pipelined,
+        ] {
             let (mut server, mut workers, _) = inproc_cluster(2);
             for (i, w) in workers.iter_mut().enumerate() {
                 let mut wire = Vec::new();
@@ -290,7 +391,11 @@ mod tests {
 
     #[test]
     fn round_records_split_wait_and_agg_time() {
-        for cfg in [AggregatorConfig::default(), AggregatorConfig::streaming()] {
+        for cfg in [
+            AggregatorConfig::default(),
+            AggregatorConfig::streaming(),
+            AggregatorConfig::pipelined(),
+        ] {
             let (mut server, mut workers, _) = inproc_cluster(2);
             for (i, w) in workers.iter_mut().enumerate() {
                 let mut wire = Vec::new();
@@ -310,7 +415,51 @@ mod tests {
             assert!(r.wait_secs >= 0.0 && r.agg_secs >= 0.0);
             assert!(r.wall_secs >= r.wait_secs, "wall {} < wait {}", r.wall_secs, r.wait_secs);
             assert!(r.bytes_up > 0);
+            assert_eq!(r.overlap_secs, 0.0, "round 0 has no previous broadcast to overlap");
         }
+    }
+
+    #[test]
+    fn liveness_timeout_fails_instead_of_stalling_a_dead_workers_ledger() {
+        // kofm:1 with M=2: worker 0 keeps the run going, worker 1 never
+        // sends a single frame (died). Its pending_late ledger stalls at
+        // round 0, and with --liveness 2 the leader must convert that
+        // into a worker error at round 3 rather than closing partial
+        // rounds forever.
+        let (mut server, workers, _) = inproc_cluster(2);
+        let mut it = workers.into_iter();
+        let mut w0 = it.next().unwrap();
+        let w1 = it.next().unwrap(); // kept alive, silent
+        let t = std::thread::spawn(move || {
+            for round in 0..10u64 {
+                let mut wire = Vec::new();
+                Identity.encode(&[1.0f32], &mut wire);
+                if w0.send(Message::payload(0, round, wire)).is_err() {
+                    return;
+                }
+                match w0.recv() {
+                    Ok(msg) if msg.kind == MsgKind::Shutdown => return,
+                    Ok(_) => {}
+                    Err(_) => return,
+                }
+            }
+        });
+        let cfg = AggregatorConfig {
+            liveness_rounds: 2,
+            ..AggregatorConfig::streaming_with_policy(crate::config::PolicyConfig::KofM {
+                k: 1,
+            })
+        };
+        let err =
+            serve_rounds_with(&mut server, identity_decoder(), 1, 10, cfg, |_| {}).unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("worker 1"), "{text}");
+        assert!(text.contains("liveness timeout"), "{text}");
+        assert!(text.contains("round 0"), "{text}");
+        assert!(text.contains("presumed dead"), "{text}");
+        drop(server); // unblock worker 0
+        drop(w1);
+        t.join().unwrap();
     }
 
     #[test]

@@ -1,19 +1,21 @@
 //! CSV sink for per-round leader telemetry ([`crate::ps::RoundRecord`]):
 //! one row per synchronous round, including the `wait_secs`/`agg_secs`
-//! wall-clock split and the round-completion policy's
+//! wall-clock split, the pipelined engine's gather/broadcast
+//! `overlap_secs`, and the round-completion policy's
 //! `workers_included`/`workers_skipped` counts — the series the
-//! straggler A/Bs plot.
+//! straggler and pipelining A/Bs plot.
 
 use super::CsvWriter;
 use crate::ps::RoundRecord;
 use std::path::Path;
 
 /// Column order of [`write_round_records`] output.
-pub const ROUND_CSV_HEADER: [&str; 8] = [
+pub const ROUND_CSV_HEADER: [&str; 9] = [
     "round",
     "wall_secs",
     "wait_secs",
     "agg_secs",
+    "overlap_secs",
     "bytes_up",
     "workers_included",
     "workers_skipped",
@@ -30,6 +32,7 @@ pub fn write_round_records(path: &Path, records: &[RoundRecord]) -> anyhow::Resu
             format!("{:.6}", r.wall_secs),
             format!("{:.6}", r.wait_secs),
             format!("{:.6}", r.agg_secs),
+            format!("{:.6}", r.overlap_secs),
             r.bytes_up.to_string(),
             r.workers_included.to_string(),
             r.workers_skipped.to_string(),
@@ -52,6 +55,7 @@ mod tests {
                 wall_secs: 0.25,
                 wait_secs: 0.2,
                 agg_secs: 0.05,
+                overlap_secs: 0.125,
                 bytes_up: 1024,
                 workers_included: 3,
                 workers_skipped: 1,
@@ -65,12 +69,14 @@ mod tests {
         assert_eq!(lines.next().unwrap(), ROUND_CSV_HEADER.join(","));
         let row0: Vec<&str> = lines.next().unwrap().split(',').collect();
         assert_eq!(row0[0], "0");
-        assert_eq!(row0[4], "1024");
-        assert_eq!(row0[5], "3");
-        assert_eq!(row0[6], "1");
+        assert_eq!(row0[4], "0.125000");
+        assert_eq!(row0[5], "1024");
+        assert_eq!(row0[6], "3");
+        assert_eq!(row0[7], "1");
         let row1: Vec<&str> = lines.next().unwrap().split(',').collect();
-        assert_eq!(row1[5], "4");
-        assert_eq!(row1[6], "0");
+        assert_eq!(row1[4], "0.000000");
+        assert_eq!(row1[6], "4");
+        assert_eq!(row1[7], "0");
         assert!(lines.next().is_none());
         std::fs::remove_file(&p).ok();
     }

@@ -1,0 +1,494 @@
+//! Integration: the pipelined round engine — async writer-thread
+//! broadcast plus double-buffered aggregation — locked down by a
+//! cross-transport equivalence suite: every scheduling change must be
+//! **bitwise-invisible** in the broadcast frames. Stragglers and slow
+//! receivers are scripted with [`DelayPlan`] gates (uplink and
+//! downlink), never sleeps.
+
+use dqgan::algo::AlgoKind;
+use dqgan::comm::tcp::{TcpServerBuilder, TcpWorkerEnd};
+use dqgan::comm::{
+    inproc_cluster_with_plan, DelayPlan, Message, MsgKind, ServerEnd, StreamDirective,
+    StreamOutcome, WorkerEnd,
+};
+use dqgan::compress::{compressor_from_spec, Compressor, Identity};
+use dqgan::config::{AggMode, AggregatorConfig, PolicyConfig};
+use dqgan::grad::QuadraticOperator;
+use dqgan::optim::LrSchedule;
+use dqgan::ps::{
+    run_cluster, serve_rounds_with, worker_loop, Aggregator, ClusterConfig, Decoder,
+};
+use dqgan::util::bytes::put_f32_slice;
+use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
+
+const ROUNDS: u64 = 3;
+
+fn identity_decoder() -> Decoder {
+    Arc::new(|bytes: &[u8], out: &mut [f32]| Identity.decode_into(bytes, out))
+}
+
+/// Precompute every worker's wire payload per round (`wires[w][r]`), so
+/// streaming and pipelined runs see byte-identical payload streams.
+fn round_payloads(spec: &str, m: usize, d: usize, seed: u64) -> Vec<Vec<Vec<u8>>> {
+    let c = compressor_from_spec(spec).unwrap();
+    let mut rng = Pcg32::new(seed);
+    (0..m)
+        .map(|_| {
+            (0..ROUNDS)
+                .map(|_| {
+                    let v = rng.normal_vec(d);
+                    let mut wire = Vec::new();
+                    c.compress_encoded(&v, &mut rng, &mut wire);
+                    wire
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn spec_decoder(spec: &str) -> Decoder {
+    let c = compressor_from_spec(spec).unwrap();
+    Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+}
+
+/// Drive one scripted worker: send the prebuilt payload each round,
+/// collect every downlink frame verbatim (the bytes under comparison).
+fn drive_worker(w: &mut dyn WorkerEnd, wires: &[Vec<u8>]) -> Vec<Message> {
+    let id = w.id();
+    let mut frames = Vec::new();
+    for (r, wire) in wires.iter().enumerate() {
+        w.send(Message::payload(id, r as u64, wire.clone())).unwrap();
+        let b = w.recv().unwrap();
+        assert_eq!(b.round, r as u64);
+        frames.push(b);
+    }
+    assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+    frames
+}
+
+/// Hold every (worker, round) uplink gate, then release them round by
+/// round in a seed-scrambled worker order from a separate thread — the
+/// frames reach the leader in an order the seed controls, not worker-id
+/// order. (The property under test is exactly that no arrival order can
+/// change a broadcast bit.)
+fn scrambled_releaser(
+    plan: &DelayPlan,
+    m: usize,
+    seed: u64,
+) -> std::thread::JoinHandle<()> {
+    for w in 0..m as u32 {
+        for r in 0..ROUNDS {
+            plan.hold(w, r);
+        }
+    }
+    let plan = plan.clone();
+    std::thread::spawn(move || {
+        let mut rng = Pcg32::new(seed);
+        for r in 0..ROUNDS {
+            let mut order: Vec<u32> = (0..m as u32).collect();
+            rng.shuffle(&mut order);
+            for w in order {
+                plan.release(w, r);
+            }
+        }
+    })
+}
+
+/// One full run over the in-process transport; returns each worker's
+/// received downlink frames.
+fn run_inproc(
+    cfg: AggregatorConfig,
+    d: usize,
+    wires: &[Vec<Vec<u8>>],
+    decoder: Decoder,
+    scramble_seed: u64,
+) -> Vec<Vec<Message>> {
+    let m = wires.len();
+    let plan = DelayPlan::new();
+    let releaser = scrambled_releaser(&plan, m, scramble_seed);
+    let (mut server, worker_ends, _) = inproc_cluster_with_plan(m, plan);
+    let frames = std::thread::scope(|s| {
+        let handles: Vec<_> = worker_ends
+            .into_iter()
+            .zip(wires)
+            .map(|(mut end, ws)| s.spawn(move || drive_worker(&mut end, ws)))
+            .collect();
+        serve_rounds_with(&mut server, decoder, d, ROUNDS, cfg, |_| {}).unwrap();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+    });
+    releaser.join().unwrap();
+    frames
+}
+
+/// One full run over real TCP sockets; same contract as [`run_inproc`].
+fn run_tcp(
+    cfg: AggregatorConfig,
+    d: usize,
+    wires: &[Vec<Vec<u8>>],
+    decoder: Decoder,
+    scramble_seed: u64,
+) -> Vec<Vec<Message>> {
+    let m = wires.len();
+    let plan = DelayPlan::new();
+    let releaser = scrambled_releaser(&plan, m, scramble_seed);
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let handles: Vec<_> = wires
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, ws)| {
+            let plan = plan.clone();
+            std::thread::spawn(move || {
+                let mut end =
+                    TcpWorkerEnd::connect_with_plan(&addr.to_string(), i as u32, Some(plan))
+                        .unwrap();
+                drive_worker(&mut end, &ws)
+            })
+        })
+        .collect();
+    let mut server = builder.accept(m).unwrap();
+    serve_rounds_with(&mut server, decoder, d, ROUNDS, cfg, |_| {}).unwrap();
+    let frames: Vec<Vec<Message>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    releaser.join().unwrap();
+    frames
+}
+
+#[test]
+fn pipelined_broadcasts_are_bitwise_identical_to_streaming_inproc() {
+    // The cross-transport equivalence property, in-process half: over
+    // qsgd/sign/topk payloads, M ∈ {1, 4, 8} and pipeline depth ∈
+    // {1, 2}, with scrambled DelayPlan arrival orders, every worker's
+    // downlink frame stream (kind, round and payload bytes) under
+    // `--agg pipelined` equals the `--agg streaming` reference exactly.
+    let d = 1031;
+    for (si, spec) in ["qsgd8", "sign", "topk(f=0.1)"].into_iter().enumerate() {
+        for &m in &[1usize, 4, 8] {
+            let wires = round_payloads(spec, m, d, 0x51EE7 + si as u64 * 131 + m as u64);
+            let reference = run_inproc(
+                AggregatorConfig::streaming(),
+                d,
+                &wires,
+                spec_decoder(spec),
+                1,
+            );
+            for depth in [1usize, 2] {
+                let got = run_inproc(
+                    AggregatorConfig::pipelined_with_depth(depth),
+                    d,
+                    &wires,
+                    spec_decoder(spec),
+                    100 + depth as u64,
+                );
+                assert_eq!(got, reference, "{spec} M={m} depth={depth} (inproc)");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_broadcasts_are_bitwise_identical_to_streaming_tcp() {
+    // TCP half of the equivalence suite: the same property through real
+    // sockets, reader threads and writer threads (socket races provide
+    // extra arrival scrambling on top of the gate schedule).
+    let d = 1031;
+    for (si, spec) in ["qsgd8", "sign", "topk(f=0.1)"].into_iter().enumerate() {
+        for &m in &[1usize, 4] {
+            let wires = round_payloads(spec, m, d, 0x7CB + si as u64 * 17 + m as u64);
+            let reference =
+                run_tcp(AggregatorConfig::streaming(), d, &wires, spec_decoder(spec), 3);
+            for depth in [1usize, 2] {
+                let got = run_tcp(
+                    AggregatorConfig::pipelined_with_depth(depth),
+                    d,
+                    &wires,
+                    spec_decoder(spec),
+                    300 + depth as u64,
+                );
+                assert_eq!(got, reference, "{spec} M={m} depth={depth} (tcp)");
+            }
+        }
+    }
+}
+
+#[test]
+fn round_t_plus_1_frames_decode_while_round_t_broadcast_is_gate_held() {
+    // Deterministic overlap probe (no sleeps, PR-3 DelayPlan pattern):
+    // worker 2's round-0 broadcast delivery is downlink-gated, the two
+    // prompt workers advance to round 1, and the leader observes round-1
+    // slot occupancy in the aggregator's second bank while the round-0
+    // broadcast handle is provably not done and the gate provably held.
+    let (m, d) = (3usize, 64usize);
+    let plan = DelayPlan::new();
+    plan.hold_down(2, 0);
+    let (mut server, worker_ends, _) = inproc_cluster_with_plan(m, plan.clone());
+    server.set_pipeline_depth(2);
+    let decoder = identity_decoder();
+    let handles: Vec<_> = worker_ends
+        .into_iter()
+        .map(|mut w| {
+            std::thread::spawn(move || {
+                let id = w.id();
+                for round in 0..2u64 {
+                    let v = vec![(id + 1) as f32; 64];
+                    let mut wire = Vec::new();
+                    Identity.encode(&v, &mut wire);
+                    w.send(Message::payload(id, round, wire)).unwrap();
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.round, round);
+                }
+                assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+            })
+        })
+        .collect();
+    let mut agg = Aggregator::new(AggregatorConfig::pipelined_with_depth(2), d, m);
+    assert_eq!(agg.num_banks(), 2);
+    // Round 0: all three arrive (worker 2's uplink is not gated).
+    agg.begin_round(0);
+    server
+        .recv_round_streaming(&mut |msg| agg.accept(&msg, &decoder))
+        .unwrap();
+    let avg0 = agg.finish_round().unwrap().to_vec();
+    assert_eq!(avg0, vec![2.0; 64]);
+    let mut payload0 = Vec::with_capacity(4 * d);
+    put_f32_slice(&mut payload0, &avg0);
+    let h0 = server.broadcast_async(Message::broadcast(0, payload0)).unwrap();
+    // Round 1 opens in the second bank while broadcast 0 is in flight.
+    agg.begin_round(1);
+    let mut seen = 0usize;
+    let outcome = server
+        .recv_round_streaming_timed(&mut |msg| {
+            agg.accept(&msg, &decoder)?;
+            seen += 1;
+            if seen == 2 {
+                // The structural heart of the probe: round-1 frames are
+                // decoded (slot occupancy observed) while round 0's
+                // broadcast is still gate-held on worker 2's writer.
+                assert_eq!(agg.arrived_count(), 2);
+                assert_eq!(agg.included(), &[true, true, false]);
+                assert_eq!(agg.oldest_open_round(), Some(1));
+                assert!(plan.is_held_down(2, 0), "round-0 delivery gate must still be held");
+                assert!(!h0.is_done(), "round-0 broadcast must still be in flight");
+                plan.release_down(2, 0);
+            }
+            Ok(if seen == 3 { StreamDirective::Close } else { StreamDirective::Wait })
+        })
+        .unwrap();
+    assert_eq!(outcome, StreamOutcome::Closed);
+    h0.wait().unwrap();
+    assert!(h0.is_done() && h0.completed_at().is_some());
+    let avg1 = agg.finish_round().unwrap().to_vec();
+    assert_eq!(avg1, vec![2.0; 64]);
+    let mut payload1 = Vec::with_capacity(4 * d);
+    put_f32_slice(&mut payload1, &avg1);
+    // Synchronous sends route through the writers (order preserved) and
+    // wait for delivery — the clean teardown path.
+    server.broadcast(Message::broadcast(1, payload1)).unwrap();
+    server.broadcast(Message::shutdown(2)).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn pipelined_cluster_is_bitwise_identical_to_sequential() {
+    // End-to-end A/B across the full distributed stack (real worker
+    // algorithm, error feedback, broadcast application): the pipelined
+    // trajectory must reproduce the sequential one bit for bit at both
+    // pipeline depths.
+    let run = |agg: AggregatorConfig| {
+        let cfg = ClusterConfig {
+            algo: AlgoKind::parse("dqgan:linf8").unwrap(),
+            workers: 4,
+            batch: 8,
+            rounds: 50,
+            lr: LrSchedule::constant(0.05),
+            seed: 42,
+            eval_every: 0,
+            keep_stats: false,
+            agg,
+        };
+        run_cluster(&cfg, |_m| {
+            let mut rng = Pcg32::new(7);
+            Ok(Box::new(QuadraticOperator::new(64, 0.1, &mut rng)))
+        })
+        .unwrap()
+    };
+    let seq = run(AggregatorConfig::sequential());
+    for depth in [1usize, 2] {
+        let pipe = run(AggregatorConfig::pipelined_with_depth(depth));
+        assert_eq!(
+            seq.worker0.final_params, pipe.worker0.final_params,
+            "depth {depth} must not change a bit"
+        );
+        assert_eq!(pipe.records.len(), 50);
+        for r in &pipe.records {
+            assert!(r.wait_secs >= 0.0 && r.agg_secs >= 0.0);
+            assert!(r.overlap_secs >= 0.0);
+            assert!(
+                r.overlap_secs <= r.wall_secs,
+                "overlap {} > wall {}",
+                r.overlap_secs,
+                r.wall_secs
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_pipelined_mode_trains_over_real_sockets() {
+    // Same protocol as the streaming TCP test, but the leader runs the
+    // pipelined engine: reader threads on the uplink, writer threads on
+    // the downlink, for all 20 rounds plus a clean shutdown.
+    let m = 2usize;
+    let rounds = 20u64;
+    let dim = 16usize;
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let algo = AlgoKind::parse("dqgan:linf8").unwrap();
+    let mut seed_rng = Pcg32::new(88);
+    let w0 = {
+        use dqgan::grad::GradientSource;
+        let op = QuadraticOperator::new(dim, 0.1, &mut seed_rng);
+        op.init_params(&mut seed_rng)
+    };
+    let mut worker_handles = Vec::new();
+    for id in 0..m as u32 {
+        let w0 = w0.clone();
+        let algo = algo.clone();
+        worker_handles.push(std::thread::spawn(move || {
+            let mut end = TcpWorkerEnd::connect(&addr.to_string(), id).unwrap();
+            let mut worker = algo.build_worker(w0, LrSchedule::constant(0.05));
+            let mut rng = Pcg32::new(100 + id as u64);
+            let mut src = {
+                let mut r = Pcg32::new(55);
+                QuadraticOperator::new(dim, 0.1, &mut r)
+            };
+            worker_loop(&mut end, worker.as_mut(), &mut src, 4, rounds, &mut rng, false, None)
+                .unwrap()
+        }));
+    }
+    let mut server = builder.accept(m).unwrap();
+    let records = serve_rounds_with(
+        &mut server,
+        algo.decoder(),
+        dim,
+        rounds,
+        AggregatorConfig::pipelined_with_depth(2),
+        |_| {},
+    )
+    .unwrap();
+    assert_eq!(records.len(), rounds as usize);
+    let summaries: Vec<_> = worker_handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(summaries[0].final_params, summaries[1].final_params);
+    assert_eq!(summaries[0].rounds, rounds);
+    assert!(server.counter().up_total() > 0);
+    assert!(server.counter().down_total() > 0);
+}
+
+#[test]
+fn pipelined_kofm_cluster_converges_with_rotating_skips() {
+    // Partial-round interplay: pipelined mode under kofm:2 of M=3 —
+    // every round closes at the quorum, partial broadcasts ride the
+    // writer threads, skipped workers re-absorb via the inclusion
+    // bitmap, and error feedback still carries the run to the optimum.
+    let cfg = ClusterConfig {
+        algo: AlgoKind::parse("dqgan:linf8").unwrap(),
+        workers: 3,
+        batch: 8,
+        rounds: 800,
+        lr: LrSchedule::constant(0.1),
+        seed: 11,
+        eval_every: 0,
+        keep_stats: false,
+        agg: AggregatorConfig {
+            mode: AggMode::Pipelined,
+            policy: PolicyConfig::KofM { k: 2 },
+            ..Default::default()
+        },
+    };
+    let report = run_cluster(&cfg, |_m| {
+        let mut rng = Pcg32::new(321);
+        Ok(Box::new(QuadraticOperator::new(12, 0.1, &mut rng)))
+    })
+    .unwrap();
+    for r in &report.records {
+        assert_eq!((r.workers_included, r.workers_skipped), (2, 1), "round {}", r.round);
+    }
+    let target = {
+        let mut rng = Pcg32::new(321);
+        QuadraticOperator::new(12, 0.1, &mut rng).target
+    };
+    let dist = dqgan::util::stats::dist2_sq(&report.worker0.final_params, &target).sqrt();
+    assert!(dist < 0.5, "pipelined kofm run must still converge: dist {dist}");
+}
+
+#[test]
+fn liveness_tolerates_a_slow_but_alive_worker() {
+    // Negative control for the liveness timeout: a worker that is one
+    // round late every round (gate released only when the round's record
+    // is produced) keeps draining its ledger, so --liveness 1 must let
+    // the run complete. A token chain makes the drain order
+    // happens-before, not a scheduling race: worker 0 sends its round
+    // r+1 payload only after worker 1's late round-r frame is already in
+    // the uplink channel, so the FIFO gather provably drains the late
+    // frame before the round can close. (The positive case — a dead
+    // worker converted into a worker error — is pinned in ps/server.rs
+    // unit tests.)
+    let rounds = 6u64;
+    let d = 4usize;
+    let plan = DelayPlan::new();
+    for r in 0..rounds {
+        plan.hold(1, r);
+    }
+    let (mut server, worker_ends, _) = inproc_cluster_with_plan(2, plan.clone());
+    let (token_tx, token_rx) = std::sync::mpsc::channel::<()>();
+    let mut it = worker_ends.into_iter();
+    let mut w0 = it.next().unwrap();
+    let mut w1 = it.next().unwrap();
+    let h0 = std::thread::spawn(move || {
+        for round in 0..rounds {
+            if round > 0 {
+                // Wait for worker 1's late round-(r-1) frame to be
+                // queued ahead of ours.
+                token_rx.recv().unwrap();
+            }
+            let mut wire = Vec::new();
+            Identity.encode(&[0.0f32; 4], &mut wire);
+            w0.send(Message::payload(0, round, wire)).unwrap();
+            let b = w0.recv().unwrap();
+            assert_eq!(b.round, round);
+        }
+        assert_eq!(w0.recv().unwrap().kind, MsgKind::Shutdown);
+    });
+    let h1 = std::thread::spawn(move || {
+        for round in 0..rounds {
+            let mut wire = Vec::new();
+            Identity.encode(&[1.0f32; 4], &mut wire);
+            // Blocks on the gate until round `round` has already closed
+            // without us (released in on_round below).
+            w1.send(Message::payload(1, round, wire)).unwrap();
+            let _ = token_tx.send(()); // unblock worker 0's next round
+            let b = w1.recv().unwrap();
+            assert_eq!(b.round, round);
+        }
+        assert_eq!(w1.recv().unwrap().kind, MsgKind::Shutdown);
+    });
+    let cfg = AggregatorConfig {
+        mode: AggMode::Pipelined,
+        policy: PolicyConfig::KofM { k: 1 },
+        liveness_rounds: 1,
+        ..Default::default()
+    };
+    let plan2 = plan.clone();
+    let recs = serve_rounds_with(&mut server, identity_decoder(), d, rounds, cfg, |rec| {
+        assert_eq!(rec.workers_included, 1, "round {} closes on worker 0 alone", rec.round);
+        plan2.release(1, rec.round);
+    })
+    .unwrap();
+    assert_eq!(recs.len(), rounds as usize);
+    drop(server);
+    h0.join().unwrap();
+    h1.join().unwrap();
+}
