@@ -1,0 +1,142 @@
+//! PERF/A-B: windowed incremental reduce vs close-time barrier reduce
+//! under **skewed arrivals** — the scenario the windowed fold exists
+//! for. Worker payloads land strictly one at a time (gate-held
+//! [`DelayPlan`] arrivals, released in worker-id order from the leader's
+//! own arrival callback — no sleeps, no timing races): worker w+1's
+//! uplink gate opens only after worker w's payload has been accepted,
+//! so the windowed engine provably folds each prefix extension while
+//! the next worker is still gate-held.
+//!
+//! The metric is **post-last-arrival close time**: the leader clock from
+//! the moment the final payload lands (before its accept) to the
+//! averaged output being ready.
+//!
+//! - `barrier`: that window contains the last decode + the whole
+//!   M-worker fold + the 1/M scale.
+//! - `windowed`: the first M−1 folds already ran inside the gather, so
+//!   the window contains the last decode + a one-worker fold + the
+//!   scale.
+//!
+//! Both produce bitwise-identical averages (`tests/integration_aggregate.rs`);
+//! the harness asserts the windowed arm's mean close time is strictly
+//! lower, and prints the A/B.
+
+use dqgan::benchutil::Bench;
+use dqgan::comm::{inproc_cluster_with_plan, DelayPlan, Message, ServerEnd, WorkerEnd};
+use dqgan::compress::compressor_from_spec;
+use dqgan::config::{AggMode, AggregatorConfig, ReduceMode};
+use dqgan::ps::{Aggregator, Decoder};
+use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const M: usize = 8;
+const D: usize = 400_708; // DCGAN dim
+
+fn main() {
+    let mut b = if std::env::var_os("DQGAN_BENCH_MS").is_some() {
+        Bench::new("reduce")
+    } else {
+        Bench::new("reduce").with_budget(Duration::from_millis(400), Duration::from_millis(60))
+    };
+
+    let codec = compressor_from_spec("linf8").unwrap();
+    let mut rng = Pcg32::new(37);
+    let wires: Vec<Vec<u8>> = (0..M)
+        .map(|_| {
+            let v = rng.normal_vec(D);
+            let mut wire = Vec::new();
+            codec.compress_encoded(&v, &mut rng, &mut wire);
+            wire
+        })
+        .collect();
+    let decoder: Decoder = {
+        let c = compressor_from_spec("linf8").unwrap();
+        Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+    };
+
+    // (Σ post-last-arrival close secs, iterations) per arm.
+    let mut close_sums: [(f64, u64); 2] = [(0.0, 0); 2];
+    for (arm, reduce) in [(0usize, ReduceMode::Barrier), (1usize, ReduceMode::Windowed)] {
+        let tag = if arm == 0 { "barrier" } else { "windowed" };
+        let mut agg = Aggregator::new(
+            AggregatorConfig { mode: AggMode::Streaming, reduce, ..Default::default() },
+            D,
+            M,
+        );
+        let decoder = decoder.clone();
+        let wires = wires.clone();
+        let acc = &mut close_sums[arm];
+        b.bench(&format!("skewed-arrival/close/{tag}/M={M}/d={D}"), || {
+            let plan = DelayPlan::new();
+            // Workers 1..M start gate-held; worker 0 sends immediately.
+            for w in 1..M as u32 {
+                plan.hold(w, 0);
+            }
+            let (mut server, worker_ends, _) = inproc_cluster_with_plan(M, plan.clone());
+            let handles: Vec<_> = worker_ends
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut w)| {
+                    let wire = wires[i].clone();
+                    std::thread::spawn(move || {
+                        // Blocks on the uplink gate until the leader has
+                        // accepted worker i−1's payload.
+                        w.send(Message::payload(i as u32, 0, wire)).unwrap();
+                    })
+                })
+                .collect();
+            let mut accepted = 0usize;
+            let mut last_arrival: Option<Instant> = None;
+            agg.begin_round(0);
+            server
+                .recv_round_streaming(&mut |msg| {
+                    accepted += 1;
+                    if accepted == M {
+                        // The final payload just landed: everything from
+                        // here to the averaged output is close-time work.
+                        last_arrival = Some(Instant::now());
+                    } else {
+                        // Structural skew proof: the next worker is still
+                        // provably gate-held while this one decodes+folds.
+                        assert!(plan.is_held(accepted as u32, 0));
+                    }
+                    let res = agg.accept(&msg, &decoder);
+                    // Release the next arrival only after this accept
+                    // (decode + windowed fold) has fully completed.
+                    if accepted < M {
+                        plan.release(accepted as u32, 0);
+                    }
+                    res
+                })
+                .unwrap();
+            let avg0 = agg.finish_round().unwrap()[0];
+            let close_secs = last_arrival.expect("all M arrived").elapsed().as_secs_f64();
+            acc.0 += close_secs;
+            acc.1 += 1;
+            for h in handles {
+                h.join().unwrap();
+            }
+            avg0
+        });
+    }
+
+    let mean = |(s, n): (f64, u64)| if n == 0 { 0.0 } else { s / n as f64 };
+    let (barrier, windowed) = (mean(close_sums[0]), mean(close_sums[1]));
+    // Guard the A/B assertion against DQGAN_BENCH_FILTER runs that
+    // executed only one arm.
+    if close_sums.iter().all(|&(_, n)| n > 0) {
+        println!(
+            "post-last-arrival close time (mean): barrier {:.3} ms, windowed {:.3} ms ({:.2}x)",
+            barrier * 1e3,
+            windowed * 1e3,
+            if windowed > 0.0 { barrier / windowed } else { f64::INFINITY }
+        );
+        assert!(
+            windowed < barrier,
+            "windowed reduce must shorten the post-last-arrival close: \
+             windowed {windowed} >= barrier {barrier}"
+        );
+    }
+    b.finish();
+}

@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::algo::AlgoKind;
-use crate::config::{AggMode, AggregatorConfig, PolicyConfig};
+use crate::config::{AggMode, AggregatorConfig, PolicyConfig, ReduceMode};
 use crate::compress::{
     compressor_from_spec, empirical_delta, gaussian_sampler, heavy_tail_sampler,
     sparse_sampler,
@@ -57,12 +57,18 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         liveness_rounds == 0 || policy != PolicyConfig::Full,
         "--liveness only applies to partial round policies (--policy kofm:K|deadline:MS)"
     );
+    // Reduce schedule (windowed incremental vs close-time barrier) —
+    // only the streaming-engine modes have per-arrival folds to
+    // schedule; the batch modes reduce at close regardless, so an
+    // explicit --reduce there is ignored rather than rejected.
+    let reduce = ReduceMode::parse(&args.get_or("reduce", "windowed"))?;
     let agg = AggregatorConfig {
         mode,
         threads: args.get_parse("agg-threads", 0usize)?,
         shard_elems: args.get_parse("agg-shard", AggregatorConfig::default().shard_elems)?,
         policy,
         pipeline_depth,
+        reduce,
         liveness_rounds,
     };
 
@@ -79,9 +85,10 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     };
     crate::log_info!(
         "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr} agg={:?} \
-         policy={}",
+         reduce={:?} policy={}",
         cfg.algo.label(),
         cfg.agg.mode,
+        cfg.agg.reduce,
         cfg.agg.policy.label()
     );
 

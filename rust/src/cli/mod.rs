@@ -45,6 +45,7 @@ USAGE:
               [--rounds T] [--lr ETA] [--seed S] [--eval-every K]
               [--agg sharded|sequential|streaming|pipelined]
               [--agg-threads N] [--agg-shard E] [--pipeline-depth D]
+              [--reduce windowed|barrier]
               [--policy full|kofm:K|deadline:MS[,K]] [--liveness R]
               [--round-csv PATH]
       Train a GAN on the parameter-server runtime.
@@ -63,7 +64,11 @@ USAGE:
       --agg-threads 0 = auto; --agg-shard = f32 elements per reduction
       shard. --liveness R fails a kofm/deadline run when a skipped
       worker's late payload is more than R rounds behind (dead, not
-      slow; 0 = never, default).
+      slow; 0 = never, default). --reduce windowed (default) folds the
+      arrived worker-id prefix into the mean during the gather — and
+      offloads the close-time tail to the pool under --agg pipelined —
+      while barrier keeps the whole fold at close time; both are
+      bitwise-identical (streaming/pipelined engines only).
 
   dqgan figures --id fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all [--fast]
       Regenerate a paper figure / theory validation (CSV under results/).

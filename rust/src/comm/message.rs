@@ -75,8 +75,18 @@ impl Message {
     /// (bit m set ⇔ worker m's payload entered the average) followed by
     /// the averaged f32 vector.
     pub fn partial_broadcast(round: u64, included: &[bool], avg: &[f32]) -> Self {
+        let payload = Self::partial_broadcast_prefix(included, avg.len());
+        Self::partial_broadcast_from_prefix(round, payload, avg)
+    }
+
+    /// Everything of a partial-broadcast payload that does **not** need
+    /// the averaged values: the bitmap header, in a buffer pre-sized for
+    /// the `dim` f32s to follow. The pipelined leader builds this while
+    /// the offloaded reduce is still folding, then completes the frame
+    /// with [`Self::partial_broadcast_from_prefix`] once the mean lands.
+    pub fn partial_broadcast_prefix(included: &[bool], dim: usize) -> Vec<u8> {
         let n_bitmap = included.len().div_ceil(8);
-        let mut payload = Vec::with_capacity(4 + n_bitmap + 4 * avg.len());
+        let mut payload = Vec::with_capacity(4 + n_bitmap + 4 * dim);
         put_u32(&mut payload, n_bitmap as u32);
         for chunk in included.chunks(8) {
             let mut byte = 0u8;
@@ -87,6 +97,12 @@ impl Message {
             }
             payload.push(byte);
         }
+        payload
+    }
+
+    /// Second half of [`Self::partial_broadcast_prefix`]: append the
+    /// averaged vector and wrap the frame.
+    pub fn partial_broadcast_from_prefix(round: u64, mut payload: Vec<u8>, avg: &[f32]) -> Self {
         crate::util::bytes::put_f32_slice(&mut payload, avg);
         Self { kind: MsgKind::PartialBroadcast, worker: u32::MAX, round, payload }
     }

@@ -131,13 +131,25 @@ impl Compressor for LinfStochastic {
         }
         let bl = self.block_len(v.len());
         let lb = self.level_bits();
+        // Same combined `sign | level << 1` single-write trick as QSGD
+        // (sign stays in the lower bit position, so the packed stream is
+        // unchanged); this is the per-element hot loop of the paper's
+        // experimental codec. Fallback pair only for degenerate s ≥ 2³¹.
+        let width = 1 + lb;
         for (vb, ob) in v.chunks(bl).zip(q_out.chunks_mut(bl)) {
             let (scale, levels) = self.quantize_block(vb, rng);
             put_f32(buf, scale);
-            let mut w = BitWriter::with_capacity_bits(vb.len() * (1 + lb as usize));
-            for &l in &levels {
-                w.write(u32::from(l < 0), 1);
-                w.write(l.unsigned_abs().min(self.levels), lb);
+            let mut w = BitWriter::with_capacity_bits(vb.len() * width as usize);
+            if width <= 32 {
+                for &l in &levels {
+                    let mag = l.unsigned_abs().min(self.levels);
+                    w.write(u32::from(l < 0) | (mag << 1), width);
+                }
+            } else {
+                for &l in &levels {
+                    w.write(u32::from(l < 0), 1);
+                    w.write(l.unsigned_abs().min(self.levels), lb);
+                }
             }
             w.append_to(buf);
             self.reconstruct_block(scale, &levels, ob);
@@ -233,10 +245,16 @@ impl Compressor for LinfStochastic {
             }
             let mut br = BitReader::new(&bytes[pos..pos + packed_bytes]);
             pos += packed_bytes;
+            // Mirror of the combined-write encode: one read per element.
+            let width = 1 + lb;
             for o in ob.iter_mut() {
-                let sign = br.read(1)?;
-                let level = br.read(lb)? as i32;
-                let l = if sign == 1 { -level } else { level };
+                let (sign, mag) = if width <= 32 {
+                    let packed = br.read(width)?;
+                    (packed & 1, (packed >> 1) as i32)
+                } else {
+                    (br.read(1)?, br.read(lb)? as i32)
+                };
+                let l = if sign == 1 { -mag } else { mag };
                 // NOTE: must stay exactly `scale * (l / s)` — see
                 // `reconstruct_block`; the EF state requires bit-identical
                 // round trips.

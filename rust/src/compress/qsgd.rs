@@ -84,10 +84,24 @@ impl Qsgd {
             return;
         }
         let lb = self.level_bits();
-        let mut w = BitWriter::with_capacity_bits(levels.len() * (1 + lb as usize));
-        for &l in levels {
-            w.write(u32::from(l < 0), 1);
-            w.write(l.unsigned_abs().min(self.levels), lb);
+        // One combined `sign | level << 1` write per element instead of
+        // two: the sign bit stays in the lower position, so the packed
+        // stream is bit-identical to the old write(sign,1)+write(level,lb)
+        // pair — half the writer calls through the word-level drain.
+        let width = 1 + lb;
+        let mut w = BitWriter::with_capacity_bits(levels.len() * width as usize);
+        if width <= 32 {
+            for &l in levels {
+                let mag = l.unsigned_abs().min(self.levels);
+                w.write(u32::from(l < 0) | (mag << 1), width);
+            }
+        } else {
+            // Degenerate s ≥ 2³¹ (not reachable via with_bits): the
+            // combined value would not fit one write, so keep the pair.
+            for &l in levels {
+                w.write(u32::from(l < 0), 1);
+                w.write(l.unsigned_abs().min(self.levels), lb);
+            }
         }
         w.append_to(buf);
     }
@@ -187,10 +201,18 @@ impl Compressor for Qsgd {
         let mut br = BitReader::new(rest);
         let lb = self.level_bits();
         let s = self.levels as f32;
+        // Mirror of `encode_levels`: one combined read per element, sign
+        // in the low bit — same bits consumed as the old 1+lb read pair.
+        let width = 1 + lb;
         for o in out.iter_mut() {
-            let sign = br.read(1)?;
-            let level = br.read(lb)? as i32;
-            let level = if sign == 1 { -level } else { level };
+            let (sign, mag) = if width <= 32 {
+                let packed = br.read(width)?;
+                (packed & 1, (packed >> 1) as i32)
+            } else {
+                // Mirror of the degenerate-s encode fallback.
+                (br.read(1)?, br.read(lb)? as i32)
+            };
+            let level = if sign == 1 { -mag } else { mag };
             // NOTE: must stay exactly `norm * (l / s)` — `reconstruct`
             // uses the same expression and the EF state requires
             // bit-identical round trips.

@@ -55,6 +55,37 @@ impl AggMode {
     }
 }
 
+/// When the streaming-engine leader folds decoded payloads into the
+/// round's mean (`--reduce`). Both schedules perform exactly the same
+/// float additions in the same worker-id order per element, so the
+/// reduced values are **bitwise identical** — this is a pure scheduling
+/// switch, like [`AggMode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceMode {
+    /// Incremental windowed reduce (default): as the gather runs, the
+    /// contiguous lowest-worker-id prefix of arrived+decoded slots is
+    /// folded into the shard accumulators, so the close-time reduce only
+    /// folds the remaining tail (empty when arrivals were in order). On
+    /// the pipelined path the close-time tail fold is additionally
+    /// **offloaded** to a detached pool task that the leader joins after
+    /// preparing the broadcast frame.
+    Windowed,
+    /// Fold nothing until the round closes (the pre-windowed behavior,
+    /// kept as the A/B baseline).
+    Barrier,
+}
+
+impl ReduceMode {
+    /// Parse a CLI string: `windowed`/`incremental` or `barrier`/`close`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "windowed" | "incremental" => Ok(Self::Windowed),
+            "barrier" | "close" => Ok(Self::Barrier),
+            other => anyhow::bail!("unknown reduce mode '{other}' (windowed|barrier)"),
+        }
+    }
+}
+
 /// Round-completion policy: after each accepted arrival the streaming
 /// leader asks "does this round close now, or keep waiting?". The
 /// runtime engine is built from this in `ps/policy.rs`; anything other
@@ -143,6 +174,12 @@ pub struct AggregatorConfig {
     /// sizes the aggregator's slot banks (capped at two — one gathering
     /// round plus one round whose broadcast is still in flight).
     pub pipeline_depth: usize,
+    /// Reduce schedule of the streaming-engine modes (`--reduce`):
+    /// windowed incremental folds during the gather (default) or the
+    /// close-time barrier fold. Ignored by the batch modes
+    /// ([`AggMode::Sequential`]/[`AggMode::Sharded`], whose reduce is
+    /// inherently close-time). Bitwise-identical output either way.
+    pub reduce: ReduceMode,
     /// Liveness bound for partial round-completion policies: if a
     /// skipped worker's oldest undrained late round (`pending_late`
     /// front) is more than this many rounds behind the leader, the
@@ -162,6 +199,7 @@ impl Default for AggregatorConfig {
             shard_elems: 16 * 1024,
             policy: PolicyConfig::Full,
             pipeline_depth: 2,
+            reduce: ReduceMode::Windowed,
             liveness_rounds: 0,
         }
     }
@@ -249,6 +287,17 @@ mod tests {
         assert_eq!(cfg.policy, PolicyConfig::Full);
         assert!(cfg.resolved_threads() >= 1);
         assert_eq!(AggregatorConfig::sequential().mode, AggMode::Sequential);
+    }
+
+    #[test]
+    fn parses_reduce_modes() {
+        assert_eq!(ReduceMode::parse("windowed").unwrap(), ReduceMode::Windowed);
+        assert_eq!(ReduceMode::parse("INCREMENTAL").unwrap(), ReduceMode::Windowed);
+        assert_eq!(ReduceMode::parse("barrier").unwrap(), ReduceMode::Barrier);
+        assert_eq!(ReduceMode::parse("close").unwrap(), ReduceMode::Barrier);
+        assert!(ReduceMode::parse("wat").is_err());
+        // Windowed is the default: the fast path is on unless opted out.
+        assert_eq!(AggregatorConfig::default().reduce, ReduceMode::Windowed);
     }
 
     #[test]

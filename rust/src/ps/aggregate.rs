@@ -36,6 +36,35 @@
 //! flight. Closing (`finish_round` / [`Aggregator::finish_partial`])
 //! always applies to the *oldest* open bank, preserving round order.
 //!
+//! ## Windowed incremental reduce (`--reduce windowed`, the default)
+//!
+//! The streaming-engine rounds no longer have to run the whole reduce
+//! *after* the last payload lands. Each bank tracks, per reduction
+//! shard, how many workers are already folded into a per-bank shard
+//! accumulator, plus the length of the **contiguous lowest-worker-id
+//! prefix** of arrived+decoded slots. Every [`Aggregator::accept`] that
+//! extends that prefix folds the newly covered slots into the
+//! accumulators — strictly in worker-id order per shard, on the pool —
+//! so by close time only the out-of-order tail (empty when arrivals were
+//! in order) plus the final 1/M scale remain. Only the contiguous prefix
+//! is ever folded early, which is what makes partial (K-of-M/deadline)
+//! closes safe: a slot that never arrived can never have been folded, so
+//! the skipped-worker filter of [`Aggregator::finish_partial`] still
+//! holds exactly.
+//!
+//! On the pipelined path the close-time tail fold + scale is additionally
+//! **offloaded**: [`Aggregator::close_round`] submits it to the pool as a
+//! detached task (the rotating banks isolate its inputs — the buffers are
+//! moved into the task and moved back at join), and
+//! [`Aggregator::join_reduce`] joins it through a completion latch. The
+//! leader uses the window in between to prepare the broadcast frame (see
+//! `ps/server.rs`), so the residual close work runs off the leader
+//! thread instead of serializing in front of the broadcast. The offload
+//! is gated to small residues (at most one unfolded worker): the
+//! detached task folds sequentially, so a short-prefix close — worker 0
+//! arriving last leaves the whole fold in the tail — takes the inline
+//! shard-parallel path instead.
+//!
 //! ## Determinism contract
 //!
 //! The reduce stage adds workers in exactly the order the sequential path
@@ -47,7 +76,13 @@
 //! guarantee the regression tests enforce). The streaming mode decodes in
 //! arrival order but each payload lands in its own per-worker slot, and
 //! the reduce only ever reads the slots in worker-id order — so arrival
-//! order cannot affect a single bit of the output.
+//! order cannot affect a single bit of the output. The windowed schedule
+//! changes *when* additions run, never their per-element order or
+//! grouping: prefix folds add workers 0..p in id order, the close fold
+//! continues with the remaining (included) ids, and the scale multiplies
+//! the same sums by the same 1/M — so `--reduce windowed|barrier` is
+//! bitwise-invisible too, over full and partial closes alike (enforced by
+//! `tests/integration_aggregate.rs`).
 //!
 //! ## Buffer reuse
 //!
@@ -62,11 +97,12 @@
 //! sequential body, which is output-identical by construction.
 
 use crate::comm::Message;
-use crate::config::{AggMode, AggregatorConfig};
+use crate::config::{AggMode, AggregatorConfig, ReduceMode};
 use crate::tensor::ops;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{TaskDone, ThreadPool};
+use crate::util::timer::Stopwatch;
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Server-side payload decoder: decode `bytes` into the dense `out`
 /// buffer (length = flat parameter dimension). Algorithm-specific; see
@@ -94,16 +130,40 @@ struct RoundBank {
     slots: Vec<WorkerSlot>,
     arrived: Vec<bool>,
     arrived_count: usize,
+    /// Windowed-reduce accumulator: the running per-element sum of the
+    /// folded worker prefix (zeroed lazily by each shard's first fold).
+    acc: Vec<f32>,
+    /// Per reduction shard: the lowest worker-id prefix already folded
+    /// into that shard of `acc`.
+    folded: Vec<usize>,
+    /// Length of the contiguous arrived prefix (workers `0..prefix` have
+    /// all arrived+decoded) — the fold window's high-water mark.
+    prefix: usize,
+    /// Leader seconds spent in incremental window folds this round.
+    fold_secs: f64,
+    /// Buffers currently moved into a detached close-time reduce task
+    /// (the bank must not be reopened until [`Aggregator::join_reduce`]
+    /// moves them back).
+    detached: bool,
 }
 
 impl RoundBank {
-    fn new(dim: usize, workers: usize) -> Self {
+    fn new(dim: usize, workers: usize, shards: usize, windowed: bool) -> Self {
         Self {
             round: 0,
             open: false,
             slots: (0..workers).map(|_| WorkerSlot { buf: vec![0.0; dim], err: None }).collect(),
             arrived: vec![false; workers],
             arrived_count: 0,
+            // The dim-sized accumulator only exists for configurations
+            // that can actually fold into it — under `--reduce barrier`
+            // and the batch modes it would be dead weight (~1.6 MB per
+            // bank at DCGAN dim).
+            acc: if windowed { vec![0.0; dim] } else { Vec::new() },
+            folded: vec![0; shards],
+            prefix: 0,
+            fold_secs: 0.0,
+            detached: false,
         }
     }
 
@@ -112,7 +172,137 @@ impl RoundBank {
         self.open = true;
         self.arrived.fill(false);
         self.arrived_count = 0;
+        self.folded.fill(0);
+        self.prefix = 0;
+        self.fold_secs = 0.0;
     }
+}
+
+/// Fold workers `*folded..upto` of the per-worker slots into one shard
+/// accumulator, strictly in worker-id order. A shard's first fold zeroes
+/// it first, replicating the barrier reduce's `0.0 + v⁰ᵢ` opening
+/// addition exactly (a plain copy would differ on −0.0 inputs).
+fn fold_shard(acc: &mut [f32], off: usize, slots: &[WorkerSlot], folded: &mut usize, upto: usize) {
+    if *folded >= upto {
+        return;
+    }
+    if *folded == 0 {
+        for x in acc.iter_mut() {
+            *x = 0.0;
+        }
+    }
+    for slot in &slots[*folded..upto] {
+        let src = &slot.buf[off..off + acc.len()];
+        for (a, &b) in acc.iter_mut().zip(src) {
+            *a += b;
+        }
+    }
+    *folded = upto;
+}
+
+/// Close-time fold + scale for one shard: continue the worker-id-order
+/// fold past the already-folded prefix — skipping never-arrived slots
+/// when `partial` (their buffers hold stale bytes that must not leak
+/// into the mean) — then write `out = acc · inv`.
+fn close_shard(
+    acc: &mut [f32],
+    out: &mut [f32],
+    off: usize,
+    slots: &[WorkerSlot],
+    arrived: &[bool],
+    folded: &mut usize,
+    partial: bool,
+    inv: f32,
+) {
+    if *folded == 0 {
+        for x in acc.iter_mut() {
+            *x = 0.0;
+        }
+    }
+    for (w, slot) in slots.iter().enumerate().skip(*folded) {
+        if partial && !arrived[w] {
+            continue;
+        }
+        let src = &slot.buf[off..off + acc.len()];
+        for (a, &b) in acc.iter_mut().zip(src) {
+            *a += b;
+        }
+    }
+    *folded = slots.len();
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o = a * inv;
+    }
+}
+
+/// Sequentially run [`close_shard`] over every shard — the one walk the
+/// no-pool inline close and the detached close task share, so the shard
+/// offset arithmetic and inclusion filter exist exactly once outside the
+/// pool dispatch.
+#[allow(clippy::too_many_arguments)]
+fn close_all_shards(
+    acc: &mut [f32],
+    out: &mut [f32],
+    shard_elems: usize,
+    slots: &[WorkerSlot],
+    arrived: &[bool],
+    folded: &mut [usize],
+    partial: bool,
+    inv: f32,
+) {
+    for (s, ((ac, f), o)) in acc
+        .chunks_mut(shard_elems)
+        .zip(folded.iter_mut())
+        .zip(out.chunks_mut(shard_elems))
+        .enumerate()
+    {
+        close_shard(ac, o, s * shard_elems, slots, arrived, f, partial, inv);
+    }
+}
+
+/// Split of one round's reduce time, feeding the `decode_secs` /
+/// `reduce_secs` telemetry columns.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReduceTiming {
+    /// Seconds of incremental window folds that ran *during* the gather
+    /// (inside [`Aggregator::accept`], on the leader clock).
+    pub in_gather_secs: f64,
+    /// Seconds of the close-time fold + scale — on the detached task's
+    /// own clock when the close was offloaded, so this can overlap
+    /// leader wall time instead of adding to it.
+    pub close_secs: f64,
+}
+
+impl ReduceTiming {
+    /// Total reduce seconds of the round.
+    pub fn total_secs(&self) -> f64 {
+        self.in_gather_secs + self.close_secs
+    }
+}
+
+/// Buffers of a close-time fold in flight on the pool: moved out of the
+/// bank for the task's lifetime, moved back at join, so the leader can
+/// keep decoding the *other* bank meanwhile without aliasing.
+struct ReduceJob {
+    slots: Vec<WorkerSlot>,
+    arrived: Vec<bool>,
+    acc: Vec<f32>,
+    folded: Vec<usize>,
+    out: Vec<f32>,
+    close_secs: f64,
+}
+
+struct DetachedReduce {
+    done: TaskDone,
+    cell: Arc<Mutex<Option<ReduceJob>>>,
+}
+
+/// Ticket returned by [`Aggregator::close_round`]; redeem it with
+/// [`Aggregator::join_reduce`] to obtain the round's mean. The window in
+/// between is where an offloaded close overlaps leader-side work.
+#[must_use = "join_reduce must be called to complete the round"]
+pub struct ReduceClose {
+    bank: usize,
+    detached: Option<DetachedReduce>,
 }
 
 /// Reusable leader-side aggregation state for one training run.
@@ -134,6 +324,8 @@ pub struct Aggregator {
     /// [`Self::arrived_count`] / [`Self::included`] report on.
     active: usize,
     avg: Vec<f32>,
+    /// Reduce-time split of the most recently closed (joined) round.
+    timing: ReduceTiming,
 }
 
 impl Aggregator {
@@ -159,15 +351,20 @@ impl Aggregator {
             AggMode::Pipelined => cfg.pipeline_depth.clamp(1, 2),
             _ => 1,
         };
+        let shards = dim.div_ceil(shard_elems).max(1);
+        let windowed = cfg.mode.is_streaming() && cfg.reduce == ReduceMode::Windowed;
         Self {
             dim,
             workers,
             shard_elems,
             pool,
-            banks: (0..n_banks).map(|_| RoundBank::new(dim, workers)).collect(),
+            banks: (0..n_banks)
+                .map(|_| RoundBank::new(dim, workers, shards, windowed))
+                .collect(),
             open_order: VecDeque::with_capacity(n_banks),
             active: 0,
             avg: vec![0.0; dim],
+            timing: ReduceTiming::default(),
             cfg,
         }
     }
@@ -238,11 +435,13 @@ impl Aggregator {
         let idx = if self.open_order.len() < n {
             // Rotate away from the most recently touched bank, so with
             // two banks a new round never decodes over the one the round
-            // just closed occupied — genuine double-buffering.
+            // just closed occupied — genuine double-buffering. A bank
+            // whose buffers are inside a detached reduce task is not a
+            // candidate: its close must be joined first.
             (1..=n)
                 .map(|k| (self.active + k) % n)
-                .find(|&i| !self.banks[i].open)
-                .expect("fewer open banks than banks")
+                .find(|&i| !self.banks[i].open && !self.banks[i].detached)
+                .expect("no free bank: join_reduce the detached close before begin_round")
         } else {
             self.open_order.pop_front().expect("all banks open")
         };
@@ -285,28 +484,228 @@ impl Aggregator {
         bank.arrived[w] = true;
         bank.arrived_count += 1;
         self.active = idx;
+        if self.windowed_reduce() {
+            self.extend_fold_window(idx);
+        }
         Ok(())
     }
 
-    /// Close the **oldest** open streaming round: every worker must have
-    /// arrived; runs the reduce (shard-parallel when the pool exists,
-    /// `mean_into` otherwise — bitwise-identical either way) and returns
-    /// the average, valid until the next close.
-    pub fn finish_round(&mut self) -> anyhow::Result<&[f32]> {
-        let idx = self
-            .open_order
-            .pop_front()
-            .ok_or_else(|| anyhow::anyhow!("finish_round called outside an open streaming round"))?;
+    /// Whether this aggregator runs the windowed incremental reduce:
+    /// `--reduce windowed` on a streaming-engine mode. Batch-mode
+    /// aggregators driven through the streaming API directly fall back
+    /// to the barrier fold (their banks carry no accumulator).
+    fn windowed_reduce(&self) -> bool {
+        self.cfg.mode.is_streaming() && self.cfg.reduce == ReduceMode::Windowed
+    }
+
+    /// Windowed reduce: advance the bank's contiguous-arrived prefix and
+    /// fold the newly covered slots into the shard accumulators (strictly
+    /// in worker-id order per shard — shard-parallel on the pool). The
+    /// elapsed time is charged to the bank's fold clock so telemetry can
+    /// split the gather into decode and reduce components.
+    fn extend_fold_window(&mut self, idx: usize) {
+        let workers = self.workers;
+        let shard_elems = self.shard_elems;
+        let bank = &mut self.banks[idx];
+        let mut upto = bank.prefix;
+        while upto < workers && bank.arrived[upto] {
+            upto += 1;
+        }
+        if upto == bank.prefix {
+            return;
+        }
+        let extension = upto - bank.prefix;
+        bank.prefix = upto;
+        let t = Stopwatch::start();
+        let RoundBank { slots, acc, folded, .. } = &mut *bank;
+        let slots: &[WorkerSlot] = slots;
+        // A one-worker extension over a smallish dim is less work than a
+        // pool dispatch + latch round trip: fold it on the caller thread
+        // (same adds, same order — scheduling only).
+        let inline = extension * self.dim < Self::SMALL_WORK_ELEMS;
+        match &self.pool {
+            Some(pool) if !inline => {
+                let mut units: Vec<(&mut [f32], &mut usize)> =
+                    acc.chunks_mut(shard_elems).zip(folded.iter_mut()).collect();
+                pool.parallel_for_mut(&mut units, |s, (chunk, f)| {
+                    fold_shard(chunk, s * shard_elems, slots, f, upto);
+                });
+            }
+            _ => {
+                for (s, (chunk, f)) in
+                    acc.chunks_mut(shard_elems).zip(folded.iter_mut()).enumerate()
+                {
+                    fold_shard(chunk, s * shard_elems, slots, f, upto);
+                }
+            }
+        }
+        bank.fold_secs += t.elapsed_secs();
+    }
+
+    /// Close the **oldest** open streaming round and start its reduce:
+    /// every worker must have arrived (`partial = false`) or at least one
+    /// (`partial = true`). Under `--reduce barrier` the whole fold runs
+    /// here; under `--reduce windowed` only the unfolded tail + the 1/M
+    /// scale remain — and on the pipelined path with a pool, a *small*
+    /// residue (≤ 1 unfolded worker) is **offloaded** as a detached pool
+    /// task whose completion the returned ticket carries, while larger
+    /// tails run inline shard-parallel. Redeem the ticket with
+    /// [`Self::join_reduce`]; the window in between is free leader time.
+    pub fn close_round(&mut self, partial: bool) -> anyhow::Result<ReduceClose> {
+        let idx = self.open_order.pop_front().ok_or_else(|| {
+            anyhow::anyhow!("close_round called outside an open streaming round")
+        })?;
         self.banks[idx].open = false;
         self.active = idx;
-        anyhow::ensure!(
-            self.banks[idx].arrived_count == self.workers,
-            "expected {} payloads, got {}",
-            self.workers,
-            self.banks[idx].arrived_count
-        );
-        self.reduce_mean(idx, false);
+        if partial {
+            anyhow::ensure!(
+                self.banks[idx].arrived_count > 0,
+                "cannot close a round with zero payloads"
+            );
+        } else {
+            anyhow::ensure!(
+                self.banks[idx].arrived_count == self.workers,
+                "expected {} payloads, got {}",
+                self.workers,
+                self.banks[idx].arrived_count
+            );
+        }
+        self.timing =
+            ReduceTiming { in_gather_secs: self.banks[idx].fold_secs, close_secs: 0.0 };
+        if self.windowed_reduce() {
+            let count = if partial { self.banks[idx].arrived_count } else { self.workers };
+            let inv = 1.0 / count as f32;
+            // Workers still unfolded at close: every id < prefix is
+            // folded and arrived, so the selected tail is count − prefix.
+            let tail_workers = count.saturating_sub(self.banks[idx].prefix);
+            // Offload only when the residue is genuinely small (at most
+            // one fold + the scale — the in-order common case): the
+            // detached task folds sequentially on one pool worker, which
+            // overlaps the leader's O(dim) frame prep nicely but would
+            // serialize a many-worker tail that the inline close runs
+            // shard-parallel (e.g. worker 0 arriving last keeps the
+            // prefix at 0 and the whole fold in the tail).
+            let offload =
+                self.cfg.mode == AggMode::Pipelined && self.pool.is_some() && tail_workers <= 1;
+            if offload {
+                Ok(self.spawn_detached_close(idx, partial, inv))
+            } else {
+                let t = Stopwatch::start();
+                self.close_windowed_inline(idx, partial, inv);
+                self.timing.close_secs = t.elapsed_secs();
+                Ok(ReduceClose { bank: idx, detached: None })
+            }
+        } else {
+            let t = Stopwatch::start();
+            self.reduce_mean(idx, partial);
+            self.timing.close_secs = t.elapsed_secs();
+            Ok(ReduceClose { bank: idx, detached: None })
+        }
+    }
+
+    /// Join the reduce a [`Self::close_round`] ticket stands for and
+    /// return the round's mean, valid until the next close. Inline closes
+    /// return immediately; detached ones block on the task's completion
+    /// latch, move the bank's buffers back, and install the task's output
+    /// as the current average.
+    pub fn join_reduce(&mut self, close: ReduceClose) -> anyhow::Result<&[f32]> {
+        let ReduceClose { bank, detached } = close;
+        if let Some(task) = detached {
+            // Generous anti-hang bound: converts a lost task (a panicked
+            // pool worker) into an error instead of a deadlock.
+            anyhow::ensure!(
+                task.done.wait_timeout(std::time::Duration::from_secs(300)),
+                "offloaded reduce task did not complete within 300s"
+            );
+            let job = task.cell.lock().unwrap().take();
+            let Some(mut job) = job else {
+                anyhow::bail!("offloaded reduce task panicked before depositing its result");
+            };
+            self.timing.close_secs = job.close_secs;
+            let b = &mut self.banks[bank];
+            b.slots = std::mem::take(&mut job.slots);
+            b.arrived = std::mem::take(&mut job.arrived);
+            b.acc = std::mem::take(&mut job.acc);
+            b.folded = std::mem::take(&mut job.folded);
+            b.detached = false;
+            self.avg = job.out;
+        }
         Ok(&self.avg)
+    }
+
+    /// Inline windowed close: fold each shard's unfolded (included) tail
+    /// and scale into `avg`, shard-parallel on the pool when present.
+    fn close_windowed_inline(&mut self, idx: usize, partial: bool, inv: f32) {
+        let shard_elems = self.shard_elems;
+        let RoundBank { slots, arrived, acc, folded, .. } = &mut self.banks[idx];
+        let slots: &[WorkerSlot] = slots;
+        let arrived: &[bool] = arrived;
+        match &self.pool {
+            None => {
+                close_all_shards(
+                    acc, &mut self.avg, shard_elems, slots, arrived, folded, partial, inv,
+                );
+            }
+            Some(pool) => {
+                let mut units: Vec<((&mut [f32], &mut usize), &mut [f32])> = acc
+                    .chunks_mut(shard_elems)
+                    .zip(folded.iter_mut())
+                    .zip(self.avg.chunks_mut(shard_elems))
+                    .collect();
+                pool.parallel_for_mut(&mut units, |s, ((ac, f), out)| {
+                    close_shard(ac, out, s * shard_elems, slots, arrived, f, partial, inv);
+                });
+            }
+        }
+    }
+
+    /// Offloaded windowed close: move the bank's buffers (and the output
+    /// vector) into a detached pool task that folds the tail and scales,
+    /// then deposits everything for [`Self::join_reduce`] to move back.
+    /// The fold runs sequentially on its worker — the caller only
+    /// detaches closes whose tail is at most one worker (the in-order
+    /// common case), so the task is O(dim) and overlaps the leader's
+    /// broadcast-frame prep rather than serializing in front of it.
+    fn spawn_detached_close(&mut self, idx: usize, partial: bool, inv: f32) -> ReduceClose {
+        let shard_elems = self.shard_elems;
+        let bank = &mut self.banks[idx];
+        bank.detached = true;
+        let mut job = ReduceJob {
+            slots: std::mem::take(&mut bank.slots),
+            arrived: std::mem::take(&mut bank.arrived),
+            acc: std::mem::take(&mut bank.acc),
+            folded: std::mem::take(&mut bank.folded),
+            out: std::mem::take(&mut self.avg),
+            close_secs: 0.0,
+        };
+        let cell = Arc::new(Mutex::new(None));
+        let deposit = Arc::clone(&cell);
+        let pool = self.pool.as_ref().expect("detached close requires a pool");
+        let done = pool.submit(move || {
+            let t = Stopwatch::start();
+            {
+                let ReduceJob { slots, arrived, acc, folded, out, .. } = &mut job;
+                close_all_shards(acc, out, shard_elems, slots, arrived, folded, partial, inv);
+            }
+            job.close_secs = t.elapsed_secs();
+            *deposit.lock().unwrap() = Some(job);
+        });
+        ReduceClose { bank: idx, detached: Some(DetachedReduce { done, cell }) }
+    }
+
+    /// Close the **oldest** open streaming round: every worker must have
+    /// arrived; runs (or joins) the reduce and returns the average, valid
+    /// until the next close. Equivalent to `close_round(false)` +
+    /// `join_reduce` back to back.
+    pub fn finish_round(&mut self) -> anyhow::Result<&[f32]> {
+        let close = self.close_round(false)?;
+        self.join_reduce(close)
+    }
+
+    /// Reduce-time split of the most recently closed-and-joined round
+    /// (how much fold work ran inside the gather vs at close time).
+    pub fn last_reduce_timing(&self) -> ReduceTiming {
+        self.timing
     }
 
     /// Number of payloads accepted into the most recently touched (open
@@ -318,9 +717,17 @@ impl Aggregator {
     /// Per-worker arrival flags of the most recently touched (open or
     /// just-closed) streaming round — the inclusion set a partial
     /// broadcast carries. Valid until that bank's next
-    /// [`Self::begin_round`].
+    /// [`Self::begin_round`]. Panics (rather than silently returning an
+    /// empty slice) while the bank's buffers are inside a detached
+    /// close-time reduce: capture the inclusion set **before**
+    /// [`Self::close_round`], as the leader loop does.
     pub fn included(&self) -> &[bool] {
-        &self.banks[self.active].arrived
+        let bank = &self.banks[self.active];
+        assert!(
+            !bank.detached,
+            "included() while the close is detached — capture it before close_round"
+        );
+        &bank.arrived
     }
 
     /// Round id of the oldest open streaming round, if any.
@@ -337,17 +744,8 @@ impl Aggregator {
     /// identical, so `kofm:M` degenerates to the full barrier exactly
     /// (the integration property test covers the all-arrived draw too).
     pub fn finish_partial(&mut self) -> anyhow::Result<&[f32]> {
-        let idx = self.open_order.pop_front().ok_or_else(|| {
-            anyhow::anyhow!("finish_partial called outside an open streaming round")
-        })?;
-        self.banks[idx].open = false;
-        self.active = idx;
-        anyhow::ensure!(
-            self.banks[idx].arrived_count > 0,
-            "cannot close a round with zero payloads"
-        );
-        self.reduce_mean(idx, true);
-        Ok(&self.avg)
+        let close = self.close_round(true)?;
+        self.join_reduce(close)
     }
 
     /// The one reduce every mode shares: zero `avg`, add the selected
@@ -418,7 +816,9 @@ impl Aggregator {
                 return Err(e);
             }
         }
+        let t = Stopwatch::start();
         self.reduce_mean(0, false);
+        self.timing = ReduceTiming { in_gather_secs: 0.0, close_secs: t.elapsed_secs() };
         Ok(())
     }
 
@@ -446,7 +846,9 @@ impl Aggregator {
             }
         }
         // Stage 2: disjoint output shards, each reduced in worker order.
+        let t = Stopwatch::start();
         self.reduce_mean(0, false);
+        self.timing = ReduceTiming { in_gather_secs: 0.0, close_secs: t.elapsed_secs() };
         Ok(())
     }
 }
@@ -709,6 +1111,193 @@ mod tests {
                 assert_eq!(a[i].to_bits(), b[i].to_bits(), "round {r} element {i}");
             }
         }
+    }
+
+    fn streaming_with_reduce(
+        reduce: ReduceMode,
+        threads: usize,
+        shard_elems: usize,
+    ) -> AggregatorConfig {
+        AggregatorConfig {
+            mode: AggMode::Streaming,
+            reduce,
+            threads,
+            shard_elems,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn windowed_reduce_matches_barrier_bitwise_in_every_arrival_order() {
+        // Same payloads, every rotation of the arrival order, windowed vs
+        // barrier — must agree to the bit, in both the no-pool (small d)
+        // and pool regimes.
+        let c = LinfStochastic::with_bits(8);
+        let decoder: Decoder = Arc::new(move |b: &[u8], out: &mut [f32]| c.decode_into(b, out));
+        for &(d, threads, shard) in
+            &[(17usize, 0usize, 4usize), (Aggregator::SMALL_WORK_ELEMS, 3, 512)]
+        {
+            let m = 5;
+            let mut rng = Pcg32::new(0xD1CE ^ d as u64);
+            let msgs: Vec<Message> = (0..m)
+                .map(|w| {
+                    let v = rng.normal_vec(d);
+                    let mut wire = Vec::new();
+                    c.compress_encoded(&v, &mut rng, &mut wire);
+                    Message::payload(w as u32, 0, wire)
+                })
+                .collect();
+            for rot in 0..m {
+                let barrier_cfg = streaming_with_reduce(ReduceMode::Barrier, threads, shard);
+                let windowed_cfg = streaming_with_reduce(ReduceMode::Windowed, threads, shard);
+                let mut oracle = Aggregator::new(barrier_cfg, d, m);
+                let mut windowed = Aggregator::new(windowed_cfg, d, m);
+                for agg in [&mut oracle, &mut windowed] {
+                    agg.begin_round(0);
+                    for i in 0..m {
+                        agg.accept(&msgs[(i + rot) % m], &decoder).unwrap();
+                    }
+                }
+                let a = oracle.finish_round().unwrap().to_vec();
+                let b = windowed.finish_round().unwrap();
+                for i in 0..d {
+                    assert_eq!(a[i].to_bits(), b[i].to_bits(), "d={d} rot={rot} element {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_partial_close_never_folds_a_skipped_slot() {
+        // Poison the skipped worker's slot with a previous round's data:
+        // if the windowed fold ever touched a never-arrived slot, the
+        // stale bytes would leak into the mean and diverge from a fresh
+        // barrier oracle that never saw them.
+        let dec = identity_decoder();
+        let (d, m) = (6usize, 4usize);
+        let mut windowed =
+            Aggregator::new(streaming_with_reduce(ReduceMode::Windowed, 0, 2), d, m);
+        // Round 0: everyone (including the soon-to-be-skipped worker 1)
+        // sends large junk that must not survive into round 1.
+        windowed.begin_round(0);
+        for w in 0..m as u32 {
+            windowed.accept(&payload_of(w, 0, &[1e6; 6]), &dec).unwrap();
+        }
+        windowed.finish_round().unwrap();
+        // Round 1: workers {0, 2, 3} arrive (prefix stops at 1), kofm
+        // closes without worker 1.
+        let vecs: Vec<Vec<f32>> =
+            (0..m).map(|w| (0..d).map(|i| (w * 10 + i) as f32).collect()).collect();
+        windowed.begin_round(1);
+        for &w in &[0usize, 2, 3] {
+            windowed.accept(&payload_of(w as u32, 1, &vecs[w]), &dec).unwrap();
+        }
+        assert_eq!(windowed.included(), &[true, false, true, true]);
+        let got = windowed.finish_partial().unwrap().to_vec();
+        let mut fresh = Aggregator::new(
+            streaming_with_reduce(ReduceMode::Barrier, 0, 2),
+            d,
+            m,
+        );
+        fresh.begin_round(1);
+        for &w in &[0usize, 2, 3] {
+            fresh.accept(&payload_of(w as u32, 1, &vecs[w]), &dec).unwrap();
+        }
+        let want = fresh.finish_partial().unwrap();
+        for i in 0..d {
+            assert_eq!(want[i].to_bits(), got[i].to_bits(), "element {i}");
+        }
+    }
+
+    #[test]
+    fn offloaded_pipelined_close_matches_inline_across_rounds_and_partials() {
+        // d · m above the small-work cutoff so the pipelined aggregator
+        // really owns a pool; rotate the banks over several rounds,
+        // ending on a partial close. In-order arrivals leave the tail
+        // empty, so close_round really detaches (the offload is gated to
+        // tail_workers ≤ 1); reversed arrivals keep the prefix short and
+        // take the inline shard-parallel close — both must match the
+        // barrier oracle to the bit.
+        let d = Aggregator::SMALL_WORK_ELEMS;
+        let m = 3;
+        let c = LinfStochastic::with_bits(8);
+        let decoder: Decoder = Arc::new(move |b: &[u8], out: &mut [f32]| c.decode_into(b, out));
+        for reversed in [false, true] {
+            let mut rng = Pcg32::new(0x0FF1_0AD);
+            let rounds: Vec<Vec<Message>> = (0..4u64)
+                .map(|r| {
+                    (0..m)
+                        .map(|w| {
+                            let v = rng.normal_vec(d);
+                            let mut wire = Vec::new();
+                            c.compress_encoded(&v, &mut rng, &mut wire);
+                            Message::payload(w as u32, r, wire)
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut pipe = Aggregator::new(
+                AggregatorConfig {
+                    threads: 3,
+                    shard_elems: 512,
+                    ..AggregatorConfig::pipelined()
+                },
+                d,
+                m,
+            );
+            let mut oracle =
+                Aggregator::new(streaming_with_reduce(ReduceMode::Barrier, 3, 512), d, m);
+            for (r, msgs) in rounds.iter().enumerate() {
+                let full = r + 1 < rounds.len();
+                let take = if full { m } else { m - 1 };
+                let want: Vec<f32> = {
+                    oracle.begin_round(r as u64);
+                    for msg in msgs.iter().take(take) {
+                        oracle.accept(msg, &decoder).unwrap();
+                    }
+                    if full {
+                        oracle.finish_round().unwrap().to_vec()
+                    } else {
+                        oracle.finish_partial().unwrap().to_vec()
+                    }
+                };
+                pipe.begin_round(r as u64);
+                let order: Vec<usize> =
+                    if reversed { (0..take).rev().collect() } else { (0..take).collect() };
+                for &j in &order {
+                    pipe.accept(&msgs[j], &decoder).unwrap();
+                }
+                let close = pipe.close_round(!full).unwrap();
+                let got = pipe.join_reduce(close).unwrap();
+                for i in 0..d {
+                    assert_eq!(
+                        want[i].to_bits(),
+                        got[i].to_bits(),
+                        "reversed={reversed} round {r} element {i}"
+                    );
+                }
+                let timing = pipe.last_reduce_timing();
+                assert!(timing.in_gather_secs >= 0.0 && timing.close_secs >= 0.0);
+                assert!(timing.total_secs() >= timing.close_secs);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "join_reduce the detached close")]
+    fn begin_round_refuses_a_bank_whose_reduce_is_still_detached() {
+        let d = Aggregator::SMALL_WORK_ELEMS;
+        let dec = identity_decoder();
+        let mut agg = Aggregator::new(
+            AggregatorConfig { threads: 2, shard_elems: 512, ..AggregatorConfig::pipelined() },
+            d,
+            1,
+        );
+        agg.begin_round(0);
+        agg.accept(&payload_of(0, 0, &vec![1.0; d]), &dec).unwrap();
+        let _close = agg.close_round(false).unwrap(); // bank 0 detached
+        agg.begin_round(1); // bank 1 is free
+        agg.begin_round(2); // no free bank: must panic, not recycle
     }
 
     #[test]

@@ -19,7 +19,7 @@ mod policy;
 mod server;
 mod worker;
 
-pub use aggregate::{Aggregator, Decoder};
+pub use aggregate::{Aggregator, Decoder, ReduceClose, ReduceTiming};
 pub use cluster::{run_cluster, ClusterConfig, EvalEvent, TrainReport};
 pub use policy::{build_policy, RoundPolicy};
 pub use server::{serve_rounds, serve_rounds_with};
@@ -46,8 +46,25 @@ pub struct RoundRecord {
     /// decode work overlaps this wait, so `wait_secs + agg_secs` shrinks
     /// relative to the barrier paths on skewed arrivals.
     pub wait_secs: f64,
-    /// Leader time spent in decode + reduce (the compute component).
+    /// Leader time spent in decode + reduce (the compute component):
+    /// kept as the sum `decode_secs + reduce_secs` now that the split is
+    /// recorded, so existing consumers of the column read unchanged.
     pub agg_secs: f64,
+    /// Payload-decode component of `agg_secs` (frame bytes → dense f32
+    /// slots, measured inside the gather).
+    pub decode_secs: f64,
+    /// Reduce component of `agg_secs`: the windowed folds that ran during
+    /// the gather plus the close-time tail fold + scale. When the close
+    /// was offloaded (`--reduce windowed` on the pipelined path) the
+    /// close part runs on a pool task's own clock and overlaps leader
+    /// wall time instead of adding to it — which is exactly the overlap
+    /// the split exists to make visible.
+    pub reduce_secs: f64,
+    /// FNV-style 64-bit checksum of the broadcast values' f32 bit
+    /// patterns — the per-round fingerprint the CI drift check diffs
+    /// between `--reduce windowed` and `--reduce barrier` runs (equal
+    /// checksums ⇔ bit-equal broadcasts, modulo 64-bit collisions).
+    pub broadcast_fnv: u64,
     /// Seconds of this round's gather that ran while the **previous**
     /// round's broadcast was still in flight on the writer threads —
     /// the gather/broadcast overlap the pipelined engine

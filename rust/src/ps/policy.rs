@@ -26,6 +26,14 @@
 //! top of [`crate::comm::ServerEnd::recv_round_streaming_timed`]; the
 //! decisions are expressed directly as [`StreamDirective`]s so the
 //! transport can bound its blocking waits.
+//!
+//! Partial closes compose with the windowed incremental reduce
+//! (`--reduce windowed`, `ps/aggregate.rs`) by construction: the window
+//! only ever folds the **contiguous arrived** worker-id prefix, so a
+//! worker this policy skips can never have been folded early — the
+//! close-time subset fold sees exactly the included slots, bitwise
+//! identical to the barrier-reduce partial close (property-tested in
+//! `tests/integration_aggregate.rs`).
 
 use crate::comm::StreamDirective;
 use crate::config::PolicyConfig;

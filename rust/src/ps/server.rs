@@ -25,18 +25,33 @@
 //! mode (enforced by `tests/integration_pipeline.rs` across codecs,
 //! cluster sizes, pipeline depths and transports).
 //!
+//! The reduce itself is scheduled by `--reduce` (see
+//! [`crate::config::ReduceMode`]): under the default **windowed** mode
+//! the streaming-engine rounds fold the contiguous arrived worker prefix
+//! into shard accumulators *during* the gather, so the close only owes
+//! the out-of-order tail plus the 1/M scale — and on the pipelined path
+//! even that residue is offloaded to a detached pool task
+//! ([`Aggregator::close_round`]/[`Aggregator::join_reduce`]) which this
+//! loop overlaps with the broadcast-frame prep (payload allocation,
+//! bitmap header, late-ledger bookkeeping). `--reduce barrier` keeps the
+//! close-time fold as the A/B baseline. Either way the reduced values
+//! are bitwise-identical — the fold order per element never changes.
+//!
 //! Each [`RoundRecord`] splits the leader's round time into `wait_secs`
 //! (blocked on the network — arrivals plus downlink writes) and
-//! `agg_secs` (decode + reduce), and `overlap_secs` reports how much of
-//! a round's gather overlapped the previous round's still-in-flight
-//! broadcast, so the A/B benchmarks can show the overlap directly.
+//! `agg_secs` (compute), now further split into `decode_secs` and
+//! `reduce_secs` so the windowed/offloaded overlap is visible in
+//! telemetry; `overlap_secs` reports how much of a round's gather
+//! overlapped the previous round's still-in-flight broadcast, and
+//! `broadcast_fnv` fingerprints the broadcast values for the CI
+//! reduce-drift check.
 
-use super::aggregate::{Aggregator, Decoder};
+use super::aggregate::{Aggregator, Decoder, ReduceClose};
 use super::policy::build_policy;
 use super::RoundRecord;
 use crate::comm::{BroadcastHandle, Message, MsgKind, ServerEnd, StreamDirective};
 use crate::config::{AggMode, AggregatorConfig, PolicyConfig};
-use crate::util::bytes::put_f32_slice;
+use crate::util::bytes::{fnv1a64_f32, put_f32_slice};
 use crate::util::stats::norm2_sq;
 use crate::util::timer::Stopwatch;
 use std::collections::VecDeque;
@@ -132,14 +147,24 @@ pub fn serve_rounds_with(
         let sw = Stopwatch::start();
         let round_start = Instant::now();
         let mut bytes_up = 0usize;
-        let mut agg_secs = 0.0f64;
+        // Leader time inside `Aggregator::accept`: payload decode plus
+        // the windowed reduce folds; the aggregator's `ReduceTiming`
+        // splits the two apart after the close.
+        let mut accept_secs = 0.0f64;
         let mut wait_secs;
         // Leader-clock seconds at which this round's gather completed.
         let gather_secs;
         // Inclusion set of a policy-closed round (None ⇒ full barrier,
         // every worker included).
         let mut included: Option<Vec<bool>> = None;
-        let avg: &[f32] = if let Some(policy) = policy.as_deref_mut() {
+        // Reduce ticket of a streaming-engine round (None ⇒ batch mode,
+        // which decodes and reduces inside `aggregate` below). Between
+        // `close_round` and `join_reduce` the leader prepares the
+        // broadcast frame — the window an offloaded close-time reduce
+        // overlaps on the pipelined windowed path.
+        let close: Option<ReduceClose>;
+        let mut batch_msgs: Vec<Message> = Vec::new();
+        if let Some(policy) = policy.as_deref_mut() {
             // Policy-driven round: every arrival is consulted against
             // the RoundPolicy; the round may close before all M payloads
             // land (K-of-M quorum or deadline expiry), skipping the
@@ -183,51 +208,106 @@ pub fn serve_rounds_with(
                 }
                 let t = Stopwatch::start();
                 let res = agg.accept(&msg, &decoder);
-                agg_secs += t.elapsed_secs();
+                accept_secs += t.elapsed_secs();
                 res?;
                 directive = policy.on_arrival(agg.arrived_count(), m);
                 Ok(directive)
             })?;
             gather_secs = sw.elapsed_secs();
-            wait_secs = (gather_secs - agg_secs).max(0.0);
-            let inc = agg.included().to_vec();
-            let t = Stopwatch::start();
-            let avg = agg.finish_partial()?;
-            agg_secs += t.elapsed_secs();
-            included = Some(inc);
-            avg
+            wait_secs = (gather_secs - accept_secs).max(0.0);
+            // The inclusion set must be captured before the close: an
+            // offloaded close moves the bank's arrival flags into the
+            // detached task until the join.
+            included = Some(agg.included().to_vec());
+            close = Some(agg.close_round(true)?);
         } else if streaming {
-            // Event-driven round: each payload decodes the moment its
-            // frame lands, overlapping decode with the wait for the
-            // remaining workers; the reduce runs once the barrier is full.
+            // Event-driven round: each payload decodes (and, under
+            // `--reduce windowed`, prefix-folds) the moment its frame
+            // lands, overlapping that work with the wait for the
+            // remaining workers; the close only owes the leftover tail.
             agg.begin_round(round);
             transport.recv_round_streaming(&mut |msg| {
                 bytes_up += msg.payload.len();
                 let t = Stopwatch::start();
                 let res = agg.accept(&msg, &decoder);
-                agg_secs += t.elapsed_secs();
+                accept_secs += t.elapsed_secs();
                 res
             })?;
             // Time not spent decoding during the gather was spent blocked
             // on arrivals.
             gather_secs = sw.elapsed_secs();
-            wait_secs = (gather_secs - agg_secs).max(0.0);
-            let t = Stopwatch::start();
-            let avg = agg.finish_round()?;
-            agg_secs += t.elapsed_secs();
-            avg
+            wait_secs = (gather_secs - accept_secs).max(0.0);
+            close = Some(agg.close_round(false)?);
         } else {
-            let msgs = transport.recv_round()?;
+            batch_msgs = transport.recv_round()?;
             gather_secs = sw.elapsed_secs();
             wait_secs = gather_secs;
-            bytes_up = msgs.iter().map(|msg| msg.payload.len()).sum();
+            bytes_up = batch_msgs.iter().map(|msg| msg.payload.len()).sum();
+            close = None;
+        }
+        // ---- Broadcast-frame prep: runs while an offloaded close-time
+        // reduce is still folding on the pool. Nothing here needs the
+        // averaged values — the payload buffer (multi-MB at DCGAN dim)
+        // is allocated, the partial frame's bitmap header written, and
+        // the late ledger updated from the inclusion set alone.
+        let workers_included = match &included {
+            Some(inc) => inc.iter().filter(|&&b| b).count(),
+            None => m,
+        };
+        // A policy round that every worker made it into broadcasts the
+        // plain frame too: "all included ⇒ byte-identical to the full
+        // barrier" is structural, not an accident of which code path ran
+        // (deadline rounds with no straggler, kofm:M).
+        let partial_frame = workers_included < m;
+        let mut payload = match &included {
+            Some(inc) if partial_frame => Message::partial_broadcast_prefix(inc, dim),
+            _ => Vec::with_capacity(4 * dim),
+        };
+        if let Some(inc) = &included {
+            for (w, &arrived) in inc.iter().enumerate() {
+                if !arrived {
+                    pending_late[w].push_back(round);
+                }
+            }
+        }
+        // ---- Join the reduce (or run the batch decode+reduce) and
+        // serialize the mean into the prepared frame.
+        let batch_sw = Stopwatch::start();
+        let avg: &[f32] = match close {
+            Some(ticket) => agg.join_reduce(ticket)?,
             // Decode × M, validate, average (line 11) — sharded or
             // sequential.
-            let t = Stopwatch::start();
-            let avg = agg.aggregate(round, &msgs, &decoder)?;
-            agg_secs = t.elapsed_secs();
-            avg
+            None => agg.aggregate(round, &batch_msgs, &decoder)?,
         };
+        let batch_wall = batch_sw.elapsed_secs();
+        let avg_payload_norm_sq = norm2_sq(avg);
+        // Per-round fingerprint of the broadcast values (bit-pattern
+        // checksum) — what the CI reduce-drift check diffs across
+        // `--reduce windowed|barrier` runs.
+        let broadcast_fnv = fnv1a64_f32(avg);
+        // Broadcast q̄ as raw f32 (the downlink is full-precision; the
+        // paper quantizes the uplink only — see DESIGN.md FIG4 notes).
+        // `Message` owns its payload bytes, so the pre-sized Vec above is
+        // the one unavoidable per-round allocation on the leader.
+        let msg = if partial_frame {
+            Message::partial_broadcast_from_prefix(round, payload, avg)
+        } else {
+            put_f32_slice(&mut payload, avg);
+            Message::broadcast(round, payload)
+        };
+        // Decode/reduce split of the round's compute: reduce is the
+        // windowed in-gather folds plus the close fold (task clock when
+        // offloaded); decode is the remaining accept time (streaming) or
+        // the non-reduce share of `aggregate` (batch). `agg_secs` stays
+        // their sum, so existing consumers read unchanged.
+        let timing = agg.last_reduce_timing();
+        let reduce_secs = timing.total_secs();
+        let decode_secs = if streaming {
+            (accept_secs - timing.in_gather_secs).max(0.0)
+        } else {
+            (batch_wall - timing.close_secs).max(0.0)
+        };
+        let agg_secs = decode_secs + reduce_secs;
         // Gather/broadcast overlap: how much of this round's gather ran
         // while the previous round's broadcast was still on the writer
         // threads. (Synchronous modes completed their broadcast before
@@ -243,30 +323,6 @@ pub fn serve_rounds_with(
             },
             None => 0.0,
         };
-        let avg_payload_norm_sq = norm2_sq(avg);
-        // Broadcast q̄ as raw f32 (the downlink is full-precision; the
-        // paper quantizes the uplink only — see DESIGN.md FIG4 notes).
-        // `Message` owns its payload bytes, so this exact-sized Vec is
-        // the one unavoidable per-round allocation on the leader. Under
-        // a partial policy the frame additionally carries the inclusion
-        // bitmap so skipped workers re-absorb their sent payloads.
-        let workers_included;
-        let msg = match &included {
-            // A policy round that every worker made it into broadcasts
-            // the plain frame too: "all included ⇒ byte-identical to the
-            // full barrier" is structural, not an accident of which code
-            // path ran (deadline rounds with no straggler, kofm:M).
-            Some(inc) if !inc.iter().all(|&b| b) => {
-                workers_included = inc.iter().filter(|&&b| b).count();
-                Message::partial_broadcast(round, inc, avg)
-            }
-            _ => {
-                workers_included = m;
-                let mut payload = Vec::with_capacity(4 * dim);
-                put_f32_slice(&mut payload, avg);
-                Message::broadcast(round, payload)
-            }
-        };
         let t = Stopwatch::start();
         if pipelined {
             // Queue the frame onto the per-worker writer threads and move
@@ -281,13 +337,6 @@ pub fn serve_rounds_with(
         // queue backpressure (a receiver `pipeline_depth` broadcasts
         // behind) on the asynchronous one.
         wait_secs += t.elapsed_secs();
-        if let Some(inc) = &included {
-            for (w, &arrived) in inc.iter().enumerate() {
-                if !arrived {
-                    pending_late[w].push_back(round);
-                }
-            }
-        }
         let rec = RoundRecord {
             round,
             avg_payload_norm_sq,
@@ -295,6 +344,9 @@ pub fn serve_rounds_with(
             wall_secs: sw.elapsed_secs(),
             wait_secs,
             agg_secs,
+            decode_secs,
+            reduce_secs,
+            broadcast_fnv,
             overlap_secs,
             workers_included,
             workers_skipped: m - workers_included,
@@ -356,11 +408,15 @@ mod tests {
 
     #[test]
     fn sequential_flag_produces_the_same_broadcast() {
-        for mode in [
-            AggMode::Sequential,
-            AggMode::Sharded,
-            AggMode::Streaming,
-            AggMode::Pipelined,
+        use crate::config::ReduceMode;
+        let mut fnvs = Vec::new();
+        for (mode, reduce) in [
+            (AggMode::Sequential, ReduceMode::Windowed),
+            (AggMode::Sharded, ReduceMode::Windowed),
+            (AggMode::Streaming, ReduceMode::Windowed),
+            (AggMode::Streaming, ReduceMode::Barrier),
+            (AggMode::Pipelined, ReduceMode::Windowed),
+            (AggMode::Pipelined, ReduceMode::Barrier),
         ] {
             let (mut server, mut workers, _) = inproc_cluster(2);
             for (i, w) in workers.iter_mut().enumerate() {
@@ -368,7 +424,7 @@ mod tests {
                 Identity.encode(&[1.0 + i as f32, -2.0, 0.5], &mut wire);
                 w.send(Message::payload(i as u32, 0, wire)).unwrap();
             }
-            let cfg = AggregatorConfig { mode, ..Default::default() };
+            let cfg = AggregatorConfig { mode, reduce, ..Default::default() };
             let t = std::thread::spawn(move || {
                 let mut avgs = Vec::new();
                 for w in &mut workers {
@@ -383,10 +439,14 @@ mod tests {
             let recs =
                 serve_rounds_with(&mut server, identity_decoder(), 3, 1, cfg, |_| {}).unwrap();
             assert_eq!(recs.len(), 1);
+            fnvs.push(recs[0].broadcast_fnv);
             let avgs = t.join().unwrap();
-            assert_eq!(avgs[0], vec![1.5, -2.0, 0.5], "{mode:?}");
+            assert_eq!(avgs[0], vec![1.5, -2.0, 0.5], "{mode:?}/{reduce:?}");
             assert_eq!(avgs[0], avgs[1]);
         }
+        // Identical broadcast values ⇒ identical checksum across every
+        // agg/reduce scheduling combination.
+        assert!(fnvs.windows(2).all(|w| w[0] == w[1]), "{fnvs:?}");
     }
 
     #[test]
@@ -416,6 +476,15 @@ mod tests {
             assert!(r.wall_secs >= r.wait_secs, "wall {} < wait {}", r.wall_secs, r.wait_secs);
             assert!(r.bytes_up > 0);
             assert_eq!(r.overlap_secs, 0.0, "round 0 has no previous broadcast to overlap");
+            // The decode/reduce split sums to the legacy agg column.
+            assert!(r.decode_secs >= 0.0 && r.reduce_secs >= 0.0);
+            assert!(
+                (r.decode_secs + r.reduce_secs - r.agg_secs).abs() < 1e-12,
+                "agg {} != decode {} + reduce {}",
+                r.agg_secs,
+                r.decode_secs,
+                r.reduce_secs
+            );
         }
     }
 

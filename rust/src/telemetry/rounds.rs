@@ -1,25 +1,31 @@
 //! CSV sink for per-round leader telemetry ([`crate::ps::RoundRecord`]):
 //! one row per synchronous round, including the `wait_secs`/`agg_secs`
-//! wall-clock split, the pipelined engine's gather/broadcast
-//! `overlap_secs`, and the round-completion policy's
-//! `workers_included`/`workers_skipped` counts — the series the
-//! straggler and pipelining A/Bs plot.
+//! wall-clock split — `agg_secs` further split into `decode_secs` +
+//! `reduce_secs` so the windowed/offloaded reduce's overlap win is
+//! visible (the old column stays as their sum) — the pipelined engine's
+//! gather/broadcast `overlap_secs`, the round-completion policy's
+//! `workers_included`/`workers_skipped` counts, and the
+//! `broadcast_fnv` bit-pattern checksum the CI reduce-drift check diffs
+//! between `--reduce windowed` and `--reduce barrier` runs.
 
 use super::CsvWriter;
 use crate::ps::RoundRecord;
 use std::path::Path;
 
 /// Column order of [`write_round_records`] output.
-pub const ROUND_CSV_HEADER: [&str; 9] = [
+pub const ROUND_CSV_HEADER: [&str; 12] = [
     "round",
     "wall_secs",
     "wait_secs",
     "agg_secs",
+    "decode_secs",
+    "reduce_secs",
     "overlap_secs",
     "bytes_up",
     "workers_included",
     "workers_skipped",
     "avg_payload_norm_sq",
+    "broadcast_fnv",
 ];
 
 /// Write one row per [`RoundRecord`] to `path` (creating parent
@@ -32,11 +38,14 @@ pub fn write_round_records(path: &Path, records: &[RoundRecord]) -> anyhow::Resu
             format!("{:.6}", r.wall_secs),
             format!("{:.6}", r.wait_secs),
             format!("{:.6}", r.agg_secs),
+            format!("{:.6}", r.decode_secs),
+            format!("{:.6}", r.reduce_secs),
             format!("{:.6}", r.overlap_secs),
             r.bytes_up.to_string(),
             r.workers_included.to_string(),
             r.workers_skipped.to_string(),
             format!("{:.6e}", r.avg_payload_norm_sq),
+            format!("{:016x}", r.broadcast_fnv),
         ])?;
     }
     csv.finish()
@@ -55,6 +64,9 @@ mod tests {
                 wall_secs: 0.25,
                 wait_secs: 0.2,
                 agg_secs: 0.05,
+                decode_secs: 0.03,
+                reduce_secs: 0.02,
+                broadcast_fnv: 0xDEAD_BEEF_0BAD_F00D,
                 overlap_secs: 0.125,
                 bytes_up: 1024,
                 workers_included: 3,
@@ -68,15 +80,21 @@ mod tests {
         let mut lines = text.lines();
         assert_eq!(lines.next().unwrap(), ROUND_CSV_HEADER.join(","));
         let row0: Vec<&str> = lines.next().unwrap().split(',').collect();
+        assert_eq!(row0.len(), ROUND_CSV_HEADER.len());
         assert_eq!(row0[0], "0");
-        assert_eq!(row0[4], "0.125000");
-        assert_eq!(row0[5], "1024");
-        assert_eq!(row0[6], "3");
-        assert_eq!(row0[7], "1");
+        assert_eq!(row0[3], "0.050000");
+        assert_eq!(row0[4], "0.030000", "decode_secs follows agg_secs");
+        assert_eq!(row0[5], "0.020000", "reduce_secs follows decode_secs");
+        assert_eq!(row0[6], "0.125000");
+        assert_eq!(row0[7], "1024");
+        assert_eq!(row0[8], "3");
+        assert_eq!(row0[9], "1");
+        assert_eq!(row0[11], "deadbeef0badf00d", "fixed-width hex checksum");
         let row1: Vec<&str> = lines.next().unwrap().split(',').collect();
-        assert_eq!(row1[4], "0.000000");
-        assert_eq!(row1[6], "4");
-        assert_eq!(row1[7], "0");
+        assert_eq!(row1[6], "0.000000");
+        assert_eq!(row1[8], "4");
+        assert_eq!(row1[9], "0");
+        assert_eq!(row1[11], &"0".repeat(16));
         assert!(lines.next().is_none());
         std::fs::remove_file(&p).ok();
     }

@@ -19,12 +19,44 @@ pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Elements per scratch block of [`put_f32_slice`] (1 KiB of bytes —
+/// comfortably in L1, large enough to amortize the per-extend length
+/// bookkeeping down to noise).
+const F32_SCRATCH_ELEMS: usize = 256;
+
 /// Append an entire f32 slice (LE).
+///
+/// This sits on the identity-codec and broadcast encode path (the leader
+/// serializes the full `dim` average every round), so it avoids the
+/// per-element `extend_from_slice` round trips: one up-front reserve,
+/// then whole scratch blocks of serialized values appended at a time.
 pub fn put_f32_slice(buf: &mut Vec<u8>, vs: &[f32]) {
     buf.reserve(vs.len() * 4);
-    for &v in vs {
-        buf.extend_from_slice(&v.to_le_bytes());
+    let mut scratch = [0u8; 4 * F32_SCRATCH_ELEMS];
+    for chunk in vs.chunks(F32_SCRATCH_ELEMS) {
+        let block = &mut scratch[..4 * chunk.len()];
+        for (dst, &v) in block.chunks_exact_mut(4).zip(chunk) {
+            dst.copy_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(block);
     }
+}
+
+/// FNV-1a-style 64-bit checksum over a slice of f32 **bit patterns**,
+/// folding one whole u32 pattern per multiply instead of single bytes
+/// (4× fewer multiplies than byte-wise FNV; still deterministic across
+/// runs and platforms, which is all the broadcast drift checks need).
+/// Distinguishes the NaN-payload/±0.0 cases a value comparison would
+/// conflate — two checksums agree iff the f32 sequences are bit-equal
+/// modulo 64-bit collisions.
+pub fn fnv1a64_f32(vs: &[f32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    for &v in vs {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(PRIME);
+    }
+    h
 }
 
 /// Cursor for decoding (fails loudly on truncation instead of UB).
@@ -151,6 +183,46 @@ mod tests {
         put_f32_slice(&mut buf, &xs);
         let mut r = Reader::new(&buf);
         assert_eq!(r.f32_vec(4).unwrap(), xs.to_vec());
+    }
+
+    #[test]
+    fn f32_slice_round_trips_across_scratch_block_boundaries() {
+        // Lengths straddling the scratch block: empty, sub-block, exact
+        // multiple, multiple + ragged tail. Bit patterns (not values)
+        // must survive, including -0.0 and NaN payloads.
+        for n in [0usize, 1, 255, 256, 512, 513, 1000] {
+            let xs: Vec<f32> = (0..n)
+                .map(|i| match i % 5 {
+                    0 => -0.0,
+                    1 => f32::from_bits(0x7FC0_1234), // NaN with payload
+                    2 => f32::MIN_POSITIVE / 2.0,     // subnormal
+                    3 => -(i as f32) * 0.125,
+                    _ => i as f32,
+                })
+                .collect();
+            let mut buf = vec![0xAAu8; 3]; // nonempty prefix must survive
+            put_f32_slice(&mut buf, &xs);
+            assert_eq!(buf.len(), 3 + 4 * n, "n={n}");
+            assert_eq!(&buf[..3], &[0xAA; 3]);
+            let mut r = Reader::new(&buf[3..]);
+            let back = r.f32_vec(n).unwrap();
+            for (i, (a, b)) in xs.iter().zip(&back).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} element {i}");
+            }
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn fnv_checksum_tracks_bit_patterns() {
+        let a = [1.0f32, -2.0, 0.0];
+        assert_eq!(fnv1a64_f32(&a), fnv1a64_f32(&[1.0, -2.0, 0.0]));
+        // Value-equal but bit-different (+0.0 vs -0.0) must differ.
+        assert_ne!(fnv1a64_f32(&a), fnv1a64_f32(&[1.0, -2.0, -0.0]));
+        assert_ne!(fnv1a64_f32(&a), fnv1a64_f32(&[1.0, -2.0]));
+        assert_ne!(fnv1a64_f32(&a), fnv1a64_f32(&[-2.0, 1.0, 0.0]), "order-sensitive");
+        // Stable across calls (the CI drift check diffs these across runs).
+        assert_eq!(fnv1a64_f32(&[]), fnv1a64_f32(&[]));
     }
 
     #[test]

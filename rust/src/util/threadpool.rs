@@ -72,6 +72,22 @@ impl ThreadPool {
         self.tx.as_ref().expect("pool alive").send(Box::new(job)).expect("pool send");
     }
 
+    /// Submit a **detached** job and get a completion handle back — the
+    /// offloaded-reduce entry point: the leader fires the close-time fold
+    /// here and joins the [`TaskDone`] latch later. The latch is opened
+    /// by a drop guard, so it opens even if the job panics (the waiter
+    /// distinguishes "completed" from "panicked" by whether the job
+    /// deposited its result, not by the latch).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> TaskDone {
+        let latch = Arc::new(CountdownLatch::new(1));
+        let guard = OpenOnDrop(Arc::clone(&latch));
+        self.execute(move || {
+            let _guard = guard; // counts down when the job ends, panic or not
+            job();
+        });
+        TaskDone { latch }
+    }
+
     /// Run a batch of borrowed jobs: all but the first are enqueued on
     /// the pool's persistent workers, the first runs on the caller
     /// thread, and the latch blocks until every job has completed.
@@ -205,6 +221,33 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Completion handle of one [`ThreadPool::submit`] job.
+pub struct TaskDone {
+    latch: Arc<CountdownLatch>,
+}
+
+impl TaskDone {
+    /// Block until the job has ended (normally or by panic).
+    pub fn wait(&self) {
+        self.latch.wait();
+    }
+
+    /// Bounded wait; `true` iff the job ended within the budget.
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> bool {
+        self.latch.wait_timeout(timeout)
+    }
+}
+
+/// Opens the wrapped latch on drop — the anti-hang guard `submit` wraps
+/// around every detached job.
+struct OpenOnDrop(Arc<CountdownLatch>);
+
+impl Drop for OpenOnDrop {
+    fn drop(&mut self) {
+        self.0.count_down();
+    }
+}
+
 /// A latch that waits for `n` completions (used by the PS barrier tests).
 pub struct CountdownLatch {
     remaining: AtomicUsize,
@@ -274,6 +317,27 @@ mod tests {
         }
         latch.wait();
         assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn submit_returns_a_joinable_completion_handle() {
+        use std::time::Duration;
+        let pool = ThreadPool::new(2);
+        let flag = Arc::new(AtomicU64::new(0));
+        let f2 = Arc::clone(&flag);
+        let done = pool.submit(move || {
+            f2.store(7, Ordering::SeqCst);
+        });
+        done.wait();
+        assert_eq!(flag.load(Ordering::SeqCst), 7);
+        assert!(done.wait_timeout(Duration::from_millis(1)), "already open");
+        // A panicking detached job must still open the latch (the drop
+        // guard), never hang the joiner.
+        let boom = pool.submit(|| panic!("detached boom"));
+        assert!(boom.wait_timeout(Duration::from_secs(10)));
+        // The pool survives the panic and keeps executing.
+        let after = pool.submit(|| {});
+        after.wait();
     }
 
     #[test]

@@ -5,10 +5,17 @@
 //! M ∈ {1, 4, 8} (the streaming engine additionally fed in scrambled
 //! arrival order), plus an independent check against the seed's
 //! `mean_into` arithmetic.
+//!
+//! The same contract extends to the reduce *schedule*: `--reduce
+//! windowed` (incremental prefix folds during the gather, offloaded
+//! close on the pipelined path) must be bitwise identical to `--reduce
+//! barrier` over every codec, cluster size, arrival order, and both full
+//! and K-of-M partial closes — including that a skipped worker's stale
+//! slot bytes never leak into a windowed partial mean.
 
 use dqgan::comm::Message;
 use dqgan::compress::compressor_from_spec;
-use dqgan::config::{AggMode, AggregatorConfig};
+use dqgan::config::{AggMode, AggregatorConfig, ReduceMode};
 use dqgan::ps::{Aggregator, Decoder};
 use dqgan::tensor::ops;
 use dqgan::util::rng::Pcg32;
@@ -145,6 +152,173 @@ fn both_paths_reproduce_the_seed_mean_into_arithmetic() {
                     avg[i].to_bits(),
                     "{spec} {mode:?}: element {i} differs from mean_into oracle"
                 );
+            }
+        }
+    }
+}
+
+fn streaming_cfg(reduce: ReduceMode) -> AggregatorConfig {
+    AggregatorConfig {
+        mode: AggMode::Streaming,
+        reduce,
+        threads: 3,
+        shard_elems: 1024,
+        ..Default::default()
+    }
+}
+
+/// Deterministic arrival scramble: rotate by `rot`, then reverse.
+fn scrambled(m: usize, rot: usize) -> Vec<usize> {
+    (0..m).map(|i| m - 1 - ((i + rot) % m)).collect()
+}
+
+#[test]
+fn windowed_reduce_is_bitwise_identical_to_barrier_over_codecs_and_orders() {
+    // The full property matrix of the windowed-reduce acceptance
+    // criterion: codecs × M × dimensions (straddling the shard size) ×
+    // scrambled arrival orders, full-barrier closes.
+    let mut rng = Pcg32::new(0xA66_2028);
+    for spec in ["qsgd8", "sign", "topk(f=0.1)"] {
+        for &m in &[1usize, 4, 8] {
+            for &d in &[1usize, 63, 4096, 100_003] {
+                let msgs = round_payloads(spec, m, d, 2, &mut rng);
+                let dec = decoder_for(spec);
+                for rot in [0usize, 1, m / 2] {
+                    let order = scrambled(m, rot);
+                    let mut barrier = Aggregator::new(streaming_cfg(ReduceMode::Barrier), d, m);
+                    let mut windowed = Aggregator::new(streaming_cfg(ReduceMode::Windowed), d, m);
+                    for agg in [&mut barrier, &mut windowed] {
+                        agg.begin_round(2);
+                        for &j in &order {
+                            agg.accept(&msgs[j], &dec).unwrap();
+                        }
+                    }
+                    let a = barrier.finish_round().unwrap().to_vec();
+                    let b = windowed.finish_round().unwrap();
+                    for i in 0..d {
+                        assert_eq!(
+                            a[i].to_bits(),
+                            b[i].to_bits(),
+                            "{spec} M={m} d={d} rot={rot}: element {i} differs"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn windowed_partial_closes_match_barrier_and_never_fold_skipped_slots() {
+    // K-of-M partial closes: the windowed engine may only have folded
+    // the contiguous arrived prefix; skipped slots — poisoned here with
+    // a previous round's payloads — must not be folded into the mean.
+    // Aggregators are reused across a warm-up round so every skipped
+    // slot really holds stale bytes, then compared against a barrier
+    // close of the same subset.
+    let mut rng = Pcg32::new(0xA66_2029);
+    for spec in ["qsgd8", "sign", "topk(f=0.1)"] {
+        for &m in &[4usize, 8] {
+            for &d in &[63usize, 4096] {
+                let dec = decoder_for(spec);
+                let poison = round_payloads(spec, m, d, 0, &mut rng);
+                let msgs = round_payloads(spec, m, d, 1, &mut rng);
+                // Skip sets: the prefix worker (0), the tail worker, and
+                // every odd worker.
+                let skip_sets: Vec<Vec<usize>> =
+                    vec![vec![0], vec![m - 1], (0..m).filter(|w| w % 2 == 1).collect()];
+                for skips in skip_sets {
+                    let included: Vec<usize> =
+                        (0..m).filter(|w| !skips.contains(w)).collect();
+                    let mut barrier = Aggregator::new(streaming_cfg(ReduceMode::Barrier), d, m);
+                    let mut windowed = Aggregator::new(streaming_cfg(ReduceMode::Windowed), d, m);
+                    for agg in [&mut barrier, &mut windowed] {
+                        // Warm-up round 0: every slot (including the ones
+                        // about to be skipped) decodes a payload.
+                        agg.begin_round(0);
+                        for msg in &poison {
+                            agg.accept(msg, &dec).unwrap();
+                        }
+                        agg.finish_round().unwrap();
+                        // Round 1: only the included subset arrives, in
+                        // reversed order to keep the prefix short.
+                        agg.begin_round(1);
+                        for &w in included.iter().rev() {
+                            agg.accept(&msgs[w], &dec).unwrap();
+                        }
+                        assert_eq!(agg.arrived_count(), included.len());
+                    }
+                    let a = barrier.finish_partial().unwrap().to_vec();
+                    let b = windowed.finish_partial().unwrap();
+                    for i in 0..d {
+                        assert_eq!(
+                            a[i].to_bits(),
+                            b[i].to_bits(),
+                            "{spec} M={m} d={d} skips={skips:?}: element {i} differs"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn offloaded_pipelined_windowed_close_is_bitwise_identical_too() {
+    // The pipelined + windowed + pool close against the barrier oracle,
+    // across several rounds (bank rotation), both full and kofm-style
+    // partial closes, in both arrival regimes: in-order arrivals leave
+    // an empty tail (the close really detaches onto the pool — the
+    // offload is gated to tail_workers ≤ 1), reversed arrivals keep the
+    // prefix short (the close runs inline shard-parallel).
+    let (m, d) = (4usize, 8192usize); // d·M above the pool cutoff
+    for spec in ["qsgd8", "sign", "topk(f=0.1)"] {
+        for reversed in [false, true] {
+            let dec = decoder_for(spec);
+            let mut rng = Pcg32::new(0xA66_202A);
+            let mut pipe = Aggregator::new(
+                AggregatorConfig {
+                    threads: 3,
+                    shard_elems: 1024,
+                    reduce: ReduceMode::Windowed,
+                    ..AggregatorConfig::pipelined()
+                },
+                d,
+                m,
+            );
+            for round in 0..4u64 {
+                let msgs = round_payloads(spec, m, d, round, &mut rng);
+                let partial = round % 2 == 1;
+                let take = if partial { m - 1 } else { m };
+                let mut oracle = Aggregator::new(streaming_cfg(ReduceMode::Barrier), d, m);
+                oracle.begin_round(round);
+                for msg in msgs.iter().take(take) {
+                    oracle.accept(msg, &dec).unwrap();
+                }
+                let want = if partial {
+                    oracle.finish_partial().unwrap().to_vec()
+                } else {
+                    oracle.finish_round().unwrap().to_vec()
+                };
+                pipe.begin_round(round);
+                let order: Vec<usize> =
+                    if reversed { (0..take).rev().collect() } else { (0..take).collect() };
+                for &j in &order {
+                    pipe.accept(&msgs[j], &dec).unwrap();
+                }
+                let got = if partial {
+                    pipe.finish_partial().unwrap()
+                } else {
+                    pipe.finish_round().unwrap()
+                };
+                for i in 0..d {
+                    assert_eq!(
+                        want[i].to_bits(),
+                        got[i].to_bits(),
+                        "{spec} reversed={reversed} round {round} partial={partial}: \
+                         element {i} differs"
+                    );
+                }
             }
         }
     }
