@@ -13,7 +13,7 @@
 
 use dqgan::benchutil::Bench;
 use dqgan::comm::Message;
-use dqgan::compress::compressor_from_spec;
+use dqgan::compress::{compressor_from_spec, Compressor};
 use dqgan::config::{AggMode, AggregatorConfig};
 use dqgan::ps::{Aggregator, Decoder};
 use dqgan::tensor::ops;

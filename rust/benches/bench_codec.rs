@@ -3,8 +3,14 @@
 
 use dqgan::benchutil::Bench;
 use dqgan::comm::Message;
-use dqgan::compress::{BitReader, BitWriter};
+use dqgan::compress::{compressor_from_spec, BitReader, BitWriter, Compressor};
+use dqgan::config::KernelMode;
+use dqgan::kernels;
+use dqgan::util::bytes::{fnv1a64_f32, put_f32_slice};
 use dqgan::util::rng::Pcg32;
+
+const AB: [(KernelMode, &str); 2] =
+    [(KernelMode::Scalar, "scalar"), (KernelMode::Simd, "simd")];
 
 fn main() {
     let mut b = Bench::new("codec");
@@ -48,6 +54,68 @@ fn main() {
         b.bench_with_throughput(&format!("frame-decode/n={n}"), n as u64, || {
             Message::decode(&frame).unwrap()
         });
+    }
+
+    // ------------------------------------------------------------------
+    // Scalar-vs-SIMD kernel A/Bs. Both arms are bitwise-identical
+    // (tests/prop_kernels.rs); these pairs pin the speedup in the
+    // committed trajectory — BENCH_*.json `speedup_gates` entries point
+    // at `<case>/scalar` ÷ `<case>/simd`.
+    // ------------------------------------------------------------------
+    let n = 1_000_000usize;
+    let v = rng.normal_vec(n);
+
+    for spec in ["qsgd8", "linf8", "terngrad", "sign"] {
+        let c = compressor_from_spec(spec).unwrap();
+        for (mode, tag) in AB {
+            let _g = kernels::scoped_mode(mode);
+            let mut buf = Vec::new();
+            b.bench_with_throughput(&format!("{spec}-encode/1M/{tag}"), (4 * n) as u64, || {
+                buf.clear();
+                c.compress_encoded(&v, &mut rng, &mut buf);
+                buf.len()
+            });
+        }
+        let wire = {
+            let mut buf = Vec::new();
+            c.compress_encoded(&v, &mut rng, &mut buf);
+            buf
+        };
+        let mut out = vec![0.0f32; n];
+        for (mode, tag) in AB {
+            let _g = kernels::scoped_mode(mode);
+            b.bench_with_throughput(&format!("{spec}-decode/1M/{tag}"), (4 * n) as u64, || {
+                c.decode_into(&wire, &mut out).unwrap();
+                out[0]
+            });
+        }
+    }
+
+    // Broadcast-frame building blocks: f32→LE serialization and the
+    // round-checksum hash.
+    for (mode, tag) in AB {
+        let _g = kernels::scoped_mode(mode);
+        let mut buf: Vec<u8> = Vec::with_capacity(4 * n);
+        b.bench_with_throughput(&format!("put-f32-slice/1M/{tag}"), (4 * n) as u64, || {
+            buf.clear();
+            put_f32_slice(&mut buf, &v);
+            buf.len()
+        });
+        b.bench_with_throughput(&format!("fnv1a64-f32/1M/{tag}"), (4 * n) as u64, || {
+            fnv1a64_f32(&v)
+        });
+    }
+
+    // Whole-frame encode (CRC-dominated: byte-at-a-time vs slicing-by-8).
+    {
+        let payload = vec![0xA5u8; 1_600_000];
+        let msg = Message::payload(3, 17, payload);
+        for (mode, tag) in AB {
+            let _g = kernels::scoped_mode(mode);
+            b.bench_with_throughput(&format!("frame-encode-ab/n=1600000/{tag}"), 1_600_000, || {
+                msg.encode()
+            });
+        }
     }
     b.finish();
 }

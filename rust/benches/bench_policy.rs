@@ -14,7 +14,7 @@
 
 use dqgan::benchutil::Bench;
 use dqgan::comm::{inproc_cluster_with_plan, DelayPlan, Message, MsgKind, WorkerEnd};
-use dqgan::compress::compressor_from_spec;
+use dqgan::compress::{compressor_from_spec, Compressor};
 use dqgan::config::{AggMode, AggregatorConfig, PolicyConfig};
 use dqgan::ps::{serve_rounds_with, Decoder};
 use dqgan::util::rng::Pcg32;

@@ -4,7 +4,7 @@
 //! directly comparable.
 
 use dqgan::benchutil::Bench;
-use dqgan::compress::compressor_from_spec;
+use dqgan::compress::{compressor_from_spec, Compressor};
 use dqgan::util::rng::Pcg32;
 
 fn main() {

@@ -23,8 +23,9 @@
 
 use dqgan::benchutil::Bench;
 use dqgan::comm::{inproc_cluster_with_plan, DelayPlan, Message, ServerEnd, WorkerEnd};
-use dqgan::compress::compressor_from_spec;
-use dqgan::config::{AggMode, AggregatorConfig, ReduceMode};
+use dqgan::compress::{compressor_from_spec, Compressor};
+use dqgan::config::{AggMode, AggregatorConfig, KernelMode, ReduceMode};
+use dqgan::kernels;
 use dqgan::ps::{Aggregator, Decoder};
 use dqgan::util::rng::Pcg32;
 use std::sync::Arc;
@@ -56,6 +57,7 @@ fn main() {
     };
 
     // (Σ post-last-arrival close secs, iterations) per arm.
+    b.set_threads(M);
     let mut close_sums: [(f64, u64); 2] = [(0.0, 0); 2];
     for (arm, reduce) in [(0usize, ReduceMode::Barrier), (1usize, ReduceMode::Windowed)] {
         let tag = if arm == 0 { "barrier" } else { "windowed" };
@@ -137,6 +139,32 @@ fn main() {
             "windowed reduce must shorten the post-last-arrival close: \
              windowed {windowed} >= barrier {barrier}"
         );
+    }
+
+    // Scalar-vs-SIMD fold kernel A/B: the shard accumulate + 1/M scale
+    // that dominates reduce time, isolated from arrival plumbing (both
+    // arms are bitwise-identical — tests/prop_kernels.rs). This is the
+    // `reduce/fold/...` speedup_gates pair in the committed trajectory.
+    {
+        b.set_threads(1);
+        let mut rng = Pcg32::new(11);
+        let slots: Vec<Vec<f32>> = (0..M).map(|_| rng.normal_vec(D)).collect();
+        let mut acc = vec![0.0f32; D];
+        let mut out = vec![0.0f32; D];
+        let inv = 1.0 / M as f32;
+        for (mode, tag) in [(KernelMode::Scalar, "scalar"), (KernelMode::Simd, "simd")] {
+            let _g = kernels::scoped_mode(mode);
+            b.bench_with_throughput(&format!("fold/M={M}/d={D}/{tag}"), (M * D * 4) as u64, || {
+                for x in acc.iter_mut() {
+                    *x = 0.0;
+                }
+                for s in &slots {
+                    kernels::add_assign(&mut acc, s);
+                }
+                kernels::scale_into(&mut out, &acc, inv);
+                out[0]
+            });
+        }
     }
     b.finish();
 }

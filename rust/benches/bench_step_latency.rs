@@ -3,7 +3,7 @@
 //! numbers behind EXPERIMENTS.md §Perf's "L3 must not be the bottleneck".
 
 use dqgan::benchutil::Bench;
-use dqgan::compress::compressor_from_spec;
+use dqgan::compress::{compressor_from_spec, Compressor};
 use dqgan::data::{GaussianMixture2D, SynthImages};
 use dqgan::grad::GradientSource;
 use dqgan::runtime::{artifacts_dir, Runtime, XlaGradSource};

@@ -21,7 +21,7 @@
 
 use dqgan::benchutil::Bench;
 use dqgan::comm::{inproc_cluster, Message, ServerEnd, WorkerEnd};
-use dqgan::compress::compressor_from_spec;
+use dqgan::compress::{compressor_from_spec, Compressor};
 use dqgan::config::{AggMode, AggregatorConfig};
 use dqgan::ps::{Aggregator, Decoder};
 use dqgan::util::rng::Pcg32;

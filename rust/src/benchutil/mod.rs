@@ -14,6 +14,8 @@
 //! default 300 ms), `DQGAN_BENCH_WARMUP_MS` (default 100 ms),
 //! `DQGAN_BENCH_FILTER` (substring filter on case names).
 
+pub mod summary;
+
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
 
@@ -33,6 +35,10 @@ pub struct Summary {
     pub min: Duration,
     /// Bytes processed per iteration, if provided (for throughput).
     pub bytes_per_iter: Option<u64>,
+    /// Worker threads the case runs on (1 = single-threaded); recorded
+    /// in the machine-readable summary so trajectories aren't compared
+    /// across different parallelism.
+    pub threads: usize,
 }
 
 impl Summary {
@@ -56,6 +62,7 @@ pub struct Bench {
     measure_budget: Duration,
     warmup_budget: Duration,
     filter: Option<String>,
+    threads: usize,
     results: Vec<Summary>,
 }
 
@@ -66,8 +73,15 @@ impl Bench {
             measure_budget: env_ms("DQGAN_BENCH_MS", 300),
             warmup_budget: env_ms("DQGAN_BENCH_WARMUP_MS", 100),
             filter: std::env::var("DQGAN_BENCH_FILTER").ok(),
+            threads: 1,
             results: Vec::new(),
         }
+    }
+
+    /// Record subsequent cases as running on `threads` worker threads
+    /// (metadata only — the harness never spawns threads itself).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Override the per-case budgets (for expensive end-to-end cases).
@@ -154,15 +168,21 @@ impl Bench {
             p95: trimmed[(trimmed.len() as f64 * 0.95) as usize % trimmed.len()],
             min: *samples.first().unwrap(),
             bytes_per_iter: bytes,
+            threads: self.threads,
         };
         print_summary(&summary);
         self.results.push(summary);
         self.results.last()
     }
 
-    /// Print the final table; call at the end of the bench binary.
+    /// Print the final table; call at the end of the bench binary. Also
+    /// merges the machine-readable summary into `$DQGAN_BENCH_JSON` when
+    /// set (see [`summary::emit_from_env`]).
     pub fn finish(self) -> Vec<Summary> {
         eprintln!("\n== {} ({} cases) ==", self.group, self.results.len());
+        if let Err(e) = summary::emit_from_env(&self.results) {
+            eprintln!("warning: bench summary not written: {e}");
+        }
         self.results
     }
 }

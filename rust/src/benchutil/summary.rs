@@ -1,0 +1,375 @@
+//! Machine-readable bench summaries and trajectory comparison.
+//!
+//! Two halves:
+//!
+//! 1. **Emit** — when `DQGAN_BENCH_JSON=PATH` is set, [`Bench::finish`]
+//!    calls [`emit_from_env`], which merges this binary's case summaries
+//!    into the JSON document at `PATH` (several bench binaries append to
+//!    one file across a CI run). The document also records a
+//!    **calibration anchor** `calib_ns`: the median time of a fixed
+//!    integer workload ([`calibrate_ns`]) measured on the same machine in
+//!    the same run. Dividing every case median by the run's anchor gives
+//!    a dimensionless cost that transfers across machines far better than
+//!    raw nanoseconds.
+//!
+//! 2. **Compare** — [`compare`] checks a fresh document against a
+//!    committed baseline (`BENCH_*.json` at the repo root): any case
+//!    whose calibration-normalized median regressed by more than the
+//!    noise threshold fails, and every `speedup_gates` entry must show
+//!    `<name>/scalar` ÷ `<name>/simd` ≥ the floor in the fresh run. The
+//!    CI `bench-compare` job drives this through the
+//!    `dqgan bench-compare` subcommand.
+//!
+//! [`Bench::finish`]: super::Bench::finish
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use super::Summary;
+use crate::util::json::Json;
+
+/// Schema version stamped into `meta.schema`.
+pub const SCHEMA: u64 = 1;
+
+/// Median wall time (ns) of a fixed integer workload — the calibration
+/// anchor that makes bench medians comparable across machines. Pure
+/// integer LCG mixing: no FP, no memory traffic, no allocator — it
+/// tracks core clock speed, which is the dominant cross-machine scale
+/// factor for these compute-bound kernels.
+pub fn calibrate_ns() -> u64 {
+    fn spin() -> u64 {
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            x = x.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(1_442_695_040_888_963_407);
+            acc = acc.wrapping_add(x >> 33);
+        }
+        acc
+    }
+    let mut samples = [0u64; 9];
+    for s in samples.iter_mut() {
+        let t = Instant::now();
+        super::black_box(spin());
+        *s = t.elapsed().as_nanos() as u64;
+    }
+    samples.sort_unstable();
+    samples[samples.len() / 2].max(1)
+}
+
+/// One case as a JSON object (`median_ns`, `mean_ns`, `bytes_per_iter`,
+/// `threads`).
+fn case_json(s: &Summary) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("median_ns".to_string(), Json::Num(s.median.as_nanos() as f64));
+    m.insert("mean_ns".to_string(), Json::Num(s.mean.as_nanos() as f64));
+    if let Some(b) = s.bytes_per_iter {
+        m.insert("bytes_per_iter".to_string(), Json::Num(b as f64));
+    }
+    m.insert("threads".to_string(), Json::Num(s.threads as f64));
+    Json::Obj(m)
+}
+
+/// Merge `summaries` into the JSON document at `$DQGAN_BENCH_JSON`
+/// (creating it if absent), preserving any cases other bench binaries
+/// already wrote this run. No-op when the variable is unset.
+pub fn emit_from_env(summaries: &[Summary]) -> anyhow::Result<()> {
+    let Ok(path) = std::env::var("DQGAN_BENCH_JSON") else {
+        return Ok(());
+    };
+    if path.is_empty() || summaries.is_empty() {
+        return Ok(());
+    }
+    let mut doc = match std::fs::read_to_string(&path) {
+        Ok(text) => Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("existing {path} is not valid JSON: {e}"))?,
+        Err(_) => Json::Obj(BTreeMap::new()),
+    };
+    let Json::Obj(root) = &mut doc else {
+        anyhow::bail!("existing {path} is not a JSON object");
+    };
+    // meta: stamp schema + a calibration anchor once per file.
+    let meta = root.entry("meta".to_string()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+    if let Json::Obj(meta) = meta {
+        meta.entry("schema".to_string()).or_insert(Json::Num(SCHEMA as f64));
+        meta.entry("calib_ns".to_string())
+            .or_insert_with(|| Json::Num(calibrate_ns() as f64));
+    }
+    let cases = root.entry("cases".to_string()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+    let Json::Obj(cases) = cases else {
+        anyhow::bail!("{path}: \"cases\" is not an object");
+    };
+    for s in summaries {
+        cases.insert(s.name.clone(), case_json(s));
+    }
+    std::fs::write(&path, to_pretty(&doc))
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    Ok(())
+}
+
+/// Outcome of a baseline-vs-fresh comparison. `regressions` and
+/// `gate_failures` are human-readable failure lines; empty ⇔ pass.
+#[derive(Debug, Default)]
+pub struct Comparison {
+    /// One informational line per case compared.
+    pub lines: Vec<String>,
+    /// Cases whose normalized median regressed past the threshold.
+    pub regressions: Vec<String>,
+    /// `speedup_gates` entries whose scalar/simd ratio missed the floor.
+    pub gate_failures: Vec<String>,
+    /// Number of cases present in both documents.
+    pub compared: usize,
+}
+
+impl Comparison {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.gate_failures.is_empty()
+    }
+}
+
+fn median_of(doc: &Json, name: &str) -> Option<f64> {
+    doc.get("cases")?.get(name)?.get("median_ns")?.as_f64()
+}
+
+fn calib_of(doc: &Json) -> f64 {
+    doc.get("meta")
+        .and_then(|m| m.get("calib_ns"))
+        .and_then(Json::as_f64)
+        .filter(|&c| c > 0.0)
+        .unwrap_or(1.0)
+}
+
+/// Compare `fresh` bench results against a committed `baseline`.
+///
+/// * **Regression check** — for every case in both documents, medians
+///   are divided by their own document's `calib_ns` anchor; fail when
+///   `fresh_norm > base_norm · (1 + threshold)`. The threshold absorbs
+///   run-to-run noise (CI uses 0.15 = 15%, above the observed jitter of
+///   the trimmed medians on shared runners).
+/// * **Speedup gates** — for every name in the baseline's
+///   `speedup_gates` array, the fresh document must contain
+///   `<name>/scalar` and `<name>/simd` with
+///   `scalar_median / simd_median ≥ min_speedup`. Gates are checked
+///   purely within the fresh run, so no calibration is involved.
+pub fn compare(baseline: &Json, fresh: &Json, threshold: f64, min_speedup: f64) -> Comparison {
+    let mut rep = Comparison::default();
+    let base_calib = calib_of(baseline);
+    let fresh_calib = calib_of(fresh);
+    let empty = BTreeMap::new();
+    let base_cases = baseline
+        .get("cases")
+        .and_then(Json::as_obj)
+        .unwrap_or(&empty);
+    for (name, case) in base_cases {
+        let Some(b) = case.get("median_ns").and_then(Json::as_f64).filter(|&b| b > 0.0) else {
+            continue;
+        };
+        let Some(f) = median_of(fresh, name).filter(|&f| f > 0.0) else {
+            rep.lines.push(format!("  skip  {name:<52} (not in fresh run)"));
+            continue;
+        };
+        rep.compared += 1;
+        let (bn, fn_) = (b / base_calib, f / fresh_calib);
+        let ratio = fn_ / bn;
+        let verdict = if ratio > 1.0 + threshold {
+            rep.regressions.push(format!(
+                "{name}: normalized median {ratio:.2}× baseline (limit {:.2}×)",
+                1.0 + threshold
+            ));
+            "REGRESS"
+        } else {
+            "ok"
+        };
+        let pct = (ratio - 1.0) * 100.0;
+        rep.lines
+            .push(format!("  {verdict:<7} {name:<52} base {bn:.4}  fresh {fn_:.4}  ({pct:+.1}%)"));
+    }
+    let gates = baseline.get("speedup_gates").and_then(Json::as_arr).unwrap_or(&[]);
+    for gate in gates {
+        let Some(name) = gate.as_str() else { continue };
+        let scalar = median_of(fresh, &format!("{name}/scalar"));
+        let simd = median_of(fresh, &format!("{name}/simd"));
+        match (scalar, simd) {
+            (Some(s), Some(v)) if v > 0.0 => {
+                let speedup = s / v;
+                if speedup < min_speedup {
+                    rep.gate_failures.push(format!(
+                        "{name}: simd speedup {speedup:.2}× < required {min_speedup:.2}×"
+                    ));
+                } else {
+                    rep.lines.push(format!("  gate    {name:<52} simd {speedup:.2}× scalar ✓"));
+                }
+            }
+            _ => rep.gate_failures.push(format!(
+                "{name}: fresh run is missing the {name}/scalar and {name}/simd pair"
+            )),
+        }
+    }
+    rep
+}
+
+/// Small pretty-printer (the compact serializer is unreadable for a
+/// committed trajectory file reviewed in diffs).
+pub fn to_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_pretty(v, 0, &mut out);
+    out.push('\n');
+    out
+}
+
+fn write_pretty(v: &Json, depth: usize, out: &mut String) {
+    const PAD: &str = "  ";
+    match v {
+        Json::Arr(items) if !items.is_empty() => {
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                out.push_str(&PAD.repeat(depth + 1));
+                write_pretty(item, depth + 1, out);
+                if i + 1 < items.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&PAD.repeat(depth));
+            out.push(']');
+        }
+        Json::Obj(map) if !map.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in map.iter().enumerate() {
+                out.push_str(&PAD.repeat(depth + 1));
+                out.push_str(&Json::Str(k.clone()).to_string_compact());
+                out.push_str(": ");
+                write_pretty(val, depth + 1, out);
+                if i + 1 < map.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&PAD.repeat(depth));
+            out.push('}');
+        }
+        other => out.push_str(&other.to_string_compact()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(calib: f64, cases: &[(&str, f64)], gates: &[&str]) -> Json {
+        let mut root = BTreeMap::new();
+        let mut meta = BTreeMap::new();
+        meta.insert("calib_ns".to_string(), Json::Num(calib));
+        meta.insert("schema".to_string(), Json::Num(SCHEMA as f64));
+        root.insert("meta".to_string(), Json::Obj(meta));
+        let mut cs = BTreeMap::new();
+        for (name, median) in cases {
+            let mut c = BTreeMap::new();
+            c.insert("median_ns".to_string(), Json::Num(*median));
+            c.insert("threads".to_string(), Json::Num(1.0));
+            cs.insert(name.to_string(), Json::Obj(c));
+        }
+        root.insert("cases".to_string(), Json::Obj(cs));
+        root.insert(
+            "speedup_gates".to_string(),
+            Json::Arr(gates.iter().map(|g| Json::Str(g.to_string())).collect()),
+        );
+        Json::Obj(root)
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let base = doc(1000.0, &[("g/a", 500.0), ("g/b", 900.0)], &[]);
+        let rep = compare(&base, &base, 0.15, 1.5);
+        assert!(rep.passed(), "{:?}", rep.regressions);
+        assert_eq!(rep.compared, 2);
+    }
+
+    #[test]
+    fn regression_past_threshold_fails() {
+        let base = doc(1000.0, &[("g/a", 500.0)], &[]);
+        let fresh = doc(1000.0, &[("g/a", 600.0)], &[]);
+        let rep = compare(&base, &fresh, 0.15, 1.5);
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.lines);
+        // Within the threshold: passes.
+        let ok = doc(1000.0, &[("g/a", 560.0)], &[]);
+        assert!(compare(&base, &ok, 0.15, 1.5).passed());
+    }
+
+    #[test]
+    fn calibration_normalizes_machine_speed() {
+        // Fresh machine is 2× slower (calib 2000 vs 1000) and the case
+        // took 2× longer in raw ns — normalized, that's no regression.
+        let base = doc(1000.0, &[("g/a", 500.0)], &[]);
+        let fresh = doc(2000.0, &[("g/a", 1000.0)], &[]);
+        assert!(compare(&base, &fresh, 0.15, 1.5).passed());
+        // Same raw time on the slower machine is a (normalized) win.
+        let faster = doc(2000.0, &[("g/a", 500.0)], &[]);
+        assert!(compare(&base, &faster, 0.15, 1.5).passed());
+    }
+
+    #[test]
+    fn speedup_gate_checks_fresh_pair() {
+        let base = doc(1000.0, &[], &["g/fold"]);
+        let good = doc(1000.0, &[("g/fold/scalar", 900.0), ("g/fold/simd", 300.0)], &[]);
+        assert!(compare(&base, &good, 0.15, 1.5).passed());
+        let slow = doc(1000.0, &[("g/fold/scalar", 900.0), ("g/fold/simd", 800.0)], &[]);
+        let rep = compare(&base, &slow, 0.15, 1.5);
+        assert_eq!(rep.gate_failures.len(), 1);
+        // Pair missing entirely: also a gate failure, not a silent pass.
+        let missing = doc(1000.0, &[], &[]);
+        assert_eq!(compare(&base, &missing, 0.15, 1.5).gate_failures.len(), 1);
+    }
+
+    #[test]
+    fn missing_case_is_skipped_not_failed() {
+        let base = doc(1000.0, &[("g/a", 500.0), ("g/gone", 100.0)], &[]);
+        let fresh = doc(1000.0, &[("g/a", 500.0)], &[]);
+        let rep = compare(&base, &fresh, 0.15, 1.5);
+        assert!(rep.passed());
+        assert_eq!(rep.compared, 1);
+    }
+
+    #[test]
+    fn pretty_round_trips() {
+        let base = doc(1000.0, &[("g/a", 500.0)], &["g/fold"]);
+        let text = to_pretty(&base);
+        assert_eq!(Json::parse(&text).unwrap(), base);
+        assert!(text.contains("\n"), "actually pretty: {text}");
+    }
+
+    #[test]
+    fn calibration_anchor_is_positive() {
+        assert!(calibrate_ns() > 0);
+    }
+
+    #[test]
+    fn emit_merges_into_existing_file() {
+        let dir = std::env::temp_dir().join(format!("dqgan-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("summary.json");
+        let _ = std::fs::remove_file(&path);
+        std::env::set_var("DQGAN_BENCH_JSON", &path);
+        let s1 = Summary {
+            name: "g/a".into(),
+            iters: 1,
+            mean: std::time::Duration::from_nanos(120),
+            median: std::time::Duration::from_nanos(100),
+            p95: std::time::Duration::from_nanos(130),
+            min: std::time::Duration::from_nanos(90),
+            bytes_per_iter: Some(64),
+            threads: 2,
+        };
+        emit_from_env(&[s1.clone()]).unwrap();
+        let mut s2 = s1.clone();
+        s2.name = "g/b".into();
+        emit_from_env(&[s2]).unwrap();
+        std::env::remove_var("DQGAN_BENCH_JSON");
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(median_of(&doc, "g/a"), Some(100.0));
+        assert_eq!(median_of(&doc, "g/b"), Some(100.0));
+        let threads = doc.get("cases").unwrap().get("g/a").unwrap().get("threads").unwrap();
+        assert_eq!(threads.as_usize(), Some(2));
+        assert!(calib_of(&doc) > 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+}

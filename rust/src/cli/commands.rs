@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::algo::AlgoKind;
-use crate::config::{AggMode, AggregatorConfig, PolicyConfig, ReduceMode};
+use crate::config::{AggMode, AggregatorConfig, KernelMode, PolicyConfig, ReduceMode};
 use crate::compress::{
     compressor_from_spec, empirical_delta, gaussian_sampler, heavy_tail_sampler,
     sparse_sampler,
@@ -24,6 +24,11 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     let seed = args.get_parse("seed", 2020u64)?;
     let eval_every = args.get_parse("eval-every", (rounds / 10).max(1))?;
     let native = args.flag("native");
+    // Hot-loop kernel arm. Both arms are bitwise-identical by contract
+    // (CI A/Bs the round checksums), so this is a perf/debug knob, not a
+    // numerics knob.
+    let kernels = KernelMode::parse(&args.get_or("kernels", "simd"))?;
+    crate::kernels::set_mode(kernels);
 
     let (default_batch, default_lr) = match model.as_str() {
         "mlp" => (32usize, 2e-3f32),
@@ -85,11 +90,13 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     };
     crate::log_info!(
         "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr} agg={:?} \
-         reduce={:?} policy={}",
+         reduce={:?} policy={} kernels={} ({})",
         cfg.algo.label(),
         cfg.agg.mode,
         cfg.agg.reduce,
-        cfg.agg.policy.label()
+        cfg.agg.policy.label(),
+        kernels.label(),
+        crate::kernels::simd_backend()
     );
 
     let report = if model == "mlp" && native {
@@ -202,6 +209,63 @@ pub fn validate_compressors(args: &mut Args) -> anyhow::Result<()> {
         "Theorems 1–2 hold empirically for every δ-approximate compressor ✓ \
          (terngrad is documented as NOT δ-approximate — comparison codec only)"
     );
+    Ok(())
+}
+
+/// `dqgan bench-compare`: gate a fresh bench summary against the
+/// committed trajectory (`BENCH_*.json`). Exits non-zero on any
+/// calibration-normalized regression past `--threshold` or any
+/// `speedup_gates` pair below `--min-speedup` — this is the CI perf
+/// gate, not a reporting convenience.
+pub fn bench_compare(args: &mut Args) -> anyhow::Result<()> {
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("need --baseline PATH (committed BENCH_*.json)"))?;
+    let fresh_path = args
+        .get("fresh")
+        .ok_or_else(|| anyhow::anyhow!("need --fresh PATH (this run's DQGAN_BENCH_JSON output)"))?;
+    let threshold = args.get_parse("threshold", 0.15f64)?;
+    anyhow::ensure!(threshold >= 0.0, "--threshold must be >= 0 (got {threshold})");
+    let min_speedup = args.get_parse("min-speedup", 1.5f64)?;
+    anyhow::ensure!(min_speedup >= 1.0, "--min-speedup must be >= 1 (got {min_speedup})");
+
+    let load = |path: &str| -> anyhow::Result<crate::util::json::Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    };
+    let baseline = load(&baseline_path)?;
+    let fresh = load(&fresh_path)?;
+
+    let rep = crate::benchutil::summary::compare(&baseline, &fresh, threshold, min_speedup);
+    println!(
+        "bench-compare: {} vs {} (threshold {:.0}%, min simd speedup {min_speedup}×)",
+        baseline_path,
+        fresh_path,
+        threshold * 100.0
+    );
+    for line in &rep.lines {
+        println!("{line}");
+    }
+    println!("compared {} cases", rep.compared);
+    anyhow::ensure!(
+        rep.compared > 0,
+        "no overlapping cases between {baseline_path} and {fresh_path} — wrong files?"
+    );
+    for r in &rep.regressions {
+        eprintln!("REGRESSION: {r}");
+    }
+    for g in &rep.gate_failures {
+        eprintln!("SPEEDUP GATE: {g}");
+    }
+    anyhow::ensure!(
+        rep.passed(),
+        "{} regression(s), {} speedup-gate failure(s)",
+        rep.regressions.len(),
+        rep.gate_failures.len()
+    );
+    println!("bench trajectory ok ✓");
     Ok(())
 }
 

@@ -20,6 +20,7 @@ pub fn run(argv: Vec<String>) -> crate::Result<()> {
         "train" => commands::train(&mut args),
         "figures" | "exp" | "experiment" => commands::figures(&mut args),
         "validate-compressors" => commands::validate_compressors(&mut args),
+        "bench-compare" => commands::bench_compare(&mut args),
         "info" => commands::info(&mut args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -47,7 +48,7 @@ USAGE:
               [--agg-threads N] [--agg-shard E] [--pipeline-depth D]
               [--reduce windowed|barrier]
               [--policy full|kofm:K|deadline:MS[,K]] [--liveness R]
-              [--round-csv PATH]
+              [--kernels simd|scalar] [--round-csv PATH]
       Train a GAN on the parameter-server runtime.
       Algorithms: dqgan[:comp] (Algorithm 2), dqgan-adam[:comp] (paper §4),
                   cpoadam, cpoadam-gq[:comp], gda
@@ -69,6 +70,10 @@ USAGE:
       offloads the close-time tail to the pool under --agg pipelined —
       while barrier keeps the whole fold at close time; both are
       bitwise-identical (streaming/pipelined engines only).
+      --kernels selects the hot-loop implementation: simd (default,
+      8-wide lane chunks + AVX2 where it wins) or scalar (the reference
+      loops). Both arms are bitwise-identical by contract — CI A/Bs the
+      per-round broadcast checksums between them.
 
   dqgan figures --id fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all [--fast]
       Regenerate a paper figure / theory validation (CSV under results/).
@@ -77,12 +82,22 @@ USAGE:
       Empirically verify Definition 1 (δ-approximate) for every compressor
       (Theorems 1–2).
 
+  dqgan bench-compare --baseline BENCH_N.json --fresh RUN.json
+                      [--threshold 0.15] [--min-speedup 1.5]
+      Gate a fresh bench summary (written by the bench binaries under
+      DQGAN_BENCH_JSON=PATH) against the committed trajectory file.
+      Fails on any calibration-normalized median regression past the
+      threshold, or any speedup_gates pair whose scalar/simd ratio in
+      the fresh run is below the floor.
+
   dqgan info
       Show artifact manifest, platform and configuration info.
 
 ENVIRONMENT:
   DQGAN_LOG=error|warn|info|debug|trace   log level (default info)
   DQGAN_ARTIFACTS=DIR                     artifacts dir (default artifacts/)
-  DQGAN_RESULTS=DIR                       results dir (default results/)"
+  DQGAN_RESULTS=DIR                       results dir (default results/)
+  DQGAN_BENCH_JSON=PATH                   bench binaries merge a machine-
+                                          readable summary into PATH"
     );
 }

@@ -164,23 +164,76 @@ pub fn bitmap_included(bitmap: &[u8], worker: u32) -> bool {
     bitmap.get(idx / 8).map(|b| (b >> (idx % 8)) & 1 == 1).unwrap_or(false)
 }
 
-/// CRC-32 (IEEE 802.3, reflected), table-driven.
+/// CRC-32 (IEEE 802.3, reflected). Dispatches between the byte-at-a-time
+/// baseline and a slicing-by-8 arm on the process-global
+/// [`crate::kernels`] mode; both compute the mathematically identical
+/// CRC, so frames written under one mode verify under the other.
 pub fn crc32(data: &[u8]) -> u32 {
+    match crate::kernels::mode() {
+        crate::config::KernelMode::Simd => crc32_slice8(data),
+        crate::config::KernelMode::Scalar => crc32_scalar(data),
+    }
+}
+
+fn crc32_base_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    for (i, e) in t.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *e = c;
+    }
+    t
+}
+
+/// Scalar arm of [`crc32`]: one table lookup per byte.
+pub fn crc32_scalar(data: &[u8]) -> u32 {
     static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
-    let table = TABLE.get_or_init(|| {
-        let mut t = [0u32; 256];
-        for (i, e) in t.iter_mut().enumerate() {
-            let mut c = i as u32;
-            for _ in 0..8 {
-                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+    let table = TABLE.get_or_init(crc32_base_table);
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Slicing-by-8 arm of [`crc32`]: eight bytes per iteration through eight
+/// precomputed tables (the standard zlib-style construction — table k
+/// advances a byte's contribution k more positions through the
+/// polynomial, so the eight lookups are independent and the serial
+/// per-byte dependency chain disappears). Identical output to
+/// [`crc32_scalar`] by construction of the tables.
+pub fn crc32_slice8(data: &[u8]) -> u32 {
+    static TABLES: std::sync::OnceLock<[[u32; 256]; 8]> = std::sync::OnceLock::new();
+    let t = TABLES.get_or_init(|| {
+        let base = crc32_base_table();
+        let mut t = [[0u32; 256]; 8];
+        t[0] = base;
+        for b in 0..256 {
+            for k in 1..8 {
+                let prev = t[k - 1][b];
+                t[k][b] = (prev >> 8) ^ t[0][(prev & 0xFF) as usize];
             }
-            *e = c;
         }
         t
     });
     let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    let mut chunks = data.chunks_exact(8);
+    for d in &mut chunks {
+        let d: &[u8; 8] = d.try_into().expect("exact chunk");
+        let x = crc ^ u32::from_le_bytes([d[0], d[1], d[2], d[3]]);
+        crc = t[7][(x & 0xFF) as usize]
+            ^ t[6][((x >> 8) & 0xFF) as usize]
+            ^ t[5][((x >> 16) & 0xFF) as usize]
+            ^ t[4][(x >> 24) as usize]
+            ^ t[3][d[4] as usize]
+            ^ t[2][d[5] as usize]
+            ^ t[1][d[6] as usize]
+            ^ t[0][d[7] as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = t[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
     }
     crc ^ 0xFFFF_FFFF
 }
@@ -215,6 +268,25 @@ mod tests {
     fn crc32_known_vector() {
         // CRC-32("123456789") = 0xCBF43926
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32_scalar(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32_slice8(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn crc32_arms_agree_on_all_alignments() {
+        // Every length 0..64 plus larger buffers: the slicing-by-8 arm
+        // must equal the byte-at-a-time baseline regardless of how many
+        // ragged tail bytes remain.
+        let mut state = 0x1234_5678u32;
+        let data: Vec<u8> = (0..1024)
+            .map(|_| {
+                state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+                (state >> 24) as u8
+            })
+            .collect();
+        for n in (0..64).chain([65, 127, 128, 129, 511, 1024]) {
+            assert_eq!(crc32_scalar(&data[..n]), crc32_slice8(&data[..n]), "n={n}");
+        }
     }
 
     #[test]

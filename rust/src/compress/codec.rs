@@ -143,6 +143,57 @@ impl<'a> BitReader<'a> {
     }
 }
 
+/// Branch-light random-access reader over a **fixed-width** packed
+/// stream — the common case of the codecs, where every element is written
+/// with the same width `w`. Element `i` occupies bits `[i·w, (i+1)·w)` of
+/// the buffer, LSB-first: exactly [`BitWriter`]'s layout when all writes
+/// share one width. The SIMD decode arms use this to gather 8 packed
+/// values per iteration with unaligned u64 loads instead of the
+/// per-element refill branch of [`BitReader`]; truncation is checked
+/// once, up front, so extraction itself never fails.
+#[derive(Debug)]
+pub struct FixedWidthReader<'a> {
+    buf: &'a [u8],
+    width: usize,
+    mask: u64,
+}
+
+impl<'a> FixedWidthReader<'a> {
+    /// Build a reader for `count` elements of `width` bits (1 ≤ width ≤
+    /// 32); errors if the buffer cannot hold them.
+    pub fn new(buf: &'a [u8], width: u8, count: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!((1..=32).contains(&width), "fixed width {width} out of range");
+        let need_bits = count * width as usize;
+        let have_bits = buf.len() * 8;
+        if need_bits > have_bits {
+            anyhow::bail!("bit reader overrun: need {need_bits} bits, have {have_bits}");
+        }
+        Ok(Self { buf, width: width as usize, mask: (1u64 << width) - 1 })
+    }
+
+    /// Packed value of element `i` (i < the `count` passed to `new`; a
+    /// larger `i` reads zero-padding or panics on the slice bound).
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        let bit = i * self.width;
+        let byte = bit >> 3;
+        let shift = bit & 7;
+        // shift ≤ 7 and width ≤ 32, so the value always sits inside the
+        // 64-bit window starting at `byte`; near the end of the buffer
+        // the window is topped up with zero padding (never read past the
+        // slice).
+        let word = if byte + 8 <= self.buf.len() {
+            u64::from_le_bytes(self.buf[byte..byte + 8].try_into().expect("8-byte slice"))
+        } else {
+            let mut tmp = [0u8; 8];
+            let n = self.buf.len() - byte;
+            tmp[..n].copy_from_slice(&self.buf[byte..]);
+            u64::from_le_bytes(tmp)
+        };
+        ((word >> shift) & self.mask) as u32
+    }
+}
+
 /// Bits needed to represent values 0..=max_value.
 pub fn bits_for(max_value: u32) -> u8 {
     if max_value == 0 {
@@ -243,6 +294,42 @@ mod tests {
             assert_eq!(r.read(n).unwrap(), v, "width {n}");
         }
         assert!(r.bits_remaining() < 8);
+    }
+
+    #[test]
+    fn fixed_width_reader_matches_bit_reader() {
+        // For every width and count straddling word/byte boundaries, a
+        // stream of width-w writes must read back identically through
+        // the random-access fixed-width path.
+        let mut rng = Pcg32::new(7);
+        for width in 1..=32u8 {
+            for count in [0usize, 1, 7, 8, 9, 15, 16, 17, 33] {
+                let max = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+                let values: Vec<u32> =
+                    (0..count).map(|_| rng.below(max.max(1)).min(max)).collect();
+                let mut w = BitWriter::new();
+                for &v in &values {
+                    w.write(v, width);
+                }
+                let bytes = w.into_bytes();
+                let f = FixedWidthReader::new(&bytes, width, count).unwrap();
+                let mut r = BitReader::new(&bytes);
+                for (i, &v) in values.iter().enumerate() {
+                    assert_eq!(f.get(i), v, "width={width} count={count} i={i}");
+                    assert_eq!(r.read(width).unwrap(), v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_width_reader_rejects_truncation() {
+        let bytes = [0xFFu8; 2]; // 16 bits
+        assert!(FixedWidthReader::new(&bytes, 8, 2).is_ok());
+        assert!(FixedWidthReader::new(&bytes, 8, 3).is_err());
+        assert!(FixedWidthReader::new(&bytes, 5, 3).is_ok()); // 15 ≤ 16
+        assert!(FixedWidthReader::new(&bytes, 0, 1).is_err());
+        assert!(FixedWidthReader::new(&bytes, 33, 0).is_err());
     }
 
     #[test]

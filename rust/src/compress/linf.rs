@@ -12,8 +12,10 @@
 //! level bits`. At 8 bits (s = 127) that is 8 bits/element + scales — the
 //! paper's "1/4 full precision" setting.
 
-use super::codec::{bits_for, BitReader, BitWriter};
+use super::codec::{bits_for, BitReader, BitWriter, FixedWidthReader};
 use super::Compressor;
+use crate::config::KernelMode;
+use crate::kernels::{self, LANES};
 use crate::util::bytes::{put_f32, Reader};
 use crate::util::rng::Pcg32;
 
@@ -62,16 +64,28 @@ impl LinfStochastic {
 
     /// Quantize one block to integer levels against its own ‖·‖∞.
     /// §Perf: one division per *block* (reciprocal-scaled multiply per
-    /// element), branch-light stochastic rounding.
+    /// element), branch-light stochastic rounding. Dispatches between the
+    /// scalar baseline and the lane-chunked arm on the global
+    /// [`crate::kernels`] mode; both draw one uniform per element in
+    /// element order and evaluate identical per-element expressions, so
+    /// the levels (and wire bits) are bitwise-equal.
     fn quantize_block(&self, v: &[f32], rng: &mut Pcg32) -> (f32, Vec<i32>) {
         let scale = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
         if scale == 0.0 {
             return (0.0, vec![0; v.len()]);
         }
+        let levels = match kernels::mode() {
+            KernelMode::Simd => self.quantize_block_simd(scale, v, rng),
+            KernelMode::Scalar => self.quantize_block_scalar(scale, v, rng),
+        };
+        (scale, levels)
+    }
+
+    /// Scalar arm of [`Self::quantize_block`] (`scale` is nonzero).
+    fn quantize_block_scalar(&self, scale: f32, v: &[f32], rng: &mut Pcg32) -> Vec<i32> {
         let s = self.levels as f32;
         let k = s / scale;
-        let levels = v
-            .iter()
+        v.iter()
             .map(|&x| {
                 let u = (x.abs() * k).min(s);
                 let l = u.floor();
@@ -83,17 +97,82 @@ impl LinfStochastic {
                     level
                 }
             })
-            .collect();
-        (scale, levels)
+            .collect()
+    }
+
+    /// SIMD arm of [`Self::quantize_block`]: the float pipeline (scale,
+    /// clamp, floor) chunks 8 lanes at a time; the stochastic finalize
+    /// walks lanes sequentially because the per-element RNG draw order is
+    /// part of the bitwise contract with the scalar arm.
+    fn quantize_block_simd(&self, scale: f32, v: &[f32], rng: &mut Pcg32) -> Vec<i32> {
+        let s = self.levels as f32;
+        let k = s / scale;
+        let mut out = Vec::with_capacity(v.len());
+        let mut vc = v.chunks_exact(LANES);
+        for x in &mut vc {
+            let x: &[f32; LANES] = x.try_into().expect("exact chunk");
+            let mut u = [0.0f32; LANES];
+            let mut l = [0.0f32; LANES];
+            for i in 0..LANES {
+                u[i] = (x[i].abs() * k).min(s);
+            }
+            for i in 0..LANES {
+                l[i] = u[i].floor();
+            }
+            for i in 0..LANES {
+                let level = (l[i] + f32::from(rng.uniform() < u[i] - l[i])) as i32;
+                out.push(if x[i] < 0.0 { -level } else { level });
+            }
+        }
+        for &x in vc.remainder() {
+            let u = (x.abs() * k).min(s);
+            let l = u.floor();
+            let level = (l + f32::from(rng.uniform() < u - l)) as i32;
+            out.push(if x < 0.0 { -level } else { level });
+        }
+        out
     }
 
     fn reconstruct_block(&self, scale: f32, levels: &[i32], out: &mut [f32]) {
         // NOTE: must stay exactly `scale * (l / s)` — decode uses the same
         // expression, and the EF state requires bit-identical round trips.
+        // Both kernel arms evaluate exactly that expression per lane.
         let s = self.levels as f32;
-        for (o, &l) in out.iter_mut().zip(levels) {
+        kernels::grid_reconstruct(out, levels, scale, s);
+    }
+
+    /// SIMD arm of the per-block decode body: fixed-width gather of 8
+    /// packed values per iteration plus the lane grid reconstruction —
+    /// same bits consumed and produced as the [`BitReader`] loop.
+    fn decode_block_simd(
+        &self,
+        packed_bytes: &[u8],
+        scale: f32,
+        width: u8,
+        ob: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let s = self.levels as f32;
+        let fr = FixedWidthReader::new(packed_bytes, width, ob.len())?;
+        let mut base = 0usize;
+        let mut oc = ob.chunks_exact_mut(LANES);
+        for o in &mut oc {
+            let o: &mut [f32; LANES] = o.try_into().expect("exact chunk");
+            let mut lv = [0i32; LANES];
+            for i in 0..LANES {
+                let packed = fr.get(base + i);
+                let mag = (packed >> 1) as i32;
+                lv[i] = if packed & 1 == 1 { -mag } else { mag };
+            }
+            kernels::grid_reconstruct_simd(o, &lv, scale, s);
+            base += LANES;
+        }
+        for (i, o) in oc.into_remainder().iter_mut().enumerate() {
+            let packed = fr.get(base + i);
+            let mag = (packed >> 1) as i32;
+            let l = if packed & 1 == 1 { -mag } else { mag };
             *o = scale * (l as f32 / s);
         }
+        Ok(())
     }
 }
 
@@ -243,10 +322,15 @@ impl Compressor for LinfStochastic {
             if pos + packed_bytes > bytes.len() {
                 anyhow::bail!("linf decode: truncated block");
             }
-            let mut br = BitReader::new(&bytes[pos..pos + packed_bytes]);
+            let block_bytes = &bytes[pos..pos + packed_bytes];
             pos += packed_bytes;
             // Mirror of the combined-write encode: one read per element.
             let width = 1 + lb;
+            if width <= 32 && kernels::mode() == KernelMode::Simd {
+                self.decode_block_simd(block_bytes, scale, width, ob)?;
+                continue;
+            }
+            let mut br = BitReader::new(block_bytes);
             for o in ob.iter_mut() {
                 let (sign, mag) = if width <= 32 {
                     let packed = br.read(width)?;

@@ -34,7 +34,7 @@ mod sign;
 mod terngrad;
 mod topk;
 
-pub use codec::{BitReader, BitWriter};
+pub use codec::{BitReader, BitWriter, FixedWidthReader};
 pub use delta::{
     empirical_delta, gaussian_sampler, heavy_tail_sampler, sparse_sampler, DeltaEstimate,
 };

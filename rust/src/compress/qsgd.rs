@@ -16,8 +16,10 @@
 //! the integer levels*, so `compress`/`compress_encoded`/`decode` agree
 //! bit-exactly (required by the error-feedback state).
 
-use super::codec::{bits_for, BitReader, BitWriter};
+use super::codec::{bits_for, BitReader, BitWriter, FixedWidthReader};
 use super::Compressor;
+use crate::config::KernelMode;
+use crate::kernels::{self, LANES};
 use crate::util::bytes::{put_f32, Reader};
 use crate::util::rng::Pcg32;
 use crate::util::stats::norm2;
@@ -45,15 +47,27 @@ impl Qsgd {
     }
 
     /// Stochastically round each element to an integer level in 0..=s.
-    /// Returns (norm, signed level per element).
+    /// Returns (norm, signed level per element). Dispatches between the
+    /// scalar baseline and the lane-chunked arm on the global
+    /// [`crate::kernels`] mode; both draw **one uniform per element in
+    /// element order** and evaluate the identical per-element
+    /// expressions, so the levels (and thus the wire bits) are equal.
     fn quantize_levels(&self, v: &[f32], rng: &mut Pcg32) -> (f32, Vec<i32>) {
         let norm = norm2(v);
         if norm == 0.0 {
             return (0.0, vec![0; v.len()]);
         }
+        let levels = match kernels::mode() {
+            KernelMode::Simd => self.quantize_levels_simd(norm, v, rng),
+            KernelMode::Scalar => self.quantize_levels_scalar(norm, v, rng),
+        };
+        (norm, levels)
+    }
+
+    /// Scalar arm of [`Self::quantize_levels`] (`norm` is nonzero).
+    fn quantize_levels_scalar(&self, norm: f32, v: &[f32], rng: &mut Pcg32) -> Vec<i32> {
         let s = self.levels as f32;
-        let levels = v
-            .iter()
+        v.iter()
             .map(|&x| {
                 let u = (x.abs() / norm).min(1.0) * s;
                 let l = u.floor();
@@ -65,17 +79,48 @@ impl Qsgd {
                     level
                 }
             })
-            .collect();
-        (norm, levels)
+            .collect()
+    }
+
+    /// SIMD arm of [`Self::quantize_levels`]: the pure float pipeline
+    /// (normalize, clamp, floor) chunks 8 lanes at a time; the stochastic
+    /// finalize then walks the lanes **sequentially**, because the RNG
+    /// draw order — one `uniform()` per element, in element order — is
+    /// part of the bitwise contract with the scalar arm.
+    fn quantize_levels_simd(&self, norm: f32, v: &[f32], rng: &mut Pcg32) -> Vec<i32> {
+        let s = self.levels as f32;
+        let mut out = Vec::with_capacity(v.len());
+        let mut vc = v.chunks_exact(LANES);
+        for x in &mut vc {
+            let x: &[f32; LANES] = x.try_into().expect("exact chunk");
+            let mut u = [0.0f32; LANES];
+            let mut l = [0.0f32; LANES];
+            for i in 0..LANES {
+                u[i] = (x[i].abs() / norm).min(1.0) * s;
+            }
+            for i in 0..LANES {
+                l[i] = u[i].floor();
+            }
+            for i in 0..LANES {
+                let level = if rng.uniform() < u[i] - l[i] { l[i] + 1.0 } else { l[i] } as i32;
+                out.push(if x[i] < 0.0 { -level } else { level });
+            }
+        }
+        for &x in vc.remainder() {
+            let u = (x.abs() / norm).min(1.0) * s;
+            let l = u.floor();
+            let level = if rng.uniform() < u - l { l + 1.0 } else { l } as i32;
+            out.push(if x < 0.0 { -level } else { level });
+        }
+        out
     }
 
     /// Dense reconstruction from (norm, levels) — shared by every path so
-    /// the f32 values are identical everywhere.
+    /// the f32 values are identical everywhere (the kernel arms both
+    /// evaluate exactly `norm * (l as f32 / s)`).
     fn reconstruct(&self, norm: f32, levels: &[i32], out: &mut [f32]) {
         let s = self.levels as f32;
-        for (o, &l) in out.iter_mut().zip(levels) {
-            *o = norm * (l as f32 / s);
-        }
+        kernels::grid_reconstruct(out, levels, norm, s);
     }
 
     fn encode_levels(&self, norm: f32, levels: &[i32], buf: &mut Vec<u8>) {
@@ -198,12 +243,15 @@ impl Compressor for Qsgd {
             return Ok(());
         }
         let rest = r.bytes(bytes.len() - 4)?;
-        let mut br = BitReader::new(rest);
         let lb = self.level_bits();
         let s = self.levels as f32;
         // Mirror of `encode_levels`: one combined read per element, sign
         // in the low bit — same bits consumed as the old 1+lb read pair.
         let width = 1 + lb;
+        if width <= 32 && kernels::mode() == KernelMode::Simd {
+            return self.decode_into_simd(rest, norm, width, out);
+        }
+        let mut br = BitReader::new(rest);
         for o in out.iter_mut() {
             let (sign, mag) = if width <= 32 {
                 let packed = br.read(width)?;
@@ -222,7 +270,53 @@ impl Compressor for Qsgd {
     }
 
     fn delta(&self, d: usize) -> Option<f64> {
-        let s = self.levels as f64;
+        Self::delta_impl(self.levels, d)
+    }
+
+    fn encoded_size(&self, d: usize) -> usize {
+        4 + (d * (1 + self.level_bits() as usize)).div_ceil(8)
+    }
+}
+
+impl Qsgd {
+    /// SIMD arm of [`Compressor::decode_into`]: the packed stream is
+    /// fixed-width, so a [`FixedWidthReader`] gathers 8 packed values per
+    /// iteration (no per-element refill branch), the sign/magnitude split
+    /// chunks over lanes, and the grid reconstruction runs through the
+    /// lane kernel — evaluating exactly the scalar `norm * (l as f32 / s)`.
+    fn decode_into_simd(
+        &self,
+        rest: &[u8],
+        norm: f32,
+        width: u8,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let s = self.levels as f32;
+        let fr = FixedWidthReader::new(rest, width, out.len())?;
+        let mut base = 0usize;
+        let mut oc = out.chunks_exact_mut(LANES);
+        for o in &mut oc {
+            let o: &mut [f32; LANES] = o.try_into().expect("exact chunk");
+            let mut lv = [0i32; LANES];
+            for i in 0..LANES {
+                let packed = fr.get(base + i);
+                let mag = (packed >> 1) as i32;
+                lv[i] = if packed & 1 == 1 { -mag } else { mag };
+            }
+            kernels::grid_reconstruct_simd(o, &lv, norm, s);
+            base += LANES;
+        }
+        for (i, o) in oc.into_remainder().iter_mut().enumerate() {
+            let packed = fr.get(base + i);
+            let mag = (packed >> 1) as i32;
+            let level = if packed & 1 == 1 { -mag } else { mag };
+            *o = norm * (level as f32 / s);
+        }
+        Ok(())
+    }
+
+    fn delta_impl(levels: u32, d: usize) -> Option<f64> {
+        let s = levels as f64;
         let d = d as f64;
         let var = (d / (s * s)).min(d.sqrt() / s);
         if var < 1.0 {
@@ -230,10 +324,6 @@ impl Compressor for Qsgd {
         } else {
             None // Theorem 2 asserts existence; measure empirically.
         }
-    }
-
-    fn encoded_size(&self, d: usize) -> usize {
-        4 + (d * (1 + self.level_bits() as usize)).div_ceil(8)
     }
 }
 

@@ -12,6 +12,8 @@
 
 use super::codec::{BitReader, BitWriter};
 use super::Compressor;
+use crate::config::KernelMode;
+use crate::kernels::{self, LANES};
 use crate::util::bytes::{put_f32, Reader};
 use crate::util::rng::Pcg32;
 
@@ -20,12 +22,64 @@ use crate::util::rng::Pcg32;
 pub struct SignScale;
 
 impl SignScale {
+    /// ‖v‖₁/d. The f64 accumulation is a strict sequential fold — it must
+    /// not be reassociated (the f64 rounding order is part of the bitwise
+    /// contract), so this stays scalar under both kernel modes.
     fn scale_of(v: &[f32]) -> f32 {
         if v.is_empty() {
             return 0.0;
         }
         let l1: f64 = v.iter().map(|&x| x.abs() as f64).sum();
         (l1 / v.len() as f64) as f32
+    }
+
+    /// SIMD arm of the sign select: 8 lanes per iteration of the same
+    /// `if x < 0.0 { -scale } else { scale }` expression.
+    fn select_simd(scale: f32, v: &[f32], out: &mut [f32]) {
+        let mut oc = out.chunks_exact_mut(LANES);
+        let mut vc = v.chunks_exact(LANES);
+        for (o, x) in (&mut oc).zip(&mut vc) {
+            let o: &mut [f32; LANES] = o.try_into().expect("exact chunk");
+            let x: &[f32; LANES] = x.try_into().expect("exact chunk");
+            for i in 0..LANES {
+                o[i] = if x[i] < 0.0 { -scale } else { scale };
+            }
+        }
+        for (o, &x) in oc.into_remainder().iter_mut().zip(vc.remainder()) {
+            *o = if x < 0.0 { -scale } else { scale };
+        }
+    }
+
+    /// SIMD arm of [`Compressor::decode_into`]: 32 sign bits arrive as
+    /// one LE word (exactly the bytes 32 single-bit reads consume), the
+    /// select runs over lanes, and the ragged tail reads a zero-padded
+    /// word. Values are the same ±scale constants as the scalar loop.
+    fn decode_into_simd(scale: f32, rest: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let need_bits = out.len();
+        if need_bits > rest.len() * 8 {
+            anyhow::bail!("bit reader overrun: need {need_bits} bits, have {}", rest.len() * 8);
+        }
+        let mut pos = 0usize;
+        let mut chunks = out.chunks_exact_mut(32);
+        for chunk in &mut chunks {
+            let w = u32::from_le_bytes(rest[pos..pos + 4].try_into().expect("4-byte slice"));
+            pos += 4;
+            let chunk: &mut [f32; 32] = chunk.try_into().expect("exact chunk");
+            for j in 0..32 {
+                chunk[j] = if (w >> j) & 1 == 1 { -scale } else { scale };
+            }
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let mut tmp = [0u8; 4];
+            let n = (rest.len() - pos).min(4);
+            tmp[..n].copy_from_slice(&rest[pos..pos + n]);
+            let w = u32::from_le_bytes(tmp);
+            for (j, o) in rem.iter_mut().enumerate() {
+                *o = if (w >> j) & 1 == 1 { -scale } else { scale };
+            }
+        }
+        Ok(())
     }
 }
 
@@ -37,10 +91,15 @@ impl Compressor for SignScale {
     fn compress(&self, v: &[f32], out: &mut [f32], _rng: &mut Pcg32) {
         assert_eq!(v.len(), out.len());
         let scale = Self::scale_of(v);
-        for (o, &x) in out.iter_mut().zip(v) {
-            // sign(0) = +1 here (the wire has no zero symbol); with the
-            // l1 scale this is the standard convention.
-            *o = if x < 0.0 { -scale } else { scale };
+        match kernels::mode() {
+            KernelMode::Simd => Self::select_simd(scale, v, out),
+            KernelMode::Scalar => {
+                for (o, &x) in out.iter_mut().zip(v) {
+                    // sign(0) = +1 here (the wire has no zero symbol);
+                    // with the l1 scale this is the standard convention.
+                    *o = if x < 0.0 { -scale } else { scale };
+                }
+            }
         }
     }
 
@@ -48,8 +107,30 @@ impl Compressor for SignScale {
         let scale = quantized.first().map(|x| x.abs()).unwrap_or(0.0);
         put_f32(buf, scale);
         let mut w = BitWriter::with_capacity_bits(quantized.len());
-        for &q in quantized {
-            w.write(u32::from(q < 0.0), 1);
+        match kernels::mode() {
+            KernelMode::Simd => {
+                // Batch 32 sign bits into one word write: bit j of the
+                // word is sign j of the chunk — exactly the global bit
+                // position the single-bit writes produce, so the wire
+                // bytes are unchanged.
+                let mut chunks = quantized.chunks_exact(32);
+                for chunk in &mut chunks {
+                    let chunk: &[f32; 32] = chunk.try_into().expect("exact chunk");
+                    let mut word = 0u32;
+                    for (j, &q) in chunk.iter().enumerate() {
+                        word |= u32::from(q < 0.0) << j;
+                    }
+                    w.write(word, 32);
+                }
+                for &q in chunks.remainder() {
+                    w.write(u32::from(q < 0.0), 1);
+                }
+            }
+            KernelMode::Scalar => {
+                for &q in quantized {
+                    w.write(u32::from(q < 0.0), 1);
+                }
+            }
         }
         w.append_to(buf);
     }
@@ -64,6 +145,9 @@ impl Compressor for SignScale {
         let mut r = Reader::new(bytes);
         let scale = r.f32()?;
         let rest = r.bytes(bytes.len() - 4)?;
+        if kernels::mode() == KernelMode::Simd {
+            return Self::decode_into_simd(scale, rest, out);
+        }
         let mut br = BitReader::new(rest);
         for o in out.iter_mut() {
             let neg = br.read(1)? == 1;
@@ -85,7 +169,7 @@ impl Compressor for SignScale {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::stats::{norm2_sq};
+    use crate::util::stats::norm2_sq;
 
     #[test]
     fn optimal_scale_identity() {
@@ -95,8 +179,7 @@ mod tests {
             let d = 1 + rng.below(100) as usize;
             let v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
             let q = SignScale.compress_vec(&v, &mut rng);
-            let err: f64 =
-                v.iter().zip(&q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            let err: f64 = v.iter().zip(&q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
             let l1: f64 = v.iter().map(|&x| x.abs() as f64).sum();
             let want = norm2_sq(&v) as f64 - l1 * l1 / d as f64;
             assert!((err - want).abs() < 1e-3 * want.abs().max(1.0), "err={err} want={want}");

@@ -7,6 +7,8 @@
 
 use super::codec::{BitReader, BitWriter};
 use super::Compressor;
+use crate::config::KernelMode;
+use crate::kernels::{self, LANES};
 use crate::util::bytes::{put_f32, Reader};
 use crate::util::rng::Pcg32;
 
@@ -16,13 +18,24 @@ pub struct TernGrad;
 
 impl TernGrad {
     /// Ternary symbols for each element: -1, 0, +1 (and the scale).
+    /// Dispatches between the scalar baseline and the lane-chunked arm on
+    /// the global [`crate::kernels`] mode; both draw one uniform per
+    /// element in element order, so the symbols are identical.
     fn ternarize(&self, v: &[f32], rng: &mut Pcg32) -> (f32, Vec<i8>) {
         let scale = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
         if scale == 0.0 {
             return (0.0, vec![0; v.len()]);
         }
-        let syms = v
-            .iter()
+        let syms = match kernels::mode() {
+            KernelMode::Simd => Self::ternarize_simd(scale, v, rng),
+            KernelMode::Scalar => Self::ternarize_scalar(scale, v, rng),
+        };
+        (scale, syms)
+    }
+
+    /// Scalar arm of [`Self::ternarize`] (`scale` is nonzero).
+    fn ternarize_scalar(scale: f32, v: &[f32], rng: &mut Pcg32) -> Vec<i8> {
+        v.iter()
             .map(|&x| {
                 let p = x.abs() / scale;
                 if rng.uniform() < p {
@@ -35,14 +48,119 @@ impl TernGrad {
                     0
                 }
             })
-            .collect();
-        (scale, syms)
+            .collect()
+    }
+
+    /// SIMD arm of [`Self::ternarize`]: the Bernoulli probabilities chunk
+    /// 8 lanes at a time; the draws stay sequential (RNG order is part of
+    /// the bitwise contract).
+    fn ternarize_simd(scale: f32, v: &[f32], rng: &mut Pcg32) -> Vec<i8> {
+        let mut out = Vec::with_capacity(v.len());
+        let mut vc = v.chunks_exact(LANES);
+        for x in &mut vc {
+            let x: &[f32; LANES] = x.try_into().expect("exact chunk");
+            let mut p = [0.0f32; LANES];
+            for i in 0..LANES {
+                p[i] = x[i].abs() / scale;
+            }
+            for i in 0..LANES {
+                out.push(if rng.uniform() < p[i] {
+                    if x[i] < 0.0 {
+                        -1
+                    } else {
+                        1
+                    }
+                } else {
+                    0
+                });
+            }
+        }
+        for &x in vc.remainder() {
+            let p = x.abs() / scale;
+            out.push(if rng.uniform() < p {
+                if x < 0.0 {
+                    -1
+                } else {
+                    1
+                }
+            } else {
+                0
+            });
+        }
+        out
     }
 
     fn reconstruct(scale: f32, syms: &[i8], out: &mut [f32]) {
+        match kernels::mode() {
+            KernelMode::Simd => Self::reconstruct_simd(scale, syms, out),
+            KernelMode::Scalar => Self::reconstruct_scalar(scale, syms, out),
+        }
+    }
+
+    /// Scalar arm: one multiply per element.
+    fn reconstruct_scalar(scale: f32, syms: &[i8], out: &mut [f32]) {
         for (o, &s) in out.iter_mut().zip(syms) {
             *o = scale * s as f32;
         }
+    }
+
+    /// SIMD arm: the same `scale * sym as f32` per lane, 8 at a time.
+    fn reconstruct_simd(scale: f32, syms: &[i8], out: &mut [f32]) {
+        let mut oc = out.chunks_exact_mut(LANES);
+        let mut sc = syms.chunks_exact(LANES);
+        for (o, s) in (&mut oc).zip(&mut sc) {
+            let o: &mut [f32; LANES] = o.try_into().expect("exact chunk");
+            let s: &[i8; LANES] = s.try_into().expect("exact chunk");
+            for i in 0..LANES {
+                o[i] = scale * s[i] as f32;
+            }
+        }
+        for (o, &s) in oc.into_remainder().iter_mut().zip(sc.remainder()) {
+            *o = scale * s as f32;
+        }
+    }
+
+    /// SIMD arm of [`Compressor::decode_into`]: the packed stream is four
+    /// wire bytes per 16 symbols, so full chunks load directly as LE
+    /// words (no bit-reader state), a word-wide bit trick rejects 0b11
+    /// symbols, and the select runs over lanes. The produced values are
+    /// the same `0.0 / scale / -scale` constants the scalar match emits.
+    fn decode_into_simd(scale: f32, rest: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let need_bits = out.len() * 2;
+        if need_bits > rest.len() * 8 {
+            anyhow::bail!("bit reader overrun: need {need_bits} bits, have {}", rest.len() * 8);
+        }
+        let lut = [0.0f32, scale, -scale];
+        let mut pos = 0usize;
+        let mut chunks = out.chunks_exact_mut(16);
+        for chunk in &mut chunks {
+            let w = u32::from_le_bytes(rest[pos..pos + 4].try_into().expect("4-byte slice"));
+            pos += 4;
+            // A 0b11 pair has both bits set: mask pairs where bit 2j and
+            // bit 2j+1 are both 1.
+            if w & (w >> 1) & 0x5555_5555 != 0 {
+                anyhow::bail!("terngrad decode: bad symbol 0b11");
+            }
+            let chunk: &mut [f32; 16] = chunk.try_into().expect("exact chunk");
+            for j in 0..16 {
+                chunk[j] = lut[((w >> (2 * j)) & 0b11) as usize];
+            }
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let mut tmp = [0u8; 4];
+            let n = (rest.len() - pos).min(4);
+            tmp[..n].copy_from_slice(&rest[pos..pos + n]);
+            let w = u32::from_le_bytes(tmp);
+            for (j, o) in rem.iter_mut().enumerate() {
+                let code = (w >> (2 * j)) & 0b11;
+                if code == 0b11 {
+                    anyhow::bail!("terngrad decode: bad symbol 0b11");
+                }
+                *o = lut[code as usize];
+            }
+        }
+        Ok(())
     }
 
     /// 2-bit wire code of one ternary symbol (00 zero, 01 +, 10 −).
@@ -129,6 +247,9 @@ impl Compressor for TernGrad {
         let mut r = Reader::new(bytes);
         let scale = r.f32()?;
         let rest = r.bytes(bytes.len() - 4)?;
+        if kernels::mode() == KernelMode::Simd {
+            return Self::decode_into_simd(scale, rest, out);
+        }
         let mut br = BitReader::new(rest);
         // Mirror of `encode_syms`: 16 symbols per 32-bit read (a full
         // chunk consumes exactly four wire bytes, so batched reads can

@@ -86,6 +86,44 @@ impl ReduceMode {
     }
 }
 
+/// Which hot-path kernel implementations to run (`--kernels`).
+///
+/// Like [`AggMode`] and [`ReduceMode`] this is a pure performance A/B
+/// switch: the SIMD kernels are **bitwise-identical** to the scalar
+/// baseline (same per-element expressions, same add order, same rounding
+/// sites — see `kernels/`), so CI can diff `broadcast_fnv` across the two
+/// settings forever. The process-global mode lives in [`crate::kernels`];
+/// this type is just its parse/label surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Lane-chunked kernels (portable 8-wide unrolling, plus runtime-
+    /// detected AVX2 on x86-64 where it wins). The default.
+    #[default]
+    Simd,
+    /// The original element-at-a-time loops, kept reachable as the
+    /// baseline arm of the scalar-vs-SIMD checksum A/B.
+    Scalar,
+}
+
+impl KernelMode {
+    /// Parse a CLI string: `simd`/`vector` or `scalar`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "simd" | "vector" => Ok(Self::Simd),
+            "scalar" => Ok(Self::Scalar),
+            other => anyhow::bail!("unknown kernel mode '{other}' (simd|scalar)"),
+        }
+    }
+
+    /// Display label for logs and bench case names.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Simd => "simd",
+            Self::Scalar => "scalar",
+        }
+    }
+}
+
 /// Round-completion policy: after each accepted arrival the streaming
 /// leader asks "does this round close now, or keep waiting?". The
 /// runtime engine is built from this in `ps/policy.rs`; anything other
@@ -298,6 +336,19 @@ mod tests {
         assert!(ReduceMode::parse("wat").is_err());
         // Windowed is the default: the fast path is on unless opted out.
         assert_eq!(AggregatorConfig::default().reduce, ReduceMode::Windowed);
+    }
+
+    #[test]
+    fn parses_kernel_modes() {
+        assert_eq!(KernelMode::parse("simd").unwrap(), KernelMode::Simd);
+        assert_eq!(KernelMode::parse("VECTOR").unwrap(), KernelMode::Simd);
+        assert_eq!(KernelMode::parse("scalar").unwrap(), KernelMode::Scalar);
+        assert!(KernelMode::parse("wat").is_err());
+        // SIMD is the default: the fast path is on unless opted out.
+        assert_eq!(KernelMode::default(), KernelMode::Simd);
+        for m in [KernelMode::Simd, KernelMode::Scalar] {
+            assert_eq!(KernelMode::parse(m.label()).unwrap(), m);
+        }
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! Hot-path f32 kernels with a process-global scalar/SIMD switch.
+//!
+//! Every kernel here has two arms:
+//!
+//! - a **scalar** arm — the original element-at-a-time loop, kept verbatim
+//!   as the baseline;
+//! - a **simd** arm — the same per-element expressions chunked 8 lanes at
+//!   a time (portable `chunks_exact` unrolling that the backend turns into
+//!   vector code, plus a runtime-detected AVX2 `std::arch` path on x86-64
+//!   for the pure add/scale kernels where 256-bit lanes beat what
+//!   autovectorization does at the baseline target).
+//!
+//! The contract is **bitwise identity**: both arms perform the identical
+//! IEEE-754 operations per element, in the same order, at the same
+//! rounding sites, so `broadcast_fnv` checksums must match across
+//! `--kernels scalar` and `--kernels simd` forever (CI diffs them). That
+//! is why the AVX2 arm only covers lane-wise `+`, `*` and `/` (exact,
+//! correctly-rounded single operations with the same NaN propagation as
+//! their scalar forms on x86) and never `min`/`max`-style ops whose vector
+//! NaN semantics differ from Rust's scalar methods — those stay in the
+//! portable chunked form where each lane is literally the scalar
+//! expression.
+//!
+//! The mode is process-global (one `--kernels` knob per run, set once by
+//! the CLI before any worker threads start). Tests and benches that need
+//! both arms in one process use [`scoped_mode`], which serializes flips
+//! behind a lock and restores the previous mode on drop — safe even if
+//! unrelated threads race a dispatch, because both arms return identical
+//! bits.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+pub use crate::config::KernelMode;
+
+/// Lane width of the portable chunked kernels (8 × f32 = one 256-bit
+/// vector register; also a whole-number multiple of the 128-bit lanes the
+/// baseline x86-64 target autovectorizes to).
+pub const LANES: usize = 8;
+
+const MODE_SIMD: u8 = 0;
+const MODE_SCALAR: u8 = 1;
+
+/// Process-global kernel mode. SIMD is the default: the fast path is on
+/// unless a run opts out with `--kernels scalar`.
+static MODE: AtomicU8 = AtomicU8::new(MODE_SIMD);
+
+/// Serializes [`scoped_mode`] users (tests / benches that A/B both arms).
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Set the process-global kernel mode. Called once by the CLI at startup;
+/// tests should prefer [`scoped_mode`].
+pub fn set_mode(mode: KernelMode) {
+    let v = match mode {
+        KernelMode::Simd => MODE_SIMD,
+        KernelMode::Scalar => MODE_SCALAR,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// The current process-global kernel mode.
+pub fn mode() -> KernelMode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_SCALAR => KernelMode::Scalar,
+        _ => KernelMode::Simd,
+    }
+}
+
+/// Backend the SIMD arm will actually use on this machine, for run logs:
+/// `"avx2"` when runtime detection found it, else `"portable"`.
+pub fn simd_backend() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return "avx2";
+    }
+    "portable"
+}
+
+/// RAII guard holding the kernel mode at a fixed value; restores the
+/// previous mode on drop. Guards serialize behind a process-wide lock so
+/// concurrent A/B tests can't interleave flips.
+pub struct ScopedMode {
+    prev: KernelMode,
+    _serial: MutexGuard<'static, ()>,
+}
+
+/// Pin the global kernel mode for the lifetime of the returned guard.
+pub fn scoped_mode(mode: KernelMode) -> ScopedMode {
+    let serial = MODE_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let prev = self::mode();
+    set_mode(mode);
+    ScopedMode { prev, _serial: serial }
+}
+
+impl Drop for ScopedMode {
+    fn drop(&mut self) {
+        set_mode(self.prev);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 runtime detection (cached; `std::arch` paths are x86-64 only).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    // 0 = unknown, 1 = yes, 2 = no.
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+    match AVX2.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2");
+            AVX2.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// acc[i] += src[i]  (the fold_shard / reduce inner loop)
+// ---------------------------------------------------------------------------
+
+/// `acc[i] += src[i]`, dispatching on the global mode.
+#[inline]
+pub fn add_assign(acc: &mut [f32], src: &[f32]) {
+    match mode() {
+        KernelMode::Simd => add_assign_simd(acc, src),
+        KernelMode::Scalar => add_assign_scalar(acc, src),
+    }
+}
+
+/// Scalar baseline: one element per iteration.
+pub fn add_assign_scalar(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, &b) in acc.iter_mut().zip(src) {
+        *a += b;
+    }
+}
+
+/// SIMD arm: 8 lanes per iteration (AVX2 when available).
+pub fn add_assign_simd(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // Safety: AVX2 presence was runtime-checked just above.
+        unsafe { add_assign_avx2(acc, src) };
+        return;
+    }
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (a, b) in (&mut ac).zip(&mut sc) {
+        let a: &mut [f32; LANES] = a.try_into().expect("exact chunk");
+        let b: &[f32; LANES] = b.try_into().expect("exact chunk");
+        for i in 0..LANES {
+            a[i] += b[i];
+        }
+    }
+    for (a, &b) in ac.into_remainder().iter_mut().zip(sc.remainder()) {
+        *a += b;
+    }
+}
+
+/// Safety: caller must have verified AVX2 support. Lane-wise `vaddps` is
+/// the same correctly-rounded IEEE add (and same NaN propagation) as the
+/// scalar `+` on x86, so this stays bitwise-identical to the scalar arm.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_assign_avx2(acc: &mut [f32], src: &[f32]) {
+    use std::arch::x86_64::{_mm256_add_ps, _mm256_loadu_ps, _mm256_storeu_ps};
+    let n = acc.len();
+    let mut i = 0;
+    while i + LANES <= n {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let b = _mm256_loadu_ps(src.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, b));
+        i += LANES;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) += *src.get_unchecked(i);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// out[i] = src[i] * k  /  buf[i] *= k  (the 1/M close-time scale)
+// ---------------------------------------------------------------------------
+
+/// `out[i] = src[i] * k`, dispatching on the global mode.
+#[inline]
+pub fn scale_into(out: &mut [f32], src: &[f32], k: f32) {
+    match mode() {
+        KernelMode::Simd => scale_into_simd(out, src, k),
+        KernelMode::Scalar => scale_into_scalar(out, src, k),
+    }
+}
+
+/// Scalar baseline: one element per iteration.
+pub fn scale_into_scalar(out: &mut [f32], src: &[f32], k: f32) {
+    debug_assert_eq!(out.len(), src.len());
+    for (o, &a) in out.iter_mut().zip(src) {
+        *o = a * k;
+    }
+}
+
+/// SIMD arm: 8 lanes per iteration (AVX2 when available).
+pub fn scale_into_simd(out: &mut [f32], src: &[f32], k: f32) {
+    debug_assert_eq!(out.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // Safety: AVX2 presence was runtime-checked just above.
+        unsafe { scale_into_avx2(out, src, k) };
+        return;
+    }
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (o, a) in (&mut oc).zip(&mut sc) {
+        let o: &mut [f32; LANES] = o.try_into().expect("exact chunk");
+        let a: &[f32; LANES] = a.try_into().expect("exact chunk");
+        for i in 0..LANES {
+            o[i] = a[i] * k;
+        }
+    }
+    for (o, &a) in oc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *o = a * k;
+    }
+}
+
+/// Safety: caller must have verified AVX2 support. Lane-wise `vmulps` is
+/// the same correctly-rounded IEEE multiply as the scalar `*` on x86.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_into_avx2(out: &mut [f32], src: &[f32], k: f32) {
+    use std::arch::x86_64::{_mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps};
+    let n = out.len();
+    let kv = _mm256_set1_ps(k);
+    let mut i = 0;
+    while i + LANES <= n {
+        let a = _mm256_loadu_ps(src.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(a, kv));
+        i += LANES;
+    }
+    while i < n {
+        *out.get_unchecked_mut(i) = *src.get_unchecked(i) * k;
+        i += 1;
+    }
+}
+
+/// `buf[i] *= k` in place, dispatching on the global mode.
+#[inline]
+pub fn scale_in_place(buf: &mut [f32], k: f32) {
+    match mode() {
+        KernelMode::Simd => scale_in_place_simd(buf, k),
+        KernelMode::Scalar => scale_in_place_scalar(buf, k),
+    }
+}
+
+/// Scalar baseline: one element per iteration.
+pub fn scale_in_place_scalar(buf: &mut [f32], k: f32) {
+    for x in buf.iter_mut() {
+        *x *= k;
+    }
+}
+
+/// SIMD arm: 8 lanes per iteration (AVX2 when available).
+pub fn scale_in_place_simd(buf: &mut [f32], k: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // Safety: AVX2 presence was runtime-checked just above. In-place
+        // scale is `scale_into` with aliased src/out, expressed through
+        // the same vmulps — identical rounding.
+        unsafe { scale_in_place_avx2(buf, k) };
+        return;
+    }
+    let mut bc = buf.chunks_exact_mut(LANES);
+    for b in &mut bc {
+        let b: &mut [f32; LANES] = b.try_into().expect("exact chunk");
+        for x in b.iter_mut() {
+            *x *= k;
+        }
+    }
+    for x in bc.into_remainder().iter_mut() {
+        *x *= k;
+    }
+}
+
+/// Safety: caller must have verified AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_in_place_avx2(buf: &mut [f32], k: f32) {
+    use std::arch::x86_64::{_mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps};
+    let n = buf.len();
+    let kv = _mm256_set1_ps(k);
+    let mut i = 0;
+    while i + LANES <= n {
+        let a = _mm256_loadu_ps(buf.as_ptr().add(i));
+        _mm256_storeu_ps(buf.as_mut_ptr().add(i), _mm256_mul_ps(a, kv));
+        i += LANES;
+    }
+    while i < n {
+        *buf.get_unchecked_mut(i) *= k;
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// out[i] = scale * (levels[i] as f32 / s)   (qsgd / linf grid reconstruct)
+// ---------------------------------------------------------------------------
+
+/// Grid reconstruction `out[i] = scale * (levels[i] as f32 / s)`,
+/// dispatching on the global mode. This is the shared dequantization
+/// expression of the qsgd and linf codecs; the division must stay a
+/// division (not a reciprocal multiply) to preserve the scalar rounding.
+#[inline]
+pub fn grid_reconstruct(out: &mut [f32], levels: &[i32], scale: f32, s: f32) {
+    match mode() {
+        KernelMode::Simd => grid_reconstruct_simd(out, levels, scale, s),
+        KernelMode::Scalar => grid_reconstruct_scalar(out, levels, scale, s),
+    }
+}
+
+/// Scalar baseline: one element per iteration.
+pub fn grid_reconstruct_scalar(out: &mut [f32], levels: &[i32], scale: f32, s: f32) {
+    debug_assert_eq!(out.len(), levels.len());
+    for (o, &l) in out.iter_mut().zip(levels) {
+        *o = scale * (l as f32 / s);
+    }
+}
+
+/// SIMD arm: 8 lanes per iteration (AVX2 when available; `vcvtdq2ps`,
+/// `vdivps` and `vmulps` are all exact/correctly-rounded per lane, so the
+/// bits match the scalar expression).
+pub fn grid_reconstruct_simd(out: &mut [f32], levels: &[i32], scale: f32, s: f32) {
+    debug_assert_eq!(out.len(), levels.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // Safety: AVX2 presence was runtime-checked just above.
+        unsafe { grid_reconstruct_avx2(out, levels, scale, s) };
+        return;
+    }
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut lc = levels.chunks_exact(LANES);
+    for (o, l) in (&mut oc).zip(&mut lc) {
+        let o: &mut [f32; LANES] = o.try_into().expect("exact chunk");
+        let l: &[i32; LANES] = l.try_into().expect("exact chunk");
+        for i in 0..LANES {
+            o[i] = scale * (l[i] as f32 / s);
+        }
+    }
+    for (o, &l) in oc.into_remainder().iter_mut().zip(lc.remainder()) {
+        *o = scale * (l as f32 / s);
+    }
+}
+
+/// Safety: caller must have verified AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn grid_reconstruct_avx2(out: &mut [f32], levels: &[i32], scale: f32, s: f32) {
+    use std::arch::x86_64::{
+        __m256i, _mm256_cvtepi32_ps, _mm256_div_ps, _mm256_loadu_si256, _mm256_mul_ps,
+        _mm256_set1_ps, _mm256_storeu_ps,
+    };
+    let n = out.len();
+    let sv = _mm256_set1_ps(s);
+    let kv = _mm256_set1_ps(scale);
+    let mut i = 0;
+    while i + LANES <= n {
+        let l = _mm256_loadu_si256(levels.as_ptr().add(i) as *const __m256i);
+        let q = _mm256_div_ps(_mm256_cvtepi32_ps(l), sv);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(q, kv));
+        i += LANES;
+    }
+    while i < n {
+        *out.get_unchecked_mut(i) = scale * (*levels.get_unchecked(i) as f32 / s);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Inputs that stress lane tails and special bit patterns: -0.0, a
+    /// NaN with payload, subnormals, plus ordinary values.
+    fn special_vec(n: usize, salt: u32) -> Vec<f32> {
+        (0..n)
+            .map(|i| match (i as u32 + salt) % 6 {
+                0 => -0.0,
+                1 => f32::from_bits(0x7FC0_1234), // NaN payload
+                2 => f32::MIN_POSITIVE / 4.0,     // subnormal
+                3 => -(i as f32) * 0.37,
+                4 => 1.0 + i as f32 * 1e-3,
+                _ => (i as f32).sin() * 100.0,
+            })
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    const DIMS: [usize; 10] = [0, 1, 7, 8, 9, 15, 16, 17, 63, 130];
+
+    #[test]
+    fn add_assign_arms_are_bitwise_identical() {
+        for &n in &DIMS {
+            let src = special_vec(n, 1);
+            let base = special_vec(n, 9);
+            let mut a = base.clone();
+            let mut b = base.clone();
+            add_assign_scalar(&mut a, &src);
+            add_assign_simd(&mut b, &src);
+            assert_eq!(bits(&a), bits(&b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn scale_arms_are_bitwise_identical() {
+        for &n in &DIMS {
+            let src = special_vec(n, 3);
+            for k in [0.25f32, 1.0 / 3.0, -7.5e-3] {
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                scale_into_scalar(&mut a, &src, k);
+                scale_into_simd(&mut b, &src, k);
+                assert_eq!(bits(&a), bits(&b), "scale_into n={n} k={k}");
+                let mut c = src.clone();
+                let mut d = src.clone();
+                scale_in_place_scalar(&mut c, k);
+                scale_in_place_simd(&mut d, k);
+                assert_eq!(bits(&c), bits(&d), "scale_in_place n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_reconstruct_arms_are_bitwise_identical() {
+        for &n in &DIMS {
+            let levels: Vec<i32> = (0..n).map(|i| (i as i32 * 37 % 255) - 127).collect();
+            for (scale, s) in [(1.5f32, 255.0f32), (1e-4, 7.0), (-3.25, 15.0)] {
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                grid_reconstruct_scalar(&mut a, &levels, scale, s);
+                grid_reconstruct_simd(&mut b, &levels, scale, s);
+                assert_eq!(bits(&a), bits(&b), "n={n} scale={scale} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_follows_scoped_mode() {
+        // Whatever the ambient mode, a scoped pin dispatches that arm and
+        // restores on drop. (Outputs are identical either way; this just
+        // checks the guard mechanics.)
+        let ambient = mode();
+        {
+            let _g = scoped_mode(KernelMode::Scalar);
+            assert_eq!(mode(), KernelMode::Scalar);
+            // add_assign through the dispatcher still works.
+            let mut a = [1.0f32, 2.0];
+            add_assign(&mut a, &[0.5, 0.5]);
+            assert_eq!(a, [1.5, 2.5]);
+        }
+        assert_eq!(mode(), ambient);
+        {
+            let _g = scoped_mode(KernelMode::Simd);
+            assert_eq!(mode(), KernelMode::Simd);
+        }
+        assert_eq!(mode(), ambient);
+    }
+
+    #[test]
+    fn simd_backend_label_is_stable() {
+        let l = simd_backend();
+        assert!(l == "avx2" || l == "portable");
+        assert_eq!(l, simd_backend(), "detection is cached");
+    }
+}

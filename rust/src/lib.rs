@@ -22,6 +22,7 @@
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod benchutil;
+pub mod kernels;
 pub mod linalg;
 pub mod tensor;
 pub mod testutil;

@@ -182,6 +182,11 @@ impl RoundBank {
 /// accumulator, strictly in worker-id order. A shard's first fold zeroes
 /// it first, replicating the barrier reduce's `0.0 + v⁰ᵢ` opening
 /// addition exactly (a plain copy would differ on −0.0 inputs).
+/// The per-worker additions run through [`crate::kernels::add_assign`] —
+/// 8 lanes per iteration under `--kernels simd`, the element loop under
+/// `--kernels scalar` — but always one slot at a time over the full shard
+/// (the per-element add order is part of the bitwise contract; lanes only
+/// batch *independent* elements of the same (acc, slot) pair).
 fn fold_shard(acc: &mut [f32], off: usize, slots: &[WorkerSlot], folded: &mut usize, upto: usize) {
     if *folded >= upto {
         return;
@@ -193,9 +198,7 @@ fn fold_shard(acc: &mut [f32], off: usize, slots: &[WorkerSlot], folded: &mut us
     }
     for slot in &slots[*folded..upto] {
         let src = &slot.buf[off..off + acc.len()];
-        for (a, &b) in acc.iter_mut().zip(src) {
-            *a += b;
-        }
+        crate::kernels::add_assign(acc, src);
     }
     *folded = upto;
 }
@@ -224,14 +227,10 @@ fn close_shard(
             continue;
         }
         let src = &slot.buf[off..off + acc.len()];
-        for (a, &b) in acc.iter_mut().zip(src) {
-            *a += b;
-        }
+        crate::kernels::add_assign(acc, src);
     }
     *folded = slots.len();
-    for (o, &a) in out.iter_mut().zip(acc.iter()) {
-        *o = a * inv;
-    }
+    crate::kernels::scale_into(out, acc, inv);
 }
 
 /// Sequentially run [`close_shard`] over every shard — the one walk the
@@ -527,7 +526,13 @@ impl Aggregator {
             Some(pool) if !inline => {
                 let mut units: Vec<(&mut [f32], &mut usize)> =
                     acc.chunks_mut(shard_elems).zip(folded.iter_mut()).collect();
-                pool.parallel_for_mut(&mut units, |s, (chunk, f)| {
+                // With small shards each unit is little work: batch
+                // enough shards per job that a job folds at least
+                // SMALL_WORK_ELEMS element-adds (scheduling only —
+                // shard order and add order are unchanged).
+                let min_per_job =
+                    Self::SMALL_WORK_ELEMS.div_ceil(extension * shard_elems).max(1);
+                pool.parallel_for_mut_min_chunk(&mut units, min_per_job, |s, (chunk, f)| {
                     fold_shard(chunk, s * shard_elems, slots, f, upto);
                 });
             }
@@ -652,7 +657,11 @@ impl Aggregator {
                     .zip(folded.iter_mut())
                     .zip(self.avg.chunks_mut(shard_elems))
                     .collect();
-                pool.parallel_for_mut(&mut units, |s, ((ac, f), out)| {
+                // Tail folds touch at most a worker or two per shard:
+                // floor the per-job shard count so small-shard configs
+                // don't pay one dispatch per tiny close.
+                let min_per_job = Self::SMALL_WORK_ELEMS.div_ceil(shard_elems).max(1);
+                pool.parallel_for_mut_min_chunk(&mut units, min_per_job, |s, ((ac, f), out)| {
                     close_shard(ac, out, s * shard_elems, slots, arrived, f, partial, inv);
                 });
             }
@@ -779,7 +788,8 @@ impl Aggregator {
             Some(pool) => {
                 let shard_elems = self.shard_elems;
                 let mut shards: Vec<&mut [f32]> = self.avg.chunks_mut(shard_elems).collect();
-                pool.parallel_for_mut(&mut shards, |s, shard| {
+                let min_per_job = Self::SMALL_WORK_ELEMS.div_ceil(shard_elems).max(1);
+                pool.parallel_for_mut_min_chunk(&mut shards, min_per_job, |s, shard| {
                     let off = s * shard_elems;
                     for x in shard.iter_mut() {
                         *x = 0.0;
@@ -789,13 +799,9 @@ impl Aggregator {
                             continue;
                         }
                         let src = &slot.buf[off..off + shard.len()];
-                        for (a, &b) in shard.iter_mut().zip(src) {
-                            *a += b;
-                        }
+                        crate::kernels::add_assign(shard, src);
                     }
-                    for x in shard.iter_mut() {
-                        *x *= inv;
-                    }
+                    crate::kernels::scale_in_place(shard, inv);
                 });
             }
         }

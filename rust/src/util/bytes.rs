@@ -1,5 +1,13 @@
 //! Byte-level encode/decode helpers for the wire format and the codecs.
 //! Everything is little-endian (the only byte order this system touches).
+//!
+//! The two hot entry points ([`put_f32_slice`] on the broadcast/identity
+//! encode path, [`fnv1a64_f32`] on the drift-check path) dispatch between
+//! a scalar baseline and a lane-chunked arm on the process-global
+//! [`crate::kernels`] mode; both arms produce identical bytes/checksums.
+
+use crate::config::KernelMode;
+use crate::kernels;
 
 /// Append a u32 (LE).
 #[inline]
@@ -31,6 +39,14 @@ const F32_SCRATCH_ELEMS: usize = 256;
 /// per-element `extend_from_slice` round trips: one up-front reserve,
 /// then whole scratch blocks of serialized values appended at a time.
 pub fn put_f32_slice(buf: &mut Vec<u8>, vs: &[f32]) {
+    match kernels::mode() {
+        KernelMode::Simd => put_f32_slice_simd(buf, vs),
+        KernelMode::Scalar => put_f32_slice_scalar(buf, vs),
+    }
+}
+
+/// Scalar arm of [`put_f32_slice`]: one element serialized per iteration.
+pub fn put_f32_slice_scalar(buf: &mut Vec<u8>, vs: &[f32]) {
     buf.reserve(vs.len() * 4);
     let mut scratch = [0u8; 4 * F32_SCRATCH_ELEMS];
     for chunk in vs.chunks(F32_SCRATCH_ELEMS) {
@@ -42,6 +58,34 @@ pub fn put_f32_slice(buf: &mut Vec<u8>, vs: &[f32]) {
     }
 }
 
+/// SIMD arm of [`put_f32_slice`]: 8 elements land as one fixed 32-byte
+/// block store per iteration (the fixed bounds let the backend emit wide
+/// stores instead of eight 4-byte copies). Byte-identical to the scalar
+/// arm — serialization has no rounding sites at all.
+pub fn put_f32_slice_simd(buf: &mut Vec<u8>, vs: &[f32]) {
+    buf.reserve(vs.len() * 4);
+    let mut scratch = [0u8; 4 * F32_SCRATCH_ELEMS];
+    for chunk in vs.chunks(F32_SCRATCH_ELEMS) {
+        let block = &mut scratch[..4 * chunk.len()];
+        let mut bc = block.chunks_exact_mut(4 * kernels::LANES);
+        let mut vc = chunk.chunks_exact(kernels::LANES);
+        for (b, v) in (&mut bc).zip(&mut vc) {
+            let b: &mut [u8; 4 * kernels::LANES] = b.try_into().expect("exact chunk");
+            let v: &[f32; kernels::LANES] = v.try_into().expect("exact chunk");
+            for i in 0..kernels::LANES {
+                b[4 * i..4 * i + 4].copy_from_slice(&v[i].to_le_bytes());
+            }
+        }
+        for (dst, &v) in bc.into_remainder().chunks_exact_mut(4).zip(vc.remainder()) {
+            dst.copy_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(block);
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
 /// FNV-1a-style 64-bit checksum over a slice of f32 **bit patterns**,
 /// folding one whole u32 pattern per multiply instead of single bytes
 /// (4× fewer multiplies than byte-wise FNV; still deterministic across
@@ -50,11 +94,41 @@ pub fn put_f32_slice(buf: &mut Vec<u8>, vs: &[f32]) {
 /// conflate — two checksums agree iff the f32 sequences are bit-equal
 /// modulo 64-bit collisions.
 pub fn fnv1a64_f32(vs: &[f32]) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01B3;
-    let mut h = OFFSET;
+    match kernels::mode() {
+        KernelMode::Simd => fnv1a64_f32_simd(vs),
+        KernelMode::Scalar => fnv1a64_f32_scalar(vs),
+    }
+}
+
+/// Scalar arm of [`fnv1a64_f32`].
+pub fn fnv1a64_f32_scalar(vs: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
     for &v in vs {
-        h = (h ^ v.to_bits() as u64).wrapping_mul(PRIME);
+        h = (h ^ v.to_bits() as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// SIMD arm of [`fnv1a64_f32`]: the hash chain itself is a strict
+/// sequential dependency (each multiply needs the previous hash), so only
+/// the f32→bits conversion chunks over lanes; the fold is then an
+/// unrolled walk over the lane block. Exactly the same u64 as the scalar
+/// arm — integer wrapping ops have no rounding to disturb.
+pub fn fnv1a64_f32_simd(vs: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut vc = vs.chunks_exact(kernels::LANES);
+    for v in &mut vc {
+        let v: &[f32; kernels::LANES] = v.try_into().expect("exact chunk");
+        let mut bits = [0u64; kernels::LANES];
+        for i in 0..kernels::LANES {
+            bits[i] = v[i].to_bits() as u64;
+        }
+        for &b in &bits {
+            h = (h ^ b).wrapping_mul(FNV_PRIME);
+        }
+    }
+    for &v in vc.remainder() {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(FNV_PRIME);
     }
     h
 }
@@ -223,6 +297,30 @@ mod tests {
         assert_ne!(fnv1a64_f32(&a), fnv1a64_f32(&[-2.0, 1.0, 0.0]), "order-sensitive");
         // Stable across calls (the CI drift check diffs these across runs).
         assert_eq!(fnv1a64_f32(&[]), fnv1a64_f32(&[]));
+    }
+
+    #[test]
+    fn scalar_and_simd_arms_agree_bytewise() {
+        // Lane-boundary lengths with -0.0 / NaN-payload / subnormal
+        // entries: both serialization arms and both checksum arms must
+        // produce identical output.
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 255, 256, 257, 1000] {
+            let xs: Vec<f32> = (0..n)
+                .map(|i| match i % 5 {
+                    0 => -0.0,
+                    1 => f32::from_bits(0x7FC0_1234),
+                    2 => f32::MIN_POSITIVE / 2.0,
+                    3 => -(i as f32) * 0.125,
+                    _ => i as f32,
+                })
+                .collect();
+            let mut a = vec![0x55u8; 2];
+            let mut b = vec![0x55u8; 2];
+            put_f32_slice_scalar(&mut a, &xs);
+            put_f32_slice_simd(&mut b, &xs);
+            assert_eq!(a, b, "put_f32_slice n={n}");
+            assert_eq!(fnv1a64_f32_scalar(&xs), fnv1a64_f32_simd(&xs), "fnv n={n}");
+        }
     }
 
     #[test]

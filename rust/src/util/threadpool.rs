@@ -180,11 +180,26 @@ impl ThreadPool {
         T: Send,
         F: Fn(usize, &mut T) + Send + Sync,
     {
+        self.parallel_for_mut_min_chunk(items, 1, f)
+    }
+
+    /// [`Self::parallel_for_mut`] with an explicit floor on items per
+    /// dispatched job: the item count per chunk is at least
+    /// `min_per_job`, so callers whose per-item work is tiny (e.g. the
+    /// aggregator folding many small shards) can batch enough consecutive
+    /// items into each job to amortize the dispatch + latch round trip —
+    /// and to keep the lane kernels on long contiguous runs. Scheduling
+    /// only: items still run exactly once, in index order within a chunk.
+    pub fn parallel_for_mut_min_chunk<T, F>(&self, items: &mut [T], min_per_job: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Send + Sync,
+    {
         let n = items.len();
         if n == 0 {
             return;
         }
-        let chunks = self.size.min(n);
+        let chunks = self.size.min(n.div_ceil(min_per_job.max(1))).max(1);
         let chunk_len = n.div_ceil(chunks);
         if chunks == 1 {
             // Single-threaded fast path: no dispatch overhead.
@@ -369,6 +384,31 @@ mod tests {
         let mut one = vec![7u64];
         pool.parallel_for_mut(&mut one, |i, item| *item += i as u64 + 1);
         assert_eq!(one[0], 8);
+    }
+
+    #[test]
+    fn parallel_for_mut_min_chunk_batches_but_covers_everything() {
+        let pool = ThreadPool::new(4);
+        // Any floor — including one larger than the input — still visits
+        // every index exactly once with the right value.
+        for min_per_job in [1usize, 3, 7, 50, 1000] {
+            let mut items: Vec<u64> = vec![0; 97];
+            pool.parallel_for_mut_min_chunk(&mut items, min_per_job, |i, item| {
+                *item = i as u64 * 5 + 2;
+            });
+            for (i, &v) in items.iter().enumerate() {
+                assert_eq!(v, i as u64 * 5 + 2, "min_per_job={min_per_job}");
+            }
+        }
+        // min_per_job = 0 is treated as 1 (no division by zero).
+        let mut items: Vec<u64> = vec![0; 5];
+        pool.parallel_for_mut_min_chunk(&mut items, 0, |i, item| *item = i as u64);
+        assert_eq!(items, vec![0, 1, 2, 3, 4]);
+        // A floor that swallows the whole input runs inline (observable
+        // as: still correct, even from within a pool worker's context).
+        let mut one = vec![1u64];
+        pool.parallel_for_mut_min_chunk(&mut one, usize::MAX, |_, item| *item += 1);
+        assert_eq!(one[0], 2);
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Scalar-vs-SIMD bitwise-equality property suite.
+//!
+//! The kernel layer's contract (`src/kernels/`) is that the `--kernels
+//! scalar` and `--kernels simd` arms of every hot loop evaluate the
+//! **identical** per-element IEEE-754 expressions in the **identical**
+//! order, so outputs match bit for bit — not approximately, exactly.
+//! These tests pin that contract at the subsystem level (full codec
+//! wire round trips, aggregator rounds, message frames), on top of the
+//! per-kernel unit tests, over ragged dimensions (1, 7, 8, 9, shard±1)
+//! and adversarial payloads: −0.0, NaN with a nonzero payload, and
+//! subnormals.
+
+use dqgan::comm::Message;
+use dqgan::compress::{compressor_from_spec, Compressor};
+use dqgan::config::{AggMode, AggregatorConfig, KernelMode, ReduceMode};
+use dqgan::kernels;
+use dqgan::ps::{Aggregator, Decoder};
+use dqgan::testutil::forall;
+use dqgan::util::bytes::{fnv1a64_f32, put_f32_slice};
+use dqgan::util::rng::Pcg32;
+use dqgan::{prop_assert, prop_pass};
+use std::sync::Arc;
+
+/// Every codec with a SIMD arm, plus identity/topk (mode-independent by
+/// construction — included so a future arm can't silently diverge).
+const SPECS: &[&str] = &[
+    "identity",
+    "qsgd8",
+    "qsgd(s=3)",
+    "linf8",
+    "linf(s=7)",
+    "linf(bits=8,block=64)",
+    "sign",
+    "terngrad",
+    "topk(f=0.3)",
+];
+
+/// Lane count is 8: cover below/at/above one chunk, two chunks, the
+/// sign/terngrad word sizes (32 / 16 symbols), and ragged tails of each.
+const DIMS: &[usize] = &[1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 257];
+
+/// IEEE-754 edge cases the lane chunking must not canonicalize away.
+const SPECIALS: &[f32] = &[
+    -0.0,
+    f32::from_bits(0x7FC0_1234), // quiet NaN with a nonzero payload
+    f32::from_bits(0x0000_0001), // smallest positive subnormal
+    f32::from_bits(0x8000_0007), // negative subnormal
+    f32::MIN_POSITIVE,
+    -1.0e-38,
+];
+
+/// A normal vector with specials scattered at rng-chosen positions.
+fn special_vec(d: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    for &s in SPECIALS {
+        let i = rng.below(d as u32) as usize;
+        v[i] = s;
+    }
+    v
+}
+
+/// Like [`special_vec`] but finite-only (−0.0 and subnormals, no NaN):
+/// the aggregator deliberately rejects non-finite payloads, so its A/B
+/// must stay inside the accepted input domain.
+fn finite_special_vec(d: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let mut v = special_vec(d, rng);
+    for x in v.iter_mut() {
+        if !x.is_finite() {
+            *x = -0.0;
+        }
+    }
+    v
+}
+
+/// Every codec: wire bytes, dense quantized output and both-mode decodes
+/// are bit-identical between the scalar and SIMD arms (same rng seed ⇒
+/// same stochastic rounding draws in element order).
+#[test]
+fn prop_codec_arms_bit_identical() {
+    forall("codec scalar≡simd", 150, |g| {
+        let spec = *g.choose(SPECS);
+        let c = compressor_from_spec(spec).unwrap();
+        let d = *g.choose(DIMS);
+        let seed = g.rng().next_u64();
+        let v = special_vec(d, g.rng());
+        let run = |mode: KernelMode| {
+            let _guard = kernels::scoped_mode(mode);
+            let mut rng = Pcg32::new(seed);
+            let mut buf = Vec::new();
+            let q = c.compress_encoded(&v, &mut rng, &mut buf);
+            (q, buf)
+        };
+        let (q_s, wire_s) = run(KernelMode::Scalar);
+        let (q_v, wire_v) = run(KernelMode::Simd);
+        prop_assert!(wire_s == wire_v, "{spec} d={d}: wire bytes differ between arms");
+        for i in 0..d {
+            prop_assert!(
+                q_s[i].to_bits() == q_v[i].to_bits(),
+                "{spec} d={d}: quantized bit mismatch at {i}: {:#010x} vs {:#010x}",
+                q_s[i].to_bits(),
+                q_v[i].to_bits()
+            );
+        }
+        // Decode the (shared) wire under each mode: the two arms must
+        // agree bit for bit. (Decode ≡ quantized round-trip fidelity is
+        // a separate property — prop_compressors.rs — that NaN inputs
+        // legitimately break for sign-bit codecs; the arm-equality
+        // contract must hold even there.)
+        let dec = |mode: KernelMode| {
+            let _guard = kernels::scoped_mode(mode);
+            let mut out = vec![0.0f32; d];
+            c.decode_into(&wire_s, &mut out).unwrap();
+            out
+        };
+        let out_s = dec(KernelMode::Scalar);
+        let out_v = dec(KernelMode::Simd);
+        for i in 0..d {
+            prop_assert!(
+                out_s[i].to_bits() == out_v[i].to_bits(),
+                "{spec} d={d}: decode bit mismatch between arms at {i}: {:#010x} vs {:#010x}",
+                out_s[i].to_bits(),
+                out_v[i].to_bits()
+            );
+        }
+        prop_pass!()
+    });
+}
+
+/// Truncated wires must error under both arms (error text may differ;
+/// fabricating output from a short buffer must not).
+#[test]
+fn prop_codec_arms_agree_on_truncation() {
+    forall("codec truncation scalar≡simd", 80, |g| {
+        let spec = *g.choose(SPECS);
+        let c = compressor_from_spec(spec).unwrap();
+        let d = g.usize_in(4..=200);
+        let v = g.vec_normal(d..=d);
+        let mut wire = Vec::new();
+        let _ = c.compress_encoded(&v, g.rng(), &mut wire);
+        if wire.len() < 2 {
+            prop_pass!();
+        }
+        let cut = g.usize_in(0..=wire.len().saturating_sub(2));
+        for mode in [KernelMode::Scalar, KernelMode::Simd] {
+            let _guard = kernels::scoped_mode(mode);
+            let mut out = vec![0.0f32; d];
+            prop_assert!(
+                c.decode_into(&wire[..cut], &mut out).is_err(),
+                "{spec} d={d} mode={mode:?}: decoded from {cut}/{} bytes",
+                wire.len()
+            );
+        }
+        prop_pass!()
+    });
+}
+
+/// Full aggregator rounds (decode → shard fold → scale) produce
+/// bit-identical averages and round checksums under both kernel arms,
+/// across engines and shard sizes that straddle the lane width.
+#[test]
+fn prop_aggregator_rounds_bit_identical_across_arms() {
+    forall("aggregate scalar≡simd", 40, |g| {
+        let workers = g.usize_in(1..=5);
+        let shard = *g.choose(&[1usize, 7, 8, 9, 16, 64]);
+        // Dims around shard multiples: shard−1, shard, shard+1 regimes.
+        let d = {
+            let k = g.usize_in(1..=4);
+            let base = shard * k;
+            *g.choose(&[base.saturating_sub(1).max(1), base, base + 1])
+        };
+        let agg_mode = *g.choose(&[AggMode::Sequential, AggMode::Sharded, AggMode::Streaming]);
+        let reduce = *g.choose(&[ReduceMode::Windowed, ReduceMode::Barrier]);
+        let codec = compressor_from_spec("linf8").unwrap();
+        let wires: Vec<Vec<u8>> = (0..workers)
+            .map(|_| {
+                let v = finite_special_vec(d, g.rng());
+                let mut wire = Vec::new();
+                codec.compress_encoded(&v, g.rng(), &mut wire);
+                wire
+            })
+            .collect();
+        let decoder: Decoder = {
+            let c = compressor_from_spec("linf8").unwrap();
+            Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+        };
+        let run = |mode: KernelMode| {
+            let _guard = kernels::scoped_mode(mode);
+            let mut agg = Aggregator::new(
+                AggregatorConfig {
+                    mode: agg_mode,
+                    shard_elems: shard,
+                    reduce,
+                    ..Default::default()
+                },
+                d,
+                workers,
+            );
+            let msgs: Vec<Message> = wires
+                .iter()
+                .enumerate()
+                .map(|(w, wire)| Message::payload(w as u32, 0, wire.clone()))
+                .collect();
+            let avg = agg.aggregate(0, &msgs, &decoder).unwrap();
+            let bits: Vec<u32> = avg.iter().map(|x| x.to_bits()).collect();
+            let fnv = fnv1a64_f32(avg);
+            (bits, fnv)
+        };
+        let (bits_s, fnv_s) = run(KernelMode::Scalar);
+        let (bits_v, fnv_v) = run(KernelMode::Simd);
+        prop_assert!(
+            bits_s == bits_v,
+            "avg bits differ: d={d} shard={shard} M={workers} {agg_mode:?}/{reduce:?}"
+        );
+        prop_assert!(fnv_s == fnv_v, "broadcast_fnv differs between arms");
+        prop_pass!()
+    });
+}
+
+/// Serialization + checksum building blocks: `put_f32_slice`,
+/// `fnv1a64_f32` and whole message frames are byte-identical across
+/// arms, and frames encoded under one arm decode under the other.
+#[test]
+fn prop_frame_bytes_mode_invariant() {
+    forall("frame scalar≡simd", 80, |g| {
+        let d = *g.choose(DIMS);
+        let v = special_vec(d, g.rng());
+        let run = |mode: KernelMode| {
+            let _guard = kernels::scoped_mode(mode);
+            let mut buf = Vec::new();
+            put_f32_slice(&mut buf, &v);
+            (buf, fnv1a64_f32(&v))
+        };
+        let (bytes_s, fnv_s) = run(KernelMode::Scalar);
+        let (bytes_v, fnv_v) = run(KernelMode::Simd);
+        prop_assert!(bytes_s == bytes_v, "put_f32_slice differs at d={d}");
+        prop_assert!(fnv_s == fnv_v, "fnv1a64_f32 differs at d={d}");
+
+        // Frame CRC: byte-at-a-time vs slicing-by-8, cross-mode decode.
+        let n_payload = g.usize_in(0..=300);
+        let payload: Vec<u8> = (0..n_payload).map(|_| g.rng().next_u32() as u8).collect();
+        let msg = Message::payload(2, 9, payload);
+        let frame_s = {
+            let _guard = kernels::scoped_mode(KernelMode::Scalar);
+            msg.encode()
+        };
+        let frame_v = {
+            let _guard = kernels::scoped_mode(KernelMode::Simd);
+            msg.encode()
+        };
+        prop_assert!(frame_s == frame_v, "frame bytes differ between arms");
+        for mode in [KernelMode::Scalar, KernelMode::Simd] {
+            let _guard = kernels::scoped_mode(mode);
+            let back = Message::decode(&frame_s);
+            prop_assert!(back.is_ok(), "cross-mode frame decode failed under {mode:?}");
+        }
+        prop_pass!()
+    });
+}
+
+/// The fold kernels themselves (the `fold_shard`/`close_shard` inner
+/// loops) over ragged lengths with specials: one shot per dim, both
+/// directions, no aggregator plumbing.
+#[test]
+fn prop_fold_kernels_bit_identical() {
+    forall("fold kernels scalar≡simd", 60, |g| {
+        let d = *g.choose(DIMS);
+        let a0 = special_vec(d, g.rng());
+        let src = special_vec(d, g.rng());
+        let k = *g.choose(&[0.125f32, 0.5, 1.0 / 3.0, 1.0e30, -0.0]);
+        let run = |mode: KernelMode| {
+            let _guard = kernels::scoped_mode(mode);
+            let mut acc = a0.clone();
+            kernels::add_assign(&mut acc, &src);
+            let mut out = vec![0.0f32; d];
+            kernels::scale_into(&mut out, &acc, k);
+            kernels::scale_in_place(&mut acc, k);
+            let levels: Vec<i32> = (0..d).map(|i| i as i32 % 255 - 127).collect();
+            let mut grid = vec![0.0f32; d];
+            kernels::grid_reconstruct(&mut grid, &levels, k, 127.0);
+            (acc, out, grid)
+        };
+        let (acc_s, out_s, grid_s) = run(KernelMode::Scalar);
+        let (acc_v, out_v, grid_v) = run(KernelMode::Simd);
+        for i in 0..d {
+            prop_assert!(
+                acc_s[i].to_bits() == acc_v[i].to_bits()
+                    && out_s[i].to_bits() == out_v[i].to_bits()
+                    && grid_s[i].to_bits() == grid_v[i].to_bits(),
+                "fold kernel bit mismatch at {i} (d={d}, k={k})"
+            );
+        }
+        prop_pass!()
+    });
+}
