@@ -1,0 +1,159 @@
+//! PERF/A-B: the readiness-loop transport (`--transport evloop`) vs the
+//! per-worker-thread baseline (`--transport threads`) at a leader
+//! fan-out of M=64 in-process workers under **skewed arrivals** — every
+//! feeder scrambles its per-round send order with a seeded shuffle, so
+//! uplink frames reach the leader in an order no worker-id loop
+//! predicts (the arrival pattern the readiness loop is built for).
+//!
+//! Both arms run the same seeded workload through the real
+//! [`serve_rounds_with`] pipelined engine; the A/B measures the
+//! per-run cost of the leader's downlink machinery — the threaded arm
+//! spawns, feeds and joins an M-thread writer army every run, the
+//! evloop arm one delivery loop — and **structurally asserts** the
+//! thread-count claim on `/proc/self/task`: the threaded leader's peak
+//! live-thread count grows with M while the evloop leader's stays flat
+//! (bounded by the feeder pool plus one loop thread, independent of M).
+//! Workers are driven by a fixed-size feeder pool in both arms, so the
+//! only thread-count difference under test is the leader's.
+
+use dqgan::benchutil::Bench;
+use dqgan::comm::inproc::InprocWorkerEnd;
+use dqgan::comm::{inproc_cluster, inproc_cluster_evloop, Message, MsgKind, ServerEnd, WorkerEnd};
+use dqgan::compress::{Compressor, Identity};
+use dqgan::config::AggregatorConfig;
+use dqgan::ps::{serve_rounds_with, Decoder};
+use dqgan::util::rng::Pcg32;
+use dqgan::util::threads::live_threads;
+use std::sync::Arc;
+use std::time::Duration;
+
+const M: usize = 64;
+const D: usize = 20_003;
+const ROUNDS: u64 = 3;
+const FEEDERS: usize = 8;
+/// Evloop-arm flatness bound: feeder pool + one delivery loop + slack
+/// for harness jitter. The threaded arm's floor is `base + M` writers.
+const FLAT_SLACK: usize = 4;
+
+fn identity_decoder() -> Decoder {
+    Arc::new(|bytes: &[u8], out: &mut [f32]| Identity.decode_into(bytes, out))
+}
+
+/// Drive one feeder's chunk of workers through all rounds, sending in a
+/// per-round shuffled order (the skew) and acking each broadcast as
+/// applied (a no-op on the threaded transport).
+fn drive_chunk(ends: &mut [InprocWorkerEnd], wires: &[Vec<u8>], seed: u64) {
+    let mut rng = Pcg32::new(seed);
+    for round in 0..ROUNDS {
+        let mut order: Vec<usize> = (0..ends.len()).collect();
+        rng.shuffle(&mut order);
+        for i in order {
+            let id = ends[i].id();
+            ends[i].send(Message::payload(id, round, wires[i].clone())).unwrap();
+        }
+        for end in ends.iter_mut() {
+            let b = end.recv().unwrap();
+            assert_eq!(b.round, round);
+            end.ack(round).unwrap();
+        }
+    }
+    for end in ends.iter_mut() {
+        assert_eq!(end.recv().unwrap().kind, MsgKind::Shutdown);
+    }
+}
+
+/// One full pipelined run over either transport; returns the peak live
+/// OS-thread count sampled at every round record.
+fn run_once(evloop: bool, wires: &[Vec<u8>]) -> usize {
+    let (mut server, ends, _counter): (Box<dyn ServerEnd>, _, _) = if evloop {
+        let (s, e, c) = inproc_cluster_evloop(M);
+        (Box::new(s), e, c)
+    } else {
+        let (s, e, c) = inproc_cluster(M);
+        (Box::new(s), e, c)
+    };
+    let chunk = M.div_ceil(FEEDERS);
+    let mut chunks: Vec<(Vec<InprocWorkerEnd>, Vec<Vec<u8>>)> = Vec::new();
+    let mut it = ends.into_iter().zip(wires.iter().cloned());
+    loop {
+        let c: Vec<_> = it.by_ref().take(chunk).collect();
+        if c.is_empty() {
+            break;
+        }
+        chunks.push(c.into_iter().unzip());
+    }
+    let mut peak = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(k, (mut ends, wires))| {
+                s.spawn(move || drive_chunk(&mut ends, &wires, 0xFEED + k as u64))
+            })
+            .collect();
+        serve_rounds_with(
+            &mut *server,
+            identity_decoder(),
+            D,
+            ROUNDS,
+            AggregatorConfig::pipelined_with_depth(2),
+            |_| peak = peak.max(live_threads()),
+        )
+        .unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    drop(server);
+    peak
+}
+
+fn main() {
+    let mut b = if std::env::var_os("DQGAN_BENCH_MS").is_some() {
+        Bench::new("evloop")
+    } else {
+        Bench::new("evloop").with_budget(Duration::from_millis(400), Duration::from_millis(60))
+    };
+    let mut rng = Pcg32::new(31);
+    let wires: Vec<Vec<u8>> = (0..M)
+        .map(|_| {
+            let v = rng.normal_vec(D);
+            let mut wire = Vec::new();
+            Identity.encode(&v, &mut wire);
+            wire
+        })
+        .collect();
+
+    let mut peaks = [0usize; 2]; // [threads, evloop]
+    for (arm, evloop) in [(0usize, false), (1usize, true)] {
+        let tag = if evloop { "evloop" } else { "threads" };
+        // Leader-side thread metadata: M writers vs one readiness loop.
+        b.set_threads(if evloop { 1 } else { M });
+        let wires = &wires;
+        let peak = &mut peaks[arm];
+        b.bench(&format!("fanout/run/{tag}/M={M}/d={D}"), || {
+            let p = run_once(evloop, wires);
+            *peak = (*peak).max(p);
+            p
+        });
+    }
+    let (threads_peak, evloop_peak) = (peaks[0], peaks[1]);
+    // live_threads() reads /proc/self/task — 0 on non-Linux, where the
+    // structural claim cannot be sampled and only the timing A/B runs.
+    if threads_peak > 0 {
+        println!(
+            "peak live threads per run: threaded {threads_peak}, evloop {evloop_peak} \
+             (feeders {FEEDERS}, M {M})"
+        );
+        assert!(
+            threads_peak >= M,
+            "threaded transport must show its M-wide writer army: peak {threads_peak} < {M}"
+        );
+        assert!(
+            evloop_peak <= threads_peak - M + FEEDERS + FLAT_SLACK,
+            "evloop leader thread count must be flat in M: peak {evloop_peak} \
+             vs threaded {threads_peak}"
+        );
+    }
+    b.finish();
+}

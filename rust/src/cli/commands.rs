@@ -2,7 +2,9 @@
 
 use super::args::Args;
 use crate::algo::AlgoKind;
-use crate::config::{AggMode, AggregatorConfig, KernelMode, PolicyConfig, ReduceMode};
+use crate::config::{
+    AggMode, AggregatorConfig, KernelMode, PolicyConfig, ReduceMode, TransportMode,
+};
 use crate::compress::{
     compressor_from_spec, empirical_delta, gaussian_sampler, heavy_tail_sampler,
     sparse_sampler,
@@ -67,6 +69,10 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     // schedule; the batch modes reduce at close regardless, so an
     // explicit --reduce there is ignored rather than rejected.
     let reduce = ReduceMode::parse(&args.get_or("reduce", "windowed"))?;
+    // Transport engine: one readiness-loop delivery thread (evloop,
+    // default) vs the per-worker thread army (threads, A/B baseline).
+    // Bitwise-identical broadcasts either way — CI diffs the checksums.
+    let transport = TransportMode::parse(&args.get_or("transport", "evloop"))?;
     let agg = AggregatorConfig {
         mode,
         threads: args.get_parse("agg-threads", 0usize)?,
@@ -87,14 +93,16 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         eval_every,
         keep_stats: true,
         agg,
+        transport,
     };
     crate::log_info!(
         "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr} agg={:?} \
-         reduce={:?} policy={} kernels={} ({})",
+         reduce={:?} policy={} transport={} kernels={} ({})",
         cfg.algo.label(),
         cfg.agg.mode,
         cfg.agg.reduce,
         cfg.agg.policy.label(),
+        cfg.transport.label(),
         kernels.label(),
         crate::kernels::simd_backend()
     );

@@ -48,6 +48,7 @@ USAGE:
               [--agg-threads N] [--agg-shard E] [--pipeline-depth D]
               [--reduce windowed|barrier]
               [--policy full|kofm:K|deadline:MS[,K]] [--liveness R]
+              [--transport evloop|threads]
               [--kernels simd|scalar] [--round-csv PATH]
       Train a GAN on the parameter-server runtime.
       Algorithms: dqgan[:comp] (Algorithm 2), dqgan-adam[:comp] (paper §4),
@@ -74,6 +75,12 @@ USAGE:
       8-wide lane chunks + AVX2 where it wins) or scalar (the reference
       loops). Both arms are bitwise-identical by contract — CI A/Bs the
       per-round broadcast checksums between them.
+      --transport selects the frame engine: evloop (default) drives
+      every worker connection from one readiness-loop leader thread and
+      bounds *applied* (acked) broadcasts per worker, so leader thread
+      count stays flat as workers scale; threads is the per-worker
+      reader/writer baseline kept for A/B. Both transports produce
+      bitwise-identical broadcasts — CI diffs the per-round checksums.
 
   dqgan figures --id fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all [--fast]
       Regenerate a paper figure / theory validation (CSV under results/).

@@ -49,6 +49,13 @@ struct Gates {
 struct Inner {
     held: Mutex<Gates>,
     cv: Condvar,
+    /// Callbacks invoked after every `release*`. The readiness-loop
+    /// transport registers one: a held downlink gate makes a worker
+    /// "not writable" (the delivery is parked, other workers keep
+    /// flowing), and the release poke is what re-arms the parked
+    /// delivery — the in-process analogue of a socket's write-interest
+    /// notification.
+    listeners: Mutex<Vec<Box<dyn Fn() + Send + Sync>>>,
 }
 
 /// Shared gate/permit schedule (cheaply clonable handle).
@@ -69,7 +76,26 @@ impl DelayPlan {
     pub const MAX_WAIT: Duration = Duration::from_secs(30);
 
     pub fn new() -> Self {
-        Self { inner: Arc::new(Inner { held: Mutex::new(Gates::default()), cv: Condvar::new() }) }
+        Self {
+            inner: Arc::new(Inner {
+                held: Mutex::new(Gates::default()),
+                cv: Condvar::new(),
+                listeners: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Register a callback fired after every gate release (any kind).
+    /// Used by the readiness-loop transport to re-check deliveries it
+    /// parked behind a held downlink gate.
+    pub(crate) fn on_release(&self, f: Box<dyn Fn() + Send + Sync>) {
+        self.inner.listeners.lock().unwrap().push(f);
+    }
+
+    fn poke_listeners(&self) {
+        for f in self.inner.listeners.lock().unwrap().iter() {
+            f();
+        }
     }
 
     /// Gate worker `worker`'s round-`round` payload send until released.
@@ -81,6 +107,7 @@ impl DelayPlan {
     pub fn release(&self, worker: u32, round: u64) {
         self.inner.held.lock().unwrap().up.remove(&(worker, round));
         self.inner.cv.notify_all();
+        self.poke_listeners();
     }
 
     /// Gate the delivery of round-`round` broadcast frames to worker
@@ -93,6 +120,7 @@ impl DelayPlan {
     pub fn release_down(&self, worker: u32, round: u64) {
         self.inner.held.lock().unwrap().down.remove(&(worker, round));
         self.inner.cv.notify_all();
+        self.poke_listeners();
     }
 
     /// Open every gate, uplink and downlink (teardown safety for
@@ -103,6 +131,7 @@ impl DelayPlan {
         gates.down.clear();
         drop(gates);
         self.inner.cv.notify_all();
+        self.poke_listeners();
     }
 
     /// Whether `(worker, round)` is currently uplink-gated — the

@@ -1,0 +1,450 @@
+//! Readiness-loop building blocks: a raw-`poll(2)` shim, a pipe-pair
+//! waker, the nonblocking outbound ring buffer, and the ack ledger for
+//! applied-broadcast flow control.
+//!
+//! One leader thread drives *all* worker connections (see
+//! `comm/tcp.rs::TcpEvloopServerEnd`): sockets are nonblocking, `poll`
+//! reports which are readable/writable, reads feed the incremental
+//! [`FrameAssembler`](super::message::FrameAssembler) and writes drain
+//! per-worker [`OutRing`]s. That replaces the two-threads-per-worker
+//! armies (uplink readers + downlink writers) with O(1) leader threads
+//! in M — the property that makes M ≈ 4096 workable at all.
+//!
+//! The shim is deliberately tiny and dependency-free: the `libc` crate
+//! is not in the build (docs/adr/003-readiness-loop-shim.md — the same
+//! no-new-deps stance ADR-002 took for JSON), so `poll` and its
+//! `pollfd` struct are declared directly against the platform C ABI.
+
+use super::message::Message;
+use super::PendingDelivery;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// `struct pollfd` from `<poll.h>` (identical layout on every unix libc).
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub(crate) struct PollFd {
+    pub(crate) fd: std::os::raw::c_int,
+    pub(crate) events: i16,
+    pub(crate) revents: i16,
+}
+
+pub(crate) const POLLIN: i16 = 0x001;
+pub(crate) const POLLOUT: i16 = 0x004;
+pub(crate) const POLLERR: i16 = 0x008;
+pub(crate) const POLLHUP: i16 = 0x010;
+
+#[cfg(unix)]
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: std::ffi::c_ulong, timeout: std::os::raw::c_int) -> i32;
+}
+
+/// Block until at least one fd in `fds` is ready (or `timeout_ms`
+/// passes; -1 blocks indefinitely). Retries on EINTR; `revents` fields
+/// are filled in place. Returns the number of ready fds.
+#[cfg(unix)]
+pub(crate) fn poll_ready(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as std::ffi::c_ulong, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() != std::io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// Cross-thread wakeup for a thread parked in [`poll_ready`]: a
+/// socketpair where the read end sits in the poll set and [`Waker::wake`]
+/// makes it readable (the classic self-pipe trick, over
+/// `UnixStream::pair` so no raw `pipe(2)` FFI is needed).
+#[cfg(unix)]
+pub(crate) struct Waker {
+    tx: std::os::unix::net::UnixStream,
+}
+
+#[cfg(unix)]
+impl Waker {
+    /// Returns the wake handle and the nonblocking read end to register
+    /// with the poll set.
+    pub(crate) fn pair() -> std::io::Result<(Self, std::os::unix::net::UnixStream)> {
+        let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((Self { tx }, rx))
+    }
+
+    /// Make the read end readable. Idempotent while a wake is pending
+    /// (a full pipe means the loop is already due to wake) and silent
+    /// once the loop has exited (broken pipe).
+    pub(crate) fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// Drain every pending wake byte (called by the loop when the waker's
+/// read end polls readable).
+#[cfg(unix)]
+pub(crate) fn drain_waker(rx: &mut std::os::unix::net::UnixStream) {
+    let mut buf = [0u8; 64];
+    while matches!(rx.read(&mut buf), Ok(n) if n > 0) {}
+}
+
+/// Per-connection outbound ring: queued wire frames plus a cursor into
+/// the front frame, so a partial write (short `write`/`WouldBlock` on a
+/// full socket buffer) resumes exactly where it stopped. Frames are
+/// shared (`Arc`) across the per-worker rings — one encode per
+/// broadcast, M rings referencing it.
+#[derive(Default)]
+pub(crate) struct OutRing {
+    queue: VecDeque<(Arc<Vec<u8>>, PendingDelivery)>,
+    /// Bytes of the front frame already written.
+    cursor: usize,
+}
+
+impl OutRing {
+    pub(crate) fn push(&mut self, wire: Arc<Vec<u8>>, pd: PendingDelivery) {
+        self.queue.push_back((wire, pd));
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Write as much queued data as `sink` accepts right now.
+    /// `on_frame(wire_len)` fires once per *fully written* frame (the
+    /// byte-accounting hook — identical timing to the threaded writer,
+    /// which counted on `write_frame` completion). `WouldBlock` is a
+    /// clean stop (re-armed via write-interest); every other error is
+    /// returned to the caller, which fails the connection.
+    pub(crate) fn pump<W: Write>(
+        &mut self,
+        sink: &mut W,
+        mut on_frame: impl FnMut(usize),
+    ) -> std::io::Result<()> {
+        while let Some((wire, _)) = self.queue.front() {
+            let remaining = &wire[self.cursor..];
+            match sink.write(remaining) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ))
+                }
+                Ok(n) => {
+                    self.cursor += n;
+                    if self.cursor == wire.len() {
+                        let (wire, pd) = self.queue.pop_front().expect("front exists");
+                        self.cursor = 0;
+                        on_frame(wire.len());
+                        pd.delivered();
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Fail every queued delivery (sticky connection failure): the
+    /// handles complete with `what` instead of hanging.
+    pub(crate) fn fail_all(&mut self, what: &str) {
+        self.cursor = 0;
+        for (_, pd) in self.queue.drain(..) {
+            pd.failed(what);
+        }
+    }
+}
+
+/// Applied-broadcast flow control: one inflight count per worker,
+/// incremented when a broadcast is queued for that worker and
+/// decremented when its [`MsgKind::Ack`](super::MsgKind::Ack) frame
+/// arrives. `--pipeline-depth` thereby bounds broadcasts a worker has
+/// *received-but-not-applied* — the quantity the Lemma-1 staleness bound
+/// constrains — rather than merely the frames written into its socket,
+/// which a deep kernel buffer would happily absorb.
+pub(crate) struct AckLedger {
+    state: Mutex<LedgerState>,
+    cv: Condvar,
+}
+
+struct LedgerState {
+    inflight: Vec<usize>,
+    dead: Vec<bool>,
+}
+
+impl AckLedger {
+    /// Upper bound a depth-charge will wait for acks before erroring —
+    /// a worker that stopped acking becomes a loud failure, not a hang.
+    pub(crate) const MAX_WAIT: Duration = Duration::from_secs(30);
+
+    pub(crate) fn new(workers: usize) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(LedgerState {
+                inflight: vec![0; workers],
+                dead: vec![false; workers],
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Charge one queued broadcast to every live worker if *all* of them
+    /// are under `depth`; returns whether the charge was taken.
+    pub(crate) fn try_charge(&self, depth: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if Self::over(&st, depth).is_some() {
+            return false;
+        }
+        for (n, dead) in st.inflight.iter_mut().zip(&st.dead) {
+            if !dead {
+                *n += 1;
+            }
+        }
+        true
+    }
+
+    /// Blocking [`Self::try_charge`]: waits (bounded by
+    /// [`Self::MAX_WAIT`]) for acks to bring every live worker under
+    /// `depth`. Only safe when acks are consumed by *another* thread
+    /// (the TCP readiness loop); the in-process leader pops its own
+    /// uplink channel instead, so it loops `try_charge` by hand.
+    pub(crate) fn charge(&self, depth: usize) -> anyhow::Result<()> {
+        let start = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        while let Some(w) = Self::over(&st, depth) {
+            let elapsed = start.elapsed();
+            if elapsed >= Self::MAX_WAIT {
+                anyhow::bail!(
+                    "pipeline-depth backpressure stalled: worker {w} has {} unapplied \
+                     broadcasts (depth {depth}) after {:?} — worker stopped acking?",
+                    st.inflight[w],
+                    Self::MAX_WAIT
+                );
+            }
+            let (guard, _) = self.cv.wait_timeout(st, Self::MAX_WAIT - elapsed).unwrap();
+            st = guard;
+        }
+        for (n, dead) in st.inflight.iter_mut().zip(&st.dead) {
+            if !dead {
+                *n += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// A worker acked (applied) one broadcast.
+    pub(crate) fn on_ack(&self, worker: u32) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(n) = st.inflight.get_mut(worker as usize) {
+            *n = n.saturating_sub(1);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Stop charging (and waiting on) a failed worker.
+    pub(crate) fn mark_dead(&self, worker: u32) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(d) = st.dead.get_mut(worker as usize) {
+            *d = true;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Unapplied-broadcast count for `worker` (structural test hook).
+    pub(crate) fn inflight(&self, worker: u32) -> usize {
+        self.state.lock().unwrap().inflight[worker as usize]
+    }
+
+    /// First live worker at or over `depth`, if any.
+    fn over(st: &LedgerState, depth: usize) -> Option<usize> {
+        st.inflight
+            .iter()
+            .zip(&st.dead)
+            .position(|(&n, &dead)| !dead && n >= depth)
+    }
+}
+
+/// Build the wire bytes of one frame under the TCP framing
+/// (`[frame_len:u32 LE][frame]`) — the unit an [`OutRing`] queues.
+pub(crate) fn wire_frame(msg: &Message) -> Vec<u8> {
+    let frame = msg.encode();
+    let mut wire = Vec::with_capacity(4 + frame.len());
+    wire.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+    wire.extend_from_slice(&frame);
+    wire
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::message::FrameAssembler;
+    use super::super::BroadcastHandle;
+    use super::*;
+
+    /// A sink that accepts at most `grant` bytes per call, then reports
+    /// `WouldBlock` — a scripted nonblocking socket with a tiny buffer.
+    struct TrickleSink {
+        accepted: Vec<u8>,
+        grant: usize,
+        starve: bool,
+    }
+
+    impl Write for TrickleSink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.starve {
+                self.starve = false;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            let n = buf.len().min(self.grant);
+            self.accepted.extend_from_slice(&buf[..n]);
+            self.starve = true;
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn out_ring_partial_writes_reassemble_byte_identically() {
+        // Satellite-4 property test, write half: frames leave the ring
+        // in 1..=7-byte grants with a WouldBlock between every grant, and
+        // the receiving FrameAssembler must reproduce them byte-for-byte
+        // with exact per-frame accounting totals.
+        let msgs = [
+            Message::broadcast(0, (0..23u8).collect()),
+            Message::shutdown(1),
+            Message::payload(4, 2, vec![0xEE; 41]),
+        ];
+        for grant in 1..=7usize {
+            let mut ring = OutRing::default();
+            let handle = BroadcastHandle::new(msgs.len());
+            let mut queued = 0usize;
+            for m in &msgs {
+                let wire = Arc::new(wire_frame(m));
+                queued += wire.len();
+                ring.push(wire, PendingDelivery::new(handle.clone()));
+            }
+            let mut sink = TrickleSink { accepted: Vec::new(), grant, starve: false };
+            let mut counted = 0usize;
+            let mut pumps = 0usize;
+            while !ring.is_empty() {
+                ring.pump(&mut sink, |n| counted += n).unwrap();
+                pumps += 1;
+                assert!(pumps < 10_000, "pump must make progress (grant {grant})");
+            }
+            assert_eq!(counted, queued, "exact counter totals (grant {grant})");
+            handle.wait().unwrap();
+            // Read half: reassemble from the exact bytes the sink took.
+            let mut asm = FrameAssembler::new();
+            let mut out = Vec::new();
+            for chunk in sink.accepted.chunks(grant) {
+                asm.push(chunk, &mut out).unwrap();
+            }
+            asm.finish().unwrap();
+            assert_eq!(out, msgs.to_vec(), "byte-identical reassembly (grant {grant})");
+        }
+    }
+
+    #[test]
+    fn out_ring_fail_all_completes_every_handle() {
+        let mut ring = OutRing::default();
+        let handle = BroadcastHandle::new(2);
+        ring.push(Arc::new(wire_frame(&Message::shutdown(0))), PendingDelivery::new(handle.clone()));
+        ring.push(Arc::new(wire_frame(&Message::shutdown(1))), PendingDelivery::new(handle.clone()));
+        ring.fail_all("worker 3 socket failed: boom");
+        let err = handle.wait().unwrap_err();
+        assert!(err.to_string().contains("worker 3"), "{err}");
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn out_ring_surfaces_write_errors() {
+        struct FailSink;
+        impl Write for FailSink {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::ErrorKind::BrokenPipe.into())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut ring = OutRing::default();
+        let handle = BroadcastHandle::new(1);
+        ring.push(Arc::new(wire_frame(&Message::shutdown(0))), PendingDelivery::new(handle.clone()));
+        let err = ring.pump(&mut FailSink, |_| {}).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+        // The caller fails the connection; the queued delivery is still
+        // pending until then.
+        ring.fail_all("worker 0 socket failed: broken pipe");
+        assert!(handle.wait().is_err());
+    }
+
+    #[test]
+    fn ack_ledger_bounds_applied_broadcasts() {
+        let ledger = AckLedger::new(2);
+        assert!(ledger.try_charge(2));
+        assert!(ledger.try_charge(2));
+        // Both workers now hold 2 unapplied broadcasts: depth reached.
+        assert!(!ledger.try_charge(2));
+        assert_eq!(ledger.inflight(0), 2);
+        ledger.on_ack(0);
+        // Worker 1 still at depth — the bound is per-worker, all must clear.
+        assert!(!ledger.try_charge(2));
+        ledger.on_ack(1);
+        assert!(ledger.try_charge(2));
+    }
+
+    #[test]
+    fn ack_ledger_blocking_charge_wakes_on_ack() {
+        let ledger = AckLedger::new(1);
+        assert!(ledger.try_charge(1));
+        let l2 = Arc::clone(&ledger);
+        let t = std::thread::spawn(move || l2.charge(1));
+        // The acker lives on another thread — exactly the TCP shape
+        // (the readiness loop consumes acks, the leader blocks here).
+        ledger.on_ack(0);
+        t.join().unwrap().unwrap();
+        assert_eq!(ledger.inflight(0), 1);
+    }
+
+    #[test]
+    fn ack_ledger_skips_dead_workers() {
+        let ledger = AckLedger::new(2);
+        assert!(ledger.try_charge(1));
+        // Worker 1 never acks but dies: it must stop gating the pipeline.
+        assert!(!ledger.try_charge(1));
+        ledger.mark_dead(1);
+        ledger.on_ack(0);
+        assert!(ledger.try_charge(1));
+        // Dead workers are no longer charged either.
+        assert_eq!(ledger.inflight(1), 1);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn waker_wakes_a_polling_thread() {
+        use std::os::fd::AsRawFd;
+        let (waker, mut rx) = Waker::pair().unwrap();
+        let fd = rx.as_raw_fd();
+        let t = std::thread::spawn(move || {
+            let mut fds = [PollFd { fd, events: POLLIN, revents: 0 }];
+            let n = poll_ready(&mut fds, -1).unwrap();
+            assert_eq!(n, 1);
+            assert!(fds[0].revents & POLLIN != 0);
+        });
+        waker.wake();
+        t.join().unwrap();
+        drain_waker(&mut rx);
+        // Drained: a zero-timeout poll reports nothing ready.
+        let mut fds = [PollFd { fd: rx.as_raw_fd(), events: POLLIN, revents: 0 }];
+        assert_eq!(poll_ready(&mut fds, 0).unwrap(), 0);
+    }
+}

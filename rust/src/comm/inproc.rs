@@ -4,14 +4,16 @@
 //! frame sizes so accounting matches the TCP path exactly.
 
 use super::delay::DelayPlan;
+use super::evloop::AckLedger;
 use super::message::{Message, MsgKind};
 use super::{
-    validate_round_batch, ArrivalSet, BroadcastHandle, ByteCounter, ServerEnd, StreamDirective,
-    StreamOutcome, WorkerEnd, WriterPool,
+    validate_round_batch, ArrivalSet, BroadcastHandle, ByteCounter, PendingDelivery, ServerEnd,
+    StreamDirective, StreamOutcome, WorkerEnd, WriterPool,
 };
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Worker side of the in-process transport.
 pub struct InprocWorkerEnd {
@@ -22,6 +24,11 @@ pub struct InprocWorkerEnd {
     /// Straggler-injection schedule (tests/benches only; `None` in
     /// production clusters).
     plan: Option<DelayPlan>,
+    /// Whether [`WorkerEnd::ack`] emits an `Ack` control frame up the
+    /// shared channel. Enabled by the evloop constructors only: the
+    /// threaded [`InprocServerEnd`] has no ack demux, so acks toward it
+    /// would corrupt its gathers.
+    send_acks: bool,
 }
 
 impl WorkerEnd for InprocWorkerEnd {
@@ -40,6 +47,18 @@ impl WorkerEnd for InprocWorkerEnd {
     fn recv(&mut self) -> anyhow::Result<Message> {
         let msg = self.from_server.recv().map_err(|_| anyhow::anyhow!("server hung up"))?;
         Ok(msg)
+    }
+
+    fn ack(&mut self, round: u64) -> anyhow::Result<()> {
+        if !self.send_acks {
+            return Ok(());
+        }
+        let msg = Message::ack(self.id, round);
+        // One shared counter per in-process cluster, so ack frames are
+        // counted once, at the sending end — in the ctrl plane, keeping
+        // up/down identical to the threaded transport's totals.
+        self.counter.add_ctrl(msg.frame_len());
+        self.to_server.send(msg).map_err(|_| anyhow::anyhow!("server hung up"))
     }
 
     fn id(&self) -> u32 {
@@ -234,6 +253,7 @@ fn build_cluster(
             from_server: down_rx,
             counter: Arc::clone(&counter),
             plan: plan.clone(),
+            send_acks: false,
         });
     }
     let server = InprocServerEnd {
@@ -243,6 +263,378 @@ fn build_cluster(
         plan,
         pipeline_depth: 2,
         writers: None,
+    };
+    (server, worker_ends, counter)
+}
+
+/// One event for the in-process delivery thread.
+enum Ev {
+    /// Deliver `msg` to `worker`, completing `pd` when it lands (or
+    /// parking it while the worker's downlink gate is held).
+    Deliver { worker: usize, msg: Message, pd: PendingDelivery },
+    /// A [`DelayPlan`] gate was released somewhere: re-scan parked
+    /// queues. (Sent by the plan's release listener.)
+    Poke,
+    /// Leader dropped: drain parked frames (waiting out their gates),
+    /// then exit. Always the leader's last event, so every `Deliver`
+    /// queued before it is processed first.
+    Shutdown,
+}
+
+/// Body of the single `dqgan-inproc-evloop` delivery thread — the
+/// in-process analogue of the TCP readiness loop's write side. One
+/// thread serves every worker's downlink: a held [`DelayPlan`] downlink
+/// gate *parks* that worker's frames (per-worker FIFO) instead of
+/// blocking the thread, so a gated worker never head-of-line blocks its
+/// peers; the plan's release listener pokes the thread to re-scan.
+fn run_inproc_downlink(
+    rx: Receiver<Ev>,
+    to_workers: Vec<Sender<Message>>,
+    plan: Option<DelayPlan>,
+    counter: Arc<ByteCounter>,
+    ledger: Arc<AckLedger>,
+    first_error: Arc<Mutex<Option<String>>>,
+) {
+    let m = to_workers.len();
+    let mut parked: Vec<VecDeque<(Message, PendingDelivery)>> =
+        (0..m).map(|_| VecDeque::new()).collect();
+    let mut failed: Vec<Option<String>> = (0..m).map(|_| None).collect();
+    let deliver_now = |w: usize, msg: Message, pd: PendingDelivery,
+                       failed: &mut Vec<Option<String>>| {
+        if let Some(what) = &failed[w] {
+            pd.failed(what);
+            return;
+        }
+        let n = msg.frame_len();
+        if to_workers[w].send(msg).is_err() {
+            // Sticky per-worker failure, naming the worker — the same
+            // contract the TCP loop's fail_conn keeps.
+            let what = format!("worker {w} hung up");
+            let mut g = first_error.lock().unwrap();
+            if g.is_none() {
+                *g = Some(what.clone());
+            }
+            drop(g);
+            ledger.mark_dead(w as u32);
+            pd.failed(&what);
+            failed[w] = Some(what);
+            return;
+        }
+        counter.add_down(n);
+        pd.delivered();
+    };
+    let held = |w: usize, round: u64| {
+        plan.as_ref().is_some_and(|p| p.is_held_down(w as u32, round))
+    };
+    loop {
+        match rx.recv() {
+            Ok(Ev::Deliver { worker: w, msg, pd }) => {
+                // Per-worker FIFO: anything already parked goes first.
+                if !parked[w].is_empty() || held(w, msg.round) {
+                    parked[w].push_back((msg, pd));
+                } else {
+                    deliver_now(w, msg, pd, &mut failed);
+                }
+            }
+            Ok(Ev::Poke) => {}
+            Ok(Ev::Shutdown) | Err(_) => break,
+        }
+        // Pump every parked queue whose head gate has opened.
+        for w in 0..m {
+            while parked[w].front().is_some_and(|(msg, _)| !held(w, msg.round)) {
+                let (msg, pd) = parked[w].pop_front().unwrap();
+                deliver_now(w, msg, pd, &mut failed);
+            }
+        }
+    }
+    // Teardown: deliver every still-parked frame, now waiting each gate
+    // out on this thread (the plan's bounded blocking wait, so a test
+    // that forgets a release still fails loudly) — "drop drains queued
+    // broadcasts" holds under gates too.
+    for w in 0..m {
+        while let Some((msg, pd)) = parked[w].pop_front() {
+            if let Some(p) = &plan {
+                p.wait_down(w as u32, msg.round);
+            }
+            deliver_now(w, msg, pd, &mut failed);
+        }
+    }
+}
+
+/// Server side of the in-process transport, readiness-loop flavor: one
+/// eager `dqgan-inproc-evloop` delivery thread replaces the per-worker
+/// [`WriterPool`] army, and `--pipeline-depth` bounds *applied* (acked)
+/// broadcasts per worker via the shared [`AckLedger`] instead of written
+/// ones. The uplink channel carries data frames and `Ack` control frames
+/// interleaved; the leader demuxes on pop, so acks never reach a gather.
+pub struct InprocEvloopServerEnd {
+    from_workers: Receiver<Message>,
+    m: usize,
+    counter: Arc<ByteCounter>,
+    ledger: Arc<AckLedger>,
+    /// Data frames popped while draining acks during a charge: the next
+    /// gather consumes these before touching the channel again.
+    pending: VecDeque<Message>,
+    down_tx: Option<Sender<Ev>>,
+    first_error: Arc<Mutex<Option<String>>>,
+    pipeline_depth: usize,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl InprocEvloopServerEnd {
+    /// Demux one popped uplink frame: acks feed the ledger, data frames
+    /// are stashed for the next gather.
+    fn stash_or_ack(&mut self, msg: Message) {
+        if msg.kind == MsgKind::Ack {
+            self.ledger.on_ack(msg.worker);
+        } else {
+            self.pending.push_back(msg);
+        }
+    }
+
+    /// Next data frame in arrival order (acks filtered into the ledger).
+    fn next_uplink(&mut self) -> anyhow::Result<Message> {
+        loop {
+            if let Some(msg) = self.pending.pop_front() {
+                return Ok(msg);
+            }
+            let msg =
+                self.from_workers.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
+            if msg.kind == MsgKind::Ack {
+                self.ledger.on_ack(msg.worker);
+                continue;
+            }
+            return Ok(msg);
+        }
+    }
+
+    /// Charge one broadcast against every live worker's unapplied count.
+    /// Unlike the TCP loop — where a separate thread consumes acks and
+    /// the blocking [`AckLedger::charge`] suffices — the in-process
+    /// leader owns the uplink channel, so it must pop acks *itself*
+    /// while waiting: a blocking charge would deadlock against acks
+    /// sitting unread in its own channel.
+    fn charge_inproc(&mut self) -> anyhow::Result<()> {
+        let start = Instant::now();
+        loop {
+            if self.ledger.try_charge(self.pipeline_depth) {
+                return Ok(());
+            }
+            if start.elapsed() >= AckLedger::MAX_WAIT {
+                let w = (0..self.m)
+                    .find(|&w| self.ledger.inflight(w as u32) >= self.pipeline_depth)
+                    .unwrap_or(0);
+                anyhow::bail!(
+                    "pipeline-depth backpressure stalled: worker {w} has {} unapplied \
+                     broadcasts (depth {}) after {:?} — worker stopped acking?",
+                    self.ledger.inflight(w as u32),
+                    self.pipeline_depth,
+                    AckLedger::MAX_WAIT
+                );
+            }
+            match self.from_workers.recv_timeout(Duration::from_millis(100)) {
+                Ok(msg) => self.stash_or_ack(msg),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("workers hung up"),
+            }
+        }
+    }
+}
+
+impl ServerEnd for InprocEvloopServerEnd {
+    fn recv_round(&mut self) -> anyhow::Result<Vec<Message>> {
+        let mut msgs = Vec::with_capacity(self.m);
+        for _ in 0..self.m {
+            let msg = self.next_uplink()?;
+            if msg.kind == MsgKind::WorkerError {
+                // Fail before waiting on the rest of the barrier — the
+                // erroring worker's peers may be blocked behind it.
+                validate_round_batch(std::slice::from_ref(&msg))?;
+            }
+            msgs.push(msg);
+        }
+        msgs.sort_by_key(|m| m.worker);
+        validate_round_batch(&msgs)?;
+        Ok(msgs)
+    }
+
+    fn recv_round_streaming(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        let mut arrivals = ArrivalSet::new(self.m);
+        for _ in 0..self.m {
+            let msg = self.next_uplink()?;
+            arrivals.admit(&msg)?;
+            on_msg(msg)?;
+        }
+        Ok(())
+    }
+
+    fn recv_round_streaming_timed(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<StreamDirective>,
+    ) -> anyhow::Result<StreamOutcome> {
+        let pending = &mut self.pending;
+        let from_workers = &self.from_workers;
+        let ledger = &self.ledger;
+        super::drive_timed_stream(
+            &mut |deadline| loop {
+                if let Some(msg) = pending.pop_front() {
+                    return Ok(Some(msg));
+                }
+                let msg = match deadline {
+                    None => from_workers
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("workers hung up"))?,
+                    Some(dl) => {
+                        let left = dl.saturating_duration_since(Instant::now());
+                        match from_workers.recv_timeout(left) {
+                            Ok(msg) => msg,
+                            Err(RecvTimeoutError::Timeout) => return Ok(None),
+                            Err(RecvTimeoutError::Disconnected) => {
+                                anyhow::bail!("workers hung up")
+                            }
+                        }
+                    }
+                };
+                if msg.kind == MsgKind::Ack {
+                    ledger.on_ack(msg.worker);
+                    continue;
+                }
+                return Ok(Some(msg));
+            },
+            on_msg,
+        )
+    }
+
+    fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
+        // The delivery thread owns the downlink: queue through it, then
+        // wait until every delivery is out — the synchronous contract,
+        // with a sticky worker failure surfacing here via the handle.
+        self.broadcast_async(msg)?.wait()
+    }
+
+    fn broadcast_async(&mut self, msg: Message) -> anyhow::Result<BroadcastHandle> {
+        if let Some(e) = self.first_error.lock().unwrap().clone() {
+            anyhow::bail!("async broadcast failed: {e}");
+        }
+        // Applied-broadcast flow control: data broadcasts charge the
+        // ledger; Shutdown is control flow and never acked.
+        if matches!(msg.kind, MsgKind::Broadcast | MsgKind::PartialBroadcast) {
+            self.charge_inproc()?;
+        }
+        let handle = BroadcastHandle::new(self.m);
+        let tx = self.down_tx.as_ref().expect("delivery channel alive until drop");
+        for w in 0..self.m {
+            tx.send(Ev::Deliver {
+                worker: w,
+                msg: msg.clone(),
+                pd: PendingDelivery::new(handle.clone()),
+            })
+            .map_err(|_| anyhow::anyhow!("delivery thread exited"))?;
+        }
+        Ok(handle)
+    }
+
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        // Charged per-broadcast, so the depth is adjustable at any time.
+        self.pipeline_depth = depth.max(1);
+    }
+
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+impl Drop for InprocEvloopServerEnd {
+    fn drop(&mut self) {
+        // An explicit Shutdown event (not a channel disconnect: the
+        // plan's release listener may hold a sender clone) — the thread
+        // processes every Deliver queued before it, then drains parked
+        // frames, so a queued trailing Shutdown frame still lands.
+        if let Some(tx) = self.down_tx.take() {
+            let _ = tx.send(Ev::Shutdown);
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// [`inproc_cluster`], readiness-loop flavor: same worker ends (now
+/// acking applied broadcasts), one delivery thread instead of a
+/// per-worker writer army, ack-based `--pipeline-depth` flow control.
+pub fn inproc_cluster_evloop(
+    m: usize,
+) -> (InprocEvloopServerEnd, Vec<InprocWorkerEnd>, Arc<ByteCounter>) {
+    build_cluster_evloop(m, None)
+}
+
+/// [`inproc_cluster_evloop`] with a [`DelayPlan`] attached: uplink gates
+/// block payload sends as usual; *downlink* gates park frames inside the
+/// delivery thread (no cross-worker head-of-line blocking), and gate
+/// releases poke it to re-scan.
+pub fn inproc_cluster_evloop_with_plan(
+    m: usize,
+    plan: DelayPlan,
+) -> (InprocEvloopServerEnd, Vec<InprocWorkerEnd>, Arc<ByteCounter>) {
+    build_cluster_evloop(m, Some(plan))
+}
+
+fn build_cluster_evloop(
+    m: usize,
+    plan: Option<DelayPlan>,
+) -> (InprocEvloopServerEnd, Vec<InprocWorkerEnd>, Arc<ByteCounter>) {
+    assert!(m > 0);
+    let counter = ByteCounter::new();
+    let (up_tx, up_rx) = channel::<Message>();
+    let mut worker_ends = Vec::with_capacity(m);
+    let mut down_txs = Vec::with_capacity(m);
+    for id in 0..m {
+        let (down_tx, down_rx) = channel::<Message>();
+        down_txs.push(down_tx);
+        worker_ends.push(InprocWorkerEnd {
+            id: id as u32,
+            to_server: up_tx.clone(),
+            from_server: down_rx,
+            counter: Arc::clone(&counter),
+            plan: plan.clone(),
+            send_acks: true,
+        });
+    }
+    let ledger = AckLedger::new(m);
+    let first_error = Arc::new(Mutex::new(None));
+    let (ev_tx, ev_rx) = channel::<Ev>();
+    if let Some(p) = &plan {
+        // Gate releases poke the delivery thread so parked frames move
+        // the moment their gate opens — no polling, no sleeps.
+        let tx = ev_tx.clone();
+        p.on_release(Box::new(move || {
+            let _ = tx.send(Ev::Poke);
+        }));
+    }
+    let thread = {
+        let counter = Arc::clone(&counter);
+        let ledger = Arc::clone(&ledger);
+        let first_error = Arc::clone(&first_error);
+        std::thread::Builder::new()
+            .name("dqgan-inproc-evloop".into())
+            .spawn(move || {
+                run_inproc_downlink(ev_rx, down_txs, plan, counter, ledger, first_error)
+            })
+            .expect("spawn dqgan-inproc-evloop")
+    };
+    let server = InprocEvloopServerEnd {
+        from_workers: up_rx,
+        m,
+        counter: Arc::clone(&counter),
+        ledger,
+        pending: VecDeque::new(),
+        down_tx: Some(ev_tx),
+        first_error,
+        pipeline_depth: 2,
+        thread: Some(thread),
     };
     (server, worker_ends, counter)
 }
@@ -490,5 +882,145 @@ mod tests {
         workers[1].send(Message::payload(1, 1, vec![])).unwrap();
         let err = server.recv_round().unwrap_err();
         assert!(err.to_string().contains("mixed rounds"), "{err}");
+    }
+
+    #[test]
+    fn evloop_round_trip_matches_threaded_byte_accounting() {
+        // Same exchange as `round_trip_with_threads`, over the evloop
+        // cluster: identical up/down totals (the shared counter counts
+        // frame_len once per frame, exactly like the threaded path),
+        // with the per-broadcast acks isolated in the ctrl counter.
+        let m = 3;
+        let (mut server, workers, counter) = inproc_cluster_evloop(m);
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|mut w| {
+                std::thread::spawn(move || {
+                    let id = w.id();
+                    w.send(Message::payload(id, 0, vec![id as u8; 8])).unwrap();
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.kind, MsgKind::Broadcast);
+                    w.ack(b.round).unwrap();
+                    b.payload[0]
+                })
+            })
+            .collect();
+        let msgs = server.recv_round().unwrap();
+        assert_eq!(msgs.len(), m);
+        assert_eq!(msgs[2].payload, vec![2u8; 8]);
+        server.broadcast(Message::broadcast(0, vec![42])).unwrap();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 42);
+        }
+        let up = m as u64 * Message::payload(0, 0, vec![0; 8]).frame_len() as u64;
+        let down = m as u64 * Message::broadcast(0, vec![42]).frame_len() as u64;
+        let ctrl = m as u64 * Message::ack(0, 0).frame_len() as u64;
+        assert_eq!(counter.up_total(), up, "uplink = threaded constant");
+        assert_eq!(counter.down_total(), down, "downlink = threaded constant");
+        assert_eq!(counter.ctrl_total(), ctrl, "acks live in the ctrl plane");
+    }
+
+    #[test]
+    fn evloop_acks_are_demuxed_out_of_gathers() {
+        // Acks share the uplink channel with data frames; the leader's
+        // demux must feed them to the ledger, never to a gather.
+        let (mut server, mut workers, counter) = inproc_cluster_evloop(2);
+        workers[0].ack(7).unwrap(); // stray ack ahead of the round
+        workers[0].send(Message::payload(0, 0, vec![1])).unwrap();
+        workers[1].send(Message::payload(1, 0, vec![2])).unwrap();
+        let msgs = server.recv_round().unwrap();
+        assert_eq!(msgs.len(), 2);
+        assert!(msgs.iter().all(|m| m.kind == MsgKind::Payload));
+        assert_eq!(counter.ctrl_total(), Message::ack(0, 7).frame_len() as u64);
+    }
+
+    #[test]
+    fn evloop_downlink_gate_parks_only_the_gated_worker() {
+        // The evloop analogue of the per-writer gate test: worker 1's
+        // delivery is *parked* inside the single delivery thread, so
+        // worker 0 still gets its frame at once, and the release's poke
+        // moves the parked frame without any polling.
+        let plan = DelayPlan::new();
+        plan.hold_down(1, 0);
+        let (mut server, mut workers, _) = inproc_cluster_evloop_with_plan(2, plan.clone());
+        let h = server.broadcast_async(Message::broadcast(0, vec![9])).unwrap();
+        assert_eq!(workers[0].recv().unwrap().payload, vec![9]);
+        assert!(plan.is_held_down(1, 0));
+        assert!(!h.is_done());
+        plan.release_down(1, 0);
+        h.wait().unwrap();
+        assert_eq!(workers[1].recv().unwrap().payload, vec![9]);
+    }
+
+    #[test]
+    fn evloop_drop_drains_queued_and_parked_broadcasts() {
+        // Drop must deliver everything still queued — including frames
+        // parked behind a held downlink gate, which teardown waits out
+        // on the delivery thread (bounded by the plan's MAX_WAIT).
+        let plan = DelayPlan::new();
+        plan.hold_down(0, 0);
+        let (mut server, mut workers, _) = inproc_cluster_evloop_with_plan(1, plan.clone());
+        let h = server.broadcast_async(Message::broadcast(0, vec![3])).unwrap();
+        server.broadcast_async(Message::shutdown(1)).unwrap();
+        assert!(!h.is_done(), "frame is gate-parked, not delivered");
+        let t = std::thread::spawn(move || drop(server));
+        assert!(plan.is_held_down(0, 0));
+        plan.release_down(0, 0);
+        t.join().unwrap();
+        h.wait().unwrap();
+        assert_eq!(workers[0].recv().unwrap().payload, vec![3]);
+        assert_eq!(workers[0].recv().unwrap().kind, MsgKind::Shutdown);
+    }
+
+    #[test]
+    fn evloop_sticky_failure_names_worker_on_both_broadcast_paths() {
+        // Satellite-3 regression, in-process flavor: a hung-up worker
+        // surfaces with its id through the BroadcastHandle AND the next
+        // synchronous broadcast.
+        let (mut server, mut workers, _) = inproc_cluster_evloop(2);
+        drop(workers.remove(1));
+        let h = server.broadcast_async(Message::broadcast(0, vec![1])).unwrap();
+        let err = h.wait().expect_err("delivery to a dropped worker must fail");
+        let text = format!("{err:#}");
+        assert!(text.contains("broadcast delivery failed"), "got: {text}");
+        assert!(text.contains("worker 1 hung up"), "must name the worker: {text}");
+        let err = server
+            .broadcast(Message::broadcast(1, vec![2]))
+            .expect_err("sticky failure must surface on the sync path");
+        let text = format!("{err:#}");
+        assert!(text.contains("worker 1 hung up"), "got: {text}");
+        // Worker 0 still received the first frame (its delivery isn't
+        // hostage to its dead peer).
+        assert_eq!(workers[0].recv().unwrap().payload, vec![1]);
+    }
+
+    #[test]
+    fn evloop_pipeline_depth_bounds_applied_not_written_broadcasts() {
+        // Lemma-1 staleness bound, in-process flavor: with depth 1 the
+        // second data broadcast blocks until the worker ACKS (applies)
+        // the first — receipt alone is not enough.
+        let (mut server, mut workers, _) = inproc_cluster_evloop(1);
+        server.set_pipeline_depth(1);
+        server.broadcast(Message::broadcast(0, vec![1])).unwrap();
+        let b0 = workers[0].recv().unwrap(); // received, NOT yet acked
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = Arc::clone(&done);
+        let t = std::thread::spawn(move || {
+            server.broadcast(Message::broadcast(1, vec![2])).unwrap();
+            flag.store(true, std::sync::atomic::Ordering::SeqCst);
+            server
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert!(
+            !done.load(std::sync::atomic::Ordering::SeqCst),
+            "depth-1 broadcast must wait for the APPLY ack, not delivery"
+        );
+        workers[0].ack(b0.round).unwrap(); // apply → charge clears
+        let server = t.join().unwrap();
+        assert!(done.load(std::sync::atomic::Ordering::SeqCst));
+        let b1 = workers[0].recv().unwrap();
+        assert_eq!(b1.payload, vec![2]);
+        workers[0].ack(b1.round).unwrap();
+        drop(server);
     }
 }

@@ -30,6 +30,13 @@ pub enum MsgKind {
     /// Skipped workers re-absorb their entire sent payload into local
     /// error memory (see `WorkerAlgo::absorb_skipped`).
     PartialBroadcast = 5,
+    /// Worker → server: "I have *applied* the round-`round` broadcast."
+    /// Empty payload. The readiness-loop transport uses these for
+    /// ack-based flow control: `--pipeline-depth` bounds the number of
+    /// broadcasts a worker has received-but-not-applied, not merely the
+    /// number written into its socket, which is what the Lemma-1
+    /// staleness bound actually talks about.
+    Ack = 6,
 }
 
 impl MsgKind {
@@ -40,10 +47,21 @@ impl MsgKind {
             3 => Self::Shutdown,
             4 => Self::WorkerError,
             5 => Self::PartialBroadcast,
+            6 => Self::Ack,
             other => anyhow::bail!("bad message kind {other}"),
         })
     }
 }
+
+/// Hard cap on a single frame's wire size (header + payload + crc). A
+/// length prefix above this is rejected *before* any buffer allocation,
+/// so a corrupt or hostile 4-byte prefix can never trigger a multi-GiB
+/// allocation. Shared by the blocking reader and the readiness-loop
+/// `FrameAssembler`.
+pub const FRAME_CAP: usize = 256 * 1024 * 1024;
+
+/// Smallest legal frame: empty payload — `1 + 4 + 8 + 4 + 0 + 4`.
+pub const MIN_FRAME_LEN: usize = 21;
 
 /// A transport message.
 #[derive(Debug, Clone, PartialEq)]
@@ -69,6 +87,11 @@ impl Message {
 
     pub fn worker_error(worker: u32, round: u64, what: &str) -> Self {
         Self { kind: MsgKind::WorkerError, worker, round, payload: what.as_bytes().to_vec() }
+    }
+
+    /// Worker `worker` has applied the round-`round` broadcast.
+    pub fn ack(worker: u32, round: u64) -> Self {
+        Self { kind: MsgKind::Ack, worker, round, payload: Vec::new() }
     }
 
     /// Build a [`MsgKind::PartialBroadcast`] frame: the inclusion bitmap
@@ -127,8 +150,11 @@ impl Message {
 
     /// Parse one frame (must be exactly one frame).
     pub fn decode(bytes: &[u8]) -> anyhow::Result<Self> {
-        if bytes.len() < 1 + 4 + 8 + 4 + 4 {
+        if bytes.len() < MIN_FRAME_LEN {
             anyhow::bail!("frame too short: {}", bytes.len());
+        }
+        if bytes.len() > FRAME_CAP {
+            anyhow::bail!("frame length {} exceeds cap", bytes.len());
         }
         let body = &bytes[..bytes.len() - 4];
         let mut tail = Reader::new(&bytes[bytes.len() - 4..]);
@@ -147,6 +173,118 @@ impl Message {
             anyhow::bail!("trailing bytes in frame");
         }
         Ok(Self { kind, worker, round, payload })
+    }
+}
+
+/// Incremental decoder for the length-prefixed TCP framing
+/// (`[frame_len:u32 LE][frame bytes]`*): feed it byte chunks of any
+/// size — single bytes, half a length prefix, three frames at once — and
+/// it hands back every complete [`Message`] in arrival order.
+///
+/// This is the read half of the readiness-loop transport's nonblocking
+/// state machine, but it is also the *hardened* frame decoder: a length
+/// prefix outside `[MIN_FRAME_LEN, FRAME_CAP]` is rejected with an
+/// explicit error before a single payload byte is buffered (no panic, no
+/// attacker-sized allocation), and [`FrameAssembler::finish`] turns an
+/// EOF in the middle of a frame into an explicit truncation error
+/// instead of silent data loss.
+///
+/// Once an error is returned the assembler is poisoned: every later
+/// `push` fails with the same diagnosis (a corrupt stream has no
+/// resynchronization point).
+#[derive(Default)]
+pub struct FrameAssembler {
+    /// Bytes of the 4-byte length prefix accumulated so far.
+    prefix: Vec<u8>,
+    /// Frame bytes accumulated so far (empty while reading the prefix).
+    frame: Vec<u8>,
+    /// Total frame length announced by the prefix (0 while reading it).
+    want: usize,
+    poisoned: Option<String>,
+}
+
+impl FrameAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consume `chunk`, appending every frame it completes to `out`.
+    /// Returns the number of messages completed by this chunk.
+    pub fn push(&mut self, mut chunk: &[u8], out: &mut Vec<Message>) -> anyhow::Result<usize> {
+        if let Some(e) = &self.poisoned {
+            anyhow::bail!("frame stream already failed: {e}");
+        }
+        let mut completed = 0;
+        while !chunk.is_empty() {
+            if self.want == 0 {
+                // Accumulating the 4-byte length prefix.
+                let take = chunk.len().min(4 - self.prefix.len());
+                self.prefix.extend_from_slice(&chunk[..take]);
+                chunk = &chunk[take..];
+                if self.prefix.len() < 4 {
+                    continue;
+                }
+                let len =
+                    u32::from_le_bytes(self.prefix[..4].try_into().expect("4-byte prefix"))
+                        as usize;
+                self.prefix.clear();
+                if len > FRAME_CAP {
+                    return Err(self.poison(format!("frame length {len} exceeds cap")));
+                }
+                if len < MIN_FRAME_LEN {
+                    return Err(self.poison(format!("frame length {len} below minimum")));
+                }
+                self.want = len;
+                self.frame.reserve(len);
+            } else {
+                let take = chunk.len().min(self.want - self.frame.len());
+                self.frame.extend_from_slice(&chunk[..take]);
+                chunk = &chunk[take..];
+                if self.frame.len() == self.want {
+                    let msg = match Message::decode(&self.frame) {
+                        Ok(m) => m,
+                        Err(e) => return Err(self.poison(e.to_string())),
+                    };
+                    self.frame.clear();
+                    self.want = 0;
+                    out.push(msg);
+                    completed += 1;
+                }
+            }
+        }
+        Ok(completed)
+    }
+
+    /// Whether the stream is at a frame boundary (nothing buffered).
+    pub fn is_idle(&self) -> bool {
+        self.prefix.is_empty() && self.want == 0 && self.poisoned.is_none()
+    }
+
+    /// Call at EOF: a stream that ends mid-prefix or mid-frame is a
+    /// truncation, reported explicitly.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        if let Some(e) = &self.poisoned {
+            anyhow::bail!("frame stream already failed: {e}");
+        }
+        if !self.prefix.is_empty() {
+            anyhow::bail!(
+                "truncated frame: stream ended {} bytes into the length prefix",
+                self.prefix.len()
+            );
+        }
+        if self.want != 0 {
+            anyhow::bail!(
+                "truncated frame: stream ended {} bytes into a {}-byte frame",
+                self.frame.len(),
+                self.want
+            );
+        }
+        Ok(())
+    }
+
+    fn poison(&mut self, what: String) -> anyhow::Error {
+        self.poisoned = Some(what.clone());
+        anyhow::anyhow!(what)
     }
 }
 
@@ -297,9 +435,112 @@ mod tests {
             Message::shutdown(9),
             Message::worker_error(2, 3, "boom"),
             Message::partial_broadcast(4, &[true, false, true], &[1.0, -2.0]),
+            Message::ack(5, 11),
         ] {
             assert_eq!(Message::decode(&m.encode()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn ack_frames_are_minimal() {
+        let m = Message::ack(7, 42);
+        assert_eq!(m.kind, MsgKind::Ack);
+        assert!(m.payload.is_empty());
+        assert_eq!(m.frame_len(), MIN_FRAME_LEN);
+    }
+
+    /// The TCP framing of a message: `[frame_len:u32 LE][frame]`.
+    fn framed(m: &Message) -> Vec<u8> {
+        let frame = m.encode();
+        let mut wire = (frame.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&frame);
+        wire
+    }
+
+    #[test]
+    fn assembler_reassembles_frames_split_at_every_byte_boundary() {
+        // Satellite 1's split-point test: each frame in the stream is
+        // fragmented at every possible byte boundary (including inside
+        // the length prefix) and must reassemble byte-identically.
+        let msgs = [
+            Message::payload(3, 17, (0..37u8).collect()),
+            Message::ack(3, 17),
+            Message::broadcast(18, vec![0xAB; 5]),
+        ];
+        for m in &msgs {
+            let wire = framed(m);
+            for split in 0..=wire.len() {
+                let mut asm = FrameAssembler::new();
+                let mut out = Vec::new();
+                asm.push(&wire[..split], &mut out).unwrap();
+                asm.push(&wire[split..], &mut out).unwrap();
+                assert_eq!(out, vec![m.clone()], "split at {split}");
+                assert!(asm.is_idle());
+                asm.finish().unwrap();
+            }
+        }
+        // And a multi-frame stream delivered one byte at a time.
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&framed(m));
+        }
+        let mut asm = FrameAssembler::new();
+        let mut out = Vec::new();
+        for b in &wire {
+            asm.push(std::slice::from_ref(b), &mut out).unwrap();
+        }
+        assert_eq!(out, msgs.to_vec());
+        asm.finish().unwrap();
+    }
+
+    #[test]
+    fn assembler_rejects_oversized_length_prefix_without_allocating() {
+        // A hostile prefix claiming a 4 GiB frame must fail before any
+        // payload buffering (the error arrives with ZERO frame bytes
+        // fed), and the assembler stays poisoned afterwards.
+        let mut asm = FrameAssembler::new();
+        let mut out = Vec::new();
+        let err = asm.push(&u32::MAX.to_le_bytes(), &mut out).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+        assert!(out.is_empty());
+        let err = asm.push(&[0u8; 8], &mut out).unwrap_err();
+        assert!(err.to_string().contains("already failed"), "{err}");
+        assert!(asm.finish().is_err());
+    }
+
+    #[test]
+    fn assembler_rejects_undersized_length_prefix() {
+        // A prefix smaller than the smallest legal frame can never carry
+        // a valid CRC-bearing frame: explicit error, not a decode panic.
+        let mut asm = FrameAssembler::new();
+        let mut out = Vec::new();
+        let err = asm.push(&(MIN_FRAME_LEN as u32 - 1).to_le_bytes(), &mut out).unwrap_err();
+        assert!(err.to_string().contains("below minimum"), "{err}");
+    }
+
+    #[test]
+    fn assembler_reports_truncation_at_every_cut_point() {
+        let wire = framed(&Message::payload(1, 2, vec![7; 16]));
+        for cut in 1..wire.len() {
+            let mut asm = FrameAssembler::new();
+            let mut out = Vec::new();
+            asm.push(&wire[..cut], &mut out).unwrap();
+            assert!(out.is_empty(), "cut at {cut}");
+            let err = asm.finish().unwrap_err();
+            assert!(err.to_string().contains("truncated frame"), "cut at {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn assembler_poisons_on_crc_corruption() {
+        let mut wire = framed(&Message::payload(1, 2, vec![7; 16]));
+        let n = wire.len();
+        wire[n - 6] ^= 0xFF;
+        let mut asm = FrameAssembler::new();
+        let mut out = Vec::new();
+        let err = asm.push(&wire, &mut out).unwrap_err();
+        assert!(err.to_string().contains("crc mismatch"), "{err}");
+        assert!(asm.push(&[0], &mut out).is_err());
     }
 
     #[test]

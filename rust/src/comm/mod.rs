@@ -15,14 +15,18 @@
 //! quantities Figure 4 measures.
 
 pub mod delay;
+pub(crate) mod evloop;
 pub mod inproc;
 pub mod message;
 pub mod sim;
 pub mod tcp;
 
 pub use delay::DelayPlan;
-pub use inproc::{inproc_cluster, inproc_cluster_with_plan};
-pub use message::{bitmap_included, read_inclusion_bitmap, Message, MsgKind};
+pub use inproc::{
+    inproc_cluster, inproc_cluster_evloop, inproc_cluster_evloop_with_plan,
+    inproc_cluster_with_plan,
+};
+pub use message::{bitmap_included, read_inclusion_bitmap, FrameAssembler, Message, MsgKind};
 pub use sim::NetworkModel;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -135,16 +139,16 @@ pub(crate) struct PendingDelivery {
 }
 
 impl PendingDelivery {
-    fn new(handle: BroadcastHandle) -> Self {
+    pub(crate) fn new(handle: BroadcastHandle) -> Self {
         Self { handle, done: false }
     }
 
-    fn delivered(mut self) {
+    pub(crate) fn delivered(mut self) {
         self.done = true;
         self.handle.mark_delivered();
     }
 
-    fn failed(mut self, what: &str) {
+    pub(crate) fn failed(mut self, what: &str) {
         self.done = true;
         self.handle.mark_failed(what);
     }
@@ -322,6 +326,15 @@ pub trait WorkerEnd: Send {
     fn send(&mut self, msg: Message) -> anyhow::Result<()>;
     /// Block until the server's broadcast for the current round arrives.
     fn recv(&mut self) -> anyhow::Result<Message>;
+    /// Tell the server this worker has *applied* the round-`round`
+    /// broadcast. On the readiness-loop transport this emits a
+    /// [`MsgKind::Ack`] control frame feeding the leader's ack ledger
+    /// (`--pipeline-depth` bounds applied broadcasts per worker); the
+    /// threaded transports have no ack channel, so the default is a
+    /// no-op and the worker loop can call it unconditionally.
+    fn ack(&mut self, _round: u64) -> anyhow::Result<()> {
+        Ok(())
+    }
     /// Worker id (0-based).
     fn id(&self) -> u32;
 }
@@ -450,10 +463,17 @@ impl ArrivalSet {
 }
 
 /// Shared byte counters (uplink = workers→server, downlink = server→workers).
+///
+/// `ctrl` counts control-plane frames — today exactly the
+/// [`MsgKind::Ack`] traffic of the readiness-loop transport — separately
+/// from the data plane, so `up`/`down` totals stay bitwise comparable
+/// between the evloop and threaded transports (the equivalence suite's
+/// byte-accounting gate).
 #[derive(Debug, Default)]
 pub struct ByteCounter {
     pub up: AtomicU64,
     pub down: AtomicU64,
+    pub ctrl: AtomicU64,
 }
 
 impl ByteCounter {
@@ -469,12 +489,20 @@ impl ByteCounter {
         self.down.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    pub fn add_ctrl(&self, n: usize) {
+        self.ctrl.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     pub fn up_total(&self) -> u64 {
         self.up.load(Ordering::Relaxed)
     }
 
     pub fn down_total(&self) -> u64 {
         self.down.load(Ordering::Relaxed)
+    }
+
+    pub fn ctrl_total(&self) -> u64 {
+        self.ctrl.load(Ordering::Relaxed)
     }
 }
 

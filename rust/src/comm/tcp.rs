@@ -15,10 +15,14 @@ use super::{
     validate_round_batch, ArrivalSet, BroadcastHandle, ByteCounter, ServerEnd, StreamDirective,
     StreamOutcome, WorkerEnd, WriterPool,
 };
+#[cfg(unix)]
+use super::PendingDelivery;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
+#[cfg(unix)]
+use std::sync::Mutex;
 use std::time::Instant;
 
 fn write_frame(stream: &mut TcpStream, msg: &Message) -> anyhow::Result<usize> {
@@ -34,8 +38,8 @@ fn read_frame(stream: &mut TcpStream) -> anyhow::Result<Message> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
-    // 256 MiB frame cap: protects against corrupt length prefixes.
-    if len > 256 * 1024 * 1024 {
+    // Frame cap: protects against corrupt length prefixes.
+    if len > super::message::FRAME_CAP {
         anyhow::bail!("frame length {len} exceeds cap");
     }
     let mut frame = vec![0u8; len];
@@ -65,6 +69,26 @@ impl TcpServerBuilder {
 
     /// Phase 2: accept exactly `m` worker registrations.
     pub fn accept(self, m: usize) -> anyhow::Result<TcpServerEnd> {
+        Ok(TcpServerEnd {
+            streams: self.accept_streams(m)?,
+            counter: ByteCounter::new(),
+            readers: None,
+            pipeline_depth: 2,
+            writers: None,
+        })
+    }
+
+    /// Phase 2, readiness-loop flavor: accept exactly `m` registrations
+    /// and hand every connection to a single `dqgan-evloop` thread —
+    /// O(1) leader threads in M instead of the threaded end's
+    /// reader+writer pair per worker. Workers must be built with the
+    /// `connect_evloop*` constructors (they send `Ack` control frames).
+    #[cfg(unix)]
+    pub fn accept_evloop(self, m: usize) -> anyhow::Result<TcpEvloopServerEnd> {
+        TcpEvloopServerEnd::spawn(self.accept_streams(m)?)
+    }
+
+    fn accept_streams(&self, m: usize) -> anyhow::Result<Vec<TcpStream>> {
         let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
         let mut accepted = 0;
         while accepted < m {
@@ -78,13 +102,7 @@ impl TcpServerBuilder {
             streams[id] = Some(s);
             accepted += 1;
         }
-        Ok(TcpServerEnd {
-            streams: streams.into_iter().map(|s| s.unwrap()).collect(),
-            counter: ByteCounter::new(),
-            readers: None,
-            pipeline_depth: 2,
-            writers: None,
-        })
+        Ok(streams.into_iter().map(|s| s.unwrap()).collect())
     }
 }
 
@@ -99,6 +117,12 @@ pub struct TcpWorkerEnd {
     /// arrival orders deterministically too. (Downlink gates are an
     /// in-process-only hook; see `comm/delay.rs`.)
     plan: Option<DelayPlan>,
+    /// Whether [`WorkerEnd::ack`] emits an `Ack` control frame. Enabled
+    /// by the evloop constructors only: the threaded server's barrier
+    /// bookkeeping has no ack channel, so acks toward it would corrupt
+    /// its gathers. Evloop server ⇔ acking workers is a symmetric,
+    /// per-cluster contract picked by `--transport`.
+    send_acks: bool,
 }
 
 impl TcpWorkerEnd {
@@ -114,14 +138,42 @@ impl TcpWorkerEnd {
         id: u32,
         plan: Option<DelayPlan>,
     ) -> anyhow::Result<Self> {
+        Self::connect_inner(addr, id, plan, false)
+    }
+
+    /// Connect to a readiness-loop server ([`TcpServerBuilder::accept_evloop`]):
+    /// identical wire behavior plus `Ack` control frames from
+    /// [`WorkerEnd::ack`] feeding the leader's applied-broadcast ledger.
+    #[cfg(unix)]
+    pub fn connect_evloop(addr: &str, id: u32) -> anyhow::Result<Self> {
+        Self::connect_inner(addr, id, None, true)
+    }
+
+    /// [`Self::connect_evloop`] with a [`DelayPlan`] attached.
+    #[cfg(unix)]
+    pub fn connect_evloop_with_plan(
+        addr: &str,
+        id: u32,
+        plan: Option<DelayPlan>,
+    ) -> anyhow::Result<Self> {
+        Self::connect_inner(addr, id, plan, true)
+    }
+
+    fn connect_inner(
+        addr: &str,
+        id: u32,
+        plan: Option<DelayPlan>,
+        send_acks: bool,
+    ) -> anyhow::Result<Self> {
         let mut stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         // Registration: a Payload-kind hello with round u64::MAX.
         write_frame(&mut stream, &Message::payload(id, u64::MAX, Vec::new()))?;
-        Ok(Self { id, stream, counter: ByteCounter::new(), plan })
+        Ok(Self { id, stream, counter: ByteCounter::new(), plan, send_acks })
     }
 
-    /// This worker's byte counters (uplink = sent, downlink = received).
+    /// This worker's byte counters (uplink = sent, downlink = received,
+    /// ctrl = ack frames).
     pub fn counter(&self) -> Arc<ByteCounter> {
         Arc::clone(&self.counter)
     }
@@ -148,6 +200,18 @@ impl WorkerEnd for TcpWorkerEnd {
         // prefix, mirroring `send`'s uplink accounting.
         self.counter.add_down(msg.frame_len() + 4);
         Ok(msg)
+    }
+
+    fn ack(&mut self, round: u64) -> anyhow::Result<()> {
+        if !self.send_acks {
+            return Ok(());
+        }
+        // Control-plane accounting: ack bytes are real wire traffic but
+        // live in the ctrl counter so up/down stay identical to the
+        // threaded transport's data-plane totals.
+        let n = write_frame(&mut self.stream, &Message::ack(self.id, round))?;
+        self.counter.add_ctrl(n);
+        Ok(())
     }
 
     fn id(&self) -> u32 {
@@ -372,6 +436,393 @@ impl ServerEnd for TcpServerEnd {
 
     fn workers(&self) -> usize {
         self.streams.len()
+    }
+}
+
+/// One broadcast command for the readiness loop: the encoded wire bytes
+/// (shared across all M outboxes) plus the completion handle the loop
+/// attaches a [`PendingDelivery`] per worker to.
+#[cfg(unix)]
+enum LoopCmd {
+    Broadcast { wire: Arc<Vec<u8>>, handle: BroadcastHandle },
+}
+
+/// Per-connection state of the readiness loop: the nonblocking socket,
+/// the incremental read-side reassembler, the write-side outbound ring,
+/// and the sticky first failure.
+#[cfg(unix)]
+struct EvConn {
+    stream: TcpStream,
+    asm: super::message::FrameAssembler,
+    out: super::evloop::OutRing,
+    failed: Option<String>,
+}
+
+/// State shared between the loop thread and the leader-facing endpoint.
+#[cfg(unix)]
+struct EvShared {
+    /// First worker failure observed by the loop (sticky): surfaced by
+    /// the next `broadcast_async` call, in addition to completing every
+    /// affected [`BroadcastHandle`] with it.
+    first_error: Mutex<Option<String>>,
+}
+
+/// Mark connection `i` failed: complete its queued deliveries with the
+/// error, record the sticky first failure (naming the worker id — the
+/// satellite-3 contract), release it from the ack ledger, and surface
+/// the error once on the arrival channel so a blocked gather fails too.
+#[cfg(unix)]
+fn fail_conn(
+    conn: &mut EvConn,
+    i: usize,
+    what: &str,
+    shared: &EvShared,
+    ledger: &super::evloop::AckLedger,
+    arrivals_tx: &std::sync::mpsc::Sender<anyhow::Result<Message>>,
+) {
+    let what = format!("worker {i} socket failed: {what}");
+    let mut g = shared.first_error.lock().unwrap();
+    if g.is_none() {
+        *g = Some(what.clone());
+    }
+    drop(g);
+    conn.out.fail_all(&what);
+    conn.failed = Some(what.clone());
+    ledger.mark_dead(i as u32);
+    let _ = arrivals_tx.send(Err(anyhow::anyhow!(what)));
+}
+
+/// Body of the single `dqgan-evloop` leader thread: poll every worker
+/// socket (read-interest always, write-interest while its outbox is
+/// non-empty) plus the waker, demux arriving frames (`Ack` → ledger,
+/// everything else → the arrival channel the gathers pop), and flush
+/// outboxes as sockets become writable. When the command channel
+/// disconnects (endpoint dropped) the loop flushes every remaining
+/// outbox — a queued trailing `Shutdown` still reaches the workers —
+/// then exits.
+#[cfg(unix)]
+fn run_evloop(
+    mut conns: Vec<EvConn>,
+    mut waker_rx: std::os::unix::net::UnixStream,
+    cmd_rx: std::sync::mpsc::Receiver<LoopCmd>,
+    arrivals_tx: std::sync::mpsc::Sender<anyhow::Result<Message>>,
+    counter: Arc<ByteCounter>,
+    ledger: Arc<super::evloop::AckLedger>,
+    shared: Arc<EvShared>,
+) {
+    use super::evloop::{drain_waker, poll_ready, PollFd, POLLERR, POLLHUP, POLLIN, POLLOUT};
+    use std::io::Read;
+    use std::os::fd::AsRawFd;
+
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut fds: Vec<PollFd> = Vec::with_capacity(conns.len() + 1);
+    let mut idx: Vec<usize> = Vec::with_capacity(conns.len());
+    let mut closing = false;
+    loop {
+        fds.clear();
+        idx.clear();
+        fds.push(PollFd { fd: waker_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        for (i, c) in conns.iter().enumerate() {
+            if c.failed.is_some() {
+                continue;
+            }
+            // While closing, only write-interest remains: drain the
+            // outboxes, never accept new frames.
+            let mut events = if closing { 0 } else { POLLIN };
+            if !c.out.is_empty() {
+                events |= POLLOUT;
+            }
+            if events != 0 {
+                fds.push(PollFd { fd: c.stream.as_raw_fd(), events, revents: 0 });
+                idx.push(i);
+            }
+        }
+        if closing && idx.is_empty() {
+            return; // every live outbox flushed: teardown complete
+        }
+        if let Err(e) = poll_ready(&mut fds, -1) {
+            // poll(2) itself failing is unrecoverable: fail every
+            // connection so no gather or broadcast handle can hang.
+            let what = e.to_string();
+            for (i, c) in conns.iter_mut().enumerate() {
+                if c.failed.is_none() {
+                    fail_conn(c, i, &what, &shared, &ledger, &arrivals_tx);
+                }
+            }
+            return;
+        }
+        if fds[0].revents & POLLIN != 0 {
+            drain_waker(&mut waker_rx);
+        }
+        // Drain commands on every wakeup (cheap when empty).
+        loop {
+            match cmd_rx.try_recv() {
+                Ok(LoopCmd::Broadcast { wire, handle }) => {
+                    for c in conns.iter_mut() {
+                        let pd = PendingDelivery::new(handle.clone());
+                        match &c.failed {
+                            Some(what) => pd.failed(what),
+                            None => c.out.push(Arc::clone(&wire), pd),
+                        }
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    closing = true;
+                    break;
+                }
+            }
+        }
+        for (k, i) in idx.iter().copied().enumerate() {
+            let revents = fds[k + 1].revents;
+            if revents == 0 {
+                continue;
+            }
+            let conn = &mut conns[i];
+            // Reads first: acks queued ahead of payloads on the same
+            // socket release ledger backpressure as early as possible.
+            if !closing && revents & (POLLIN | POLLERR | POLLHUP) != 0 {
+                let mut failure: Option<String> = None;
+                let mut msgs = Vec::new();
+                loop {
+                    match conn.stream.read(&mut scratch) {
+                        Ok(0) => {
+                            failure = Some("connection closed".into());
+                            break;
+                        }
+                        Ok(n) => {
+                            // A decode failure still delivers the frames
+                            // completed before the corrupt one.
+                            if let Err(e) = conn.asm.push(&scratch[..n], &mut msgs) {
+                                failure = Some(e.to_string());
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(e) => {
+                            failure = Some(e.to_string());
+                            break;
+                        }
+                    }
+                }
+                for msg in msgs {
+                    if msg.kind == MsgKind::Ack {
+                        // Control plane: ledger + ctrl accounting; never
+                        // enters the gather stream.
+                        counter.add_ctrl(msg.frame_len() + 4);
+                        ledger.on_ack(msg.worker);
+                    } else {
+                        // Uplink bytes are counted at the pop, exactly
+                        // like the threaded reader channel.
+                        let _ = arrivals_tx.send(Ok(msg));
+                    }
+                }
+                if let Some(what) = failure {
+                    fail_conn(conn, i, &what, &shared, &ledger, &arrivals_tx);
+                    continue;
+                }
+            }
+            if revents & (POLLOUT | POLLERR | POLLHUP) != 0 && !conn.out.is_empty() {
+                let counter = &counter;
+                if let Err(e) =
+                    conn.out.pump(&mut conn.stream, |wire_len| counter.add_down(wire_len))
+                {
+                    fail_conn(conn, i, &e.to_string(), &shared, &ledger, &arrivals_tx);
+                }
+            }
+        }
+    }
+}
+
+/// TCP server endpoint driven by one readiness-loop thread — the O(1)
+/// leader-threads replacement for [`TcpServerEnd`]'s per-worker reader
+/// and writer armies. Same [`ServerEnd`] contract, same wire format,
+/// same byte accounting; plus ack-based flow control: `--pipeline-depth`
+/// bounds each worker's *applied* broadcasts via the [`MsgKind::Ack`]
+/// frames its [`WorkerEnd::ack`] emits.
+#[cfg(unix)]
+pub struct TcpEvloopServerEnd {
+    m: usize,
+    counter: Arc<ByteCounter>,
+    /// Arrival-ordered uplink frames from the loop thread. Unbounded by
+    /// construction but bounded in practice by the round protocol: each
+    /// worker has at most `pipeline_depth` rounds in flight, so at most
+    /// that many payload frames can precede a pop. (A bounded channel
+    /// here could deadlock the loop: it must never block while it still
+    /// owes writes.)
+    arrivals: std::sync::mpsc::Receiver<anyhow::Result<Message>>,
+    cmd_tx: Option<std::sync::mpsc::Sender<LoopCmd>>,
+    waker: super::evloop::Waker,
+    ledger: Arc<super::evloop::AckLedger>,
+    shared: Arc<EvShared>,
+    pipeline_depth: usize,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+#[cfg(unix)]
+impl TcpEvloopServerEnd {
+    fn spawn(streams: Vec<TcpStream>) -> anyhow::Result<Self> {
+        let m = streams.len();
+        let mut conns = Vec::with_capacity(m);
+        for s in streams {
+            s.set_nonblocking(true)?;
+            conns.push(EvConn {
+                stream: s,
+                asm: super::message::FrameAssembler::new(),
+                out: super::evloop::OutRing::default(),
+                failed: None,
+            });
+        }
+        let (waker, waker_rx) = super::evloop::Waker::pair()?;
+        let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
+        let (arrivals_tx, arrivals) = std::sync::mpsc::channel();
+        let counter = ByteCounter::new();
+        let ledger = super::evloop::AckLedger::new(m);
+        let shared = Arc::new(EvShared { first_error: Mutex::new(None) });
+        let thread = {
+            let counter = Arc::clone(&counter);
+            let ledger = Arc::clone(&ledger);
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("dqgan-evloop".into())
+                .spawn(move || {
+                    run_evloop(conns, waker_rx, cmd_rx, arrivals_tx, counter, ledger, shared)
+                })
+                .map_err(|e| anyhow::anyhow!("spawn dqgan-evloop: {e}"))?
+        };
+        Ok(Self {
+            m,
+            counter,
+            arrivals,
+            cmd_tx: Some(cmd_tx),
+            waker,
+            ledger,
+            shared,
+            pipeline_depth: 2,
+            thread: Some(thread),
+        })
+    }
+
+    pub fn counter(&self) -> Arc<ByteCounter> {
+        Arc::clone(&self.counter)
+    }
+
+    fn next_arrival(&mut self) -> anyhow::Result<Message> {
+        let msg =
+            self.arrivals.recv().map_err(|_| anyhow::anyhow!("event loop exited"))??;
+        self.counter.add_up(msg.frame_len() + 4);
+        Ok(msg)
+    }
+}
+
+#[cfg(unix)]
+impl ServerEnd for TcpEvloopServerEnd {
+    fn recv_round(&mut self) -> anyhow::Result<Vec<Message>> {
+        let mut arrivals = ArrivalSet::new(self.m);
+        let mut msgs = Vec::with_capacity(self.m);
+        for _ in 0..self.m {
+            let msg = self.next_arrival()?;
+            arrivals.admit(&msg)?;
+            msgs.push(msg);
+        }
+        msgs.sort_by_key(|m| m.worker);
+        validate_round_batch(&msgs)?;
+        Ok(msgs)
+    }
+
+    fn recv_round_streaming(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        let mut arrivals = ArrivalSet::new(self.m);
+        for _ in 0..self.m {
+            let msg = self.next_arrival()?;
+            arrivals.admit(&msg)?;
+            on_msg(msg)?;
+        }
+        Ok(())
+    }
+
+    fn recv_round_streaming_timed(
+        &mut self,
+        on_msg: &mut dyn FnMut(Message) -> anyhow::Result<StreamDirective>,
+    ) -> anyhow::Result<StreamOutcome> {
+        let rx = &self.arrivals;
+        let counter = &self.counter;
+        super::drive_timed_stream(
+            &mut |deadline| {
+                let msg = match deadline {
+                    None => rx.recv().map_err(|_| anyhow::anyhow!("event loop exited"))??,
+                    Some(dl) => {
+                        let left = dl.saturating_duration_since(Instant::now());
+                        match rx.recv_timeout(left) {
+                            Ok(res) => res?,
+                            Err(RecvTimeoutError::Timeout) => return Ok(None),
+                            Err(RecvTimeoutError::Disconnected) => {
+                                anyhow::bail!("event loop exited")
+                            }
+                        }
+                    }
+                };
+                counter.add_up(msg.frame_len() + 4);
+                Ok(Some(msg))
+            },
+            on_msg,
+        )
+    }
+
+    fn broadcast(&mut self, msg: Message) -> anyhow::Result<()> {
+        // The loop owns every socket: the synchronous contract is
+        // "queued through the loop, then wait until each delivery has
+        // left the leader" — and a sticky worker failure surfaces here
+        // with the failing worker id via the handle.
+        self.broadcast_async(msg)?.wait()
+    }
+
+    fn broadcast_async(&mut self, msg: Message) -> anyhow::Result<BroadcastHandle> {
+        if let Some(e) = self.shared.first_error.lock().unwrap().clone() {
+            anyhow::bail!("async broadcast failed: {e}");
+        }
+        // Applied-broadcast flow control: data broadcasts charge the
+        // ledger (acks, consumed on the loop thread, discharge it);
+        // Shutdown is control flow and never acked.
+        if matches!(msg.kind, MsgKind::Broadcast | MsgKind::PartialBroadcast) {
+            self.ledger.charge(self.pipeline_depth)?;
+        }
+        let handle = BroadcastHandle::new(self.m);
+        let wire = Arc::new(super::evloop::wire_frame(&msg));
+        self.cmd_tx
+            .as_ref()
+            .expect("command channel alive until drop")
+            .send(LoopCmd::Broadcast { wire, handle: handle.clone() })
+            .map_err(|_| anyhow::anyhow!("event loop exited"))?;
+        self.waker.wake();
+        Ok(handle)
+    }
+
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        // Charged per-broadcast (not baked into spawned queues), so the
+        // depth is adjustable at any time.
+        self.pipeline_depth = depth.max(1);
+    }
+
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+#[cfg(unix)]
+impl Drop for TcpEvloopServerEnd {
+    fn drop(&mut self) {
+        // Disconnect the command channel, wake the loop so it notices,
+        // and join: the loop flushes every outbox (a queued trailing
+        // Shutdown still lands) before exiting.
+        self.cmd_tx.take();
+        self.waker.wake();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
     }
 }
 
@@ -667,5 +1118,199 @@ mod tests {
         assert!(res.is_err());
         done_tx.send(()).unwrap();
         w.join().unwrap();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn evloop_round_trip_matches_threaded_byte_accounting() {
+        // Same exchange as `tcp_round_trip`, over the readiness loop:
+        // identical wire frames, identical up/down totals on both ends
+        // (the threaded test's constants), with ack traffic isolated in
+        // the ctrl counters.
+        let m = 3;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let workers: Vec<_> = (0..m as u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorkerEnd::connect_evloop(&addr.to_string(), id).unwrap();
+                    w.send(Message::payload(id, 0, vec![id as u8; 16])).unwrap();
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.kind, MsgKind::Broadcast);
+                    assert_eq!(b.payload, vec![7, 7]);
+                    w.ack(b.round).unwrap();
+                    let s = w.recv().unwrap();
+                    assert_eq!(s.kind, MsgKind::Shutdown);
+                    let c = w.counter();
+                    (c.up_total(), c.down_total(), c.ctrl_total())
+                })
+            })
+            .collect();
+        let mut server = builder.accept_evloop(m).unwrap();
+        let msgs = server.recv_round().unwrap();
+        assert_eq!(msgs.len(), m);
+        assert_eq!(msgs[1].payload, vec![1u8; 16]);
+        server.broadcast(Message::broadcast(0, vec![7, 7])).unwrap();
+        server.broadcast(Message::shutdown(1)).unwrap();
+        let expected_up = (Message::payload(0, 0, vec![0u8; 16]).frame_len() + 4) as u64;
+        let expected_down = (Message::broadcast(0, vec![7, 7]).frame_len()
+            + Message::shutdown(1).frame_len()
+            + 8) as u64;
+        let expected_ctrl = (Message::ack(0, 0).frame_len() + 4) as u64;
+        for w in workers {
+            let (up, down, ctrl) = w.join().unwrap();
+            assert_eq!(up, expected_up, "worker uplink = threaded constant");
+            assert_eq!(down, expected_down, "worker downlink = threaded constant");
+            assert_eq!(ctrl, expected_ctrl, "one ack, ctrl plane only");
+        }
+        assert_eq!(server.counter().up_total(), expected_up * m as u64);
+        assert_eq!(server.counter().down_total(), expected_down * m as u64);
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn evloop_leader_thread_count_is_flat_in_worker_count() {
+        // The O(1)-in-M claim: with 64 workers, the readiness-loop server
+        // adds a single leader thread, where the threaded transport would
+        // add 2·M = 128 (reader + writer per worker) once fully active.
+        // The assertion allows generous slack for unrelated test threads
+        // coming and going in this process — it only has to separate
+        // O(1) from O(M).
+        use crate::util::threads::live_threads;
+        let m = 64;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+        let workers: Vec<_> = (0..m as u32)
+            .map(|id| {
+                let ready_tx = ready_tx.clone();
+                std::thread::spawn(move || {
+                    let mut w = TcpWorkerEnd::connect_evloop(&addr.to_string(), id).unwrap();
+                    ready_tx.send(()).unwrap();
+                    for round in 0..2u64 {
+                        w.send(Message::payload(id, round, vec![id as u8; 8])).unwrap();
+                        let b = w.recv().unwrap();
+                        assert_eq!(b.round, round);
+                        w.ack(round).unwrap();
+                    }
+                    assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+                })
+            })
+            .collect();
+        for _ in 0..m {
+            ready_rx.recv().unwrap(); // all worker threads connected + counted
+        }
+        let base = live_threads();
+        let mut server = builder.accept_evloop(m).unwrap();
+        assert!(
+            live_threads() <= base + 8,
+            "accept_evloop must add O(1) threads, not O(M)"
+        );
+        for round in 0..2u64 {
+            let msgs = server.recv_round().unwrap();
+            assert_eq!(msgs.len(), m);
+            server.broadcast(Message::broadcast(round, vec![9])).unwrap();
+        }
+        // Still flat after gathers and broadcasts: unlike the threaded
+        // end, nothing spawns lazily per worker.
+        assert!(
+            live_threads() <= base + 8,
+            "steady-state leader threads must stay O(1) in M"
+        );
+        server.broadcast(Message::shutdown(2)).unwrap();
+        drop(server);
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn evloop_sticky_failure_names_worker_on_both_broadcast_paths() {
+        // Satellite-3 regression: a worker socket dying mid-run must
+        // surface with the failing worker's id through BOTH delivery
+        // paths — the BroadcastHandle from broadcast_async, and the next
+        // synchronous broadcast (sticky first-failure).
+        let m = 2;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let (dead_tx, dead_rx) = std::sync::mpsc::channel::<()>();
+        let w0 = std::thread::spawn(move || {
+            let mut w = TcpWorkerEnd::connect_evloop(&addr.to_string(), 0).unwrap();
+            // Receive whatever lands until the server goes away.
+            while w.recv().is_ok() {}
+        });
+        let w1 = std::thread::spawn(move || {
+            let w = TcpWorkerEnd::connect_evloop(&addr.to_string(), 1).unwrap();
+            drop(w); // close the socket right after registration
+            dead_tx.send(()).unwrap();
+        });
+        let mut server = builder.accept_evloop(m).unwrap();
+        dead_rx.recv().unwrap(); // worker 1's socket is closed
+        // Async path: the handle completes with the failure, naming the
+        // worker. (The loop learns of the close either before queuing —
+        // failing the delivery immediately — or when the write hits the
+        // dead socket; both must name worker 1.)
+        let handle = server.broadcast_async(Message::broadcast(0, vec![1, 2])).unwrap();
+        let err = handle.wait().expect_err("delivery to a dead worker must fail");
+        let text = format!("{err:#}");
+        assert!(text.contains("broadcast delivery failed"), "got: {text}");
+        assert!(text.contains("worker 1"), "must name the failing worker: {text}");
+        // Sync path: the sticky first failure fails the next broadcast
+        // up front, again naming the worker.
+        let err = server
+            .broadcast(Message::broadcast(1, vec![3]))
+            .expect_err("sticky failure must surface on the sync path");
+        let text = format!("{err:#}");
+        assert!(text.contains("worker 1 socket failed"), "got: {text}");
+        drop(server); // unblocks worker 0's recv loop
+        w0.join().unwrap();
+        w1.join().unwrap();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn evloop_pipeline_depth_bounds_applied_not_written_broadcasts() {
+        // End-to-end Lemma-1 staleness bound: with depth 1, the second
+        // data broadcast must block until the worker has ACKED (applied)
+        // the first — not merely until the first was written.
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let (got_tx, got_rx) = std::sync::mpsc::channel::<()>();
+        let worker = std::thread::spawn(move || {
+            let mut w = TcpWorkerEnd::connect_evloop(&addr.to_string(), 0).unwrap();
+            let b0 = w.recv().unwrap();
+            got_tx.send(()).unwrap(); // b0 received (written + read), not yet acked
+            go_rx.recv().unwrap();
+            w.ack(b0.round).unwrap();
+            let b1 = w.recv().unwrap();
+            w.ack(b1.round).unwrap();
+            assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+            w.counter().ctrl_total()
+        });
+        let mut server = builder.accept_evloop(1).unwrap();
+        server.set_pipeline_depth(1);
+        server.broadcast(Message::broadcast(0, vec![1])).unwrap();
+        got_rx.recv().unwrap();
+        let second_done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = Arc::clone(&second_done);
+        let srv = std::thread::spawn(move || {
+            server.broadcast(Message::broadcast(1, vec![2])).unwrap();
+            flag.store(true, std::sync::atomic::Ordering::SeqCst);
+            server.broadcast(Message::shutdown(2)).unwrap();
+        });
+        // b0 is fully written AND read by the worker, yet the second
+        // broadcast must still be parked on the unacked charge.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert!(
+            !second_done.load(std::sync::atomic::Ordering::SeqCst),
+            "depth-1 broadcast must wait for the APPLY ack, not the write"
+        );
+        go_tx.send(()).unwrap(); // worker acks b0 → charge clears
+        srv.join().unwrap();
+        assert!(second_done.load(std::sync::atomic::Ordering::SeqCst));
+        let ctrl = worker.join().unwrap();
+        assert_eq!(ctrl, 2 * (Message::ack(0, 0).frame_len() + 4) as u64);
     }
 }

@@ -124,6 +124,45 @@ impl KernelMode {
     }
 }
 
+/// Which transport engine carries the leader ⇄ worker frames
+/// (`--transport`).
+///
+/// Like [`AggMode`]/[`ReduceMode`]/[`KernelMode`] this is a pure
+/// scheduling switch: the broadcasts are **bitwise-identical** across the
+/// two engines (CI diffs `broadcast_fnv` between them), only the thread
+/// structure and flow-control mechanism differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportMode {
+    /// One readiness-loop delivery thread serves every worker (O(1)
+    /// leader threads in M), and `--pipeline-depth` bounds *applied*
+    /// broadcasts per worker via `Ack` control frames. The default.
+    #[default]
+    EvLoop,
+    /// The per-worker reader/writer thread army (O(M) leader threads,
+    /// depth bounds *written* broadcasts), kept as the A/B baseline for
+    /// one release.
+    Threads,
+}
+
+impl TransportMode {
+    /// Parse a CLI string: `evloop`/`poll` or `threads`/`threaded`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "evloop" | "poll" => Ok(Self::EvLoop),
+            "threads" | "threaded" => Ok(Self::Threads),
+            other => anyhow::bail!("unknown transport '{other}' (evloop|threads)"),
+        }
+    }
+
+    /// Display label for logs and bench case names.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::EvLoop => "evloop",
+            Self::Threads => "threads",
+        }
+    }
+}
+
 /// Round-completion policy: after each accepted arrival the streaming
 /// leader asks "does this round close now, or keep waiting?". The
 /// runtime engine is built from this in `ps/policy.rs`; anything other
@@ -348,6 +387,20 @@ mod tests {
         assert_eq!(KernelMode::default(), KernelMode::Simd);
         for m in [KernelMode::Simd, KernelMode::Scalar] {
             assert_eq!(KernelMode::parse(m.label()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn parses_transport_modes() {
+        assert_eq!(TransportMode::parse("evloop").unwrap(), TransportMode::EvLoop);
+        assert_eq!(TransportMode::parse("POLL").unwrap(), TransportMode::EvLoop);
+        assert_eq!(TransportMode::parse("threads").unwrap(), TransportMode::Threads);
+        assert_eq!(TransportMode::parse("threaded").unwrap(), TransportMode::Threads);
+        assert!(TransportMode::parse("wat").is_err());
+        // The readiness loop is the default; threads is the A/B baseline.
+        assert_eq!(TransportMode::default(), TransportMode::EvLoop);
+        for m in [TransportMode::EvLoop, TransportMode::Threads] {
+            assert_eq!(TransportMode::parse(m.label()).unwrap(), m);
         }
     }
 

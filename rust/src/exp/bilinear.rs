@@ -106,6 +106,7 @@ fn distributed_dqgan(eta: f32, rounds: u64, every: u64) -> anyhow::Result<Vec<Tr
         eval_every: every,
         keep_stats: false,
         agg: Default::default(),
+        transport: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| Ok(Box::new(game())))?;
     let g = game();

@@ -141,6 +141,7 @@ fn run_method(
         eval_every: cfg.rounds_per_epoch,
         keep_stats: true,
         agg: Default::default(),
+        transport: Default::default(),
     };
     let figure_seed = cfg.seed ^ 0x1111;
     let report = run_cluster(&cluster, |m| {

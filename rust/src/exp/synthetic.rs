@@ -47,6 +47,7 @@ pub fn run_method(
         eval_every: (rounds / 10).max(1),
         keep_stats: false,
         agg: Default::default(),
+        transport: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| Ok(Box::new(gan())))?;
     let scorer = gan();

@@ -37,6 +37,7 @@ fn run_one(algo: &str, m: usize, batch: usize, rounds: u64, eta: f32) -> anyhow:
         eval_every: 0,
         keep_stats: false,
         agg: Default::default(),
+        transport: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| Ok(Box::new(MlpGan::new(MlpGanConfig::default()))))?;
     // avg_payload_norm_sq = ‖q̄‖² = ‖η·(1/M)ΣF + EF noise‖²; divide by η².

@@ -7,8 +7,8 @@ use super::server::serve_rounds_with;
 use super::worker::{worker_loop, EvalHook, WorkerSummary};
 use super::RoundRecord;
 use crate::algo::AlgoKind;
-use crate::comm::inproc_cluster;
-use crate::config::AggregatorConfig;
+use crate::comm::{inproc_cluster, inproc_cluster_evloop, ServerEnd};
+use crate::config::{AggregatorConfig, TransportMode};
 use crate::grad::GradientSource;
 use crate::optim::LrSchedule;
 use crate::util::rng::Pcg32;
@@ -34,6 +34,11 @@ pub struct ClusterConfig {
     /// Leader aggregation path (sharded by default; the sequential
     /// baseline is bitwise-identical and kept for A/B verification).
     pub agg: AggregatorConfig,
+    /// Transport engine (readiness loop by default; the per-worker
+    /// thread army is kept as the A/B baseline). Broadcasts are
+    /// bitwise-identical across the two — CI diffs `broadcast_fnv`
+    /// between them every run.
+    pub transport: TransportMode,
 }
 
 impl Default for ClusterConfig {
@@ -48,6 +53,7 @@ impl Default for ClusterConfig {
             eval_every: 0,
             keep_stats: true,
             agg: AggregatorConfig::default(),
+            transport: TransportMode::default(),
         }
     }
 }
@@ -85,7 +91,19 @@ pub fn run_cluster(
 ) -> anyhow::Result<TrainReport> {
     anyhow::ensure!(cfg.workers > 0, "need at least one worker");
     let sw = Stopwatch::start();
-    let (mut server, worker_ends, _counter) = inproc_cluster(cfg.workers);
+    // Both transports speak the same ServerEnd/WorkerEnd contract; the
+    // evloop cluster's worker ends additionally ack applied broadcasts
+    // (a WorkerEnd::ack no-op on the threaded one).
+    let (mut server, worker_ends): (Box<dyn ServerEnd>, _) = match cfg.transport {
+        TransportMode::EvLoop => {
+            let (s, w, _counter) = inproc_cluster_evloop(cfg.workers);
+            (Box::new(s), w)
+        }
+        TransportMode::Threads => {
+            let (s, w, _counter) = inproc_cluster(cfg.workers);
+            (Box::new(s), w)
+        }
+    };
 
     // Initial parameters: one w₀ pushed to all workers (Algorithm 2 line 1)
     // — realized by constructing every worker from the same vector.
@@ -146,7 +164,7 @@ pub fn run_cluster(
         if serve_result.is_err() {
             // Unblock workers waiting in phase 2 so the scope join below
             // cannot hang; ignore send failures (workers may be gone).
-            use crate::comm::{Message, ServerEnd};
+            use crate::comm::Message;
             let _ = server.broadcast(Message::shutdown(u64::MAX));
         }
         drop(server); // close channels before joining
@@ -209,6 +227,7 @@ mod tests {
             eval_every: 10,
             keep_stats: true,
             agg: Default::default(),
+            transport: Default::default(),
         }
     }
 
@@ -269,6 +288,32 @@ mod tests {
         let dq = run("dqgan:linf8");
         let cp = run("cpoadam");
         assert!(dq * 3 < cp, "dqgan={dq} cpoadam={cp}");
+    }
+
+    #[test]
+    fn transports_produce_bitwise_identical_broadcasts() {
+        // The readiness-loop transport is a scheduling change only: a
+        // seeded pipelined run must emit the exact same per-round
+        // broadcast checksums and final parameters as the threaded
+        // baseline. (The M ∈ {64, 512, 4096} frame-level equivalence
+        // lives in tests/integration_evloop.rs.)
+        let run = |transport| {
+            let mut cfg = quad_cfg("dqgan:linf8", 30, 0.05);
+            cfg.agg = AggregatorConfig::pipelined();
+            cfg.transport = transport;
+            run_cluster(&cfg, |_m| {
+                let mut rng = Pcg32::new(777);
+                Ok(Box::new(QuadraticOperator::new(32, 0.1, &mut rng)))
+            })
+            .unwrap()
+        };
+        let ev = run(TransportMode::EvLoop);
+        let th = run(TransportMode::Threads);
+        let fnvs = |r: &TrainReport| {
+            r.records.iter().map(|x| (x.round, x.broadcast_fnv)).collect::<Vec<_>>()
+        };
+        assert_eq!(fnvs(&ev), fnvs(&th), "broadcast checksums must match bitwise");
+        assert_eq!(ev.worker0.final_params, th.worker0.final_params);
     }
 
     #[test]

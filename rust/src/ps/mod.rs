@@ -83,4 +83,9 @@ pub struct RoundRecord {
     /// Mean losses (when the model reports them).
     pub loss_g: Option<f32>,
     pub loss_d: Option<f32>,
+    /// Peak live OS threads in the leader process observed during this
+    /// round (`/proc/self/task`; 0 = unknown platform). The telemetry
+    /// behind the readiness-loop transport's O(1)-threads claim: flat in
+    /// M under `--transport evloop`, O(M) under `--transport threads`.
+    pub threads_peak: usize,
 }

@@ -53,6 +53,7 @@ use crate::comm::{BroadcastHandle, Message, MsgKind, ServerEnd, StreamDirective}
 use crate::config::{AggMode, AggregatorConfig, PolicyConfig};
 use crate::util::bytes::{fnv1a64_f32, put_f32_slice};
 use crate::util::stats::norm2_sq;
+use crate::util::threads::live_threads;
 use crate::util::timer::Stopwatch;
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -146,6 +147,11 @@ pub fn serve_rounds_with(
         }
         let sw = Stopwatch::start();
         let round_start = Instant::now();
+        // Leader-process thread census (running max over the round's
+        // sample points): the O(1)-vs-O(M) evidence behind `--transport
+        // evloop`, sampled where transports spawn threads — after the
+        // gather (reader threads) and after the broadcast (writers).
+        let mut threads_peak = live_threads();
         let mut bytes_up = 0usize;
         // Leader time inside `Aggregator::accept`: payload decode plus
         // the windowed reduce folds; the aggregator's `ReduceTiming`
@@ -280,6 +286,7 @@ pub fn serve_rounds_with(
             None => agg.aggregate(round, &batch_msgs, &decoder)?,
         };
         let batch_wall = batch_sw.elapsed_secs();
+        threads_peak = threads_peak.max(live_threads());
         let avg_payload_norm_sq = norm2_sq(avg);
         // Per-round fingerprint of the broadcast values (bit-pattern
         // checksum) — what the CI reduce-drift check diffs across
@@ -337,6 +344,7 @@ pub fn serve_rounds_with(
         // queue backpressure (a receiver `pipeline_depth` broadcasts
         // behind) on the asynchronous one.
         wait_secs += t.elapsed_secs();
+        threads_peak = threads_peak.max(live_threads());
         let rec = RoundRecord {
             round,
             avg_payload_norm_sq,
@@ -350,6 +358,7 @@ pub fn serve_rounds_with(
             overlap_secs,
             workers_included,
             workers_skipped: m - workers_included,
+            threads_peak,
             ..Default::default()
         };
         on_round(&rec);

@@ -121,6 +121,10 @@ pub fn worker_loop(
                     }
                     MsgKind::Broadcast | MsgKind::PartialBroadcast if msg.round >= round => {
                         apply_broadcast(algo, dim, id, &msg, msg.round == round)?;
+                        // Ack the APPLY (ack-based transports only; no-op
+                        // elsewhere). Errors are ignored: the leader that
+                        // would consume this ack is already tearing down.
+                        let _ = transport.ack(msg.round);
                         completed = completed.max(msg.round + 1);
                         if msg.round == round {
                             if let Some(cb) = eval.as_deref_mut() {
@@ -145,6 +149,12 @@ pub fn worker_loop(
             MsgKind::Broadcast | MsgKind::PartialBroadcast => {
                 anyhow::ensure!(msg.round == round, "broadcast round skew");
                 apply_broadcast(algo, dim, id, &msg, true)?;
+                // Ack the APPLY — this is what `--pipeline-depth` bounds
+                // on ack-based transports (Lemma-1 staleness), and a
+                // default no-op on the threaded ones. Errors are ignored:
+                // they only occur when the leader is already gone, where
+                // flow control is moot.
+                let _ = transport.ack(round);
             }
             MsgKind::Shutdown => break, // server aborted early
             other => anyhow::bail!("unexpected message kind {other:?}"),

@@ -8,4 +8,5 @@ pub mod logging;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod threads;
 pub mod timer;

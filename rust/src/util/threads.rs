@@ -1,0 +1,49 @@
+//! Process thread-count observation — the telemetry hook behind the
+//! readiness-loop transport's O(1)-threads claim (`threads_peak` in
+//! `RoundRecord` / `--round-csv`).
+
+/// Number of live OS threads in this process, read from
+/// `/proc/self/task`. On non-Linux platforms (no procfs) this degrades
+/// to 0, which callers treat as "unknown" — telemetry only, never a
+/// correctness input.
+pub fn live_threads() -> usize {
+    #[cfg(target_os = "linux")]
+    {
+        std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn counts_spawned_threads() {
+        let base = live_threads();
+        assert!(base >= 1, "at least the calling thread");
+        // Park two threads on a channel; the count must rise by exactly 2
+        // while they live.
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let rx = std::sync::Arc::clone(&rx);
+                std::thread::spawn(move || {
+                    let _ = rx.lock().unwrap().recv();
+                })
+            })
+            .collect();
+        // The spawned threads are live the moment spawn returns (the
+        // parent observes them in /proc/self/task even before they park).
+        assert!(live_threads() >= base + 2);
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -21,6 +21,7 @@ fn mlp_cluster(algo: &str, rounds: u64, lr: f32, seed: u64) -> dqgan::ps::TrainR
         eval_every: rounds / 4,
         keep_stats: true,
         agg: Default::default(),
+        transport: Default::default(),
     };
     run_cluster(&cfg, |_m| Ok(Box::new(MlpGan::new(MlpGanConfig::default())))).unwrap()
 }

@@ -1,0 +1,147 @@
+//! Integration: the readiness-loop transport (`--transport evloop`) —
+//! one leader-side event loop driving every worker connection, with
+//! ack-based applied-broadcast flow control — locked down against the
+//! per-worker-thread baseline (`--transport threads`) by frame-level
+//! equivalence: at M ∈ {64, 512, 4096} in-process workers, every
+//! worker's downlink frame stream (kind, round and payload bytes)
+//! through a real [`serve_rounds_with`] run must be bitwise-identical
+//! across the two transports, and the data-plane byte accounting
+//! (uplink/downlink totals) must agree exactly — only the control
+//! plane (ack frames) may differ, by exactly M·rounds ack frames.
+//!
+//! Workers are driven by a fixed-size feeder-thread pool (thousands of
+//! in-process worker ends, a handful of OS threads), so the test itself
+//! scales the way the evloop leader does.
+
+use dqgan::comm::inproc::InprocWorkerEnd;
+use dqgan::comm::{inproc_cluster, inproc_cluster_evloop, Message, MsgKind, ServerEnd, WorkerEnd};
+use dqgan::compress::{Compressor, Identity};
+use dqgan::config::AggregatorConfig;
+use dqgan::ps::{serve_rounds_with, Decoder};
+use std::sync::Arc;
+
+const DIM: usize = 16;
+const ROUNDS: u64 = 3;
+const FEEDERS: usize = 8;
+
+fn identity_decoder() -> Decoder {
+    Arc::new(|bytes: &[u8], out: &mut [f32]| Identity.decode_into(bytes, out))
+}
+
+/// Deterministic per-(worker, round, lane) payload value — every arm
+/// feeds byte-identical uplink streams.
+fn lane_value(worker: u32, round: u64, lane: usize) -> f32 {
+    (worker as f32 + 1.0) * 1e-3 * (lane as f32 + 1.0) - round as f32 * 0.25
+}
+
+/// Drive one feeder's chunk of worker ends through all rounds: send
+/// every payload, then collect every broadcast (acking each as
+/// *applied* — a no-op on the threaded transport), then drain the
+/// shutdown frames. Returns each worker's downlink frames verbatim —
+/// the bytes under comparison.
+fn drive_chunk(ends: &mut [InprocWorkerEnd]) -> Vec<Vec<Message>> {
+    let mut got = vec![Vec::new(); ends.len()];
+    for round in 0..ROUNDS {
+        for end in ends.iter_mut() {
+            let id = end.id();
+            let v: Vec<f32> = (0..DIM).map(|j| lane_value(id, round, j)).collect();
+            let mut wire = Vec::new();
+            Identity.encode(&v, &mut wire);
+            end.send(Message::payload(id, round, wire)).unwrap();
+        }
+        for (end, frames) in ends.iter_mut().zip(got.iter_mut()) {
+            let b = end.recv().unwrap();
+            assert_eq!(b.round, round);
+            frames.push(b);
+            end.ack(round).unwrap();
+        }
+    }
+    for end in ends.iter_mut() {
+        assert_eq!(end.recv().unwrap().kind, MsgKind::Shutdown);
+    }
+    got
+}
+
+/// One full [`serve_rounds_with`] run over either in-process transport;
+/// returns each worker's received frames (worker-id order) plus the
+/// (up, down, ctrl) byte totals.
+fn run_arm(
+    m: usize,
+    evloop: bool,
+    agg: AggregatorConfig,
+) -> (Vec<Vec<Message>>, u64, u64, u64) {
+    let (mut server, ends, counter): (Box<dyn ServerEnd>, _, _) = if evloop {
+        let (s, e, c) = inproc_cluster_evloop(m);
+        (Box::new(s), e, c)
+    } else {
+        let (s, e, c) = inproc_cluster(m);
+        (Box::new(s), e, c)
+    };
+    // Contiguous chunks keep worker-id order after the flatten below.
+    let chunk = m.div_ceil(FEEDERS.min(m));
+    let mut chunks: Vec<Vec<InprocWorkerEnd>> = Vec::new();
+    let mut it = ends.into_iter();
+    loop {
+        let c: Vec<_> = it.by_ref().take(chunk).collect();
+        if c.is_empty() {
+            break;
+        }
+        chunks.push(c);
+    }
+    let frames = std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|mut c| s.spawn(move || drive_chunk(&mut c)))
+            .collect();
+        serve_rounds_with(&mut *server, identity_decoder(), DIM, ROUNDS, agg, |_| {})
+            .unwrap();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect::<Vec<Vec<Message>>>()
+    });
+    drop(server);
+    (frames, counter.up_total(), counter.down_total(), counter.ctrl_total())
+}
+
+/// The equivalence property at one M: identical frame streams, identical
+/// data-plane byte totals, and an evloop control plane of exactly one
+/// ack frame per (worker, round).
+fn assert_transports_agree(m: usize, threads_agg: AggregatorConfig) {
+    let (reference, t_up, t_down, t_ctrl) = run_arm(m, false, threads_agg);
+    let (got, e_up, e_down, e_ctrl) =
+        run_arm(m, true, AggregatorConfig::pipelined_with_depth(2));
+    assert_eq!(got.len(), m);
+    for (w, (g, r)) in got.iter().zip(reference.iter()).enumerate() {
+        assert_eq!(g, r, "worker {w} downlink frames diverge at M={m}");
+    }
+    assert_eq!((e_up, e_down), (t_up, t_down), "data-plane bytes diverge at M={m}");
+    assert_eq!(t_ctrl, 0, "threaded transport has no control plane");
+    let ack_len = Message::ack(0, 0).frame_len() as u64;
+    assert_eq!(e_ctrl, m as u64 * ROUNDS * ack_len, "one ack per applied broadcast");
+}
+
+#[test]
+fn evloop_matches_threads_bitwise_at_m64() {
+    // Small-M half: both arms run the full pipelined engine (the
+    // threaded transport's 64-writer-thread army is still affordable
+    // here), so the comparison covers async broadcasts + ack-bounded
+    // depth against writer-queue-bounded depth.
+    assert_transports_agree(64, AggregatorConfig::pipelined_with_depth(2));
+}
+
+#[test]
+fn evloop_matches_threads_bitwise_at_m512() {
+    // At-scale halves: the threaded reference arm runs the streaming
+    // engine's synchronous broadcast path (bitwise-identical to its
+    // pipelined path by the integration_pipeline suite) precisely
+    // because a 512/4096-thread writer army is the pathology the
+    // readiness loop exists to remove — the evloop arm still runs
+    // fully pipelined with ack flow control.
+    assert_transports_agree(512, AggregatorConfig::streaming());
+}
+
+#[test]
+fn evloop_matches_threads_bitwise_at_m4096() {
+    assert_transports_agree(4096, AggregatorConfig::streaming());
+}

@@ -308,6 +308,7 @@ fn pipelined_cluster_is_bitwise_identical_to_sequential() {
             eval_every: 0,
             keep_stats: false,
             agg,
+            transport: Default::default(),
         };
         run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(7);
@@ -407,6 +408,7 @@ fn pipelined_kofm_cluster_converges_with_rotating_skips() {
             policy: PolicyConfig::KofM { k: 2 },
             ..Default::default()
         },
+        transport: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| {
         let mut rng = Pcg32::new(321);

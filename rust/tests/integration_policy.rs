@@ -74,6 +74,7 @@ fn full_policy_cluster_is_bitwise_identical_to_sequential() {
             eval_every: 0,
             keep_stats: false,
             agg,
+            transport: Default::default(),
         };
         run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(7);
@@ -494,6 +495,7 @@ fn kofm_cluster_trains_end_to_end_with_rotating_skips() {
         eval_every: 0,
         keep_stats: false,
         agg: AggregatorConfig::streaming_with_policy(PolicyConfig::KofM { k: 2 }),
+        transport: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| {
         let mut rng = Pcg32::new(321);

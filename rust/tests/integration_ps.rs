@@ -29,6 +29,7 @@ fn full_cluster_all_algorithms_converge_on_quadratic() {
             eval_every: 0,
             keep_stats: false,
             agg: Default::default(),
+            transport: Default::default(),
         };
         let report = run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(321);
@@ -61,6 +62,7 @@ fn byte_accounting_matches_algorithm_prediction() {
         eval_every: 0,
         keep_stats: false,
         agg: Default::default(),
+        transport: Default::default(),
     };
     let report = run_cluster(&cfg, |_m| {
         let mut rng = Pcg32::new(9);
@@ -206,6 +208,7 @@ fn streaming_cluster_is_bitwise_identical_to_sequential() {
             eval_every: 0,
             keep_stats: false,
             agg: AggregatorConfig { mode, ..Default::default() },
+            transport: Default::default(),
         };
         run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(7);
