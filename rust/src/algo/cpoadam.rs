@@ -70,7 +70,7 @@ impl WorkerAlgo for CpoAdamWorker {
                 &self.f
             }
             Some(c) => {
-                c.compress_encoded_into(&self.f, rng, &mut self.wire_buf, &mut self.q);
+                c.compress_encoded_observed(&self.f, rng, &mut self.wire_buf, &mut self.q);
                 &self.q
             }
         };

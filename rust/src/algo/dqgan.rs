@@ -104,7 +104,7 @@ impl WorkerAlgo for DqganWorker {
         // line 7: p̂ = Q(p), fused with the wire encoding (bit-exact pair),
         // both written into reused round buffers.
         self.wire_buf.clear();
-        self.compressor.compress_encoded_into(&self.p, rng, &mut self.wire_buf, &mut self.q);
+        self.compressor.compress_encoded_observed(&self.p, rng, &mut self.wire_buf, &mut self.q);
         // line 8: e_t = p − p̂
         for i in 0..self.e.len() {
             self.e[i] = self.p[i] - self.q[i];

@@ -72,7 +72,7 @@ impl WorkerAlgo for DqganAdamWorker {
             self.p[i] = self.f[i] + self.e[i];
         }
         self.wire_buf.clear();
-        self.compressor.compress_encoded_into(&self.p, rng, &mut self.wire_buf, &mut self.q);
+        self.compressor.compress_encoded_observed(&self.p, rng, &mut self.wire_buf, &mut self.q);
         for i in 0..self.e.len() {
             self.e[i] = self.p[i] - self.q[i];
         }

@@ -171,18 +171,30 @@ impl AlgoKind {
     /// Server-side decoder for this algorithm's wire payloads: decodes a
     /// wire buffer *into* the caller's dense slice, so the leader's
     /// aggregation path never materializes intermediate `Vec`s (see
-    /// [`crate::ps::Aggregator`]).
+    /// [`crate::ps::Aggregator`]). Decode latency feeds the
+    /// `codec.decode_ns` histogram when metrics are on; with metrics off
+    /// the wrapper is one relaxed load.
     pub fn decoder(&self) -> crate::ps::Decoder {
         match self {
             Self::Dqgan { compressor }
             | Self::DqganAdam { compressor }
             | Self::CpoAdamGq { compressor } => {
                 let c: Arc<dyn crate::compress::Compressor> = Arc::from(compressor.build());
-                Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+                Arc::new(move |bytes: &[u8], out: &mut [f32]| {
+                    let t0 = crate::obs::maybe_now();
+                    let res = c.decode_into(bytes, out);
+                    crate::obs::record_elapsed(&crate::obs::metrics::CODEC_DECODE_NS, t0);
+                    res
+                })
             }
             Self::CpoAdam | Self::DistGda => {
                 let c = crate::compress::Identity;
-                Arc::new(move |bytes: &[u8], out: &mut [f32]| c.decode_into(bytes, out))
+                Arc::new(move |bytes: &[u8], out: &mut [f32]| {
+                    let t0 = crate::obs::maybe_now();
+                    let res = c.decode_into(bytes, out);
+                    crate::obs::record_elapsed(&crate::obs::metrics::CODEC_DECODE_NS, t0);
+                    res
+                })
             }
         }
     }

@@ -95,6 +95,24 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         agg,
         transport,
     };
+
+    // Observability sinks (ADR-004; the flags combine freely). The
+    // global gates are flipped before the run so every hot-path check
+    // is a single relaxed load; recording is counts and clock durations
+    // only, so broadcast bits are unaffected either way (CI diffs the
+    // round checksums between obs-on and obs-off runs).
+    let metrics_json_path = args.get("metrics-json").map(std::path::PathBuf::from);
+    let worker_csv_path = args.get("worker-csv").map(std::path::PathBuf::from);
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    if metrics_json_path.is_some() {
+        crate::obs::enable_metrics();
+    }
+    if worker_csv_path.is_some() {
+        crate::obs::enable_worker_rows();
+    }
+    if trace_path.is_some() {
+        crate::obs::enable_trace();
+    }
     crate::log_info!(
         "train: model={model} algo={} M={workers} B={batch} T={rounds} lr={lr} agg={:?} \
          reduce={:?} policy={} transport={} kernels={} ({})",
@@ -151,6 +169,31 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         let path = std::path::PathBuf::from(p);
         let written = crate::telemetry::write_round_records(&path, &report.records)?;
         println!("wrote per-round telemetry to {written}");
+    }
+    if let Some(path) = &metrics_json_path {
+        use crate::util::json::Json;
+        let mut meta = std::collections::BTreeMap::new();
+        meta.insert("algo".to_string(), Json::Str(cfg.algo.label()));
+        meta.insert("model".to_string(), Json::Str(model.clone()));
+        meta.insert("workers".to_string(), Json::Num(workers as f64));
+        meta.insert("rounds".to_string(), Json::Num(rounds as f64));
+        meta.insert("batch".to_string(), Json::Num(batch as f64));
+        meta.insert("seed".to_string(), Json::Num(seed as f64));
+        meta.insert("transport".to_string(), Json::Str(cfg.transport.label().to_string()));
+        meta.insert("kernels".to_string(), Json::Str(kernels.label().to_string()));
+        crate::obs::write_metrics_json(path, meta)?;
+        println!("wrote metrics dump to {}", path.display());
+    }
+    if let Some(path) = &worker_csv_path {
+        let written = crate::obs::write_worker_csv(path)?;
+        println!("wrote per-worker telemetry to {written}");
+    }
+    if let Some(path) = &trace_path {
+        crate::obs::write_trace(path)?;
+        println!(
+            "wrote trace-event JSON to {} (load in Perfetto or chrome://tracing)",
+            path.display()
+        );
     }
     Ok(())
 }
@@ -274,6 +317,23 @@ pub fn bench_compare(args: &mut Args) -> anyhow::Result<()> {
         rep.gate_failures.len()
     );
     println!("bench trajectory ok ✓");
+    Ok(())
+}
+
+/// `dqgan metrics-check`: validate a `--metrics-json` dump — schema tag
+/// plus one required key per **declared** metric (the same central
+/// enumeration the dump writes from). CI runs this on the seeded
+/// observability run so a silently dropped metric fails the build.
+pub fn metrics_check(args: &mut Args) -> anyhow::Result<()> {
+    let path = args
+        .get("file")
+        .ok_or_else(|| anyhow::anyhow!("need --file PATH (a --metrics-json dump)"))?;
+    let text =
+        std::fs::read_to_string(&path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let doc = crate::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+    crate::obs::check_metrics_json(&doc)?;
+    println!("metrics dump ok ✓ ({path}, schema {})", crate::obs::SCHEMA);
     Ok(())
 }
 

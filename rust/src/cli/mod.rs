@@ -21,6 +21,7 @@ pub fn run(argv: Vec<String>) -> crate::Result<()> {
         "figures" | "exp" | "experiment" => commands::figures(&mut args),
         "validate-compressors" => commands::validate_compressors(&mut args),
         "bench-compare" => commands::bench_compare(&mut args),
+        "metrics-check" => commands::metrics_check(&mut args),
         "info" => commands::info(&mut args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -50,6 +51,7 @@ USAGE:
               [--policy full|kofm:K|deadline:MS[,K]] [--liveness R]
               [--transport evloop|threads]
               [--kernels simd|scalar] [--round-csv PATH]
+              [--metrics-json PATH] [--worker-csv PATH] [--trace PATH]
       Train a GAN on the parameter-server runtime.
       Algorithms: dqgan[:comp] (Algorithm 2), dqgan-adam[:comp] (paper §4),
                   cpoadam, cpoadam-gq[:comp], gda
@@ -81,6 +83,15 @@ USAGE:
       count stays flat as workers scale; threads is the per-worker
       reader/writer baseline kept for A/B. Both transports produce
       bitwise-identical broadcasts — CI diffs the per-round checksums.
+      Observability (counts and clock durations only — never numerics,
+      so every bitwise A/B stays green with these on): --metrics-json
+      dumps the process-global metrics registry at run end
+      (schema-versioned JSON); --worker-csv writes one row per
+      (worker, round) with apply latency, ack RTT, absorbed-skip flag
+      and error-memory L2 norm; --trace writes Chrome trace-event JSON
+      (leader spans gather/decode/reduce/close/broadcast on tid 0,
+      worker i spans produce/recv/apply/ack on tid 1+i) — load it in
+      Perfetto or chrome://tracing.
 
   dqgan figures --id fig2|fig3|fig4|synthetic|bilinear|lemma1|thm3|all [--fast]
       Regenerate a paper figure / theory validation (CSV under results/).
@@ -97,11 +108,19 @@ USAGE:
       threshold, or any speedup_gates pair whose scalar/simd ratio in
       the fresh run is below the floor.
 
+  dqgan metrics-check --file PATH
+      Validate a --metrics-json dump: schema tag plus one required key
+      per declared metric (CI's missing-keys gate for the obs registry).
+
   dqgan info
       Show artifact manifest, platform and configuration info.
 
 ENVIRONMENT:
-  DQGAN_LOG=error|warn|info|debug|trace   log level (default info)
+  DQGAN_LOG=LEVEL[,TARGET=LEVEL]*         log filter (default info); levels
+                                          error|warn|info|debug|trace, with
+                                          per-target overrides by module
+                                          path segment, e.g.
+                                          DQGAN_LOG=info,evloop=trace
   DQGAN_ARTIFACTS=DIR                     artifacts dir (default artifacts/)
   DQGAN_RESULTS=DIR                       results dir (default results/)
   DQGAN_BENCH_JSON=PATH                   bench binaries merge a machine-

@@ -109,6 +109,7 @@ pub(crate) struct OutRing {
 impl OutRing {
     pub(crate) fn push(&mut self, wire: Arc<Vec<u8>>, pd: PendingDelivery) {
         self.queue.push_back((wire, pd));
+        crate::obs::metrics::EVLOOP_OUTRING_DEPTH.set(self.queue.len() as u64);
     }
 
     pub(crate) fn is_empty(&self) -> bool {
@@ -126,6 +127,11 @@ impl OutRing {
         sink: &mut W,
         mut on_frame: impl FnMut(usize),
     ) -> std::io::Result<()> {
+        // A nonzero cursor at entry means the previous pump stopped
+        // mid-frame (short write / WouldBlock) and we are resuming it.
+        if self.cursor > 0 {
+            crate::obs::metrics::EVLOOP_PARTIAL_WRITES_RESUMED.inc();
+        }
         while let Some((wire, _)) = self.queue.front() {
             let remaining = &wire[self.cursor..];
             match sink.write(remaining) {
@@ -206,6 +212,7 @@ impl AckLedger {
                 *n += 1;
             }
         }
+        Self::note_inflight(&st);
         true
     }
 
@@ -235,6 +242,7 @@ impl AckLedger {
                 *n += 1;
             }
         }
+        Self::note_inflight(&st);
         Ok(())
     }
 
@@ -244,6 +252,7 @@ impl AckLedger {
         if let Some(n) = st.inflight.get_mut(worker as usize) {
             *n = n.saturating_sub(1);
         }
+        Self::note_inflight(&st);
         drop(st);
         self.cv.notify_all();
     }
@@ -261,6 +270,23 @@ impl AckLedger {
     /// Unapplied-broadcast count for `worker` (structural test hook).
     pub(crate) fn inflight(&self, worker: u32) -> usize {
         self.state.lock().unwrap().inflight[worker as usize]
+    }
+
+    /// Publish the max live-worker inflight depth to the obs gauge
+    /// (current value; the gauge's high-water mark keeps the peak).
+    fn note_inflight(st: &LedgerState) {
+        if !crate::obs::metrics_enabled() {
+            return;
+        }
+        let peak = st
+            .inflight
+            .iter()
+            .zip(&st.dead)
+            .filter(|&(_, &dead)| !dead)
+            .map(|(&n, _)| n as u64)
+            .max()
+            .unwrap_or(0);
+        crate::obs::metrics::ACK_INFLIGHT.set(peak);
     }
 
     /// First live worker at or over `depth`, if any.

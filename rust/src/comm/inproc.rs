@@ -217,6 +217,10 @@ impl ServerEnd for InprocServerEnd {
     fn workers(&self) -> usize {
         self.to_workers.len()
     }
+
+    fn counter(&self) -> Option<Arc<ByteCounter>> {
+        Some(Arc::clone(&self.counter))
+    }
 }
 
 /// Build an in-process PS cluster with `m` workers. Returns the server
@@ -321,6 +325,7 @@ fn run_inproc_downlink(
             return;
         }
         counter.add_down(n);
+        crate::obs::metrics::EVLOOP_DELIVERIES.inc();
         pd.delivered();
     };
     let held = |w: usize, round: u64| {
@@ -332,17 +337,21 @@ fn run_inproc_downlink(
                 // Per-worker FIFO: anything already parked goes first.
                 if !parked[w].is_empty() || held(w, msg.round) {
                     parked[w].push_back((msg, pd));
+                    crate::obs::metrics::EVLOOP_PARKED_FRAMES.set(parked[w].len() as u64);
                 } else {
                     deliver_now(w, msg, pd, &mut failed);
                 }
             }
-            Ok(Ev::Poke) => {}
+            Ok(Ev::Poke) => {
+                crate::obs::metrics::EVLOOP_WAKEUPS.inc();
+            }
             Ok(Ev::Shutdown) | Err(_) => break,
         }
         // Pump every parked queue whose head gate has opened.
         for w in 0..m {
             while parked[w].front().is_some_and(|(msg, _)| !held(w, msg.round)) {
                 let (msg, pd) = parked[w].pop_front().unwrap();
+                crate::obs::metrics::EVLOOP_PARKED_FRAMES.set(parked[w].len() as u64);
                 deliver_now(w, msg, pd, &mut failed);
             }
         }
@@ -386,6 +395,7 @@ impl InprocEvloopServerEnd {
     /// are stashed for the next gather.
     fn stash_or_ack(&mut self, msg: Message) {
         if msg.kind == MsgKind::Ack {
+            crate::obs::note_ack(msg.worker as usize, msg.round);
             self.ledger.on_ack(msg.worker);
         } else {
             self.pending.push_back(msg);
@@ -398,9 +408,12 @@ impl InprocEvloopServerEnd {
             if let Some(msg) = self.pending.pop_front() {
                 return Ok(msg);
             }
+            let idle_t0 = crate::obs::maybe_now();
             let msg =
                 self.from_workers.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
+            crate::obs::record_elapsed(&crate::obs::metrics::EVLOOP_IDLE_WAIT_NS, idle_t0);
             if msg.kind == MsgKind::Ack {
+                crate::obs::note_ack(msg.worker as usize, msg.round);
                 self.ledger.on_ack(msg.worker);
                 continue;
             }
@@ -499,6 +512,7 @@ impl ServerEnd for InprocEvloopServerEnd {
                     }
                 };
                 if msg.kind == MsgKind::Ack {
+                    crate::obs::note_ack(msg.worker as usize, msg.round);
                     ledger.on_ack(msg.worker);
                     continue;
                 }
@@ -544,6 +558,10 @@ impl ServerEnd for InprocEvloopServerEnd {
 
     fn workers(&self) -> usize {
         self.m
+    }
+
+    fn counter(&self) -> Option<Arc<ByteCounter>> {
+        Some(Arc::clone(&self.counter))
     }
 }
 

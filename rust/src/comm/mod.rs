@@ -408,6 +408,14 @@ pub trait ServerEnd: Send {
     fn set_pipeline_depth(&mut self, _depth: usize) {}
     /// Number of workers.
     fn workers(&self) -> usize;
+    /// The transport's shared byte counter, when it keeps one: the
+    /// round engine snapshots `down_total()` around each broadcast for
+    /// the per-round `bytes_down` column, and the obs layer folds the
+    /// final totals into the unified `transport.bytes_*` metrics at
+    /// run end. Default: no counter (the quantities stay unknown).
+    fn counter(&self) -> Option<Arc<ByteCounter>> {
+        None
+    }
 }
 
 /// Shared driver for [`ServerEnd::recv_round_streaming_timed`]: pops

@@ -437,6 +437,10 @@ impl ServerEnd for TcpServerEnd {
     fn workers(&self) -> usize {
         self.streams.len()
     }
+
+    fn counter(&self) -> Option<Arc<ByteCounter>> {
+        Some(Arc::clone(&self.counter))
+    }
 }
 
 /// One broadcast command for the readiness loop: the encoded wire bytes
@@ -540,7 +544,11 @@ fn run_evloop(
         if closing && idx.is_empty() {
             return; // every live outbox flushed: teardown complete
         }
-        if let Err(e) = poll_ready(&mut fds, -1) {
+        crate::obs::metrics::EVLOOP_POLL_ITERATIONS.inc();
+        let idle_t0 = crate::obs::maybe_now();
+        let polled = poll_ready(&mut fds, -1);
+        crate::obs::record_elapsed(&crate::obs::metrics::EVLOOP_IDLE_WAIT_NS, idle_t0);
+        if let Err(e) = polled {
             // poll(2) itself failing is unrecoverable: fail every
             // connection so no gather or broadcast handle can hang.
             let what = e.to_string();
@@ -552,6 +560,7 @@ fn run_evloop(
             return;
         }
         if fds[0].revents & POLLIN != 0 {
+            crate::obs::metrics::EVLOOP_WAKEUPS.inc();
             drain_waker(&mut waker_rx);
         }
         // Drain commands on every wakeup (cheap when empty).
@@ -611,6 +620,7 @@ fn run_evloop(
                         // Control plane: ledger + ctrl accounting; never
                         // enters the gather stream.
                         counter.add_ctrl(msg.frame_len() + 4);
+                        crate::obs::note_ack(msg.worker as usize, msg.round);
                         ledger.on_ack(msg.worker);
                     } else {
                         // Uplink bytes are counted at the pop, exactly
@@ -625,9 +635,10 @@ fn run_evloop(
             }
             if revents & (POLLOUT | POLLERR | POLLHUP) != 0 && !conn.out.is_empty() {
                 let counter = &counter;
-                if let Err(e) =
-                    conn.out.pump(&mut conn.stream, |wire_len| counter.add_down(wire_len))
-                {
+                if let Err(e) = conn.out.pump(&mut conn.stream, |wire_len| {
+                    counter.add_down(wire_len);
+                    crate::obs::metrics::EVLOOP_DELIVERIES.inc();
+                }) {
                     fail_conn(conn, i, &e.to_string(), &shared, &ledger, &arrivals_tx);
                 }
             }
@@ -809,6 +820,10 @@ impl ServerEnd for TcpEvloopServerEnd {
 
     fn workers(&self) -> usize {
         self.m
+    }
+
+    fn counter(&self) -> Option<Arc<ByteCounter>> {
+        Some(Arc::clone(&self.counter))
     }
 }
 

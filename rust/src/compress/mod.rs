@@ -126,6 +126,36 @@ pub trait Compressor: Send + Sync {
         self.encode(q_out, buf);
     }
 
+    /// [`compress_encoded_into`](Self::compress_encoded_into) with codec
+    /// observability — the form the worker round loops call. When metrics
+    /// are enabled, the fused quantize+encode is timed into
+    /// `codec.encode_ns` and the payload sizes feed the observed
+    /// compression ratio (`codec.bytes_pre_total` = 4·d raw f32 bytes,
+    /// `codec.bytes_post_total` totals and `codec.bytes_wire` histograms
+    /// the encoded bytes). When disabled this is exactly
+    /// `compress_encoded_into` plus one relaxed load; the numerics are
+    /// untouched either way.
+    fn compress_encoded_observed(
+        &self,
+        v: &[f32],
+        rng: &mut Pcg32,
+        buf: &mut Vec<u8>,
+        q_out: &mut [f32],
+    ) {
+        if !crate::obs::metrics_enabled() {
+            self.compress_encoded_into(v, rng, buf, q_out);
+            return;
+        }
+        let before = buf.len();
+        let t0 = std::time::Instant::now();
+        self.compress_encoded_into(v, rng, buf, q_out);
+        crate::obs::metrics::CODEC_ENCODE_NS.record(t0.elapsed().as_nanos() as u64);
+        let wire = (buf.len() - before) as u64;
+        crate::obs::metrics::CODEC_BYTES_PRE_TOTAL.add(4 * v.len() as u64);
+        crate::obs::metrics::CODEC_BYTES_POST_TOTAL.add(wire);
+        crate::obs::metrics::CODEC_BYTES_WIRE.record(wire);
+    }
+
     /// [`compress_encoded_into`](Self::compress_encoded_into) returning a
     /// fresh dense Vec — convenience for tests/tooling; the worker round
     /// loop uses the `_into` form with reused buffers.

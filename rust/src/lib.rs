@@ -28,6 +28,8 @@ pub mod tensor;
 pub mod testutil;
 pub mod util;
 
+pub mod obs;
+
 pub mod compress;
 pub mod comm;
 pub mod optim;

@@ -1,0 +1,396 @@
+//! Observability: process-global metrics registry + span tracing
+//! (ADR-004).
+//!
+//! Two halves, both compiled in and both near-free when disabled:
+//!
+//! * [`registry`] — counters, gauges (with high-water marks) and
+//!   fixed-bucket log2 histograms, all `AtomicU64` statics declared
+//!   centrally in [`metrics`]. Dumped at run end by `--metrics-json`
+//!   as a schema-versioned document ([`SCHEMA`]).
+//! * [`trace`] — RAII spans emitting Chrome/Perfetto trace-event JSON
+//!   (`--trace`), lanes: leader round engine on tid 0, in-process
+//!   worker `i` on tid 1+i.
+//!
+//! This module also owns the cross-cutting state neither half fits:
+//! the broadcast-send timestamps the leader's ack RTT metric is
+//! computed from, and the per-(worker, round) row table behind
+//! `--worker-csv`.
+//!
+//! Everything here records **counts and clock durations only** — no
+//! training numerics are read or written, so flipping any obs flag
+//! cannot change a broadcast bit (CI diffs `broadcast_fnv` between
+//! obs-on and obs-off runs to enforce exactly that).
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{enable_metrics, metrics_enabled};
+pub use trace::{enable_trace, span, trace_enabled, worker_tid, LEADER_TID};
+
+use crate::comm::ByteCounter;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Version tag of the `--metrics-json` document; bump on any breaking
+/// reshape of the dump layout.
+pub const SCHEMA: &str = "dqgan.metrics.v1";
+
+/// Every process-global metric, declared in one place so the dump (and
+/// the `metrics-check` required-keys gate) enumerates the complete set
+/// — a metric whose code path never ran still appears as zeros. Use
+/// sites are one line: `obs::metrics::NAME.inc()` / `.set(v)` /
+/// `.record(v)`.
+pub mod metrics {
+    crate::obs::registry::obs_metrics! {
+        counters {
+            EVLOOP_POLL_ITERATIONS => "evloop.poll_iterations",
+            EVLOOP_WAKEUPS => "evloop.wakeups",
+            EVLOOP_PARTIAL_WRITES_RESUMED => "evloop.partial_writes_resumed",
+            EVLOOP_DELIVERIES => "evloop.deliveries",
+            AGG_CLOSE_INLINE => "agg.close_inline",
+            AGG_CLOSE_OFFLOADED => "agg.close_offloaded",
+            AGG_FOLD_POOL_DISPATCH => "agg.fold_pool_dispatch",
+            AGG_FOLD_CALLER_INLINE => "agg.fold_caller_inline",
+            WORKER_ABSORBED_SKIPS => "worker.absorbed_skips",
+            TRANSPORT_BYTES_UP => "transport.bytes_up",
+            TRANSPORT_BYTES_DOWN => "transport.bytes_down",
+            TRANSPORT_BYTES_CTRL => "transport.bytes_ctrl",
+            CODEC_BYTES_PRE_TOTAL => "codec.bytes_pre_total",
+            CODEC_BYTES_POST_TOTAL => "codec.bytes_post_total",
+        }
+        gauges {
+            EVLOOP_OUTRING_DEPTH => "evloop.outring_depth",
+            EVLOOP_PARKED_FRAMES => "evloop.parked_frames",
+            ACK_INFLIGHT => "ack.inflight",
+        }
+        histograms {
+            EVLOOP_IDLE_WAIT_NS => "evloop.idle_wait_ns",
+            CODEC_ENCODE_NS => "codec.encode_ns",
+            CODEC_DECODE_NS => "codec.decode_ns",
+            CODEC_BYTES_WIRE => "codec.bytes_wire",
+            WORKER_APPLY_NS => "worker.apply_ns",
+            WORKER_ACK_RTT_NS => "worker.ack_rtt_ns",
+            AGG_FOLD_BATCH_ELEMS => "agg.fold_batch_elems",
+        }
+    }
+}
+
+// ----------------------------------------------------- timing helpers ----
+
+/// Gated clock read: `None` (no syscall, single relaxed load) while
+/// metrics are disabled. Pair with [`record_elapsed`].
+#[inline]
+pub fn maybe_now() -> Option<Instant> {
+    if metrics_enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Record `t0.elapsed()` in nanoseconds into `h` when `t0` was taken
+/// (i.e. metrics were on at [`maybe_now`] time).
+#[inline]
+pub fn record_elapsed(h: &registry::Histogram, t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        h.record(t0.elapsed().as_nanos() as u64);
+    }
+}
+
+// ------------------------------------------- per-(worker, round) rows ----
+
+static WORKER_ROWS_ON: AtomicBool = AtomicBool::new(false);
+
+/// Whether `--worker-csv` row collection is on.
+#[inline]
+pub fn worker_rows_enabled() -> bool {
+    WORKER_ROWS_ON.load(Ordering::Relaxed)
+}
+
+/// Turn on per-(worker, round) row collection. Rows need the apply/ack
+/// clocks, so this implies [`enable_metrics`].
+pub fn enable_worker_rows() {
+    enable_metrics();
+    WORKER_ROWS_ON.store(true, Ordering::Relaxed);
+}
+
+#[derive(Default, Clone)]
+struct WorkerRow {
+    apply_ns: Option<u64>,
+    ack_rtt_ns: Option<u64>,
+    absorbed_skip: bool,
+    err_norm: Option<f64>,
+}
+
+/// Rows keyed (round, worker) so the CSV comes out round-major.
+static WORKER_ROWS: Mutex<BTreeMap<(u64, usize), WorkerRow>> = Mutex::new(BTreeMap::new());
+
+fn with_row(worker: usize, round: u64, f: impl FnOnce(&mut WorkerRow)) {
+    let mut rows = WORKER_ROWS.lock().expect("worker rows lock");
+    f(rows.entry((round, worker)).or_default());
+}
+
+// -------------------------------------------------- leader-side hooks ----
+
+/// Broadcast-send timestamps the ack RTT is measured against, most
+/// recent last. Bounded: the ledger caps rounds in flight far below
+/// this, so trimming the front never drops a round still awaiting acks.
+static BROADCAST_SENDS: Mutex<Vec<(u64, Instant)>> = Mutex::new(Vec::new());
+const BROADCAST_SENDS_CAP: usize = 1024;
+
+/// Leader hook: round `round`'s broadcast was handed to the transport
+/// now. The subsequent per-worker [`note_ack`] calls compute their RTT
+/// against this instant.
+pub fn note_broadcast_sent(round: u64) {
+    if !metrics_enabled() {
+        return;
+    }
+    let mut sends = BROADCAST_SENDS.lock().expect("broadcast sends lock");
+    sends.push((round, Instant::now()));
+    if sends.len() > BROADCAST_SENDS_CAP {
+        let excess = sends.len() - BROADCAST_SENDS_CAP;
+        sends.drain(..excess);
+    }
+}
+
+/// Leader hook: worker `worker` acked round `round` (seen at the
+/// leader's `AckLedger`). Records the send→ack RTT histogram and the
+/// worker row's ack column.
+pub fn note_ack(worker: usize, round: u64) {
+    if !metrics_enabled() {
+        return;
+    }
+    let sent = {
+        let sends = BROADCAST_SENDS.lock().expect("broadcast sends lock");
+        sends.iter().rev().find(|(r, _)| *r == round).map(|(_, t)| *t)
+    };
+    let Some(sent) = sent else {
+        return; // broadcast predates enable, or was trimmed
+    };
+    let rtt_ns = sent.elapsed().as_nanos() as u64;
+    metrics::WORKER_ACK_RTT_NS.record(rtt_ns);
+    if worker_rows_enabled() {
+        with_row(worker, round, |row| row.ack_rtt_ns = Some(rtt_ns));
+    }
+}
+
+// -------------------------------------------------- worker-side hooks ----
+
+/// Worker hook: produce() for `round` finished with error memory of
+/// squared L2 norm `err_norm_sq`.
+pub fn worker_produce(worker: usize, round: u64, err_norm_sq: f32) {
+    if worker_rows_enabled() {
+        with_row(worker, round, |row| row.err_norm = Some((err_norm_sq as f64).sqrt()));
+    }
+}
+
+/// Worker hook: a broadcast for `round` was applied in `apply_ns`
+/// nanoseconds; `absorbed` marks the policy-skipped path (payload
+/// folded back into error memory, e ← e + q̂).
+pub fn worker_apply(worker: usize, round: u64, apply_ns: u64, absorbed: bool) {
+    metrics::WORKER_APPLY_NS.record(apply_ns);
+    if absorbed {
+        metrics::WORKER_ABSORBED_SKIPS.inc();
+    }
+    if worker_rows_enabled() {
+        with_row(worker, round, |row| {
+            row.apply_ns = Some(apply_ns);
+            row.absorbed_skip = absorbed;
+        });
+    }
+}
+
+// ----------------------------------------------------- run-end sinks ----
+
+/// Fold a transport's final [`ByteCounter`] totals into the unified
+/// `transport.bytes_*` counters (called once per run, at teardown).
+pub fn record_transport_totals(counter: &ByteCounter) {
+    metrics::TRANSPORT_BYTES_UP.add(counter.up_total());
+    metrics::TRANSPORT_BYTES_DOWN.add(counter.down_total());
+    metrics::TRANSPORT_BYTES_CTRL.add(counter.ctrl_total());
+}
+
+/// Render the full registry dump (every declared metric, zeros
+/// included) with `meta` under a `"run"` key.
+pub fn metrics_json(meta: BTreeMap<String, Json>) -> Json {
+    registry::registry_json(
+        SCHEMA,
+        meta,
+        metrics::all_counters(),
+        metrics::all_gauges(),
+        metrics::all_histograms(),
+    )
+}
+
+/// Write the metrics dump to `path` (creating parent directories).
+pub fn write_metrics_json(path: &Path, meta: BTreeMap<String, Json>) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, metrics_json(meta).to_string_compact() + "\n")?;
+    Ok(())
+}
+
+/// Validate a parsed metrics dump: schema tag, section presence, and
+/// one required key per **declared** metric — driven off the same
+/// central declaration the dump is, so the check can never drift from
+/// the registry. Shared by `dqgan metrics-check` and the obs
+/// integration test.
+pub fn check_metrics_json(doc: &Json) -> anyhow::Result<()> {
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("metrics dump: missing schema tag"))?;
+    anyhow::ensure!(schema == SCHEMA, "metrics dump: schema {schema:?}, expected {SCHEMA:?}");
+    anyhow::ensure!(doc.get("run").and_then(Json::as_obj).is_some(), "missing run section");
+    let counters = doc
+        .get("counters")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("metrics dump: missing counters section"))?;
+    for c in metrics::all_counters() {
+        anyhow::ensure!(
+            counters.get(c.name()).and_then(Json::as_f64).is_some(),
+            "metrics dump: missing counter {:?}",
+            c.name()
+        );
+    }
+    let gauges = doc
+        .get("gauges")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("metrics dump: missing gauges section"))?;
+    for g in metrics::all_gauges() {
+        let entry = gauges
+            .get(g.name())
+            .ok_or_else(|| anyhow::anyhow!("metrics dump: missing gauge {:?}", g.name()))?;
+        anyhow::ensure!(
+            entry.get("value").and_then(Json::as_f64).is_some()
+                && entry.get("hwm").and_then(Json::as_f64).is_some(),
+            "metrics dump: gauge {:?} missing value/hwm",
+            g.name()
+        );
+    }
+    let hists = doc
+        .get("histograms")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("metrics dump: missing histograms section"))?;
+    for h in metrics::all_histograms() {
+        let entry = hists
+            .get(h.name())
+            .ok_or_else(|| anyhow::anyhow!("metrics dump: missing histogram {:?}", h.name()))?;
+        anyhow::ensure!(
+            entry.get("count").and_then(Json::as_f64).is_some()
+                && entry.get("sum").and_then(Json::as_f64).is_some()
+                && entry.get("buckets").and_then(Json::as_obj).is_some(),
+            "metrics dump: histogram {:?} missing count/sum/buckets",
+            h.name()
+        );
+    }
+    Ok(())
+}
+
+/// Column order of the `--worker-csv` sink: one row per
+/// (worker, round), empty cells where a quantity was never observed
+/// (e.g. no ack RTT under `--transport threads` with acks off).
+pub const WORKER_CSV_HEADER: [&str; 6] =
+    ["worker", "round", "apply_ns", "ack_rtt_ns", "absorbed_skip", "err_norm"];
+
+/// Write the per-(worker, round) rows collected so far to `path`
+/// (round-major order) and return the written path.
+pub fn write_worker_csv(path: &Path) -> anyhow::Result<String> {
+    let rows = WORKER_ROWS.lock().expect("worker rows lock").clone();
+    let mut csv = crate::telemetry::CsvWriter::create(path, &WORKER_CSV_HEADER)?;
+    let opt_u64 = |v: Option<u64>| v.map(|n| n.to_string()).unwrap_or_default();
+    for ((round, worker), row) in &rows {
+        csv.row(&[
+            worker.to_string(),
+            round.to_string(),
+            opt_u64(row.apply_ns),
+            opt_u64(row.ack_rtt_ns),
+            if row.absorbed_skip { "1".to_string() } else { "0".to_string() },
+            row.err_norm.map(|n| format!("{n:.6e}")).unwrap_or_default(),
+        ])?;
+    }
+    csv.finish()
+}
+
+/// Write the collected trace spans to `path` as Chrome trace-event
+/// JSON (creating parent directories). Drains the span buffer.
+pub fn write_trace(path: &Path) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, trace::trace_json().to_string_compact() + "\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_dump_passes_its_own_check() {
+        enable_metrics();
+        let mut meta = BTreeMap::new();
+        meta.insert("workers".to_string(), Json::Num(4.0));
+        let doc = metrics_json(meta);
+        let back = Json::parse(&doc.to_string_compact()).unwrap();
+        check_metrics_json(&back).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_missing_required_keys() {
+        enable_metrics();
+        let doc = metrics_json(BTreeMap::new());
+        let text = doc.to_string_compact();
+        // Drop one required counter and the check must name it.
+        let mangled = text.replace("\"evloop.deliveries\"", "\"evloop.deliveries_gone\"");
+        let back = Json::parse(&mangled).unwrap();
+        let err = check_metrics_json(&back).unwrap_err().to_string();
+        assert!(err.contains("evloop.deliveries"), "error names the missing key: {err}");
+        // Wrong schema tag is rejected up front.
+        let wrong = text.replace(SCHEMA, "dqgan.metrics.v0");
+        let back = Json::parse(&wrong).unwrap();
+        assert!(check_metrics_json(&back).is_err());
+    }
+
+    #[test]
+    fn worker_rows_capture_apply_ack_and_absorb() {
+        enable_worker_rows();
+        assert!(metrics_enabled(), "worker rows imply metrics");
+        // Use a round number no real run in this test binary reaches.
+        let round = 900_000_071;
+        note_broadcast_sent(round);
+        worker_produce(3, round, 4.0);
+        worker_apply(3, round, 1234, true);
+        note_ack(3, round);
+        let path = std::env::temp_dir().join("dqgan_worker_csv_test.csv");
+        let p = write_worker_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let line = text
+            .lines()
+            .find(|l| l.starts_with(&format!("3,{round},")))
+            .expect("row for (worker 3, test round)");
+        let cells: Vec<&str> = line.split(',').collect();
+        assert_eq!(cells.len(), WORKER_CSV_HEADER.len());
+        assert_eq!(cells[2], "1234", "apply_ns recorded");
+        assert!(!cells[3].is_empty(), "ack RTT recorded");
+        assert_eq!(cells[4], "1", "absorbed skip flagged");
+        assert_eq!(cells[5], "2.000000e0", "err L2 norm = sqrt(4)");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ack_without_matching_broadcast_is_ignored() {
+        enable_worker_rows();
+        note_ack(17, 900_000_999); // round was never broadcast
+        let rows = WORKER_ROWS.lock().unwrap();
+        assert!(
+            !rows.contains_key(&(900_000_999, 17)),
+            "unmatched ack must not fabricate a worker row"
+        );
+    }
+}

@@ -1,0 +1,377 @@
+//! Zero-dependency metrics registry: process-global counters, gauges
+//! (with high-water marks) and fixed-bucket log2 histograms, all plain
+//! `AtomicU64` state so the hot path is lock-free.
+//!
+//! ## Hot-path contract (ADR-004)
+//!
+//! Every record method starts with a **single relaxed load** of the
+//! process-global [`metrics_enabled`] flag and returns immediately when
+//! observability is off — no `Instant::now()`, no registry lookup, no
+//! fence. Callers that need a timestamp pair use
+//! [`crate::obs::maybe_now`] so the clock read itself is gated too.
+//! When enabled, a record is one or a few relaxed `fetch_add`s on
+//! statics: no locks, no allocation, safe from any thread (pool
+//! workers, transport loops, in-process worker threads).
+//!
+//! ## Registration
+//!
+//! Metrics are `static` items declared centrally through the
+//! [`obs_metrics!`] macro (one line per metric — see
+//! `crate::obs::metrics`), which also generates the complete
+//! enumeration the JSON dump walks. Central declaration is what makes
+//! the dump *total*: a metric whose code path never ran still appears
+//! (as zeros), so the CI `metrics-check` schema gate can assert key
+//! presence without depending on which branches a run exercised.
+//!
+//! ## Determinism
+//!
+//! Nothing here touches training numerics: the registry records counts
+//! and clock durations only, so enabling metrics cannot move a single
+//! bit of any broadcast (the CI obs-on/obs-off `broadcast_fnv` diff
+//! enforces this end to end).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Process-global metrics switch. Off by default; flipped once by
+/// [`enable_metrics`] (never back — tests and sinks rely on
+/// monotonicity within a process).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The one relaxed load every hot-path record gates on.
+#[inline(always)]
+pub fn metrics_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn metrics recording on for the rest of the process lifetime.
+pub fn enable_metrics() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Monotonic event counter.
+pub struct Counter {
+    name: &'static str,
+    cell: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str) -> Self {
+        Self { name, cell: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Add `n` (no-op while metrics are disabled).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !metrics_enabled() {
+            return;
+        }
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1 (no-op while metrics are disabled).
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge with a monotone high-water mark.
+pub struct Gauge {
+    name: &'static str,
+    value: AtomicU64,
+    hwm: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str) -> Self {
+        Self { name, value: AtomicU64::new(0), hwm: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Record the current level; the high-water mark keeps the max ever
+    /// seen (no-op while metrics are disabled).
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if !metrics_enabled() {
+            return;
+        }
+        self.value.store(v, Ordering::Relaxed);
+        self.hwm.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn hwm(&self) -> u64 {
+        self.hwm.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets: bucket 0 holds exact zeros, bucket b
+/// (1 ≤ b ≤ 64) holds values v with `64 − v.leading_zeros() == b`,
+/// i.e. v ∈ [2^(b−1), 2^b − 1]. `u64::MAX` lands in bucket 64.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Map a value to its log2 bucket index (see [`HIST_BUCKETS`]).
+#[inline]
+pub fn log2_bucket(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// Fixed-bucket log2 histogram for latencies (ns) and sizes (bytes):
+/// 65 relaxed `AtomicU64` buckets plus running count and sum, so mean
+/// and order-of-magnitude distribution are both recoverable from the
+/// dump without any per-record allocation.
+pub struct Histogram {
+    name: &'static str,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new(name: &'static str) -> Self {
+        // Const-item trick: a `const` with interior mutability is the
+        // sanctioned way to array-initialize atomics.
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self {
+            name,
+            buckets: [ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Record one observation (no-op while metrics are disabled).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !metrics_enabled() {
+            return;
+        }
+        self.buckets[log2_bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+}
+
+/// Declare the process-global metric statics **and** the total
+/// enumeration the dump walks, in one place. Adding a metric is one
+/// line inside the block; the use site is then
+/// `obs::metrics::NAME.inc()` (or `.set`/`.record`) — also one line.
+macro_rules! obs_metrics {
+    (
+        counters { $($cname:ident => $ckey:literal,)* }
+        gauges { $($gname:ident => $gkey:literal,)* }
+        histograms { $($hname:ident => $hkey:literal,)* }
+    ) => {
+        $(pub static $cname: $crate::obs::registry::Counter =
+            $crate::obs::registry::Counter::new($ckey);)*
+        $(pub static $gname: $crate::obs::registry::Gauge =
+            $crate::obs::registry::Gauge::new($gkey);)*
+        $(pub static $hname: $crate::obs::registry::Histogram =
+            $crate::obs::registry::Histogram::new($hkey);)*
+
+        /// Every declared counter (declaration order).
+        pub fn all_counters() -> &'static [&'static $crate::obs::registry::Counter] {
+            &[$(&$cname),*]
+        }
+        /// Every declared gauge (declaration order).
+        pub fn all_gauges() -> &'static [&'static $crate::obs::registry::Gauge] {
+            &[$(&$gname),*]
+        }
+        /// Every declared histogram (declaration order).
+        pub fn all_histograms() -> &'static [&'static $crate::obs::registry::Histogram] {
+            &[$(&$hname),*]
+        }
+    };
+}
+pub(crate) use obs_metrics;
+
+/// Serialize one histogram as `{count, sum, buckets: {"<idx>": n, …}}`
+/// (only non-empty buckets are emitted — the dump stays readable at 65
+/// buckets per histogram).
+fn histogram_json(h: &Histogram) -> Json {
+    let mut buckets = BTreeMap::new();
+    for i in 0..HIST_BUCKETS {
+        let n = h.bucket(i);
+        if n > 0 {
+            buckets.insert(format!("{i:02}"), Json::Num(n as f64));
+        }
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("count".to_string(), Json::Num(h.count() as f64));
+    obj.insert("sum".to_string(), Json::Num(h.sum() as f64));
+    obj.insert("buckets".to_string(), Json::Obj(buckets));
+    Json::Obj(obj)
+}
+
+/// Render the full registry (every declared metric, zeros included) as
+/// the schema-versioned dump object. `meta` rides along under a "run"
+/// key so the dump is self-describing.
+pub fn registry_json(
+    schema: &str,
+    meta: BTreeMap<String, Json>,
+    counters: &[&'static Counter],
+    gauges: &[&'static Gauge],
+    histograms: &[&'static Histogram],
+) -> Json {
+    let mut c = BTreeMap::new();
+    for m in counters {
+        c.insert(m.name().to_string(), Json::Num(m.get() as f64));
+    }
+    let mut g = BTreeMap::new();
+    for m in gauges {
+        let mut obj = BTreeMap::new();
+        obj.insert("value".to_string(), Json::Num(m.value() as f64));
+        obj.insert("hwm".to_string(), Json::Num(m.hwm() as f64));
+        g.insert(m.name().to_string(), Json::Obj(obj));
+    }
+    let mut h = BTreeMap::new();
+    for m in histograms {
+        h.insert(m.name().to_string(), histogram_json(m));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str(schema.to_string()));
+    root.insert("run".to_string(), Json::Obj(meta));
+    root.insert("counters".to_string(), Json::Obj(c));
+    root.insert("gauges".to_string(), Json::Obj(g));
+    root.insert("histograms".to_string(), Json::Obj(h));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Dedicated test statics: unit tests share one process, so these
+    // must not be metrics any production path records into, and all
+    // assertions are on values only this test drives.
+    static T_COUNT: Counter = Counter::new("test.registry.count");
+    static T_GAUGE: Gauge = Gauge::new("test.registry.gauge");
+    static T_HIST: Histogram = Histogram::new("test.registry.hist");
+    static T_OFF: Counter = Counter::new("test.registry.off");
+
+    #[test]
+    fn log2_bucket_boundary_edge_cases() {
+        assert_eq!(log2_bucket(0), 0, "exact zero has its own bucket");
+        assert_eq!(log2_bucket(1), 1);
+        assert_eq!(log2_bucket(2), 2);
+        assert_eq!(log2_bucket(3), 2);
+        assert_eq!(log2_bucket(4), 3);
+        assert_eq!(log2_bucket((1 << 10) - 1), 10);
+        assert_eq!(log2_bucket(1 << 10), 11);
+        assert_eq!(log2_bucket(u64::MAX), 64, "top bucket holds u64::MAX");
+        assert_eq!(log2_bucket(1 << 63), 64);
+        assert_eq!(log2_bucket((1 << 63) - 1), 63);
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        // The enable flag is process-global and other tests in this
+        // binary flip it concurrently, so the disabled-path assertion
+        // must tolerate a racing enable: if the add recorded anything,
+        // the flag must have been flipped between our check and the
+        // add; if the flag stayed off, nothing may be recorded.
+        if !metrics_enabled() {
+            T_OFF.add(7);
+            let v = T_OFF.get();
+            assert!(
+                v == 0 || metrics_enabled(),
+                "disabled add recorded {v} with the flag still off"
+            );
+        }
+        enable_metrics();
+        let before = T_OFF.get();
+        T_OFF.add(5);
+        assert_eq!(T_OFF.get(), before + 5);
+    }
+
+    #[test]
+    fn concurrent_increments_under_the_thread_pool_lose_nothing() {
+        enable_metrics();
+        let c0 = T_COUNT.get();
+        let h0 = T_HIST.count();
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let mut units: Vec<u64> = (0..64u64).collect();
+        pool.parallel_for_mut(&mut units, |_, seed| {
+            for k in 0..1000u64 {
+                T_COUNT.inc();
+                T_HIST.record(*seed * 1000 + k);
+                T_GAUGE.set(*seed);
+            }
+        });
+        assert_eq!(T_COUNT.get() - c0, 64 * 1000, "no increment may be lost");
+        assert_eq!(T_HIST.count() - h0, 64 * 1000);
+        assert!(T_GAUGE.hwm() >= 63, "hwm keeps the max of all threads");
+        // Bucket totals must equal the record count (every record lands
+        // in exactly one bucket).
+        let bucket_sum: u64 = (0..HIST_BUCKETS).map(|i| T_HIST.bucket(i)).sum();
+        assert_eq!(bucket_sum, T_HIST.count());
+    }
+
+    #[test]
+    fn gauge_tracks_value_and_high_water_separately() {
+        enable_metrics();
+        static G: Gauge = Gauge::new("test.registry.gauge2");
+        G.set(9);
+        G.set(3);
+        assert_eq!(G.value(), 3, "value follows the last set");
+        assert_eq!(G.hwm(), 9, "hwm keeps the peak");
+    }
+
+    #[test]
+    fn registry_json_emits_every_declared_metric() {
+        enable_metrics();
+        static C: Counter = Counter::new("test.json.counter");
+        static G: Gauge = Gauge::new("test.json.gauge");
+        static H: Histogram = Histogram::new("test.json.hist");
+        H.record(0);
+        H.record(u64::MAX);
+        let j = registry_json("dqgan.metrics.v1", BTreeMap::new(), &[&C], &[&G], &[&H]);
+        let text = j.to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "dqgan.metrics.v1");
+        let counters = back.get("counters").unwrap();
+        assert_eq!(counters.get("test.json.counter").unwrap().as_f64().unwrap(), 0.0);
+        let hist = back.get("histograms").unwrap().get("test.json.hist").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64().unwrap(), 2.0);
+        let buckets = hist.get("buckets").unwrap();
+        assert!(buckets.get("00").is_some(), "zero bucket present");
+        assert!(buckets.get("64").is_some(), "u64::MAX bucket present");
+    }
+}

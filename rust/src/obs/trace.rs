@@ -1,0 +1,173 @@
+//! Span tracing to Chrome/Perfetto trace-event JSON.
+//!
+//! Spans are RAII guards: [`span`] stamps a start time, the guard's
+//! `Drop` stamps the end and pushes one `ph:"X"` complete event onto a
+//! global buffer, and [`write_trace`] serializes the buffer through
+//! `util/json.rs` at run end. Open the file at <https://ui.perfetto.dev>
+//! (or `chrome://tracing`) to see the gather/broadcast overlap as lanes.
+//!
+//! Thread-id convention: the leader's round engine is `tid 0`
+//! ([`LEADER_TID`]), in-process worker `i` is `tid 1 + i`
+//! ([`worker_tid`]); all events share `pid 1`. Timestamps are
+//! microseconds (fractional) since [`enable_trace`], which Perfetto
+//! renders as a zero-based timeline.
+//!
+//! Like the metrics registry, the disabled fast path is a single
+//! relaxed atomic load: [`span`] returns an inert guard without reading
+//! the clock when tracing is off. When on, each span takes the buffer
+//! mutex exactly once (at drop) — acceptable for the round-level spans
+//! we emit (tens per round), and never on any per-element path.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Leader round-engine lane.
+pub const LEADER_TID: u64 = 0;
+
+/// Lane for in-process worker `id`.
+pub fn worker_tid(id: usize) -> u64 {
+    1 + id as u64
+}
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+
+/// One completed span, pending serialization.
+struct TraceEvent {
+    name: &'static str,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    round: u64,
+}
+
+/// The one relaxed load every span site gates on.
+#[inline(always)]
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Turn span collection on for the rest of the process lifetime and pin
+/// the trace epoch (t = 0) to now.
+pub fn enable_trace() {
+    EPOCH.get_or_init(Instant::now);
+    TRACE_ON.store(true, Ordering::Relaxed);
+}
+
+/// RAII span guard: created by [`span`], pushes its event on drop.
+/// Inert (no clock read, no buffer touch) when tracing is disabled.
+pub struct Span {
+    live: Option<(&'static str, u64, u64, Instant)>,
+}
+
+/// Open a span named `name` on lane `tid` for `round`. Drop the guard
+/// to close it.
+#[inline]
+pub fn span(name: &'static str, tid: u64, round: u64) -> Span {
+    if !trace_enabled() {
+        return Span { live: None };
+    }
+    Span { live: Some((name, tid, round, Instant::now())) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some((name, tid, round, start)) = self.live.take() else {
+            return;
+        };
+        let epoch = *EPOCH.get().expect("trace enabled implies epoch set");
+        let ts_us = start.duration_since(epoch).as_secs_f64() * 1e6;
+        let dur_us = start.elapsed().as_secs_f64() * 1e6;
+        EVENTS.lock().expect("trace buffer lock").push(TraceEvent {
+            name,
+            tid,
+            ts_us,
+            dur_us,
+            round,
+        });
+    }
+}
+
+/// Serialize every collected span as a Chrome trace-event document:
+/// `{"traceEvents": [{"name", "ph": "X", "ts", "dur", "pid", "tid",
+/// "args": {"round"}}, …]}`. The buffer is drained, so a second call
+/// only writes spans completed since the first.
+pub fn trace_json() -> Json {
+    let events = std::mem::take(&mut *EVENTS.lock().expect("trace buffer lock"));
+    let arr = events
+        .into_iter()
+        .map(|e| {
+            let mut args = BTreeMap::new();
+            args.insert("round".to_string(), Json::Num(e.round as f64));
+            let mut obj = BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(e.name.to_string()));
+            obj.insert("ph".to_string(), Json::Str("X".to_string()));
+            obj.insert("ts".to_string(), Json::Num(e.ts_us));
+            obj.insert("dur".to_string(), Json::Num(e.dur_us));
+            obj.insert("pid".to_string(), Json::Num(1.0));
+            obj.insert("tid".to_string(), Json::Num(e.tid as f64));
+            obj.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(obj)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(arr));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // Tracing may already be on if another test enabled it first
+        // (process-global flag); only assert inertness when it is off.
+        if !trace_enabled() {
+            let s = span("test.never", 3, 9);
+            assert!(s.live.is_none(), "disabled span must not stamp the clock");
+            drop(s);
+        }
+    }
+
+    #[test]
+    fn spans_round_trip_through_the_json_writer() {
+        enable_trace();
+        {
+            let _outer = span("test.outer", LEADER_TID, 4);
+            let _inner = span("test.inner", worker_tid(2), 4);
+        }
+        let doc = trace_json().to_string_compact();
+        let back = Json::parse(&doc).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // The drained buffer may also hold spans from concurrently
+        // running tests; find ours by name.
+        let find = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("span {name} missing from trace"))
+        };
+        let outer = find("test.outer");
+        let inner = find("test.inner");
+        for e in [outer, inner] {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert_eq!(e.get("pid").unwrap().as_f64(), Some(1.0));
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert_eq!(e.get("args").unwrap().get("round").unwrap().as_f64(), Some(4.0));
+        }
+        assert_eq!(outer.get("tid").unwrap().as_f64(), Some(0.0));
+        assert_eq!(inner.get("tid").unwrap().as_f64(), Some(3.0));
+        // Inner opened after and closed before outer: containment holds.
+        let o_ts = outer.get("ts").unwrap().as_f64().unwrap();
+        let o_end = o_ts + outer.get("dur").unwrap().as_f64().unwrap();
+        let i_ts = inner.get("ts").unwrap().as_f64().unwrap();
+        let i_end = i_ts + inner.get("dur").unwrap().as_f64().unwrap();
+        assert!(i_ts >= o_ts && i_end <= o_end, "inner span nests inside outer");
+    }
+}

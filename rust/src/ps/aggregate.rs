@@ -522,6 +522,7 @@ impl Aggregator {
         // pool dispatch + latch round trip: fold it on the caller thread
         // (same adds, same order — scheduling only).
         let inline = extension * self.dim < Self::SMALL_WORK_ELEMS;
+        crate::obs::metrics::AGG_FOLD_BATCH_ELEMS.record((extension * self.dim) as u64);
         match &self.pool {
             Some(pool) if !inline => {
                 let mut units: Vec<(&mut [f32], &mut usize)> =
@@ -532,11 +533,13 @@ impl Aggregator {
                 // shard order and add order are unchanged).
                 let min_per_job =
                     Self::SMALL_WORK_ELEMS.div_ceil(extension * shard_elems).max(1);
+                crate::obs::metrics::AGG_FOLD_POOL_DISPATCH.inc();
                 pool.parallel_for_mut_min_chunk(&mut units, min_per_job, |s, (chunk, f)| {
                     fold_shard(chunk, s * shard_elems, slots, f, upto);
                 });
             }
             _ => {
+                crate::obs::metrics::AGG_FOLD_CALLER_INLINE.inc();
                 for (s, (chunk, f)) in
                     acc.chunks_mut(shard_elems).zip(folded.iter_mut()).enumerate()
                 {
@@ -593,14 +596,17 @@ impl Aggregator {
             let offload =
                 self.cfg.mode == AggMode::Pipelined && self.pool.is_some() && tail_workers <= 1;
             if offload {
+                crate::obs::metrics::AGG_CLOSE_OFFLOADED.inc();
                 Ok(self.spawn_detached_close(idx, partial, inv))
             } else {
+                crate::obs::metrics::AGG_CLOSE_INLINE.inc();
                 let t = Stopwatch::start();
                 self.close_windowed_inline(idx, partial, inv);
                 self.timing.close_secs = t.elapsed_secs();
                 Ok(ReduceClose { bank: idx, detached: None })
             }
         } else {
+            crate::obs::metrics::AGG_CLOSE_INLINE.inc();
             let t = Stopwatch::start();
             self.reduce_mean(idx, partial);
             self.timing.close_secs = t.elapsed_secs();

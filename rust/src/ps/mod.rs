@@ -84,8 +84,17 @@ pub struct RoundRecord {
     pub loss_g: Option<f32>,
     pub loss_d: Option<f32>,
     /// Peak live OS threads in the leader process observed during this
-    /// round (`/proc/self/task`; 0 = unknown platform). The telemetry
-    /// behind the readiness-loop transport's O(1)-threads claim: flat in
-    /// M under `--transport evloop`, O(M) under `--transport threads`.
-    pub threads_peak: usize,
+    /// round (`/proc/self/task`; `None` on platforms without procfs).
+    /// The telemetry behind the readiness-loop transport's O(1)-threads
+    /// claim: flat in M under `--transport evloop`, O(M) under
+    /// `--transport threads`.
+    pub threads_peak: Option<usize>,
+    /// Downlink bytes broadcast this round, when the transport exposes a
+    /// byte counter (difference of `ByteCounter::down_total` snapshots
+    /// taken around the round). `None` on counterless transports. Under
+    /// `--agg pipelined` the broadcast issued this round drains on the
+    /// writer threads, so the bytes land in the round whose gather
+    /// overlapped the send — totals across a run are exact, per-round
+    /// attribution is flow-aligned rather than issue-aligned.
+    pub bytes_down: Option<u64>,
 }

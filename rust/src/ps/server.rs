@@ -112,6 +112,9 @@ pub fn serve_rounds_with(
     // Completion handle of the previous round's async broadcast
     // (pipelined mode only) — the input to `overlap_secs`.
     let mut prev_broadcast: Option<BroadcastHandle> = None;
+    // Transport byte counter, when the transport exposes one: source of
+    // the per-round `bytes_down` delta and the run-end obs totals.
+    let byte_counter = transport.counter();
     for round in 0..rounds {
         // A previous broadcast that has *completed with a failure* means
         // some worker's downlink died. Surface it now — the synchronous
@@ -147,6 +150,7 @@ pub fn serve_rounds_with(
         }
         let sw = Stopwatch::start();
         let round_start = Instant::now();
+        let down_at_start = byte_counter.as_ref().map(|c| c.down_total());
         // Leader-process thread census (running max over the round's
         // sample points): the O(1)-vs-O(M) evidence behind `--transport
         // evloop`, sampled where transports spawn threads — after the
@@ -170,6 +174,7 @@ pub fn serve_rounds_with(
         // overlaps on the pipelined windowed path.
         let close: Option<ReduceClose>;
         let mut batch_msgs: Vec<Message> = Vec::new();
+        let gather_span = crate::obs::span("gather", crate::obs::LEADER_TID, round);
         if let Some(policy) = policy.as_deref_mut() {
             // Policy-driven round: every arrival is consulted against
             // the RoundPolicy; the round may close before all M payloads
@@ -213,7 +218,9 @@ pub fn serve_rounds_with(
                     return Ok(directive);
                 }
                 let t = Stopwatch::start();
+                let decode_span = crate::obs::span("decode", crate::obs::LEADER_TID, round);
                 let res = agg.accept(&msg, &decoder);
+                drop(decode_span);
                 accept_secs += t.elapsed_secs();
                 res?;
                 directive = policy.on_arrival(agg.arrived_count(), m);
@@ -225,7 +232,10 @@ pub fn serve_rounds_with(
             // offloaded close moves the bank's arrival flags into the
             // detached task until the join.
             included = Some(agg.included().to_vec());
-            close = Some(agg.close_round(true)?);
+            close = {
+                let _close_span = crate::obs::span("close", crate::obs::LEADER_TID, round);
+                Some(agg.close_round(true)?)
+            };
         } else if streaming {
             // Event-driven round: each payload decodes (and, under
             // `--reduce windowed`, prefix-folds) the moment its frame
@@ -235,7 +245,9 @@ pub fn serve_rounds_with(
             transport.recv_round_streaming(&mut |msg| {
                 bytes_up += msg.payload.len();
                 let t = Stopwatch::start();
+                let decode_span = crate::obs::span("decode", crate::obs::LEADER_TID, round);
                 let res = agg.accept(&msg, &decoder);
+                drop(decode_span);
                 accept_secs += t.elapsed_secs();
                 res
             })?;
@@ -243,7 +255,10 @@ pub fn serve_rounds_with(
             // on arrivals.
             gather_secs = sw.elapsed_secs();
             wait_secs = (gather_secs - accept_secs).max(0.0);
-            close = Some(agg.close_round(false)?);
+            close = {
+                let _close_span = crate::obs::span("close", crate::obs::LEADER_TID, round);
+                Some(agg.close_round(false)?)
+            };
         } else {
             batch_msgs = transport.recv_round()?;
             gather_secs = sw.elapsed_secs();
@@ -251,6 +266,7 @@ pub fn serve_rounds_with(
             bytes_up = batch_msgs.iter().map(|msg| msg.payload.len()).sum();
             close = None;
         }
+        drop(gather_span);
         // ---- Broadcast-frame prep: runs while an offloaded close-time
         // reduce is still folding on the pool. Nothing here needs the
         // averaged values — the payload buffer (multi-MB at DCGAN dim)
@@ -279,12 +295,14 @@ pub fn serve_rounds_with(
         // ---- Join the reduce (or run the batch decode+reduce) and
         // serialize the mean into the prepared frame.
         let batch_sw = Stopwatch::start();
+        let reduce_span = crate::obs::span("reduce", crate::obs::LEADER_TID, round);
         let avg: &[f32] = match close {
             Some(ticket) => agg.join_reduce(ticket)?,
             // Decode × M, validate, average (line 11) — sharded or
             // sequential.
             None => agg.aggregate(round, &batch_msgs, &decoder)?,
         };
+        drop(reduce_span);
         let batch_wall = batch_sw.elapsed_secs();
         threads_peak = threads_peak.max(live_threads());
         let avg_payload_norm_sq = norm2_sq(avg);
@@ -331,6 +349,10 @@ pub fn serve_rounds_with(
             None => 0.0,
         };
         let t = Stopwatch::start();
+        // Ack-RTT reference point: the ledger's ack arrivals are matched
+        // against this send timestamp (`worker.ack_rtt_ns`).
+        crate::obs::note_broadcast_sent(round);
+        let broadcast_span = crate::obs::span("broadcast", crate::obs::LEADER_TID, round);
         if pipelined {
             // Queue the frame onto the per-worker writer threads and move
             // straight on to the next round's gather: a slow receiver
@@ -339,12 +361,17 @@ pub fn serve_rounds_with(
         } else {
             transport.broadcast(msg)?;
         }
+        drop(broadcast_span);
         // Time blocked pushing the downlink is network wait too: the
         // full per-socket write loop on the synchronous path, only
         // queue backpressure (a receiver `pipeline_depth` broadcasts
         // behind) on the asynchronous one.
         wait_secs += t.elapsed_secs();
         threads_peak = threads_peak.max(live_threads());
+        let bytes_down = byte_counter
+            .as_ref()
+            .zip(down_at_start)
+            .map(|(c, d0)| c.down_total().saturating_sub(d0));
         let rec = RoundRecord {
             round,
             avg_payload_norm_sq,
@@ -358,7 +385,8 @@ pub fn serve_rounds_with(
             overlap_secs,
             workers_included,
             workers_skipped: m - workers_included,
-            threads_peak,
+            threads_peak: (threads_peak > 0).then_some(threads_peak),
+            bytes_down,
             ..Default::default()
         };
         on_round(&rec);
@@ -369,6 +397,11 @@ pub fn serve_rounds_with(
     // preserved) and waits until every queued frame — broadcasts and the
     // Shutdown itself — has been delivered, so teardown loses nothing.
     transport.broadcast(Message::shutdown(rounds))?;
+    // Run-end transport totals into the obs registry (after the Shutdown
+    // frame, so the control bytes include teardown).
+    if let Some(c) = &byte_counter {
+        crate::obs::record_transport_totals(c);
+    }
     Ok(records)
 }
 

@@ -45,14 +45,15 @@ pub type EvalHook = Box<dyn FnMut(u64, &[f32], &RoundStats) + Send>;
 /// `allow_absorb` is false for trailing broadcasts of rounds this worker
 /// never produced a payload for (teardown drain) — there is nothing of
 /// ours to fold back there, and re-absorbing the previous round's buffer
-/// again would double-count it.
+/// again would double-count it. Returns whether the skipped-round absorb
+/// path ran (feeds the `worker.absorbed_skips` obs counter).
 fn apply_broadcast(
     algo: &mut dyn WorkerAlgo,
     dim: usize,
     id: u32,
     msg: &Message,
     allow_absorb: bool,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<bool> {
     let mut r = Reader::new(&msg.payload);
     let included = match msg.kind {
         MsgKind::PartialBroadcast => {
@@ -63,8 +64,31 @@ fn apply_broadcast(
     };
     let avg = r.f32_vec(dim)?;
     algo.apply(&avg);
-    if !included && allow_absorb {
+    let absorbed = !included && allow_absorb;
+    if absorbed {
         algo.absorb_skipped();
+    }
+    Ok(absorbed)
+}
+
+/// [`apply_broadcast`] under the worker-side observability hooks: the
+/// apply is spanned on this worker's trace lane and its latency plus the
+/// absorbed flag feed `worker.apply_ns` / `worker.absorbed_skips` and
+/// the `--worker-csv` row for (worker, round). With obs off this is the
+/// bare apply plus two relaxed loads.
+fn apply_broadcast_observed(
+    algo: &mut dyn WorkerAlgo,
+    dim: usize,
+    id: u32,
+    msg: &Message,
+    allow_absorb: bool,
+) -> anyhow::Result<()> {
+    let t0 = crate::obs::maybe_now();
+    let span = crate::obs::span("apply", crate::obs::worker_tid(id as usize), msg.round);
+    let absorbed = apply_broadcast(algo, dim, id, msg, allow_absorb)?;
+    drop(span);
+    if let Some(t0) = t0 {
+        crate::obs::worker_apply(id as usize, msg.round, t0.elapsed().as_nanos() as u64, absorbed);
     }
     Ok(())
 }
@@ -95,6 +119,7 @@ pub fn worker_loop(
         // Phase 1: produce and push. `produce` returns views into the
         // worker's reused buffers; the one owned copy happens here, at the
         // transport boundary, because `Message` owns its payload bytes.
+        let produce_span = crate::obs::span("produce", crate::obs::worker_tid(id as usize), round);
         let (payload, stats) = match algo.produce(src, batch, rng) {
             Ok(p) => (p.wire.to_vec(), p.stats),
             Err(e) => {
@@ -102,6 +127,8 @@ pub fn worker_loop(
                 return Err(e);
             }
         };
+        drop(produce_span);
+        crate::obs::worker_produce(id as usize, round, stats.err_norm_sq);
         if let Err(send_err) = transport.send(Message::payload(id, round, payload)) {
             // Partial-policy teardown race: a leader running `--policy
             // kofm`/`deadline` may have closed its remaining rounds
@@ -120,7 +147,7 @@ pub fn worker_loop(
                         break;
                     }
                     MsgKind::Broadcast | MsgKind::PartialBroadcast if msg.round >= round => {
-                        apply_broadcast(algo, dim, id, &msg, msg.round == round)?;
+                        apply_broadcast_observed(algo, dim, id, &msg, msg.round == round)?;
                         // Ack the APPLY (ack-based transports only; no-op
                         // elsewhere). Errors are ignored: the leader that
                         // would consume this ack is already tearing down.
@@ -144,16 +171,19 @@ pub fn worker_loop(
             break;
         }
         // Phase 2: await broadcast, apply.
+        let recv_span = crate::obs::span("recv", crate::obs::worker_tid(id as usize), round);
         let msg = transport.recv()?;
+        drop(recv_span);
         match msg.kind {
             MsgKind::Broadcast | MsgKind::PartialBroadcast => {
                 anyhow::ensure!(msg.round == round, "broadcast round skew");
-                apply_broadcast(algo, dim, id, &msg, true)?;
+                apply_broadcast_observed(algo, dim, id, &msg, true)?;
                 // Ack the APPLY — this is what `--pipeline-depth` bounds
                 // on ack-based transports (Lemma-1 staleness), and a
                 // default no-op on the threaded ones. Errors are ignored:
                 // they only occur when the leader is already gone, where
                 // flow control is moot.
+                let _ack_span = crate::obs::span("ack", crate::obs::worker_tid(id as usize), round);
                 let _ = transport.ack(round);
             }
             MsgKind::Shutdown => break, // server aborted early

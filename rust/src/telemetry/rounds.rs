@@ -6,16 +6,20 @@
 //! gather/broadcast `overlap_secs`, the round-completion policy's
 //! `workers_included`/`workers_skipped` counts, and the
 //! `broadcast_fnv` bit-pattern checksum the CI reduce-drift check diffs
-//! between `--reduce windowed` and `--reduce barrier` runs, and the
-//! `threads_peak` live-OS-thread high-water mark (appended last so the
-//! CI `cut -d, -f1,12` checksum greps keep their column numbers).
+//! between `--reduce windowed` and `--reduce barrier` runs, the
+//! `threads_peak` live-OS-thread high-water mark, and the transport's
+//! per-round downlink byte count `bytes_down` (new columns are appended
+//! **after** `broadcast_fnv` only, so the CI `cut -d, -f1,12` checksum
+//! greps keep their column numbers). Unknown quantities — no procfs for
+//! `threads_peak`, a counterless transport for `bytes_down` — serialize
+//! as the empty cell, never a fake zero.
 
 use super::CsvWriter;
 use crate::ps::RoundRecord;
 use std::path::Path;
 
 /// Column order of [`write_round_records`] output.
-pub const ROUND_CSV_HEADER: [&str; 13] = [
+pub const ROUND_CSV_HEADER: [&str; 14] = [
     "round",
     "wall_secs",
     "wait_secs",
@@ -29,6 +33,7 @@ pub const ROUND_CSV_HEADER: [&str; 13] = [
     "avg_payload_norm_sq",
     "broadcast_fnv",
     "threads_peak",
+    "bytes_down",
 ];
 
 /// Write one row per [`RoundRecord`] to `path` (creating parent
@@ -49,7 +54,8 @@ pub fn write_round_records(path: &Path, records: &[RoundRecord]) -> anyhow::Resu
             r.workers_skipped.to_string(),
             format!("{:.6e}", r.avg_payload_norm_sq),
             format!("{:016x}", r.broadcast_fnv),
-            r.threads_peak.to_string(),
+            r.threads_peak.map(|n| n.to_string()).unwrap_or_default(),
+            r.bytes_down.map(|n| n.to_string()).unwrap_or_default(),
         ])?;
     }
     csv.finish()
@@ -75,7 +81,8 @@ mod tests {
                 bytes_up: 1024,
                 workers_included: 3,
                 workers_skipped: 1,
-                threads_peak: 7,
+                threads_peak: Some(7),
+                bytes_down: Some(4096),
                 ..Default::default()
             },
             RoundRecord { round: 1, workers_included: 4, ..Default::default() },
@@ -95,13 +102,15 @@ mod tests {
         assert_eq!(row0[8], "3");
         assert_eq!(row0[9], "1");
         assert_eq!(row0[11], "deadbeef0badf00d", "fixed-width hex checksum");
-        assert_eq!(row0[12], "7", "threads_peak appended last");
+        assert_eq!(row0[12], "7", "threads_peak after broadcast_fnv");
+        assert_eq!(row0[13], "4096", "bytes_down appended last");
         let row1: Vec<&str> = lines.next().unwrap().split(',').collect();
         assert_eq!(row1[6], "0.000000");
         assert_eq!(row1[8], "4");
         assert_eq!(row1[9], "0");
         assert_eq!(row1[11], &"0".repeat(16));
-        assert_eq!(row1[12], "0", "unknown thread count serializes as 0");
+        assert_eq!(row1[12], "", "unknown thread count serializes as the empty cell");
+        assert_eq!(row1[13], "", "counterless transport leaves bytes_down empty");
         assert!(lines.next().is_none());
         std::fs::remove_file(&p).ok();
     }

@@ -1,0 +1,178 @@
+//! Integration: the observability subsystem (ADR-004) end to end — one
+//! seeded in-process pipelined run with every obs sink live, validating
+//!
+//! 1. the **bitwise contract**: per-round broadcast checksums and final
+//!    parameters identical to an obs-disabled run of the same seed
+//!    (obs records counts and clock durations only, never numerics);
+//! 2. the `--metrics-json` dump: schema-valid, every declared metric
+//!    present, hot-path counters and histograms actually populated;
+//! 3. the `--trace` file: parseable Chrome trace-event JSON with the
+//!    documented lane convention (leader tid 0, worker i tid 1+i) and
+//!    decode spans nesting inside their round's gather span;
+//! 4. the `--worker-csv` rows: one per (worker, round) with apply
+//!    latency and ack RTT populated on the ack-based transport;
+//! 5. the round-record columns the obs PR added: `bytes_down` present
+//!    under a counter-exposing transport, `threads_peak` optional.
+//!
+//! Runs in its own test binary on purpose: the obs enables are sticky
+//! process-globals, so the baseline (disabled) run must come first —
+//! this file keeps a single #[test] to own that ordering.
+
+use dqgan::algo::AlgoKind;
+use dqgan::config::{AggregatorConfig, TransportMode};
+use dqgan::grad::QuadraticOperator;
+use dqgan::obs;
+use dqgan::optim::LrSchedule;
+use dqgan::ps::{run_cluster, ClusterConfig, TrainReport};
+use dqgan::util::json::Json;
+use dqgan::util::rng::Pcg32;
+
+const WORKERS: usize = 3;
+const ROUNDS: u64 = 4;
+const DIM: usize = 16;
+
+fn cfg() -> ClusterConfig {
+    ClusterConfig {
+        algo: AlgoKind::parse("dqgan:linf8").unwrap(),
+        workers: WORKERS,
+        batch: 8,
+        rounds: ROUNDS,
+        lr: LrSchedule::constant(0.05),
+        seed: 4242,
+        eval_every: 0,
+        keep_stats: false,
+        agg: AggregatorConfig::pipelined(),
+        transport: TransportMode::EvLoop,
+    }
+}
+
+fn run() -> TrainReport {
+    run_cluster(&cfg(), |_m| {
+        let mut rng = Pcg32::new(777);
+        Ok(Box::new(QuadraticOperator::new(DIM, 0.1, &mut rng)))
+    })
+    .unwrap()
+}
+
+fn fnvs(r: &TrainReport) -> Vec<(u64, u64)> {
+    r.records.iter().map(|x| (x.round, x.broadcast_fnv)).collect()
+}
+
+#[test]
+fn observability_sinks_are_complete_and_bitwise_invisible() {
+    // ---- Baseline: obs fully disabled (must run before any enable —
+    // the flags are sticky for the process lifetime).
+    assert!(!obs::metrics_enabled() && !obs::trace_enabled(), "obs off at binary start");
+    let baseline = run();
+
+    obs::enable_worker_rows(); // implies enable_metrics
+    obs::enable_trace();
+    let observed = run();
+
+    // ---- 1. Bitwise contract: same checksums, same final parameters.
+    assert_eq!(fnvs(&baseline), fnvs(&observed), "obs flags must not move a broadcast bit");
+    assert_eq!(baseline.worker0.final_params, observed.worker0.final_params);
+
+    // ---- 5. New round-record columns.
+    for r in &observed.records {
+        assert!(r.bytes_down.is_some(), "evloop transport exposes a byte counter");
+    }
+    let total_down: u64 = observed.records.iter().filter_map(|r| r.bytes_down).sum();
+    assert!(total_down > 0, "pipelined run broadcast real downlink bytes");
+    #[cfg(target_os = "linux")]
+    assert!(observed.records[0].threads_peak.is_some(), "procfs thread census on Linux");
+
+    let dir = std::env::temp_dir().join(format!("dqgan_obs_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // ---- 2. Metrics dump: schema-valid, complete, populated.
+    let metrics_path = dir.join("metrics.json");
+    let mut meta = std::collections::BTreeMap::new();
+    meta.insert("workers".to_string(), Json::Num(WORKERS as f64));
+    obs::write_metrics_json(&metrics_path, meta).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&metrics_path).unwrap()).unwrap();
+    obs::check_metrics_json(&doc).unwrap();
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some(obs::SCHEMA));
+    let counter = |name: &str| doc.get("counters").unwrap().get(name).unwrap().as_f64().unwrap();
+    assert!(counter("evloop.deliveries") > 0.0, "evloop delivered broadcast frames");
+    assert!(counter("transport.bytes_down") > 0.0, "run-end transport totals folded in");
+    assert!(counter("codec.bytes_pre_total") >= counter("codec.bytes_post_total"));
+    let hist_count = |name: &str| {
+        doc.get("histograms").unwrap().get(name).unwrap().get("count").unwrap().as_f64().unwrap()
+    };
+    assert!(hist_count("codec.encode_ns") > 0.0, "worker encodes were timed");
+    assert!(hist_count("codec.decode_ns") > 0.0, "leader decodes were timed");
+    assert!(hist_count("worker.apply_ns") > 0.0, "worker applies were timed");
+
+    // ---- 4. Worker CSV: header + one row per (worker, round).
+    let csv_path = dir.join("workers.csv");
+    obs::write_worker_csv(&csv_path).unwrap();
+    let text = std::fs::read_to_string(&csv_path).unwrap();
+    let mut lines = text.lines();
+    assert_eq!(lines.next().unwrap(), obs::WORKER_CSV_HEADER.join(","));
+    let rows: Vec<Vec<&str>> = lines.map(|l| l.split(',').collect()).collect();
+    assert!(
+        rows.len() >= WORKERS * ROUNDS as usize,
+        "one row per (worker, round): got {}",
+        rows.len()
+    );
+    assert!(rows.iter().all(|r| !r[2].is_empty()), "apply_ns populated everywhere");
+    assert!(rows.iter().any(|r| !r[3].is_empty()), "ack RTT populated on the ack transport");
+    assert!(rows.iter().all(|r| r[4] == "0"), "full-barrier run absorbs no skips");
+    assert!(rows.iter().any(|r| !r[5].is_empty()), "error-memory norm populated");
+
+    // ---- 3. Trace file: valid trace-event JSON, lane + nesting
+    // invariants.
+    let trace_path = dir.join("trace.json");
+    obs::write_trace(&trace_path).unwrap();
+    let tdoc = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let events = tdoc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let leader_names = ["gather", "decode", "reduce", "close", "broadcast"];
+    let worker_names = ["produce", "recv", "apply", "ack"];
+    let field = |e: &Json, k: &str| e.get(k).unwrap().as_f64().unwrap();
+    for e in events {
+        let name = e.get("name").unwrap().as_str().unwrap();
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"), "complete events only");
+        assert_eq!(field(e, "pid"), 1.0);
+        assert!(field(e, "ts") >= 0.0 && field(e, "dur") >= 0.0);
+        let tid = field(e, "tid");
+        let round = e.get("args").unwrap().get("round").unwrap().as_f64().unwrap();
+        assert!(round < ROUNDS as f64, "span rounds stay in range: {name} @ {round}");
+        if leader_names.contains(&name) {
+            assert_eq!(tid, 0.0, "leader span {name} on the leader lane");
+        } else {
+            assert!(worker_names.contains(&name), "unknown span name {name}");
+            assert!(
+                (1.0..=WORKERS as f64).contains(&tid),
+                "worker span {name} on a worker lane, got tid {tid}"
+            );
+        }
+    }
+    for want in leader_names.iter().chain(&worker_names) {
+        assert!(
+            events.iter().any(|e| e.get("name").unwrap().as_str() == Some(*want)),
+            "span {want} missing from trace"
+        );
+    }
+    // Every leader decode span nests inside its round's gather span.
+    let eps = 1.0; // µs of f64 slack
+    for d in events.iter().filter(|e| e.get("name").unwrap().as_str() == Some("decode")) {
+        let round = d.get("args").unwrap().get("round").unwrap().as_f64().unwrap();
+        let g = events
+            .iter()
+            .find(|e| {
+                e.get("name").unwrap().as_str() == Some("gather")
+                    && e.get("args").unwrap().get("round").unwrap().as_f64() == Some(round)
+            })
+            .expect("gather span for the decode's round");
+        let (dts, dend) = (field(d, "ts"), field(d, "ts") + field(d, "dur"));
+        let (gts, gend) = (field(g, "ts"), field(g, "ts") + field(g, "dur"));
+        assert!(
+            dts >= gts - eps && dend <= gend + eps,
+            "decode [{dts}, {dend}] outside gather [{gts}, {gend}] in round {round}"
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
