@@ -1,0 +1,258 @@
+//! Content-addressed checkpoint store for elastic recovery.
+//!
+//! The leader's replay ledger (`ps/server.rs`) keeps only the last
+//! `--replay-depth` broadcast frames in memory; anything older — and any
+//! periodic model/error-memory snapshot — lands here when `--ckpt-dir`
+//! is set. Blobs are **content-addressed**: a blob's filename embeds the
+//! byte-wise FNV-1a digest of its contents
+//! (`<kind>-r<round>-s<shard>-<fnv:016x>.bin`), so
+//!
+//! * a re-put of identical content is a no-op (the file already exists
+//!   under the same name — crash-and-retry is idempotent),
+//! * a read verifies the digest before returning, turning silent disk
+//!   corruption into a loud error instead of a diverged rejoin.
+//!
+//! A small JSON manifest (`MANIFEST.json`, via the zero-dep
+//! [`crate::util::json`] writer) maps the logical key `(kind, round,
+//! shard)` to the blob's digest and length; it is rewritten atomically
+//! (temp file + rename) after every put, so a torn write leaves the
+//! previous manifest intact. The store deliberately has no notion of
+//! "latest" — callers address snapshots by round, which is the unit of
+//! consistency in a synchronous parameter-server run.
+
+use crate::util::bytes::fnv1a64;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Manifest filename inside the store directory.
+const MANIFEST: &str = "MANIFEST.json";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Entry {
+    fnv: u64,
+    len: usize,
+}
+
+/// A directory of content-addressed, round-stamped blobs plus a JSON
+/// manifest. One store per run (leader-side); readers and writers go
+/// through the same instance, so no cross-process locking is needed.
+#[derive(Debug)]
+pub struct CkptStore {
+    dir: PathBuf,
+    /// Logical key `"<kind>-r<round>-s<shard>"` → blob identity.
+    entries: BTreeMap<String, Entry>,
+}
+
+fn key(kind: &str, round: u64, shard: u32) -> String {
+    format!("{kind}-r{round}-s{shard}")
+}
+
+fn blob_name(kind: &str, round: u64, shard: u32, fnv: u64) -> String {
+    format!("{kind}-r{round}-s{shard}-{fnv:016x}.bin")
+}
+
+impl CkptStore {
+    /// Open (or create) the store at `dir`, loading the manifest if one
+    /// exists. Fails on an unreadable or malformed manifest rather than
+    /// silently starting empty — an operator pointing `--ckpt-dir` at a
+    /// corrupt store should hear about it before the run depends on it.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("ckpt dir {}: {e}", dir.display()))?;
+        let mut entries = BTreeMap::new();
+        let manifest = dir.join(MANIFEST);
+        if manifest.exists() {
+            let text = fs::read_to_string(&manifest)
+                .map_err(|e| anyhow::anyhow!("ckpt manifest {}: {e}", manifest.display()))?;
+            let doc = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("ckpt manifest {}: {e}", manifest.display()))?;
+            let obj = doc
+                .get("entries")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow::anyhow!("ckpt manifest: missing \"entries\" object"))?;
+            for (k, v) in obj {
+                let fnv_hex = v
+                    .get("fnv")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("ckpt manifest entry {k}: missing fnv"))?;
+                let fnv = u64::from_str_radix(fnv_hex, 16)
+                    .map_err(|_| anyhow::anyhow!("ckpt manifest entry {k}: bad fnv hex"))?;
+                let len = v
+                    .get("bytes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("ckpt manifest entry {k}: missing bytes"))?;
+                entries.insert(k.clone(), Entry { fnv, len });
+            }
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// Number of blobs the manifest knows about.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Whether a blob exists for `(kind, round, shard)`.
+    pub fn contains(&self, kind: &str, round: u64, shard: u32) -> bool {
+        self.entries.contains_key(&key(kind, round, shard))
+    }
+
+    /// Store `bytes` under `(kind, round, shard)`. Content-addressed:
+    /// re-putting identical bytes skips the data write entirely, and
+    /// putting *different* bytes for the same key supersedes the old
+    /// blob in the manifest (the old file stays on disk as garbage — a
+    /// deliberate trade: recovery never deletes data it might be asked
+    /// to trust again).
+    pub fn put(&mut self, kind: &str, round: u64, shard: u32, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !kind.is_empty() && kind.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_'),
+            "ckpt kind {kind:?} must be non-empty [A-Za-z0-9_] (it names files)"
+        );
+        let fnv = fnv1a64(bytes);
+        let entry = Entry { fnv, len: bytes.len() };
+        let k = key(kind, round, shard);
+        if self.entries.get(&k) == Some(&entry) {
+            return Ok(()); // idempotent re-put of identical content
+        }
+        let path = self.dir.join(blob_name(kind, round, shard, fnv));
+        if !path.exists() {
+            write_atomic(&path, bytes)?;
+            crate::obs::metrics::RECOVERY_CKPT_BYTES.add(bytes.len() as u64);
+        }
+        self.entries.insert(k, entry);
+        self.write_manifest()
+    }
+
+    /// Fetch the blob for `(kind, round, shard)`, verifying its digest.
+    /// `Ok(None)` when the key was never stored; an error when the blob
+    /// file is missing or its contents no longer hash to the manifest's
+    /// digest (disk corruption must not become a diverged rejoin).
+    pub fn get(&self, kind: &str, round: u64, shard: u32) -> anyhow::Result<Option<Vec<u8>>> {
+        let Some(entry) = self.entries.get(&key(kind, round, shard)) else {
+            return Ok(None);
+        };
+        let path = self.dir.join(blob_name(kind, round, shard, entry.fnv));
+        let bytes = fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("ckpt blob {}: {e}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == entry.len && fnv1a64(&bytes) == entry.fnv,
+            "ckpt blob {} failed verification: {} bytes (manifest: {}), content digest \
+             mismatch — refusing to serve a corrupt checkpoint",
+            path.display(),
+            bytes.len(),
+            entry.len,
+        );
+        Ok(Some(bytes))
+    }
+
+    fn write_manifest(&self) -> anyhow::Result<()> {
+        let mut obj = BTreeMap::new();
+        for (k, e) in &self.entries {
+            let mut rec = BTreeMap::new();
+            rec.insert("fnv".to_string(), Json::Str(format!("{:016x}", e.fnv)));
+            rec.insert("bytes".to_string(), Json::Num(e.len as f64));
+            obj.insert(k.clone(), Json::Obj(rec));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("version".to_string(), Json::Num(1.0));
+        doc.insert("entries".to_string(), Json::Obj(obj));
+        write_atomic(&self.dir.join(MANIFEST), Json::Obj(doc).to_string_compact().as_bytes())
+    }
+}
+
+/// Write via a sibling temp file + rename, so readers (and the next
+/// process to `open` the dir after a crash) never observe a torn file.
+fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("ckpt write {}: {e}", tmp.display()))?;
+        f.write_all(bytes).map_err(|e| anyhow::anyhow!("ckpt write {}: {e}", tmp.display()))?;
+        f.sync_all().ok(); // best effort: durability, not correctness
+    }
+    fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("ckpt rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "dqgan-ckpt-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn put_get_round_trips_and_is_idempotent() {
+        let dir = tmp_dir("rt");
+        let mut s = CkptStore::open(&dir).unwrap();
+        assert!(s.is_empty());
+        s.put("bcast", 3, 0, b"hello frame").unwrap();
+        s.put("bcast", 3, 0, b"hello frame").unwrap(); // no-op re-put
+        assert_eq!(s.len(), 1);
+        assert!(s.contains("bcast", 3, 0));
+        assert!(!s.contains("bcast", 4, 0));
+        assert_eq!(s.get("bcast", 3, 0).unwrap().as_deref(), Some(&b"hello frame"[..]));
+        assert_eq!(s.get("bcast", 9, 0).unwrap(), None);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_survives_reopen() {
+        let dir = tmp_dir("reopen");
+        let mut s = CkptStore::open(&dir).unwrap();
+        s.put("model", 10, 2, &[1, 2, 3, 4]).unwrap();
+        s.put("bcast", 11, 0, &[9, 9]).unwrap();
+        drop(s);
+        let s = CkptStore::open(&dir).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("model", 10, 2).unwrap(), Some(vec![1, 2, 3, 4]));
+        assert_eq!(s.get("bcast", 11, 0).unwrap(), Some(vec![9, 9]));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn superseding_a_key_serves_the_new_content() {
+        let dir = tmp_dir("supersede");
+        let mut s = CkptStore::open(&dir).unwrap();
+        s.put("bcast", 0, 0, b"old").unwrap();
+        s.put("bcast", 0, 0, b"new").unwrap();
+        assert_eq!(s.get("bcast", 0, 0).unwrap().as_deref(), Some(&b"new"[..]));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_blob_is_refused() {
+        let dir = tmp_dir("corrupt");
+        let mut s = CkptStore::open(&dir).unwrap();
+        s.put("bcast", 5, 0, b"trusted bytes").unwrap();
+        let blob = dir.join(blob_name("bcast", 5, 0, fnv1a64(b"trusted bytes")));
+        fs::write(&blob, b"tampered bytes").unwrap();
+        let err = s.get("bcast", 5, 0).unwrap_err().to_string();
+        assert!(err.contains("failed verification"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_path_hostile_kinds() {
+        let dir = tmp_dir("hostile");
+        let mut s = CkptStore::open(&dir).unwrap();
+        assert!(s.put("../evil", 0, 0, b"x").is_err());
+        assert!(s.put("", 0, 0, b"x").is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

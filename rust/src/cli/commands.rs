@@ -3,7 +3,8 @@
 use super::args::Args;
 use crate::algo::AlgoKind;
 use crate::config::{
-    AggMode, AggregatorConfig, KernelMode, PolicyConfig, ReduceMode, TransportMode,
+    AggMode, AggregatorConfig, KernelMode, PolicyConfig, RecoveryConfig, ReduceMode,
+    TransportMode, WorkerLossMode,
 };
 use crate::compress::{
     compressor_from_spec, empirical_delta, gaussian_sampler, heavy_tail_sampler,
@@ -73,6 +74,51 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     // default) vs the per-worker thread army (threads, A/B baseline).
     // Bitwise-identical broadcasts either way — CI diffs the checksums.
     let transport = TransportMode::parse(&args.get_or("transport", "evloop"))?;
+    // Elastic-membership knobs (`--on-worker-loss evict` + friends):
+    // eviction needs the in-band Gone/Rejoin protocol, which only the
+    // readiness-loop transport speaks, and a partial policy to shrink
+    // the quorum over survivors.
+    let on_worker_loss = WorkerLossMode::parse(&args.get_or("on-worker-loss", "abort"))?;
+    if on_worker_loss == WorkerLossMode::Evict {
+        anyhow::ensure!(
+            policy != PolicyConfig::Full,
+            "--on-worker-loss evict requires a partial round policy \
+             (--policy kofm:K|deadline:MS) so rounds can close over the survivors"
+        );
+        anyhow::ensure!(
+            mode.is_streaming(),
+            "--on-worker-loss evict requires the streaming engine \
+             (--agg streaming|pipelined)"
+        );
+        anyhow::ensure!(
+            transport == TransportMode::EvLoop,
+            "--on-worker-loss evict requires --transport evloop \
+             (eviction is not supported on the threaded transport)"
+        );
+    }
+    let replay_depth = args.get_parse("replay-depth", RecoveryConfig::default().replay_depth)?;
+    let ckpt_dir = args.get("ckpt-dir").map(std::path::PathBuf::from);
+    let ckpt_every = args.get_parse("ckpt-every", 0u64)?;
+    anyhow::ensure!(
+        ckpt_every == 0 || ckpt_dir.is_some(),
+        "--ckpt-every needs --ckpt-dir PATH to write into"
+    );
+    // Fault injection for the CI chaos job: `--chaos-kill W@R` kills
+    // worker W (its transport end drops, no teardown) after R rounds.
+    let chaos_kill = match args.get("chaos-kill") {
+        Some(spec) => {
+            let (w, r) = spec.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("--chaos-kill wants W@R (worker@round), got '{spec}'")
+            })?;
+            Some((
+                w.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--chaos-kill worker '{w}' is not a number"))?,
+                r.parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("--chaos-kill round '{r}' is not a number"))?,
+            ))
+        }
+        None => None,
+    };
     let agg = AggregatorConfig {
         mode,
         threads: args.get_parse("agg-threads", 0usize)?,
@@ -81,6 +127,7 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         pipeline_depth,
         reduce,
         liveness_rounds,
+        recovery: RecoveryConfig { on_worker_loss, replay_depth, ckpt_dir, ckpt_every },
     };
 
     let cfg = ClusterConfig {
@@ -94,6 +141,7 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         keep_stats: true,
         agg,
         transport,
+        chaos_kill,
     };
 
     // Observability sinks (ADR-004; the flags combine freely). The

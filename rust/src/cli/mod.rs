@@ -50,6 +50,8 @@ USAGE:
               [--reduce windowed|barrier]
               [--policy full|kofm:K|deadline:MS[,K]] [--liveness R]
               [--transport evloop|threads]
+              [--on-worker-loss abort|evict] [--replay-depth N]
+              [--ckpt-dir PATH] [--ckpt-every K] [--chaos-kill W@R]
               [--kernels simd|scalar] [--round-csv PATH]
               [--metrics-json PATH] [--worker-csv PATH] [--trace PATH]
       Train a GAN on the parameter-server runtime.
@@ -77,6 +79,19 @@ USAGE:
       8-wide lane chunks + AVX2 where it wins) or scalar (the reference
       loops). Both arms are bitwise-identical by contract — CI A/Bs the
       per-round broadcast checksums between them.
+      --on-worker-loss picks what a worker death does to the run:
+      abort (default) fails fast naming the worker; evict removes the
+      worker from the membership — parked frames are reclaimed, the
+      quorum shrinks to the survivors, and the run continues (needs
+      --policy kofm/deadline, --agg streaming|pipelined and
+      --transport evloop). An evicted worker may reconnect with its old
+      id: the leader replays the last --replay-depth broadcast frames
+      (default 8, bitwise-identical to the originals) and readmits it;
+      --ckpt-dir extends that window by spilling rotated-out frames to
+      a content-addressed checkpoint store, and --ckpt-every K
+      additionally snapshots the model every K rounds. --chaos-kill W@R
+      is the fault injector behind the CI chaos job: worker W drops
+      dead (no teardown handshake) after R rounds.
       --transport selects the frame engine: evloop (default) drives
       every worker connection from one readiness-loop leader thread and
       bounds *applied* (acked) broadcasts per worker, so leader thread

@@ -166,6 +166,20 @@ impl OutRing {
             pd.failed(what);
         }
     }
+
+    /// Reclaim every parked frame of an **evicted** worker: the queued
+    /// deliveries complete their broadcast handles without error (the
+    /// worker is outside the quorum now, so the broadcast is satisfied
+    /// over the survivors), and the ring empties so its bytes never
+    /// count as wire traffic. Returns the number of frames reclaimed.
+    pub(crate) fn skip_all(&mut self) -> usize {
+        self.cursor = 0;
+        let n = self.queue.len();
+        for (_, pd) in self.queue.drain(..) {
+            pd.skipped();
+        }
+        n
+    }
 }
 
 /// Applied-broadcast flow control: one inflight count per worker,
@@ -265,6 +279,62 @@ impl AckLedger {
         }
         drop(st);
         self.cv.notify_all();
+    }
+
+    /// Re-admit a rejoined worker: clear its dead mark and zero its
+    /// inflight count (its replayed broadcasts are charged afresh as
+    /// they are acked — the ledger restarts clean for it).
+    pub(crate) fn mark_alive(&self, worker: u32) {
+        let mut st = self.state.lock().unwrap();
+        let w = worker as usize;
+        if let Some(d) = st.dead.get_mut(w) {
+            *d = false;
+        }
+        if let Some(n) = st.inflight.get_mut(w) {
+            *n = 0;
+        }
+        Self::note_inflight(&st);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Eviction-mode variant of [`Self::charge`]: waits (bounded by
+    /// `max_wait`) like the blocking charge, but a stall is not fatal —
+    /// every live worker still at or over `depth` when the wait expires
+    /// is marked dead and reported back, so the caller can evict it
+    /// (reclaim its frames, synthesize its `Gone`) and the pipeline
+    /// keeps moving over the survivors. The charge is then taken
+    /// against the remaining live workers. Callers pass
+    /// [`Self::MAX_WAIT`]; tests shrink the bound.
+    pub(crate) fn charge_evicting(&self, depth: usize, max_wait: Duration) -> Vec<u32> {
+        let start = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        let mut stalled = Vec::new();
+        while Self::over(&st, depth).is_some() {
+            let elapsed = start.elapsed();
+            if elapsed >= max_wait {
+                for w in 0..st.inflight.len() {
+                    if !st.dead[w] && st.inflight[w] >= depth {
+                        st.dead[w] = true;
+                        stalled.push(w as u32);
+                    }
+                }
+                break;
+            }
+            let (guard, _) = self.cv.wait_timeout(st, max_wait - elapsed).unwrap();
+            st = guard;
+        }
+        for (n, dead) in st.inflight.iter_mut().zip(&st.dead) {
+            if !dead {
+                *n += 1;
+            }
+        }
+        Self::note_inflight(&st);
+        drop(st);
+        if !stalled.is_empty() {
+            self.cv.notify_all();
+        }
+        stalled
     }
 
     /// Unapplied-broadcast count for `worker` (structural test hook).
@@ -452,6 +522,52 @@ mod tests {
         assert!(ledger.try_charge(1));
         // Dead workers are no longer charged either.
         assert_eq!(ledger.inflight(1), 1);
+    }
+
+    #[test]
+    fn out_ring_skip_all_satisfies_handles_without_error() {
+        // Eviction reclaim: parked frames complete their broadcast
+        // handles cleanly (the worker left the quorum; the survivors'
+        // broadcast must not fail because of it).
+        let mut ring = OutRing::default();
+        let handle = BroadcastHandle::new(2);
+        ring.push(Arc::new(wire_frame(&Message::shutdown(0))), PendingDelivery::new(handle.clone()));
+        ring.push(Arc::new(wire_frame(&Message::shutdown(1))), PendingDelivery::new(handle.clone()));
+        assert_eq!(ring.skip_all(), 2);
+        assert!(ring.is_empty());
+        handle.wait().unwrap();
+    }
+
+    #[test]
+    fn ack_ledger_mark_alive_readmits_a_dead_worker() {
+        let ledger = AckLedger::new(2);
+        assert!(ledger.try_charge(1));
+        ledger.mark_dead(1);
+        ledger.on_ack(0);
+        // Dead worker 1 no longer gates or gets charged.
+        assert!(ledger.try_charge(1));
+        assert_eq!(ledger.inflight(1), 1);
+        // Rejoin: alive again with a clean slate, gating resumes.
+        ledger.mark_alive(1);
+        assert_eq!(ledger.inflight(1), 0);
+        ledger.on_ack(0);
+        assert!(ledger.try_charge(1));
+        assert!(!ledger.try_charge(1), "live again: worker 1 at depth gates the charge");
+    }
+
+    #[test]
+    fn charge_evicting_marks_stalled_workers_dead_instead_of_failing() {
+        let ledger = AckLedger::new(2);
+        assert!(ledger.try_charge(1));
+        // Worker 1 never acks: the eviction-mode charge must report it
+        // (marked dead) and still take the charge for worker 0.
+        ledger.on_ack(0);
+        let stalled = ledger.charge_evicting(1, Duration::from_millis(20));
+        assert_eq!(stalled, vec![1]);
+        assert_eq!(ledger.inflight(0), 1, "live worker was charged");
+        // Dead worker no longer gates: no wait, no new stalls.
+        ledger.on_ack(0);
+        assert!(ledger.charge_evicting(1, Duration::from_millis(20)).is_empty());
     }
 
     #[cfg(unix)]

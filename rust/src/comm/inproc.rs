@@ -61,6 +61,17 @@ impl WorkerEnd for InprocWorkerEnd {
         self.to_server.send(msg).map_err(|_| anyhow::anyhow!("server hung up"))
     }
 
+    fn rejoin(&mut self, resume_round: u64) -> anyhow::Result<()> {
+        // Re-registration hello naming the first missed round: the
+        // leader un-evicts this id and replays the missed broadcasts.
+        // The uplink channel outlives eviction (only the downlink is
+        // muted), so the hello rides the normal path. Control plane,
+        // like acks.
+        let msg = Message::rejoin(self.id, resume_round);
+        self.counter.add_ctrl(msg.frame_len());
+        self.to_server.send(msg).map_err(|_| anyhow::anyhow!("server hung up"))
+    }
+
     fn id(&self) -> u32 {
         self.id
     }
@@ -279,6 +290,15 @@ enum Ev {
     /// A [`DelayPlan`] gate was released somewhere: re-scan parked
     /// queues. (Sent by the plan's release listener.)
     Poke,
+    /// Leader evicted `worker`: reclaim its parked frames (skipped, not
+    /// failed) and mute its future data deliveries. Shutdown frames are
+    /// still delivered so an evicted worker can exit cleanly.
+    Evict(usize),
+    /// `worker` rejoined: resume normal deliveries.
+    Rejoin(usize),
+    /// Targeted frame (rejoin replay / directed shutdown): one worker's
+    /// downlink, fire-and-forget — nobody waits on its delivery.
+    Send { worker: usize, msg: Message },
     /// Leader dropped: drain parked frames (waiting out their gates),
     /// then exit. Always the leader's last event, so every `Deliver`
     /// queued before it is processed first.
@@ -291,6 +311,7 @@ enum Ev {
 /// gate *parks* that worker's frames (per-worker FIFO) instead of
 /// blocking the thread, so a gated worker never head-of-line blocks its
 /// peers; the plan's release listener pokes the thread to re-scan.
+#[allow(clippy::too_many_arguments)]
 fn run_inproc_downlink(
     rx: Receiver<Ev>,
     to_workers: Vec<Sender<Message>>,
@@ -298,28 +319,51 @@ fn run_inproc_downlink(
     counter: Arc<ByteCounter>,
     ledger: Arc<AckLedger>,
     first_error: Arc<Mutex<Option<String>>>,
+    evict_mode: Arc<std::sync::atomic::AtomicBool>,
+    up_tx: Sender<Message>,
 ) {
     let m = to_workers.len();
     let mut parked: Vec<VecDeque<(Message, PendingDelivery)>> =
         (0..m).map(|_| VecDeque::new()).collect();
     let mut failed: Vec<Option<String>> = (0..m).map(|_| None).collect();
-    let deliver_now = |w: usize, msg: Message, pd: PendingDelivery,
-                       failed: &mut Vec<Option<String>>| {
+    let deliver_now = |w: usize,
+                       msg: Message,
+                       pd: PendingDelivery,
+                       failed: &mut Vec<Option<String>>,
+                       evicted: &mut Vec<bool>| {
+        // An evicted worker's data deliveries are skipped (count as
+        // satisfied — survivors' handles stay clean); Shutdown still
+        // goes through so the worker thread can exit and be joined.
+        if evicted[w] && msg.kind != MsgKind::Shutdown {
+            pd.skipped();
+            return;
+        }
         if let Some(what) = &failed[w] {
             pd.failed(what);
             return;
         }
         let n = msg.frame_len();
         if to_workers[w].send(msg).is_err() {
+            let what = format!("worker {w} hung up");
+            ledger.mark_dead(w as u32);
+            if evict_mode.load(std::sync::atomic::Ordering::Relaxed) {
+                // Elastic mode: the loss becomes an in-band Gone frame
+                // on the uplink (the gather evicts the worker), never a
+                // sticky fatal error.
+                if !evicted[w] {
+                    evicted[w] = true;
+                    let _ = up_tx.send(Message::gone(w as u32, 0, &what));
+                }
+                pd.skipped();
+                return;
+            }
             // Sticky per-worker failure, naming the worker — the same
             // contract the TCP loop's fail_conn keeps.
-            let what = format!("worker {w} hung up");
             let mut g = first_error.lock().unwrap();
             if g.is_none() {
                 *g = Some(what.clone());
             }
             drop(g);
-            ledger.mark_dead(w as u32);
             pd.failed(&what);
             failed[w] = Some(what);
             return;
@@ -331,6 +375,7 @@ fn run_inproc_downlink(
     let held = |w: usize, round: u64| {
         plan.as_ref().is_some_and(|p| p.is_held_down(w as u32, round))
     };
+    let mut evicted: Vec<bool> = vec![false; m];
     loop {
         match rx.recv() {
             Ok(Ev::Deliver { worker: w, msg, pd }) => {
@@ -339,8 +384,29 @@ fn run_inproc_downlink(
                     parked[w].push_back((msg, pd));
                     crate::obs::metrics::EVLOOP_PARKED_FRAMES.set(parked[w].len() as u64);
                 } else {
-                    deliver_now(w, msg, pd, &mut failed);
+                    deliver_now(w, msg, pd, &mut failed, &mut evicted);
                 }
+            }
+            Ok(Ev::Send { worker: w, msg }) => {
+                let pd = PendingDelivery::new(BroadcastHandle::new(1));
+                if !parked[w].is_empty() || held(w, msg.round) {
+                    parked[w].push_back((msg, pd));
+                    crate::obs::metrics::EVLOOP_PARKED_FRAMES.set(parked[w].len() as u64);
+                } else {
+                    deliver_now(w, msg, pd, &mut failed, &mut evicted);
+                }
+            }
+            Ok(Ev::Evict(w)) => {
+                evicted[w] = true;
+                // Reclaim parked frames: satisfied, never failed — the
+                // survivors' broadcast handles must stay clean.
+                while let Some((_, pd)) = parked[w].pop_front() {
+                    pd.skipped();
+                }
+                crate::obs::metrics::EVLOOP_PARKED_FRAMES.set(0);
+            }
+            Ok(Ev::Rejoin(w)) => {
+                evicted[w] = false;
             }
             Ok(Ev::Poke) => {
                 crate::obs::metrics::EVLOOP_WAKEUPS.inc();
@@ -352,7 +418,7 @@ fn run_inproc_downlink(
             while parked[w].front().is_some_and(|(msg, _)| !held(w, msg.round)) {
                 let (msg, pd) = parked[w].pop_front().unwrap();
                 crate::obs::metrics::EVLOOP_PARKED_FRAMES.set(parked[w].len() as u64);
-                deliver_now(w, msg, pd, &mut failed);
+                deliver_now(w, msg, pd, &mut failed, &mut evicted);
             }
         }
     }
@@ -365,7 +431,7 @@ fn run_inproc_downlink(
             if let Some(p) = &plan {
                 p.wait_down(w as u32, msg.round);
             }
-            deliver_now(w, msg, pd, &mut failed);
+            deliver_now(w, msg, pd, &mut failed, &mut evicted);
         }
     }
 }
@@ -387,6 +453,10 @@ pub struct InprocEvloopServerEnd {
     down_tx: Option<Sender<Ev>>,
     first_error: Arc<Mutex<Option<String>>>,
     pipeline_depth: usize,
+    /// `--on-worker-loss evict`: worker loss becomes an in-band
+    /// [`MsgKind::Gone`] frame and a muted downlink instead of a sticky
+    /// fatal error. Shared with the delivery thread.
+    evict: Arc<std::sync::atomic::AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -434,6 +504,26 @@ impl InprocEvloopServerEnd {
                 return Ok(());
             }
             if start.elapsed() >= AckLedger::MAX_WAIT {
+                if self.evict.load(std::sync::atomic::Ordering::Relaxed) {
+                    // Elastic mode (satellite-1 path): evict every
+                    // stalled worker instead of killing the run. The
+                    // Gone frames surface the loss to the next gather;
+                    // survivors are charged and the broadcast proceeds.
+                    let stalled =
+                        self.ledger.charge_evicting(self.pipeline_depth, Duration::ZERO);
+                    let tx =
+                        self.down_tx.as_ref().expect("delivery channel alive until drop");
+                    for w in stalled {
+                        let what = format!(
+                            "worker {w} evicted: pipeline stall (depth {}) — worker \
+                             stopped acking",
+                            self.pipeline_depth
+                        );
+                        let _ = tx.send(Ev::Evict(w as usize));
+                        self.pending.push_back(Message::gone(w, 0, &what));
+                    }
+                    return Ok(());
+                }
                 let w = (0..self.m)
                     .find(|&w| self.ledger.inflight(w as u32) >= self.pipeline_depth)
                     .unwrap_or(0);
@@ -563,6 +653,40 @@ impl ServerEnd for InprocEvloopServerEnd {
     fn counter(&self) -> Option<Arc<ByteCounter>> {
         Some(Arc::clone(&self.counter))
     }
+
+    fn set_evict_on_loss(&mut self, on: bool) {
+        self.evict.store(on, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn evict_worker(&mut self, worker: usize) -> anyhow::Result<()> {
+        // Ledger release happens here, synchronously: a broadcast issued
+        // right after the eviction must not charge the dead worker.
+        self.ledger.mark_dead(worker as u32);
+        self.down_tx
+            .as_ref()
+            .expect("delivery channel alive until drop")
+            .send(Ev::Evict(worker))
+            .map_err(|_| anyhow::anyhow!("delivery thread exited"))
+    }
+
+    fn rejoin_worker(&mut self, worker: usize) -> anyhow::Result<()> {
+        // Mirror image: readmit to the ledger before any new broadcast
+        // charges, then unmute the downlink.
+        self.ledger.mark_alive(worker as u32);
+        self.down_tx
+            .as_ref()
+            .expect("delivery channel alive until drop")
+            .send(Ev::Rejoin(worker))
+            .map_err(|_| anyhow::anyhow!("delivery thread exited"))
+    }
+
+    fn send_to(&mut self, worker: usize, msg: &Message) -> anyhow::Result<()> {
+        self.down_tx
+            .as_ref()
+            .expect("delivery channel alive until drop")
+            .send(Ev::Send { worker, msg: msg.clone() })
+            .map_err(|_| anyhow::anyhow!("delivery thread exited"))
+    }
 }
 
 impl Drop for InprocEvloopServerEnd {
@@ -632,14 +756,28 @@ fn build_cluster_evloop(
             let _ = tx.send(Ev::Poke);
         }));
     }
+    let evict = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let thread = {
         let counter = Arc::clone(&counter);
         let ledger = Arc::clone(&ledger);
         let first_error = Arc::clone(&first_error);
+        let evict = Arc::clone(&evict);
+        // The delivery thread holds an uplink sender so elastic-mode
+        // losses surface as in-band Gone frames to the gathers.
+        let up_tx = up_tx.clone();
         std::thread::Builder::new()
             .name("dqgan-inproc-evloop".into())
             .spawn(move || {
-                run_inproc_downlink(ev_rx, down_txs, plan, counter, ledger, first_error)
+                run_inproc_downlink(
+                    ev_rx,
+                    down_txs,
+                    plan,
+                    counter,
+                    ledger,
+                    first_error,
+                    evict,
+                    up_tx,
+                )
             })
             .expect("spawn dqgan-inproc-evloop")
     };
@@ -652,6 +790,7 @@ fn build_cluster_evloop(
         down_tx: Some(ev_tx),
         first_error,
         pipeline_depth: 2,
+        evict,
         thread: Some(thread),
     };
     (server, worker_ends, counter)

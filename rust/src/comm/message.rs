@@ -37,6 +37,20 @@ pub enum MsgKind {
     /// number written into its socket, which is what the Lemma-1
     /// staleness bound actually talks about.
     Ack = 6,
+    /// Worker → server: re-registration hello from a previously evicted
+    /// worker. `round` carries the first round whose broadcast the
+    /// worker is missing (its resume point); empty payload. The leader
+    /// answers by replaying the missed broadcasts in order from its
+    /// replay ledger (or the checkpoint store beyond the ledger's
+    /// depth) and re-admitting the worker to the quorum.
+    Rejoin = 7,
+    /// Leader-internal: "worker `worker` was lost" (payload = the error
+    /// text). Never crosses the wire — a transport synthesizes it into
+    /// the arrival stream under `--on-worker-loss evict` so a gather
+    /// blocked on that worker wakes up and shrinks the quorum instead
+    /// of hanging (or aborting, which is what the loss turns into under
+    /// `abort`).
+    Gone = 8,
 }
 
 impl MsgKind {
@@ -48,6 +62,8 @@ impl MsgKind {
             4 => Self::WorkerError,
             5 => Self::PartialBroadcast,
             6 => Self::Ack,
+            7 => Self::Rejoin,
+            8 => Self::Gone,
             other => anyhow::bail!("bad message kind {other}"),
         })
     }
@@ -92,6 +108,19 @@ impl Message {
     /// Worker `worker` has applied the round-`round` broadcast.
     pub fn ack(worker: u32, round: u64) -> Self {
         Self { kind: MsgKind::Ack, worker, round, payload: Vec::new() }
+    }
+
+    /// Re-registration hello: worker `worker` reconnects and asks for a
+    /// replay of every broadcast from `resume_round` on.
+    pub fn rejoin(worker: u32, resume_round: u64) -> Self {
+        Self { kind: MsgKind::Rejoin, worker, round: resume_round, payload: Vec::new() }
+    }
+
+    /// Leader-internal loss notification: worker `worker` died with
+    /// `what` at (leader) round `round`. Synthesized by transports under
+    /// eviction mode; never written to a socket.
+    pub fn gone(worker: u32, round: u64, what: &str) -> Self {
+        Self { kind: MsgKind::Gone, worker, round, payload: what.as_bytes().to_vec() }
     }
 
     /// Build a [`MsgKind::PartialBroadcast`] frame: the inclusion bitmap
@@ -436,6 +465,8 @@ mod tests {
             Message::worker_error(2, 3, "boom"),
             Message::partial_broadcast(4, &[true, false, true], &[1.0, -2.0]),
             Message::ack(5, 11),
+            Message::rejoin(6, 12),
+            Message::gone(7, 13, "socket failed"),
         ] {
             assert_eq!(Message::decode(&m.encode()).unwrap(), m);
         }

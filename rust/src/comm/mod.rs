@@ -152,6 +152,16 @@ impl PendingDelivery {
         self.done = true;
         self.handle.mark_failed(what);
     }
+
+    /// The delivery's worker was evicted: the frame will never be
+    /// written, but the broadcast is still **satisfied** — an evicted
+    /// worker is outside the quorum, so its queued frames complete
+    /// their handles without error instead of poisoning
+    /// [`BroadcastHandle::wait`] for the survivors.
+    pub(crate) fn skipped(mut self) {
+        self.done = true;
+        self.handle.mark_delivered();
+    }
 }
 
 impl Drop for PendingDelivery {
@@ -337,6 +347,15 @@ pub trait WorkerEnd: Send {
     }
     /// Worker id (0-based).
     fn id(&self) -> u32;
+    /// Re-register with the leader after an eviction: reconnect (TCP) or
+    /// re-announce (in-process) and ask for a replay of every broadcast
+    /// from `resume_round` on ([`MsgKind::Rejoin`]). After a successful
+    /// rejoin the missed broadcasts arrive in round order through the
+    /// normal [`Self::recv`] path, bitwise-identical to the originals.
+    /// Default: unsupported.
+    fn rejoin(&mut self, _resume_round: u64) -> anyhow::Result<()> {
+        anyhow::bail!("this transport does not support rejoin")
+    }
 }
 
 /// Server-side endpoint of a PS transport.
@@ -415,6 +434,36 @@ pub trait ServerEnd: Send {
     /// run end. Default: no counter (the quantities stay unknown).
     fn counter(&self) -> Option<Arc<ByteCounter>> {
         None
+    }
+    /// Switch the transport into eviction mode (`--on-worker-loss
+    /// evict`): a dead socket/channel or an ack-ledger stall no longer
+    /// poisons the transport with a sticky fatal error — instead the
+    /// lost worker's parked frames are reclaimed and a leader-internal
+    /// [`MsgKind::Gone`] frame is synthesized into the arrival stream so
+    /// the round engine can shrink the quorum. Default: ignored (losses
+    /// stay fatal, the historical behavior).
+    fn set_evict_on_loss(&mut self, _on: bool) {}
+    /// Evict `worker` at the leader's initiative (liveness violation):
+    /// close its connection, reclaim parked frames (completing their
+    /// broadcast handles without error), and mark it dead in the ack
+    /// ledger so flow control skips it. Idempotent. Default:
+    /// unsupported.
+    fn evict_worker(&mut self, _worker: usize) -> anyhow::Result<()> {
+        anyhow::bail!("eviction is not supported on this transport (use --transport evloop)")
+    }
+    /// Re-admit a previously evicted `worker` (it sent a
+    /// [`MsgKind::Rejoin`] hello): resume deliveries to it and clear its
+    /// dead mark in the ack ledger. On TCP the readiness loop already
+    /// re-admitted the connection when it accepted the reconnect, so
+    /// this may be a no-op there. Default: unsupported.
+    fn rejoin_worker(&mut self, _worker: usize) -> anyhow::Result<()> {
+        anyhow::bail!("rejoin is not supported on this transport (use --transport evloop)")
+    }
+    /// Send one frame to a single worker (the replay path: missed
+    /// broadcasts are re-sent to exactly the rejoining worker, in round
+    /// order, ahead of any frame broadcast later). Default: unsupported.
+    fn send_to(&mut self, _worker: usize, _msg: &Message) -> anyhow::Result<()> {
+        anyhow::bail!("targeted sends are not supported on this transport")
     }
 }
 

@@ -85,7 +85,11 @@ impl TcpServerBuilder {
     /// `connect_evloop*` constructors (they send `Ack` control frames).
     #[cfg(unix)]
     pub fn accept_evloop(self, m: usize) -> anyhow::Result<TcpEvloopServerEnd> {
-        TcpEvloopServerEnd::spawn(self.accept_streams(m)?)
+        let streams = self.accept_streams(m)?;
+        // The listener stays with the loop: in elastic-membership mode it
+        // keeps accepting, so an evicted worker can reconnect with a
+        // Rejoin hello and be spliced back into its old slot.
+        TcpEvloopServerEnd::spawn(streams, self.listener)
     }
 
     fn accept_streams(&self, m: usize) -> anyhow::Result<Vec<TcpStream>> {
@@ -109,6 +113,9 @@ impl TcpServerBuilder {
 /// TCP worker endpoint (connects to the server).
 pub struct TcpWorkerEnd {
     id: u32,
+    /// Server address, kept so an evicted worker can reconnect
+    /// ([`WorkerEnd::rejoin`]) without outside help.
+    addr: String,
     stream: TcpStream,
     counter: Arc<ByteCounter>,
     /// Straggler-injection schedule (tests/benches only) — the same
@@ -169,7 +176,34 @@ impl TcpWorkerEnd {
         stream.set_nodelay(true)?;
         // Registration: a Payload-kind hello with round u64::MAX.
         write_frame(&mut stream, &Message::payload(id, u64::MAX, Vec::new()))?;
-        Ok(Self { id, stream, counter: ByteCounter::new(), plan, send_acks })
+        Ok(Self {
+            id,
+            addr: addr.to_string(),
+            stream,
+            counter: ByteCounter::new(),
+            plan,
+            send_acks,
+        })
+    }
+
+    /// Reconnect a previously evicted worker id to a readiness-loop
+    /// server: sends a [`MsgKind::Rejoin`] hello (instead of the fresh
+    /// registration frame) naming the first missed round, so the leader
+    /// splices the socket into the worker's old slot and replays missed
+    /// broadcasts ahead of any new traffic. Elastic-membership mode only.
+    #[cfg(unix)]
+    pub fn reconnect_evloop(addr: &str, id: u32, resume_round: u64) -> anyhow::Result<Self> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        write_frame(&mut stream, &Message::rejoin(id, resume_round))?;
+        Ok(Self {
+            id,
+            addr: addr.to_string(),
+            stream,
+            counter: ByteCounter::new(),
+            plan: None,
+            send_acks: true,
+        })
     }
 
     /// This worker's byte counters (uplink = sent, downlink = received,
@@ -211,6 +245,19 @@ impl WorkerEnd for TcpWorkerEnd {
         // threaded transport's data-plane totals.
         let n = write_frame(&mut self.stream, &Message::ack(self.id, round))?;
         self.counter.add_ctrl(n);
+        Ok(())
+    }
+
+    fn rejoin(&mut self, resume_round: u64) -> anyhow::Result<()> {
+        // Fresh socket + a Rejoin hello naming the first missed round:
+        // the leader splices it into this worker's old slot and replays
+        // the missed broadcasts before any new traffic. The hello is
+        // control plane, like acks.
+        let mut stream = TcpStream::connect(&self.addr)?;
+        stream.set_nodelay(true)?;
+        let n = write_frame(&mut stream, &Message::rejoin(self.id, resume_round))?;
+        self.counter.add_ctrl(n);
+        self.stream = stream;
         Ok(())
     }
 
@@ -448,7 +495,34 @@ impl ServerEnd for TcpServerEnd {
 /// attaches a [`PendingDelivery`] per worker to.
 #[cfg(unix)]
 enum LoopCmd {
-    Broadcast { wire: Arc<Vec<u8>>, handle: BroadcastHandle },
+    Broadcast {
+        wire: Arc<Vec<u8>>,
+        handle: BroadcastHandle,
+    },
+    /// Targeted frame (rejoin replay / directed shutdown): rides one
+    /// worker's outbox, fire-and-forget — nobody waits on its handle.
+    SendTo {
+        worker: usize,
+        wire: Arc<Vec<u8>>,
+    },
+    /// Leader-initiated eviction (liveness timeout or ack stall).
+    /// `notify` additionally surfaces an in-band [`MsgKind::Gone`] frame
+    /// on the arrival channel, for evictions decided outside a gather.
+    Evict {
+        worker: usize,
+        what: String,
+        notify: bool,
+    },
+}
+
+/// A reconnecting socket that has been accepted but not yet identified:
+/// it leaves this staging area when its [`MsgKind::Rejoin`] hello lands
+/// (spliced into the worker's old slot) or on any protocol error
+/// (dropped).
+#[cfg(unix)]
+struct JoiningConn {
+    stream: TcpStream,
+    asm: super::message::FrameAssembler,
 }
 
 /// Per-connection state of the readiness loop: the nonblocking socket,
@@ -469,22 +543,39 @@ struct EvShared {
     /// the next `broadcast_async` call, in addition to completing every
     /// affected [`BroadcastHandle`] with it.
     first_error: Mutex<Option<String>>,
+    /// `--on-worker-loss evict`: worker loss becomes an in-band
+    /// [`MsgKind::Gone`] frame plus a reclaimed outbox instead of a
+    /// sticky fatal error, and the listener keeps accepting Rejoin
+    /// hellos from evicted workers.
+    evict: std::sync::atomic::AtomicBool,
 }
 
-/// Mark connection `i` failed: complete its queued deliveries with the
-/// error, record the sticky first failure (naming the worker id — the
-/// satellite-3 contract), release it from the ack ledger, and surface
-/// the error once on the arrival channel so a blocked gather fails too.
+/// Mark connection `i` failed. Abort mode (default): complete its queued
+/// deliveries with the error, record the sticky first failure (naming
+/// the worker id — the satellite-3 contract), release it from the ack
+/// ledger, and surface the error once on the arrival channel so a
+/// blocked gather fails too. Evict mode: reclaim the parked frames
+/// *without* poisoning the survivors' broadcast handles, and surface the
+/// loss as an in-band [`MsgKind::Gone`] frame — the leader evicts the
+/// worker and the round closes over the survivors.
 #[cfg(unix)]
 fn fail_conn(
     conn: &mut EvConn,
     i: usize,
     what: &str,
+    evict: bool,
     shared: &EvShared,
     ledger: &super::evloop::AckLedger,
     arrivals_tx: &std::sync::mpsc::Sender<anyhow::Result<Message>>,
 ) {
     let what = format!("worker {i} socket failed: {what}");
+    ledger.mark_dead(i as u32);
+    if evict {
+        conn.out.skip_all();
+        conn.failed = Some(what.clone());
+        let _ = arrivals_tx.send(Ok(Message::gone(i as u32, 0, &what)));
+        return;
+    }
     let mut g = shared.first_error.lock().unwrap();
     if g.is_none() {
         *g = Some(what.clone());
@@ -492,8 +583,35 @@ fn fail_conn(
     drop(g);
     conn.out.fail_all(&what);
     conn.failed = Some(what.clone());
-    ledger.mark_dead(i as u32);
     let _ = arrivals_tx.send(Err(anyhow::anyhow!(what)));
+}
+
+/// Leader-initiated eviction of worker `i` (liveness timeout or ack
+/// stall): reclaim its parked outbox frames, close the socket so the
+/// worker's next recv errors out (its clean-exit path), and release its
+/// ledger slot. `notify` additionally surfaces an in-band Gone frame —
+/// used when the eviction was decided outside the gather (ack stall in
+/// `broadcast_async`), so the next gather still observes the loss.
+#[cfg(unix)]
+fn evict_conn(
+    conn: &mut EvConn,
+    i: usize,
+    what: &str,
+    notify: bool,
+    ledger: &super::evloop::AckLedger,
+    arrivals_tx: &std::sync::mpsc::Sender<anyhow::Result<Message>>,
+) {
+    if conn.failed.is_some() {
+        return;
+    }
+    let what = format!("worker {i} evicted: {what}");
+    conn.out.skip_all();
+    conn.failed = Some(what.clone());
+    ledger.mark_dead(i as u32);
+    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+    if notify {
+        let _ = arrivals_tx.send(Ok(Message::gone(i as u32, 0, &what)));
+    }
 }
 
 /// Body of the single `dqgan-evloop` leader thread: poll every worker
@@ -505,8 +623,10 @@ fn fail_conn(
 /// outbox — a queued trailing `Shutdown` still reaches the workers —
 /// then exits.
 #[cfg(unix)]
+#[allow(clippy::too_many_arguments)]
 fn run_evloop(
     mut conns: Vec<EvConn>,
+    listener: Option<TcpListener>,
     mut waker_rx: std::os::unix::net::UnixStream,
     cmd_rx: std::sync::mpsc::Receiver<LoopCmd>,
     arrivals_tx: std::sync::mpsc::Sender<anyhow::Result<Message>>,
@@ -519,10 +639,12 @@ fn run_evloop(
     use std::os::fd::AsRawFd;
 
     let mut scratch = vec![0u8; 64 * 1024];
-    let mut fds: Vec<PollFd> = Vec::with_capacity(conns.len() + 1);
+    let mut fds: Vec<PollFd> = Vec::with_capacity(conns.len() + 2);
     let mut idx: Vec<usize> = Vec::with_capacity(conns.len());
+    let mut joining: Vec<JoiningConn> = Vec::new();
     let mut closing = false;
     loop {
+        let evict_on = shared.evict.load(std::sync::atomic::Ordering::Relaxed);
         fds.clear();
         idx.clear();
         fds.push(PollFd { fd: waker_rx.as_raw_fd(), events: POLLIN, revents: 0 });
@@ -544,17 +666,33 @@ fn run_evloop(
         if closing && idx.is_empty() {
             return; // every live outbox flushed: teardown complete
         }
+        // Rejoin plumbing participates only in elastic mode: the listener
+        // keeps accepting reconnects, and accepted-but-unidentified
+        // sockets wait in `joining` until their Rejoin hello arrives.
+        let mut listener_pos = None;
+        if evict_on && !closing {
+            if let Some(l) = &listener {
+                listener_pos = Some(fds.len());
+                fds.push(PollFd { fd: l.as_raw_fd(), events: POLLIN, revents: 0 });
+            }
+        }
+        let join_base = fds.len();
+        let join_snapshot = if closing { 0 } else { joining.len() };
+        for j in &joining[..join_snapshot] {
+            fds.push(PollFd { fd: j.stream.as_raw_fd(), events: POLLIN, revents: 0 });
+        }
         crate::obs::metrics::EVLOOP_POLL_ITERATIONS.inc();
         let idle_t0 = crate::obs::maybe_now();
         let polled = poll_ready(&mut fds, -1);
         crate::obs::record_elapsed(&crate::obs::metrics::EVLOOP_IDLE_WAIT_NS, idle_t0);
         if let Err(e) = polled {
-            // poll(2) itself failing is unrecoverable: fail every
-            // connection so no gather or broadcast handle can hang.
+            // poll(2) itself failing is unrecoverable even in elastic
+            // mode: fail every connection (abort semantics) so no gather
+            // or broadcast handle can hang.
             let what = e.to_string();
             for (i, c) in conns.iter_mut().enumerate() {
                 if c.failed.is_none() {
-                    fail_conn(c, i, &what, &shared, &ledger, &arrivals_tx);
+                    fail_conn(c, i, &what, false, &shared, &ledger, &arrivals_tx);
                 }
             }
             return;
@@ -567,12 +705,31 @@ fn run_evloop(
         loop {
             match cmd_rx.try_recv() {
                 Ok(LoopCmd::Broadcast { wire, handle }) => {
+                    // Load the mode fresh: a flip between the poll and
+                    // this drain must not misclassify a delivery.
+                    let evict = shared.evict.load(std::sync::atomic::Ordering::Relaxed);
                     for c in conns.iter_mut() {
                         let pd = PendingDelivery::new(handle.clone());
                         match &c.failed {
+                            // An evicted worker's deliveries are skipped
+                            // (count as satisfied), never failed — the
+                            // survivors' handle must stay clean.
+                            Some(_) if evict => pd.skipped(),
                             Some(what) => pd.failed(what),
                             None => c.out.push(Arc::clone(&wire), pd),
                         }
+                    }
+                }
+                Ok(LoopCmd::SendTo { worker, wire }) => {
+                    if let Some(c) = conns.get_mut(worker) {
+                        if c.failed.is_none() {
+                            c.out.push(wire, PendingDelivery::new(BroadcastHandle::new(1)));
+                        }
+                    }
+                }
+                Ok(LoopCmd::Evict { worker, what, notify }) => {
+                    if let Some(c) = conns.get_mut(worker) {
+                        evict_conn(c, worker, &what, notify, &ledger, &arrivals_tx);
                     }
                 }
                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
@@ -629,7 +786,10 @@ fn run_evloop(
                     }
                 }
                 if let Some(what) = failure {
-                    fail_conn(conn, i, &what, &shared, &ledger, &arrivals_tx);
+                    // Fresh load: the mode may have flipped while this
+                    // iteration was parked in poll.
+                    let evict = shared.evict.load(std::sync::atomic::Ordering::Relaxed);
+                    fail_conn(conn, i, &what, evict, &shared, &ledger, &arrivals_tx);
                     continue;
                 }
             }
@@ -639,8 +799,94 @@ fn run_evloop(
                     counter.add_down(wire_len);
                     crate::obs::metrics::EVLOOP_DELIVERIES.inc();
                 }) {
-                    fail_conn(conn, i, &e.to_string(), &shared, &ledger, &arrivals_tx);
+                    let evict = shared.evict.load(std::sync::atomic::Ordering::Relaxed);
+                    fail_conn(conn, i, &e.to_string(), evict, &shared, &ledger, &arrivals_tx);
                 }
+            }
+        }
+        // Elastic mode: accept pending reconnects (listener is
+        // nonblocking; drain until WouldBlock).
+        if let Some(pos) = listener_pos {
+            if fds[pos].revents & POLLIN != 0 {
+                if let Some(l) = &listener {
+                    loop {
+                        match l.accept() {
+                            Ok((s, _)) => {
+                                if s.set_nodelay(true).is_ok() && s.set_nonblocking(true).is_ok() {
+                                    joining.push(JoiningConn {
+                                        stream: s,
+                                        asm: super::message::FrameAssembler::new(),
+                                    });
+                                }
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                            Err(_) => break,
+                        }
+                    }
+                }
+            }
+        }
+        // Joining sockets: read until the Rejoin hello lands, then splice
+        // the connection into its old worker slot. A bad hello or a read
+        // failure drops the staging socket — never an established worker.
+        let mut splice: Vec<(usize, Option<Message>)> = Vec::new();
+        for j in 0..join_snapshot {
+            let revents = fds[join_base + j].revents;
+            if revents == 0 {
+                continue;
+            }
+            let jc = &mut joining[j];
+            let mut failure = false;
+            let mut msgs = Vec::new();
+            loop {
+                match jc.stream.read(&mut scratch) {
+                    Ok(0) => {
+                        failure = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        if jc.asm.push(&scratch[..n], &mut msgs).is_err() {
+                            failure = true;
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        failure = true;
+                        break;
+                    }
+                }
+            }
+            match msgs.into_iter().next() {
+                Some(hello)
+                    if hello.kind == MsgKind::Rejoin
+                        && (hello.worker as usize) < conns.len() =>
+                {
+                    splice.push((j, Some(hello)));
+                }
+                Some(_) => splice.push((j, None)),
+                None if failure => splice.push((j, None)),
+                None => {} // partial frame: keep waiting
+            }
+        }
+        // Descending order keeps pending indices valid across swap_remove.
+        for (j, hello) in splice.into_iter().rev() {
+            let jc = joining.swap_remove(j);
+            if let Some(hello) = hello {
+                let w = hello.worker as usize;
+                if conns[w].failed.is_none() {
+                    continue; // slot is healthy (duplicate rejoin): drop it
+                }
+                let conn = &mut conns[w];
+                conn.stream = jc.stream;
+                conn.asm = jc.asm;
+                conn.out = super::evloop::OutRing::default();
+                conn.failed = None;
+                ledger.mark_alive(hello.worker);
+                // The Rejoin frame flows in-band so a blocked gather
+                // observes the readmission and starts the replay.
+                let _ = arrivals_tx.send(Ok(hello));
             }
         }
     }
@@ -673,7 +919,7 @@ pub struct TcpEvloopServerEnd {
 
 #[cfg(unix)]
 impl TcpEvloopServerEnd {
-    fn spawn(streams: Vec<TcpStream>) -> anyhow::Result<Self> {
+    fn spawn(streams: Vec<TcpStream>, listener: TcpListener) -> anyhow::Result<Self> {
         let m = streams.len();
         let mut conns = Vec::with_capacity(m);
         for s in streams {
@@ -685,12 +931,16 @@ impl TcpEvloopServerEnd {
                 failed: None,
             });
         }
+        listener.set_nonblocking(true)?;
         let (waker, waker_rx) = super::evloop::Waker::pair()?;
         let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
         let (arrivals_tx, arrivals) = std::sync::mpsc::channel();
         let counter = ByteCounter::new();
         let ledger = super::evloop::AckLedger::new(m);
-        let shared = Arc::new(EvShared { first_error: Mutex::new(None) });
+        let shared = Arc::new(EvShared {
+            first_error: Mutex::new(None),
+            evict: std::sync::atomic::AtomicBool::new(false),
+        });
         let thread = {
             let counter = Arc::clone(&counter);
             let ledger = Arc::clone(&ledger);
@@ -698,7 +948,16 @@ impl TcpEvloopServerEnd {
             std::thread::Builder::new()
                 .name("dqgan-evloop".into())
                 .spawn(move || {
-                    run_evloop(conns, waker_rx, cmd_rx, arrivals_tx, counter, ledger, shared)
+                    run_evloop(
+                        conns,
+                        Some(listener),
+                        waker_rx,
+                        cmd_rx,
+                        arrivals_tx,
+                        counter,
+                        ledger,
+                        shared,
+                    )
                 })
                 .map_err(|e| anyhow::anyhow!("spawn dqgan-evloop: {e}"))?
         };
@@ -722,7 +981,11 @@ impl TcpEvloopServerEnd {
     fn next_arrival(&mut self) -> anyhow::Result<Message> {
         let msg =
             self.arrivals.recv().map_err(|_| anyhow::anyhow!("event loop exited"))??;
-        self.counter.add_up(msg.frame_len() + 4);
+        // Gone frames are leader-internal (synthesized, never on the
+        // wire): keep them out of the uplink byte totals.
+        if msg.kind != MsgKind::Gone {
+            self.counter.add_up(msg.frame_len() + 4);
+        }
         Ok(msg)
     }
 }
@@ -776,7 +1039,9 @@ impl ServerEnd for TcpEvloopServerEnd {
                         }
                     }
                 };
-                counter.add_up(msg.frame_len() + 4);
+                if msg.kind != MsgKind::Gone {
+                    counter.add_up(msg.frame_len() + 4);
+                }
                 Ok(Some(msg))
             },
             on_msg,
@@ -799,7 +1064,31 @@ impl ServerEnd for TcpEvloopServerEnd {
         // ledger (acks, consumed on the loop thread, discharge it);
         // Shutdown is control flow and never acked.
         if matches!(msg.kind, MsgKind::Broadcast | MsgKind::PartialBroadcast) {
-            self.ledger.charge(self.pipeline_depth)?;
+            if self.shared.evict.load(std::sync::atomic::Ordering::Relaxed) {
+                // Elastic mode: a stalled worker is evicted instead of
+                // taking down the run — the loop closes its socket and a
+                // Gone frame reaches the next gather (satellite-1 path).
+                for w in self
+                    .ledger
+                    .charge_evicting(self.pipeline_depth, std::time::Duration::from_secs(30))
+                {
+                    let _ = self
+                        .cmd_tx
+                        .as_ref()
+                        .expect("command channel alive until drop")
+                        .send(LoopCmd::Evict {
+                            worker: w as usize,
+                            what: format!(
+                                "pipeline stall: {} unapplied broadcasts (depth {}) and acks stopped",
+                                self.pipeline_depth, self.pipeline_depth
+                            ),
+                            notify: true,
+                        });
+                    self.waker.wake();
+                }
+            } else {
+                self.ledger.charge(self.pipeline_depth)?;
+            }
         }
         let handle = BroadcastHandle::new(self.m);
         let wire = Arc::new(super::evloop::wire_frame(&msg));
@@ -824,6 +1113,44 @@ impl ServerEnd for TcpEvloopServerEnd {
 
     fn counter(&self) -> Option<Arc<ByteCounter>> {
         Some(Arc::clone(&self.counter))
+    }
+
+    fn set_evict_on_loss(&mut self, on: bool) {
+        self.shared.evict.store(on, std::sync::atomic::Ordering::Relaxed);
+        // Re-arm the poll set: the loop adds listener interest (rejoin
+        // accepts) on its next iteration.
+        self.waker.wake();
+    }
+
+    fn evict_worker(&mut self, worker: usize) -> anyhow::Result<()> {
+        self.cmd_tx
+            .as_ref()
+            .expect("command channel alive until drop")
+            .send(LoopCmd::Evict {
+                worker,
+                what: "evicted by leader".into(),
+                notify: false,
+            })
+            .map_err(|_| anyhow::anyhow!("event loop exited"))?;
+        self.waker.wake();
+        Ok(())
+    }
+
+    fn rejoin_worker(&mut self, _worker: usize) -> anyhow::Result<()> {
+        // The loop already spliced the reconnect into the worker's slot
+        // when it forwarded the Rejoin hello; nothing to do here.
+        Ok(())
+    }
+
+    fn send_to(&mut self, worker: usize, msg: &Message) -> anyhow::Result<()> {
+        let wire = Arc::new(super::evloop::wire_frame(msg));
+        self.cmd_tx
+            .as_ref()
+            .expect("command channel alive until drop")
+            .send(LoopCmd::SendTo { worker, wire })
+            .map_err(|_| anyhow::anyhow!("event loop exited"))?;
+        self.waker.wake();
+        Ok(())
     }
 }
 
@@ -1327,5 +1654,85 @@ mod tests {
         assert!(second_done.load(std::sync::atomic::Ordering::SeqCst));
         let ctrl = worker.join().unwrap();
         assert_eq!(ctrl, 2 * (Message::ack(0, 0).frame_len() + 4) as u64);
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn evict_mode_turns_socket_death_into_gone_and_splices_rejoins() {
+        // Elastic-membership end-to-end on raw transports: a dying worker
+        // socket surfaces as an in-band Gone frame (not a fatal gather
+        // error), broadcasts keep completing cleanly for the survivor,
+        // and a reconnect with a Rejoin hello is spliced back into the
+        // old slot and can receive targeted frames again.
+        let m = 2;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let (die_tx, die_rx) = std::sync::mpsc::channel::<()>();
+        let (back_tx, back_rx) = std::sync::mpsc::channel::<()>();
+        let w0 = std::thread::spawn(move || {
+            let mut w = TcpWorkerEnd::connect_evloop(&addr.to_string(), 0).unwrap();
+            w.send(Message::payload(0, 0, vec![1])).unwrap();
+            let b = w.recv().unwrap();
+            assert_eq!(b.kind, MsgKind::Broadcast);
+            w.ack(b.round).unwrap();
+            while w.recv().is_ok() {}
+        });
+        let w1 = std::thread::spawn(move || {
+            let w = TcpWorkerEnd::connect_evloop(&addr.to_string(), 1).unwrap();
+            // Die only once evict mode is armed (keeps the test free of
+            // the startup race where the loop would still abort).
+            die_rx.recv().unwrap();
+            drop(w);
+            back_rx.recv().unwrap();
+            // Reconnect with the old id: Rejoin hello instead of a fresh
+            // registration, then receive the targeted replay frame.
+            let mut w = TcpWorkerEnd::reconnect_evloop(&addr.to_string(), 1, 1).unwrap();
+            let replay = w.recv().unwrap();
+            assert_eq!(replay, Message::broadcast(1, vec![9]));
+            while w.recv().is_ok() {}
+        });
+        let mut server = builder.accept_evloop(m).unwrap();
+        server.set_evict_on_loss(true);
+        die_tx.send(()).unwrap();
+        // Gather: worker 0's payload plus worker 1's synthesized Gone —
+        // the gather must NOT fail.
+        let mut seen_payload = false;
+        let mut seen_gone = false;
+        server
+            .recv_round_streaming_timed(&mut |msg| {
+                match msg.kind {
+                    MsgKind::Payload => seen_payload = true,
+                    MsgKind::Gone => {
+                        assert_eq!(msg.worker, 1);
+                        seen_gone = true;
+                    }
+                    other => panic!("unexpected frame kind {other:?}"),
+                }
+                if seen_payload && seen_gone {
+                    Ok(StreamDirective::Close)
+                } else {
+                    Ok(StreamDirective::Wait)
+                }
+            })
+            .unwrap();
+        // Broadcast completes without error: the evicted worker's
+        // delivery is skipped, not failed.
+        server.broadcast(Message::broadcast(0, vec![7])).unwrap();
+        // Worker 1 reconnects; the loop splices it in and forwards the
+        // Rejoin hello in-band.
+        back_tx.send(()).unwrap();
+        server
+            .recv_round_streaming_timed(&mut |msg| {
+                assert_eq!(msg.kind, MsgKind::Rejoin);
+                assert_eq!((msg.worker, msg.round), (1, 1));
+                Ok(StreamDirective::Close)
+            })
+            .unwrap();
+        // Targeted replay to the rejoined worker only.
+        server.send_to(1, &Message::broadcast(1, vec![9])).unwrap();
+        server.broadcast(Message::shutdown(2)).unwrap();
+        drop(server);
+        w0.join().unwrap();
+        w1.join().unwrap();
     }
 }

@@ -230,6 +230,83 @@ impl PolicyConfig {
     }
 }
 
+/// What the leader does when a worker is lost mid-run
+/// (`--on-worker-loss`): a liveness-ledger violation, an `AckLedger`
+/// stall, or a dead socket/channel all funnel into this one decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WorkerLossMode {
+    /// Fail the run with a worker error naming the lost worker — the
+    /// historical behavior, and the default: surviving a loss changes
+    /// the quorum semantics, so it stays opt-in.
+    #[default]
+    Abort,
+    /// Evict the worker: reclaim its parked frames, drain its late
+    /// ledger, shrink the quorum to the survivors and keep training.
+    /// Sound because error-feedback state is worker-local (the
+    /// δ-compressor contract never crosses the membership boundary —
+    /// see `docs/adr/005-elastic-membership.md`). Requires a
+    /// streaming-engine mode (the barrier paths have no per-arrival
+    /// hook to observe the loss from).
+    Evict,
+}
+
+impl WorkerLossMode {
+    /// Parse a CLI string: `evict` or `abort`/`fail`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "evict" => Ok(Self::Evict),
+            "abort" | "fail" => Ok(Self::Abort),
+            other => anyhow::bail!("unknown worker-loss mode '{other}' (evict|abort)"),
+        }
+    }
+
+    /// Display label for logs and error messages.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Evict => "evict",
+            Self::Abort => "abort",
+        }
+    }
+}
+
+/// Elastic-membership / fault-recovery knobs (`--on-worker-loss`,
+/// `--replay-depth`, `--ckpt-dir`, `--ckpt-every`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryConfig {
+    /// Evict or abort on worker loss (default abort).
+    pub on_worker_loss: WorkerLossMode,
+    /// How many recent broadcast frames the leader retains for rejoin
+    /// replay (round-stamped; one retained message per round, shared
+    /// `Arc` wire bytes at send time, so memory is O(depth) not
+    /// O(depth × M)). A worker reconnecting within this many rounds
+    /// replays the missed broadcasts in order and rejoins the quorum;
+    /// 0 disables the ledger. Only maintained under
+    /// [`WorkerLossMode::Evict`].
+    pub replay_depth: usize,
+    /// Content-addressed checkpoint directory: broadcast frames that
+    /// rotate out of the in-memory replay ledger spill here (so rejoin
+    /// works beyond `replay_depth`), and the model snapshots taken
+    /// every [`Self::ckpt_every`] rounds land here too. `None` disables
+    /// checkpointing.
+    pub ckpt_dir: Option<std::path::PathBuf>,
+    /// Take a round-stamped model snapshot every this many rounds
+    /// (0 = never). Parameters are identical across workers by
+    /// construction, so one snapshot per interval captures the cluster
+    /// model state.
+    pub ckpt_every: u64,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        Self {
+            on_worker_loss: WorkerLossMode::Abort,
+            replay_depth: 8,
+            ckpt_dir: None,
+            ckpt_every: 0,
+        }
+    }
+}
+
 /// Leader aggregation configuration.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct AggregatorConfig {
@@ -266,6 +343,10 @@ pub struct AggregatorConfig {
     /// a later round's gather, so scheduling jitter can add a round of
     /// apparent staleness — on fast-round workloads prefer R ≥ 2.
     pub liveness_rounds: u64,
+    /// Elastic-membership / fault-recovery configuration: what happens
+    /// on worker loss, how deep the rejoin replay ledger is, and where
+    /// checkpoints land.
+    pub recovery: RecoveryConfig,
 }
 
 impl Default for AggregatorConfig {
@@ -278,6 +359,7 @@ impl Default for AggregatorConfig {
             pipeline_depth: 2,
             reduce: ReduceMode::Windowed,
             liveness_rounds: 0,
+            recovery: RecoveryConfig::default(),
         }
     }
 }
@@ -433,6 +515,29 @@ mod tests {
         ] {
             assert_eq!(PolicyConfig::parse(&p.label()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn parses_worker_loss_modes() {
+        assert_eq!(WorkerLossMode::parse("evict").unwrap(), WorkerLossMode::Evict);
+        assert_eq!(WorkerLossMode::parse("ABORT").unwrap(), WorkerLossMode::Abort);
+        assert_eq!(WorkerLossMode::parse("fail").unwrap(), WorkerLossMode::Abort);
+        assert!(WorkerLossMode::parse("wat").is_err());
+        // Abort stays the default: surviving a loss is opt-in.
+        assert_eq!(WorkerLossMode::default(), WorkerLossMode::Abort);
+        for m in [WorkerLossMode::Evict, WorkerLossMode::Abort] {
+            assert_eq!(WorkerLossMode::parse(m.label()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn recovery_defaults_are_abort_with_a_small_ledger() {
+        let r = RecoveryConfig::default();
+        assert_eq!(r.on_worker_loss, WorkerLossMode::Abort);
+        assert_eq!(r.replay_depth, 8);
+        assert!(r.ckpt_dir.is_none());
+        assert_eq!(r.ckpt_every, 0);
+        assert_eq!(AggregatorConfig::default().recovery, r);
     }
 
     #[test]

@@ -107,6 +107,7 @@ fn distributed_dqgan(eta: f32, rounds: u64, every: u64) -> anyhow::Result<Vec<Tr
         keep_stats: false,
         agg: Default::default(),
         transport: Default::default(),
+        chaos_kill: None,
     };
     let report = run_cluster(&cfg, |_m| Ok(Box::new(game())))?;
     let g = game();

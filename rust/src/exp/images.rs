@@ -142,6 +142,7 @@ fn run_method(
         keep_stats: true,
         agg: Default::default(),
         transport: Default::default(),
+        chaos_kill: None,
     };
     let figure_seed = cfg.seed ^ 0x1111;
     let report = run_cluster(&cluster, |m| {

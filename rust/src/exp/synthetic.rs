@@ -48,6 +48,7 @@ pub fn run_method(
         keep_stats: false,
         agg: Default::default(),
         transport: Default::default(),
+        chaos_kill: None,
     };
     let report = run_cluster(&cfg, |_m| Ok(Box::new(gan())))?;
     let scorer = gan();

@@ -38,6 +38,7 @@ fn run_one(algo: &str, m: usize, batch: usize, rounds: u64, eta: f32) -> anyhow:
         keep_stats: false,
         agg: Default::default(),
         transport: Default::default(),
+        chaos_kill: None,
     };
     let report = run_cluster(&cfg, |_m| Ok(Box::new(MlpGan::new(MlpGanConfig::default()))))?;
     // avg_payload_norm_sq = ‖q̄‖² = ‖η·(1/M)ΣF + EF noise‖²; divide by η².

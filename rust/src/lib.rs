@@ -30,6 +30,7 @@ pub mod util;
 
 pub mod obs;
 
+pub mod ckpt;
 pub mod compress;
 pub mod comm;
 pub mod optim;

@@ -61,6 +61,10 @@ pub mod metrics {
             TRANSPORT_BYTES_CTRL => "transport.bytes_ctrl",
             CODEC_BYTES_PRE_TOTAL => "codec.bytes_pre_total",
             CODEC_BYTES_POST_TOTAL => "codec.bytes_post_total",
+            RECOVERY_EVICTIONS => "recovery.evictions",
+            RECOVERY_REJOINS => "recovery.rejoins",
+            RECOVERY_REPLAYED_FRAMES => "recovery.replayed_frames",
+            RECOVERY_CKPT_BYTES => "recovery.ckpt_bytes",
         }
         gauges {
             EVLOOP_OUTRING_DEPTH => "evloop.outring_depth",

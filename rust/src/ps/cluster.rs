@@ -4,15 +4,18 @@
 
 use super::aggregate::Decoder;
 use super::server::serve_rounds_with;
-use super::worker::{worker_loop, EvalHook, WorkerSummary};
+use super::worker::{apply_broadcast, worker_loop, EvalHook, WorkerSummary};
 use super::RoundRecord;
 use crate::algo::AlgoKind;
-use crate::comm::{inproc_cluster, inproc_cluster_evloop, ServerEnd};
+use crate::ckpt::CkptStore;
+use crate::comm::{inproc_cluster, inproc_cluster_evloop, Message, MsgKind, ServerEnd};
 use crate::config::{AggregatorConfig, TransportMode};
 use crate::grad::GradientSource;
 use crate::optim::LrSchedule;
+use crate::util::bytes::put_f32_slice;
 use crate::util::rng::Pcg32;
 use crate::util::timer::Stopwatch;
+use std::sync::{Arc, Mutex};
 
 /// Cluster configuration for one training run.
 #[derive(Debug, Clone)]
@@ -39,6 +42,13 @@ pub struct ClusterConfig {
     /// bitwise-identical across the two — CI diffs `broadcast_fnv`
     /// between them every run.
     pub transport: TransportMode,
+    /// Fault injection (`--chaos-kill W@R`): worker W participates
+    /// normally for R rounds and then dies abruptly — its transport end
+    /// drops with no Shutdown handshake, like a SIGKILL mid-run. The
+    /// run only survives this under `--on-worker-loss evict`; the CI
+    /// chaos job drives it and diffs the survivor broadcasts against a
+    /// run where W was absent from the start.
+    pub chaos_kill: Option<(usize, u64)>,
 }
 
 impl Default for ClusterConfig {
@@ -54,6 +64,7 @@ impl Default for ClusterConfig {
             keep_stats: true,
             agg: AggregatorConfig::default(),
             transport: TransportMode::default(),
+            chaos_kill: None,
         }
     }
 }
@@ -90,6 +101,33 @@ pub fn run_cluster(
     make_src: impl Fn(usize) -> anyhow::Result<Box<dyn GradientSource>> + Send + Sync,
 ) -> anyhow::Result<TrainReport> {
     anyhow::ensure!(cfg.workers > 0, "need at least one worker");
+    if let Some((cw, cr)) = cfg.chaos_kill {
+        anyhow::ensure!(
+            cw < cfg.workers,
+            "--chaos-kill worker {cw} out of range (M = {})",
+            cfg.workers
+        );
+        anyhow::ensure!(
+            cw != 0,
+            "--chaos-kill cannot target worker 0 (it owns the report summary)"
+        );
+        anyhow::ensure!(
+            cr < cfg.rounds,
+            "--chaos-kill round {cr} is past the run ({} rounds)",
+            cfg.rounds
+        );
+    }
+    // Periodic model snapshots (`--ckpt-every`): worker 0's post-apply
+    // params land in a `model/` sub-store of the checkpoint dir. Kept
+    // separate from the leader's broadcast-spill store so the two
+    // manifests never contend.
+    let model_ckpt: Option<Arc<Mutex<CkptStore>>> =
+        match (&cfg.agg.recovery.ckpt_dir, cfg.agg.recovery.ckpt_every) {
+            (Some(dir), every) if every > 0 => {
+                Some(Arc::new(Mutex::new(CkptStore::open(dir.join("model"))?)))
+            }
+            _ => None,
+        };
     let sw = Stopwatch::start();
     // Both transports speak the same ServerEnd/WorkerEnd contract; the
     // evloop cluster's worker ends additionally ack applied broadcasts
@@ -127,19 +165,88 @@ pub fn run_cluster(
             let batch = cfg.batch;
             let rounds = cfg.rounds;
             let seed = cfg.seed;
+            let chaos_rounds = match cfg.chaos_kill {
+                Some((cw, cr)) if cw == m => Some(cr),
+                _ => None,
+            };
+            let model_ckpt = model_ckpt.clone();
+            let snap_every = cfg.agg.recovery.ckpt_every;
             handles.push(scope.spawn(move || -> anyhow::Result<WorkerSummary> {
                 let mut src = make_src(m)?;
                 let mut rng = Pcg32::new(seed.wrapping_add(m as u64).wrapping_add(1));
                 let mut algo = algo;
-                let eval: Option<EvalHook> = if m == 0 && eval_every > 0 {
+                if let Some(cr) = chaos_rounds {
+                    // Fault injection: run `cr` normal rounds, then die
+                    // without any teardown handshake — the transport end
+                    // just drops mid-protocol, exactly what a killed
+                    // process looks like from the leader's side.
+                    let dim = algo.dim();
+                    for round in 0..cr {
+                        let payload = algo.produce(src.as_mut(), batch, &mut rng)?.wire.to_vec();
+                        if end.send(Message::payload(m as u32, round, payload)).is_err() {
+                            break;
+                        }
+                        loop {
+                            match end.recv() {
+                                Ok(msg)
+                                    if msg.kind == MsgKind::Broadcast
+                                        || msg.kind == MsgKind::PartialBroadcast =>
+                                {
+                                    apply_broadcast(
+                                        algo.as_mut(),
+                                        dim,
+                                        m as u32,
+                                        &msg,
+                                        msg.round == round,
+                                    )?;
+                                    let _ = end.ack(msg.round);
+                                    break;
+                                }
+                                Ok(msg) if msg.kind == MsgKind::Shutdown => {
+                                    return Ok(WorkerSummary {
+                                        rounds: round,
+                                        final_params: algo.params().to_vec(),
+                                        stats: Vec::new(),
+                                    });
+                                }
+                                Ok(_) => {}
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                    drop(end);
+                    return Ok(WorkerSummary {
+                        rounds: cr,
+                        final_params: algo.params().to_vec(),
+                        stats: Vec::new(),
+                    });
+                }
+                let eval: Option<EvalHook> = if m == 0 && (eval_every > 0 || model_ckpt.is_some())
+                {
                     Some(Box::new(move |round, params, stats| {
-                        if (round + 1) % eval_every == 0 || round == 0 {
+                        if eval_every > 0 && ((round + 1) % eval_every == 0 || round == 0) {
                             let _ = eval_tx.send(EvalEvent {
                                 round,
                                 params: params.to_vec(),
                                 loss_g: stats.loss_g,
                                 loss_d: stats.loss_d,
                             });
+                        }
+                        if let Some(store) = &model_ckpt {
+                            if (round + 1) % snap_every == 0 {
+                                let mut bytes = Vec::with_capacity(4 * params.len());
+                                put_f32_slice(&mut bytes, params);
+                                // Post-apply params are identical across
+                                // workers, so worker 0's copy is *the*
+                                // model at this round.
+                                if let Err(e) =
+                                    store.lock().unwrap().put("model", round, 0, &bytes)
+                                {
+                                    crate::log_warn!(
+                                        "model checkpoint at round {round} failed: {e:#}"
+                                    );
+                                }
+                            }
                         }
                     }))
                 } else {
@@ -228,6 +335,7 @@ mod tests {
             keep_stats: true,
             agg: Default::default(),
             transport: Default::default(),
+            chaos_kill: None,
         }
     }
 
@@ -314,6 +422,50 @@ mod tests {
         };
         assert_eq!(fnvs(&ev), fnvs(&th), "broadcast checksums must match bitwise");
         assert_eq!(ev.worker0.final_params, th.worker0.final_params);
+    }
+
+    #[test]
+    fn chaos_kill_under_evict_matches_the_worker_never_existing() {
+        // The δ-contract identity the CI chaos job gates on: a 4-worker
+        // run whose worker 3 dies at round 0 under `--on-worker-loss
+        // evict` + `kofm:3` averages over the same 3 survivors — with
+        // the same 1/arrived scale — as a 3-worker `kofm:3` run, so the
+        // per-round broadcast checksums must be bitwise identical.
+        use crate::config::{PolicyConfig, RecoveryConfig, WorkerLossMode};
+        let build = |workers: usize, chaos: Option<(usize, u64)>| {
+            let mut cfg = quad_cfg("dqgan:linf8", 12, 0.05);
+            cfg.workers = workers;
+            cfg.transport = TransportMode::EvLoop;
+            cfg.chaos_kill = chaos;
+            cfg.agg = AggregatorConfig {
+                policy: PolicyConfig::KofM { k: 3 },
+                liveness_rounds: 2,
+                recovery: RecoveryConfig {
+                    on_worker_loss: WorkerLossMode::Evict,
+                    ..RecoveryConfig::default()
+                },
+                ..AggregatorConfig::pipelined()
+            };
+            cfg
+        };
+        let run = |cfg: &ClusterConfig| {
+            run_cluster(cfg, |_m| {
+                let mut rng = Pcg32::new(777);
+                Ok(Box::new(QuadraticOperator::new(16, 0.1, &mut rng)))
+            })
+            .unwrap()
+        };
+        let chaotic = run(&build(4, Some((3, 0))));
+        let baseline = run(&build(3, None));
+        assert_eq!(chaotic.records.len(), 12, "run must survive the killed worker");
+        let fnvs = |r: &TrainReport| {
+            r.records.iter().map(|x| (x.round, x.broadcast_fnv)).collect::<Vec<_>>()
+        };
+        assert_eq!(fnvs(&chaotic), fnvs(&baseline), "survivor broadcasts must be bitwise equal");
+        assert_eq!(chaotic.worker0.final_params, baseline.worker0.final_params);
+        // The dead worker's slot is evicted (liveness bound), never folded.
+        assert!(chaotic.records.iter().any(|r| r.workers_evicted == 1));
+        assert!(chaotic.records.iter().all(|r| r.workers_included == 3));
     }
 
     #[test]

@@ -78,8 +78,14 @@ pub struct RoundRecord {
     pub workers_included: usize,
     /// Workers the round-completion policy skipped this round (their
     /// payloads fold back into local error memory via the broadcast's
-    /// inclusion bitmap).
+    /// inclusion bitmap). Evicted workers count here too — an evicted
+    /// slot is a permanently skipped one until its owner rejoins.
     pub workers_skipped: usize,
+    /// Workers evicted from the membership as of this round's close
+    /// (`--on-worker-loss evict`): presumed-dead slots excluded from
+    /// gathers, quorums and the ack ledger until they rejoin. Always 0
+    /// under the default abort mode.
+    pub workers_evicted: usize,
     /// Mean losses (when the model reports them).
     pub loss_g: Option<f32>,
     pub loss_d: Option<f32>,

@@ -47,8 +47,19 @@ pub trait RoundPolicy: Send {
     fn begin_round(&mut self, round: u64);
     /// The `arrived`-th payload (1-based) of `workers` total was just
     /// accepted: close now, keep waiting, or keep waiting with a
-    /// deadline armed.
+    /// deadline armed. Under elastic membership (`--on-worker-loss
+    /// evict`) the leader passes the **live** worker count, so barrier
+    /// and deadline closes are judged against the survivors.
     fn on_arrival(&mut self, arrived: usize, workers: usize) -> StreamDirective;
+    /// The smallest live membership under which a round can still close
+    /// (quorum feasibility): a hard quorum for `kofm:K`, otherwise 1 —
+    /// the full-barrier and deadline policies close over whatever
+    /// membership remains. The leader fails the run the moment evictions
+    /// push the live count below this, instead of hanging in a gather
+    /// that can never complete.
+    fn min_quorum(&self) -> usize {
+        1
+    }
 }
 
 /// Barrier semantics: close only when every worker has arrived.
@@ -80,6 +91,10 @@ impl RoundPolicy for KofMPolicy {
         } else {
             StreamDirective::Wait
         }
+    }
+
+    fn min_quorum(&self) -> usize {
+        self.k
     }
 }
 
@@ -189,6 +204,14 @@ mod tests {
             StreamDirective::WaitUntil(dl) => assert!(dl >= dl1),
             other => panic!("expected WaitUntil, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn min_quorum_is_hard_only_for_kofm() {
+        assert_eq!(build_policy(PolicyConfig::KofM { k: 3 }, 4).unwrap().min_quorum(), 3);
+        assert_eq!(build_policy(PolicyConfig::Full, 4).unwrap().min_quorum(), 1);
+        let cfg = PolicyConfig::Deadline { grace_ms: 1, arm_at: 2 };
+        assert_eq!(build_policy(cfg, 4).unwrap().min_quorum(), 1);
     }
 
     #[test]

@@ -50,7 +50,7 @@ use super::aggregate::{Aggregator, Decoder, ReduceClose};
 use super::policy::build_policy;
 use super::RoundRecord;
 use crate::comm::{BroadcastHandle, Message, MsgKind, ServerEnd, StreamDirective};
-use crate::config::{AggMode, AggregatorConfig, PolicyConfig};
+use crate::config::{AggMode, AggregatorConfig, PolicyConfig, WorkerLossMode};
 use crate::util::bytes::{fnv1a64_f32, put_f32_slice};
 use crate::util::stats::norm2_sq;
 use crate::util::threads::live_threads;
@@ -98,6 +98,34 @@ pub fn serve_rounds_with(
         transport.set_pipeline_depth(agg_cfg.pipeline_depth.max(1));
     }
     let liveness = agg_cfg.liveness_rounds;
+    let recovery = agg_cfg.recovery.clone();
+    let evict_mode = recovery.on_worker_loss == WorkerLossMode::Evict;
+    anyhow::ensure!(
+        !evict_mode || policy_cfg != PolicyConfig::Full,
+        "--on-worker-loss evict requires a partial round policy (--policy kofm:K|deadline:MS)"
+    );
+    if evict_mode {
+        // Transport-side arm: worker loss becomes an in-band Gone frame
+        // (and the listener keeps accepting rejoin hellos) instead of a
+        // sticky fatal error.
+        transport.set_evict_on_loss(true);
+    }
+    // Elastic membership: an evicted worker keeps its slot (ids stay
+    // stable across the run) but is excluded from gathers, quorums and
+    // ledgers until it rejoins.
+    let mut evicted: Vec<bool> = vec![false; m];
+    // Bounded replay ledger: the last `--replay-depth` broadcast frames,
+    // round-stamped. One owned Message per round — O(depth · dim), not
+    // O(depth · M · dim): the transport already shares each frame's
+    // encoded wire bytes across all M outboxes per send.
+    let mut replay: VecDeque<(u64, Message)> = VecDeque::new();
+    // Content-addressed checkpoint store: rotated-out replay frames
+    // spill here (kind "bcast"), so a rejoin beyond the replay window
+    // can still reconstruct history.
+    let mut ckpt = match &recovery.ckpt_dir {
+        Some(dir) => Some(crate::ckpt::CkptStore::open(dir)?),
+        None => None,
+    };
     // Policy engine (None = the unchanged full-barrier paths below).
     let mut policy = match policy_cfg {
         PolicyConfig::Full => None,
@@ -137,15 +165,44 @@ pub fn serve_rounds_with(
         // staleness — size R accordingly (R ≥ 2 is a sane floor on
         // fast-round workloads).
         if liveness > 0 {
-            for (w, ledger) in pending_late.iter().enumerate() {
-                if let Some(&r0) = ledger.front() {
-                    anyhow::ensure!(
-                        round.saturating_sub(r0) <= liveness,
-                        "worker {w} failed at round {round}: liveness timeout — its round {r0} \
-                         payload is still missing after {liveness} rounds (worker presumed \
-                         dead, not slow)"
-                    );
+            for w in 0..m {
+                if evicted[w] {
+                    continue;
                 }
+                let Some(&r0) = pending_late[w].front() else { continue };
+                if round.saturating_sub(r0) <= liveness {
+                    continue;
+                }
+                anyhow::ensure!(
+                    evict_mode,
+                    "worker {w} failed at round {round}: liveness timeout — its round {r0} \
+                     payload is still missing after {liveness} rounds (worker presumed \
+                     dead, not slow)"
+                );
+                // `--on-worker-loss evict`: the dead worker loses its
+                // membership, not the run. The transport reclaims its
+                // parked outbox frames and exempts it from the ack
+                // ledger; its late ledger is dropped (those frames are
+                // never coming, and error-feedback keeps all compressor
+                // state worker-local, so nothing leader-side dangles).
+                transport.evict_worker(w)?;
+                evicted[w] = true;
+                pending_late[w].clear();
+                crate::obs::metrics::RECOVERY_EVICTIONS.inc();
+            }
+        }
+        if evict_mode {
+            // Quorum feasibility over the survivors: a round that can
+            // never close must fail loudly now, not hang in the gather.
+            let live = evicted.iter().filter(|&&e| !e).count();
+            anyhow::ensure!(live > 0, "all {m} workers evicted — nothing left to aggregate");
+            if let Some(p) = policy.as_deref() {
+                let q = p.min_quorum();
+                anyhow::ensure!(
+                    q <= live,
+                    "round policy needs {q} workers but only {live} of {m} remain after \
+                     evictions"
+                );
             }
         }
         let sw = Stopwatch::start();
@@ -174,6 +231,10 @@ pub fn serve_rounds_with(
         // overlaps on the pipelined windowed path.
         let close: Option<ReduceClose>;
         let mut batch_msgs: Vec<Message> = Vec::new();
+        // Rejoin hellos observed during this round's gather; replay +
+        // readmission run after the round closes (the transport is busy
+        // inside the gather callback here).
+        let mut rejoins: Vec<(usize, u64)> = Vec::new();
         let gather_span = crate::obs::span("gather", crate::obs::LEADER_TID, round);
         if let Some(policy) = policy.as_deref_mut() {
             // Policy-driven round: every arrival is consulted against
@@ -186,6 +247,12 @@ pub fn serve_rounds_with(
             let mut directive = StreamDirective::Wait;
             transport.recv_round_streaming_timed(&mut |msg| {
                 if msg.kind == MsgKind::WorkerError {
+                    let w = msg.worker as usize;
+                    if w < m && evicted[w] {
+                        // A dying evicted worker is old news — its slot
+                        // is already out of the round.
+                        return Ok(directive);
+                    }
                     anyhow::bail!(
                         "worker {} failed at round {}: {}",
                         msg.worker,
@@ -193,11 +260,53 @@ pub fn serve_rounds_with(
                         String::from_utf8_lossy(&msg.payload)
                     );
                 }
+                if msg.kind == MsgKind::Gone {
+                    // Transport-observed loss (socket death, ack-ledger
+                    // stall), surfaced in-band under evict mode. The
+                    // transport already reclaimed the worker's parked
+                    // frames and marked it dead in the ack ledger; here
+                    // membership shrinks and the quorum re-checks.
+                    let w = msg.worker as usize;
+                    anyhow::ensure!(w < m, "worker id {w} out of range (M = {m})");
+                    if !evicted[w] {
+                        evicted[w] = true;
+                        pending_late[w].clear();
+                        crate::obs::metrics::RECOVERY_EVICTIONS.inc();
+                    }
+                    let live = evicted.iter().filter(|&&e| !e).count();
+                    anyhow::ensure!(
+                        live > 0,
+                        "all {m} workers evicted — nothing left to aggregate"
+                    );
+                    let q = policy.min_quorum();
+                    anyhow::ensure!(
+                        q <= live,
+                        "round policy needs {q} workers but only {live} of {m} remain \
+                         after evictions"
+                    );
+                    directive = policy.on_arrival(agg.arrived_count(), live);
+                    return Ok(directive);
+                }
+                if msg.kind == MsgKind::Rejoin {
+                    let w = msg.worker as usize;
+                    anyhow::ensure!(w < m, "worker id {w} out of range (M = {m})");
+                    rejoins.push((w, msg.round));
+                    return Ok(directive);
+                }
                 // Every payload frame received during this round costs
-                // real uplink bytes — count drained late frames too, so
-                // the per-round series sums to the actual wire traffic.
+                // real uplink bytes — count drained late frames (and an
+                // evicted worker's in-flight frames) too, so the
+                // per-round series sums to the actual wire traffic.
                 if msg.kind == MsgKind::Payload {
                     bytes_up += msg.payload.len();
+                }
+                if msg.kind == MsgKind::Payload
+                    && evicted.get(msg.worker as usize).copied().unwrap_or(false)
+                {
+                    // In-flight frame from a worker evicted this round:
+                    // its slot is skipped, not folded, and its late
+                    // ledger was dropped at eviction.
+                    return Ok(directive);
                 }
                 if msg.kind == MsgKind::Payload && msg.round < round {
                     // Late frame from a round that closed without this
@@ -223,7 +332,11 @@ pub fn serve_rounds_with(
                 drop(decode_span);
                 accept_secs += t.elapsed_secs();
                 res?;
-                directive = policy.on_arrival(agg.arrived_count(), m);
+                // Quorums and full-arrival closes are judged against the
+                // *live* membership, not the configured M — an evicted
+                // straggler must not hold a deadline/full close open.
+                let live = evicted.iter().filter(|&&e| !e).count();
+                directive = policy.on_arrival(agg.arrived_count(), live);
                 Ok(directive)
             })?;
             gather_secs = sw.elapsed_secs();
@@ -287,7 +400,10 @@ pub fn serve_rounds_with(
         };
         if let Some(inc) = &included {
             for (w, &arrived) in inc.iter().enumerate() {
-                if !arrived {
+                // Evicted workers owe no late frame: their slot is
+                // skipped outright, so the ledger (and the liveness
+                // bound it feeds) tracks live stragglers only.
+                if !arrived && !evicted[w] {
                     pending_late[w].push_back(round);
                 }
             }
@@ -348,6 +464,64 @@ pub fn serve_rounds_with(
             },
             None => 0.0,
         };
+        // ---- Rejoins observed during the gather: replay the missed
+        // broadcast history in round order, then readmit. The replayed
+        // frames are queued before this round's broadcast, and each
+        // worker's downlink is FIFO, so the rejoined worker sees rounds
+        // [resume, now] exactly once and in order.
+        for (w, resume) in rejoins.drain(..) {
+            if !evicted[w] {
+                // Duplicate hello for a slot that is already live.
+                continue;
+            }
+            transport.rejoin_worker(w)?;
+            let mut frames: Vec<Message> = Vec::new();
+            let mut complete = true;
+            for r in resume..round {
+                if let Some((_, f)) = replay.iter().find(|(rr, _)| *rr == r) {
+                    frames.push(f.clone());
+                } else if let Some(store) = ckpt.as_mut() {
+                    match store.get("bcast", r, 0)? {
+                        Some(bytes) => frames.push(Message::decode(&bytes)?),
+                        None => {
+                            complete = false;
+                            break;
+                        }
+                    }
+                } else {
+                    complete = false;
+                    break;
+                }
+            }
+            if !complete {
+                // History is gone — older than `--replay-depth` and not
+                // in the checkpoint store. A stale worker must not train
+                // across a hole in the broadcast sequence: tell it to
+                // exit cleanly and keep the slot evicted.
+                transport.send_to(w, &Message::shutdown(round))?;
+                transport.evict_worker(w)?;
+                continue;
+            }
+            for f in &frames {
+                transport.send_to(w, f)?;
+                crate::obs::metrics::RECOVERY_REPLAYED_FRAMES.inc();
+            }
+            evicted[w] = false;
+            crate::obs::metrics::RECOVERY_REJOINS.inc();
+        }
+        let workers_evicted = evicted.iter().filter(|&&e| e).count();
+        // Record this round's broadcast into the bounded replay ledger;
+        // frames rotated out of the window spill (encoded) into the
+        // checkpoint store when one is configured.
+        if evict_mode {
+            replay.push_back((round, msg.clone()));
+            while replay.len() > recovery.replay_depth {
+                let (r, old) = replay.pop_front().expect("non-empty: len > depth >= 0");
+                if let Some(store) = ckpt.as_mut() {
+                    store.put("bcast", r, 0, &old.encode())?;
+                }
+            }
+        }
         let t = Stopwatch::start();
         // Ack-RTT reference point: the ledger's ack arrivals are matched
         // against this send timestamp (`worker.ack_rtt_ns`).
@@ -385,6 +559,7 @@ pub fn serve_rounds_with(
             overlap_secs,
             workers_included,
             workers_skipped: m - workers_included,
+            workers_evicted,
             threads_peak: (threads_peak > 0).then_some(threads_peak),
             bytes_down,
             ..Default::default()
@@ -571,6 +746,68 @@ mod tests {
         drop(server); // unblock worker 0
         drop(w1);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn evict_mode_survives_a_silent_worker() {
+        // Same dead-worker shape as the liveness test above, but with
+        // --on-worker-loss evict: instead of failing the run at the
+        // liveness deadline, the leader must drop worker 1 from the
+        // membership and keep closing rounds over worker 0 alone.
+        use crate::comm::inproc_cluster_evloop;
+        use crate::config::{RecoveryConfig, WorkerLossMode};
+        let (mut server, workers, _) = inproc_cluster_evloop(2);
+        let mut it = workers.into_iter();
+        let mut w0 = it.next().unwrap();
+        let w1 = it.next().unwrap(); // kept alive, silent, then evicted
+        let t = std::thread::spawn(move || {
+            let mut applied = 0u64;
+            for round in 0..6u64 {
+                let mut wire = Vec::new();
+                Identity.encode(&[1.0f32], &mut wire);
+                if w0.send(Message::payload(0, round, wire)).is_err() {
+                    return applied;
+                }
+                loop {
+                    match w0.recv() {
+                        Ok(msg) if msg.kind == MsgKind::Shutdown => return applied,
+                        Ok(msg)
+                            if msg.kind == MsgKind::Broadcast
+                                || msg.kind == MsgKind::PartialBroadcast =>
+                        {
+                            applied += 1;
+                            let _ = w0.ack(msg.round);
+                            break;
+                        }
+                        Ok(_) => {}
+                        Err(_) => return applied,
+                    }
+                }
+            }
+            applied
+        });
+        let cfg = AggregatorConfig {
+            liveness_rounds: 1,
+            recovery: RecoveryConfig {
+                on_worker_loss: WorkerLossMode::Evict,
+                ..Default::default()
+            },
+            ..AggregatorConfig::streaming_with_policy(crate::config::PolicyConfig::KofM {
+                k: 1,
+            })
+        };
+        let records =
+            serve_rounds_with(&mut server, identity_decoder(), 1, 6, cfg, |_| {}).unwrap();
+        assert_eq!(records.len(), 6, "the run must complete every round");
+        assert!(records.iter().all(|r| r.workers_included == 1));
+        let evict_round = records.iter().position(|r| r.workers_evicted == 1);
+        assert!(
+            evict_round.is_some(),
+            "worker 1 was never evicted: {:?}",
+            records.iter().map(|r| r.workers_evicted).collect::<Vec<_>>()
+        );
+        assert_eq!(t.join().unwrap(), 6, "worker 0 applied every broadcast");
+        drop(w1);
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub type EvalHook = Box<dyn FnMut(u64, &[f32], &RoundStats) + Send>;
 /// ours to fold back there, and re-absorbing the previous round's buffer
 /// again would double-count it. Returns whether the skipped-round absorb
 /// path ran (feeds the `worker.absorbed_skips` obs counter).
-fn apply_broadcast(
+pub(super) fn apply_broadcast(
     algo: &mut dyn WorkerAlgo,
     dim: usize,
     id: u32,
@@ -140,7 +140,19 @@ pub fn worker_loop(
             // re-absorb) and exit cleanly on Shutdown; anything else
             // surfaces the send error.
             let mut clean = false;
-            while let Ok(msg) = transport.recv() {
+            loop {
+                let msg = match transport.recv() {
+                    Ok(msg) => msg,
+                    // Transport died underneath us (leader gone, or this
+                    // worker evicted under `--on-worker-loss evict` and
+                    // its socket closed): same contract as the phase-2
+                    // recv below — no Shutdown is coming, exit cleanly
+                    // with whatever broadcasts drained so far.
+                    Err(_) => {
+                        clean = true;
+                        break;
+                    }
+                };
                 match msg.kind {
                     MsgKind::Shutdown => {
                         clean = true;
@@ -172,7 +184,17 @@ pub fn worker_loop(
         }
         // Phase 2: await broadcast, apply.
         let recv_span = crate::obs::span("recv", crate::obs::worker_tid(id as usize), round);
-        let msg = transport.recv()?;
+        let msg = match transport.recv() {
+            Ok(msg) => msg,
+            // An evicted worker's downlink dies mid-run (`--on-worker-loss
+            // evict`: the leader closed this socket / muted this channel
+            // and the run continues without us) — no Shutdown frame is
+            // coming, so waiting for one would hang forever. The payload
+            // already sent this round is skipped leader-side, never
+            // folded, so exiting here leaves the survivors' state
+            // untouched. Exit cleanly with the rounds completed so far.
+            Err(_) => break,
+        };
         drop(recv_span);
         match msg.kind {
             MsgKind::Broadcast | MsgKind::PartialBroadcast => {

@@ -19,7 +19,7 @@ use crate::ps::RoundRecord;
 use std::path::Path;
 
 /// Column order of [`write_round_records`] output.
-pub const ROUND_CSV_HEADER: [&str; 14] = [
+pub const ROUND_CSV_HEADER: [&str; 15] = [
     "round",
     "wall_secs",
     "wait_secs",
@@ -34,6 +34,7 @@ pub const ROUND_CSV_HEADER: [&str; 14] = [
     "broadcast_fnv",
     "threads_peak",
     "bytes_down",
+    "workers_evicted",
 ];
 
 /// Write one row per [`RoundRecord`] to `path` (creating parent
@@ -56,6 +57,7 @@ pub fn write_round_records(path: &Path, records: &[RoundRecord]) -> anyhow::Resu
             format!("{:016x}", r.broadcast_fnv),
             r.threads_peak.map(|n| n.to_string()).unwrap_or_default(),
             r.bytes_down.map(|n| n.to_string()).unwrap_or_default(),
+            r.workers_evicted.to_string(),
         ])?;
     }
     csv.finish()
@@ -81,6 +83,7 @@ mod tests {
                 bytes_up: 1024,
                 workers_included: 3,
                 workers_skipped: 1,
+                workers_evicted: 1,
                 threads_peak: Some(7),
                 bytes_down: Some(4096),
                 ..Default::default()
@@ -103,7 +106,8 @@ mod tests {
         assert_eq!(row0[9], "1");
         assert_eq!(row0[11], "deadbeef0badf00d", "fixed-width hex checksum");
         assert_eq!(row0[12], "7", "threads_peak after broadcast_fnv");
-        assert_eq!(row0[13], "4096", "bytes_down appended last");
+        assert_eq!(row0[13], "4096", "bytes_down after threads_peak");
+        assert_eq!(row0[14], "1", "workers_evicted appended last");
         let row1: Vec<&str> = lines.next().unwrap().split(',').collect();
         assert_eq!(row1[6], "0.000000");
         assert_eq!(row1[8], "4");
@@ -111,6 +115,7 @@ mod tests {
         assert_eq!(row1[11], &"0".repeat(16));
         assert_eq!(row1[12], "", "unknown thread count serializes as the empty cell");
         assert_eq!(row1[13], "", "counterless transport leaves bytes_down empty");
+        assert_eq!(row1[14], "0", "no evictions under the default abort mode");
         assert!(lines.next().is_none());
         std::fs::remove_file(&p).ok();
     }

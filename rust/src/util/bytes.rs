@@ -100,6 +100,19 @@ pub fn fnv1a64_f32(vs: &[f32]) -> u64 {
     }
 }
 
+/// Plain byte-wise FNV-1a 64-bit hash — the content address of the
+/// checkpoint store (`crate::ckpt`), where the hashed unit is an opaque
+/// serialized blob rather than an f32 sequence. Kept byte-wise (one
+/// multiply per byte) so the digest is independent of any element-width
+/// interpretation of the data.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
 /// Scalar arm of [`fnv1a64_f32`].
 pub fn fnv1a64_f32_scalar(vs: &[f32]) -> u64 {
     let mut h = FNV_OFFSET;
@@ -321,6 +334,15 @@ mod tests {
             assert_eq!(a, b, "put_f32_slice n={n}");
             assert_eq!(fnv1a64_f32_scalar(&xs), fnv1a64_f32_simd(&xs), "fnv n={n}");
         }
+    }
+
+    #[test]
+    fn byte_fnv_is_stable_and_content_sensitive() {
+        assert_eq!(fnv1a64(b"abc"), fnv1a64(b"abc"));
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"ab"));
+        // Known FNV-1a 64 vector: empty input hashes to the offset basis.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
     }
 
     #[test]

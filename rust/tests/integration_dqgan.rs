@@ -22,6 +22,7 @@ fn mlp_cluster(algo: &str, rounds: u64, lr: f32, seed: u64) -> dqgan::ps::TrainR
         keep_stats: true,
         agg: Default::default(),
         transport: Default::default(),
+        chaos_kill: None,
     };
     run_cluster(&cfg, |_m| Ok(Box::new(MlpGan::new(MlpGanConfig::default())))).unwrap()
 }

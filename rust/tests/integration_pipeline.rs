@@ -309,6 +309,7 @@ fn pipelined_cluster_is_bitwise_identical_to_sequential() {
             keep_stats: false,
             agg,
             transport: Default::default(),
+            chaos_kill: None,
         };
         run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(7);
@@ -409,6 +410,7 @@ fn pipelined_kofm_cluster_converges_with_rotating_skips() {
             ..Default::default()
         },
         transport: Default::default(),
+        chaos_kill: None,
     };
     let report = run_cluster(&cfg, |_m| {
         let mut rng = Pcg32::new(321);

@@ -75,6 +75,7 @@ fn full_policy_cluster_is_bitwise_identical_to_sequential() {
             keep_stats: false,
             agg,
             transport: Default::default(),
+            chaos_kill: None,
         };
         run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(7);
@@ -496,6 +497,7 @@ fn kofm_cluster_trains_end_to_end_with_rotating_skips() {
         keep_stats: false,
         agg: AggregatorConfig::streaming_with_policy(PolicyConfig::KofM { k: 2 }),
         transport: Default::default(),
+        chaos_kill: None,
     };
     let report = run_cluster(&cfg, |_m| {
         let mut rng = Pcg32::new(321);

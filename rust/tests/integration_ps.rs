@@ -30,6 +30,7 @@ fn full_cluster_all_algorithms_converge_on_quadratic() {
             keep_stats: false,
             agg: Default::default(),
             transport: Default::default(),
+            chaos_kill: None,
         };
         let report = run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(321);
@@ -63,6 +64,7 @@ fn byte_accounting_matches_algorithm_prediction() {
         keep_stats: false,
         agg: Default::default(),
         transport: Default::default(),
+        chaos_kill: None,
     };
     let report = run_cluster(&cfg, |_m| {
         let mut rng = Pcg32::new(9);
@@ -209,6 +211,7 @@ fn streaming_cluster_is_bitwise_identical_to_sequential() {
             keep_stats: false,
             agg: AggregatorConfig { mode, ..Default::default() },
             transport: Default::default(),
+            chaos_kill: None,
         };
         run_cluster(&cfg, |_m| {
             let mut rng = Pcg32::new(7);

@@ -1,0 +1,585 @@
+//! Integration: elastic membership and fault recovery
+//! (`--on-worker-loss evict`, ADR-005) — a dead worker must not kill
+//! the run.
+//!
+//! Covers, end to end:
+//! - mid-run worker death under eviction: the run continues over the
+//!   survivors and still converges (inproc chaos injection), and a
+//!   worker dead from round 0 produces broadcasts bitwise-identical to
+//!   a run where it never existed (TCP socket drop);
+//! - rejoin: an evicted worker reconnecting with its old id has the
+//!   missed broadcasts replayed bitwise-identically — from the bounded
+//!   in-memory ledger, and from the content-addressed checkpoint store
+//!   when the gap outruns `--replay-depth`;
+//! - the history-hole contract: rejoin with no recoverable history gets
+//!   a targeted Shutdown, not a silent gap;
+//! - the clean-exit contract (satellite 3): a worker whose transport
+//!   dies underneath it — evicted, or the leader simply gone — exits
+//!   `worker_loop` cleanly instead of hanging or erroring, on both
+//!   transports.
+//!
+//! Everything is gate- or channel-synchronized; no test sleeps.
+
+use dqgan::algo::{AlgoKind, DqganWorker};
+use dqgan::comm::{
+    inproc_cluster_evloop, inproc_cluster_evloop_with_plan, DelayPlan, Message, MsgKind,
+    WorkerEnd,
+};
+use dqgan::compress::{Compressor, Identity};
+use dqgan::config::{
+    AggregatorConfig, PolicyConfig, RecoveryConfig, TransportMode, WorkerLossMode,
+};
+use dqgan::grad::{GradientSource, QuadraticOperator};
+use dqgan::optim::LrSchedule;
+use dqgan::ps::{run_cluster, serve_rounds_with, worker_loop, ClusterConfig, Decoder};
+use dqgan::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn identity_decoder() -> Decoder {
+    Arc::new(|bytes: &[u8], out: &mut [f32]| Identity.decode_into(bytes, out))
+}
+
+fn evict_cfg(policy: PolicyConfig, liveness: u64, recovery: RecoveryConfig) -> AggregatorConfig {
+    AggregatorConfig {
+        liveness_rounds: liveness,
+        recovery,
+        ..AggregatorConfig::streaming_with_policy(policy)
+    }
+}
+
+fn evict_recovery() -> RecoveryConfig {
+    RecoveryConfig { on_worker_loss: WorkerLossMode::Evict, ..Default::default() }
+}
+
+/// Identity-encoded deterministic payload: same (worker, round) ⇒ same
+/// bytes in every run, so survivor averages are bitwise-comparable
+/// across cluster sizes.
+fn det_payload(worker: u32, round: u64, d: usize) -> Vec<u8> {
+    let v = vec![(worker + 1) as f32 * (round + 1) as f32; d];
+    let mut wire = Vec::new();
+    Identity.encode(&v, &mut wire);
+    wire
+}
+
+// ---------------------------------------------------------------------
+// Mid-run death: the run continues and still converges.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_kill_mid_run_under_evict_continues_and_converges() {
+    // 4 workers, worker 3 drops dead (no teardown handshake) after 5
+    // rounds. Under kofm:3 + evict the quorum shrinks to the survivors
+    // and error feedback still carries the run to the optimum — the
+    // same convergence bar as the all-alive kofm test.
+    let cfg = ClusterConfig {
+        algo: AlgoKind::parse("dqgan:linf8").unwrap(),
+        workers: 4,
+        batch: 8,
+        rounds: 1200,
+        lr: LrSchedule::constant(0.1),
+        seed: 11,
+        eval_every: 0,
+        keep_stats: false,
+        agg: evict_cfg(PolicyConfig::KofM { k: 3 }, 2, evict_recovery()),
+        transport: TransportMode::EvLoop,
+        chaos_kill: Some((3, 5)),
+    };
+    let report = run_cluster(&cfg, |_m| {
+        let mut rng = Pcg32::new(321);
+        Ok(Box::new(QuadraticOperator::new(12, 0.1, &mut rng)))
+    })
+    .unwrap();
+    assert_eq!(report.records.len(), 1200, "the run must complete every round");
+    for r in &report.records {
+        assert_eq!(r.workers_included, 3, "kofm:3 closes at the quorum (round {})", r.round);
+    }
+    let rec_last = report.records.last().unwrap();
+    assert_eq!(rec_last.workers_evicted, 1, "the dead worker stays evicted to the end");
+    assert!(
+        report.records.iter().any(|r| r.workers_evicted == 0),
+        "eviction must not be retroactive: early rounds ran with full membership"
+    );
+    let target = {
+        let mut rng = Pcg32::new(321);
+        QuadraticOperator::new(12, 0.1, &mut rng).target
+    };
+    let dist = dqgan::util::stats::dist2_sq(&report.worker0.final_params, &target).sqrt();
+    assert!(dist < 0.5, "run with a mid-run death must still converge: dist {dist}");
+}
+
+#[cfg(unix)]
+#[test]
+fn tcp_worker_death_under_evict_matches_a_run_without_it() {
+    // 3 workers over real sockets; worker 2 registers but never sends a
+    // payload and drops its socket (no teardown) once round 0 has
+    // closed. Under kofm:2 + evict, every round closes on workers
+    // {0, 1}, so the per-round broadcast checksums must be bitwise
+    // equal to a 2-worker run where worker 2 never existed. This is
+    // the δ-contract soundness argument made executable: partial
+    // closes scale by the arrived count, never the configured M.
+    use dqgan::comm::tcp::{TcpServerBuilder, TcpWorkerEnd};
+    let d = 16usize;
+    let rounds = 4u64;
+    let fnvs = |recs: &[dqgan::ps::RoundRecord]| -> Vec<(u64, u64)> {
+        recs.iter().map(|r| (r.round, r.broadcast_fnv)).collect()
+    };
+
+    // ---- Run A: 3 workers, worker 2 dies after round 0.
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let mut handles = Vec::new();
+    for id in [0u32, 1] {
+        handles.push(std::thread::spawn(move || {
+            let mut w = TcpWorkerEnd::connect_evloop(&addr.to_string(), id).unwrap();
+            for round in 0..rounds {
+                w.send(Message::payload(id, round, det_payload(id, round, d))).unwrap();
+                let b = w.recv().unwrap();
+                assert_eq!(b.round, round);
+                w.ack(round).unwrap();
+            }
+            assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+        }));
+    }
+    let (die_tx, die_rx) = std::sync::mpsc::channel::<()>();
+    handles.push(std::thread::spawn(move || {
+        let mut w = TcpWorkerEnd::connect_evloop(&addr.to_string(), 2).unwrap();
+        // Receive round 0's broadcast (delivered to silent members too),
+        // then wait for the leader to have recorded round 0 and drop the
+        // socket with no goodbye — a SIGKILL as far as TCP can tell.
+        let b = w.recv().unwrap();
+        assert_eq!(b.round, 0);
+        die_rx.recv().unwrap();
+        drop(w);
+    }));
+    let mut server = builder.accept_evloop(3).unwrap();
+    let cfg = evict_cfg(PolicyConfig::KofM { k: 2 }, 0, evict_recovery());
+    let mut signaled = false;
+    let recs_a = serve_rounds_with(&mut server, identity_decoder(), d, rounds, cfg, |rec| {
+        if rec.round == 0 && !signaled {
+            signaled = true;
+            die_tx.send(()).unwrap();
+        }
+    })
+    .unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    drop(server);
+
+    // ---- Run B: 2 workers, worker 2 absent from the start.
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let handles: Vec<_> = [0u32, 1]
+        .into_iter()
+        .map(|id| {
+            std::thread::spawn(move || {
+                let mut w = TcpWorkerEnd::connect_evloop(&addr.to_string(), id).unwrap();
+                for round in 0..rounds {
+                    w.send(Message::payload(id, round, det_payload(id, round, d))).unwrap();
+                    let b = w.recv().unwrap();
+                    assert_eq!(b.round, round);
+                    w.ack(round).unwrap();
+                }
+                assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+            })
+        })
+        .collect();
+    let mut server = builder.accept_evloop(2).unwrap();
+    let cfg = evict_cfg(PolicyConfig::KofM { k: 2 }, 0, evict_recovery());
+    let recs_b =
+        serve_rounds_with(&mut server, identity_decoder(), d, rounds, cfg, |_| {}).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    assert_eq!(recs_a.len(), rounds as usize);
+    assert_eq!(
+        fnvs(&recs_a),
+        fnvs(&recs_b),
+        "a worker dead since round 0 must be indistinguishable from one never registered"
+    );
+    assert!(recs_a.iter().all(|r| r.workers_included == 2));
+    assert_eq!(
+        recs_a.last().unwrap().workers_evicted,
+        1,
+        "the socket drop must surface as an eviction, not an abort"
+    );
+    assert!(recs_b.iter().all(|r| r.workers_evicted == 0));
+}
+
+// ---------------------------------------------------------------------
+// Rejoin: replayed broadcasts are bitwise-identical to the originals.
+// ---------------------------------------------------------------------
+
+/// Shared harness for the rejoin tests. Drives a 2-worker inproc
+/// evloop cluster for 6 rounds under kofm:1 + liveness 1 + evict:
+///
+/// - worker 0 feeds every round (its round-4 send is gated so the
+///   Rejoin hello provably enters the uplink channel first);
+/// - worker 1 sends only round 0, goes silent, is evicted at round 3's
+///   liveness check, re-registers with `rejoin(1)` once the eviction is
+///   observable, and then collects every downlink frame until Shutdown.
+///
+/// Returns (per-round records, worker 0's broadcasts, worker 1's
+/// post-round-0 frames including the trailing control frame).
+fn run_rejoin_scenario(
+    recovery: RecoveryConfig,
+) -> (Vec<dqgan::ps::RoundRecord>, Vec<Message>, Vec<Message>) {
+    let d = 4usize;
+    let rounds = 6u64;
+    let (mut server, workers, _) = inproc_cluster_evloop(2);
+    let mut it = workers.into_iter();
+    let mut w0 = it.next().unwrap();
+    let mut w1 = it.next().unwrap();
+    let (evict_tx, evict_rx) = std::sync::mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+
+    let t0 = std::thread::spawn(move || {
+        let mut broadcasts = Vec::new();
+        for round in 0..rounds {
+            if round == 4 {
+                // Held until worker 1's Rejoin hello is already queued:
+                // the uplink is one FIFO channel, so the hello is
+                // processed during round 4's gather, before this payload.
+                gate_rx.recv().unwrap();
+            }
+            w0.send(Message::payload(0, round, det_payload(0, round, d))).unwrap();
+            loop {
+                match w0.recv().unwrap() {
+                    b if b.kind == MsgKind::Broadcast || b.kind == MsgKind::PartialBroadcast => {
+                        assert_eq!(b.round, round);
+                        w0.ack(round).unwrap();
+                        broadcasts.push(b);
+                        break;
+                    }
+                    b if b.kind == MsgKind::Shutdown => return broadcasts,
+                    _ => {}
+                }
+            }
+        }
+        // Drain the trailing Shutdown so teardown is clean.
+        let _ = w0.recv();
+        broadcasts
+    });
+    let t1 = std::thread::spawn(move || {
+        w1.send(Message::payload(1, 0, det_payload(1, 0, d))).unwrap();
+        let b0 = w1.recv().unwrap();
+        assert_eq!(b0.round, 0, "worker 1 applies round 0 before going dark");
+        w1.ack(0).unwrap();
+        // Dark until the leader has provably evicted us...
+        evict_rx.recv().unwrap();
+        // ...then re-register asking for everything from round 1 on,
+        // and only now let worker 0 feed round 4.
+        w1.rejoin(1).unwrap();
+        gate_tx.send(()).unwrap();
+        let mut frames = Vec::new();
+        loop {
+            match w1.recv() {
+                Ok(msg) if msg.kind == MsgKind::Shutdown => {
+                    frames.push(msg);
+                    return frames;
+                }
+                Ok(msg)
+                    if msg.kind == MsgKind::Broadcast
+                        || msg.kind == MsgKind::PartialBroadcast =>
+                {
+                    let _ = w1.ack(msg.round);
+                    frames.push(msg);
+                }
+                Ok(_) => {}
+                Err(_) => return frames,
+            }
+        }
+    });
+
+    let cfg = evict_cfg(PolicyConfig::KofM { k: 1 }, 1, recovery);
+    let mut signaled = false;
+    let records = serve_rounds_with(&mut server, identity_decoder(), d, rounds, cfg, |rec| {
+        if rec.workers_evicted == 1 && !signaled {
+            signaled = true;
+            evict_tx.send(()).unwrap();
+        }
+    })
+    .unwrap();
+    let w0_frames = t0.join().unwrap();
+    let w1_frames = t1.join().unwrap();
+    drop(server);
+    (records, w0_frames, w1_frames)
+}
+
+/// Assert every data frame worker 1 received is bitwise-identical to
+/// the broadcast worker 0 received for the same round, and return the
+/// round sequence of worker 1's data frames.
+fn assert_bitwise_against_originals(w0_frames: &[Message], w1_frames: &[Message]) -> Vec<u64> {
+    let mut seen = Vec::new();
+    for f in w1_frames {
+        if f.kind == MsgKind::Shutdown {
+            continue;
+        }
+        let orig = w0_frames
+            .iter()
+            .find(|b| b.round == f.round)
+            .unwrap_or_else(|| panic!("no original broadcast for round {}", f.round));
+        assert_eq!(f.kind, orig.kind, "round {}: frame kind drifted in replay", f.round);
+        assert_eq!(
+            f.payload, orig.payload,
+            "round {}: replayed payload is not bitwise-identical",
+            f.round
+        );
+        seen.push(f.round);
+    }
+    seen
+}
+
+#[test]
+fn rejoined_worker_replays_missed_broadcasts_bitwise_identically() {
+    // Default replay depth (8) covers the whole gap: rounds 1..=3 come
+    // from the in-memory ledger. Worker 1's downlink also still holds
+    // the round-1/2 originals queued before its eviction — the
+    // documented duplicate-delivery race — so those rounds appear
+    // twice, and both copies must match worker 0's frames exactly.
+    let (records, w0_frames, w1_frames) = run_rejoin_scenario(evict_recovery());
+    assert_eq!(records.len(), 6);
+    assert_eq!(w0_frames.len(), 6, "worker 0 saw every round");
+    assert!(records.iter().all(|r| r.workers_included == 1));
+    let by_round = |r: u64| records.iter().find(|rec| rec.round == r).unwrap();
+    assert_eq!(by_round(3).workers_evicted, 1, "liveness evicted worker 1 at round 3");
+    assert_eq!(by_round(4).workers_evicted, 0, "the rejoin landed during round 4");
+    assert_eq!(by_round(5).workers_evicted, 0);
+
+    let seq = assert_bitwise_against_originals(&w0_frames, &w1_frames);
+    // Originals queued before eviction (1, 2), the replayed window
+    // (1, 2, 3), then the live tail (4, 5) — FIFO order end to end.
+    assert_eq!(seq, vec![1, 2, 1, 2, 3, 4, 5], "replay must precede the live broadcast");
+    assert_eq!(
+        w1_frames.last().map(|m| m.kind),
+        Some(MsgKind::Shutdown),
+        "the rejoined worker is a member again and gets the normal Shutdown"
+    );
+    // Monotonic-apply dedup closes the duplicate race: applying rounds
+    // strictly in order yields each round exactly once.
+    let mut next = 1u64;
+    for &r in &seq {
+        if r == next {
+            next += 1;
+        }
+    }
+    assert_eq!(next, 6, "deduped application covers rounds 1..=5 exactly once");
+}
+
+#[test]
+fn rejoin_beyond_replay_depth_restores_from_the_checkpoint_store() {
+    // replay-depth 1: by rejoin time (round 4) the in-memory window
+    // holds only round 3 — rounds 1 and 2 must come back from the
+    // content-addressed spill, still bitwise-identical.
+    let dir = std::env::temp_dir().join(format!("dqgan_recovery_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let recovery = RecoveryConfig {
+        on_worker_loss: WorkerLossMode::Evict,
+        replay_depth: 1,
+        ckpt_dir: Some(dir.clone()),
+        ckpt_every: 0,
+    };
+    let (records, w0_frames, w1_frames) = run_rejoin_scenario(recovery);
+    assert_eq!(records.len(), 6);
+    assert_eq!(records.last().unwrap().workers_evicted, 0, "rejoin succeeded via the store");
+    let seq = assert_bitwise_against_originals(&w0_frames, &w1_frames);
+    assert_eq!(seq, vec![1, 2, 1, 2, 3, 4, 5]);
+    // The store is real on disk: a manifest plus content-addressed
+    // blobs for the rotated-out rounds.
+    assert!(dir.join("MANIFEST.json").is_file(), "checkpoint manifest written");
+    let blobs = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().starts_with("bcast-"))
+        .count();
+    assert!(blobs >= 2, "rounds 1 and 2 were spilled as content-addressed blobs: {blobs}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn rejoin_with_history_hole_and_no_checkpoints_gets_a_clean_shutdown() {
+    // replay-depth 1 and no checkpoint store: round 1 is gone by rejoin
+    // time. A stale worker must not train across a hole in the
+    // broadcast sequence — the leader answers with a targeted Shutdown
+    // and keeps the slot evicted.
+    let recovery = RecoveryConfig {
+        on_worker_loss: WorkerLossMode::Evict,
+        replay_depth: 1,
+        ckpt_dir: None,
+        ckpt_every: 0,
+    };
+    let (records, w0_frames, w1_frames) = run_rejoin_scenario(recovery);
+    assert_eq!(records.len(), 6, "a refused rejoin must not disturb the run");
+    assert_eq!(
+        records.last().unwrap().workers_evicted,
+        1,
+        "the slot stays evicted after the refused rejoin"
+    );
+    // Worker 1 drains the two pre-eviction originals, then the targeted
+    // Shutdown — never a frame beyond the hole.
+    let seq = assert_bitwise_against_originals(&w0_frames, &w1_frames);
+    assert_eq!(seq, vec![1, 2], "only the pre-eviction originals reach the stale worker");
+    assert_eq!(
+        w1_frames.last().map(|m| m.kind),
+        Some(MsgKind::Shutdown),
+        "the refusal is an explicit clean Shutdown, not a hang"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: a worker whose transport dies exits cleanly.
+// ---------------------------------------------------------------------
+
+fn quad_worker(seed: u64, d: usize) -> (DqganWorker, QuadraticOperator) {
+    let mut rng = Pcg32::new(seed);
+    let src = QuadraticOperator::new(d, 0.0, &mut rng);
+    let w0 = {
+        let mut rng = Pcg32::new(seed ^ 0x5EED);
+        src.init_params(&mut rng)
+    };
+    (DqganWorker::new(w0, LrSchedule::constant(0.1), Arc::new(Identity)), src)
+}
+
+#[test]
+fn worker_loop_exits_cleanly_when_the_leader_vanishes_mid_recv_inproc() {
+    // Regression: the phase-2 recv used to propagate the transport
+    // error. The leader consumes the payload, then disappears without a
+    // Shutdown — the worker must return Ok with 0 completed rounds.
+    use dqgan::comm::ServerEnd;
+    let d = 6usize;
+    let (mut server, worker_ends, _) = inproc_cluster_evloop(1);
+    let mut end = worker_ends.into_iter().next().unwrap();
+    let h = std::thread::spawn(move || {
+        let (mut algo, mut src) = quad_worker(91, d);
+        let mut rng = Pcg32::new(17);
+        worker_loop(&mut end, &mut algo, &mut src, 4, 3, &mut rng, false, None)
+    });
+    // Read the round-0 payload so the worker is provably blocked in its
+    // phase-2 recv, then vanish.
+    let msgs = server.recv_round().unwrap();
+    assert_eq!(msgs[0].kind, MsgKind::Payload);
+    drop(server);
+    let summary = h.join().unwrap().expect("dead transport mid-recv must be a clean exit");
+    assert_eq!(summary.rounds, 0, "no broadcast ever arrived");
+}
+
+#[cfg(unix)]
+#[test]
+fn worker_loop_exits_cleanly_when_the_leader_vanishes_mid_recv_tcp() {
+    // Same contract over a real socket: EOF in the phase-2 recv is a
+    // clean exit, not an error and not a hang.
+    use dqgan::comm::tcp::{TcpServerBuilder, TcpWorkerEnd};
+    use dqgan::comm::ServerEnd;
+    let d = 6usize;
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let h = std::thread::spawn(move || {
+        let mut end = TcpWorkerEnd::connect(&addr.to_string(), 0).unwrap();
+        let (mut algo, mut src) = quad_worker(92, d);
+        let mut rng = Pcg32::new(18);
+        worker_loop(&mut end, &mut algo, &mut src, 4, 3, &mut rng, false, None)
+    });
+    let mut server = builder.accept(1).unwrap();
+    let msgs = server.recv_round().unwrap();
+    assert_eq!(msgs[0].kind, MsgKind::Payload);
+    drop(server);
+    let summary = h.join().unwrap().expect("socket EOF mid-recv must be a clean exit");
+    assert_eq!(summary.rounds, 0);
+}
+
+#[test]
+fn evicted_inproc_worker_rides_out_the_run_and_exits_on_shutdown() {
+    // Full worker_loop under eviction, inproc flavor: worker 1's
+    // round-1 send is gated until after its liveness eviction. Once
+    // released it drains the two broadcasts queued before the eviction
+    // (staying in lockstep that far), blocks on its muted downlink, and
+    // exits cleanly on the run-end Shutdown — which eviction still
+    // delivers — while the leader closes all 6 rounds on worker 0.
+    let d = 8usize;
+    let rounds = 6u64;
+    let plan = DelayPlan::new();
+    plan.hold(1, 1);
+    let (mut server, worker_ends, _) = inproc_cluster_evloop_with_plan(2, plan.clone());
+    let handles: Vec<_> = worker_ends
+        .into_iter()
+        .enumerate()
+        .map(|(m, mut end)| {
+            std::thread::spawn(move || {
+                let (mut algo, mut src) = quad_worker(40 + m as u64, d);
+                let mut rng = Pcg32::new(60 + m as u64);
+                worker_loop(&mut end, &mut algo, &mut src, 4, rounds, &mut rng, false, None)
+            })
+        })
+        .collect();
+    let cfg = evict_cfg(PolicyConfig::KofM { k: 1 }, 1, evict_recovery());
+    let mut released = false;
+    let recs = serve_rounds_with(&mut server, identity_decoder(), d, rounds, cfg, |rec| {
+        if rec.workers_evicted == 1 && !released {
+            released = true;
+            plan.release(1, 1);
+        }
+    })
+    .unwrap();
+    assert_eq!(recs.len(), rounds as usize);
+    assert!(recs.iter().all(|r| r.workers_included == 1));
+    assert_eq!(recs.last().unwrap().workers_evicted, 1);
+    drop(server); // unblocks worker 1's trailing recv
+    let summaries: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap().expect("clean exit")).collect();
+    assert_eq!(summaries[0].rounds, rounds, "the survivor completes the whole run");
+    assert_eq!(
+        summaries[1].rounds, 3,
+        "the evicted worker applied rounds 0..=2 (queued pre-eviction) and no more"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn evicted_tcp_worker_exits_cleanly_on_its_closed_socket() {
+    // TCP flavor: the eviction closes worker 1's socket while it is
+    // gated mid-send. Whichever way the race lands — the write fails
+    // (drain path) or succeeds into the doomed socket (phase-2 recv
+    // path) — worker_loop must return Ok, never hang and never Err.
+    use dqgan::comm::tcp::{TcpServerBuilder, TcpWorkerEnd};
+    let d = 8usize;
+    let rounds = 6u64;
+    let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+    let addr = builder.addr();
+    let plan = DelayPlan::new();
+    plan.hold(1, 1);
+    let wplan = plan.clone();
+    let h0 = std::thread::spawn(move || {
+        let mut end = TcpWorkerEnd::connect_evloop(&addr.to_string(), 0).unwrap();
+        let (mut algo, mut src) = quad_worker(50, d);
+        let mut rng = Pcg32::new(70);
+        worker_loop(&mut end, &mut algo, &mut src, 4, rounds, &mut rng, false, None)
+    });
+    let h1 = std::thread::spawn(move || {
+        let mut end =
+            TcpWorkerEnd::connect_evloop_with_plan(&addr.to_string(), 1, Some(wplan)).unwrap();
+        let (mut algo, mut src) = quad_worker(51, d);
+        let mut rng = Pcg32::new(71);
+        worker_loop(&mut end, &mut algo, &mut src, 4, rounds, &mut rng, false, None)
+    });
+    let mut server = builder.accept_evloop(2).unwrap();
+    let cfg = evict_cfg(PolicyConfig::KofM { k: 1 }, 1, evict_recovery());
+    let mut released = false;
+    let recs = serve_rounds_with(&mut server, identity_decoder(), d, rounds, cfg, |rec| {
+        if rec.workers_evicted == 1 && !released {
+            released = true;
+            plan.release(1, 1);
+        }
+    })
+    .unwrap();
+    assert_eq!(recs.len(), rounds as usize);
+    assert_eq!(recs.last().unwrap().workers_evicted, 1);
+    let s0 = h0.join().unwrap().expect("survivor finishes normally");
+    assert_eq!(s0.rounds, rounds);
+    let s1 = h1.join().unwrap().expect("evicted worker must exit cleanly, not error");
+    assert!(
+        (1..=3).contains(&s1.rounds),
+        "applied round 0, plus whatever pre-eviction broadcasts survived the RST race: {}",
+        s1.rounds
+    );
+}

@@ -43,6 +43,7 @@ fn cfg() -> ClusterConfig {
         keep_stats: false,
         agg: AggregatorConfig::pipelined(),
         transport: TransportMode::EvLoop,
+        chaos_kill: None,
     }
 }
 
