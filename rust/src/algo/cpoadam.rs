@@ -90,6 +90,28 @@ impl WorkerAlgo for CpoAdamWorker {
         self.opt.step(&mut self.w, avg);
     }
 
+    fn save_state(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        use crate::util::bytes::{put_f32_slice, put_u32};
+        put_u32(out, self.w.len() as u32);
+        put_f32_slice(out, &self.w);
+        self.opt.save_state(out);
+        Ok(())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let d = r.u32()? as usize;
+        anyhow::ensure!(
+            d == self.w.len(),
+            "cpoadam snapshot dim {d} != configured dim {}",
+            self.w.len()
+        );
+        self.w = r.f32_vec(d)?;
+        self.opt.load_state(&mut r)?;
+        anyhow::ensure!(r.remaining() == 0, "cpoadam snapshot has trailing bytes");
+        Ok(())
+    }
+
     fn name(&self) -> String {
         match &self.quantizer {
             None => "cpoadam".to_string(),

@@ -137,6 +137,33 @@ impl WorkerAlgo for DqganWorker {
         }
     }
 
+    fn save_state(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        use crate::util::bytes::{put_f32_slice, put_u32, put_u64};
+        put_u64(out, self.t);
+        put_u32(out, self.w.len() as u32);
+        put_f32_slice(out, &self.w);
+        put_f32_slice(out, &self.f_prev);
+        put_f32_slice(out, &self.e);
+        Ok(())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let t = r.u64()?;
+        let d = r.u32()? as usize;
+        anyhow::ensure!(
+            d == self.w.len(),
+            "dqgan snapshot dim {d} != configured dim {}",
+            self.w.len()
+        );
+        self.w = r.f32_vec(d)?;
+        self.f_prev = r.f32_vec(d)?;
+        self.e = r.f32_vec(d)?;
+        anyhow::ensure!(r.remaining() == 0, "dqgan snapshot has trailing bytes");
+        self.t = t;
+        Ok(())
+    }
+
     fn name(&self) -> String {
         format!("dqgan[{}]", self.compressor.name())
     }
@@ -312,6 +339,41 @@ mod tests {
                 (e_before[i] + q[i]).to_bits(),
                 "element {i}"
             );
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trip_continues_bit_exact() {
+        // The leader-recovery contract: save (algo state, rng) at a round
+        // boundary, rebuild a fresh worker from config, load the
+        // snapshot, and the restored worker must emit bit-identical
+        // payloads forever after — including the stochastic quantizer
+        // draws, which flow through the restored rng.
+        let compressor: Arc<dyn Compressor> = Arc::new(LinfStochastic::with_bits(4));
+        let mut seed_rng = Pcg32::new(33);
+        let mut op = QuadraticOperator::new(24, 0.3, &mut seed_rng);
+        let w0 = op.init_params(&mut seed_rng);
+        let mut a = DqganWorker::new(w0.clone(), LrSchedule::constant(0.05), compressor.clone());
+        let mut rng = Pcg32::new(71);
+        for _ in 0..10 {
+            let dense = a.produce(&mut op, 4, &mut rng).unwrap().dense.to_vec();
+            a.apply(&dense);
+        }
+        let mut snap = Vec::new();
+        a.save_state(&mut snap).unwrap();
+        let (state, inc) = rng.state_parts();
+        let mut b = DqganWorker::new(w0, LrSchedule::constant(0.05), compressor);
+        b.load_state(&snap).unwrap();
+        let mut rng_b = Pcg32::from_state_parts(state, inc);
+        for _ in 0..10 {
+            let pa = a.produce(&mut op, 4, &mut rng).unwrap().dense.to_vec();
+            let pb = b.produce(&mut op, 4, &mut rng_b).unwrap().dense.to_vec();
+            for (x, y) in pa.iter().zip(&pb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            a.apply(&pa);
+            b.apply(&pb);
+            assert_eq!(a.params(), b.params());
         }
     }
 

@@ -62,6 +62,29 @@ impl WorkerAlgo for DistGdaWorker {
         self.t += 1;
     }
 
+    fn save_state(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        use crate::util::bytes::{put_f32_slice, put_u32, put_u64};
+        put_u64(out, self.t);
+        put_u32(out, self.w.len() as u32);
+        put_f32_slice(out, &self.w);
+        Ok(())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = crate::util::bytes::Reader::new(bytes);
+        let t = r.u64()?;
+        let d = r.u32()? as usize;
+        anyhow::ensure!(
+            d == self.w.len(),
+            "gda snapshot dim {d} != configured dim {}",
+            self.w.len()
+        );
+        self.w = r.f32_vec(d)?;
+        anyhow::ensure!(r.remaining() == 0, "gda snapshot has trailing bytes");
+        self.t = t;
+        Ok(())
+    }
+
     fn name(&self) -> String {
         "gda".to_string()
     }

@@ -97,6 +97,23 @@ pub trait WorkerAlgo: Send {
     /// references the round's reused payload buffer).
     fn absorb_skipped(&mut self) {}
 
+    /// Serialize every field the next round's `produce`/`apply` depend on
+    /// (parameters, error memory, optimizer moments, step counters) into
+    /// `out`. Snapshots are taken at the round boundary — after `apply`,
+    /// before the next `produce` — where the reused scratch buffers are
+    /// dead, so they are deliberately excluded. Default: unsupported
+    /// (protects test mocks from silently snapshotting nothing).
+    fn save_state(&self, _out: &mut Vec<u8>) -> anyhow::Result<()> {
+        anyhow::bail!("algorithm {} does not support state snapshots", self.name())
+    }
+
+    /// Restore from [`Self::save_state`] bytes. Hyperparameters (lr
+    /// schedule, compressor, betas) come from config — a resume rebuilds
+    /// the worker from config first, then loads the dynamic state here.
+    fn load_state(&mut self, _bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::bail!("algorithm {} does not support state snapshots", self.name())
+    }
+
     /// Algorithm name for logs/reports.
     fn name(&self) -> String;
 }

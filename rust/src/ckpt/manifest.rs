@@ -1,0 +1,336 @@
+//! The crash-consistent **run manifest** (`RUN.json`): one small JSON
+//! document that names the single round a leader restart may resume
+//! from, plus everything needed to refuse an incompatible resume.
+//!
+//! The store's blob manifest (`MANIFEST.json`) says *what bytes exist*;
+//! `RUN.json` says *which round is consistent* — it is only advanced
+//! after every worker's round-stamped state snapshot and the round's
+//! broadcast frame are durably in the store, so the pointed-at round is
+//! always restorable as a unit. Both files go through the same
+//! temp-file + atomic-rename writer, so a crash mid-update leaves the
+//! previous version intact: a torn write before the rename is invisible
+//! (the `.tmp` sibling is ignored on open), and the rename itself is
+//! atomic. The torn-prefix property test below drives every byte prefix
+//! through that path.
+//!
+//! u64 digests and fingerprints are serialized as 16-digit hex strings —
+//! JSON numbers ride through an f64 (`crate::util::json`), which cannot
+//! hold all 64 bits.
+
+use super::write_atomic;
+use crate::algo::WorkerAlgo;
+use crate::util::bytes::{put_u32, put_u64, Reader};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+/// Manifest filename inside the checkpoint directory.
+pub const RUN_MANIFEST: &str = "RUN.json";
+
+/// Current `RUN.json` schema version.
+const RUN_VERSION: u64 = 1;
+
+/// Worker-state blob framing magic ("DQGAN Worker State").
+const WSTATE_MAGIC: &[u8; 4] = b"DQWS";
+const WSTATE_VERSION: u32 = 1;
+
+/// The run-level recovery record. `round` is the last round whose
+/// broadcast *and* all per-worker snapshots are in the store; a resumed
+/// leader restarts the loop at `round + 1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunManifest {
+    /// Last fully-checkpointed round (broadcast + all worker snapshots).
+    pub round: u64,
+    /// Session epoch: bumped on every resume, echoed in the reconnect
+    /// handshake so a worker can tell a restarted leader from the one it
+    /// lost.
+    pub epoch: u64,
+    /// Config fingerprint ([`crate::ps::ClusterConfig::fingerprint`]) —
+    /// a resume under a different algorithm/policy/seed is refused, not
+    /// silently diverged.
+    pub fingerprint: u64,
+    /// Fleet size the snapshots were taken with.
+    pub workers: usize,
+    /// Per-worker `wstate` blob digests at `round`, index = worker id.
+    pub worker_digests: Vec<u64>,
+    /// Rounds whose broadcast frames are replayable from the store.
+    pub replay_rounds: Vec<u64>,
+}
+
+impl RunManifest {
+    /// Load `RUN.json` from `dir`. `Ok(None)` when no manifest exists
+    /// (fresh run); an error on a malformed one — the file is written
+    /// atomically, so a parse failure means real damage, not a crash.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Option<Self>> {
+        let path = dir.as_ref().join(RUN_MANIFEST);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("run manifest {}: {e}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("run manifest {}: {e}", path.display()))?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("run manifest: missing version"))?;
+        anyhow::ensure!(
+            version as u64 == RUN_VERSION,
+            "run manifest {}: unsupported version {version}",
+            path.display()
+        );
+        let hex_u64 = |key: &str| -> anyhow::Result<u64> {
+            let s = doc
+                .get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("run manifest: missing {key}"))?;
+            u64::from_str_radix(s, 16)
+                .map_err(|_| anyhow::anyhow!("run manifest: bad hex in {key}"))
+        };
+        let num_u64 = |key: &str| -> anyhow::Result<u64> {
+            doc.get(key)
+                .and_then(Json::as_usize)
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow::anyhow!("run manifest: missing {key}"))
+        };
+        let worker_digests = doc
+            .get("worker_digests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("run manifest: missing worker_digests"))?
+            .iter()
+            .map(|v| {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("run manifest: non-string digest"))?;
+                u64::from_str_radix(s, 16)
+                    .map_err(|_| anyhow::anyhow!("run manifest: bad digest hex"))
+            })
+            .collect::<anyhow::Result<Vec<u64>>>()?;
+        let replay_rounds = doc
+            .get("replay_rounds")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("run manifest: missing replay_rounds"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .map(|r| r as u64)
+                    .ok_or_else(|| anyhow::anyhow!("run manifest: non-numeric replay round"))
+            })
+            .collect::<anyhow::Result<Vec<u64>>>()?;
+        let workers = doc
+            .get("workers")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("run manifest: missing workers"))?;
+        anyhow::ensure!(
+            worker_digests.len() == workers,
+            "run manifest: {} digests for {workers} workers",
+            worker_digests.len()
+        );
+        Ok(Some(Self {
+            round: num_u64("round")?,
+            epoch: num_u64("epoch")?,
+            fingerprint: hex_u64("fingerprint")?,
+            workers,
+            worker_digests,
+            replay_rounds,
+        }))
+    }
+
+    /// Atomically write `RUN.json` into `dir` (temp + rename — a reader
+    /// or a post-crash `load` sees either the previous manifest or this
+    /// one, never a prefix).
+    pub fn save(&self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        write_atomic(&dir.as_ref().join(RUN_MANIFEST), self.to_json().as_bytes())
+    }
+
+    /// The serialized form `save` writes (exposed for the torn-write
+    /// property test).
+    pub fn to_json(&self) -> String {
+        let mut doc = BTreeMap::new();
+        doc.insert("version".to_string(), Json::Num(RUN_VERSION as f64));
+        doc.insert("round".to_string(), Json::Num(self.round as f64));
+        doc.insert("epoch".to_string(), Json::Num(self.epoch as f64));
+        doc.insert(
+            "fingerprint".to_string(),
+            Json::Str(format!("{:016x}", self.fingerprint)),
+        );
+        doc.insert("workers".to_string(), Json::Num(self.workers as f64));
+        doc.insert(
+            "worker_digests".to_string(),
+            Json::Arr(
+                self.worker_digests.iter().map(|d| Json::Str(format!("{d:016x}"))).collect(),
+            ),
+        );
+        doc.insert(
+            "replay_rounds".to_string(),
+            Json::Arr(self.replay_rounds.iter().map(|&r| Json::Num(r as f64)).collect()),
+        );
+        Json::Obj(doc).to_string_compact()
+    }
+}
+
+/// Serialize a worker's full resumable state — rng cursor + algorithm
+/// state — into one `wstate` blob. The algorithm name is embedded so a
+/// resume under a different `--algo` fails at decode with a clear
+/// message (defense in depth under the config fingerprint).
+pub fn encode_worker_state(rng: &Pcg32, algo: &dyn WorkerAlgo) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(WSTATE_MAGIC);
+    put_u32(&mut out, WSTATE_VERSION);
+    let name = algo.name();
+    put_u32(&mut out, name.len() as u32);
+    out.extend_from_slice(name.as_bytes());
+    let (state, inc) = rng.state_parts();
+    put_u64(&mut out, state);
+    put_u64(&mut out, inc);
+    let mut algo_bytes = Vec::new();
+    algo.save_state(&mut algo_bytes)?;
+    put_u32(&mut out, algo_bytes.len() as u32);
+    out.extend_from_slice(&algo_bytes);
+    Ok(out)
+}
+
+/// Restore a worker from [`encode_worker_state`] bytes: the rng resumes
+/// the exact stream, the algorithm reloads its persistent fields.
+pub fn decode_worker_state(
+    bytes: &[u8],
+    rng: &mut Pcg32,
+    algo: &mut dyn WorkerAlgo,
+) -> anyhow::Result<()> {
+    let mut r = Reader::new(bytes);
+    let magic = r.bytes(4)?;
+    anyhow::ensure!(magic == WSTATE_MAGIC, "worker snapshot: bad magic {magic:02x?}");
+    let version = r.u32()?;
+    anyhow::ensure!(version == WSTATE_VERSION, "worker snapshot: unsupported version {version}");
+    let name_len = r.u32()? as usize;
+    let name = std::str::from_utf8(r.bytes(name_len)?)
+        .map_err(|_| anyhow::anyhow!("worker snapshot: non-utf8 algorithm name"))?
+        .to_string();
+    anyhow::ensure!(
+        name == algo.name(),
+        "worker snapshot was taken by algorithm {name:?}, run is configured for {:?}",
+        algo.name()
+    );
+    let state = r.u64()?;
+    let inc = r.u64()?;
+    let algo_len = r.u32()? as usize;
+    let algo_bytes = r.bytes(algo_len)?;
+    anyhow::ensure!(r.remaining() == 0, "worker snapshot has trailing bytes");
+    algo.load_state(algo_bytes)?;
+    *rng = Pcg32::from_state_parts(state, inc);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "dqgan-run-manifest-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(round: u64, epoch: u64) -> RunManifest {
+        RunManifest {
+            round,
+            epoch,
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            workers: 3,
+            worker_digests: vec![0xFFFF_FFFF_FFFF_FFFF, 1, 0x8000_0000_0000_0001],
+            replay_rounds: vec![round.saturating_sub(1), round],
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_including_full_u64_values() {
+        let dir = tmp_dir("rt");
+        assert_eq!(RunManifest::load(&dir).unwrap(), None);
+        let m = sample(41, 2);
+        m.save(&dir).unwrap();
+        assert_eq!(RunManifest::load(&dir).unwrap(), Some(m));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_prefix_before_rename_always_loads_the_old_version() {
+        // Simulate a crash at every byte of the new manifest's write:
+        // the writer puts bytes into the `.tmp` sibling and only renames
+        // when complete, so for *every* prefix length the visible
+        // `RUN.json` must still parse as exactly the old manifest —
+        // never an error, never a blend of old and new fields.
+        let dir = tmp_dir("torn");
+        let old = sample(10, 1);
+        old.save(&dir).unwrap();
+        let new = sample(11, 2);
+        let new_bytes = new.to_json().into_bytes();
+        let tmp = dir.join(RUN_MANIFEST).with_extension("tmp");
+        for cut in 0..=new_bytes.len() {
+            fs::write(&tmp, &new_bytes[..cut]).unwrap();
+            let got = RunManifest::load(&dir)
+                .unwrap_or_else(|e| panic!("torn write at byte {cut} surfaced: {e}"))
+                .expect("old manifest must still be visible");
+            assert_eq!(got, old, "torn write at byte {cut} leaked mixed state");
+        }
+        // The completed write + rename flips atomically to the new one.
+        fs::write(&tmp, &new_bytes).unwrap();
+        fs::rename(&tmp, dir.join(RUN_MANIFEST)).unwrap();
+        assert_eq!(RunManifest::load(&dir).unwrap(), Some(new));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn digest_count_must_match_worker_count() {
+        let dir = tmp_dir("mismatch");
+        let mut m = sample(5, 1);
+        m.worker_digests.pop();
+        m.save(&dir).unwrap();
+        let err = RunManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("digests"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_state_round_trips_through_the_blob_format() {
+        use crate::algo::{AlgoKind, WorkerAlgo as _};
+        use crate::optim::LrSchedule;
+        let kind = AlgoKind::parse("dqgan-adam:linf8").unwrap();
+        let w0: Vec<f32> = (0..16).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let mut algo = kind.build_worker(w0.clone(), LrSchedule::constant(0.01));
+        let mut rng = Pcg32::new(9);
+        for _ in 0..7 {
+            rng.next_u32();
+        }
+        let blob = encode_worker_state(&rng, algo.as_ref()).unwrap();
+        let mut algo2 = kind.build_worker(w0, LrSchedule::constant(0.01));
+        let mut rng2 = Pcg32::new(0);
+        decode_worker_state(&blob, &mut rng2, algo2.as_mut()).unwrap();
+        assert_eq!(rng.state_parts(), rng2.state_parts());
+        assert_eq!(algo.params(), algo2.params());
+        // Streams continue identically.
+        assert_eq!(rng.next_u32(), rng2.next_u32());
+    }
+
+    #[test]
+    fn worker_state_refuses_a_different_algorithm() {
+        use crate::algo::AlgoKind;
+        use crate::optim::LrSchedule;
+        let w0 = vec![0.0f32; 4];
+        let gda = AlgoKind::parse("gda").unwrap().build_worker(w0.clone(), LrSchedule::constant(0.1));
+        let rng = Pcg32::new(1);
+        let blob = encode_worker_state(&rng, gda.as_ref()).unwrap();
+        let mut cpo =
+            AlgoKind::parse("cpoadam").unwrap().build_worker(w0, LrSchedule::constant(0.1));
+        let mut rng2 = Pcg32::new(2);
+        let err = decode_worker_state(&blob, &mut rng2, cpo.as_mut()).unwrap_err().to_string();
+        assert!(err.contains("configured for"), "{err}");
+    }
+}

@@ -20,9 +20,13 @@
 //! "latest" — callers address snapshots by round, which is the unit of
 //! consistency in a synchronous parameter-server run.
 
+mod manifest;
+
+pub use manifest::{decode_worker_state, encode_worker_state, RunManifest};
+
 use crate::util::bytes::fnv1a64;
 use crate::util::json::Json;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -91,6 +95,11 @@ impl CkptStore {
         Ok(Self { dir, entries })
     }
 
+    /// The store's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
     /// Number of blobs the manifest knows about.
     pub fn len(&self) -> usize {
         self.entries.len()
@@ -103,6 +112,78 @@ impl CkptStore {
     /// Whether a blob exists for `(kind, round, shard)`.
     pub fn contains(&self, kind: &str, round: u64, shard: u32) -> bool {
         self.entries.contains_key(&key(kind, round, shard))
+    }
+
+    /// The stored digest for `(kind, round, shard)`, if any — lets the
+    /// run manifest record per-worker state digests without re-reading
+    /// the blob bytes.
+    pub fn entry_digest(&self, kind: &str, round: u64, shard: u32) -> Option<u64> {
+        self.entries.get(&key(kind, round, shard)).map(|e| e.fnv)
+    }
+
+    /// Sorted distinct rounds that have at least one blob of `kind`.
+    pub fn rounds(&self, kind: &str) -> Vec<u64> {
+        let prefix = format!("{kind}-r");
+        let mut rounds = BTreeSet::new();
+        for k in self.entries.keys() {
+            if let Some(rest) = k.strip_prefix(&prefix) {
+                if let Some((r, _)) = rest.split_once("-s") {
+                    if let Ok(r) = r.parse::<u64>() {
+                        rounds.insert(r);
+                    }
+                }
+            }
+        }
+        rounds.into_iter().collect()
+    }
+
+    /// Retention sweep: keep the blobs of the newest `keep` distinct
+    /// rounds (per the union of all kinds) plus `protect` (the round the
+    /// run manifest points at — never pruned regardless of age); drop
+    /// every older round's entries and delete their blob files. The
+    /// manifest is rewritten atomically once at the end, so a crash
+    /// mid-sweep leaves at worst already-deleted blobs that the next
+    /// `open` + gc pass will drop from the manifest again. Returns the
+    /// number of blobs pruned.
+    pub fn gc_keep(&mut self, keep: usize, protect: Option<u64>) -> anyhow::Result<usize> {
+        anyhow::ensure!(keep >= 1, "ckpt-gc: --keep must be at least 1");
+        let mut all_rounds = BTreeSet::new();
+        let mut parsed: BTreeMap<String, u64> = BTreeMap::new();
+        for k in self.entries.keys() {
+            // Key shape is "<kind>-r<round>-s<shard>"; kinds are
+            // [A-Za-z0-9_] so the first "-r" is unambiguous.
+            let Some((_, rest)) = k.split_once("-r") else { continue };
+            let Some((r, _)) = rest.split_once("-s") else { continue };
+            let Ok(r) = r.parse::<u64>() else { continue };
+            all_rounds.insert(r);
+            parsed.insert(k.clone(), r);
+        }
+        let rounds: Vec<u64> = all_rounds.into_iter().collect();
+        if rounds.len() <= keep {
+            return Ok(0);
+        }
+        let cutoff = rounds[rounds.len() - keep]; // keep rounds >= cutoff
+        let doomed: Vec<String> = parsed
+            .iter()
+            .filter(|(_, &r)| r < cutoff && Some(r) != protect)
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut pruned = 0usize;
+        for k in &doomed {
+            let entry = self.entries.remove(k).expect("doomed key came from entries");
+            let path = self.dir.join(format!("{k}-{:016x}.bin", entry.fnv));
+            match fs::remove_file(&path) {
+                Ok(()) => pruned += 1,
+                // A superseded key's old blob may already be gone (it was
+                // manifest garbage); missing files are not an error.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => pruned += 1,
+                Err(e) => anyhow::bail!("ckpt-gc remove {}: {e}", path.display()),
+            }
+        }
+        if !doomed.is_empty() {
+            self.write_manifest()?;
+        }
+        Ok(pruned)
     }
 
     /// Store `bytes` under `(kind, round, shard)`. Content-addressed:
@@ -150,6 +231,7 @@ impl CkptStore {
             bytes.len(),
             entry.len,
         );
+        crate::obs::metrics::RECOVERY_CKPT_READ_BYTES.add(bytes.len() as u64);
         Ok(Some(bytes))
     }
 
@@ -170,7 +252,7 @@ impl CkptStore {
 
 /// Write via a sibling temp file + rename, so readers (and the next
 /// process to `open` the dir after a crash) never observe a torn file.
-fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
     let tmp = path.with_extension("tmp");
     {
         let mut f = fs::File::create(&tmp)
@@ -244,6 +326,86 @@ mod tests {
         fs::write(&blob, b"tampered bytes").unwrap();
         let err = s.get("bcast", 5, 0).unwrap_err().to_string();
         assert!(err.contains("failed verification"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_blob_is_refused_with_path_in_error() {
+        let dir = tmp_dir("trunc");
+        let mut s = CkptStore::open(&dir).unwrap();
+        s.put("wstate", 7, 1, b"state bytes that matter").unwrap();
+        let blob = dir.join(blob_name("wstate", 7, 1, fnv1a64(b"state bytes that matter")));
+        fs::write(&blob, b"state by").unwrap(); // torn tail
+        let err = s.get("wstate", 7, 1).unwrap_err().to_string();
+        assert!(err.contains("failed verification"), "{err}");
+        assert!(err.contains(&blob.display().to_string()), "error must name the path: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bit_flipped_blob_is_refused_even_at_same_length() {
+        let dir = tmp_dir("bitflip");
+        let mut s = CkptStore::open(&dir).unwrap();
+        s.put("model", 2, 0, &[0u8, 1, 2, 3, 4, 5, 6, 7]).unwrap();
+        let blob = dir.join(blob_name("model", 2, 0, fnv1a64(&[0u8, 1, 2, 3, 4, 5, 6, 7])));
+        let mut bytes = fs::read(&blob).unwrap();
+        bytes[3] ^= 0x40; // same length, one flipped bit
+        fs::write(&blob, &bytes).unwrap();
+        let err = s.get("model", 2, 0).unwrap_err().to_string();
+        assert!(err.contains("refusing to serve a corrupt checkpoint"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_keeps_last_k_rounds_and_the_protected_round() {
+        let dir = tmp_dir("gc");
+        let mut s = CkptStore::open(&dir).unwrap();
+        for r in 0..10u64 {
+            s.put("bcast", r, 0, format!("frame {r}").as_bytes()).unwrap();
+            s.put("wstate", r, 0, format!("state {r}").as_bytes()).unwrap();
+        }
+        // Keep the newest 3 rounds (7, 8, 9) and protect round 2.
+        let pruned = s.gc_keep(3, Some(2)).unwrap();
+        assert_eq!(pruned, 12, "rounds 0,1,3,4,5,6 × 2 kinds");
+        assert_eq!(s.rounds("bcast"), vec![2, 7, 8, 9]);
+        assert_eq!(s.rounds("wstate"), vec![2, 7, 8, 9]);
+        // Survivors still read back verified.
+        assert_eq!(s.get("bcast", 2, 0).unwrap().as_deref(), Some(&b"frame 2"[..]));
+        assert_eq!(s.get("wstate", 9, 0).unwrap().as_deref(), Some(&b"state 9"[..]));
+        assert_eq!(s.get("bcast", 5, 0).unwrap(), None);
+        // The pruned blob files are really gone from disk.
+        let blob5 = dir.join(blob_name("bcast", 5, 0, fnv1a64(b"frame 5")));
+        assert!(!blob5.exists());
+        // And the manifest rewrite survives a reopen.
+        drop(s);
+        let s = CkptStore::open(&dir).unwrap();
+        assert_eq!(s.rounds("bcast"), vec![2, 7, 8, 9]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_with_fewer_rounds_than_keep_is_a_no_op() {
+        let dir = tmp_dir("gc-noop");
+        let mut s = CkptStore::open(&dir).unwrap();
+        s.put("bcast", 0, 0, b"a").unwrap();
+        s.put("bcast", 1, 0, b"b").unwrap();
+        assert_eq!(s.gc_keep(5, None).unwrap(), 0);
+        assert_eq!(s.len(), 2);
+        assert!(s.gc_keep(0, None).is_err(), "--keep 0 must be rejected");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rounds_lists_distinct_rounds_per_kind() {
+        let dir = tmp_dir("rounds");
+        let mut s = CkptStore::open(&dir).unwrap();
+        s.put("wstate", 4, 0, b"a").unwrap();
+        s.put("wstate", 4, 1, b"b").unwrap();
+        s.put("wstate", 9, 0, b"c").unwrap();
+        s.put("bcast", 3, 0, b"d").unwrap();
+        assert_eq!(s.rounds("wstate"), vec![4, 9]);
+        assert_eq!(s.rounds("bcast"), vec![3]);
+        assert!(s.rounds("model").is_empty());
         let _ = fs::remove_dir_all(&dir);
     }
 

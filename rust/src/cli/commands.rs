@@ -99,10 +99,40 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
     let replay_depth = args.get_parse("replay-depth", RecoveryConfig::default().replay_depth)?;
     let ckpt_dir = args.get("ckpt-dir").map(std::path::PathBuf::from);
     let ckpt_every = args.get_parse("ckpt-every", 0u64)?;
+    // `--resume DIR`: restart a checkpointed run from its RUN.json
+    // manifest. DIR doubles as the checkpoint dir; when `--ckpt-dir` is
+    // also given the two must agree — a run has exactly one store.
+    let resume_dir = args.get("resume").map(std::path::PathBuf::from);
+    let resume = resume_dir.is_some() || args.flag("resume");
+    let ckpt_dir = match (ckpt_dir, resume_dir) {
+        (Some(cd), Some(rd)) => {
+            anyhow::ensure!(
+                cd == rd,
+                "--ckpt-dir {} and --resume {} disagree — a run has exactly one \
+                 checkpoint store",
+                cd.display(),
+                rd.display()
+            );
+            Some(cd)
+        }
+        (cd, rd) => cd.or(rd),
+    };
     anyhow::ensure!(
         ckpt_every == 0 || ckpt_dir.is_some(),
         "--ckpt-every needs --ckpt-dir PATH to write into"
     );
+    anyhow::ensure!(
+        !resume || ckpt_dir.is_some(),
+        "--resume wants the checkpoint directory (--resume DIR or --ckpt-dir PATH)"
+    );
+    // Worker-side reconnect policy for TCP deployments (`--connect-retry
+    // N,BASE_MS`): N dial attempts with exponential backoff plus
+    // deterministic jitter. Parsed and carried on the config; the
+    // in-process transports never dial.
+    let connect_retry = match args.get("connect-retry") {
+        Some(spec) => Some(crate::comm::RetryPolicy::parse(&spec)?),
+        None => None,
+    };
     // Fault injection for the CI chaos job: `--chaos-kill W@R` kills
     // worker W (its transport end drops, no teardown) after R rounds.
     let chaos_kill = match args.get("chaos-kill") {
@@ -117,6 +147,15 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
                     .map_err(|_| anyhow::anyhow!("--chaos-kill round '{r}' is not a number"))?,
             ))
         }
+        None => None,
+    };
+    // Leader fault injection (`--chaos-kill-leader R`): the serve loop
+    // returns right after round R's broadcast with no Shutdown frame —
+    // a simulated `kill -9` the CI chaos-leader job resumes from.
+    let chaos_kill_leader = match args.get("chaos-kill-leader") {
+        Some(r) => Some(r.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--chaos-kill-leader round '{r}' is not a number")
+        })?),
         None => None,
     };
     let agg = AggregatorConfig {
@@ -142,6 +181,9 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
         agg,
         transport,
         chaos_kill,
+        chaos_kill_leader,
+        resume,
+        connect_retry,
     };
 
     // Observability sinks (ADR-004; the flags combine freely). The
@@ -243,6 +285,38 @@ pub fn train(args: &mut Args) -> anyhow::Result<()> {
             path.display()
         );
     }
+    Ok(())
+}
+
+/// `dqgan ckpt-gc`: prune old rounds from a checkpoint store, keeping
+/// the newest `--keep K` rounds per kind — and always the round the run
+/// manifest (`RUN.json`) points at, which a resume must be able to
+/// restore from. The store manifest is rewritten atomically, and the
+/// run manifest's replay index is refreshed so pruned broadcast rounds
+/// are no longer advertised as replayable.
+pub fn ckpt_gc(args: &mut Args) -> anyhow::Result<()> {
+    use crate::ckpt::{CkptStore, RunManifest};
+    let dir = args.get("dir").map(std::path::PathBuf::from).ok_or_else(|| {
+        anyhow::anyhow!("ckpt-gc needs --dir PATH (the checkpoint directory)")
+    })?;
+    let keep = args.get_parse("keep", 4usize)?;
+    let run_manifest = RunManifest::load(&dir)?;
+    let protect = run_manifest.as_ref().map(|man| man.round);
+    let mut store = CkptStore::open(&dir)?;
+    let before = store.len();
+    let removed = store.gc_keep(keep, protect)?;
+    if let Some(mut man) = run_manifest {
+        man.replay_rounds = store.rounds("bcast");
+        man.save(&dir)?;
+    }
+    println!(
+        "ckpt-gc {}: removed {removed} of {before} blobs (keep {keep}{})",
+        dir.display(),
+        match protect {
+            Some(r) => format!(", manifest round {r} protected"),
+            None => String::new(),
+        }
+    );
     Ok(())
 }
 

@@ -20,6 +20,7 @@ pub fn run(argv: Vec<String>) -> crate::Result<()> {
         "train" => commands::train(&mut args),
         "figures" | "exp" | "experiment" => commands::figures(&mut args),
         "validate-compressors" => commands::validate_compressors(&mut args),
+        "ckpt-gc" => commands::ckpt_gc(&mut args),
         "bench-compare" => commands::bench_compare(&mut args),
         "metrics-check" => commands::metrics_check(&mut args),
         "info" => commands::info(&mut args),
@@ -52,6 +53,8 @@ USAGE:
               [--transport evloop|threads]
               [--on-worker-loss abort|evict] [--replay-depth N]
               [--ckpt-dir PATH] [--ckpt-every K] [--chaos-kill W@R]
+              [--resume DIR] [--chaos-kill-leader R]
+              [--connect-retry N,BASE_MS]
               [--kernels simd|scalar] [--round-csv PATH]
               [--metrics-json PATH] [--worker-csv PATH] [--trace PATH]
       Train a GAN on the parameter-server runtime.
@@ -92,6 +95,20 @@ USAGE:
       additionally snapshots the model every K rounds. --chaos-kill W@R
       is the fault injector behind the CI chaos job: worker W drops
       dead (no teardown handshake) after R rounds.
+      Leader recovery: with --ckpt-dir and --ckpt-every K the run is
+      resumable across a leader kill — every K rounds the leader spills
+      the broadcast and each worker snapshots its error memory,
+      optimizer state and RNG cursor into the shared store, and a
+      crash-consistent run manifest (RUN.json) advances only when a
+      round's blobs are all durable. --resume DIR reloads the manifest
+      (refusing loudly on a config-fingerprint mismatch), rolls every
+      worker back to the manifest round, and continues under a bumped
+      session epoch; the rounds after the resume are bitwise-identical
+      to an undisturbed run. --chaos-kill-leader R is the matching
+      fault injector: the leader dies right after round R's broadcast
+      (no Shutdown), exactly like kill -9. --connect-retry N,BASE_MS
+      gives TCP workers N dial attempts with exponential backoff and
+      deterministic jitter while a restarted leader comes back up.
       --transport selects the frame engine: evloop (default) drives
       every worker connection from one readiness-loop leader thread and
       bounds *applied* (acked) broadcasts per worker, so leader thread
@@ -114,6 +131,12 @@ USAGE:
   dqgan validate-compressors [--dim D] [--trials N]
       Empirically verify Definition 1 (δ-approximate) for every compressor
       (Theorems 1–2).
+
+  dqgan ckpt-gc --dir PATH [--keep K]
+      Prune a checkpoint store down to the newest K rounds per kind
+      (default 4). The round the run manifest points at is never
+      pruned — a resume must always find its blobs — and the manifest's
+      replay index is refreshed after the sweep.
 
   dqgan bench-compare --baseline BENCH_N.json --fresh RUN.json
                       [--threshold 0.15] [--min-speedup 1.5]

@@ -51,6 +51,21 @@ pub enum MsgKind {
     /// of hanging (or aborting, which is what the loss turns into under
     /// `abort`).
     Gone = 8,
+    /// Worker → server: session-epoch handshake opener. `round` carries
+    /// the last session epoch this worker ran under (0 on a first
+    /// connect); the payload is the worker's 8-byte config fingerprint
+    /// (LE). Sent by a reconnecting worker before any data frame, so a
+    /// leader restarted under different config refuses it *before* state
+    /// can diverge. The leader answers with a [`MsgKind::Welcome`].
+    Hello = 9,
+    /// Server → worker: handshake answer. `round` carries the leader's
+    /// current session epoch; the payload is
+    /// `[fingerprint:u64 LE][resume_round:u64 LE]` — the leader's config
+    /// fingerprint and the round the session (re)starts at (0 for a
+    /// fresh run, `manifest.round + 1` after `--resume`). The worker
+    /// compares fingerprints and either rolls its own state to
+    /// `resume_round` from its snapshot or refuses loudly.
+    Welcome = 10,
 }
 
 impl MsgKind {
@@ -64,6 +79,8 @@ impl MsgKind {
             6 => Self::Ack,
             7 => Self::Rejoin,
             8 => Self::Gone,
+            9 => Self::Hello,
+            10 => Self::Welcome,
             other => anyhow::bail!("bad message kind {other}"),
         })
     }
@@ -121,6 +138,45 @@ impl Message {
     /// eviction mode; never written to a socket.
     pub fn gone(worker: u32, round: u64, what: &str) -> Self {
         Self { kind: MsgKind::Gone, worker, round, payload: what.as_bytes().to_vec() }
+    }
+
+    /// Session handshake opener: worker `worker` last ran under session
+    /// `epoch` with config fingerprint `fingerprint`.
+    pub fn hello(worker: u32, epoch: u64, fingerprint: u64) -> Self {
+        Self {
+            kind: MsgKind::Hello,
+            worker,
+            round: epoch,
+            payload: fingerprint.to_le_bytes().to_vec(),
+        }
+    }
+
+    /// Session handshake answer: the leader runs session `epoch` with
+    /// `fingerprint`, and this connection's first round is `resume_round`.
+    pub fn welcome(worker: u32, epoch: u64, fingerprint: u64, resume_round: u64) -> Self {
+        let mut payload = Vec::with_capacity(16);
+        put_u64(&mut payload, fingerprint);
+        put_u64(&mut payload, resume_round);
+        Self { kind: MsgKind::Welcome, worker, round: epoch, payload }
+    }
+
+    /// Parse a [`MsgKind::Hello`] payload → the worker's fingerprint.
+    pub fn hello_fingerprint(&self) -> anyhow::Result<u64> {
+        anyhow::ensure!(self.kind == MsgKind::Hello, "not a hello frame");
+        let mut r = Reader::new(&self.payload);
+        let f = r.u64()?;
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes in hello payload");
+        Ok(f)
+    }
+
+    /// Parse a [`MsgKind::Welcome`] payload → `(fingerprint, resume_round)`.
+    pub fn welcome_parts(&self) -> anyhow::Result<(u64, u64)> {
+        anyhow::ensure!(self.kind == MsgKind::Welcome, "not a welcome frame");
+        let mut r = Reader::new(&self.payload);
+        let f = r.u64()?;
+        let resume = r.u64()?;
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes in welcome payload");
+        Ok((f, resume))
     }
 
     /// Build a [`MsgKind::PartialBroadcast`] frame: the inclusion bitmap
@@ -467,9 +523,24 @@ mod tests {
             Message::ack(5, 11),
             Message::rejoin(6, 12),
             Message::gone(7, 13, "socket failed"),
+            Message::hello(8, 2, 0xAABB_CCDD_EEFF_0011),
+            Message::welcome(8, 3, 0xAABB_CCDD_EEFF_0011, 14),
         ] {
             assert_eq!(Message::decode(&m.encode()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn handshake_payloads_parse_back() {
+        let h = Message::hello(4, 7, u64::MAX);
+        assert_eq!(h.round, 7, "hello carries the epoch in the round field");
+        assert_eq!(h.hello_fingerprint().unwrap(), u64::MAX);
+        let w = Message::welcome(4, 8, 0x0123_4567_89AB_CDEF, 42);
+        assert_eq!(w.round, 8);
+        assert_eq!(w.welcome_parts().unwrap(), (0x0123_4567_89AB_CDEF, 42));
+        // Cross-parsing is refused.
+        assert!(h.welcome_parts().is_err());
+        assert!(w.hello_fingerprint().is_err());
     }
 
     #[test]

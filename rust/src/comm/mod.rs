@@ -28,6 +28,7 @@ pub use inproc::{
 };
 pub use message::{bitmap_included, read_inclusion_bitmap, FrameAssembler, Message, MsgKind};
 pub use sim::NetworkModel;
+pub use tcp::{RetryPolicy, SessionInfo, SessionWelcome};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};

@@ -25,6 +25,79 @@ use std::sync::Arc;
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Worker-side reconnect policy: `--connect-retry N,BASE_MS`. Attempt k
+/// (0-based; the first try is attempt 0 and sleeps nothing) is preceded
+/// by `base_ms·2^k + jitter` milliseconds, where the jitter is a
+/// **deterministic** function of (worker, attempt) — reproducible chaos
+/// runs cannot tolerate wall-clock randomness, and decorrelating workers
+/// by id is all jitter is for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total connect attempts (≥ 1).
+    pub attempts: u32,
+    /// Base backoff in milliseconds (0 = retry immediately).
+    pub base_ms: u64,
+}
+
+/// Ceiling on a single backoff sleep: keeps `N,BASE_MS` typos from
+/// turning into hour-long hangs.
+const BACKOFF_CAP_MS: u64 = 10_000;
+
+impl RetryPolicy {
+    /// Parse the CLI form `N,BASE_MS` (e.g. `8,50`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (n, base) = s
+            .split_once(',')
+            .ok_or_else(|| anyhow::anyhow!("--connect-retry wants N,BASE_MS, got {s:?}"))?;
+        let attempts: u32 = n
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--connect-retry: bad attempt count {n:?}"))?;
+        anyhow::ensure!(attempts >= 1, "--connect-retry: need at least 1 attempt");
+        let base_ms: u64 = base
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--connect-retry: bad base ms {base:?}"))?;
+        Ok(Self { attempts, base_ms })
+    }
+
+    /// Backoff before attempt `attempt` (1-based — attempt 0 never
+    /// sleeps): exponential in the attempt with a deterministic
+    /// per-(worker, attempt) jitter in `[0, base_ms)`.
+    pub fn backoff_ms(&self, worker: u32, attempt: u32) -> u64 {
+        if attempt == 0 || self.base_ms == 0 {
+            return 0;
+        }
+        let exp = self.base_ms.saturating_mul(1u64 << (attempt - 1).min(16));
+        let mut seed = Vec::with_capacity(8);
+        seed.extend_from_slice(&worker.to_le_bytes());
+        seed.extend_from_slice(&attempt.to_le_bytes());
+        let jitter = crate::util::bytes::fnv1a64(&seed) % self.base_ms;
+        exp.saturating_add(jitter).min(BACKOFF_CAP_MS)
+    }
+}
+
+/// What the leader's [`Message::welcome`] told a session-handshaking
+/// worker: the session epoch this connection runs under and the first
+/// round it will serve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionWelcome {
+    pub epoch: u64,
+    pub resume_round: u64,
+}
+
+/// What the leader answers `Hello` handshakes with.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionInfo {
+    /// Current session epoch (bumped on every `--resume`).
+    pub epoch: u64,
+    /// Config fingerprint the run was built from.
+    pub fingerprint: u64,
+    /// First round this session serves (0 fresh, `manifest.round + 1`
+    /// on resume).
+    pub resume_round: u64,
+}
+
 fn write_frame(stream: &mut TcpStream, msg: &Message) -> anyhow::Result<usize> {
     let frame = msg.encode();
     let len = (frame.len() as u32).to_le_bytes();
@@ -70,7 +143,24 @@ impl TcpServerBuilder {
     /// Phase 2: accept exactly `m` worker registrations.
     pub fn accept(self, m: usize) -> anyhow::Result<TcpServerEnd> {
         Ok(TcpServerEnd {
-            streams: self.accept_streams(m)?,
+            streams: self.accept_streams(m, None)?,
+            counter: ByteCounter::new(),
+            readers: None,
+            pipeline_depth: 2,
+            writers: None,
+        })
+    }
+
+    /// [`Self::accept`] in session mode: workers registering with a
+    /// [`MsgKind::Hello`] handshake get a [`MsgKind::Welcome`] answer
+    /// carrying the session epoch, the leader's config fingerprint, and
+    /// the round the session resumes at. A fingerprint mismatch fails
+    /// the accept loudly on *both* ends (the `Welcome` is written first
+    /// so the worker can diagnose it too). Legacy registration frames
+    /// are still accepted, so mixed fleets keep working.
+    pub fn accept_session(self, m: usize, session: SessionInfo) -> anyhow::Result<TcpServerEnd> {
+        Ok(TcpServerEnd {
+            streams: self.accept_streams(m, Some(session))?,
             counter: ByteCounter::new(),
             readers: None,
             pipeline_depth: 2,
@@ -85,24 +175,81 @@ impl TcpServerBuilder {
     /// `connect_evloop*` constructors (they send `Ack` control frames).
     #[cfg(unix)]
     pub fn accept_evloop(self, m: usize) -> anyhow::Result<TcpEvloopServerEnd> {
-        let streams = self.accept_streams(m)?;
+        let streams = self.accept_streams(m, None)?;
         // The listener stays with the loop: in elastic-membership mode it
         // keeps accepting, so an evicted worker can reconnect with a
         // Rejoin hello and be spliced back into its old slot.
         TcpEvloopServerEnd::spawn(streams, self.listener)
     }
 
-    fn accept_streams(&self, m: usize) -> anyhow::Result<Vec<TcpStream>> {
+    /// [`Self::accept_evloop`] in session mode — the `Hello`/`Welcome`
+    /// handshake runs during the blocking accept phase, before the
+    /// readiness loop takes the sockets, so the loop itself is unchanged.
+    #[cfg(unix)]
+    pub fn accept_evloop_session(
+        self,
+        m: usize,
+        session: SessionInfo,
+    ) -> anyhow::Result<TcpEvloopServerEnd> {
+        let streams = self.accept_streams(m, Some(session))?;
+        TcpEvloopServerEnd::spawn(streams, self.listener)
+    }
+
+    fn accept_streams(
+        &self,
+        m: usize,
+        session: Option<SessionInfo>,
+    ) -> anyhow::Result<Vec<TcpStream>> {
         let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
         let mut accepted = 0;
         while accepted < m {
             let (mut s, _) = self.listener.accept()?;
             s.set_nodelay(true)?;
             let hello = read_frame(&mut s)?;
-            anyhow::ensure!(hello.round == u64::MAX, "bad registration frame");
             let id = hello.worker as usize;
             anyhow::ensure!(id < m, "worker id {id} out of range");
             anyhow::ensure!(streams[id].is_none(), "duplicate worker id {id}");
+            match hello.kind {
+                MsgKind::Hello => {
+                    let sess = session.ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "worker {id} sent a session handshake but the leader \
+                             was not started in session mode"
+                        )
+                    })?;
+                    let worker_fp = hello.hello_fingerprint()?;
+                    // Answer before judging the fingerprint: on a
+                    // mismatch the worker reads the Welcome, compares,
+                    // and refuses with its own clear error instead of
+                    // seeing an unexplained hangup.
+                    write_frame(
+                        &mut s,
+                        &Message::welcome(
+                            hello.worker,
+                            sess.epoch,
+                            sess.fingerprint,
+                            sess.resume_round,
+                        ),
+                    )?;
+                    anyhow::ensure!(
+                        worker_fp == sess.fingerprint,
+                        "worker {id} registered with config fingerprint {worker_fp:016x} \
+                         but this run has {:016x}: refusing to mix run configurations",
+                        sess.fingerprint
+                    );
+                    // A worker claiming an epoch *ahead* of ours belongs
+                    // to a newer leader incarnation than this one — the
+                    // fleet and leader disagree about history.
+                    anyhow::ensure!(
+                        hello.round <= sess.epoch,
+                        "worker {id} claims session epoch {} but the leader is at \
+                         epoch {}: worker has seen a newer leader incarnation",
+                        hello.round,
+                        sess.epoch
+                    );
+                }
+                _ => anyhow::ensure!(hello.round == u64::MAX, "bad registration frame"),
+            }
             streams[id] = Some(s);
             accepted += 1;
         }
@@ -204,6 +351,87 @@ impl TcpWorkerEnd {
             plan: None,
             send_acks: true,
         })
+    }
+
+    /// Session-mode connect: dial `addr` under `retry` (each failed
+    /// attempt sleeps the policy's deterministic backoff), then run the
+    /// `Hello`/`Welcome` handshake — send our config `fingerprint` and
+    /// `last_epoch`, read back the leader's epoch, fingerprint, and
+    /// resume round. Refuses loudly when the fingerprints differ (the
+    /// fleet must not resume under a different run configuration) or
+    /// when the leader's epoch is older than one we already served
+    /// under (a stale leader incarnation).
+    pub fn connect_session(
+        addr: &str,
+        id: u32,
+        fingerprint: u64,
+        last_epoch: u64,
+        retry: Option<RetryPolicy>,
+        send_acks: bool,
+    ) -> anyhow::Result<(Self, SessionWelcome)> {
+        let mut stream = Self::dial_with_retry(addr, id, retry)?;
+        stream.set_nodelay(true)?;
+        write_frame(&mut stream, &Message::hello(id, last_epoch, fingerprint))?;
+        let welcome = read_frame(&mut stream)?;
+        anyhow::ensure!(
+            welcome.kind == MsgKind::Welcome,
+            "worker {id}: expected a Welcome handshake, got {:?}",
+            welcome.kind
+        );
+        let (leader_fp, resume_round) = welcome.welcome_parts()?;
+        anyhow::ensure!(
+            leader_fp == fingerprint,
+            "worker {id}: config fingerprint mismatch — worker built {fingerprint:016x}, \
+             leader serves {leader_fp:016x}: refusing to resume under a different run \
+             configuration"
+        );
+        let epoch = welcome.round;
+        anyhow::ensure!(
+            epoch >= last_epoch,
+            "worker {id}: leader session epoch {epoch} is older than the epoch {last_epoch} \
+             this worker already served under — stale leader, refusing"
+        );
+        Ok((
+            Self {
+                id,
+                addr: addr.to_string(),
+                stream,
+                counter: ByteCounter::new(),
+                plan: None,
+                send_acks,
+            },
+            SessionWelcome { epoch, resume_round },
+        ))
+    }
+
+    /// `TcpStream::connect` under a [`RetryPolicy`]: attempt 0 dials
+    /// immediately, later attempts sleep the policy's exponential
+    /// backoff first. Every dial bumps `recovery.reconnect_attempts`;
+    /// every sleep bumps `recovery.backoff_sleeps`.
+    fn dial_with_retry(
+        addr: &str,
+        id: u32,
+        retry: Option<RetryPolicy>,
+    ) -> anyhow::Result<TcpStream> {
+        let policy = retry.unwrap_or(RetryPolicy { attempts: 1, base_ms: 0 });
+        let attempts = policy.attempts.max(1);
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            let ms = policy.backoff_ms(id, attempt);
+            if ms > 0 {
+                crate::obs::metrics::RECOVERY_BACKOFF_SLEEPS.inc();
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+            crate::obs::metrics::RECOVERY_RECONNECT_ATTEMPTS.inc();
+            match TcpStream::connect(addr) {
+                Ok(s) => return Ok(s),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(anyhow::anyhow!(
+            "worker {id}: connect to {addr} failed after {attempts} attempt(s): {}",
+            last_err.expect("at least one attempt ran")
+        ))
     }
 
     /// This worker's byte counters (uplink = sent, downlink = received,
@@ -1734,5 +1962,170 @@ mod tests {
         drop(server);
         w0.join().unwrap();
         w1.join().unwrap();
+    }
+
+    #[test]
+    fn retry_policy_parses_and_backs_off_deterministically() {
+        let p = RetryPolicy::parse("8,50").unwrap();
+        assert_eq!(p, RetryPolicy { attempts: 8, base_ms: 50 });
+        assert_eq!(RetryPolicy::parse(" 3 , 0 ").unwrap().base_ms, 0);
+        assert!(RetryPolicy::parse("8").is_err(), "missing base");
+        assert!(RetryPolicy::parse("0,50").is_err(), "zero attempts");
+        assert!(RetryPolicy::parse("x,50").is_err());
+        assert!(RetryPolicy::parse("8,y").is_err());
+        // Attempt 0 never sleeps; later attempts grow exponentially and
+        // are bit-for-bit reproducible (the jitter is a pure function of
+        // worker id and attempt, never wall clock).
+        assert_eq!(p.backoff_ms(3, 0), 0);
+        for attempt in 1..6u32 {
+            let a = p.backoff_ms(3, attempt);
+            assert_eq!(a, p.backoff_ms(3, attempt), "deterministic");
+            let exp = 50u64 << (attempt - 1);
+            assert!(a >= exp && a < exp + 50, "exp + jitter in [0, base): {a}");
+        }
+        // Different workers decorrelate.
+        assert_ne!(p.backoff_ms(0, 1), p.backoff_ms(1, 1));
+        // The cap bounds typo-sized bases.
+        let big = RetryPolicy { attempts: 30, base_ms: 5_000 };
+        assert_eq!(big.backoff_ms(0, 20), BACKOFF_CAP_MS);
+        // base_ms = 0 retries immediately.
+        assert_eq!(RetryPolicy { attempts: 4, base_ms: 0 }.backoff_ms(1, 3), 0);
+    }
+
+    #[test]
+    fn session_handshake_welcomes_matching_fingerprints() {
+        let m = 2;
+        let fp = 0xFEED_FACE_CAFE_0001u64;
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let workers: Vec<_> = (0..m as u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let (mut w, welcome) = TcpWorkerEnd::connect_session(
+                        &addr.to_string(),
+                        id,
+                        fp,
+                        3, // last epoch this worker served under
+                        Some(RetryPolicy { attempts: 3, base_ms: 1 }),
+                        false,
+                    )
+                    .unwrap();
+                    assert_eq!(welcome, SessionWelcome { epoch: 4, resume_round: 17 });
+                    // The data plane works unchanged after the handshake.
+                    w.send(Message::payload(id, 17, vec![id as u8])).unwrap();
+                    assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+                })
+            })
+            .collect();
+        let session = SessionInfo { epoch: 4, fingerprint: fp, resume_round: 17 };
+        let mut server = builder.accept_session(m, session).unwrap();
+        let msgs = server.recv_round().unwrap();
+        assert_eq!(msgs.len(), m);
+        assert!(msgs.iter().all(|msg| msg.round == 17));
+        server.broadcast(Message::shutdown(18)).unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn session_handshake_refuses_fingerprint_mismatch_on_both_ends() {
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let worker = std::thread::spawn(move || {
+            TcpWorkerEnd::connect_session(&addr.to_string(), 0, 0xAAAA, 0, None, false)
+                .unwrap_err()
+        });
+        let session = SessionInfo { epoch: 0, fingerprint: 0xBBBB, resume_round: 0 };
+        let leader_err = builder.accept_session(1, session).unwrap_err();
+        assert!(
+            leader_err.to_string().contains("refusing to mix run configurations"),
+            "{leader_err}"
+        );
+        let worker_err = worker.join().unwrap();
+        assert!(
+            worker_err.to_string().contains("config fingerprint mismatch"),
+            "{worker_err}"
+        );
+    }
+
+    #[test]
+    fn session_handshake_refuses_a_worker_from_the_future() {
+        // A worker that served under epoch 9 reaching a leader at epoch 2
+        // means the fleet has seen a newer incarnation than this leader —
+        // the leader must refuse rather than rewind history.
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let fp = 0x1234u64;
+        let worker = std::thread::spawn(move || {
+            // The worker-side check also fires: welcome.epoch 2 < its 9.
+            TcpWorkerEnd::connect_session(&addr.to_string(), 0, fp, 9, None, false).unwrap_err()
+        });
+        let session = SessionInfo { epoch: 2, fingerprint: fp, resume_round: 5 };
+        let leader_err = builder.accept_session(1, session).unwrap_err();
+        assert!(
+            leader_err.to_string().contains("newer leader incarnation"),
+            "{leader_err}"
+        );
+        let worker_err = worker.join().unwrap();
+        assert!(worker_err.to_string().contains("stale leader"), "{worker_err}");
+    }
+
+    #[test]
+    fn connect_retry_survives_a_late_listener_and_gives_up_cleanly() {
+        // Bind then immediately drop a listener to get an address that
+        // refuses connections, and verify the retry loop reports attempts.
+        let dead = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead_addr = dead.local_addr().unwrap().to_string();
+        drop(dead);
+        let err = TcpWorkerEnd::connect_session(
+            &dead_addr,
+            7,
+            0x1,
+            0,
+            Some(RetryPolicy { attempts: 3, base_ms: 1 }),
+            false,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("after 3 attempt(s)"), "{err}");
+        // Late leader: start the listener only after the worker has been
+        // dialing for a while — the backoff loop must reach it.
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let fp = 0x77u64;
+        let worker = std::thread::spawn(move || {
+            let (_, welcome) = TcpWorkerEnd::connect_session(
+                &addr.to_string(),
+                0,
+                fp,
+                0,
+                Some(RetryPolicy { attempts: 10, base_ms: 5 }),
+                false,
+            )
+            .unwrap();
+            welcome
+        });
+        let session = SessionInfo { epoch: 1, fingerprint: fp, resume_round: 3 };
+        let _server = builder.accept_session(1, session).unwrap();
+        assert_eq!(worker.join().unwrap(), SessionWelcome { epoch: 1, resume_round: 3 });
+    }
+
+    #[test]
+    fn legacy_registration_still_works_in_session_mode() {
+        // Mixed fleets: a worker using the historical Payload/u64::MAX
+        // hello registers fine with a session-mode leader (it just never
+        // learns the epoch).
+        let builder = TcpServerBuilder::listen("127.0.0.1:0").unwrap();
+        let addr = builder.addr();
+        let worker = std::thread::spawn(move || {
+            let mut w = TcpWorkerEnd::connect(&addr.to_string(), 0).unwrap();
+            w.send(Message::payload(0, 0, vec![1])).unwrap();
+            assert_eq!(w.recv().unwrap().kind, MsgKind::Shutdown);
+        });
+        let session = SessionInfo { epoch: 1, fingerprint: 0x9, resume_round: 0 };
+        let mut server = builder.accept_session(1, session).unwrap();
+        assert_eq!(server.recv_round().unwrap().len(), 1);
+        server.broadcast(Message::shutdown(1)).unwrap();
+        worker.join().unwrap();
     }
 }

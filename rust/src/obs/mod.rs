@@ -65,6 +65,9 @@ pub mod metrics {
             RECOVERY_REJOINS => "recovery.rejoins",
             RECOVERY_REPLAYED_FRAMES => "recovery.replayed_frames",
             RECOVERY_CKPT_BYTES => "recovery.ckpt_bytes",
+            RECOVERY_CKPT_READ_BYTES => "recovery.ckpt_read_bytes",
+            RECOVERY_RECONNECT_ATTEMPTS => "recovery.reconnect_attempts",
+            RECOVERY_BACKOFF_SLEEPS => "recovery.backoff_sleeps",
         }
         gauges {
             EVLOOP_OUTRING_DEPTH => "evloop.outring_depth",

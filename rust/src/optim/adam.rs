@@ -1,6 +1,7 @@
 //! Adam (Kingma & Ba [15]) on the operator F — minimization-style baseline.
 
 use super::{LrSchedule, Optimizer};
+use crate::util::bytes::{put_f32_slice, put_u32, put_u64, Reader};
 
 /// Standard Adam with bias correction.
 #[derive(Debug, Clone)]
@@ -44,6 +45,26 @@ impl Adam {
             self.m = vec![0.0; n];
             self.v = vec![0.0; n];
         }
+    }
+
+    /// Serialize the moment state for a worker snapshot. The moment
+    /// vectors are lazily sized (empty until the first step) and that
+    /// emptiness is part of the state, so lengths are encoded explicitly.
+    pub(crate) fn save_state(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.t);
+        put_u32(out, self.m.len() as u32);
+        put_f32_slice(out, &self.m);
+        put_f32_slice(out, &self.v);
+    }
+
+    /// Restore from [`Self::save_state`] bytes (hyperparameters come from
+    /// config, not the snapshot).
+    pub(crate) fn load_state(&mut self, r: &mut Reader) -> anyhow::Result<()> {
+        self.t = r.u64()?;
+        let n = r.u32()? as usize;
+        self.m = r.f32_vec(n)?;
+        self.v = r.f32_vec(n)?;
+        Ok(())
     }
 
     /// The preconditioned direction m̂/(√v̂+ε) *without* applying it —

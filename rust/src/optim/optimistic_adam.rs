@@ -11,6 +11,7 @@
 
 use super::adam::Adam;
 use super::{LrSchedule, Optimizer};
+use crate::util::bytes::{put_f32_slice, put_u32, put_u64, Reader};
 
 /// Optimistic Adam state: inner Adam moments + previous direction.
 #[derive(Debug, Clone)]
@@ -42,6 +43,25 @@ impl OptimisticAdam {
     pub fn with_schedule(mut self, lr: LrSchedule) -> Self {
         self.lr = lr;
         self
+    }
+
+    /// Serialize inner-Adam moments + the optimistic previous direction
+    /// for a worker snapshot (`prev_dir` enters the next update with a
+    /// full η weight, so it must survive bit-for-bit).
+    pub(crate) fn save_state(&self, out: &mut Vec<u8>) {
+        self.inner.save_state(out);
+        put_u64(out, self.t);
+        put_u32(out, self.prev_dir.len() as u32);
+        put_f32_slice(out, &self.prev_dir);
+    }
+
+    /// Restore from [`Self::save_state`] bytes.
+    pub(crate) fn load_state(&mut self, r: &mut Reader) -> anyhow::Result<()> {
+        self.inner.load_state(r)?;
+        self.t = r.u64()?;
+        let n = r.u32()? as usize;
+        self.prev_dir = r.f32_vec(n)?;
+        Ok(())
     }
 }
 
@@ -114,6 +134,37 @@ mod tests {
             r_opt < r_adam && r_opt < 1.0,
             "optimistic={r_opt} plain={r_adam}"
         );
+    }
+
+    #[test]
+    fn snapshot_round_trip_continues_bit_exact() {
+        // Step an optimizer, snapshot it, restore into a fresh instance,
+        // and drive both on the same gradient stream: the restored copy
+        // must track the original bit-for-bit (the leader-recovery
+        // contract for replicated optimizer state).
+        let mut a = OptimisticAdam::new(0.01);
+        let mut w = vec![1.0f32, -2.0, 3.0];
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        for _ in 0..25 {
+            let g: Vec<f32> = (0..3).map(|_| rng.normal()).collect();
+            a.step(&mut w, &g);
+        }
+        let mut buf = Vec::new();
+        a.save_state(&mut buf);
+        let mut b = OptimisticAdam::new(0.01);
+        let mut r = Reader::new(&buf);
+        b.load_state(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0, "snapshot must be fully consumed");
+        let mut wa = w.clone();
+        let mut wb = w;
+        for _ in 0..25 {
+            let g: Vec<f32> = (0..3).map(|_| rng.normal()).collect();
+            a.step(&mut wa, &g);
+            b.step(&mut wb, &g);
+        }
+        for (x, y) in wa.iter().zip(&wb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

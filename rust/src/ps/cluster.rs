@@ -3,16 +3,18 @@
 //! entry point used by the CLI, the experiment harnesses and the examples.
 
 use super::aggregate::Decoder;
-use super::server::serve_rounds_with;
-use super::worker::{apply_broadcast, worker_loop, EvalHook, WorkerSummary};
+use super::server::{is_snapshot_round, serve_rounds_session, ServeSession};
+use super::worker::{apply_broadcast, worker_loop_resumable, EvalHook, SnapHook, WorkerSummary};
 use super::RoundRecord;
 use crate::algo::AlgoKind;
-use crate::ckpt::CkptStore;
-use crate::comm::{inproc_cluster, inproc_cluster_evloop, Message, MsgKind, ServerEnd};
+use crate::ckpt::{decode_worker_state, encode_worker_state, CkptStore, RunManifest};
+use crate::comm::{
+    inproc_cluster, inproc_cluster_evloop, Message, MsgKind, RetryPolicy, ServerEnd,
+};
 use crate::config::{AggregatorConfig, TransportMode};
 use crate::grad::GradientSource;
 use crate::optim::LrSchedule;
-use crate::util::bytes::put_f32_slice;
+use crate::util::bytes::{fnv1a64, put_f32_slice};
 use crate::util::rng::Pcg32;
 use crate::util::timer::Stopwatch;
 use std::sync::{Arc, Mutex};
@@ -49,6 +51,67 @@ pub struct ClusterConfig {
     /// chaos job drives it and diffs the survivor broadcasts against a
     /// run where W was absent from the start.
     pub chaos_kill: Option<(usize, u64)>,
+    /// Fault injection for the *leader* (`--chaos-kill-leader R`): the
+    /// serve loop returns right after round R's broadcast with no
+    /// Shutdown frame and no run-end bookkeeping — a simulated
+    /// `kill -9`. Workers observe a dead transport and exit cleanly;
+    /// the only durable state is what the checkpoint store already
+    /// holds, which is exactly what [`Self::resume`] restores from.
+    pub chaos_kill_leader: Option<u64>,
+    /// Resume a previously checkpointed run: load the run manifest from
+    /// `agg.recovery.ckpt_dir` (`--resume DIR`), refuse loudly on a
+    /// config-fingerprint mismatch, restore every worker's snapshot at
+    /// the manifest round, and serve rounds `manifest.round + 1 ..
+    /// rounds` under a bumped session epoch. Post-resume rounds are
+    /// bitwise-identical to an undisturbed run (the recovery
+    /// integration suite gates on it).
+    pub resume: bool,
+    /// Worker-side connect retry policy (`--connect-retry N,BASE_MS`) —
+    /// consumed by the TCP session handshake
+    /// ([`crate::comm::tcp::TcpWorkerEnd::connect_session`]) when a
+    /// deployment dials a restarted leader over real sockets. The
+    /// in-process transports never dial, so `run_cluster` itself only
+    /// carries it; it lives here so one config describes the whole run
+    /// (and fingerprint-relevant knobs stay in one place — this one is
+    /// excluded from [`Self::fingerprint`], retry cadence never changes
+    /// the trajectory).
+    pub connect_retry: Option<RetryPolicy>,
+}
+
+impl ClusterConfig {
+    /// 64-bit fingerprint of every configuration knob that shapes the
+    /// training trajectory: algorithm, cluster shape, horizon, step
+    /// size (bit-exact), seed, round policy, and the aggregation /
+    /// pipeline / checkpoint-cadence knobs. Transport and kernel arms
+    /// are deliberately excluded — they are bitwise-identical switches
+    /// by contract, so a resume may legally change them. A manifest
+    /// written under one fingerprint refuses to resume under another.
+    pub fn fingerprint(&self) -> u64 {
+        let lr = match &self.lr {
+            LrSchedule::Constant { eta0 } => format!("const:{:08x}", eta0.to_bits()),
+            LrSchedule::InvSqrt { eta0, t0 } => {
+                format!("invsqrt:{:08x}:{:016x}", eta0.to_bits(), t0.to_bits())
+            }
+            LrSchedule::Warmup { eta0, warmup } => {
+                format!("warmup:{:08x}:{warmup}", eta0.to_bits())
+            }
+        };
+        let canon = format!(
+            "algo={};workers={};batch={};rounds={};lr={lr};seed={};policy={};agg={:?};\
+             reduce={:?};pipeline_depth={};ckpt_every={}",
+            self.algo.label(),
+            self.workers,
+            self.batch,
+            self.rounds,
+            self.seed,
+            self.agg.policy.label(),
+            self.agg.mode,
+            self.agg.reduce,
+            self.agg.pipeline_depth,
+            self.agg.recovery.ckpt_every,
+        );
+        fnv1a64(canon.as_bytes())
+    }
 }
 
 impl Default for ClusterConfig {
@@ -65,6 +128,9 @@ impl Default for ClusterConfig {
             agg: AggregatorConfig::default(),
             transport: TransportMode::default(),
             chaos_kill: None,
+            chaos_kill_leader: None,
+            resume: false,
+            connect_retry: None,
         }
     }
 }
@@ -92,6 +158,57 @@ pub struct TrainReport {
     pub mean_round_secs: f64,
 }
 
+/// Advance the run manifest (`RUN.json`) to the newest snapshot round
+/// that is *complete*: its broadcast blob AND all M worker-state blobs
+/// are durably in the store. Candidates are walked newest-first down to
+/// the last round already published, so a straggling worker snapshot
+/// only delays the advance, never corrupts it — the manifest always
+/// points at a round every party can restore from. Returns without
+/// writing when no new complete round exists (`last` is the
+/// half-open low-water mark; updated on publish).
+fn advance_manifest(
+    store: &Arc<Mutex<CkptStore>>,
+    every: u64,
+    workers: usize,
+    epoch: u64,
+    fingerprint: u64,
+    last: &mut Option<u64>,
+    upto: u64,
+) -> anyhow::Result<()> {
+    if every == 0 {
+        return Ok(());
+    }
+    let mut k = (upto + 1) / every;
+    while k > 0 {
+        let r = k * every - 1;
+        if last.is_some_and(|l| r <= l) {
+            return Ok(());
+        }
+        let st = store.lock().unwrap();
+        let complete = st.contains("bcast", r, 0)
+            && (0..workers).all(|w| st.contains("wstate", r, w as u32));
+        if complete {
+            let worker_digests = (0..workers)
+                .map(|w| st.entry_digest("wstate", r, w as u32).unwrap_or(0))
+                .collect();
+            let man = RunManifest {
+                round: r,
+                epoch,
+                fingerprint,
+                workers,
+                worker_digests,
+                replay_rounds: st.rounds("bcast"),
+            };
+            man.save(st.dir())?;
+            *last = Some(r);
+            return Ok(());
+        }
+        drop(st);
+        k -= 1;
+    }
+    Ok(())
+}
+
 /// Run one training job: M worker threads + leader on this thread.
 ///
 /// `make_src` builds each worker's gradient source (called once per worker,
@@ -117,17 +234,73 @@ pub fn run_cluster(
             cfg.rounds
         );
     }
-    // Periodic model snapshots (`--ckpt-every`): worker 0's post-apply
-    // params land in a `model/` sub-store of the checkpoint dir. Kept
-    // separate from the leader's broadcast-spill store so the two
-    // manifests never contend.
-    let model_ckpt: Option<Arc<Mutex<CkptStore>>> =
-        match (&cfg.agg.recovery.ckpt_dir, cfg.agg.recovery.ckpt_every) {
-            (Some(dir), every) if every > 0 => {
-                Some(Arc::new(Mutex::new(CkptStore::open(dir.join("model"))?)))
-            }
-            _ => None,
-        };
+    if let Some(cr) = cfg.chaos_kill_leader {
+        anyhow::ensure!(
+            cr < cfg.rounds,
+            "--chaos-kill-leader round {cr} is past the run ({} rounds)",
+            cfg.rounds
+        );
+    }
+    // One content-addressed checkpoint store per run, shared by every
+    // party: the leader spills snapshot-round broadcasts (kind `bcast`)
+    // and rotated-out replay frames into it, workers write their
+    // round-stamped state snapshots (kind `wstate`, shard = worker id)
+    // and the model blobs (kind `model`), and the run manifest
+    // (`RUN.json`) lives beside it. Sharing one instance is load-bearing:
+    // two stores on the same directory would clobber each other's
+    // store manifest on every write.
+    let store: Option<Arc<Mutex<CkptStore>>> = match &cfg.agg.recovery.ckpt_dir {
+        Some(dir) => Some(Arc::new(Mutex::new(CkptStore::open(dir)?))),
+        None => None,
+    };
+    let every = cfg.agg.recovery.ckpt_every;
+    let fingerprint = cfg.fingerprint();
+    // `--resume DIR`: load the crash-consistent run manifest and pick up
+    // at the round after the one it points at. The manifest is only ever
+    // advanced to rounds whose broadcast AND all M worker snapshots are
+    // durably stored, so everything restored below is guaranteed present
+    // (and integrity-checked on read by the store).
+    let resume_from: Option<RunManifest> = if cfg.resume {
+        let dir = cfg
+            .agg
+            .recovery
+            .ckpt_dir
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--resume needs --ckpt-dir (or --resume DIR)"))?;
+        let man = RunManifest::load(dir)?.ok_or_else(|| {
+            anyhow::anyhow!(
+                "--resume: no run manifest (RUN.json) in {} — nothing to resume",
+                dir.display()
+            )
+        })?;
+        anyhow::ensure!(
+            man.fingerprint == fingerprint,
+            "config fingerprint mismatch: the checkpointed run was {:016x}, this \
+             configuration is {fingerprint:016x} — refusing to resume a run under a \
+             different configuration",
+            man.fingerprint
+        );
+        anyhow::ensure!(
+            man.workers == cfg.workers,
+            "--resume: manifest has {} workers, configured {}",
+            man.workers,
+            cfg.workers
+        );
+        anyhow::ensure!(
+            man.round < cfg.rounds,
+            "--resume: manifest round {} is already at/past the {}-round horizon",
+            man.round,
+            cfg.rounds
+        );
+        Some(man)
+    } else {
+        None
+    };
+    let start_round = resume_from.as_ref().map_or(0, |m| m.round + 1);
+    // Session epoch: bumped on every resume so a fleet can tell leader
+    // incarnations apart (the TCP handshake carries it; the manifest
+    // records it either way).
+    let epoch = resume_from.as_ref().map_or(0, |m| m.epoch + 1);
     let sw = Stopwatch::start();
     // Both transports speak the same ServerEnd/WorkerEnd contract; the
     // evloop cluster's worker ends additionally ack applied broadcasts
@@ -169,19 +342,37 @@ pub fn run_cluster(
                 Some((cw, cr)) if cw == m => Some(cr),
                 _ => None,
             };
-            let model_ckpt = model_ckpt.clone();
-            let snap_every = cfg.agg.recovery.ckpt_every;
+            let store = store.clone();
+            let snap_every = every;
+            let resume_round = resume_from.as_ref().map(|man| man.round);
             handles.push(scope.spawn(move || -> anyhow::Result<WorkerSummary> {
                 let mut src = make_src(m)?;
                 let mut rng = Pcg32::new(seed.wrapping_add(m as u64).wrapping_add(1));
                 let mut algo = algo;
+                if let Some(rr) = resume_round {
+                    // Resume: roll this worker back to the manifest round.
+                    // The snapshot restores error memory, optimizer state
+                    // and the RNG position bit-exactly, so the rounds that
+                    // follow are bitwise-identical to an undisturbed run.
+                    let st = store.as_ref().expect("--resume validated ckpt_dir");
+                    let bytes = st.lock().unwrap().get("wstate", rr, m as u32)?.ok_or_else(
+                        || {
+                            anyhow::anyhow!(
+                                "worker {m}: no state snapshot for round {rr} in the \
+                                 checkpoint store — the run manifest points at a round \
+                                 the store no longer holds"
+                            )
+                        },
+                    )?;
+                    decode_worker_state(&bytes, &mut rng, algo.as_mut())?;
+                }
                 if let Some(cr) = chaos_rounds {
                     // Fault injection: run `cr` normal rounds, then die
                     // without any teardown handshake — the transport end
                     // just drops mid-protocol, exactly what a killed
                     // process looks like from the leader's side.
                     let dim = algo.dim();
-                    for round in 0..cr {
+                    for round in start_round..cr {
                         let payload = algo.produce(src.as_mut(), batch, &mut rng)?.wire.to_vec();
                         if end.send(Message::payload(m as u32, round, payload)).is_err() {
                             break;
@@ -221,7 +412,8 @@ pub fn run_cluster(
                         stats: Vec::new(),
                     });
                 }
-                let eval: Option<EvalHook> = if m == 0 && (eval_every > 0 || model_ckpt.is_some())
+                let model_store = if snap_every > 0 { store.clone() } else { None };
+                let eval: Option<EvalHook> = if m == 0 && (eval_every > 0 || model_store.is_some())
                 {
                     Some(Box::new(move |round, params, stats| {
                         if eval_every > 0 && ((round + 1) % eval_every == 0 || round == 0) {
@@ -232,8 +424,8 @@ pub fn run_cluster(
                                 loss_d: stats.loss_d,
                             });
                         }
-                        if let Some(store) = &model_ckpt {
-                            if (round + 1) % snap_every == 0 {
+                        if let Some(store) = &model_store {
+                            if is_snapshot_round(round, Some(snap_every)) {
                                 let mut bytes = Vec::with_capacity(4 * params.len());
                                 put_f32_slice(&mut bytes, params);
                                 // Post-apply params are identical across
@@ -252,22 +444,87 @@ pub fn run_cluster(
                 } else {
                     None
                 };
-                worker_loop(
+                // State snapshots (every worker, not just 0): error
+                // memory + optimizer state + RNG cursor, round-stamped
+                // under the shared store. A failed snapshot fails the
+                // worker — a manifest must never be able to point at a
+                // round some worker cannot actually restore from.
+                let snap: Option<SnapHook> = match &store {
+                    Some(st) if snap_every > 0 => {
+                        let st = st.clone();
+                        Some(Box::new(move |round, algo, rng| {
+                            if !is_snapshot_round(round, Some(snap_every)) {
+                                return Ok(());
+                            }
+                            let bytes = encode_worker_state(rng, algo)?;
+                            st.lock().unwrap().put("wstate", round, m as u32, &bytes)
+                        }))
+                    }
+                    _ => None,
+                };
+                worker_loop_resumable(
                     &mut end,
                     algo.as_mut(),
                     src.as_mut(),
                     batch,
+                    start_round,
                     rounds,
                     &mut rng,
                     keep,
                     eval,
+                    snap,
                 )
             }));
         }
         drop(eval_tx);
 
-        let serve_result =
-            serve_rounds_with(&mut server, decoder, dim, cfg.rounds, cfg.agg.clone(), |_| {});
+        let session = ServeSession {
+            start_round,
+            chaos_kill_leader: cfg.chaos_kill_leader,
+            store: store.clone(),
+            snapshot_every: (every > 0).then_some(every),
+        };
+        // Manifest low-water mark: on resume the loaded manifest round,
+        // else none. The on_round hook opportunistically advances it as
+        // snapshot rounds become complete; misses are retried next round
+        // (and once more after the join below), so a slow worker
+        // snapshot costs manifest freshness, never correctness.
+        let mut last_manifest = resume_from.as_ref().map(|man| man.round);
+        let serve_result = match &store {
+            Some(st) if every > 0 => serve_rounds_session(
+                &mut server,
+                decoder,
+                dim,
+                cfg.rounds,
+                cfg.agg.clone(),
+                session,
+                |rec| {
+                    if let Err(e) = advance_manifest(
+                        st,
+                        every,
+                        cfg.workers,
+                        epoch,
+                        fingerprint,
+                        &mut last_manifest,
+                        rec.round,
+                    ) {
+                        crate::log_warn!(
+                            "run manifest advance at round {} failed: {e:#}",
+                            rec.round
+                        );
+                    }
+                },
+            ),
+            _ => serve_rounds_session(
+                &mut server,
+                decoder,
+                dim,
+                cfg.rounds,
+                cfg.agg.clone(),
+                session,
+                |_| {},
+            ),
+        };
         if serve_result.is_err() {
             // Unblock workers waiting in phase 2 so the scope join below
             // cannot hang; ignore send failures (workers may be gone).
@@ -298,6 +555,25 @@ pub fn run_cluster(
         };
         if let Some(e) = worker_err {
             return Err(e);
+        }
+        // Final manifest advance: the workers are joined, so every
+        // snapshot they will ever write is on disk — publish the newest
+        // complete round the mid-run hook may have raced past. Skipped
+        // when the leader "died": a killed process records nothing, and
+        // the whole point of the chaos arm is resuming from exactly
+        // what was durable at the moment of death.
+        if cfg.chaos_kill_leader.is_none() && every > 0 {
+            if let Some(st) = &store {
+                advance_manifest(
+                    st,
+                    every,
+                    cfg.workers,
+                    epoch,
+                    fingerprint,
+                    &mut last_manifest,
+                    cfg.rounds.saturating_sub(1),
+                )?;
+            }
         }
         let evals: Vec<EvalEvent> = eval_rx.try_iter().collect();
         let total_bytes_up: u64 = records.iter().map(|r| r.bytes_up as u64).sum();
@@ -336,6 +612,9 @@ mod tests {
             agg: Default::default(),
             transport: Default::default(),
             chaos_kill: None,
+            chaos_kill_leader: None,
+            resume: false,
+            connect_retry: None,
         }
     }
 
@@ -466,6 +745,116 @@ mod tests {
         // The dead worker's slot is evicted (liveness bound), never folded.
         assert!(chaotic.records.iter().any(|r| r.workers_evicted == 1));
         assert!(chaotic.records.iter().all(|r| r.workers_included == 3));
+    }
+
+    #[test]
+    fn leader_kill_then_resume_is_bitwise_identical() {
+        // The tentpole identity: kill the leader right after round 13's
+        // broadcast (`--chaos-kill-leader 13`), then resume from the
+        // checkpoint dir — every post-resume round must be bitwise
+        // identical to an undisturbed run, and the final params equal.
+        use crate::config::RecoveryConfig;
+        let dir = std::env::temp_dir().join(format!(
+            "dqgan-leader-kill-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let build = |resume: bool, chaos: Option<u64>, ckpt: bool| {
+            let mut cfg = quad_cfg("dqgan:linf8", 24, 0.05);
+            cfg.transport = TransportMode::EvLoop;
+            cfg.agg = AggregatorConfig::pipelined();
+            if ckpt {
+                cfg.agg.recovery = RecoveryConfig {
+                    ckpt_dir: Some(dir.clone()),
+                    ckpt_every: 4,
+                    ..RecoveryConfig::default()
+                };
+            }
+            cfg.chaos_kill_leader = chaos;
+            cfg.resume = resume;
+            cfg
+        };
+        let run = |cfg: &ClusterConfig| {
+            run_cluster(cfg, |_m| {
+                let mut rng = Pcg32::new(4242);
+                Ok(Box::new(QuadraticOperator::new(12, 0.1, &mut rng)))
+            })
+            .unwrap()
+        };
+        // Undisturbed baseline — no store: checkpointing never alters
+        // the math, so a storeless run is the legitimate reference.
+        let baseline = run(&build(false, None, false));
+        assert_eq!(baseline.records.len(), 24);
+        // The doomed run: serve loop returns after round 13, no Shutdown.
+        let killed = run(&build(false, Some(13), true));
+        assert_eq!(killed.records.last().unwrap().round, 13);
+        // Snapshot cadence 4 ⇒ restorable rounds 3, 7, 11, …; by the
+        // time the leader gathered round 12 every worker had snapped
+        // round 11, so the manifest deterministically points there.
+        let man = RunManifest::load(&dir).unwrap().expect("manifest written before the kill");
+        assert_eq!(man.round, 11);
+        assert_eq!(man.epoch, 0);
+        assert_eq!(man.workers, 3);
+        assert!(is_snapshot_round(man.round, Some(4)));
+        // Resume: picks up at manifest round + 1 under a bumped epoch.
+        let resumed = run(&build(true, None, true));
+        assert_eq!(resumed.records.first().unwrap().round, man.round + 1);
+        assert_eq!(resumed.records.last().unwrap().round, 23);
+        for rec in &resumed.records {
+            let base = &baseline.records[rec.round as usize];
+            assert_eq!(
+                (rec.round, rec.broadcast_fnv),
+                (base.round, base.broadcast_fnv),
+                "post-resume round {} must be bitwise identical to the undisturbed run",
+                rec.round
+            );
+        }
+        assert_eq!(resumed.worker0.final_params, baseline.worker0.final_params);
+        let man2 = RunManifest::load(&dir).unwrap().unwrap();
+        assert_eq!(man2.epoch, man.epoch + 1, "resume bumps the session epoch");
+        assert_eq!(man2.round, 23, "final advance publishes the last snapshot round");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_refuses_a_fingerprint_mismatch() {
+        use crate::config::RecoveryConfig;
+        let dir = std::env::temp_dir().join(format!(
+            "dqgan-resume-fp-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let build = |lr: f32, resume: bool| {
+            let mut cfg = quad_cfg("dqgan:linf8", 8, lr);
+            cfg.agg.recovery = RecoveryConfig {
+                ckpt_dir: Some(dir.clone()),
+                ckpt_every: 4,
+                ..RecoveryConfig::default()
+            };
+            cfg.resume = resume;
+            cfg
+        };
+        let src = |_m: usize| -> anyhow::Result<Box<dyn GradientSource>> {
+            let mut rng = Pcg32::new(99);
+            Ok(Box::new(QuadraticOperator::new(8, 0.1, &mut rng)))
+        };
+        run_cluster(&build(0.05, false), src).unwrap();
+        // Same dir, different step size: the fingerprints differ, so the
+        // resume must refuse loudly rather than silently diverge.
+        let err = run_cluster(&build(0.07, true), src).unwrap_err();
+        assert!(
+            err.to_string().contains("fingerprint mismatch"),
+            "unexpected error: {err}"
+        );
+        // The honest fingerprint resumes cleanly — and since the run
+        // already finished (manifest at the last snapshot round 7 of 8),
+        // there is nothing left to serve: a completed run resumes as a
+        // no-op rather than re-training or erroring.
+        let done = run_cluster(&build(0.05, true), src).unwrap();
+        assert!(done.records.is_empty(), "finished run must resume as a no-op");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -22,8 +22,10 @@ mod worker;
 pub use aggregate::{Aggregator, Decoder, ReduceClose, ReduceTiming};
 pub use cluster::{run_cluster, ClusterConfig, EvalEvent, TrainReport};
 pub use policy::{build_policy, RoundPolicy};
-pub use server::{serve_rounds, serve_rounds_with};
-pub use worker::worker_loop;
+pub use server::{
+    is_snapshot_round, serve_rounds, serve_rounds_session, serve_rounds_with, ServeSession,
+};
+pub use worker::{worker_loop, worker_loop_resumable, SnapHook};
 
 /// Per-round record the leader accumulates (averaged across workers).
 #[derive(Debug, Clone, Default)]

@@ -49,6 +49,7 @@
 use super::aggregate::{Aggregator, Decoder, ReduceClose};
 use super::policy::build_policy;
 use super::RoundRecord;
+use crate::ckpt::CkptStore;
 use crate::comm::{BroadcastHandle, Message, MsgKind, ServerEnd, StreamDirective};
 use crate::config::{AggMode, AggregatorConfig, PolicyConfig, WorkerLossMode};
 use crate::util::bytes::{fnv1a64_f32, put_f32_slice};
@@ -56,7 +57,50 @@ use crate::util::stats::norm2_sq;
 use crate::util::threads::live_threads;
 use crate::util::timer::Stopwatch;
 use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Session state for a resumable serve loop — everything
+/// [`serve_rounds_session`] needs beyond the per-round aggregation
+/// config: where to start, when to "die", and the run's shared
+/// checkpoint store. The default is a fresh, chaos-free, storeless run,
+/// which is exactly [`serve_rounds_with`].
+#[derive(Default)]
+pub struct ServeSession {
+    /// First round to serve (0 fresh; `manifest.round + 1` on resume).
+    pub start_round: u64,
+    /// Simulated `kill -9` at the end of round R: the serve loop
+    /// returns right after round R's broadcast is handed to the
+    /// transport — **no Shutdown frame, no run-end bookkeeping** — so
+    /// workers experience exactly what a dead leader looks like (a
+    /// closed transport), and recovery has to work from what was
+    /// already durably on disk.
+    pub chaos_kill_leader: Option<u64>,
+    /// Shared checkpoint store for this run. When set it replaces the
+    /// store the loop would otherwise open from
+    /// `recovery.ckpt_dir` — two stores on one directory would clobber
+    /// each other's manifest, so the cluster driver owns a single
+    /// store and hands it to both the serve loop (bcast spills) and
+    /// the workers (state snapshots).
+    pub store: Option<Arc<Mutex<CkptStore>>>,
+    /// Snapshot cadence: at every round with `(round + 1) % every == 0`
+    /// the broadcast frame is spilled to the store (kind `bcast`), the
+    /// durable model artifact the run manifest points at. `None`
+    /// disables spilling.
+    pub snapshot_every: Option<u64>,
+}
+
+/// Whether `round` is a snapshot round under cadence `every`
+/// (1-indexed: `every = 5` snapshots rounds 4, 9, 14, …). Shared by the
+/// leader's bcast spill, the workers' state snapshots, and the
+/// manifest advance so all three always agree on the set of
+/// restorable rounds.
+pub fn is_snapshot_round(round: u64, every: Option<u64>) -> bool {
+    match every {
+        Some(k) if k > 0 => (round + 1) % k == 0,
+        _ => false,
+    }
+}
 
 /// Run `rounds` synchronous rounds on `transport` with the default
 /// (sharded) aggregation path. Returns per-round records. `dim` is the
@@ -80,6 +124,23 @@ pub fn serve_rounds_with(
     dim: usize,
     rounds: u64,
     agg_cfg: AggregatorConfig,
+    on_round: impl FnMut(&RoundRecord),
+) -> anyhow::Result<Vec<RoundRecord>> {
+    serve_rounds_session(transport, decoder, dim, rounds, agg_cfg, ServeSession::default(), on_round)
+}
+
+/// [`serve_rounds_with`] under a [`ServeSession`]: the resumable /
+/// chaos-injectable serve loop. Serves rounds
+/// `session.start_round..rounds`; spills snapshot-round broadcasts into
+/// the session store; and, under `chaos_kill_leader`, returns early
+/// with no Shutdown — the simulated `kill -9`.
+pub fn serve_rounds_session(
+    transport: &mut dyn ServerEnd,
+    decoder: Decoder,
+    dim: usize,
+    rounds: u64,
+    agg_cfg: AggregatorConfig,
+    session: ServeSession,
     mut on_round: impl FnMut(&RoundRecord),
 ) -> anyhow::Result<Vec<RoundRecord>> {
     let m = transport.workers();
@@ -119,12 +180,17 @@ pub fn serve_rounds_with(
     // O(depth · M · dim): the transport already shares each frame's
     // encoded wire bytes across all M outboxes per send.
     let mut replay: VecDeque<(u64, Message)> = VecDeque::new();
-    // Content-addressed checkpoint store: rotated-out replay frames
-    // spill here (kind "bcast"), so a rejoin beyond the replay window
-    // can still reconstruct history.
-    let mut ckpt = match &recovery.ckpt_dir {
-        Some(dir) => Some(crate::ckpt::CkptStore::open(dir)?),
-        None => None,
+    // Content-addressed checkpoint store: rotated-out replay frames and
+    // snapshot-round broadcasts spill here (kind "bcast"), so a rejoin
+    // beyond the replay window can still reconstruct history and a
+    // resumed run can restore the manifest round. The session's shared
+    // store wins when present — one store per directory, ever.
+    let ckpt: Option<Arc<Mutex<CkptStore>>> = match session.store.clone() {
+        Some(store) => Some(store),
+        None => match &recovery.ckpt_dir {
+            Some(dir) => Some(Arc::new(Mutex::new(CkptStore::open(dir)?))),
+            None => None,
+        },
     };
     // Policy engine (None = the unchanged full-barrier paths below).
     let mut policy = match policy_cfg {
@@ -136,14 +202,19 @@ pub fn serve_rounds_with(
     // order per worker, so a FIFO suffices).
     let mut pending_late: Vec<VecDeque<u64>> = vec![VecDeque::new(); m];
     let mut agg = Aggregator::new(agg_cfg, dim, m);
-    let mut records = Vec::with_capacity(rounds as usize);
+    anyhow::ensure!(
+        session.start_round <= rounds,
+        "resume round {} is past the configured horizon of {rounds} rounds",
+        session.start_round
+    );
+    let mut records = Vec::with_capacity((rounds - session.start_round) as usize);
     // Completion handle of the previous round's async broadcast
     // (pipelined mode only) — the input to `overlap_secs`.
     let mut prev_broadcast: Option<BroadcastHandle> = None;
     // Transport byte counter, when the transport exposes one: source of
     // the per-round `bytes_down` delta and the run-end obs totals.
     let byte_counter = transport.counter();
-    for round in 0..rounds {
+    for round in session.start_round..rounds {
         // A previous broadcast that has *completed with a failure* means
         // some worker's downlink died. Surface it now — the synchronous
         // path failed at the broadcast call itself, and blocking in a
@@ -480,8 +551,8 @@ pub fn serve_rounds_with(
             for r in resume..round {
                 if let Some((_, f)) = replay.iter().find(|(rr, _)| *rr == r) {
                     frames.push(f.clone());
-                } else if let Some(store) = ckpt.as_mut() {
-                    match store.get("bcast", r, 0)? {
+                } else if let Some(store) = ckpt.as_ref() {
+                    match store.lock().unwrap().get("bcast", r, 0)? {
                         Some(bytes) => frames.push(Message::decode(&bytes)?),
                         None => {
                             complete = false;
@@ -517,9 +588,17 @@ pub fn serve_rounds_with(
             replay.push_back((round, msg.clone()));
             while replay.len() > recovery.replay_depth {
                 let (r, old) = replay.pop_front().expect("non-empty: len > depth >= 0");
-                if let Some(store) = ckpt.as_mut() {
-                    store.put("bcast", r, 0, &old.encode())?;
+                if let Some(store) = ckpt.as_ref() {
+                    store.lock().unwrap().put("bcast", r, 0, &old.encode())?;
                 }
+            }
+        }
+        // Snapshot round: spill the broadcast frame durably *before* the
+        // broadcast goes out, so a manifest that later points at this
+        // round always finds its model artifact on disk.
+        if is_snapshot_round(round, session.snapshot_every) {
+            if let Some(store) = ckpt.as_ref() {
+                store.lock().unwrap().put("bcast", round, 0, &msg.encode())?;
             }
         }
         let t = Stopwatch::start();
@@ -566,6 +645,14 @@ pub fn serve_rounds_with(
         };
         on_round(&rec);
         records.push(rec);
+        if session.chaos_kill_leader == Some(round) {
+            // Simulated `kill -9` after round R: return with NO Shutdown
+            // broadcast and no run-end bookkeeping. The caller drops the
+            // transport, workers see a dead leader, and the only state
+            // that survives is what the checkpoint store already holds —
+            // exactly the contract `--resume` must work from.
+            return Ok(records);
+        }
     }
     // The trailing Shutdown uses the blocking path: with writer threads
     // active it routes through the same per-worker queues (order

@@ -39,6 +39,16 @@ pub struct WorkerSummary {
 /// Hook invoked on a worker after each `apply` with (round, params, stats).
 pub type EvalHook = Box<dyn FnMut(u64, &[f32], &RoundStats) + Send>;
 
+/// Snapshot hook: invoked at the round boundary — after the round's
+/// broadcast is applied (and acked/evaled), before the next `produce` —
+/// with the algorithm and RNG exactly as the next round will see them.
+/// That boundary is the one point where a worker's state is closed
+/// under restore: scratch buffers are dead, error memory is post-absorb,
+/// and the RNG sits at the position round+1 draws from. The hook decides
+/// its own cadence (checking `is_snapshot_round` internally) and
+/// typically writes `ckpt::encode_worker_state` into the run's store.
+pub type SnapHook = Box<dyn FnMut(u64, &dyn WorkerAlgo, &Pcg32) -> anyhow::Result<()> + Send>;
+
 /// Parse and apply one (possibly partial) broadcast frame: when the
 /// inclusion bitmap says the leader skipped this worker, re-absorb the
 /// round's sent payload into error memory after applying the average.
@@ -107,7 +117,31 @@ pub fn worker_loop(
     rounds: u64,
     rng: &mut Pcg32,
     keep_stats: bool,
+    eval: Option<EvalHook>,
+) -> anyhow::Result<WorkerSummary> {
+    worker_loop_resumable(transport, algo, src, batch, 0, rounds, rng, keep_stats, eval, None)
+}
+
+/// [`worker_loop`] for resumable sessions: starts at `start_round`
+/// (the algorithm, RNG, and data cursor must already be positioned
+/// there — restored from a snapshot via `ckpt::decode_worker_state`)
+/// and invokes `snap` at every completed round boundary so the worker's
+/// state can be re-snapshotted under the run's checkpoint cadence. The
+/// teardown-drain path (leader died or closed the run early) applies
+/// trailing broadcasts but takes no snapshots: a manifest can never
+/// legitimately point at a round the leader did not live to record.
+#[allow(clippy::too_many_arguments)]
+pub fn worker_loop_resumable(
+    transport: &mut dyn WorkerEnd,
+    algo: &mut dyn WorkerAlgo,
+    src: &mut dyn GradientSource,
+    batch: usize,
+    start_round: u64,
+    rounds: u64,
+    rng: &mut Pcg32,
+    keep_stats: bool,
     mut eval: Option<EvalHook>,
+    mut snap: Option<SnapHook>,
 ) -> anyhow::Result<WorkerSummary> {
     let dim = algo.dim();
     let id = transport.id();
@@ -115,7 +149,7 @@ pub fn worker_loop(
     // Rounds actually completed — reported instead of the requested
     // count when the server shuts down early.
     let mut completed = 0u64;
-    for round in 0..rounds {
+    for round in start_round..rounds {
         // Phase 1: produce and push. `produce` returns views into the
         // worker's reused buffers; the one owned copy happens here, at the
         // transport boundary, because `Message` owns its payload bytes.
@@ -217,6 +251,20 @@ pub fn worker_loop(
         }
         if keep_stats {
             stats_hist.push(stats);
+        }
+        // Round boundary: the one place worker state is closed under
+        // restore (see [`SnapHook`]). A snapshot failure is this
+        // worker's failure — tell the leader before bailing so its next
+        // gather fails fast instead of hanging on our missing payload.
+        if let Some(cb) = snap.as_deref_mut() {
+            if let Err(e) = cb(round, &*algo, &*rng) {
+                let _ = transport.send(Message::worker_error(
+                    id,
+                    round,
+                    &format!("state snapshot at round {round} failed: {e:#}"),
+                ));
+                return Err(e);
+            }
         }
     }
     // Drain the trailing Shutdown so the transport closes cleanly.

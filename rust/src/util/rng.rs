@@ -60,6 +60,20 @@ impl Pcg32 {
         rng
     }
 
+    /// Raw `(state, inc)` for bit-exact snapshots. Unlike
+    /// [`Self::with_streams`] (which advances the state while seeding),
+    /// the pair round-trips through [`Self::from_state_parts`] without
+    /// consuming any output, so a restored generator continues the exact
+    /// stream — the property worker checkpoints depend on.
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Self::state_parts`] verbatim.
+    pub fn from_state_parts(state: u64, inc: u64) -> Self {
+        Self { state, inc }
+    }
+
     /// Derive a child generator (for per-worker / per-shard streams).
     pub fn split(&mut self) -> Pcg32 {
         let s = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
@@ -266,6 +280,19 @@ mod tests {
         assert_eq!(counts[0], 0);
         let ratio = counts[2] as f64 / counts[1] as f64;
         assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn state_parts_round_trip_continues_the_stream() {
+        let mut a = Pcg32::new(101);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let (state, inc) = a.state_parts();
+        let mut b = Pcg32::from_state_parts(state, inc);
+        let sa: Vec<u32> = (0..32).map(|_| a.next_u32()).collect();
+        let sb: Vec<u32> = (0..32).map(|_| b.next_u32()).collect();
+        assert_eq!(sa, sb, "restored generator must continue the exact stream");
     }
 
     #[test]
